@@ -1,0 +1,65 @@
+//! Whole-model wire codec: the per-client downlink build (quantize + PVT +
+//! pack + frame) and uplink decode — the L3 hot path around each PJRT call.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::fl::client::make_downlink;
+use omc_fl::omc::codec::{decode, encode};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::store::{CompressedModel, StoredVar};
+use omc_fl::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut suite = Suite::new("omc::codec whole-model wire path");
+    let mut rng = Xoshiro256pp::new(4);
+    // a small_streaming-like model: 72 vars, ~200k params, 90% weights
+    let mut global = Vec::new();
+    let mut mask = Vec::new();
+    for i in 0..72usize {
+        let n = if i % 12 == 0 { 64 } else { 2_900 };
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.05);
+        global.push(v);
+        mask.push(if i % 12 == 0 { 0.0 } else { 1.0 });
+    }
+    let total: usize = global.iter().map(|v| v.len()).sum();
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+
+    suite.bench(
+        &format!("make_downlink S1E3M7 ({total} params)"),
+        Some(total),
+        || {
+            consume(make_downlink(&global, &mask, fmt, true));
+        },
+    );
+    suite.bench(
+        &format!("make_downlink FP32 ({total} params)"),
+        Some(total),
+        || {
+            consume(make_downlink(&global, &mask, FloatFormat::FP32, true));
+        },
+    );
+
+    let wire = make_downlink(&global, &mask, fmt, true);
+    suite.bench("decode + decompress_all", Some(total), || {
+        consume(decode(&wire).unwrap().decompress_all());
+    });
+
+    let model = CompressedModel::new(
+        global
+            .iter()
+            .zip(&mask)
+            .map(|(v, &m)| {
+                if m > 0.5 {
+                    StoredVar::compress(v, fmt, true)
+                } else {
+                    StoredVar::raw(v.clone())
+                }
+            })
+            .collect(),
+    );
+    suite.bench("encode (pre-compressed model)", Some(total), || {
+        consume(encode(&model));
+    });
+
+    suite.report();
+}

@@ -1,0 +1,30 @@
+//! Bit-packing throughput — turning quantized values into the wire/memory
+//! representation and back.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::pack::{pack, unpack};
+use omc_fl::omc::quantize::quantize_vec;
+use omc_fl::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut suite = Suite::new("omc::pack / unpack throughput");
+    let mut rng = Xoshiro256pp::new(2);
+    let n = 262_144usize;
+
+    for fmt_s in ["S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3"] {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.05);
+        let q = quantize_vec(&v, fmt);
+        let bytes = pack(&q, fmt).unwrap();
+        suite.bench(&format!("pack   {fmt_s} n={n}"), Some(n), || {
+            consume(pack(&q, fmt).unwrap());
+        });
+        suite.bench(&format!("unpack {fmt_s} n={n}"), Some(n), || {
+            consume(unpack(&bytes, n, fmt));
+        });
+    }
+
+    suite.report();
+}

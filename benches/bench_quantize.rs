@@ -1,0 +1,35 @@
+//! Quantizer throughput across the paper's formats and variable sizes —
+//! the L3-side half of OMC's per-round compression cost.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::quantize::{quantize_slice, quantize_vec};
+use omc_fl::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut suite = Suite::new("omc::quantize throughput");
+    let mut rng = Xoshiro256pp::new(1);
+
+    for fmt_s in ["S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3"] {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        for n in [4_096usize, 262_144] {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.05);
+            let mut out = vec![0.0f32; n];
+            suite.bench(&format!("quantize {fmt_s} n={n}"), Some(n), || {
+                quantize_slice(&v, fmt, &mut out);
+                consume(&out);
+            });
+        }
+    }
+
+    // fp32 passthrough should be a memcpy
+    let n = 262_144;
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 0.05);
+    suite.bench("quantize S1E8M23 (identity) n=262144", Some(n), || {
+        consume(quantize_vec(&v, FloatFormat::FP32));
+    });
+
+    suite.report();
+}

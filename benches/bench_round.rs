@@ -1,0 +1,50 @@
+//! End-to-end federated round latency, FP32 vs OMC — the micro version of
+//! the Tables' "Speed (Rounds/Min)" column. Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use omc_fl::benchkit::Suite;
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::experiment::Experiment;
+use omc_fl::runtime::engine::Engine;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts/tiny");
+    if !dir.exists() {
+        eprintln!("SKIP bench_round: artifacts/tiny missing — run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let model = Arc::new(engine.load_model(dir).expect("load model"));
+
+    let mut suite = Suite::new("end-to-end federated round (tiny model, 4 clients)");
+    // rounds are ~100 ms; cap the sample budget
+    suite.min_time_s = suite.min_time_s.min(2.0);
+
+    for (label, omc) in [
+        ("round FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
+        ("round OMC S1E4M14", OmcConfig::paper("S1E4M14".parse().unwrap())),
+        ("round OMC S1E3M7", OmcConfig::paper("S1E3M7".parse().unwrap())),
+    ] {
+        let mut cfg = ExperimentConfig::default_with(label, dir);
+        cfg.rounds = 1;
+        cfg.num_clients = 8;
+        cfg.clients_per_round = 4;
+        cfg.eval_every = 10_000; // never eval inside the bench
+        cfg.omc = omc;
+        let mut exp =
+            Experiment::prepare_with_model(cfg, Arc::clone(&model)).unwrap();
+        exp.warmup().unwrap();
+        // run one round per iteration (server state advances; that's fine —
+        // the cost is stationary)
+        suite.bench(label, None, || {
+            let _ = exp.run_one_round_for_bench().unwrap();
+        });
+    }
+
+    suite.report();
+    println!(
+        "The FP32-vs-OMC ratio here is the Tables' Speed column \
+         (paper: OMC ~91-93% of FP32)."
+    );
+}

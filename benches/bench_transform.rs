@@ -1,0 +1,31 @@
+//! Per-variable transformation cost: the f64 least-squares fit and the f32
+//! affine decompression.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::quantize::quantize_vec;
+use omc_fl::omc::transform::{apply, fit};
+use omc_fl::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut suite = Suite::new("omc::transform (PVT) fit + apply");
+    let mut rng = Xoshiro256pp::new(3);
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+
+    for n in [4_096usize, 65_536, 1_048_576] {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.05);
+        let vt = quantize_vec(&v, fmt);
+        suite.bench(&format!("pvt fit   n={n}"), Some(n), || {
+            consume(fit(&v, &vt));
+        });
+        let p = fit(&v, &vt);
+        let mut out = vec![0.0f32; n];
+        suite.bench(&format!("pvt apply n={n}"), Some(n), || {
+            apply(p, &vt, &mut out);
+            consume(&out);
+        });
+    }
+
+    suite.report();
+}

@@ -1,0 +1,88 @@
+//! **Figure 3** — per-variable transformation stabilizes from-scratch
+//! training.
+//!
+//! Paper: training the non-streaming Conformer from scratch at S1E5M10
+//! *without* PVT is unstable — WER decreases, then climbs after ~12K
+//! rounds; with PVT it keeps decreasing.
+//!
+//! Scale substitution (documented in DESIGN.md §2/§5): 12K-round horizons
+//! are out of reach on this testbed, so the error-accumulation mechanism is
+//! surfaced at small scale with a coarser format (default S1E3M4,
+//! all-parameter quantization — the regime where the unconditioned
+//! quantizer bias actually bites within ~100 rounds). The *comparison*
+//! (with-PVT stays stable and strictly better) is the reproduced shape.
+//!
+//!     cargo run --release --example fig3_pvt_stability -- --rounds 100
+
+use anyhow::Result;
+use omc_fl::coordinator::config::OmcConfig;
+use omc_fl::coordinator::presets::{self, Scale};
+use omc_fl::data::partition::Partition;
+use omc_fl::runtime::engine::Engine;
+use omc_fl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::new("fig3", "Fig. 3: with vs without PVT, from scratch");
+    args.flag("rounds", "federated rounds", Some("100"));
+    args.flag("seed", "rng seed", Some("42"));
+    args.flag(
+        "format",
+        "storage format (paper: S1E5M10 at 12K rounds; coarser here to \
+         surface the effect at small scale)",
+        Some("S1E3M4"),
+    );
+    args.flag("model-dir", "artifact dir", Some("artifacts/small"));
+    let m = args.parse();
+    let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
+    let model_dir = m.get("model-dir").unwrap();
+    let fmt = m.get("format").unwrap();
+    let out = "results/fig3";
+
+    let engine = Engine::cpu()?;
+    let model = presets::bind_model(&engine, model_dir)?;
+
+    let mut curves = Vec::new();
+    for (label, use_pvt) in [("with_pvt", true), ("without_pvt", false)] {
+        let omc = OmcConfig {
+            format: fmt.parse()?,
+            use_pvt,
+            weights_only: false, // quantize everything: the unstable regime
+            fraction: 1.0,
+        };
+        let mut cfg = presets::experiment(
+            label, model_dir, &scale, Partition::Iid, 0, omc, out,
+        );
+        cfg.eval_every = (scale.rounds / 25).max(1); // dense curve
+        println!("== from-scratch at {fmt}, {label} ==");
+        let (rec, summary) = presets::run_variant(&model, cfg)?;
+        curves.push((label, rec, summary));
+    }
+
+    println!("\n## Figure 3 — WER vs round, from scratch at {fmt}\n");
+    println!("{:>6} {:>14} {:>14}", "round", "with PVT", "without PVT");
+    let (with, without) = (&curves[0].1, &curves[1].1);
+    for (a, b) in with.records.iter().zip(&without.records) {
+        if a.eval_wer >= 0.0 {
+            println!("{:>6} {:>13.2}% {:>13.2}%", a.round, a.eval_wer, b.eval_wer);
+        }
+    }
+    let wer_with = curves[0].2.final_wer;
+    let wer_without = curves[1].2.final_wer;
+    println!(
+        "\nfinal WER: with PVT {wer_with:.2}% vs without {wer_without:.2}% \
+         (paper shape: without-PVT diverges/stalls; with-PVT keeps improving)"
+    );
+    // divergence check: did the without-PVT curve rise from its best?
+    let best_without = without
+        .records
+        .iter()
+        .filter(|r| r.eval_wer >= 0.0)
+        .map(|r| r.eval_wer)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "without-PVT best {best_without:.2}% -> final {wer_without:.2}% \
+         (rise = instability signal)"
+    );
+    println!("curve CSVs: {out}/*.csv");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+"""AOT lowering — the ONLY place Python runs; never on the request path.
+
+For every model size this emits, under ``artifacts/<size>/``:
+
+  init.hlo.txt              (seed i32) -> (V_1..V_n)
+  train_fp32.hlo.txt        (V.., x, y, lr) -> (V'.., loss)
+  train_omc.hlo.txt         (Ṽ.., s[n], b[n], mask[n], x, y, lr, e, m)
+                              -> (Ṽ'.., s'[n], b'[n], loss)
+  train_omc_nopvt.hlo.txt   same, with the per-variable transform disabled
+                              (Table-4 "quantization only" row, Fig. 3)
+  eval.hlo.txt              (V.., x, y) -> (loss, pred[B,T] i32)
+  manifest.json             variable table + static shapes for the Rust side
+
+plus a size-independent ``artifacts/quant.hlo.txt`` — the standalone Pallas
+quantizer, used by a cargo integration test to assert the Rust codec is
+bit-identical to the kernel.
+
+Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProto (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # PVT accumulates in f64 (Sec. 2.3)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as M  # noqa: E402
+from .configs import DEFAULT_SIZES, PRESETS  # noqa: E402
+
+QUANT_TEST_N = 8192  # length of the standalone quantizer artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the text
+    parser on the Rust side; `return_tuple=True` so outputs are one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_size(size: str, out_root: str) -> dict:
+    cfg = PRESETS[size]
+    specs = M.specs(cfg)
+    n = len(specs)
+    out_dir = os.path.join(out_root, size)
+    os.makedirs(out_dir, exist_ok=True)
+
+    param_sds = [_sds(s.shape, jnp.float32) for s in specs]
+    x_sds = _sds((cfg.batch, cfg.seq_len, cfg.feature_dim), jnp.float32)
+    y_sds = _sds((cfg.batch, cfg.seq_len), jnp.int32)
+    scalar_f32 = _sds((), jnp.float32)
+    scalar_i32 = _sds((), jnp.int32)
+    vecn = _sds((n,), jnp.float32)
+
+    emitted = {}
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        emitted[name] = f"{name}.hlo.txt"
+        print(f"  {size}/{name}: {len(text)} chars")
+
+    emit("init", M.make_init_fn(cfg), scalar_i32)
+    emit("train_fp32", M.make_train_fp32_fn(cfg),
+         *param_sds, x_sds, y_sds, scalar_f32)
+    emit("train_omc", M.make_train_omc_fn(cfg, use_pvt=True),
+         *param_sds, vecn, vecn, vecn, x_sds, y_sds,
+         scalar_f32, scalar_i32, scalar_i32)
+    emit("train_omc_nopvt", M.make_train_omc_fn(cfg, use_pvt=False),
+         *param_sds, vecn, vecn, vecn, x_sds, y_sds,
+         scalar_f32, scalar_i32, scalar_i32)
+    emit("eval", M.make_eval_fn(cfg), *param_sds, x_sds, y_sds)
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "num_variables": n,
+        "total_params": sum(s.size for s in specs),
+        "variables": [
+            {"name": s.name, "shape": list(s.shape), "kind": s.kind,
+             "size": s.size}
+            for s in specs
+        ],
+        "artifacts": emitted,
+        "interchange": "hlo-text",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def lower_quant_artifact(out_root: str):
+    os.makedirs(out_root, exist_ok=True)
+    fn = M.make_quant_fn()
+    lowered = jax.jit(fn).lower(
+        _sds((QUANT_TEST_N,), jnp.float32), _sds((), jnp.int32),
+        _sds((), jnp.int32))
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_root, "quant.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  quant: {len(text)} chars (N={QUANT_TEST_N})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(DEFAULT_SIZES),
+                    help=f"comma-separated subset of {sorted(PRESETS)}")
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    for s in sizes:
+        if s not in PRESETS:
+            raise SystemExit(f"unknown size {s!r}; have {sorted(PRESETS)}")
+    print(f"AOT lowering sizes={sizes} -> {args.out_dir}")
+    lower_quant_artifact(args.out_dir)
+    for s in sizes:
+        man = lower_size(s, args.out_dir)
+        print(f"  {s}: {man['num_variables']} vars, "
+              f"{man['total_params']:,} params")
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

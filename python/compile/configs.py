@@ -1,0 +1,71 @@
+"""Model/data size presets shared by the AOT pipeline and the manifest.
+
+Each preset fully determines the lowered HLO shapes (batch and sequence
+lengths are static under AOT), so the Rust coordinator reads these back from
+``artifacts/<size>/manifest.json`` instead of duplicating them.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """conformer-lite hyper-parameters.
+
+    The variable taxonomy (weight matrices vs. norm scales/biases) mirrors the
+    paper's Sec. 2.4 distinction; ``streaming`` selects causal attention and a
+    causally-padded depthwise convolution (the paper's streaming Conformer).
+    """
+
+    name: str = "tiny"
+    feature_dim: int = 16       # F: input "acoustic" feature size
+    vocab: int = 32             # V: output token vocabulary
+    d_model: int = 32           # d
+    ff_mult: int = 4            # FFN hidden = ff_mult * d
+    num_heads: int = 2
+    num_blocks: int = 1
+    conv_kernel: int = 5        # depthwise conv width (odd)
+    gn_groups: int = 4          # GroupNorm groups in the conv module
+    streaming: bool = False
+    batch: int = 4              # B (static in the lowered artifact)
+    seq_len: int = 16           # T (static in the lowered artifact)
+
+    def ff_dim(self) -> int:
+        return self.ff_mult * self.d_model
+
+    def head_dim(self) -> int:
+        assert self.d_model % self.num_heads == 0
+        return self.d_model // self.num_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# Size ladder. `tiny` keeps the pytest + cargo-test cycle fast; `small` drives
+# the paper-table examples; `base` is the non-streaming analog; `large` is the
+# end-to-end validation model (EXPERIMENTS.md §E2E).
+PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", feature_dim=16, vocab=32, d_model=32, num_heads=2,
+        num_blocks=1, batch=4, seq_len=16, streaming=False,
+    ),
+    "small": ModelConfig(
+        name="small", feature_dim=24, vocab=48, d_model=64, num_heads=4,
+        num_blocks=2, batch=8, seq_len=24, streaming=False,
+    ),
+    # streaming variant used by the Table-2/Table-4 adaptation experiments
+    "small_streaming": ModelConfig(
+        name="small_streaming", feature_dim=24, vocab=48, d_model=64,
+        num_heads=4, num_blocks=2, batch=8, seq_len=24, streaming=True,
+    ),
+    "base": ModelConfig(
+        name="base", feature_dim=32, vocab=64, d_model=128, num_heads=4,
+        num_blocks=4, batch=8, seq_len=32, streaming=False,
+    ),
+    "large": ModelConfig(
+        name="large", feature_dim=48, vocab=96, d_model=256, num_heads=8,
+        num_blocks=6, batch=4, seq_len=32, streaming=True,
+    ),
+}
+
+DEFAULT_SIZES = ("tiny", "small", "small_streaming")

@@ -1,0 +1,99 @@
+"""L1 — Pallas SxEyMz fake-quantization kernel.
+
+This is the hot spot of OMC: every client training iteration re-quantizes
+every selected weight matrix. The kernel is elementwise integer
+bit-manipulation, i.e. VPU work on a real TPU; it is bandwidth-bound, so the
+BlockSpec is chosen for HBM<->VMEM streaming, not MXU use (see DESIGN.md
+§Hardware-Adaptation):
+
+* the flattened variable is reshaped to ``(rows, 128)`` — 128 is the TPU lane
+  width — and tiled in ``(BLOCK_ROWS, 128)`` slabs;
+* one input slab + one output slab live in VMEM per grid step
+  (``2 * BLOCK_ROWS * 128 * 4`` bytes = 256 KiB at the default 256 rows,
+  comfortably double-bufferable in 16 MiB VMEM);
+* the dynamic format parameters (e, m) ride along as a tiny ``(2,)`` i32
+  operand mapped to every grid step (SMEM-resident on TPU).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers the kernel to plain HLO that
+both pytest and the Rust runtime can run. Correctness is asserted bit-exactly
+against ``ref.quantize_ref`` (pure jnp) in ``python/tests``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile: (256, 128) f32 slab = 128 KiB in, 128 KiB out.
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _quant_kernel(em_ref, x_ref, o_ref):
+    """Pallas kernel body: quantize one VMEM slab.
+
+    The bit-math is shared verbatim with the jnp oracle (ref.py) — the kernel
+    is the *scheduling* of that math, the oracle is its semantics.
+    """
+    e = em_ref[0]
+    m = em_ref[1]
+    o_ref[...] = ref.quantize_u32_math(x_ref[...], e, m)
+
+
+def _pad_rows(n: int, block_rows: int) -> int:
+    rows = -(-n // LANES)
+    return -(-rows // block_rows) * block_rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def quantize_pallas(x, exp_bits, mant_bits, *, block_rows: int = BLOCK_ROWS):
+    """Quantize an arbitrary-shape f32 array to SxEyMz via the Pallas kernel.
+
+    Args:
+      x: f32 array, any shape.
+      exp_bits / mant_bits: i32 scalars (may be traced — one artifact serves
+        every format).
+      block_rows: tile height; exposed for the §Perf sweep.
+    Returns:
+      f32 array shaped like ``x`` with every element SxEyMz-representable.
+    """
+    shape = x.shape
+    n = x.size
+    if n == 0:
+        return x
+    rows = _pad_rows(n, block_rows)
+    flat = jnp.zeros((rows * LANES,), jnp.float32).at[:n].set(
+        x.astype(jnp.float32).ravel())
+    grid = rows // block_rows
+    em = jnp.stack([jnp.asarray(exp_bits, jnp.int32),
+                    jnp.asarray(mant_bits, jnp.int32)])
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),            # (e, m) — every step
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(em, flat.reshape(rows, LANES))
+    return out.ravel()[:n].reshape(shape)
+
+
+# Variables smaller than this skip the Pallas machinery: grid/padding overhead
+# would dominate, and the paper's hot spot is the weight matrices anyway
+# (99.8% of model size). Semantics are identical either way (tested).
+PALLAS_MIN_ELEMS = 4096
+
+
+def quantize(x, exp_bits, mant_bits):
+    """Dispatch: Pallas kernel for large variables, jnp oracle for small."""
+    if x.size >= PALLAS_MIN_ELEMS:
+        return quantize_pallas(x, exp_bits, mant_bits)
+    return ref.quantize_u32_math(
+        x, jnp.asarray(exp_bits, jnp.int32), jnp.asarray(mant_bits, jnp.int32))

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for the OMC compression math.
+
+These are the correctness ground truth for (a) the Pallas kernel in
+``quant.py`` (pytest asserts bit-exact agreement) and (b) the Rust codec in
+``rust/src/omc/quantize.rs`` (asserted through the ``quant.hlo.txt`` artifact
+in a cargo integration test).
+
+Quantization model — SxEyMz floating point (1 sign bit, ``e`` exponent bits,
+``m`` mantissa bits), IEEE-like:
+
+* exponent bias ``2^(e-1) - 1``; the all-ones exponent field is reserved
+  (inf/NaN), so the maximum finite unbiased exponent is the bias itself;
+* round-to-nearest-even on the mantissa, with the natural carry into the
+  exponent;
+* gradual underflow (subnormals) below the minimum normal exponent;
+* saturating overflow to the maximum finite value (standard practice for
+  training-time formats; the paper does not specify and training values are
+  far from the range limits). Inf/NaN inputs also saturate — documented.
+
+Everything is expressed as u32 bit manipulation on the f32 encoding, which is
+exactly mirrorable in Rust, in the Pallas kernel, and in plain jnp.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+
+
+def quantize_u32_math(x, exp_bits, mant_bits):
+    """Quantize f32 values to SxEyMz. Works on traced values.
+
+    Args:
+      x: f32 array (any shape).
+      exp_bits: int32 scalar (traced OK), 1 <= e <= 8.
+      mant_bits: int32 scalar (traced OK), 0 <= m <= 23.
+    Returns:
+      f32 array of the same shape; every element exactly representable in
+      SxEyMz.
+    """
+    e = exp_bits.astype(_U32) if hasattr(exp_bits, "astype") else _U32(exp_bits)
+    m = mant_bits.astype(_U32) if hasattr(mant_bits, "astype") else _U32(mant_bits)
+
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U32)
+    sign = u & _U32(0x8000_0000)
+    mag = u & _U32(0x7FFF_FFFF)
+
+    # Unbiased f32 exponent; biased-0 (f32 subnormal) behaves like biased-1
+    # (same 2^-126 scale), which makes the shift formula uniform.
+    bexp = (mag >> _U32(23)).astype(jnp.int32)
+    unb = jnp.maximum(bexp, 1) - 127
+
+    bias_f = (jnp.int32(1) << (e.astype(jnp.int32) - 1)) - 1
+    min_normal_unb = 1 - bias_f
+
+    # --- Normal range: drop (23 - m) f32-mantissa bits with RNE. ----------
+    # Masking low bits of the raw encoding is exact within a binade and the
+    # carry into the exponent on round-up is the correct next-binade value.
+    shift = _U32(23) - m
+    sm1 = jnp.maximum(shift, _U32(1)) - _U32(1)
+    half = _U32(1) << sm1
+    lsb = (mag >> shift) & _U32(1)
+    rounded = ((mag + half - _U32(1) + lsb) >> shift) << shift
+    q_norm = jnp.where(shift == _U32(0), mag, rounded)
+
+    # --- Subnormal range (unb < min_normal_unb): uniform grid of quantum
+    # 2^t, t = min_normal_unb - m. The encoding trick does NOT apply across
+    # binades, so round in value space with the exact additive trick:
+    # (|x| + C) - C with C = 1.5 * 2^(t+23) rounds |x| to a multiple of 2^t
+    # under the FPU's own RNE, and the subtraction is exact (Sterbenz).
+    # Requires |x| < 2^(t+22), i.e. m <= 22 whenever the subnormal path can
+    # trigger; every format with m = 23 also has e = 8 (plain f32), whose
+    # subnormals coincide with f32's own, so the path is never taken there.
+    t_plus_150 = (min_normal_unb - m.astype(jnp.int32) + 150).astype(_U32)
+    c_enc = (t_plus_150 << _U32(23)) | _U32(0x0040_0000)  # 1.5 * 2^(t+23)
+    c = jax.lax.bitcast_convert_type(c_enc, jnp.float32)
+    absx = jax.lax.bitcast_convert_type(mag, jnp.float32)
+    q_sub = jax.lax.bitcast_convert_type((absx + c) - c, _U32)
+
+    q = jnp.where(unb < min_normal_unb, q_sub, q_norm)
+
+    # Saturate to the maximum finite SxEyMz value (also catches inf/NaN and
+    # RNE carry past the top binade).
+    max_bexp = (bias_f + 127).astype(_U32)
+    frac = ((_U32(1) << m) - _U32(1)) << (_U32(23) - m)
+    max_mag = (max_bexp << _U32(23)) | frac
+    q = jnp.minimum(q, max_mag)
+
+    out = sign | q
+    return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+def quantize_ref(x, exp_bits, mant_bits):
+    """Reference quantizer (alias kept for test readability)."""
+    return quantize_u32_math(x, jnp.int32(exp_bits), jnp.int32(mant_bits))
+
+
+def pvt_fit_ref(v, vt):
+    """Per-variable transformation: least-squares fit of ``s*vt + b ~= v``.
+
+    The paper's Eq. (1) denominator has a typo (mixes V and Ṽ); this is the
+    correct closed form. Accumulation in f64 per Sec. 2.3; the returned
+    scalars are f32 (also per Sec. 2.3).
+
+    Degenerate case: denominator 0 (vt constant) => s = 1, b = mean(v - vt).
+    A non-finite quotient (pathological cancellation) falls back the same way.
+    """
+    v64 = v.astype(jnp.float64).ravel()
+    t64 = vt.astype(jnp.float64).ravel()
+    n = jnp.float64(v64.shape[0])
+    sum_v = jnp.sum(v64)
+    sum_t = jnp.sum(t64)
+    sum_tt = jnp.sum(t64 * t64)
+    sum_vt = jnp.sum(v64 * t64)
+    den = n * sum_tt - sum_t * sum_t
+    num = n * sum_vt - sum_v * sum_t
+    s_raw = num / den
+    bad = (den == 0.0) | ~jnp.isfinite(s_raw)
+    s = jnp.where(bad, 1.0, s_raw)
+    b = (sum_v - s * sum_t) / n
+    return s.astype(jnp.float32), b.astype(jnp.float32)
+
+
+def fakequant_pvt_ref(v, exp_bits, mant_bits):
+    """Full OMC compress step for one variable: quantize + PVT fit.
+
+    Returns ``(vt, s, b)`` — the exactly-representable quantized values and
+    the per-variable transform scalars. The decompressed view the next
+    iteration consumes is ``s * vt + b`` (computed in f32, matching the wire
+    contract where s/b travel as f32).
+    """
+    vt = quantize_u32_math(v, jnp.int32(exp_bits), jnp.int32(mant_bits))
+    s, b = pvt_fit_ref(v, vt)
+    return vt, s, b
+
+
+def decompress_ref(vt, s, b):
+    """PVT decompression ``V̄ = s·Ṽ + b`` in f32 (the on-device compute)."""
+    return (s.astype(jnp.float32) * vt.astype(jnp.float32)
+            + b.astype(jnp.float32))

@@ -1,0 +1,291 @@
+"""L2 — conformer-lite in functional JAX.
+
+A size-configurable stand-in for the paper's Conformer ASR models (DESIGN.md
+§2): macaron feed-forward halves, multi-head self-attention (causal when
+``streaming``), a depthwise-convolution module with GroupNorm (the paper's
+BatchNorm→GroupNorm substitution for FL), LayerNorms, framewise CE loss and
+greedy decoding.
+
+Parameters are an *ordered flat list* — the lowered HLO takes one operand per
+variable, and ``specs()`` is serialized into ``manifest.json`` so the Rust
+coordinator binds operands by position. Variable ``kind`` drives the paper's
+weight-matrices-only rule: only ``kind == "weight"`` is eligible for
+quantization (Sec. 2.4).
+"""
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import omc
+from .configs import ModelConfig
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class VarSpec:
+    name: str
+    shape: tuple
+    kind: str  # "weight" | "bias" | "norm_scale" | "norm_bias"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def specs(cfg: ModelConfig) -> list:
+    """The ordered variable table for a model configuration."""
+    d = cfg.d_model
+    ff = cfg.ff_dim()
+    out = [
+        VarSpec("input_proj/w", (cfg.feature_dim, d), "weight"),
+        VarSpec("input_proj/b", (d,), "bias"),
+    ]
+    def ffn_specs(p, half):
+        return [
+            VarSpec(f"{p}/{half}/ln_scale", (d,), "norm_scale"),
+            VarSpec(f"{p}/{half}/ln_bias", (d,), "norm_bias"),
+            VarSpec(f"{p}/{half}/w1", (d, ff), "weight"),
+            VarSpec(f"{p}/{half}/b1", (ff,), "bias"),
+            VarSpec(f"{p}/{half}/w2", (ff, d), "weight"),
+            VarSpec(f"{p}/{half}/b2", (d,), "bias"),
+        ]
+
+    for i in range(cfg.num_blocks):
+        p = f"block{i}"
+        out += ffn_specs(p, "ffn1")
+        out += [
+            VarSpec(f"{p}/mhsa/ln_scale", (d,), "norm_scale"),
+            VarSpec(f"{p}/mhsa/ln_bias", (d,), "norm_bias"),
+            VarSpec(f"{p}/mhsa/wq", (d, d), "weight"),
+            VarSpec(f"{p}/mhsa/bq", (d,), "bias"),
+            VarSpec(f"{p}/mhsa/wk", (d, d), "weight"),
+            VarSpec(f"{p}/mhsa/bk", (d,), "bias"),
+            VarSpec(f"{p}/mhsa/wv", (d, d), "weight"),
+            VarSpec(f"{p}/mhsa/bv", (d,), "bias"),
+            VarSpec(f"{p}/mhsa/wo", (d, d), "weight"),
+            VarSpec(f"{p}/mhsa/bo", (d,), "bias"),
+            VarSpec(f"{p}/conv/ln_scale", (d,), "norm_scale"),
+            VarSpec(f"{p}/conv/ln_bias", (d,), "norm_bias"),
+            VarSpec(f"{p}/conv/pw1", (d, 2 * d), "weight"),
+            VarSpec(f"{p}/conv/pw1_b", (2 * d,), "bias"),
+            VarSpec(f"{p}/conv/dw", (cfg.conv_kernel, d), "weight"),
+            VarSpec(f"{p}/conv/dw_b", (d,), "bias"),
+            VarSpec(f"{p}/conv/gn_scale", (d,), "norm_scale"),
+            VarSpec(f"{p}/conv/gn_bias", (d,), "norm_bias"),
+            VarSpec(f"{p}/conv/pw2", (d, d), "weight"),
+            VarSpec(f"{p}/conv/pw2_b", (d,), "bias"),
+        ]
+        out += ffn_specs(p, "ffn2")
+        out += [
+            VarSpec(f"{p}/final_ln_scale", (d,), "norm_scale"),
+            VarSpec(f"{p}/final_ln_bias", (d,), "norm_bias"),
+        ]
+    out += [
+        VarSpec("output_proj/w", (d, cfg.vocab), "weight"),
+        VarSpec("output_proj/b", (cfg.vocab,), "bias"),
+    ]
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> list:
+    """Xavier-uniform weights, zero biases, unit norm scales."""
+    params = []
+    for spec in specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.kind == "weight":
+            if len(spec.shape) == 2:
+                fan_in, fan_out = spec.shape
+            else:  # depthwise conv (k, d): per-channel fan-in = k
+                fan_in, fan_out = spec.shape[0], spec.shape[0]
+            limit = math.sqrt(6.0 / (fan_in + fan_out))
+            params.append(jax.random.uniform(
+                sub, spec.shape, F32, -limit, limit))
+        elif spec.kind == "norm_scale":
+            params.append(jnp.ones(spec.shape, F32))
+        else:
+            params.append(jnp.zeros(spec.shape, F32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _groupnorm(x, scale, bias, groups, eps=1e-5):
+    b, t, d = x.shape
+    g = x.reshape(b, t, groups, d // groups)
+    mu = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(g - mu), axis=-1, keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + eps)
+    return g.reshape(b, t, d) * scale + bias
+
+
+def _swish(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _mhsa(x, wq, bq, wk, bk, wv, bv, wo, bo, heads, causal):
+    b, t, d = x.shape
+    dh = d // heads
+    q = (x @ wq + bq).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk + bk).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv + bv).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    logits = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        logits = jnp.where(mask, logits, -1e9)
+    attn = jax.nn.softmax(logits, axis=-1)
+    y = (attn @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ wo + bo
+
+
+def _depthwise_conv(x, w, causal):
+    """x: [B,T,d], w: [k,d] depthwise kernel."""
+    k, d = w.shape
+    pad = [(k - 1, 0)] if causal else [((k - 1) // 2, k // 2)]
+    return jax.lax.conv_general_dilated(
+        x, w.reshape(k, 1, d),
+        window_strides=(1,), padding=pad,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=d)
+
+
+def forward(cfg: ModelConfig, params: list, x):
+    """x: [B,T,F] f32 → logits [B,T,V]."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    h = x @ nxt() + nxt()
+
+    def ffn(h):
+        # consumes ln_scale, ln_bias, w1, b1, w2, b2 — matches ffn_specs()
+        y = _layernorm(h, nxt(), nxt())
+        y = _swish(y @ nxt() + nxt())
+        return y @ nxt() + nxt()
+
+    for _ in range(cfg.num_blocks):
+        # FFN half 1 (macaron)
+        h = h + 0.5 * ffn(h)
+        # MHSA
+        y = _layernorm(h, nxt(), nxt())
+        y = _mhsa(y, nxt(), nxt(), nxt(), nxt(), nxt(), nxt(), nxt(), nxt(),
+                  cfg.num_heads, cfg.streaming)
+        h = h + y
+        # Conv module
+        y = _layernorm(h, nxt(), nxt())
+        y = y @ nxt() + nxt()           # pointwise 1 → [B,T,2d]
+        a, g = jnp.split(y, 2, axis=-1)
+        y = a * jax.nn.sigmoid(g)       # GLU
+        y = _depthwise_conv(y, nxt(), cfg.streaming) + nxt()
+        y = _groupnorm(y, nxt(), nxt(), cfg.gn_groups)
+        y = _swish(y)
+        y = y @ nxt() + nxt()           # pointwise 2
+        h = h + y
+        # FFN half 2 (macaron)
+        h = h + 0.5 * ffn(h)
+        # final block LayerNorm
+        h = _layernorm(h, nxt(), nxt())
+    logits = h @ nxt() + nxt()
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: list, x, y):
+    """Framewise cross-entropy, mean over batch and time."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# lowered entry points (aot.py lowers each of these once per model size)
+# ---------------------------------------------------------------------------
+
+def make_init_fn(cfg: ModelConfig):
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        return tuple(init_params(cfg, key))
+    return init
+
+
+def make_train_fp32_fn(cfg: ModelConfig):
+    """(V_1..V_n, x, y, lr) → (V'_1..V'_n, loss) — plain SGD client step."""
+    n = len(specs(cfg))
+
+    def train(*args):
+        params = list(args[:n])
+        x, y, lr = args[n], args[n + 1], args[n + 2]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, x, y))(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new) + (loss,)
+
+    return train
+
+
+def make_train_omc_fn(cfg: ModelConfig, use_pvt: bool = True):
+    """OMC client step (DESIGN.md §6).
+
+    (Ṽ_1..Ṽ_n, s[n], b[n], mask[n], x, y, lr, e, m)
+        → (Ṽ'_1..Ṽ'_n, s'[n], b'[n], loss)
+
+    Decompress → fwd/bwd → SGD → masked re-compress (quantize via the Pallas
+    kernel + PVT fit). ``use_pvt=False`` lowers the Table-4 "quantization
+    only" ablation artifact.
+    """
+    n = len(specs(cfg))
+
+    def train(*args):
+        tildes = list(args[:n])
+        s, b, mask = args[n], args[n + 1], args[n + 2]
+        x, y, lr = args[n + 3], args[n + 4], args[n + 5]
+        e, m = args[n + 6], args[n + 7]
+        params = [omc.decompress(t, s[i], b[i]) for i, t in enumerate(tildes)]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, x, y))(params)
+        new_t, new_s, new_b = [], [], []
+        for i, (p, g) in enumerate(zip(params, grads)):
+            v = p - lr * g
+            vt, s_i, b_i = omc.compress_masked(v, mask[i], e, m, use_pvt)
+            new_t.append(vt)
+            new_s.append(s_i)
+            new_b.append(b_i)
+        return (tuple(new_t)
+                + (jnp.stack(new_s), jnp.stack(new_b), loss))
+
+    return train
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """(V_1..V_n, x, y) → (loss, pred[B,T] i32) — greedy framewise decode."""
+    n = len(specs(cfg))
+
+    def evaluate(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        logits = forward(cfg, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.mean(nll), pred
+
+    return evaluate
+
+
+def make_quant_fn():
+    """(v[N], e, m) → ṽ[N] — standalone quantizer artifact for the
+    cross-layer bit-exactness test (Rust codec vs Pallas kernel)."""
+
+    def quantize(v, e, m):
+        return (omc.compress(v, e, m)[0],)
+
+    return quantize

@@ -1,0 +1,53 @@
+"""L2 glue — the OMC compress/decompress steps as they appear inside the
+lowered training graph.
+
+The graph-side contract (see DESIGN.md §6): the Rust coordinator owns the
+bit-packed storage; the graph receives the *decoded* quantized values
+``Ṽ`` (every element exactly SxEyMz-representable) plus the per-variable
+transform scalars ``(s, b)`` and a 0/1 selection mask, and must return the
+same triple for the updated parameters.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import quant, ref
+
+
+def decompress(vt, s, b):
+    """``V̄ = s·Ṽ + b`` in f32. Identity when (s, b) = (1, 0)."""
+    return s * vt + b
+
+
+def compress(v, exp_bits, mant_bits):
+    """Quantize one updated variable and fit its per-variable transform.
+
+    The quantization runs through the Pallas kernel for weight-matrix-sized
+    variables (the hot spot) and the jnp oracle for small ones; the PVT fit
+    accumulates in f64 (Sec. 2.3).
+    """
+    vt = quant.quantize(v, exp_bits, mant_bits)
+    s, b = ref.pvt_fit_ref(v, vt)
+    return vt, s, b
+
+
+def compress_masked(v, mask, exp_bits, mant_bits, use_pvt=True):
+    """Masked OMC compress for one variable.
+
+    mask = 1: store quantized + PVT scalars. mask = 0 (unselected under PPQ,
+    or not a weight matrix): store raw f32 with the identity transform.
+    Branchless select — XLA evaluates both sides; the unselected side is the
+    cheap one, and the paper's configuration quantizes 90% of the weight
+    matrices anyway.
+    """
+    vt, s, b = compress(v, exp_bits, mant_bits)
+    if not use_pvt:
+        # Ablation row "quantization only" (Table 4): identity transform.
+        s = jnp.float32(1.0)
+        b = jnp.float32(0.0)
+    one = jnp.float32(1.0)
+    zero = jnp.float32(0.0)
+    sel = mask > 0.5
+    vt_out = jnp.where(sel, vt, v)
+    s_out = jnp.where(sel, s, one)
+    b_out = jnp.where(sel, b, zero)
+    return vt_out, s_out, b_out

@@ -1,0 +1,11 @@
+"""pytest bootstrap: make ``compile`` importable and enable x64 before any
+jax op runs (the PVT fit accumulates in f64, Sec. 2.3 of the paper)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

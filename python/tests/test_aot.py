@@ -1,0 +1,73 @@
+"""AOT pipeline smoke: lowering emits parseable HLO text and a manifest that
+matches the variable registry. Kept on `tiny` so the pytest cycle stays
+fast; the full artifact build is `make artifacts`."""
+
+import json
+import os
+
+import pytest
+import jax.numpy as jnp
+
+from compile import aot, model as M
+from compile.configs import PRESETS
+
+
+@pytest.fixture(scope="module")
+def art(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    aot.lower_quant_artifact(str(root))
+    man = aot.lower_size("tiny", str(root))
+    return root, man
+
+
+def test_artifact_files_exist(art):
+    root, man = art
+    for name in ("init", "train_fp32", "train_omc", "train_omc_nopvt",
+                 "eval"):
+        p = os.path.join(root, "tiny", f"{name}.hlo.txt")
+        assert os.path.exists(p), name
+        head = open(p).read(200)
+        assert head.startswith("HloModule"), name
+    assert os.path.exists(os.path.join(root, "quant.hlo.txt"))
+
+
+def test_manifest_matches_registry(art):
+    root, man = art
+    on_disk = json.load(open(os.path.join(root, "tiny", "manifest.json")))
+    assert on_disk == man
+    specs = M.specs(PRESETS["tiny"])
+    assert man["num_variables"] == len(specs)
+    assert man["total_params"] == sum(s.size for s in specs)
+    for entry, s in zip(man["variables"], specs):
+        assert entry["name"] == s.name
+        assert tuple(entry["shape"]) == tuple(s.shape)
+        assert entry["kind"] == s.kind
+        assert entry["size"] == s.size
+
+
+def test_manifest_config_roundtrip(art):
+    _, man = art
+    cfg = PRESETS["tiny"]
+    assert man["config"]["batch"] == cfg.batch
+    assert man["config"]["seq_len"] == cfg.seq_len
+    assert man["config"]["feature_dim"] == cfg.feature_dim
+    assert man["config"]["vocab"] == cfg.vocab
+    assert man["config"]["streaming"] == cfg.streaming
+
+
+def test_hlo_text_has_tuple_root(art):
+    """return_tuple=True — the Rust loader unwraps a single tuple."""
+    root, _ = art
+    text = open(os.path.join(root, "tiny", "eval.hlo.txt")).read()
+    assert "ROOT" in text and "tuple" in text
+
+
+def test_unknown_size_rejected():
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--sizes", "nonexistent"]
+    try:
+        with pytest.raises(SystemExit):
+            aot.main()
+    finally:
+        sys.argv = argv

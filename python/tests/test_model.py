@@ -1,0 +1,238 @@
+"""L2 model checks: variable registry, shapes, learning, streaming causality,
+and the OMC train-step contract the Rust coordinator depends on."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import PRESETS, ModelConfig
+from compile.kernels import ref
+
+CFG = PRESETS["tiny"]
+
+
+def _params(cfg=CFG, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _batch(cfg=CFG, seed=1, noise=0.3):
+    """Synthetic ASR-like batch: x = E[y] + noise (mirrors data::synth)."""
+    rng = np.random.default_rng(seed)
+    E = rng.standard_normal((cfg.vocab, cfg.feature_dim)).astype(np.float32)
+    y = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    x = E[y] + noise * rng.standard_normal(
+        (cfg.batch, cfg.seq_len, cfg.feature_dim)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y), E, rng
+
+
+# ---------------------------------------------------------------------------
+# registry / shapes
+# ---------------------------------------------------------------------------
+
+def test_specs_unique_names():
+    names = [s.name for s in M.specs(CFG)]
+    assert len(names) == len(set(names))
+
+
+def test_specs_param_count_matches_init():
+    specs = M.specs(CFG)
+    params = _params()
+    assert len(params) == len(specs)
+    for s, p in zip(specs, params):
+        assert tuple(p.shape) == tuple(s.shape), s.name
+        assert p.dtype == jnp.float32
+
+
+def test_weight_matrices_dominate_size():
+    """The Sec. 2.4 observation that makes weights-only quantization pay off:
+    weight matrices are the overwhelming majority of parameters."""
+    specs = M.specs(PRESETS["small"])
+    total = sum(s.size for s in specs)
+    weights = sum(s.size for s in specs if s.kind == "weight")
+    assert weights / total > 0.97
+
+
+def test_kinds_are_known():
+    assert {s.kind for s in M.specs(CFG)} <= {
+        "weight", "bias", "norm_scale", "norm_bias"}
+
+
+def test_forward_shape():
+    x, y, _, _ = _batch()
+    logits = M.forward(CFG, _params(), x)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_init_deterministic():
+    a = _params(seed=3)
+    b = _params(seed=3)
+    c = _params(seed=4)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(not np.array_equal(np.asarray(pa), np.asarray(pc))
+               for pa, pc in zip(a, c))
+
+
+# ---------------------------------------------------------------------------
+# learning
+# ---------------------------------------------------------------------------
+
+def test_fp32_step_learns():
+    train = jax.jit(M.make_train_fp32_fn(CFG))
+    p = _params()
+    n = len(p)
+    rng_losses = []
+    x, y, E, rng = _batch()
+    for i in range(40):
+        yb = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+        xb = E[yb] + 0.3 * rng.standard_normal(
+            (CFG.batch, CFG.seq_len, CFG.feature_dim)).astype(np.float32)
+        out = train(*p, jnp.asarray(xb), jnp.asarray(yb), jnp.float32(0.1))
+        p = list(out[:n])
+        rng_losses.append(float(out[-1]))
+    assert rng_losses[-1] < rng_losses[0] * 0.7
+
+
+def test_grad_matches_finite_difference():
+    """Spot-check one scalar direction of the autodiff gradient."""
+    cfg = CFG
+    p = _params()
+    x, y, _, _ = _batch()
+    loss = lambda plist: M.loss_fn(cfg, plist, x, y)
+    g = jax.grad(loss)(p)
+    # probe the largest-magnitude gradient entry of the output projection
+    gi = np.asarray(g[-2])
+    idx = np.unravel_index(np.argmax(np.abs(gi)), gi.shape)
+    eps = 1e-3
+    def perturbed(delta):
+        q = [np.asarray(t).copy() for t in p]
+        q[-2][idx] += delta
+        return float(loss([jnp.asarray(t) for t in q]))
+    fd = (perturbed(eps) - perturbed(-eps)) / (2 * eps)
+    assert abs(fd - gi[idx]) < 5e-3 * max(1.0, abs(gi[idx]))
+
+
+# ---------------------------------------------------------------------------
+# streaming (causality)
+# ---------------------------------------------------------------------------
+
+def test_streaming_is_causal():
+    cfg = ModelConfig(name="t", feature_dim=8, vocab=16, d_model=16,
+                      num_heads=2, num_blocks=1, batch=2, seq_len=12,
+                      streaming=True)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x1 = rng.standard_normal((2, 12, 8)).astype(np.float32)
+    x2 = x1.copy()
+    x2[:, 8:, :] += 10.0  # perturb the future only
+    l1 = np.asarray(M.forward(cfg, p, jnp.asarray(x1)))
+    l2 = np.asarray(M.forward(cfg, p, jnp.asarray(x2)))
+    np.testing.assert_allclose(l1[:, :8], l2[:, :8], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[:, 8:], l2[:, 8:])
+
+
+def test_non_streaming_uses_future_context():
+    cfg = CFG  # streaming=False
+    p = _params()
+    rng = np.random.default_rng(0)
+    x1 = rng.standard_normal((CFG.batch, CFG.seq_len, CFG.feature_dim)).astype(np.float32)
+    x2 = x1.copy()
+    x2[:, -4:, :] += 10.0
+    l1 = np.asarray(M.forward(cfg, p, jnp.asarray(x1)))
+    l2 = np.asarray(M.forward(cfg, p, jnp.asarray(x2)))
+    assert not np.allclose(l1[:, :4], l2[:, :4])
+
+
+# ---------------------------------------------------------------------------
+# OMC train-step contract (what the Rust coordinator relies on)
+# ---------------------------------------------------------------------------
+
+def _omc_state(cfg=CFG):
+    specs = M.specs(cfg)
+    n = len(specs)
+    mask = jnp.asarray(
+        [1.0 if s.kind == "weight" else 0.0 for s in specs], jnp.float32)
+    return (list(_params(cfg)), jnp.ones((n,), jnp.float32),
+            jnp.zeros((n,), jnp.float32), mask, n, specs)
+
+
+def test_omc_step_outputs_representable():
+    t, s, b, mask, n, specs = _omc_state()
+    train = jax.jit(M.make_train_omc_fn(CFG, True))
+    x, y, _, _ = _batch()
+    out = train(*t, s, b, mask, x, y, jnp.float32(0.05),
+                jnp.int32(3), jnp.int32(7))
+    new_t, new_s, new_b = list(out[:n]), out[n], out[n + 1]
+    for i, sp in enumerate(specs):
+        tv = np.asarray(new_t[i])
+        assert np.all(np.isfinite(tv)), sp.name
+        if float(mask[i]) > 0.5:
+            rq = np.asarray(ref.quantize_ref(jnp.asarray(tv), 3, 7))
+            np.testing.assert_array_equal(
+                rq.view(np.uint32), tv.view(np.uint32), err_msg=sp.name)
+        else:
+            assert float(new_s[i]) == 1.0 and float(new_b[i]) == 0.0, sp.name
+
+
+def test_omc_fp32format_zero_mask_matches_fp32_step():
+    """mask = 0 everywhere: the OMC artifact must reduce to the plain FP32
+    step (same semantics, quantization bypassed). Tolerances are a few ulps:
+    the two graphs fuse differently under XLA, so bit equality is not
+    guaranteed — equivalence is."""
+    t, s, b, _, n, _ = _omc_state()
+    zero_mask = jnp.zeros((n,), jnp.float32)
+    x, y, _, _ = _batch()
+    omc_out = jax.jit(M.make_train_omc_fn(CFG, True))(
+        *t, s, b, zero_mask, x, y, jnp.float32(0.1),
+        jnp.int32(3), jnp.int32(7))
+    fp_out = jax.jit(M.make_train_fp32_fn(CFG))(*t, x, y, jnp.float32(0.1))
+    for i in range(n):
+        np.testing.assert_allclose(
+            np.asarray(omc_out[i]), np.asarray(fp_out[i]),
+            rtol=1e-5, atol=1e-7)
+    assert abs(float(omc_out[n + 2]) - float(fp_out[n])) < 1e-6
+
+
+def test_omc_nopvt_keeps_identity_transform():
+    t, s, b, mask, n, _ = _omc_state()
+    train = jax.jit(M.make_train_omc_fn(CFG, use_pvt=False))
+    x, y, _, _ = _batch()
+    out = train(*t, s, b, mask, x, y, jnp.float32(0.05),
+                jnp.int32(3), jnp.int32(7))
+    np.testing.assert_array_equal(np.asarray(out[n]), np.ones(n, np.float32))
+    np.testing.assert_array_equal(np.asarray(out[n + 1]), np.zeros(n, np.float32))
+
+
+def test_omc_training_converges_like_fp32():
+    """Table-1 shape at tiny scale: OMC @ S1E4M14 tracks the FP32 loss."""
+    train_fp = jax.jit(M.make_train_fp32_fn(CFG))
+    train_omc = jax.jit(M.make_train_omc_fn(CFG, True))
+    t, s, b, mask, n, _ = _omc_state()
+    p = [jnp.asarray(np.asarray(v)) for v in t]
+    rng = np.random.default_rng(2)
+    E = rng.standard_normal((CFG.vocab, CFG.feature_dim)).astype(np.float32)
+    lf = lq = None
+    for i in range(50):
+        yb = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+        xb = (E[yb] + 0.3 * rng.standard_normal(
+            (CFG.batch, CFG.seq_len, CFG.feature_dim))).astype(np.float32)
+        xb, yb = jnp.asarray(xb), jnp.asarray(yb)
+        fo = train_fp(*p, xb, yb, jnp.float32(0.1))
+        p, lf = list(fo[:n]), float(fo[-1])
+        oo = train_omc(*t, s, b, mask, xb, yb, jnp.float32(0.1),
+                       jnp.int32(4), jnp.int32(14))
+        t, s, b, lq = list(oo[:n]), oo[n], oo[n + 1], float(oo[n + 2])
+    assert lq < 1.15 * lf + 0.05, (lq, lf)
+
+
+def test_eval_fn_outputs():
+    p = _params()
+    x, y, _, _ = _batch()
+    loss, pred = jax.jit(M.make_eval_fn(CFG))(*p, x, y)
+    assert pred.shape == (CFG.batch, CFG.seq_len)
+    assert pred.dtype == jnp.int32
+    assert np.isfinite(float(loss))
+    assert np.all((np.asarray(pred) >= 0) & (np.asarray(pred) < CFG.vocab))

@@ -1,0 +1,113 @@
+"""Per-variable transformation (Sec. 2.3): least-squares optimality,
+degenerate cases, and the end-to-end error-reduction claim."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def fit(v, vt):
+    s, b = ref.pvt_fit_ref(jnp.asarray(v), jnp.asarray(vt))
+    return float(s), float(b)
+
+
+def mse(v, dec):
+    return float(np.mean((v.astype(np.float64) - dec.astype(np.float64)) ** 2))
+
+
+def test_exact_affine_recovery():
+    """If vt is an exact affine image of v, PVT must invert it (up to f32)."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(4096).astype(np.float32)
+    vt = ((v - 0.25) / 2.0).astype(np.float32)
+    s, b = fit(v, vt)
+    assert abs(s - 2.0) < 1e-5
+    assert abs(b - 0.25) < 1e-5
+
+
+def test_least_squares_optimality():
+    """Perturbing (s, b) in any direction must not reduce the MSE."""
+    rng = np.random.default_rng(1)
+    v = (rng.standard_normal(8192) * 0.05).astype(np.float32)
+    vt = np.asarray(ref.quantize_ref(jnp.asarray(v), 2, 3))
+    s, b = fit(v, vt)
+    best = mse(v, s * vt + b)
+    for ds, db in [(1e-3, 0), (-1e-3, 0), (0, 1e-4), (0, -1e-4),
+                   (1e-3, 1e-4), (-1e-3, -1e-4)]:
+        assert mse(v, (s + ds) * vt + (b + db)) >= best - 1e-15
+
+
+def test_degenerate_constant_vt():
+    """vt constant => denominator 0 => s = 1, b = mean(v - vt)."""
+    v = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    vt = np.full(4, 2.0, np.float32)
+    s, b = fit(v, vt)
+    assert s == 1.0
+    assert abs(b - (np.mean(v) - 2.0)) < 1e-6
+
+
+def test_degenerate_all_zero():
+    v = np.zeros(16, np.float32)
+    vt = np.zeros(16, np.float32)
+    s, b = fit(v, vt)
+    assert s == 1.0 and b == 0.0
+
+
+def test_single_element():
+    s, b = fit(np.array([3.0], np.float32), np.array([2.0], np.float32))
+    assert s == 1.0          # n=1 denominator is 0
+    assert abs(b - 1.0) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=20000),
+    e=st.integers(min_value=2, max_value=6),
+    m=st.integers(min_value=0, max_value=14),
+    scale=st.sampled_from([1e-3, 0.05, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pvt_never_hurts(n, e, m, scale, seed):
+    """The paper's rationale: decompressed-with-PVT is at least as close to V
+    as raw dequantization (least squares includes (s,b) = (1,0))."""
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal(n) * scale).astype(np.float32)
+    vt = np.asarray(ref.quantize_ref(jnp.asarray(v), e, m))
+    s, b = fit(v, vt)
+    # compare in f64 with the fitted f32 scalars, matching the wire contract
+    assert mse(v, np.float32(s) * vt + np.float32(b)) <= mse(v, vt) + 1e-12
+
+
+def test_fakequant_pvt_composition():
+    rng = np.random.default_rng(4)
+    v = (rng.standard_normal(4096) * 0.02).astype(np.float32)
+    vt, s, b = ref.fakequant_pvt_ref(jnp.asarray(v), 3, 7)
+    vt = np.asarray(vt)
+    # vt is exactly representable
+    rq = np.asarray(ref.quantize_ref(jnp.asarray(vt), 3, 7))
+    np.testing.assert_array_equal(rq.view(np.uint32), vt.view(np.uint32))
+    # decompression improves on raw dequantization
+    dec = np.asarray(ref.decompress_ref(jnp.asarray(vt), s, b))
+    assert mse(v, dec) <= mse(v, vt) + 1e-12
+
+
+def test_scalars_are_f32():
+    rng = np.random.default_rng(8)
+    v = (rng.standard_normal(1024) * 0.1).astype(np.float32)
+    vt, s, b = ref.fakequant_pvt_ref(jnp.asarray(v), 4, 8)
+    assert s.dtype == jnp.float32 and b.dtype == jnp.float32
+
+
+def test_f64_accumulation_beats_f32_on_large_offsets():
+    """The fit must stay accurate when sums cancel badly — the reason the
+    paper computes s and b in 64-bit."""
+    rng = np.random.default_rng(10)
+    v = (rng.standard_normal(100000) * 1e-3 + 100.0).astype(np.float32)
+    vt = np.asarray(ref.quantize_ref(jnp.asarray(v), 5, 10))
+    s, b = fit(v, vt)
+    dec = np.float32(s) * vt + np.float32(b)
+    assert mse(v, dec) <= mse(v, vt) + 1e-12
+    assert np.isfinite(s) and np.isfinite(b)

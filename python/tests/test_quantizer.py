@@ -1,0 +1,182 @@
+"""L1 correctness: the Pallas SxEyMz quantizer vs the pure-jnp oracle.
+
+The oracle itself is validated against independent ground truths:
+IEEE binary16 (== S1E5M10) via numpy, and exhaustive structural properties
+(idempotence, monotonicity, symmetry, grid membership). The Pallas kernel
+must agree with the oracle *bit-exactly* on every shape/format hypothesis
+throws at it — this is the contract the Rust codec also tests against
+(through ``artifacts/quant.hlo.txt``).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, quant
+
+PAPER_FORMATS = [(8, 23), (5, 10), (4, 14), (3, 7), (2, 3),
+                 (3, 9), (4, 8), (5, 7)]
+
+
+def q_ref(x, e, m):
+    return np.asarray(ref.quantize_ref(jnp.asarray(x), e, m))
+
+
+# ---------------------------------------------------------------------------
+# oracle structural properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,m", PAPER_FORMATS)
+def test_idempotent(e, m):
+    rng = np.random.default_rng(42)
+    for scale in (1e-4, 0.05, 1.0, 300.0):
+        x = (rng.standard_normal(4096) * scale).astype(np.float32)
+        q1 = q_ref(x, e, m)
+        q2 = q_ref(q1, e, m)
+        np.testing.assert_array_equal(q1.view(np.uint32), q2.view(np.uint32))
+
+
+@pytest.mark.parametrize("e,m", PAPER_FORMATS)
+def test_monotone(e, m):
+    rng = np.random.default_rng(7)
+    x = np.sort((rng.standard_normal(8192) * 2.0).astype(np.float32))
+    q = q_ref(x, e, m)
+    assert np.all(np.diff(q) >= 0)
+
+
+@pytest.mark.parametrize("e,m", PAPER_FORMATS)
+def test_sign_symmetry(e, m):
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal(2048) * 0.1).astype(np.float32)
+    a = q_ref(x, e, m)
+    b = q_ref(-x, e, m)
+    np.testing.assert_array_equal(a, -b)
+
+
+def test_fp32_passthrough_identity():
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(4096) * 17.0).astype(np.float32)
+    q = q_ref(x, 8, 23)
+    np.testing.assert_array_equal(q.view(np.uint32), x.view(np.uint32))
+
+
+def test_matches_ieee_binary16():
+    """S1E5M10 is exactly IEEE half precision (away from inf/NaN)."""
+    rng = np.random.default_rng(11)
+    x = (rng.standard_normal(65536) * 10).astype(np.float32)
+    ours = q_ref(x, 5, 10)
+    f16 = x.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(ours, f16)
+
+
+def test_binary16_subnormals():
+    """The f16 subnormal grid (multiples of 2^-24) must match exactly."""
+    x = (np.arange(-3000, 3000, dtype=np.float32)) * np.float32(2.0**-26)
+    ours = q_ref(x, 5, 10)
+    f16 = x.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(ours, f16)
+
+
+def test_round_to_nearest_even_ties():
+    """Exact ties round to the even mantissa (S1E4M2: grid 1.0, 1.25, 1.5…)."""
+    # With m=2, between 1.0 and 1.25 the tie 1.125 -> 1.0 (even), and the
+    # tie 1.375 (between 1.25 and 1.5) -> 1.5 (even).
+    x = np.array([1.125, 1.375, -1.125, -1.375], np.float32)
+    q = q_ref(x, 4, 2)
+    np.testing.assert_array_equal(q, [1.0, 1.5, -1.0, -1.5])
+
+
+@pytest.mark.parametrize("e,m", [(4, 3), (3, 7), (2, 3), (5, 10)])
+def test_saturates_to_max_finite(e, m):
+    bias = 2 ** (e - 1) - 1
+    max_val = (2.0 - 2.0 ** -m) * 2.0 ** bias
+    x = np.array([np.inf, -np.inf, 1e30, -1e30, max_val], np.float32)
+    q = q_ref(x, e, m)
+    np.testing.assert_array_equal(
+        q, [max_val, -max_val, max_val, -max_val, max_val])
+
+
+@pytest.mark.parametrize("e,m", [(3, 7), (2, 3), (4, 8)])
+def test_subnormal_grid_is_uniform(e, m):
+    """Below the min normal, representables are exact multiples of 2^(1-bias-m)."""
+    bias = 2 ** (e - 1) - 1
+    quantum = 2.0 ** (1 - bias - m)
+    rng = np.random.default_rng(5)
+    x = (rng.uniform(-1, 1, 4096) * 2.0 ** (1 - bias)).astype(np.float32)
+    q = q_ref(x, e, m).astype(np.float64)
+    k = q / quantum
+    np.testing.assert_array_equal(k, np.round(k))
+    # and the rounding error is at most half a quantum
+    assert np.max(np.abs(q - x.astype(np.float64))) <= quantum / 2 + 1e-12
+
+
+def test_zero_and_tiny_flush():
+    q = q_ref(np.array([0.0, -0.0, 1e-42, -1e-42], np.float32), 3, 7)
+    np.testing.assert_array_equal(q, [0.0, -0.0, 0.0, -0.0])
+    # signs preserved on the zeros
+    assert np.signbit(q[1]) and not np.signbit(q[0])
+
+
+def test_quantization_error_shrinks_with_mantissa_bits():
+    rng = np.random.default_rng(9)
+    x = (rng.standard_normal(16384) * 0.05).astype(np.float32)
+    errs = [np.abs(q_ref(x, 5, m) - x).max() for m in (2, 5, 8, 12, 16)]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel == oracle, bit-exact, across shapes and formats (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=70000),
+    e=st.integers(min_value=2, max_value=8),
+    m=st.integers(min_value=0, max_value=22),
+    scale=st.sampled_from([1e-5, 1e-2, 1.0, 1e3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref_bitexact(n, e, m, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    a = q_ref(x, e, m)
+    b = np.asarray(quant.quantize_pallas(
+        jnp.asarray(x), jnp.int32(e), jnp.int32(m)))
+    np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    shape=st.sampled_from([(3, 5), (16, 128), (7, 9, 11), (1,), (257, 130)]),
+    e=st.integers(min_value=2, max_value=8),
+    m=st.integers(min_value=0, max_value=22),
+)
+def test_pallas_preserves_shape(shape, e, m):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(shape).astype(np.float32)
+    out = np.asarray(quant.quantize_pallas(
+        jnp.asarray(x), jnp.int32(e), jnp.int32(m)))
+    assert out.shape == x.shape
+    np.testing.assert_array_equal(out, q_ref(x, e, m))
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 256, 1024])
+def test_pallas_block_shape_invariance(block_rows):
+    """Tile size is a scheduling knob — results must be bit-identical."""
+    rng = np.random.default_rng(2)
+    x = (rng.standard_normal(50000) * 0.1).astype(np.float32)
+    base = q_ref(x, 3, 7)
+    out = np.asarray(quant.quantize_pallas(
+        jnp.asarray(x), jnp.int32(3), jnp.int32(7), block_rows=block_rows))
+    np.testing.assert_array_equal(base.view(np.uint32), out.view(np.uint32))
+
+
+def test_dispatch_small_and_large_agree():
+    rng = np.random.default_rng(6)
+    small = (rng.standard_normal(100) * 0.1).astype(np.float32)
+    large = (rng.standard_normal(quant.PALLAS_MIN_ELEMS * 2) * 0.1).astype(
+        np.float32)
+    for x in (small, large):
+        out = np.asarray(quant.quantize(jnp.asarray(x), 3, 7))
+        np.testing.assert_array_equal(out, q_ref(x, 3, 7))

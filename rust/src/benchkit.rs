@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Warmup + timed iterations, reporting median / MAD / throughput as
+//! markdown rows so `cargo bench` output can be pasted into EXPERIMENTS.md.
+//! Benches under `benches/` use `harness = false` and drive this directly.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::metrics::stats::{median_abs_dev, percentile};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+    /// optional elements-processed-per-iteration for throughput
+    pub elems: Option<usize>,
+}
+
+impl BenchResult {
+    pub fn throughput_m_elems_s(&self) -> Option<f64> {
+        self.elems
+            .map(|e| e as f64 / (self.median_ns / 1e9) / 1e6)
+    }
+
+    pub fn row(&self) -> String {
+        let thr = match self.throughput_m_elems_s() {
+            Some(t) => format!("{t:10.1}"),
+            None => format!("{:>10}", "-"),
+        };
+        format!(
+            "| {:<38} | {:>12} | {:>9} | {} |",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            thr
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// A benchmark suite printing a markdown table.
+pub struct Suite {
+    pub title: String,
+    results: Vec<BenchResult>,
+    /// minimum total measuring time per case
+    pub min_time_s: f64,
+    /// maximum iterations per case (caps very fast cases)
+    pub max_iters: usize,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // OMC_BENCH_FAST=1 shrinks budgets so `cargo test`-style smoke runs
+        // of the benches stay quick.
+        let fast = std::env::var("OMC_BENCH_FAST").is_ok();
+        Self {
+            title: title.to_string(),
+            results: Vec::new(),
+            min_time_s: if fast { 0.05 } else { 0.5 },
+            max_iters: if fast { 200 } else { 100_000 },
+        }
+    }
+
+    /// Time `f`, which should fully consume its work (`black_box` inside).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, elems: Option<usize>, mut f: F) {
+        // warmup + calibration: find an iteration count that runs ~10ms
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let batch = ((0.01 / once) as usize).clamp(1, self.max_iters);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0usize;
+        while start.elapsed().as_secs_f64() < self.min_time_s
+            && samples.len() < 200
+        {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per = t.elapsed().as_secs_f64() * 1e9 / batch as f64;
+            samples.push(per);
+            total_iters += batch;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: percentile(&samples, 50.0),
+            mad_ns: median_abs_dev(&samples),
+            iters: total_iters,
+            elems,
+        };
+        eprintln!("  measured {name}: {}", fmt_ns(res.median_ns));
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the markdown table to stdout.
+    pub fn report(&self) {
+        println!("\n### {}\n", self.title);
+        println!(
+            "| {:<38} | {:>12} | {:>9} | {:>10} |",
+            "case", "median", "mad", "Melem/s"
+        );
+        println!("|{}|{}|{}|{}|", "-".repeat(40), "-".repeat(14), "-".repeat(11), "-".repeat(12));
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+        println!();
+    }
+}
+
+/// Re-export for bench binaries.
+pub use std::hint::black_box as bb;
+
+/// Consume a value so the optimizer cannot remove the computation.
+#[inline]
+pub fn consume<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("OMC_BENCH_FAST", "1");
+        let mut s = Suite::new("test");
+        let mut acc = 0u64;
+        s.bench("noop-ish", Some(1000), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(consume(i));
+            }
+        });
+        let r = &s.results()[0];
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 1);
+        assert!(r.throughput_m_elems_s().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(1.2e4).contains("µs"));
+        assert!(fmt_ns(3.4e6).contains("ms"));
+        assert!(fmt_ns(2.1e9).contains(" s"));
+    }
+
+    #[test]
+    fn rows_are_markdown() {
+        let r = BenchResult {
+            name: "x".into(),
+            median_ns: 100.0,
+            mad_ns: 1.0,
+            iters: 10,
+            elems: None,
+        };
+        assert!(r.row().starts_with('|'));
+        assert!(r.row().contains(" - "));
+    }
+}

@@ -1,0 +1,280 @@
+//! Typed experiment configuration, read from TOML files (`configs/`) with
+//! programmatic builders for the example drivers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::partition::Partition;
+use crate::fl::sampler::SamplerKind;
+use crate::omc::format::FloatFormat;
+use crate::util::toml::{self, Table};
+
+/// OMC-specific knobs (paper Sec. 2).
+#[derive(Clone, Copy, Debug)]
+pub struct OmcConfig {
+    /// storage/transport format; `S1E8M23` means the FP32 baseline
+    pub format: FloatFormat,
+    /// per-variable transformation (Sec. 2.3)
+    pub use_pvt: bool,
+    /// weight-matrices-only rule (Sec. 2.4)
+    pub weights_only: bool,
+    /// PPQ fraction (Sec. 2.5); 1.0 = all eligible params every client
+    pub fraction: f64,
+}
+
+impl OmcConfig {
+    pub fn fp32_baseline() -> Self {
+        Self {
+            format: FloatFormat::FP32,
+            use_pvt: false,
+            weights_only: true,
+            fraction: 0.0,
+        }
+    }
+
+    pub fn paper(format: FloatFormat) -> Self {
+        Self {
+            format,
+            use_pvt: true,
+            weights_only: true,
+            fraction: 0.9,
+        }
+    }
+
+    pub fn is_baseline(&self) -> bool {
+        self.format.is_fp32() || self.fraction == 0.0
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// artifacts/<size> directory with manifest + HLO files
+    pub model_dir: PathBuf,
+    pub rounds: usize,
+    pub num_clients: usize,
+    pub clients_per_round: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub partition: Partition,
+    pub sampler: SamplerKind,
+    /// synthetic-data domain id (domain adaptation uses two ids)
+    pub domain: u64,
+    pub noise: f32,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub omc: OmcConfig,
+    pub output_dir: PathBuf,
+    /// optional checkpoint to start from (domain adaptation)
+    pub init_from: Option<PathBuf>,
+    /// optional checkpoint to write at the end
+    pub save_to: Option<PathBuf>,
+    pub workers: usize,
+}
+
+impl ExperimentConfig {
+    /// Sensible defaults for the small model; drivers override fields.
+    pub fn default_with(name: &str, model_dir: &Path) -> Self {
+        Self {
+            name: name.to_string(),
+            model_dir: model_dir.to_path_buf(),
+            rounds: 60,
+            num_clients: 32,
+            clients_per_round: 8,
+            local_steps: 1,
+            lr: 0.1,
+            seed: 42,
+            partition: Partition::Iid,
+            sampler: SamplerKind::Uniform,
+            domain: 0,
+            noise: 0.3,
+            eval_every: 5,
+            eval_batches: 8,
+            omc: OmcConfig::fp32_baseline(),
+            output_dir: PathBuf::from("results"),
+            init_from: None,
+            save_to: None,
+            workers: crate::util::threadpool::default_workers(),
+        }
+    }
+
+    /// Load from a TOML file (see `configs/*.toml`).
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let t = toml::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_table(&t)
+    }
+
+    pub fn from_table(t: &Table) -> Result<Self> {
+        let get_str = |k: &str| -> Option<&str> { t.get(k).and_then(|v| v.as_str()) };
+        let get_i = |k: &str| -> Option<i64> { t.get(k).and_then(|v| v.as_i64()) };
+        let get_f = |k: &str| -> Option<f64> { t.get(k).and_then(|v| v.as_f64()) };
+        let get_b = |k: &str| -> Option<bool> { t.get(k).and_then(|v| v.as_bool()) };
+
+        let name = get_str("name")
+            .ok_or_else(|| anyhow::anyhow!("config needs a name"))?
+            .to_string();
+        let model_dir = PathBuf::from(
+            get_str("model_dir").unwrap_or("artifacts/small"),
+        );
+        let mut cfg = Self::default_with(&name, &model_dir);
+        if let Some(v) = get_i("rounds") {
+            cfg.rounds = v as usize;
+        }
+        if let Some(v) = get_i("fl.clients") {
+            cfg.num_clients = v as usize;
+        }
+        if let Some(v) = get_i("fl.clients_per_round") {
+            cfg.clients_per_round = v as usize;
+        }
+        if let Some(v) = get_i("fl.local_steps") {
+            cfg.local_steps = v as usize;
+        }
+        if let Some(v) = get_f("fl.lr") {
+            cfg.lr = v as f32;
+        }
+        if let Some(v) = get_i("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_str("fl.partition") {
+            cfg.partition = Partition::parse(v)?;
+        }
+        if let Some(v) = get_str("fl.sampler") {
+            cfg.sampler = SamplerKind::parse(v)?;
+        }
+        if let Some(v) = get_i("data.domain") {
+            cfg.domain = v as u64;
+        }
+        if let Some(v) = get_f("data.noise") {
+            cfg.noise = v as f32;
+        }
+        if let Some(v) = get_i("eval.every") {
+            cfg.eval_every = v as usize;
+        }
+        if let Some(v) = get_i("eval.batches") {
+            cfg.eval_batches = v as usize;
+        }
+        if let Some(v) = get_str("omc.format") {
+            cfg.omc.format = v.parse()?;
+        }
+        if let Some(v) = get_b("omc.pvt") {
+            cfg.omc.use_pvt = v;
+        }
+        if let Some(v) = get_b("omc.weights_only") {
+            cfg.omc.weights_only = v;
+        }
+        if let Some(v) = get_f("omc.fraction") {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "omc.fraction in [0,1]");
+            cfg.omc.fraction = v;
+        }
+        if !cfg.omc.format.is_fp32() && cfg.omc.fraction == 0.0 {
+            // a quantized format with nothing selected is a config smell
+            anyhow::bail!(
+                "omc.format is {} but omc.fraction is 0 — set fraction or use S1E8M23",
+                cfg.omc.format
+            );
+        }
+        if let Some(v) = get_str("output_dir") {
+            cfg.output_dir = PathBuf::from(v);
+        }
+        if let Some(v) = get_str("init_from") {
+            cfg.init_from = Some(PathBuf::from(v));
+        }
+        if let Some(v) = get_str("save_to") {
+            cfg.save_to = Some(PathBuf::from(v));
+        }
+        if let Some(v) = get_i("workers") {
+            cfg.workers = (v as usize).max(1);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.rounds > 0, "rounds must be > 0");
+        anyhow::ensure!(self.num_clients > 0, "clients must be > 0");
+        anyhow::ensure!(
+            self.clients_per_round > 0 && self.clients_per_round <= self.num_clients,
+            "clients_per_round must be in 1..=clients"
+        );
+        anyhow::ensure!(self.local_steps > 0, "local_steps must be > 0");
+        anyhow::ensure!(self.lr > 0.0, "lr must be positive");
+        anyhow::ensure!(self.eval_every > 0, "eval_every must be > 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        name = "table1_omc"
+        model_dir = "artifacts/small"
+        rounds = 120
+        seed = 7
+
+        [fl]
+        clients = 64
+        clients_per_round = 16
+        local_steps = 1
+        lr = 0.1
+        partition = "iid"
+
+        [omc]
+        format = "S1E4M14"
+        pvt = true
+        weights_only = true
+        fraction = 0.9
+
+        [eval]
+        every = 10
+        batches = 4
+    "#;
+
+    #[test]
+    fn parses_full_config() {
+        let t = toml::parse(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.name, "table1_omc");
+        assert_eq!(c.rounds, 120);
+        assert_eq!(c.num_clients, 64);
+        assert_eq!(c.clients_per_round, 16);
+        assert_eq!(c.omc.format.to_string(), "S1E4M14");
+        assert!(c.omc.use_pvt);
+        assert_eq!(c.omc.fraction, 0.9);
+        assert_eq!(c.eval_every, 10);
+        assert!(!c.omc.is_baseline());
+    }
+
+    #[test]
+    fn rejects_inconsistent_omc() {
+        let bad = SAMPLE.replace("fraction = 0.9", "fraction = 0.0");
+        let t = toml::parse(&bad).unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_bounds() {
+        for (from, to) in [
+            ("rounds = 120", "rounds = 0"),
+            ("clients_per_round = 16", "clients_per_round = 100"),
+            ("lr = 0.1", "lr = -0.5"),
+        ] {
+            let bad = SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+    }
+
+    #[test]
+    fn baseline_detection() {
+        assert!(OmcConfig::fp32_baseline().is_baseline());
+        assert!(!OmcConfig::paper("S1E3M7".parse().unwrap()).is_baseline());
+    }
+}

@@ -1,0 +1,345 @@
+//! The experiment driver: a full federated run with periodic WER
+//! evaluation, byte accounting, and table-style reporting.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::params_io;
+use crate::data::partition::ClientAssignment;
+use crate::data::synth::{collapse_words, Domain, TaskConfig};
+use crate::fl::client::ClientTrainConfig;
+use crate::fl::round::{run_round, RoundContext};
+use crate::fl::sampler::Sampler;
+use crate::fl::server::Server;
+use crate::metrics::recorder::{Recorder, RoundRecord};
+use crate::metrics::stats::Timer;
+use crate::metrics::wer::WerAccumulator;
+use crate::omc::selection::SelectionPolicy;
+use crate::runtime::engine::{Engine, LoadedModel};
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// A prepared experiment: runtime + data + config, ready to run.
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    pub model: Arc<LoadedModel>,
+    pub domain: Domain,
+    pub assignment: ClientAssignment,
+    pub sampler: Sampler,
+    pub server: Server,
+}
+
+/// Final summary, one per experiment run (a row of a paper table).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub final_wer: f64,
+    pub final_loss: f64,
+    /// parameter memory of a client's compressed store, bytes
+    pub param_memory_bytes: usize,
+    /// memory relative to FP32
+    pub memory_ratio: f64,
+    /// mean per-round communication (down + up), bytes
+    pub comm_bytes_per_round: f64,
+    pub rounds_per_min: f64,
+    pub rounds: usize,
+}
+
+impl Experiment {
+    /// Build everything from a config (loads + compiles artifacts).
+    pub fn prepare(engine: &Engine, cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let model = Arc::new(engine.load_model(&cfg.model_dir)?);
+        Self::prepare_with_model(cfg, model)
+    }
+
+    /// Build an experiment over an already-bound model. Use this to share
+    /// one compilation cache across several experiment variants in the same
+    /// process (every table example runs 2–5 variants of the same model).
+    pub fn prepare_with_model(
+        cfg: ExperimentConfig,
+        model: Arc<LoadedModel>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let mc = &model.manifest.config;
+        let mut task = TaskConfig::from_model(
+            mc.vocab,
+            mc.feature_dim,
+            mc.seq_len,
+            hash_seed(&[cfg.seed, 0xDA7A]),
+        );
+        task.noise = cfg.noise;
+        let domain = Domain::new(&task, cfg.domain);
+        let assignment = ClientAssignment::build(
+            cfg.partition,
+            cfg.num_clients,
+            task.num_speakers,
+            cfg.seed,
+        );
+        let sampler = Sampler::new(
+            cfg.sampler,
+            cfg.num_clients,
+            cfg.clients_per_round,
+            cfg.seed,
+        );
+        let params = match &cfg.init_from {
+            Some(path) => {
+                let p = params_io::load(path)
+                    .with_context(|| format!("loading init checkpoint {path:?}"))?;
+                anyhow::ensure!(
+                    p.len() == model.num_vars(),
+                    "checkpoint has {} vars, model needs {}",
+                    p.len(),
+                    model.num_vars()
+                );
+                p
+            }
+            None => model.run_init(cfg.seed as i32)?,
+        };
+        let server = Server::new(params);
+        Ok(Self {
+            cfg,
+            model,
+            domain,
+            assignment,
+            sampler,
+            server,
+        })
+    }
+
+    fn train_config(&self) -> ClientTrainConfig {
+        let omc = &self.cfg.omc;
+        ClientTrainConfig {
+            lr: self.cfg.lr,
+            local_steps: self.cfg.local_steps,
+            format: omc.format,
+            use_pvt: omc.use_pvt,
+            fp32_baseline: omc.is_baseline(),
+        }
+    }
+
+    fn policy(&self) -> SelectionPolicy {
+        if self.cfg.omc.is_baseline() {
+            SelectionPolicy::fp32()
+        } else {
+            SelectionPolicy {
+                weights_only: self.cfg.omc.weights_only,
+                fraction: self.cfg.omc.fraction,
+            }
+        }
+    }
+
+    /// Evaluate the current server model: corpus WER + mean eval loss over
+    /// `eval_batches` held-out batches (a dedicated RNG stream disjoint
+    /// from training).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mc = &self.model.manifest.config;
+        let mut rng = Xoshiro256pp::new(hash_seed(&[
+            self.cfg.seed, 0xE7A1, self.server.round as u64,
+        ]));
+        let all_speakers: Vec<usize> =
+            (0..self.domainless_speakers()).collect();
+        let mut acc = WerAccumulator::new();
+        let mut loss_sum = 0.0;
+        for _ in 0..self.cfg.eval_batches {
+            let batch = self.domain.batch(&all_speakers, mc.batch, &mut rng);
+            let out = self
+                .model
+                .run_eval(&self.server.params, &batch.x, &batch.y)?;
+            loss_sum += out.loss as f64;
+            let refs = batch.reference_words();
+            for b in 0..batch.batch {
+                let hyp = collapse_words(
+                    &out.pred[b * batch.seq_len..(b + 1) * batch.seq_len],
+                    batch.word_len,
+                );
+                acc.add(&hyp, &refs[b]);
+            }
+        }
+        Ok((acc.wer(), loss_sum / self.cfg.eval_batches.max(1) as f64))
+    }
+
+    fn domainless_speakers(&self) -> usize {
+        // evaluation uses the whole speaker population (test-set analog)
+        64
+    }
+
+    /// Parameter-store bytes for one client under the current policy —
+    /// the Tables' "Parameter Memory / Communication" column. Uses the
+    /// *expected* PPQ mask (fraction of eligible variables).
+    pub fn client_param_bytes(&self) -> usize {
+        let policy = self.policy();
+        let fmt = self.cfg.omc.format;
+        let specs = &self.model.manifest.variables;
+        let mut total = 0usize;
+        for spec in specs {
+            let quantized_frac = if policy.eligible(spec) && !fmt.is_fp32() {
+                policy.fraction
+            } else {
+                0.0
+            };
+            let q_bytes = fmt.packed_bytes(spec.size) + 8;
+            let raw_bytes = spec.size * 4;
+            total += (quantized_frac * q_bytes as f64
+                + (1.0 - quantized_frac) * raw_bytes as f64)
+                .round() as usize;
+        }
+        total
+    }
+
+    /// Force-compile the executables this experiment will use, so compile
+    /// time never pollutes per-round timings (the Tables' Speed column).
+    pub fn warmup(&self) -> Result<()> {
+        let t = Timer::start();
+        self.model.warmup(self.cfg.omc.is_baseline(), self.cfg.omc.use_pvt)?;
+        crate::log_info!("warmup (XLA compile) took {:.1}s", t.elapsed_s());
+        Ok(())
+    }
+
+    /// Run exactly one federated round with no evaluation or recording —
+    /// the unit the round-latency bench times.
+    pub fn run_one_round_for_bench(&mut self) -> Result<(f64, usize)> {
+        let policy = self.policy();
+        let train = self.train_config();
+        let ctx = RoundContext {
+            model: &self.model,
+            domain: &self.domain,
+            assignment: &self.assignment,
+            sampler: &self.sampler,
+            policy,
+            train,
+            seed: self.cfg.seed,
+            workers: self.cfg.workers,
+        };
+        let outcome = run_round(&ctx, &mut self.server)?;
+        Ok((outcome.mean_loss, outcome.down_bytes + outcome.up_bytes))
+    }
+
+    /// Run the full experiment; returns the recorder with per-round logs.
+    pub fn run(&mut self) -> Result<(Recorder, RunSummary)> {
+        self.warmup()?;
+        let mut rec = Recorder::new(&self.cfg.name);
+        let policy = self.policy();
+        let train = self.train_config();
+        crate::log_info!(
+            "experiment '{}': {} rounds, {}/{} clients/round, format {}, pvt={}, weights_only={}, fraction={}",
+            self.cfg.name,
+            self.cfg.rounds,
+            self.cfg.clients_per_round,
+            self.cfg.num_clients,
+            self.cfg.omc.format,
+            self.cfg.omc.use_pvt,
+            self.cfg.omc.weights_only,
+            self.cfg.omc.fraction
+        );
+        for r in 0..self.cfg.rounds {
+            let t = Timer::start();
+            let ctx = RoundContext {
+                model: &self.model,
+                domain: &self.domain,
+                assignment: &self.assignment,
+                sampler: &self.sampler,
+                policy,
+                train,
+                seed: self.cfg.seed,
+                workers: self.cfg.workers,
+            };
+            let outcome = run_round(&ctx, &mut self.server)?;
+            let round_seconds = t.elapsed_s();
+            let (wer, eval_loss) = if (r + 1) % self.cfg.eval_every == 0
+                || r + 1 == self.cfg.rounds
+            {
+                self.evaluate()?
+            } else {
+                (-1.0, 0.0)
+            };
+            if wer >= 0.0 {
+                crate::log_info!(
+                    "round {:>4}: loss {:.4} | WER {:.2}% | {:.0} ms",
+                    r,
+                    outcome.mean_loss,
+                    wer,
+                    round_seconds * 1e3
+                );
+            } else {
+                crate::log_debug!(
+                    "round {:>4}: loss {:.4} | {:.0} ms",
+                    r,
+                    outcome.mean_loss,
+                    round_seconds * 1e3
+                );
+            }
+            rec.push(RoundRecord {
+                round: r,
+                train_loss: outcome.mean_loss,
+                eval_loss,
+                eval_wer: wer,
+                down_bytes: outcome.down_bytes,
+                up_bytes: outcome.up_bytes,
+                round_seconds,
+            });
+        }
+        if let Some(path) = &self.cfg.save_to {
+            params_io::save(path, &self.server.params)?;
+            crate::log_info!("saved checkpoint to {}", path.display());
+        }
+        let param_bytes = self.client_param_bytes();
+        let fp32_bytes = self.model.manifest.total_params * 4;
+        let summary = RunSummary {
+            label: self.cfg.name.clone(),
+            final_wer: rec.final_wer(3),
+            final_loss: rec.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+            param_memory_bytes: param_bytes,
+            memory_ratio: param_bytes as f64 / fp32_bytes as f64,
+            comm_bytes_per_round: rec.total_comm_bytes() as f64
+                / rec.records.len().max(1) as f64,
+            rounds_per_min: rec.rounds_per_min(),
+            rounds: rec.records.len(),
+        };
+        Ok((rec, summary))
+    }
+}
+
+/// Print table rows in the paper's layout (used by the examples).
+pub fn print_table(title: &str, rows: &[RunSummary]) {
+    println!("\n## {title}\n");
+    println!(
+        "| {:<28} | {:>8} | {:>22} | {:>18} |",
+        "", "WER", "Param Memory / Comm", "Speed (Rounds/Min)"
+    );
+    println!(
+        "|{}|{}|{}|{}|",
+        "-".repeat(30),
+        "-".repeat(10),
+        "-".repeat(24),
+        "-".repeat(20)
+    );
+    let base_speed = rows
+        .first()
+        .map(|r| r.rounds_per_min)
+        .unwrap_or(1.0)
+        .max(1e-12);
+    for r in rows {
+        println!(
+            "| {:<28} | {:>7.2}% | {:>9} ({:>4.0}%)       | {:>8.1} ({:>4.0}%)   |",
+            r.label,
+            r.final_wer,
+            human_bytes(r.param_memory_bytes),
+            100.0 * r.memory_ratio,
+            r.rounds_per_min,
+            100.0 * r.rounds_per_min / base_speed,
+        );
+    }
+    println!();
+}
+
+pub fn human_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1}MB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}KB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}

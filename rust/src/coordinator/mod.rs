@@ -1,0 +1,10 @@
+//! The experiment coordinator — ties config, runtime, data and FL together
+//! and drives whole federated runs (the L3 entry point).
+
+pub mod config;
+pub mod experiment;
+pub mod params_io;
+pub mod presets;
+
+pub use config::ExperimentConfig;
+pub use experiment::Experiment;

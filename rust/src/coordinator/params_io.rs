@@ -1,0 +1,103 @@
+//! Checkpoint I/O: save/load the full-precision global model.
+//!
+//! Used by the domain-adaptation experiments (Table 2 / Table 4 / Fig. 4):
+//! pretrain on domain A, checkpoint, then finetune with OMC on domain B.
+//!
+//! Format: `OMCP` magic, u32 version, u32 nvars, then per variable
+//! u32 length + raw little-endian f32 payload.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+const MAGIC: &[u8; 4] = b"OMCP";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, params: &[Vec<f32>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for v in params {
+        f.write_all(&(v.len() as u32).to_le_bytes())?;
+        let mut buf = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<Vec<f32>>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    ensure!(bytes.len() >= 12, "checkpoint too short");
+    ensure!(&bytes[..4] == MAGIC, "bad checkpoint magic");
+    let ver = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(ver == VERSION, "unsupported checkpoint version {ver}");
+    let nvars = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut i = 12usize;
+    let mut out = Vec::with_capacity(nvars);
+    for vi in 0..nvars {
+        ensure!(i + 4 <= bytes.len(), "truncated at var {vi}");
+        let n = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        ensure!(i + 4 * n <= bytes.len(), "truncated payload at var {vi}");
+        let mut v = Vec::with_capacity(n);
+        for c in bytes[i..i + 4 * n].chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        i += 4 * n;
+        out.push(v);
+    }
+    ensure!(i == bytes.len(), "trailing bytes in checkpoint");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("omc_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut g = Gen::new(1);
+        let params = vec![g.vec_normal(100, 0.3), vec![], g.vec_normal(7, 2.0)];
+        let p = tmp("rt.bin");
+        save(&p, &params).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(params.len(), back.len());
+        for (a, b) in params.iter().zip(&back) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = tmp("bad.bin");
+        save(&p, &[vec![1.0, 2.0]]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::write(&p, &bytes[..5]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

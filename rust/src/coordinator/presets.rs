@@ -1,0 +1,162 @@
+//! Shared scaffolding for the table/figure reproduction drivers in
+//! `examples/` (DESIGN.md §5): standard experiment shapes, format ladders,
+//! and output conventions.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::config::{ExperimentConfig, OmcConfig};
+use crate::coordinator::experiment::{Experiment, RunSummary};
+use crate::data::partition::Partition;
+use crate::metrics::recorder::Recorder;
+use crate::runtime::engine::{Engine, LoadedModel};
+
+/// The paper's experimental scale, shrunk to this testbed. All examples use
+/// these numbers unless a flag overrides them (paper: 128 clients, 1 local
+/// step, batch 16; here: 32 clients, 8/round — the batch size is baked into
+/// the artifact).
+pub struct Scale {
+    pub rounds: usize,
+    pub num_clients: usize,
+    pub clients_per_round: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn from_flags(rounds: usize, seed: u64) -> Self {
+        Self {
+            rounds,
+            num_clients: 32,
+            clients_per_round: 8,
+            lr: 0.1,
+            seed,
+        }
+    }
+}
+
+/// Build the standard experiment config used by the table drivers.
+pub fn experiment(
+    label: &str,
+    model_dir: &str,
+    scale: &Scale,
+    partition: Partition,
+    domain: u64,
+    omc: OmcConfig,
+    out_dir: &str,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_with(label, &PathBuf::from(model_dir));
+    cfg.rounds = scale.rounds;
+    cfg.num_clients = scale.num_clients;
+    cfg.clients_per_round = scale.clients_per_round;
+    cfg.lr = scale.lr;
+    cfg.seed = scale.seed;
+    cfg.partition = partition;
+    cfg.domain = domain;
+    cfg.eval_every = (scale.rounds / 10).clamp(1, 20);
+    cfg.eval_batches = 8;
+    cfg.output_dir = PathBuf::from(out_dir);
+    cfg.omc = omc;
+    cfg
+}
+
+/// Run one experiment variant against a shared compiled model, write its
+/// per-round log, and return the summary row.
+pub fn run_variant(
+    model: &Arc<LoadedModel>,
+    cfg: ExperimentConfig,
+) -> Result<(Recorder, RunSummary)> {
+    let out_dir = cfg.output_dir.clone();
+    let mut exp = Experiment::prepare_with_model(cfg, Arc::clone(model))?;
+    let (rec, summary) = exp.run()?;
+    rec.write(&out_dir)?;
+    Ok((rec, summary))
+}
+
+/// Bind a model directory once for a whole example (shared compile cache).
+pub fn bind_model(engine: &Engine, model_dir: &str) -> Result<Arc<LoadedModel>> {
+    Ok(Arc::new(engine.load_model(std::path::Path::new(model_dir))?))
+}
+
+/// The ablation ladder of Table 4, in presentation order.
+pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
+    let fmt = format.parse()?;
+    Ok(vec![
+        ("FP32 baseline".into(), OmcConfig::fp32_baseline()),
+        (
+            format!("quant only ({format})"),
+            OmcConfig {
+                format: fmt,
+                use_pvt: false,
+                weights_only: false,
+                fraction: 1.0,
+            },
+        ),
+        (
+            "+ per-variable transform".into(),
+            OmcConfig {
+                format: fmt,
+                use_pvt: true,
+                weights_only: false,
+                fraction: 1.0,
+            },
+        ),
+        (
+            "+ weights only".into(),
+            OmcConfig {
+                format: fmt,
+                use_pvt: true,
+                weights_only: true,
+                fraction: 1.0,
+            },
+        ),
+        (
+            "+ 90% weights (full OMC)".into(),
+            OmcConfig {
+                format: fmt,
+                use_pvt: true,
+                weights_only: true,
+                fraction: 0.9,
+            },
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_matches_table4_rows() {
+        let rows = table4_ladder("S1E3M7").unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!(rows[0].1.is_baseline());
+        // row 2: quantization only — no pvt, all params
+        assert!(!rows[1].1.use_pvt && !rows[1].1.weights_only);
+        assert_eq!(rows[1].1.fraction, 1.0);
+        // each later row turns exactly one knob
+        assert!(rows[2].1.use_pvt && !rows[2].1.weights_only);
+        assert!(rows[3].1.use_pvt && rows[3].1.weights_only);
+        assert_eq!(rows[4].1.fraction, 0.9);
+    }
+
+    #[test]
+    fn experiment_builder_fields() {
+        let s = Scale::from_flags(100, 7);
+        let cfg = experiment(
+            "x",
+            "artifacts/small",
+            &s,
+            Partition::Iid,
+            3,
+            OmcConfig::fp32_baseline(),
+            "results/x",
+        );
+        assert_eq!(cfg.rounds, 100);
+        assert_eq!(cfg.domain, 3);
+        assert_eq!(cfg.eval_every, 10);
+        cfg.validate().unwrap();
+    }
+}

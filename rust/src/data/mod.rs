@@ -1,0 +1,8 @@
+//! Data substrate: synthetic ASR-like workload + federated partitioning.
+//!
+//! Substitutes LibriSpeech / the Multi-Domain corpus (unavailable offline)
+//! with a task that exercises identical code paths — see DESIGN.md §2 for
+//! the substitution argument.
+
+pub mod partition;
+pub mod synth;

@@ -1,0 +1,145 @@
+//! Federated client partitioning (Sec. 3.1).
+//!
+//! * **IID** — every client samples utterances from every speaker (the
+//!   paper's random partition of LibriSpeech).
+//! * **By-speaker (non-IID)** — each client owns a disjoint speaker subset
+//!   (the paper's partition-by-speaker), so client data distributions
+//!   differ through the speaker channel vectors.
+
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    BySpeaker,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "iid" => Ok(Partition::Iid),
+            "by_speaker" | "non_iid" => Ok(Partition::BySpeaker),
+            other => anyhow::bail!("unknown partition {other:?} (iid | by_speaker)"),
+        }
+    }
+}
+
+/// The speaker sets assigned to each client.
+#[derive(Clone, Debug)]
+pub struct ClientAssignment {
+    pub speakers_per_client: Vec<Vec<usize>>,
+}
+
+impl ClientAssignment {
+    pub fn build(
+        partition: Partition,
+        num_clients: usize,
+        num_speakers: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(num_clients > 0 && num_speakers > 0);
+        let speakers_per_client = match partition {
+            Partition::Iid => {
+                // every client sees every speaker
+                (0..num_clients)
+                    .map(|_| (0..num_speakers).collect())
+                    .collect()
+            }
+            Partition::BySpeaker => {
+                // disjoint speaker shards, sizes differing by at most 1
+                let mut ids: Vec<usize> = (0..num_speakers).collect();
+                let mut rng =
+                    Xoshiro256pp::new(hash_seed(&[seed, 0x5411_AD]));
+                rng.shuffle(&mut ids);
+                let mut shards: Vec<Vec<usize>> =
+                    (0..num_clients).map(|_| Vec::new()).collect();
+                for (i, spk) in ids.into_iter().enumerate() {
+                    shards[i % num_clients].push(spk);
+                }
+                // a client must own at least one speaker: when there are
+                // fewer speakers than clients, wrap around (the overlap is
+                // unavoidable and still far from IID)
+                for c in 0..num_clients {
+                    if shards[c].is_empty() {
+                        shards[c].push(c % num_speakers);
+                    }
+                }
+                shards
+            }
+        };
+        Self {
+            speakers_per_client,
+        }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.speakers_per_client.len()
+    }
+
+    pub fn speakers(&self, client: usize) -> &[usize] {
+        &self.speakers_per_client[client]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_gives_everyone_everything() {
+        let a = ClientAssignment::build(Partition::Iid, 8, 32, 1);
+        for c in 0..8 {
+            assert_eq!(a.speakers(c).len(), 32);
+        }
+    }
+
+    #[test]
+    fn by_speaker_is_disjoint_and_complete() {
+        let a = ClientAssignment::build(Partition::BySpeaker, 8, 32, 1);
+        let mut seen = vec![0usize; 32];
+        for c in 0..8 {
+            assert_eq!(a.speakers(c).len(), 4);
+            for &s in a.speakers(c) {
+                seen[s] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn by_speaker_uneven_split() {
+        let a = ClientAssignment::build(Partition::BySpeaker, 3, 10, 2);
+        let sizes: Vec<usize> =
+            (0..3).map(|c| a.speakers(c).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn more_clients_than_speakers_still_nonempty() {
+        let a = ClientAssignment::build(Partition::BySpeaker, 10, 4, 3);
+        for c in 0..10 {
+            assert!(!a.speakers(c).is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ClientAssignment::build(Partition::BySpeaker, 8, 32, 42);
+        let b = ClientAssignment::build(Partition::BySpeaker, 8, 32, 42);
+        let c = ClientAssignment::build(Partition::BySpeaker, 8, 32, 43);
+        assert_eq!(a.speakers_per_client, b.speakers_per_client);
+        assert_ne!(a.speakers_per_client, c.speakers_per_client);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Partition::parse("iid").unwrap(), Partition::Iid);
+        assert_eq!(
+            Partition::parse("by_speaker").unwrap(),
+            Partition::BySpeaker
+        );
+        assert_eq!(Partition::parse("non_iid").unwrap(), Partition::BySpeaker);
+        assert!(Partition::parse("other").is_err());
+    }
+}

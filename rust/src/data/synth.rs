@@ -1,0 +1,284 @@
+//! Synthetic ASR-like task (the LibriSpeech / Multi-Domain stand-in).
+//!
+//! Generative model per utterance:
+//!
+//! 1. a token sequence `y[t]` is drawn from a domain-conditioned Markov-ish
+//!    process (tokens cluster into "words" of a few frames — giving the
+//!    edit-distance WER something word-like to measure);
+//! 2. features are emitted as `x[t] = E_dom[y[t]] + c_speaker + σ·noise`,
+//!    where `E_dom` is the domain's fixed random "acoustic" embedding,
+//!    `c_speaker` a per-speaker channel vector (the non-IID axis), and σ the
+//!    acoustic noise level.
+//!
+//! A model must invert the noisy emission to transcribe — so WER falls with
+//! training, degrades with quantization error, and shifts across domains,
+//! which is all the paper's evaluation needs from the data (DESIGN.md §2).
+
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Static description of the task; shared by train and eval generators.
+#[derive(Clone, Debug)]
+pub struct TaskConfig {
+    pub vocab: usize,
+    pub feature_dim: usize,
+    pub seq_len: usize,
+    /// frames per "word" (tokens repeat within a word slot)
+    pub word_len: usize,
+    /// acoustic noise σ
+    pub noise: f32,
+    /// per-speaker channel strength
+    pub speaker_shift: f32,
+    pub num_speakers: usize,
+    pub seed: u64,
+}
+
+impl TaskConfig {
+    pub fn from_model(vocab: usize, feature_dim: usize, seq_len: usize, seed: u64) -> Self {
+        Self {
+            vocab,
+            feature_dim,
+            seq_len,
+            word_len: 4,
+            noise: 0.3,
+            speaker_shift: 0.5,
+            num_speakers: 64,
+            seed,
+        }
+    }
+}
+
+/// One emission domain (Sec. 3.1's MF / non-MF analog): its own embedding
+/// table, token prior and noise profile.
+pub struct Domain {
+    pub id: u64,
+    embed: Vec<f32>,   // [vocab, feature_dim]
+    prior: Vec<f64>,   // token distribution (non-uniform, domain-specific)
+    speakers: Vec<Vec<f32>>,
+    cfg: TaskConfig,
+}
+
+impl Domain {
+    pub fn new(cfg: &TaskConfig, domain_id: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(hash_seed(&[cfg.seed, 0xD0_4A15, domain_id]));
+        let mut embed = vec![0.0f32; cfg.vocab * cfg.feature_dim];
+        rng.fill_normal(&mut embed, 1.0);
+        // Zipf-ish token prior, permuted per domain so domains differ in
+        // which tokens dominate (the "domain shift")
+        let mut order: Vec<usize> = (0..cfg.vocab).collect();
+        rng.shuffle(&mut order);
+        let mut prior = vec![0.0f64; cfg.vocab];
+        for (rank, &tok) in order.iter().enumerate() {
+            prior[tok] = 1.0 / (rank as f64 + 2.0);
+        }
+        let total: f64 = prior.iter().sum();
+        for p in prior.iter_mut() {
+            *p /= total;
+        }
+        let speakers = (0..cfg.num_speakers)
+            .map(|s| {
+                let mut rs = rng.derive(&[0x5bea_0000, s as u64]);
+                let mut c = vec![0.0f32; cfg.feature_dim];
+                rs.fill_normal(&mut c, cfg.speaker_shift);
+                c
+            })
+            .collect();
+        Self {
+            id: domain_id,
+            embed,
+            prior,
+            speakers,
+            cfg: cfg.clone(),
+        }
+    }
+
+    fn cfg(&self) -> &TaskConfig {
+        &self.cfg
+    }
+
+    /// Generate one utterance for `speaker`; returns (features, tokens).
+    pub fn utterance(
+        &self,
+        speaker: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let cfg = self.cfg();
+        let t = cfg.seq_len;
+        let f = cfg.feature_dim;
+        let mut tokens = Vec::with_capacity(t);
+        // word-structured token sequence: each word slot repeats one token
+        while tokens.len() < t {
+            let tok = rng.choice_weighted(&self.prior) as i32;
+            for _ in 0..cfg.word_len {
+                if tokens.len() < t {
+                    tokens.push(tok);
+                }
+            }
+        }
+        let chan = &self.speakers[speaker % self.speakers.len()];
+        let mut x = vec![0.0f32; t * f];
+        for (ti, &tok) in tokens.iter().enumerate() {
+            let e = &self.embed[tok as usize * f..(tok as usize + 1) * f];
+            for fi in 0..f {
+                x[ti * f + fi] = e[fi]
+                    + chan[fi]
+                    + (rng.next_normal() as f32) * cfg.noise;
+            }
+        }
+        (x, tokens)
+    }
+
+    /// Generate a batch `[bs, T, F]` + labels `[bs, T]` for one client's
+    /// speaker set (flat row-major, matching the HLO operand layout).
+    pub fn batch(
+        &self,
+        speakers: &[usize],
+        bs: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Batch {
+        let cfg = self.cfg();
+        let mut x = Vec::with_capacity(bs * cfg.seq_len * cfg.feature_dim);
+        let mut y = Vec::with_capacity(bs * cfg.seq_len);
+        for _ in 0..bs {
+            let spk = speakers[rng.next_below(speakers.len() as u64) as usize];
+            let (xu, yu) = self.utterance(spk, rng);
+            x.extend_from_slice(&xu);
+            y.extend_from_slice(&yu);
+        }
+        Batch {
+            x,
+            y,
+            batch: bs,
+            seq_len: cfg.seq_len,
+            feature_dim: cfg.feature_dim,
+            word_len: cfg.word_len,
+        }
+    }
+}
+
+/// A generated batch in HLO operand layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub feature_dim: usize,
+    pub word_len: usize,
+}
+
+impl Batch {
+    /// Reference word sequences (tokens collapsed per word slot) for WER.
+    pub fn reference_words(&self) -> Vec<Vec<i32>> {
+        (0..self.batch)
+            .map(|b| collapse_words(&self.y[b * self.seq_len..(b + 1) * self.seq_len], self.word_len))
+            .collect()
+    }
+}
+
+/// Collapse a framewise token sequence into word-level symbols by majority
+/// vote within each word slot (used for both references and hypotheses).
+pub fn collapse_words(frames: &[i32], word_len: usize) -> Vec<i32> {
+    frames
+        .chunks(word_len)
+        .map(|chunk| {
+            // majority vote; ties resolved toward the smallest token id
+            let mut counts = std::collections::BTreeMap::new();
+            for &t in chunk {
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            counts
+                .into_iter()
+                .max_by_key(|&(tok, c)| (c, std::cmp::Reverse(tok)))
+                .map(|(tok, _)| tok)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TaskConfig {
+        TaskConfig::from_model(32, 16, 16, 7)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d1 = Domain::new(&cfg(), 0);
+        let d2 = Domain::new(&cfg(), 0);
+        let mut r1 = Xoshiro256pp::new(1);
+        let mut r2 = Xoshiro256pp::new(1);
+        let (x1, y1) = d1.utterance(3, &mut r1);
+        let (x2, y2) = d2.utterance(3, &mut r2);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn domains_differ() {
+        let a = Domain::new(&cfg(), 0);
+        let b = Domain::new(&cfg(), 1);
+        assert_ne!(a.embed, b.embed);
+        assert_ne!(a.prior, b.prior);
+    }
+
+    #[test]
+    fn utterance_shapes_and_ranges() {
+        let d = Domain::new(&cfg(), 0);
+        let mut r = Xoshiro256pp::new(2);
+        let (x, y) = d.utterance(0, &mut r);
+        assert_eq!(x.len(), 16 * 16);
+        assert_eq!(y.len(), 16);
+        assert!(y.iter().all(|&t| (0..32).contains(&t)));
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn word_structure_present() {
+        let d = Domain::new(&cfg(), 0);
+        let mut r = Xoshiro256pp::new(3);
+        let (_, y) = d.utterance(0, &mut r);
+        // with word_len 4 the first 4 frames share a token
+        assert!(y[0] == y[1] && y[1] == y[2] && y[2] == y[3]);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let d = Domain::new(&cfg(), 0);
+        let mut r = Xoshiro256pp::new(4);
+        let b = d.batch(&[0, 1, 2], 5, &mut r);
+        assert_eq!(b.x.len(), 5 * 16 * 16);
+        assert_eq!(b.y.len(), 5 * 16);
+        assert_eq!(b.reference_words().len(), 5);
+        assert_eq!(b.reference_words()[0].len(), 4); // 16 frames / 4
+    }
+
+    #[test]
+    fn speakers_shift_features() {
+        let d = Domain::new(&cfg(), 0);
+        // same rng stream, different speakers -> different features
+        let mut r1 = Xoshiro256pp::new(5);
+        let mut r2 = Xoshiro256pp::new(5);
+        let (x1, y1) = d.utterance(0, &mut r1);
+        let (x2, y2) = d.utterance(1, &mut r2);
+        assert_eq!(y1, y2); // token draw independent of speaker
+        assert_ne!(x1, x2);
+    }
+
+    #[test]
+    fn collapse_words_majority() {
+        assert_eq!(collapse_words(&[1, 1, 2, 1, 3, 3, 3, 3], 4), vec![1, 3]);
+        assert_eq!(collapse_words(&[5, 5, 5], 4), vec![5]); // ragged tail
+    }
+
+    #[test]
+    fn prior_is_normalized_and_nonuniform() {
+        let d = Domain::new(&cfg(), 0);
+        let total: f64 = d.prior.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        let max = d.prior.iter().cloned().fold(0.0, f64::max);
+        let min = d.prior.iter().cloned().fold(1.0, f64::min);
+        assert!(max / min > 3.0, "prior should be skewed");
+    }
+}

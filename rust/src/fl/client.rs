@@ -1,0 +1,254 @@
+//! One simulated client's round of work (paper Sec. 2.1, Fig. 1).
+//!
+//! The client *only ever holds the compressed model* plus transient
+//! decompressed copies: it receives the downlink wire bytes, decodes them to
+//! the quantized values Ṽ and PVT scalars, feeds those straight into the
+//! lowered OMC training graph (which decompresses on the fly, updates, and
+//! re-compresses), and re-packs the returned Ṽ' for the uplink. The FP32
+//! baseline path stores and ships raw f32.
+
+use anyhow::{Context, Result};
+
+use crate::data::synth::Domain;
+use crate::omc::codec;
+use crate::omc::format::FloatFormat;
+use crate::omc::store::{CompressedModel, StoredVar};
+use crate::omc::transform::Pvt;
+use crate::runtime::engine::LoadedModel;
+use crate::util::rng::Xoshiro256pp;
+
+/// Static client-side hyper-parameters for a round.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientTrainConfig {
+    pub lr: f32,
+    pub local_steps: usize,
+    pub format: FloatFormat,
+    pub use_pvt: bool,
+    /// FP32 baseline path (no OMC artifacts involved)
+    pub fp32_baseline: bool,
+}
+
+/// What the client sends back.
+pub struct ClientResult {
+    /// uplink wire payload (compressed model)
+    pub upload: Vec<u8>,
+    /// mean training loss over local steps
+    pub loss: f64,
+    /// peak parameter-store bytes observed on the client (Sec. 3.4)
+    pub peak_param_bytes: usize,
+}
+
+/// Run one client round.
+///
+/// `download` is the server's wire payload for this client; `mask` is the
+/// PPQ selection the server drew for it (needed by the graph to know which
+/// variables to re-quantize).
+#[allow(clippy::too_many_arguments)]
+pub fn run_client_round(
+    model: &LoadedModel,
+    domain: &Domain,
+    speakers: &[usize],
+    download: &[u8],
+    mask: &[f32],
+    cfg: ClientTrainConfig,
+    rng: &mut Xoshiro256pp,
+) -> Result<ClientResult> {
+    let mc = &model.manifest.config;
+    let received = codec::decode(download).context("decoding downlink payload")?;
+    anyhow::ensure!(
+        received.num_vars() == model.num_vars(),
+        "downlink has {} vars, model expects {}",
+        received.num_vars(),
+        model.num_vars()
+    );
+    // the client's resident state: compressed payload only
+    let mut peak_param_bytes = received.memory_bytes();
+
+    if cfg.fp32_baseline {
+        // baseline: raw parameters, plain SGD steps
+        let mut params = received.decompress_all();
+        drop(received);
+        let mut loss_sum = 0.0f64;
+        for _ in 0..cfg.local_steps {
+            let batch = domain.batch(speakers, mc.batch, rng);
+            let out = model.run_train_fp32(&params, &batch.x, &batch.y, cfg.lr)?;
+            params = out.params;
+            loss_sum += out.loss as f64;
+        }
+        let up = CompressedModel::new(
+            params.into_iter().map(StoredVar::raw).collect(),
+        );
+        peak_param_bytes = peak_param_bytes.max(up.memory_bytes());
+        return Ok(ClientResult {
+            upload: codec::encode(&up),
+            loss: loss_sum / cfg.local_steps.max(1) as f64,
+            peak_param_bytes,
+        });
+    }
+
+    // OMC path: the graph consumes (Ṽ, s, b, mask) and returns the same
+    // triple re-quantized. Transient decoded copies live only inside this
+    // loop, mirroring Fig. 1's dashed-border variables.
+    let mut tildes: Vec<Vec<f32>> =
+        received.vars.iter().map(|v| v.decode_tilde()).collect();
+    let mut s: Vec<f32> = received.vars.iter().map(|v| v.pvt().s).collect();
+    let mut b: Vec<f32> = received.vars.iter().map(|v| v.pvt().b).collect();
+    drop(received);
+
+    let mut loss_sum = 0.0f64;
+    for _ in 0..cfg.local_steps {
+        let batch = domain.batch(speakers, mc.batch, rng);
+        let out = model.run_train_omc(
+            cfg.use_pvt,
+            &tildes,
+            &s,
+            &b,
+            mask,
+            &batch.x,
+            &batch.y,
+            cfg.lr,
+            cfg.format.exp_bits,
+            cfg.format.mant_bits,
+        )?;
+        tildes = out.tildes;
+        s = out.s;
+        b = out.b;
+        loss_sum += out.loss as f64;
+    }
+
+    // re-pack for the uplink: quantized vars bit-packed, the rest raw
+    let mut vars = Vec::with_capacity(tildes.len());
+    for (i, t) in tildes.into_iter().enumerate() {
+        if mask[i] > 0.5 {
+            let pvt = Pvt { s: s[i], b: b[i] };
+            let sv = StoredVar::from_quantized(&t, cfg.format, pvt)
+                .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
+            vars.push(sv);
+        } else {
+            vars.push(StoredVar::raw(t));
+        }
+    }
+    let up = CompressedModel::new(vars);
+    peak_param_bytes = peak_param_bytes.max(up.memory_bytes());
+    Ok(ClientResult {
+        upload: codec::encode(&up),
+        loss: loss_sum / cfg.local_steps.max(1) as f64,
+        peak_param_bytes,
+    })
+}
+
+/// Build the downlink payload for one client: compress the server's global
+/// model according to the client's PPQ mask.
+pub fn make_downlink(
+    global: &[Vec<f32>],
+    mask: &[f32],
+    format: FloatFormat,
+    use_pvt: bool,
+) -> Vec<u8> {
+    let vars: Vec<StoredVar> = global
+        .iter()
+        .zip(mask)
+        .map(|(v, &m)| {
+            if m > 0.5 && !format.is_fp32() {
+                StoredVar::compress(v, format, use_pvt)
+            } else {
+                StoredVar::raw(v.clone())
+            }
+        })
+        .collect();
+    codec::encode(&CompressedModel::new(vars))
+}
+
+/// Per-round downlink compression cache (§Perf).
+///
+/// The quantize + PVT-fit + bit-pack of a given variable is identical for
+/// every client whose mask selects it, so the server compresses each
+/// variable ONCE per round and per-client payloads are assembled from
+/// borrowed parts (framing + memcpy only). With 8 clients/round this cuts
+/// the downlink build cost ~8x.
+pub struct DownlinkCache {
+    /// compressed version of each variable (None when format is FP32)
+    packed: Vec<Option<StoredVar>>,
+}
+
+impl DownlinkCache {
+    pub fn build(
+        global: &[Vec<f32>],
+        format: FloatFormat,
+        use_pvt: bool,
+        any_selected: impl Fn(usize) -> bool,
+    ) -> Self {
+        let packed = global
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                if format.is_fp32() || !any_selected(i) {
+                    None
+                } else {
+                    Some(StoredVar::compress(v, format, use_pvt))
+                }
+            })
+            .collect();
+        Self { packed }
+    }
+
+    /// Assemble one client's payload from the cache.
+    pub fn assemble(&self, global: &[Vec<f32>], mask: &[f32]) -> Vec<u8> {
+        let cap: usize = global
+            .iter()
+            .zip(mask.iter())
+            .enumerate()
+            .map(|(i, (v, &m))| {
+                if m > 0.5 {
+                    self.packed[i]
+                        .as_ref()
+                        .map(|p| p.memory_bytes())
+                        .unwrap_or(v.len() * 4)
+                } else {
+                    v.len() * 4
+                }
+            })
+            .sum();
+        let mut w = codec::WireWriter::with_capacity(cap + 16 * global.len());
+        for (i, v) in global.iter().enumerate() {
+            match (&self.packed[i], mask[i] > 0.5) {
+                (Some(p), true) => w.var(p),
+                _ => w.raw(v),
+            }
+        }
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    #[test]
+    fn downlink_respects_mask_and_format() {
+        let mut g = Gen::new(1);
+        let global = vec![g.vec_normal(100, 0.1), g.vec_normal(50, 0.1)];
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let wire = make_downlink(&global, &[1.0, 0.0], fmt, true);
+        let m = codec::decode(&wire).unwrap();
+        assert!(m.vars[0].is_packed());
+        assert!(!m.vars[1].is_packed());
+        // fp32 format always ships raw
+        let wire = make_downlink(&global, &[1.0, 1.0], FloatFormat::FP32, true);
+        let m = codec::decode(&wire).unwrap();
+        assert!(m.vars.iter().all(|v| !v.is_packed()));
+    }
+
+    #[test]
+    fn downlink_size_scales_with_fraction() {
+        let mut g = Gen::new(2);
+        let global: Vec<Vec<f32>> =
+            (0..10).map(|_| g.vec_normal(10_000, 0.1)).collect();
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let all = make_downlink(&global, &[1.0; 10], fmt, true).len();
+        let none = make_downlink(&global, &[0.0; 10], fmt, true).len();
+        let ratio = all as f64 / none as f64;
+        assert!((ratio - 11.0 / 32.0).abs() < 0.02, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Federated-learning substrate: server state + aggregation, simulated
+//! clients, client sampling, and round orchestration.
+
+pub mod client;
+pub mod round;
+pub mod sampler;
+pub mod server;

@@ -1,0 +1,114 @@
+//! Round orchestration: sample clients, build per-client downlinks, run the
+//! client work on the thread pool, aggregate the uplinks.
+
+use anyhow::{Context, Result};
+
+use crate::data::partition::ClientAssignment;
+use crate::data::synth::Domain;
+use crate::fl::client::{self, ClientTrainConfig};
+use crate::fl::sampler::Sampler;
+use crate::fl::server::Server;
+use crate::omc::codec;
+use crate::omc::selection::SelectionPolicy;
+use crate::runtime::engine::LoadedModel;
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+use crate::util::threadpool;
+
+/// Everything a round needs, borrowed from the experiment.
+pub struct RoundContext<'a> {
+    pub model: &'a LoadedModel,
+    pub domain: &'a Domain,
+    pub assignment: &'a ClientAssignment,
+    pub sampler: &'a Sampler,
+    pub policy: SelectionPolicy,
+    pub train: ClientTrainConfig,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+/// Aggregate numbers for one completed round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub mean_loss: f64,
+    pub down_bytes: usize,
+    pub up_bytes: usize,
+    pub peak_client_param_bytes: usize,
+    pub participants: Vec<usize>,
+}
+
+/// Run one federated round, updating `server` in place.
+pub fn run_round(ctx: &RoundContext<'_>, server: &mut Server) -> Result<RoundOutcome> {
+    let round = server.round as u64;
+    let participants = ctx.sampler.sample(round);
+    let specs = &ctx.model.manifest.variables;
+
+    // per-client PPQ masks + downlink payloads. Each variable is
+    // compressed ONCE per round (DownlinkCache, §Perf) and the per-client
+    // payloads are assembled on the thread pool; PJRT execution below is
+    // pinned to this thread (`PjRtLoadedExecutable` is !Send).
+    let masks: Vec<Vec<f32>> = participants
+        .iter()
+        .map(|&c| ctx.policy.draw_mask(specs, ctx.seed, round, c as u64))
+        .collect();
+    // copy plain values out of ctx: the closures must not capture the
+    // !Sync LoadedModel reference
+    let (fmt, use_pvt, workers) = (ctx.train.format, ctx.train.use_pvt, ctx.workers);
+    let global = &server.params;
+    let cache = client::DownlinkCache::build(global, fmt, use_pvt, |i| {
+        masks.iter().any(|m| m[i] > 0.5)
+    });
+    let cache_ref = &cache;
+    let downlinks: Vec<Vec<u8>> =
+        threadpool::scope_map(&masks, workers, move |_, mask| {
+            cache_ref.assemble(global, mask)
+        })?;
+    let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
+
+    // client training (sequential over the shared PJRT device queue)
+    let mut uploads = Vec::with_capacity(participants.len());
+    let mut loss_sum = 0.0;
+    let mut peak = 0usize;
+    for (i, &cid) in participants.iter().enumerate() {
+        let mut rng = Xoshiro256pp::new(hash_seed(&[
+            ctx.seed, 0xC11E27, round, cid as u64,
+        ]));
+        let r = client::run_client_round(
+            ctx.model,
+            ctx.domain,
+            ctx.assignment.speakers(cid),
+            &downlinks[i],
+            &masks[i],
+            ctx.train,
+            &mut rng,
+        )
+        .with_context(|| format!("client {cid} round {round}"))?;
+        loss_sum += r.loss;
+        peak = peak.max(r.peak_param_bytes);
+        uploads.push(r.upload);
+    }
+    let up_bytes: usize = uploads.iter().map(|u| u.len()).sum();
+
+    // server: decode + decompress uplinks (thread pool), then FedAvg
+    let client_models: Vec<Vec<Vec<f32>>> =
+        threadpool::scope_map(&uploads, workers, |_, u: &Vec<u8>| {
+            Ok(codec::decode(u)?.decompress_all())
+        })?
+        .into_iter()
+        .collect::<Result<_>>()?;
+    server.aggregate(&client_models, None)?;
+
+    Ok(RoundOutcome {
+        mean_loss: loss_sum / participants.len().max(1) as f64,
+        down_bytes,
+        up_bytes,
+        peak_client_param_bytes: peak,
+        participants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // run_round requires compiled artifacts; its integration tests live in
+    // rust/tests/fl_integration.rs. Pure-logic pieces (masks, downlinks,
+    // aggregation) are tested in their own modules.
+}

@@ -1,0 +1,114 @@
+//! Client sampling — which of the population participates in each round.
+
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// uniform without replacement (the paper's setting)
+    Uniform,
+    /// deterministic round-robin (useful for debugging/ablation)
+    RoundRobin,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "uniform" => Ok(SamplerKind::Uniform),
+            "round_robin" => Ok(SamplerKind::RoundRobin),
+            other => anyhow::bail!("unknown sampler {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    pub kind: SamplerKind,
+    pub population: usize,
+    pub per_round: usize,
+    pub seed: u64,
+}
+
+impl Sampler {
+    pub fn new(kind: SamplerKind, population: usize, per_round: usize, seed: u64) -> Self {
+        assert!(per_round > 0 && per_round <= population);
+        Self {
+            kind,
+            population,
+            per_round,
+            seed,
+        }
+    }
+
+    /// Client ids participating in `round` (deterministic).
+    pub fn sample(&self, round: u64) -> Vec<usize> {
+        match self.kind {
+            SamplerKind::Uniform => {
+                let mut rng = Xoshiro256pp::new(hash_seed(&[
+                    self.seed, 0x5a3b1e, round,
+                ]));
+                let mut ids = rng.sample_indices(self.population, self.per_round);
+                ids.sort_unstable(); // stable ordering for reproducible logs
+                ids
+            }
+            SamplerKind::RoundRobin => (0..self.per_round)
+                .map(|i| {
+                    (round as usize * self.per_round + i) % self.population
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_distinct_and_in_range() {
+        let s = Sampler::new(SamplerKind::Uniform, 64, 16, 1);
+        for round in 0..50 {
+            let ids = s.sample(round);
+            assert_eq!(ids.len(), 16);
+            let mut d = ids.clone();
+            d.dedup();
+            assert_eq!(d.len(), 16);
+            assert!(ids.iter().all(|&i| i < 64));
+        }
+    }
+
+    #[test]
+    fn uniform_deterministic_but_varies_by_round() {
+        let s = Sampler::new(SamplerKind::Uniform, 64, 16, 7);
+        assert_eq!(s.sample(3), s.sample(3));
+        assert_ne!(s.sample(3), s.sample(4));
+    }
+
+    #[test]
+    fn uniform_covers_population() {
+        let s = Sampler::new(SamplerKind::Uniform, 32, 8, 2);
+        let mut seen = vec![false; 32];
+        for round in 0..100 {
+            for id in s.sample(round) {
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s = Sampler::new(SamplerKind::RoundRobin, 6, 2, 0);
+        assert_eq!(s.sample(0), vec![0, 1]);
+        assert_eq!(s.sample(1), vec![2, 3]);
+        assert_eq!(s.sample(2), vec![4, 5]);
+        assert_eq!(s.sample(3), vec![0, 1]);
+    }
+
+    #[test]
+    fn full_participation() {
+        let s = Sampler::new(SamplerKind::Uniform, 8, 8, 3);
+        let mut ids = s.sample(0);
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,187 @@
+//! Server state and FedAvg aggregation.
+//!
+//! The server keeps the global model in full precision (OMC targets
+//! *client* memory and the *transport*; the paper's server receives
+//! decompressed updates and aggregates them). Aggregation is weighted
+//! FedAvg over client models, with optional server momentum (FedAvgM) —
+//! off by default, matching the paper's setup of plain averaging.
+
+use anyhow::Result;
+
+/// The server's global model + optimizer state.
+#[derive(Clone, Debug)]
+pub struct Server {
+    /// full-precision master copy, one Vec per manifest variable
+    pub params: Vec<Vec<f32>>,
+    /// momentum buffers (allocated lazily when momentum > 0)
+    velocity: Option<Vec<Vec<f32>>>,
+    pub momentum: f32,
+    pub round: usize,
+}
+
+impl Server {
+    pub fn new(params: Vec<Vec<f32>>) -> Self {
+        Self {
+            params,
+            velocity: None,
+            momentum: 0.0,
+            round: 0,
+        }
+    }
+
+    pub fn with_momentum(mut self, m: f32) -> Self {
+        assert!((0.0..1.0).contains(&m), "momentum in [0,1)");
+        self.momentum = m;
+        self
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|v| v.len()).sum()
+    }
+
+    /// FedAvg: replace the global model with the weighted mean of client
+    /// models. `weights` default to uniform; with momentum > 0 the weighted
+    /// mean *delta* is applied through a velocity buffer instead.
+    pub fn aggregate(
+        &mut self,
+        client_models: &[Vec<Vec<f32>>],
+        weights: Option<&[f64]>,
+    ) -> Result<()> {
+        anyhow::ensure!(!client_models.is_empty(), "no client models to aggregate");
+        let uniform = vec![1.0; client_models.len()];
+        let w = weights.unwrap_or(&uniform);
+        anyhow::ensure!(
+            w.len() == client_models.len(),
+            "weights/models length mismatch"
+        );
+        let total: f64 = w.iter().sum();
+        anyhow::ensure!(total > 0.0, "non-positive total weight");
+        for m in client_models {
+            anyhow::ensure!(
+                m.len() == self.params.len(),
+                "client model has {} vars, server has {}",
+                m.len(),
+                self.params.len()
+            );
+        }
+
+        // weighted mean, accumulated in f64 for determinism across client
+        // counts
+        let mut mean: Vec<Vec<f64>> = self
+            .params
+            .iter()
+            .map(|v| vec![0.0f64; v.len()])
+            .collect();
+        for (ci, m) in client_models.iter().enumerate() {
+            let wc = w[ci] / total;
+            for (vi, var) in m.iter().enumerate() {
+                anyhow::ensure!(
+                    var.len() == self.params[vi].len(),
+                    "variable {vi} length mismatch"
+                );
+                let acc = &mut mean[vi];
+                for (a, &x) in acc.iter_mut().zip(var) {
+                    *a += wc * x as f64;
+                }
+            }
+        }
+
+        if self.momentum > 0.0 {
+            let mom = self.momentum as f64;
+            let vel = self.velocity.get_or_insert_with(|| {
+                self.params.iter().map(|v| vec![0.0f32; v.len()]).collect()
+            });
+            for (vi, var) in self.params.iter_mut().enumerate() {
+                for (ei, p) in var.iter_mut().enumerate() {
+                    let delta = mean[vi][ei] - *p as f64;
+                    let v = mom * vel[vi][ei] as f64 + delta;
+                    vel[vi][ei] = v as f32;
+                    *p = (*p as f64 + v) as f32;
+                }
+            }
+        } else {
+            for (vi, var) in self.params.iter_mut().enumerate() {
+                for (ei, p) in var.iter_mut().enumerate() {
+                    *p = mean[vi][ei] as f32;
+                }
+            }
+        }
+        self.round += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(vals: &[f32]) -> Vec<Vec<f32>> {
+        vec![vals.to_vec()]
+    }
+
+    #[test]
+    fn uniform_average() {
+        let mut s = Server::new(model(&[0.0, 0.0]));
+        s.aggregate(&[model(&[1.0, 3.0]), model(&[3.0, 5.0])], None)
+            .unwrap();
+        assert_eq!(s.params[0], vec![2.0, 4.0]);
+        assert_eq!(s.round, 1);
+    }
+
+    #[test]
+    fn weighted_average() {
+        let mut s = Server::new(model(&[0.0]));
+        s.aggregate(
+            &[model(&[1.0]), model(&[4.0])],
+            Some(&[3.0, 1.0]),
+        )
+        .unwrap();
+        assert!((s.params[0][0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_client_replaces() {
+        let mut s = Server::new(model(&[9.0, 9.0]));
+        s.aggregate(&[model(&[1.0, 2.0])], None).unwrap();
+        assert_eq!(s.params[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn momentum_accelerates_along_consistent_direction() {
+        let mut plain = Server::new(model(&[0.0]));
+        let mut mom = Server::new(model(&[0.0])).with_momentum(0.9);
+        for _ in 0..5 {
+            // clients keep reporting "server + 1"
+            let target_p = model(&[plain.params[0][0] + 1.0]);
+            let target_m = model(&[mom.params[0][0] + 1.0]);
+            plain.aggregate(&[target_p], None).unwrap();
+            mom.aggregate(&[target_m], None).unwrap();
+        }
+        assert!(mom.params[0][0] > plain.params[0][0]);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let mut s = Server::new(model(&[0.0, 0.0]));
+        assert!(s.aggregate(&[], None).is_err());
+        assert!(s.aggregate(&[model(&[1.0])], None).is_err());
+        assert!(s
+            .aggregate(&[model(&[1.0, 2.0])], Some(&[1.0, 2.0]))
+            .is_err());
+        assert!(s
+            .aggregate(&[model(&[1.0, 2.0])], Some(&[0.0]))
+            .is_err());
+    }
+
+    #[test]
+    fn aggregation_deterministic_in_f64() {
+        // ordering of clients must not change the result beyond f64 assoc.
+        let mut s1 = Server::new(model(&[0.0; 4]));
+        let mut s2 = Server::new(model(&[0.0; 4]));
+        let a = model(&[0.125, -3.5, 1e-3, 7.25]);
+        let b = model(&[4.5, 2.25, -1e-3, 0.5]);
+        s1.aggregate(&[a.clone(), b.clone()], None).unwrap();
+        s2.aggregate(&[b, a], None).unwrap();
+        assert_eq!(s1.params, s2.params);
+    }
+}

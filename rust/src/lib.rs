@@ -1,0 +1,33 @@
+//! # omc-fl — Online Model Compression for Federated Learning
+//!
+//! A three-layer reproduction of *Online Model Compression for Federated
+//! Learning with Large Models* (Yang et al., Interspeech 2022):
+//!
+//! * **L3 (this crate)** — the federated-learning coordinator: server state,
+//!   client scheduling, the OMC compressed parameter store + bit-packing
+//!   codec, transport accounting, WER evaluation, metrics and the CLI.
+//! * **L2** — the conformer-lite training/eval graphs, written in JAX and
+//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! * **L1** — the Pallas SxEyMz fake-quantization kernel, lowered inside the
+//!   L2 graphs.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and every training step is
+//! a compiled executable call.
+//!
+//! Start with [`coordinator::Experiment`] (driving a whole federated run) or
+//! the `examples/` directory, which regenerates every table and figure of
+//! the paper (see `DESIGN.md` §5 for the experiment index).
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod omc;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use omc::format::FloatFormat;

@@ -1,0 +1,5 @@
+//! Metrics substrate: WER, run statistics, and round-log recording.
+
+pub mod recorder;
+pub mod stats;
+pub mod wer;

@@ -1,0 +1,205 @@
+//! Round-log recording: per-round metrics to CSV + a JSON summary, the raw
+//! material for EXPERIMENTS.md and the figure-reproduction examples.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One federated round's metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    pub eval_wer: f64,
+    /// bytes server->clients this round
+    pub down_bytes: usize,
+    /// bytes clients->server this round
+    pub up_bytes: usize,
+    pub round_seconds: f64,
+}
+
+/// Collects round records and writes them out.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<RoundRecord>,
+    pub label: String,
+}
+
+impl Recorder {
+    pub fn new(label: &str) -> Self {
+        Self {
+            records: Vec::new(),
+            label: label.to_string(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// Mean WER over the final `k` evaluated rounds (the number the tables
+    /// report; evaluation cadence may skip rounds, so filter on eval_wer
+    /// having been set).
+    pub fn final_wer(&self, k: usize) -> f64 {
+        let evals: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.eval_wer >= 0.0 && r.eval_loss > 0.0)
+            .map(|r| r.eval_wer)
+            .collect();
+        if evals.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &evals[evals.len().saturating_sub(k)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// Total communication (both directions) in bytes.
+    pub fn total_comm_bytes(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.down_bytes + r.up_bytes)
+            .sum()
+    }
+
+    /// Rounds per minute over the whole run (the tables' Speed column).
+    pub fn rounds_per_min(&self) -> f64 {
+        let secs: f64 = self.records.iter().map(|r| r.round_seconds).sum();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        60.0 * self.records.len() as f64 / secs
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,round_seconds\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.4},{},{},{:.6}\n",
+                r.round,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_wer,
+                r.down_bytes,
+                r.up_bytes,
+                r.round_seconds
+            ));
+        }
+        out
+    }
+
+    pub fn summary_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::s(&self.label)),
+            ("rounds", json::num(self.records.len() as f64)),
+            ("final_wer", json::num(self.final_wer(3))),
+            (
+                "final_train_loss",
+                json::num(self.last().map(|r| r.train_loss).unwrap_or(f64::NAN)),
+            ),
+            (
+                "total_comm_bytes",
+                json::num(self.total_comm_bytes() as f64),
+            ),
+            ("rounds_per_min", json::num(self.rounds_per_min())),
+        ])
+    }
+
+    /// Write `<dir>/<label>.csv` and `<dir>/<label>.json`.
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let csv_path = dir.join(format!("{}.csv", self.label));
+        let mut f = fs::File::create(&csv_path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let json_path = dir.join(format!("{}.json", self.label));
+        let mut f = fs::File::create(&json_path)?;
+        f.write_all(self.summary_json().to_string().as_bytes())?;
+        Ok((csv_path, json_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, wer: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            eval_loss: if wer >= 0.0 { 0.5 } else { 0.0 },
+            eval_wer: wer,
+            down_bytes: 100,
+            up_bytes: 50,
+            round_seconds: 0.5,
+        }
+    }
+
+    #[test]
+    fn final_wer_averages_tail_of_evaluated_rounds() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 50.0));
+        r.push(rec(1, -1.0)); // round without eval
+        r.push(rec(2, 10.0));
+        r.push(rec(3, 20.0));
+        assert!((r.final_wer(2) - 15.0).abs() < 1e-9);
+        assert!((r.final_wer(10) - (80.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_and_speed() {
+        let mut r = Recorder::new("t");
+        for i in 0..4 {
+            r.push(rec(i, 10.0));
+        }
+        assert_eq!(r.total_comm_bytes(), 600);
+        assert!((r.rounds_per_min() - 120.0).abs() < 1e-9); // 4 rounds / 2s
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 12.5));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("12.5"));
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "omc_rec_test_{}",
+            std::process::id()
+        ));
+        let mut r = Recorder::new("demo");
+        r.push(rec(0, 5.0));
+        let (csv, js) = r.write(&dir).unwrap();
+        assert!(csv.exists());
+        assert!(js.exists());
+        let parsed = crate::util::json::parse(
+            &std::fs::read_to_string(&js).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("demo"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = Recorder::new("e");
+        assert!(r.final_wer(3).is_nan());
+        assert_eq!(r.rounds_per_min(), 0.0);
+    }
+}

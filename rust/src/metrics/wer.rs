@@ -1,0 +1,141 @@
+//! Word Error Rate — the paper's accuracy metric.
+//!
+//! `WER = (substitutions + insertions + deletions) / reference length`,
+//! computed by Levenshtein alignment between hypothesis and reference word
+//! sequences and aggregated over a corpus (total edits / total words, the
+//! standard convention).
+
+/// Levenshtein distance between two symbol sequences (O(n·m) DP with a
+/// rolling row).
+pub fn edit_distance(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut curr = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        curr[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            curr[j + 1] = (prev[j] + cost) // substitution / match
+                .min(prev[j + 1] + 1)      // deletion
+                .min(curr[j] + 1);         // insertion
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[b.len()]
+}
+
+/// Corpus-level WER accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct WerAccumulator {
+    pub edits: usize,
+    pub words: usize,
+    pub utterances: usize,
+}
+
+impl WerAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, hyp: &[i32], reference: &[i32]) {
+        self.edits += edit_distance(hyp, reference);
+        self.words += reference.len();
+        self.utterances += 1;
+    }
+
+    pub fn merge(&mut self, other: &WerAccumulator) {
+        self.edits += other.edits;
+        self.words += other.words;
+        self.utterances += other.utterances;
+    }
+
+    /// WER in percent (the paper's unit).
+    pub fn wer(&self) -> f64 {
+        if self.words == 0 {
+            return 0.0;
+        }
+        100.0 * self.edits as f64 / self.words as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn known_distances() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 3], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[7], &[]), 1);
+        // classic: kitten -> sitting = 3 (as symbol ids)
+        let kitten = [10, 8, 19, 19, 4, 13];
+        let sitting = [18, 8, 19, 19, 8, 13, 6];
+        assert_eq!(edit_distance(&kitten, &sitting), 3);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [1, 2, 3, 4, 5];
+        let b = [2, 3, 9];
+        assert_eq!(edit_distance(&a, &b), edit_distance(&b, &a));
+    }
+
+    #[test]
+    fn triangle_inequality_spot() {
+        let a = [1, 2, 3];
+        let b = [1, 3, 3];
+        let c = [4, 4, 4];
+        assert!(
+            edit_distance(&a, &c)
+                <= edit_distance(&a, &b) + edit_distance(&b, &c)
+        );
+    }
+
+    #[test]
+    fn accumulator_aggregates() {
+        let mut acc = WerAccumulator::new();
+        acc.add(&[1, 2, 3], &[1, 2, 3]); // 0 edits / 3 words
+        acc.add(&[1, 9], &[1, 2]); // 1 edit / 2 words
+        assert_eq!(acc.utterances, 2);
+        assert!((acc.wer() - 20.0).abs() < 1e-9); // 1/5 = 20%
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = WerAccumulator::new();
+        a.add(&[1], &[2]);
+        let mut b = WerAccumulator::new();
+        b.add(&[3, 4], &[3, 4]);
+        let mut m = WerAccumulator::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.edits, 1);
+        assert_eq!(m.words, 3);
+        assert_eq!(m.utterances, 2);
+    }
+
+    #[test]
+    fn empty_accumulator_is_zero() {
+        assert_eq!(WerAccumulator::new().wer(), 0.0);
+    }
+
+    #[test]
+    fn wer_can_exceed_100() {
+        // more insertions than reference words
+        let mut acc = WerAccumulator::new();
+        acc.add(&[1, 2, 3, 4, 5], &[9]);
+        assert!(acc.wer() > 100.0);
+    }
+}

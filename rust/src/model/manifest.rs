@@ -1,0 +1,226 @@
+//! `manifest.json` — the contract between the AOT pipeline and the
+//! coordinator.
+//!
+//! `python/compile/aot.py` serializes the ordered variable table (name,
+//! shape, kind, size) plus the static model/data hyper-parameters; the Rust
+//! side binds HLO operands *by position* from this table. Variable `kind`
+//! drives the paper's weight-matrices-only rule.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarKind {
+    Weight,
+    Bias,
+    NormScale,
+    NormBias,
+}
+
+impl VarKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "weight" => VarKind::Weight,
+            "bias" => VarKind::Bias,
+            "norm_scale" => VarKind::NormScale,
+            "norm_bias" => VarKind::NormBias,
+            other => anyhow::bail!("unknown variable kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VarSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: VarKind,
+    pub size: usize,
+}
+
+/// Static model/data hyper-parameters baked into the lowered shapes.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub feature_dim: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub num_blocks: usize,
+    pub streaming: bool,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub variables: Vec<VarSpec>,
+    pub total_params: usize,
+    /// artifact file names relative to the manifest directory
+    pub artifacts: std::collections::BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let cfg = j.req("config")?;
+        let get_usize = |o: &Json, k: &str| -> Result<usize> {
+            o.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{k} must be a non-negative integer"))
+        };
+        let config = ModelConfig {
+            name: cfg
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("config.name must be a string"))?
+                .to_string(),
+            feature_dim: get_usize(cfg, "feature_dim")?,
+            vocab: get_usize(cfg, "vocab")?,
+            d_model: get_usize(cfg, "d_model")?,
+            num_blocks: get_usize(cfg, "num_blocks")?,
+            streaming: cfg
+                .req("streaming")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("config.streaming must be a bool"))?,
+            batch: get_usize(cfg, "batch")?,
+            seq_len: get_usize(cfg, "seq_len")?,
+        };
+        let mut variables = Vec::new();
+        for v in j
+            .req("variables")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("variables must be an array"))?
+        {
+            let shape: Vec<usize> = v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("shape dims must be ints"))
+                })
+                .collect::<Result<_>>()?;
+            let size = get_usize(v, "size")?;
+            anyhow::ensure!(
+                shape.iter().product::<usize>() == size,
+                "variable size mismatch"
+            );
+            variables.push(VarSpec {
+                name: v
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("variable name must be a string"))?
+                    .to_string(),
+                shape,
+                kind: VarKind::parse(
+                    v.req("kind")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("kind must be a string"))?,
+                )?,
+                size,
+            });
+        }
+        let total_params = get_usize(&j, "total_params")?;
+        anyhow::ensure!(
+            variables.iter().map(|v| v.size).sum::<usize>() == total_params,
+            "total_params does not match the variable table"
+        );
+        let mut artifacts = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    artifacts.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            config,
+            variables,
+            total_params,
+            artifacts,
+        })
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.variables.len()
+    }
+
+    /// Fraction of parameters living in weight matrices (the Sec. 2.4
+    /// observation; ~99.8% for the paper's Conformer).
+    pub fn weight_fraction(&self) -> f64 {
+        let w: usize = self
+            .variables
+            .iter()
+            .filter(|v| v.kind == VarKind::Weight)
+            .map(|v| v.size)
+            .sum();
+        w as f64 / self.total_params.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const SAMPLE: &str = r#"{
+        "config": {"name": "tiny", "feature_dim": 16, "vocab": 32,
+                   "d_model": 32, "ff_mult": 4, "num_heads": 2,
+                   "num_blocks": 1, "conv_kernel": 5, "gn_groups": 4,
+                   "streaming": false, "batch": 4, "seq_len": 16},
+        "num_variables": 2,
+        "total_params": 20,
+        "variables": [
+            {"name": "w", "shape": [4, 4], "kind": "weight", "size": 16},
+            {"name": "b", "shape": [4], "kind": "bias", "size": 4}
+        ],
+        "artifacts": {"init": "init.hlo.txt"},
+        "interchange": "hlo-text"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.batch, 4);
+        assert_eq!(m.num_vars(), 2);
+        assert_eq!(m.variables[0].kind, VarKind::Weight);
+        assert_eq!(m.total_params, 20);
+        assert_eq!(m.artifacts["init"], "init.hlo.txt");
+        assert!((m.weight_fraction() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let bad = SAMPLE.replace("\"size\": 16", "\"size\": 15");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = SAMPLE.replace("\"weight\"", "\"mystery\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_config_key() {
+        let bad = SAMPLE.replace("\"batch\": 4,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_total_mismatch() {
+        let bad = SAMPLE.replace("\"total_params\": 20", "\"total_params\": 21");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

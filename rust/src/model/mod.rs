@@ -1,0 +1,3 @@
+//! Model metadata: the AOT manifest binding Rust to the lowered graphs.
+
+pub mod manifest;

@@ -1,0 +1,287 @@
+//! Transport wire format + byte accounting.
+//!
+//! The downlink (server→client) and uplink (client→server) payloads are the
+//! serialized [`CompressedModel`]: a small header, then per variable either
+//! the bit-packed SxEyMz codes with the PVT scalars, or raw f32. These byte
+//! counts are exactly what the paper's "Communication" column reports.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic  "OMCW"            4 bytes
+//! version u16              currently 1
+//! nvars  u32
+//! per variable:
+//!   tag   u8               0 = raw f32, 1 = packed
+//!   n     u32              element count
+//!   raw:    n * f32
+//!   packed: e u8, m u8, s f32, b f32, payload_len u32, payload bytes
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::format::FloatFormat;
+use super::store::{CompressedModel, StoredVar};
+use super::transform::Pvt;
+
+const MAGIC: &[u8; 4] = b"OMCW";
+const VERSION: u16 = 1;
+
+/// Streaming writer for the wire format — lets callers assemble a payload
+/// from borrowed parts without materializing a `CompressedModel` (the
+/// round loop reuses one compressed copy of each variable across all
+/// clients and only the framing differs per client).
+pub struct WireWriter {
+    buf: Vec<u8>,
+    nvars: u32,
+}
+
+impl WireWriter {
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut buf = Vec::with_capacity(cap + 16);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
+        Self { buf, nvars: 0 }
+    }
+
+    pub fn raw(&mut self, v: &[f32]) {
+        self.buf.push(0u8);
+        self.buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        // bulk-copy the f32 payload (little-endian hosts: this is memcpy)
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.nvars += 1;
+    }
+
+    pub fn packed(&mut self, bytes: &[u8], n: usize, fmt: FloatFormat, pvt: Pvt) {
+        self.buf.push(1u8);
+        self.buf.extend_from_slice(&(n as u32).to_le_bytes());
+        self.buf.push(fmt.exp_bits as u8);
+        self.buf.push(fmt.mant_bits as u8);
+        self.buf.extend_from_slice(&pvt.s.to_le_bytes());
+        self.buf.extend_from_slice(&pvt.b.to_le_bytes());
+        self.buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(bytes);
+        self.nvars += 1;
+    }
+
+    pub fn var(&mut self, v: &StoredVar) {
+        match v {
+            StoredVar::Raw(data) => self.raw(data),
+            StoredVar::Packed { bytes, n, fmt, pvt } => {
+                self.packed(bytes, *n, *fmt, *pvt)
+            }
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        let nv = self.nvars.to_le_bytes();
+        self.buf[6..10].copy_from_slice(&nv);
+        self.buf
+    }
+}
+
+/// Serialize a compressed model into wire bytes.
+pub fn encode(model: &CompressedModel) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(model.memory_bytes() + 8 * model.vars.len());
+    for var in &model.vars {
+        w.var(var);
+    }
+    w.finish()
+}
+
+/// Decode wire bytes back into a compressed model.
+pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let magic = r.take(4)?;
+    ensure!(magic == MAGIC, "bad magic {:?}", &magic);
+    let version = r.u16()?;
+    ensure!(version == VERSION, "unsupported wire version {version}");
+    let nvars = r.u32()? as usize;
+    // sanity bound: each variable needs >= 6 bytes of header
+    ensure!(
+        nvars <= bytes.len() / 5 + 1,
+        "implausible variable count {nvars}"
+    );
+    let mut vars = Vec::with_capacity(nvars);
+    for vi in 0..nvars {
+        let tag = r.u8()?;
+        let n = r.u32()? as usize;
+        match tag {
+            0 => {
+                let raw = r.take(n * 4).with_context(|| format!("raw var {vi}"))?;
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(4) {
+                    v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                vars.push(StoredVar::Raw(v));
+            }
+            1 => {
+                let e = r.u8()? as u32;
+                let m = r.u8()? as u32;
+                let fmt = FloatFormat::new(e, m)
+                    .with_context(|| format!("packed var {vi}"))?;
+                let s = f32::from_le_bytes(r.arr4()?);
+                let b = f32::from_le_bytes(r.arr4()?);
+                ensure!(
+                    s.is_finite() && b.is_finite(),
+                    "non-finite PVT scalars in var {vi}"
+                );
+                let plen = r.u32()? as usize;
+                ensure!(
+                    plen == fmt.packed_bytes(n),
+                    "payload length {plen} inconsistent with n={n} at {fmt}"
+                );
+                let payload = r.take(plen)?.to_vec();
+                vars.push(StoredVar::Packed {
+                    bytes: payload,
+                    n,
+                    fmt,
+                    pvt: Pvt { s, b },
+                });
+            }
+            t => bail!("unknown variable tag {t}"),
+        }
+    }
+    ensure!(r.i == bytes.len(), "trailing bytes after payload");
+    Ok(CompressedModel::new(vars))
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + n <= self.b.len(), "truncated payload");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn arr4(&mut self) -> Result<[u8; 4]> {
+        let s = self.take(4)?;
+        Ok([s[0], s[1], s[2], s[3]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn sample_model(g: &mut Gen) -> CompressedModel {
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let mut vars = Vec::new();
+        vars.push(StoredVar::compress(&g.vec_normal(1000, 0.05), fmt, true));
+        vars.push(StoredVar::raw(g.vec_normal(64, 1.0)));
+        vars.push(StoredVar::compress(&g.vec_normal(333, 0.2), fmt, false));
+        vars.push(StoredVar::raw(vec![]));
+        CompressedModel::new(vars)
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let mut g = Gen::new(1);
+        let model = sample_model(&mut g);
+        let wire = encode(&model);
+        let back = decode(&wire).unwrap();
+        assert_eq!(back.num_vars(), model.num_vars());
+        for (a, b) in model.vars.iter().zip(&back.vars) {
+            assert_eq!(a.is_packed(), b.is_packed());
+            assert_eq!(a.pvt(), b.pvt());
+            let (ta, tb) = (a.decode_tilde(), b.decode_tilde());
+            assert_eq!(ta.len(), tb.len());
+            for (x, y) in ta.iter().zip(&tb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn wire_size_accounts_for_compression() {
+        let mut g = Gen::new(2);
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap(); // 19 bits
+        let n = 100_000;
+        let v = g.vec_normal(n, 0.05);
+        let packed = CompressedModel::new(vec![StoredVar::compress(&v, fmt, true)]);
+        let raw = CompressedModel::new(vec![StoredVar::raw(v)]);
+        let ratio = encode(&packed).len() as f64 / encode(&raw).len() as f64;
+        assert!((ratio - 19.0 / 32.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut g = Gen::new(3);
+        let wire = encode(&sample_model(&mut g));
+        // bad magic
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        // bad version
+        let mut bad = wire.clone();
+        bad[4] = 9;
+        assert!(decode(&bad).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in [5, 11, 16, wire.len() / 2, wire.len() - 1] {
+            assert!(decode(&wire[..cut]).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut bad = wire.clone();
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_pvt() {
+        let mut g = Gen::new(4);
+        let model = sample_model(&mut g);
+        let mut wire = encode(&model);
+        // var 0 header: 4 magic + 2 ver + 4 nvars + 1 tag + 4 n = 15; then
+        // e,m at 15,16; s at 17..21 — overwrite s with NaN
+        wire[17..21].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(decode(&wire).is_err());
+    }
+
+    #[test]
+    fn empty_model_roundtrip() {
+        let m = CompressedModel::default();
+        let back = decode(&encode(&m)).unwrap();
+        assert_eq!(back.num_vars(), 0);
+    }
+
+    #[test]
+    fn fuzz_decoder_never_panics() {
+        // random byte soup must be rejected gracefully
+        let mut g = Gen::new(5);
+        for _ in 0..500 {
+            let n = g.usize_below(200);
+            let bytes: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+            let _ = decode(&bytes); // must not panic
+        }
+        // and mutated-valid payloads too
+        let wire = encode(&sample_model(&mut g));
+        for _ in 0..300 {
+            let mut bad = wire.clone();
+            let idx = g.usize_below(bad.len());
+            bad[idx] ^= 1 << g.usize_below(8);
+            let _ = decode(&bad); // must not panic (may succeed or fail)
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! `SxEyMz` floating-point formats (paper Sec. 2.2).
+//!
+//! A format has 1 sign bit, `e` exponent bits and `m` mantissa bits,
+//! IEEE-like: bias `2^(e-1)-1`, reserved all-ones exponent (so the maximum
+//! finite unbiased exponent equals the bias), gradual underflow. `S1E8M23`
+//! is exactly f32 and quantization to it is the identity.
+
+use std::fmt;
+use std::str::FromStr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FloatFormat {
+    pub exp_bits: u32,
+    pub mant_bits: u32,
+}
+
+impl FloatFormat {
+    pub const FP32: FloatFormat = FloatFormat { exp_bits: 8, mant_bits: 23 };
+    /// IEEE binary16 (used for the Sec. 3.4 memory measurement).
+    pub const FP16: FloatFormat = FloatFormat { exp_bits: 5, mant_bits: 10 };
+
+    pub fn new(exp_bits: u32, mant_bits: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (1..=8).contains(&exp_bits),
+            "exponent bits must be in 1..=8, got {exp_bits}"
+        );
+        anyhow::ensure!(
+            mant_bits <= 23,
+            "mantissa bits must be <= 23, got {mant_bits}"
+        );
+        // The subnormal rounding path requires m <= 22 unless the format is
+        // exactly f32 (see kernels/ref.py); every format in the paper obeys
+        // this.
+        anyhow::ensure!(
+            mant_bits <= 22 || exp_bits == 8,
+            "m = 23 is only supported with e = 8 (plain f32)"
+        );
+        Ok(Self { exp_bits, mant_bits })
+    }
+
+    /// Total storage bits per value: 1 + e + m.
+    pub fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.mant_bits
+    }
+
+    pub fn is_fp32(&self) -> bool {
+        *self == Self::FP32
+    }
+
+    /// IEEE-style exponent bias `2^(e-1) - 1`.
+    pub fn bias(&self) -> i32 {
+        (1i32 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Smallest normal unbiased exponent `1 - bias`.
+    pub fn min_normal_exp(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite value `(2 - 2^-m) * 2^bias`.
+    pub fn max_value(&self) -> f64 {
+        (2.0 - (0.5f64).powi(self.mant_bits as i32 + 1) * 2.0)
+            * 2f64.powi(self.bias())
+    }
+
+    /// Smallest positive (subnormal) value `2^(min_normal - m)`.
+    pub fn min_positive(&self) -> f64 {
+        2f64.powi(self.min_normal_exp() - self.mant_bits as i32)
+    }
+
+    /// Bytes needed to store `n` values bit-packed at this format.
+    pub fn packed_bytes(&self, n: usize) -> usize {
+        (n * self.bits() as usize + 7) / 8
+    }
+}
+
+impl fmt::Display for FloatFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "S1E{}M{}", self.exp_bits, self.mant_bits)
+    }
+}
+
+impl FromStr for FloatFormat {
+    type Err = anyhow::Error;
+
+    /// Parse the paper's `SxEyMz` notation (sign bits must be 1).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let err = || anyhow::anyhow!("bad float format {s:?}; expected e.g. S1E4M14");
+        let rest = s.strip_prefix('S').ok_or_else(err)?;
+        let epos = rest.find('E').ok_or_else(err)?;
+        let mpos = rest.find('M').ok_or_else(err)?;
+        anyhow::ensure!(epos < mpos, "bad float format {s:?}");
+        let sign: u32 = rest[..epos].parse().map_err(|_| err())?;
+        anyhow::ensure!(sign == 1, "only 1 sign bit is supported, got {sign}");
+        let e: u32 = rest[epos + 1..mpos].parse().map_err(|_| err())?;
+        let m: u32 = rest[mpos + 1..].parse().map_err(|_| err())?;
+        FloatFormat::new(e, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_formats() {
+        for (txt, e, m, bits) in [
+            ("S1E8M23", 8, 23, 32),
+            ("S1E4M14", 4, 14, 19),
+            ("S1E3M7", 3, 7, 11),
+            ("S1E2M3", 2, 3, 6),
+            ("S1E5M10", 5, 10, 16),
+            ("S1E3M9", 3, 9, 13),
+            ("S1E4M8", 4, 8, 13),
+            ("S1E5M7", 5, 7, 13),
+        ] {
+            let f: FloatFormat = txt.parse().unwrap();
+            assert_eq!((f.exp_bits, f.mant_bits), (e, m), "{txt}");
+            assert_eq!(f.bits(), bits, "{txt}");
+            assert_eq!(f.to_string(), txt);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_formats() {
+        for bad in ["", "S1E9M2", "S2E4M4", "E4M14", "S1E4", "S1M4E4",
+                    "S1E0M3", "S1E4M24", "S1E4M23"] {
+            assert!(bad.parse::<FloatFormat>().is_err(), "{bad}");
+        }
+        // m=23 allowed only for e=8
+        assert!("S1E8M23".parse::<FloatFormat>().is_ok());
+    }
+
+    #[test]
+    fn fp32_constants() {
+        let f = FloatFormat::FP32;
+        assert!(f.is_fp32());
+        assert_eq!(f.bias(), 127);
+        assert_eq!(f.min_normal_exp(), -126);
+        assert_eq!(f.max_value(), f32::MAX as f64);
+    }
+
+    #[test]
+    fn fp16_range() {
+        let f = FloatFormat::FP16;
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.max_value(), 65504.0);
+        assert_eq!(f.min_positive(), 2f64.powi(-24));
+    }
+
+    #[test]
+    fn packed_bytes_rounding() {
+        let f: FloatFormat = "S1E3M7".parse().unwrap(); // 11 bits
+        assert_eq!(f.packed_bytes(0), 0);
+        assert_eq!(f.packed_bytes(1), 2);  // 11 bits -> 2 bytes
+        assert_eq!(f.packed_bytes(8), 11); // 88 bits -> 11 bytes
+    }
+
+    #[test]
+    fn memory_ratio_matches_paper_table1() {
+        // Table 1: S1E4M14 on 90% of weights ~= 64% of FP32. With weights
+        // ~99.8% of the model: 0.9*19/32 + 0.1 ~= 0.634.
+        let f: FloatFormat = "S1E4M14".parse().unwrap();
+        let ratio = 0.9 * f.bits() as f64 / 32.0 + 0.1;
+        assert!((ratio - 0.634).abs() < 0.001);
+    }
+}

@@ -1,0 +1,21 @@
+//! Online Model Compression core (the paper's Sec. 2).
+//!
+//! * [`format`] — `SxEyMz` floating-point formats (Sec. 2.2).
+//! * [`quantize`] — bit-exact mirror of the L1 Pallas kernel.
+//! * [`transform`] — per-variable transformation (Sec. 2.3).
+//! * [`pack`] — bit-packing of quantized values into (1+e+m)-bit codes;
+//!   this is the *actual* in-memory / on-wire representation whose size the
+//!   paper's memory and communication columns measure.
+//! * [`store`] — the compressed parameter store kept by server and clients.
+//! * [`selection`] — weight-matrices-only + partial parameter quantization
+//!   (Secs. 2.4, 2.5).
+//! * [`codec`] — the transport wire format and byte accounting.
+
+pub mod codec;
+pub mod fixed;
+pub mod format;
+pub mod pack;
+pub mod quantize;
+pub mod selection;
+pub mod store;
+pub mod transform;

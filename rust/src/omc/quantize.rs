@@ -1,0 +1,323 @@
+//! Bit-exact Rust mirror of the L1 Pallas quantization kernel.
+//!
+//! The algorithm is identical, operation for operation, to
+//! `python/compile/kernels/ref.py::quantize_u32_math` (which the Pallas
+//! kernel shares): round-to-nearest-even on the f32 encoding for the normal
+//! range, the exact additive trick `(|x| + C) - C` for the subnormal range,
+//! saturation to max finite. Cross-language agreement is asserted in
+//! `rust/tests/cross_layer.rs` by executing the `quant.hlo.txt` artifact and
+//! comparing bit patterns.
+//!
+//! Bit-exactness matters because the quantized values cross the wire
+//! bit-packed (`omc::pack`): the Rust decoder must reproduce the exact f32
+//! values the training graph emitted.
+
+use super::format::FloatFormat;
+
+/// Quantize a single f32 to `fmt`. Inf/NaN saturate to max finite
+/// (documented in DESIGN.md; training values are finite).
+#[inline]
+pub fn quantize_one(x: f32, fmt: FloatFormat) -> f32 {
+    let e = fmt.exp_bits;
+    let m = fmt.mant_bits;
+    let u = x.to_bits();
+    let sign = u & 0x8000_0000;
+    let mag = u & 0x7FFF_FFFF;
+
+    let bexp = (mag >> 23) as i32;
+    let unb = bexp.max(1) - 127;
+    let bias_f = (1i32 << (e - 1)) - 1;
+    let min_normal_unb = 1 - bias_f;
+
+    let q = if unb < min_normal_unb {
+        // subnormal range: round to the uniform grid 2^(min_normal - m)
+        // via the exact additive trick (pure f32 IEEE RNE arithmetic,
+        // matching XLA's CPU semantics exactly)
+        let t_plus_150 = (min_normal_unb - m as i32 + 150) as u32;
+        let c = f32::from_bits((t_plus_150 << 23) | 0x0040_0000); // 1.5*2^(t+23)
+        let absx = f32::from_bits(mag);
+        ((absx + c) - c).to_bits()
+    } else {
+        // normal range: RNE at (23 - m) encoding bits
+        let shift = 23 - m;
+        if shift == 0 {
+            mag
+        } else {
+            let half = 1u32 << (shift - 1);
+            let lsb = (mag >> shift) & 1;
+            ((mag.wrapping_add(half - 1 + lsb)) >> shift) << shift
+        }
+    };
+
+    // saturate to max finite (also inf/NaN and RNE carry past the top)
+    let max_bexp = (bias_f + 127) as u32;
+    let frac = ((1u32 << m) - 1) << (23 - m);
+    let max_mag = (max_bexp << 23) | frac;
+    f32::from_bits(sign | q.min(max_mag))
+}
+
+/// Quantize a slice out-of-place.
+pub fn quantize_slice(xs: &[f32], fmt: FloatFormat, out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len());
+    if fmt.is_fp32() {
+        out.copy_from_slice(xs);
+        return;
+    }
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = quantize_one(x, fmt);
+    }
+}
+
+/// Quantize in place.
+pub fn quantize_in_place(xs: &mut [f32], fmt: FloatFormat) {
+    if fmt.is_fp32() {
+        return;
+    }
+    for x in xs.iter_mut() {
+        *x = quantize_one(*x, fmt);
+    }
+}
+
+/// Allocating convenience wrapper.
+pub fn quantize_vec(xs: &[f32], fmt: FloatFormat) -> Vec<f32> {
+    let mut out = vec![0.0; xs.len()];
+    quantize_slice(xs, fmt, &mut out);
+    out
+}
+
+/// True iff `x` is exactly representable in `fmt` (i.e. a fixed point of
+/// the quantizer). Used by debug assertions and the packer.
+pub fn is_representable(x: f32, fmt: FloatFormat) -> bool {
+    quantize_one(x, fmt).to_bits() == x.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn fmt(s: &str) -> FloatFormat {
+        s.parse().unwrap()
+    }
+
+    const PAPER_FORMATS: [&str; 8] = [
+        "S1E8M23", "S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3", "S1E3M9",
+        "S1E4M8", "S1E5M7",
+    ];
+
+    #[test]
+    fn fp32_is_identity() {
+        let mut g = Gen::new(1);
+        for _ in 0..10_000 {
+            let x = g.f32_wide();
+            assert_eq!(quantize_one(x, FloatFormat::FP32).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn idempotent_property() {
+        for f in PAPER_FORMATS {
+            let fmt = fmt(f);
+            let mut g = Gen::new(7);
+            for _ in 0..20_000 {
+                let x = g.f32_wide();
+                let q = quantize_one(x, fmt);
+                assert_eq!(
+                    quantize_one(q, fmt).to_bits(),
+                    q.to_bits(),
+                    "{f} x={x:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_property() {
+        for f in PAPER_FORMATS {
+            let fmt = fmt(f);
+            let mut g = Gen::new(3);
+            for _ in 0..5_000 {
+                let a = g.f32_normalish(1.0);
+                let b = g.f32_normalish(1.0);
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                assert!(
+                    quantize_one(lo, fmt) <= quantize_one(hi, fmt),
+                    "{f} {lo:e} {hi:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        for f in PAPER_FORMATS {
+            let fmt = fmt(f);
+            let mut g = Gen::new(5);
+            for _ in 0..5_000 {
+                let x = g.f32_wide();
+                assert_eq!(
+                    quantize_one(-x, fmt).to_bits(),
+                    (-quantize_one(x, fmt)).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_ieee_half_for_s1e5m10() {
+        // f32 -> f16 -> f32 round trip computed independently via the
+        // well-known bit algorithm is what the S1E5M10 quantizer must equal.
+        let mut g = Gen::new(11);
+        for _ in 0..50_000 {
+            let x = g.f32_normalish(10.0);
+            let q = quantize_one(x, FloatFormat::FP16);
+            let viaf16 = f16_roundtrip(x);
+            assert_eq!(q.to_bits(), viaf16.to_bits(), "x={x:e}");
+        }
+    }
+
+    /// Independent software f32->binary16->f32 (RNE, saturating, no inf).
+    fn f16_roundtrip(x: f32) -> f32 {
+        let fmt = FloatFormat::FP16;
+        // brute-force nearest-even search over the f16 grid is too slow;
+        // instead use the double-rounding-free property: binary16 values
+        // are exactly the S1E5M10 grid, so compare against a table-free
+        // approach: scale into the grid via exact f64 arithmetic.
+        let xa = x as f64;
+        let max = fmt.max_value();
+        if xa.abs() >= max {
+            return (max.copysign(xa)) as f32;
+        }
+        let exp = if xa == 0.0 {
+            0
+        } else {
+            xa.abs().log2().floor() as i32
+        };
+        let q = if exp < fmt.min_normal_exp() {
+            2f64.powi(fmt.min_normal_exp() - fmt.mant_bits as i32)
+        } else {
+            2f64.powi(exp - fmt.mant_bits as i32)
+        };
+        let k = xa / q;
+        let kr = round_half_even(k);
+        // rounding can push |value| to the next binade: recompute quantum
+        let v = kr * q;
+        let exp2 = if v == 0.0 {
+            exp
+        } else {
+            v.abs().log2().floor() as i32
+        };
+        if exp2 > exp && exp2 >= fmt.min_normal_exp() {
+            let q2 = 2f64.powi(exp2 - fmt.mant_bits as i32);
+            (round_half_even(xa / q2) * q2).min(max).max(-max) as f32
+        } else {
+            v.min(max).max(-max) as f32
+        }
+    }
+
+    fn round_half_even(x: f64) -> f64 {
+        let f = x.floor();
+        let d = x - f;
+        if d > 0.5 {
+            f + 1.0
+        } else if d < 0.5 {
+            f
+        } else if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        for f in ["S1E3M7", "S1E2M3", "S1E5M10"] {
+            let fmt = fmt(f);
+            let max = fmt.max_value() as f32;
+            assert_eq!(quantize_one(f32::INFINITY, fmt), max);
+            assert_eq!(quantize_one(f32::NEG_INFINITY, fmt), -max);
+            assert_eq!(quantize_one(1e30, fmt), max);
+            assert_eq!(quantize_one(max, fmt), max);
+        }
+    }
+
+    #[test]
+    fn subnormal_grid_uniform() {
+        for f in ["S1E3M7", "S1E2M3", "S1E4M8"] {
+            let fmt = fmt(f);
+            let quantum = fmt.min_positive();
+            let mut g = Gen::new(13);
+            let min_normal = 2f64.powi(fmt.min_normal_exp());
+            for _ in 0..10_000 {
+                let x = (g.f64_unit() * 2.0 - 1.0) * min_normal;
+                let q = quantize_one(x as f32, fmt) as f64;
+                let k = q / quantum;
+                assert_eq!(k, k.round(), "{f} x={x:e} q={q:e}");
+                assert!((q - x).abs() <= quantum / 2.0 + 1e-18);
+            }
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // S1E4M2: between 1.0 and 1.25, tie 1.125 -> 1.0 (even); tie
+        // 1.375 -> 1.5 (even). Mirrors the python test.
+        let fmt = FloatFormat::new(4, 2).unwrap();
+        assert_eq!(quantize_one(1.125, fmt), 1.0);
+        assert_eq!(quantize_one(1.375, fmt), 1.5);
+        assert_eq!(quantize_one(-1.125, fmt), -1.0);
+        assert_eq!(quantize_one(-1.375, fmt), -1.5);
+    }
+
+    #[test]
+    fn zeros_preserved_with_sign() {
+        let fmt = fmt("S1E3M7");
+        assert_eq!(quantize_one(0.0, fmt).to_bits(), 0.0f32.to_bits());
+        assert_eq!(quantize_one(-0.0, fmt).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn error_bounded_by_half_ulp_normals() {
+        for f in PAPER_FORMATS {
+            let fmt = fmt(f);
+            let mut g = Gen::new(17);
+            for _ in 0..10_000 {
+                let x = g.f32_normalish(1.0);
+                let q = quantize_one(x, fmt) as f64;
+                let xa = x as f64;
+                if xa.abs() >= 2f64.powi(fmt.min_normal_exp())
+                    && xa.abs() < fmt.max_value() / 2.0
+                {
+                    let exp = xa.abs().log2().floor() as i32;
+                    let ulp = 2f64.powi(exp - fmt.mant_bits as i32);
+                    assert!(
+                        (q - xa).abs() <= ulp / 2.0 * 1.0000001,
+                        "{f} x={x:e} q={q:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_and_in_place_agree() {
+        let fmt = fmt("S1E3M7");
+        let mut g = Gen::new(19);
+        let xs: Vec<f32> = (0..1000).map(|_| g.f32_normalish(0.1)).collect();
+        let a = quantize_vec(&xs, fmt);
+        let mut b = xs.clone();
+        quantize_in_place(&mut b, fmt);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn representability_check() {
+        let fmt = fmt("S1E3M7");
+        assert!(is_representable(0.25, fmt));
+        assert!(is_representable(0.0, fmt));
+        assert!(!is_representable(0.1, fmt)); // 0.1 not on any binary grid
+    }
+}

@@ -1,0 +1,172 @@
+//! Variable selection: weight-matrices-only (Sec. 2.4) + partial parameter
+//! quantization (Sec. 2.5).
+//!
+//! Each client in each round quantizes a random fraction (90% in the paper)
+//! of the *eligible* variables; the subset is re-drawn per (round, client)
+//! from a deterministic seed so runs replay exactly and the server can
+//! reconstruct any client's mask.
+
+use crate::model::manifest::{VarKind, VarSpec};
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Static selection policy for an experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectionPolicy {
+    /// Only `kind == Weight` variables are eligible (Sec. 2.4). Disabled in
+    /// the Table-4 ablation rows that quantize everything.
+    pub weights_only: bool,
+    /// Fraction of eligible variables each client quantizes (Sec. 2.5;
+    /// 1.0 = APQ, 0.9 = the paper's PPQ setting).
+    pub fraction: f64,
+}
+
+impl SelectionPolicy {
+    pub fn fp32() -> Self {
+        // Baseline: nothing quantized (used with FloatFormat::FP32).
+        Self { weights_only: true, fraction: 0.0 }
+    }
+
+    pub fn paper_default() -> Self {
+        Self { weights_only: true, fraction: 0.9 }
+    }
+
+    pub fn eligible(&self, spec: &VarSpec) -> bool {
+        !self.weights_only || spec.kind == VarKind::Weight
+    }
+
+    /// Draw the 0/1 quantization mask for (round, client).
+    ///
+    /// Exactly `round(fraction * n_eligible)` eligible variables get mask 1,
+    /// chosen uniformly; ineligible variables always get 0. The same
+    /// (seed, round, client) triple always yields the same mask.
+    pub fn draw_mask(
+        &self,
+        specs: &[VarSpec],
+        seed: u64,
+        round: u64,
+        client: u64,
+    ) -> Vec<f32> {
+        let eligible: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| self.eligible(s))
+            .map(|(i, _)| i)
+            .collect();
+        let k = ((self.fraction * eligible.len() as f64).round() as usize)
+            .min(eligible.len());
+        let mut mask = vec![0.0f32; specs.len()];
+        if k == 0 {
+            return mask;
+        }
+        let mut rng =
+            Xoshiro256pp::new(hash_seed(&[seed, 0x5e1ec7, round, client]));
+        for j in rng.sample_indices(eligible.len(), k) {
+            mask[eligible[j]] = 1.0;
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{VarKind, VarSpec};
+
+    fn specs() -> Vec<VarSpec> {
+        let mut v = Vec::new();
+        for i in 0..10 {
+            v.push(VarSpec {
+                name: format!("w{i}"),
+                shape: vec![4, 4],
+                kind: VarKind::Weight,
+                size: 16,
+            });
+        }
+        v.push(VarSpec {
+            name: "ln".into(),
+            shape: vec![4],
+            kind: VarKind::NormScale,
+            size: 4,
+        });
+        v.push(VarSpec {
+            name: "b".into(),
+            shape: vec![4],
+            kind: VarKind::Bias,
+            size: 4,
+        });
+        v
+    }
+
+    #[test]
+    fn weights_only_excludes_norm_and_bias() {
+        let p = SelectionPolicy { weights_only: true, fraction: 1.0 };
+        let mask = p.draw_mask(&specs(), 1, 0, 0);
+        assert_eq!(&mask[10..], &[0.0, 0.0]);
+        assert!(mask[..10].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn fraction_selects_exact_count() {
+        let p = SelectionPolicy { weights_only: true, fraction: 0.9 };
+        for client in 0..50 {
+            let mask = p.draw_mask(&specs(), 7, 3, client);
+            let count: f32 = mask.iter().sum();
+            assert_eq!(count, 9.0); // round(0.9 * 10)
+        }
+    }
+
+    #[test]
+    fn deterministic_per_round_client() {
+        let p = SelectionPolicy::paper_default();
+        let a = p.draw_mask(&specs(), 42, 5, 17);
+        let b = p.draw_mask(&specs(), 42, 5, 17);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn varies_across_clients_and_rounds() {
+        let p = SelectionPolicy::paper_default();
+        let base = p.draw_mask(&specs(), 42, 5, 0);
+        let mut differs = 0;
+        for client in 1..40 {
+            if p.draw_mask(&specs(), 42, 5, client) != base {
+                differs += 1;
+            }
+        }
+        assert!(differs > 20, "selection should vary across clients");
+        assert_ne!(p.draw_mask(&specs(), 42, 6, 0), base);
+    }
+
+    #[test]
+    fn every_weight_selected_somewhere() {
+        // Sec. 2.5 rationale: across many clients, every parameter gets
+        // unquantized (precise) updates from the 10% holdout — equivalently
+        // every variable must be *excluded* by at least one client.
+        let p = SelectionPolicy::paper_default();
+        let s = specs();
+        let mut excluded = vec![false; 10];
+        for client in 0..200 {
+            let mask = p.draw_mask(&s, 9, 0, client);
+            for i in 0..10 {
+                if mask[i] == 0.0 {
+                    excluded[i] = true;
+                }
+            }
+        }
+        assert!(excluded.iter().all(|&e| e), "{excluded:?}");
+    }
+
+    #[test]
+    fn fp32_policy_selects_nothing() {
+        let p = SelectionPolicy::fp32();
+        let mask = p.draw_mask(&specs(), 1, 0, 0);
+        assert!(mask.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn all_params_policy_includes_everything() {
+        let p = SelectionPolicy { weights_only: false, fraction: 1.0 };
+        let mask = p.draw_mask(&specs(), 1, 0, 0);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+}

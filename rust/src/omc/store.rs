@@ -1,0 +1,253 @@
+//! The compressed parameter store (paper Sec. 2.1, Fig. 1).
+//!
+//! `CompressedModel` is what a client keeps between operations: every
+//! variable is either bit-packed at the OMC format plus its PVT scalars, or
+//! raw f32 (norm parameters, and the PPQ-unselected weights). Decompressed
+//! f32 copies are produced on demand and dropped by the caller as soon as
+//! they are consumed — mirroring the paper's transient-variable discipline.
+//! `memory_bytes()` is the quantity Sec. 3.4 measures.
+
+use super::format::FloatFormat;
+use super::pack;
+use super::quantize;
+use super::transform::{self, Pvt};
+
+/// One variable in the store.
+#[derive(Clone, Debug)]
+pub enum StoredVar {
+    /// Raw f32 (unquantized) — 4 bytes/element.
+    Raw(Vec<f32>),
+    /// Bit-packed SxEyMz codes + per-variable transform.
+    Packed {
+        bytes: Vec<u8>,
+        n: usize,
+        fmt: FloatFormat,
+        pvt: Pvt,
+    },
+}
+
+impl StoredVar {
+    /// Compress `values` (exact quantizer fixed points NOT required — this
+    /// quantizes) with a PVT fit, or store raw when `fmt` is FP32.
+    pub fn compress(values: &[f32], fmt: FloatFormat, use_pvt: bool) -> Self {
+        if fmt.is_fp32() {
+            return StoredVar::Raw(values.to_vec());
+        }
+        let vt = quantize::quantize_vec(values, fmt);
+        let pvt = if use_pvt {
+            transform::fit(values, &vt)
+        } else {
+            Pvt::IDENTITY
+        };
+        let bytes = pack::pack(&vt, fmt).expect("quantized values must pack");
+        StoredVar::Packed {
+            bytes,
+            n: values.len(),
+            fmt,
+            pvt,
+        }
+    }
+
+    /// Store values that are *already* quantizer fixed points (e.g. the Ṽ'
+    /// returned by the training graph) along with their fitted transform.
+    pub fn from_quantized(
+        vt: &[f32],
+        fmt: FloatFormat,
+        pvt: Pvt,
+    ) -> Result<Self, pack::PackError> {
+        Ok(StoredVar::Packed {
+            bytes: pack::pack(vt, fmt)?,
+            n: vt.len(),
+            fmt,
+            pvt,
+        })
+    }
+
+    pub fn raw(values: Vec<f32>) -> Self {
+        StoredVar::Raw(values)
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StoredVar::Raw(v) => v.len(),
+            StoredVar::Packed { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, StoredVar::Packed { .. })
+    }
+
+    /// Decode to the quantized values Ṽ (no transform applied) — the exact
+    /// f32 array the training graph receives as input.
+    pub fn decode_tilde(&self) -> Vec<f32> {
+        match self {
+            StoredVar::Raw(v) => v.clone(),
+            StoredVar::Packed { bytes, n, fmt, .. } => pack::unpack(bytes, *n, *fmt),
+        }
+    }
+
+    /// Decompress to the transformed view `V̄ = s·Ṽ + b` — the values the
+    /// model actually computes with (single fused unpack+affine pass).
+    pub fn decompress(&self) -> Vec<f32> {
+        match self {
+            StoredVar::Raw(v) => v.clone(),
+            StoredVar::Packed { bytes, n, fmt, pvt } => {
+                pack::unpack_transform(bytes, *n, *fmt, pvt.s, pvt.b)
+            }
+        }
+    }
+
+    pub fn pvt(&self) -> Pvt {
+        match self {
+            StoredVar::Raw(_) => Pvt::IDENTITY,
+            StoredVar::Packed { pvt, .. } => *pvt,
+        }
+    }
+
+    /// Bytes this variable occupies in the store: payload + the PVT scalars
+    /// for packed variables (the paper's accounting, DESIGN.md §5).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            StoredVar::Raw(v) => v.len() * 4,
+            StoredVar::Packed { bytes, .. } => bytes.len() + 8, // + s, b
+        }
+    }
+}
+
+/// A full model in compressed form (one entry per manifest variable).
+#[derive(Clone, Debug, Default)]
+pub struct CompressedModel {
+    pub vars: Vec<StoredVar>,
+}
+
+impl CompressedModel {
+    pub fn new(vars: Vec<StoredVar>) -> Self {
+        Self { vars }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.vars.iter().map(|v| v.len()).sum()
+    }
+
+    /// Total parameter-store bytes (the Sec. 3.4 quantity).
+    pub fn memory_bytes(&self) -> usize {
+        self.vars.iter().map(|v| v.memory_bytes()).sum()
+    }
+
+    /// Memory relative to keeping every parameter in f32.
+    pub fn memory_ratio(&self) -> f64 {
+        let full = self.num_params() * 4;
+        if full == 0 {
+            return 1.0;
+        }
+        self.memory_bytes() as f64 / full as f64
+    }
+
+    /// Decompress every variable (the transient full-precision copy).
+    pub fn decompress_all(&self) -> Vec<Vec<f32>> {
+        self.vars.iter().map(|v| v.decompress()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn fmt(s: &str) -> FloatFormat {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn compress_decompress_reduces_error_with_pvt() {
+        let mut g = Gen::new(1);
+        let v = g.vec_normal(4096, 0.02);
+        let with = StoredVar::compress(&v, fmt("S1E3M7"), true);
+        let without = StoredVar::compress(&v, fmt("S1E3M7"), false);
+        let e_with = transform::mse(&v, &with.decompress());
+        let e_without = transform::mse(&v, &without.decompress());
+        assert!(e_with <= e_without + 1e-12);
+        assert!(without.pvt().is_identity());
+    }
+
+    #[test]
+    fn fp32_stores_raw() {
+        let v = vec![0.1f32, 0.2, 0.3];
+        let sv = StoredVar::compress(&v, FloatFormat::FP32, true);
+        assert!(!sv.is_packed());
+        assert_eq!(sv.decompress(), v);
+        assert_eq!(sv.memory_bytes(), 12);
+    }
+
+    #[test]
+    fn tilde_values_are_fixed_points() {
+        let mut g = Gen::new(2);
+        let v = g.vec_normal(1000, 0.1);
+        let sv = StoredVar::compress(&v, fmt("S1E4M8"), true);
+        for x in sv.decode_tilde() {
+            assert!(quantize::is_representable(x, fmt("S1E4M8")));
+        }
+    }
+
+    #[test]
+    fn from_quantized_roundtrip() {
+        let mut g = Gen::new(3);
+        let v = quantize::quantize_vec(&g.vec_normal(500, 0.05), fmt("S1E3M7"));
+        let pvt = Pvt { s: 1.25, b: -0.5 };
+        let sv = StoredVar::from_quantized(&v, fmt("S1E3M7"), pvt).unwrap();
+        let tilde = sv.decode_tilde();
+        for (a, b) in tilde.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(sv.pvt(), pvt);
+    }
+
+    #[test]
+    fn memory_bytes_matches_formula() {
+        let mut g = Gen::new(4);
+        let n = 10_000;
+        let v = g.vec_normal(n, 0.1);
+        let f = fmt("S1E3M7");
+        let sv = StoredVar::compress(&v, f, true);
+        assert_eq!(sv.memory_bytes(), f.packed_bytes(n) + 8);
+    }
+
+    #[test]
+    fn model_memory_ratio_table2_shape() {
+        // all-weights model at S1E3M7, 90% quantized: ratio ~ 0.9*11/32+0.1
+        let mut g = Gen::new(5);
+        let f = fmt("S1E3M7");
+        let mut vars = Vec::new();
+        for i in 0..10 {
+            let v = g.vec_normal(50_000, 0.05);
+            vars.push(if i < 9 {
+                StoredVar::compress(&v, f, true)
+            } else {
+                StoredVar::raw(v)
+            });
+        }
+        let m = CompressedModel::new(vars);
+        let expect = 0.9 * 11.0 / 32.0 + 0.1;
+        assert!(
+            (m.memory_ratio() - expect).abs() < 0.01,
+            "{} vs {expect}",
+            m.memory_ratio()
+        );
+    }
+
+    #[test]
+    fn empty_model() {
+        let m = CompressedModel::default();
+        assert_eq!(m.memory_bytes(), 0);
+        assert_eq!(m.memory_ratio(), 1.0);
+    }
+}

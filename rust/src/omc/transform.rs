@@ -1,0 +1,216 @@
+//! Per-variable transformation (paper Sec. 2.3).
+//!
+//! After quantizing a variable `V` to `Ṽ`, fit `V̄ = s·Ṽ + b` minimizing
+//! `‖V̄ − V‖²`. Closed form (the paper's Eq. with its typo corrected — see
+//! DESIGN.md §1):
+//!
+//! ```text
+//! s = (n ΣVṼ − ΣV ΣṼ) / (n ΣṼ² − (ΣṼ)²)
+//! b = (ΣV − s ΣṼ) / n
+//! ```
+//!
+//! Accumulation in f64 (Sec. 2.3: "s and b are computed in the 64-bit
+//! floating-point precision"); the stored scalars are f32. Degenerate case
+//! (`Ṽ` constant ⇒ denominator 0) falls back to `s = 1`.
+
+/// The fitted per-variable transform. `(1.0, 0.0)` is the identity used for
+/// unquantized variables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pvt {
+    pub s: f32,
+    pub b: f32,
+}
+
+impl Pvt {
+    pub const IDENTITY: Pvt = Pvt { s: 1.0, b: 0.0 };
+
+    pub fn is_identity(&self) -> bool {
+        self.s == 1.0 && self.b == 0.0
+    }
+}
+
+/// Least-squares fit of `s·vt + b ≈ v` (both slices the same length).
+pub fn fit(v: &[f32], vt: &[f32]) -> Pvt {
+    assert_eq!(v.len(), vt.len());
+    let n = v.len();
+    if n == 0 {
+        return Pvt::IDENTITY;
+    }
+    let nf = n as f64;
+    let (mut sum_v, mut sum_t, mut sum_tt, mut sum_vt) = (0f64, 0f64, 0f64, 0f64);
+    for i in 0..n {
+        let a = v[i] as f64;
+        let t = vt[i] as f64;
+        sum_v += a;
+        sum_t += t;
+        sum_tt += t * t;
+        sum_vt += a * t;
+    }
+    let den = nf * sum_tt - sum_t * sum_t;
+    let num = nf * sum_vt - sum_v * sum_t;
+    let s_raw = num / den;
+    let s = if den == 0.0 || !s_raw.is_finite() {
+        1.0
+    } else {
+        s_raw
+    };
+    let b = (sum_v - s * sum_t) / nf;
+    Pvt {
+        s: s as f32,
+        b: b as f32,
+    }
+}
+
+/// Apply the transform in f32 — exactly what the lowered graph computes on
+/// decompression (`V̄ = s·Ṽ + b` with f32 scalars).
+pub fn apply(pvt: Pvt, vt: &[f32], out: &mut [f32]) {
+    assert_eq!(vt.len(), out.len());
+    if pvt.is_identity() {
+        out.copy_from_slice(vt);
+        return;
+    }
+    for (o, &t) in out.iter_mut().zip(vt) {
+        *o = pvt.s * t + pvt.b;
+    }
+}
+
+/// In-place variant of [`apply`].
+pub fn apply_in_place(pvt: Pvt, xs: &mut [f32]) {
+    if pvt.is_identity() {
+        return;
+    }
+    for x in xs.iter_mut() {
+        *x = pvt.s * *x + pvt.b;
+    }
+}
+
+/// Mean squared error between two slices, in f64 (used by tests/benches and
+/// the ablation analysis example).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0f64;
+    for i in 0..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omc::format::FloatFormat;
+    use crate::omc::quantize::quantize_vec;
+    use crate::testkit::{check, Gen};
+
+    #[test]
+    fn exact_affine_recovery() {
+        let mut g = Gen::new(1);
+        let v = g.vec_normal(4096, 1.0);
+        let vt: Vec<f32> = v.iter().map(|x| (x - 0.25) / 2.0).collect();
+        let p = fit(&v, &vt);
+        assert!((p.s - 2.0).abs() < 1e-4, "{p:?}");
+        assert!((p.b - 0.25).abs() < 1e-4, "{p:?}");
+    }
+
+    #[test]
+    fn degenerate_constant_vt() {
+        let v = [1.0f32, 2.0, 3.0, 4.0];
+        let vt = [2.0f32; 4];
+        let p = fit(&v, &vt);
+        assert_eq!(p.s, 1.0);
+        assert!((p.b - 0.5).abs() < 1e-6); // mean(v) - 2 = 0.5
+    }
+
+    #[test]
+    fn degenerate_empty_and_single() {
+        assert_eq!(fit(&[], &[]), Pvt::IDENTITY);
+        let p = fit(&[3.0], &[2.0]);
+        assert_eq!(p.s, 1.0);
+        assert!((p.b - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pvt_never_hurts_property() {
+        // least squares includes (1, 0): decompressed error <= raw error
+        check("pvt_never_hurts", 50, |g| {
+            let n = 2 + g.usize_below(5000);
+            let scale = [1e-3f32, 0.05, 1.0][g.usize_below(3)];
+            let v = g.vec_normal(n, scale);
+            let fmt = FloatFormat::new(
+                2 + g.usize_below(5) as u32,
+                g.usize_below(15) as u32,
+            )
+            .unwrap();
+            let vt = quantize_vec(&v, fmt);
+            let p = fit(&v, &vt);
+            let mut dec = vec![0.0; n];
+            apply(p, &vt, &mut dec);
+            let with = mse(&v, &dec);
+            let without = mse(&v, &vt);
+            if with <= without + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("mse with {with} > without {without} ({fmt})"))
+            }
+        });
+    }
+
+    #[test]
+    fn optimality_against_perturbations() {
+        let mut g = Gen::new(9);
+        let v = g.vec_normal(8192, 0.05);
+        let vt = quantize_vec(&v, FloatFormat::new(2, 3).unwrap());
+        let p = fit(&v, &vt);
+        let mut dec = vec![0.0; v.len()];
+        apply(p, &vt, &mut dec);
+        let best = mse(&v, &dec);
+        for (ds, db) in [(1e-3, 0.0), (-1e-3, 0.0), (0.0, 1e-4), (0.0, -1e-4)] {
+            let q = Pvt {
+                s: p.s + ds,
+                b: p.b + db,
+            };
+            apply(q, &vt, &mut dec);
+            assert!(mse(&v, &dec) >= best - 1e-15);
+        }
+    }
+
+    #[test]
+    fn apply_identity_is_copy() {
+        let vt = [1.0f32, 2.0, 3.0];
+        let mut out = [0.0f32; 3];
+        apply(Pvt::IDENTITY, &vt, &mut out);
+        assert_eq!(out, vt);
+    }
+
+    #[test]
+    fn apply_matches_in_place() {
+        let mut g = Gen::new(4);
+        let vt = g.vec_normal(100, 1.0);
+        let p = Pvt { s: 1.5, b: -0.25 };
+        let mut a = vec![0.0; 100];
+        apply(p, &vt, &mut a);
+        let mut b = vt.clone();
+        apply_in_place(p, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f64_accumulation_survives_large_offset() {
+        // badly-cancelling sums: values ~N(100, 1e-3) — f32 accumulation
+        // would lose the signal entirely
+        let mut g = Gen::new(10);
+        let v: Vec<f32> = (0..100_000)
+            .map(|_| 100.0 + g.f32_normalish(1e-3))
+            .collect();
+        let vt = quantize_vec(&v, FloatFormat::FP16);
+        let p = fit(&v, &vt);
+        assert!(p.s.is_finite() && p.b.is_finite());
+        let mut dec = vec![0.0; v.len()];
+        apply(p, &vt, &mut dec);
+        assert!(mse(&v, &dec) <= mse(&v, &vt) + 1e-12);
+    }
+}

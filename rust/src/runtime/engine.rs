@@ -1,0 +1,422 @@
+//! The PJRT execution engine and the typed bindings to each artifact.
+//!
+//! [`Engine`] owns the PJRT CPU client and compiles HLO-text artifacts once;
+//! [`LoadedModel`] binds the full artifact set of one model size (init /
+//! train_fp32 / train_omc / train_omc_nopvt / eval) against its manifest and
+//! exposes shape-checked entry points operating on plain `Vec<f32>`
+//! parameter lists — the representation the FL layer works with.
+//!
+//! Interchange is HLO text, not serialized protos: the crate's XLA
+//! (xla_extension 0.5.1) rejects jax≥0.5 64-bit instruction ids, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::manifest::Manifest;
+
+/// The PJRT client plus artifact compilation cache.
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        compile_hlo_text(&self.client, path)
+    }
+
+    /// Bind the artifact set for one model size directory. Compilation is
+    /// *lazy*: each graph compiles on first use, so a run only pays for the
+    /// artifacts it actually executes (an FP32 baseline never compiles the
+    /// OMC graph and vice versa).
+    pub fn load_model(&self, dir: &Path) -> Result<LoadedModel> {
+        let manifest = Manifest::load(dir)?;
+        crate::log_info!(
+            "binding model '{}' ({} vars, {} params) from {}",
+            manifest.config.name,
+            manifest.num_vars(),
+            manifest.total_params,
+            dir.display()
+        );
+        let lazy = |name: &str| -> LazyExecutable {
+            let file = manifest
+                .artifacts
+                .get(name)
+                .cloned()
+                .unwrap_or_else(|| format!("{name}.hlo.txt"));
+            LazyExecutable::new(dir.join(file))
+        };
+        Ok(LoadedModel {
+            dir: dir.to_path_buf(),
+            init: lazy("init"),
+            train_fp32: lazy("train_fp32"),
+            train_omc: lazy("train_omc"),
+            train_omc_nopvt: lazy("train_omc_nopvt"),
+            eval: lazy("eval"),
+            manifest,
+            engine_client: self.client.clone(),
+        })
+    }
+}
+
+/// Parse + compile one HLO-text file on a PJRT client.
+fn compile_hlo_text(client: &PjRtClient, path: &Path) -> Result<Executable> {
+    anyhow::ensure!(
+        path.exists(),
+        "artifact {} not found — run `make artifacts` first",
+        path.display()
+    );
+    let t = std::time::Instant::now();
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-UTF8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))?;
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    crate::log_debug!("compiled {name} in {:.1}s", t.elapsed().as_secs_f64());
+    Ok(Executable { exe, name })
+}
+
+/// A lazily-compiled artifact: the HLO text compiles on first use and is
+/// cached for the rest of the process.
+pub struct LazyExecutable {
+    path: PathBuf,
+    cell: std::cell::OnceCell<Executable>,
+}
+
+impl LazyExecutable {
+    fn new(path: PathBuf) -> Self {
+        Self {
+            path,
+            cell: std::cell::OnceCell::new(),
+        }
+    }
+
+    pub fn get(&self, client: &PjRtClient) -> Result<&Executable> {
+        if self.cell.get().is_none() {
+            let exe = compile_hlo_text(client, &self.path)?;
+            let _ = self.cell.set(exe);
+        }
+        Ok(self.cell.get().unwrap())
+    }
+}
+
+/// A compiled artifact.
+///
+/// NOTE: `PjRtLoadedExecutable` holds an `Rc` into the PJRT client, so it is
+/// `!Send` — everything that executes graphs is pinned to the thread that
+/// created the [`Engine`]. The FL layer therefore runs client *training*
+/// steps sequentially (the CPU plugin's device queue serializes them
+/// regardless) and parallelizes only the pure-Rust work (compression,
+/// codec, data generation) across the thread pool.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given operands; returns the unwrapped output tuple.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // artifacts are lowered with return_tuple=True
+        lit.to_tuple().context("unwrapping output tuple")
+    }
+}
+
+/// f32 tensor literal in HLO operand layout.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    if dims.len() == 1 {
+        return Ok(Literal::vec1(data));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 tensor literal.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    if dims.len() == 1 {
+        return Ok(Literal::vec1(data));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// scalar literals
+pub fn lit_f32_scalar(x: f32) -> Literal {
+    Literal::from(x)
+}
+
+pub fn lit_i32_scalar(x: i32) -> Literal {
+    Literal::from(x)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract an f32 scalar.
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// The bound artifact set for one model size (each graph compiles lazily on
+/// first use; see [`Engine::load_model`]).
+pub struct LoadedModel {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub init: LazyExecutable,
+    pub train_fp32: LazyExecutable,
+    pub train_omc: LazyExecutable,
+    pub train_omc_nopvt: LazyExecutable,
+    pub eval: LazyExecutable,
+    engine_client: PjRtClient,
+}
+
+/// Outputs of one OMC training step.
+pub struct OmcStepOut {
+    pub tildes: Vec<Vec<f32>>,
+    pub s: Vec<f32>,
+    pub b: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Outputs of one FP32 training step.
+pub struct Fp32StepOut {
+    pub params: Vec<Vec<f32>>,
+    pub loss: f32,
+}
+
+/// Outputs of one eval step.
+pub struct EvalOut {
+    pub loss: f32,
+    /// greedy framewise predictions, row-major [batch, seq_len]
+    pub pred: Vec<i32>,
+}
+
+impl LoadedModel {
+    pub fn num_vars(&self) -> usize {
+        self.manifest.num_vars()
+    }
+
+    /// Force-compile the executables a run will need (eval + the relevant
+    /// training graph), so compile time stays out of round timings.
+    pub fn warmup(&self, fp32_baseline: bool, use_pvt: bool) -> Result<()> {
+        self.eval.get(&self.engine_client)?;
+        if fp32_baseline {
+            self.train_fp32.get(&self.engine_client)?;
+        } else if use_pvt {
+            self.train_omc.get(&self.engine_client)?;
+        } else {
+            self.train_omc_nopvt.get(&self.engine_client)?;
+        }
+        Ok(())
+    }
+
+    fn var_dims(&self, i: usize) -> Vec<i64> {
+        self.manifest.variables[i]
+            .shape
+            .iter()
+            .map(|&d| d as i64)
+            .collect()
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.num_vars(),
+            "expected {} variables, got {}",
+            self.num_vars(),
+            params.len()
+        );
+        for (i, p) in params.iter().enumerate() {
+            let spec = &self.manifest.variables[i];
+            anyhow::ensure!(
+                p.len() == spec.size,
+                "variable {} ({}) has {} elements, expected {}",
+                i,
+                spec.name,
+                p.len(),
+                spec.size
+            );
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<()> {
+        let c = &self.manifest.config;
+        anyhow::ensure!(
+            x.len() == c.batch * c.seq_len * c.feature_dim,
+            "batch x has {} elements, expected {}",
+            x.len(),
+            c.batch * c.seq_len * c.feature_dim
+        );
+        anyhow::ensure!(
+            y.len() == c.batch * c.seq_len,
+            "batch y has {} elements, expected {}",
+            y.len(),
+            c.batch * c.seq_len
+        );
+        Ok(())
+    }
+
+    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<Literal>> {
+        params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| lit_f32(p, &self.var_dims(i)))
+            .collect()
+    }
+
+    fn batch_literals(&self, x: &[f32], y: &[i32]) -> Result<(Literal, Literal)> {
+        let c = &self.manifest.config;
+        Ok((
+            lit_f32(
+                x,
+                &[c.batch as i64, c.seq_len as i64, c.feature_dim as i64],
+            )?,
+            lit_i32(y, &[c.batch as i64, c.seq_len as i64])?,
+        ))
+    }
+
+    /// Run the init artifact: seed → initial parameters.
+    pub fn run_init(&self, seed: i32) -> Result<Vec<Vec<f32>>> {
+        let outs = self.init.get(&self.engine_client)?.run(&[lit_i32_scalar(seed)])?;
+        anyhow::ensure!(
+            outs.len() == self.num_vars(),
+            "init returned {} outputs, expected {}",
+            outs.len(),
+            self.num_vars()
+        );
+        outs.iter().map(to_f32_vec).collect()
+    }
+
+    /// One FP32 client step (the baseline path).
+    pub fn run_train_fp32(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<Fp32StepOut> {
+        self.check_params(params)?;
+        self.check_batch(x, y)?;
+        let mut args = self.param_literals(params)?;
+        let (lx, ly) = self.batch_literals(x, y)?;
+        args.push(lx);
+        args.push(ly);
+        args.push(lit_f32_scalar(lr));
+        let outs = self.train_fp32.get(&self.engine_client)?.run(&args)?;
+        let n = self.num_vars();
+        anyhow::ensure!(outs.len() == n + 1, "train_fp32 output arity");
+        Ok(Fp32StepOut {
+            params: outs[..n].iter().map(to_f32_vec).collect::<Result<_>>()?,
+            loss: to_f32_scalar(&outs[n])?,
+        })
+    }
+
+    /// One OMC client step (decompress → train → re-quantize + PVT).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_train_omc(
+        &self,
+        use_pvt: bool,
+        tildes: &[Vec<f32>],
+        s: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        exp_bits: u32,
+        mant_bits: u32,
+    ) -> Result<OmcStepOut> {
+        self.check_params(tildes)?;
+        self.check_batch(x, y)?;
+        let n = self.num_vars();
+        anyhow::ensure!(
+            s.len() == n && b.len() == n && mask.len() == n,
+            "s/b/mask must have {n} entries"
+        );
+        let mut args = self.param_literals(tildes)?;
+        args.push(lit_f32(s, &[n as i64])?);
+        args.push(lit_f32(b, &[n as i64])?);
+        args.push(lit_f32(mask, &[n as i64])?);
+        let (lx, ly) = self.batch_literals(x, y)?;
+        args.push(lx);
+        args.push(ly);
+        args.push(lit_f32_scalar(lr));
+        args.push(lit_i32_scalar(exp_bits as i32));
+        args.push(lit_i32_scalar(mant_bits as i32));
+        let exe = if use_pvt {
+            self.train_omc.get(&self.engine_client)?
+        } else {
+            self.train_omc_nopvt.get(&self.engine_client)?
+        };
+        let outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == n + 3, "train_omc output arity");
+        Ok(OmcStepOut {
+            tildes: outs[..n].iter().map(to_f32_vec).collect::<Result<_>>()?,
+            s: to_f32_vec(&outs[n])?,
+            b: to_f32_vec(&outs[n + 1])?,
+            loss: to_f32_scalar(&outs[n + 2])?,
+        })
+    }
+
+    /// One eval step: loss + greedy predictions.
+    pub fn run_eval(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut> {
+        self.check_params(params)?;
+        self.check_batch(x, y)?;
+        let mut args = self.param_literals(params)?;
+        let (lx, ly) = self.batch_literals(x, y)?;
+        args.push(lx);
+        args.push(ly);
+        let outs = self.eval.get(&self.engine_client)?.run(&args)?;
+        anyhow::ensure!(outs.len() == 2, "eval output arity");
+        Ok(EvalOut {
+            loss: to_f32_scalar(&outs[0])?,
+            pred: to_i32_vec(&outs[1])?,
+        })
+    }
+}

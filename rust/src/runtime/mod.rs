@@ -1,0 +1,9 @@
+//! PJRT runtime — loading and executing the AOT artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto` → compile → execute. One compiled executable per
+//! artifact; Python never runs here.
+
+pub mod engine;
+
+pub use engine::{Engine, LoadedModel};

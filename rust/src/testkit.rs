@@ -1,0 +1,130 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! [`Gen`] produces seeded random values with the distributions our
+//! invariants care about (normal-ish magnitudes, wide exponent ranges,
+//! special values), and [`check`] runs a property over many cases printing
+//! the failing seed so a failure reproduces with `Gen::new(seed)`.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Seeded random input generator for property tests.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(seed ^ 0x7E57_7E57_7E57_7E57),
+            seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.rng.next_below(n as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Normal(0, scale) — matches the magnitude profile of NN weights.
+    pub fn f32_normalish(&mut self, scale: f32) -> f32 {
+        (self.rng.next_normal() as f32) * scale
+    }
+
+    /// Wide-exponent f32: random sign/exponent/mantissa with exponent
+    /// spread over most of the f32 range plus occasional special values —
+    /// the adversarial distribution for quantizer properties.
+    pub fn f32_wide(&mut self) -> f32 {
+        match self.rng.next_below(20) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE,
+            3 => -f32::MIN_POSITIVE,
+            4 => f32::from_bits(1), // smallest subnormal
+            _ => {
+                let exp = self.rng.next_below(240) as u32 + 8; // biased 8..248
+                let frac = self.rng.next_u32() & 0x7F_FFFF;
+                let sign = (self.rng.next_u32() & 1) << 31;
+                f32::from_bits(sign | (exp << 23) | frac)
+            }
+        }
+    }
+
+    /// Vector of normal-ish values.
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_normalish(scale)).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the seed on failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name} failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_reproducible() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn wide_floats_cover_specials() {
+        let mut g = Gen::new(2);
+        let mut saw_zero = false;
+        let mut saw_sub = false;
+        for _ in 0..10_000 {
+            let x = g.f32_wide();
+            if x == 0.0 {
+                saw_zero = true;
+            }
+            if x != 0.0 && x.abs() < f32::MIN_POSITIVE {
+                saw_sub = true;
+            }
+            assert!(!x.is_nan());
+        }
+        assert!(saw_zero && saw_sub);
+    }
+
+    #[test]
+    fn check_reports_failures() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_| Err("nope".into()));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn check_passes_good_property() {
+        check("tautology", 10, |g| {
+            let x = g.f32_normalish(1.0);
+            if x.is_finite() {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,296 @@
+//! Declarative command-line flag parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, required
+//! arguments with defaults, and auto-generated `--help` text. Used by the
+//! main binary and every example/bench driver.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// A tiny declarative argument parser.
+///
+/// (`no_run`: doctest binaries don't inherit the rpath to
+/// libxla_extension.so, so they compile but cannot execute in this image.)
+///
+/// ```no_run
+/// use omc_fl::util::cli::Args;
+/// let mut args = Args::new("demo", "example parser");
+/// args.flag("rounds", "number of federated rounds", Some("100"));
+/// args.flag("format", "SxEyMz format", Some("S1E4M14"));
+/// args.bool_flag("verbose", "chatty logging");
+/// let m = args.parse_from(vec!["--rounds".into(), "25".into()]).unwrap();
+/// assert_eq!(m.get_usize("rounds").unwrap(), 25);
+/// assert_eq!(m.get("format").unwrap(), "S1E4M14");
+/// assert!(!m.get_bool("verbose"));
+/// ```
+pub struct Args {
+    prog: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+}
+
+/// Parsed flag values.
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    /// positional (non-flag) arguments in order
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(prog: &str, about: &str) -> Self {
+        Self {
+            prog: prog.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Register a value flag; `default = None` makes it required.
+    pub fn flag(&mut self, name: &str, help: &str, default: Option<&str>) -> &mut Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag (defaults to false).
+    pub fn bool_flag(&mut self, name: &str, help: &str) -> &mut Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.prog, self.about);
+        let _ = writeln!(out, "\nOptions:");
+        for s in &self.specs {
+            let tail = if s.is_bool {
+                String::new()
+            } else if let Some(d) = &s.default {
+                format!(" (default: {d})")
+            } else {
+                " (required)".to_string()
+            };
+            let _ = writeln!(out, "  --{:<24} {}{}", s.name, s.help, tail);
+        }
+        let _ = writeln!(out, "  --{:<24} {}", "help", "print this message");
+        out
+    }
+
+    /// Parse `std::env::args().skip(1)`. Exits with usage on `--help`.
+    pub fn parse(&self) -> Matches {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(m) => m,
+            Err(HelpOrError::Help) => {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(HelpOrError::Error(e)) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Pure parsing entry (testable; returns Err(Help) on --help).
+    pub fn parse_from(&self, argv: Vec<String>) -> Result<Matches, HelpOrError> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positional = Vec::new();
+        for s in &self.specs {
+            if s.is_bool {
+                bools.insert(s.name.clone(), false);
+            } else if let Some(d) = &s.default {
+                values.insert(s.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(HelpOrError::Help);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| HelpOrError::Error(format!("unknown flag --{name}")))?;
+                if spec.is_bool {
+                    if let Some(v) = inline {
+                        let b = v.parse::<bool>().map_err(|_| {
+                            HelpOrError::Error(format!("--{name} expects true/false"))
+                        })?;
+                        bools.insert(name, b);
+                    } else {
+                        bools.insert(name, true);
+                    }
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            HelpOrError::Error(format!("--{name} needs a value"))
+                        })?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        for s in &self.specs {
+            if !s.is_bool && !values.contains_key(&s.name) {
+                return Err(HelpOrError::Error(format!("--{} is required", s.name)));
+            }
+        }
+        Ok(Matches {
+            values,
+            bools,
+            positional,
+        })
+    }
+}
+
+#[derive(Debug)]
+pub enum HelpOrError {
+    Help,
+    Error(String),
+}
+
+impl std::fmt::Display for HelpOrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HelpOrError::Help => write!(f, "help requested"),
+            HelpOrError::Error(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: {v:?} is not an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: {v:?} is not a u64"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: {v:?} is not a number"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> anyhow::Result<f32> {
+        Ok(self.get_f64(name)? as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        let mut a = Args::new("t", "test");
+        a.flag("rounds", "rounds", Some("10"));
+        a.flag("name", "required name", None);
+        a.bool_flag("fast", "go fast");
+        a
+    }
+
+    fn parse(argv: &[&str]) -> Result<Matches, HelpOrError> {
+        args().parse_from(argv.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let m = parse(&["--name", "x"]).unwrap();
+        assert_eq!(m.get_usize("rounds").unwrap(), 10);
+        assert_eq!(m.get("name"), Some("x"));
+        assert!(!m.get_bool("fast"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bools() {
+        let m = parse(&["--name=y", "--rounds=42", "--fast"]).unwrap();
+        assert_eq!(m.get_usize("rounds").unwrap(), 42);
+        assert!(m.get_bool("fast"));
+        let m = parse(&["--name=y", "--fast=false"]).unwrap();
+        assert!(!m.get_bool("fast"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(matches!(parse(&[]), Err(HelpOrError::Error(_))));
+    }
+
+    #[test]
+    fn unknown_flag() {
+        let e = parse(&["--name", "x", "--nope"]);
+        assert!(matches!(e, Err(HelpOrError::Error(_))));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(parse(&["-h"]), Err(HelpOrError::Help)));
+    }
+
+    #[test]
+    fn positional_passthrough() {
+        let m = parse(&["--name", "x", "pos1", "pos2"]).unwrap();
+        assert_eq!(m.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let u = args().usage();
+        assert!(u.contains("--rounds"));
+        assert!(u.contains("(required)"));
+        assert!(u.contains("default: 10"));
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let m = parse(&["--name", "x", "--rounds", "abc"]).unwrap();
+        assert!(m.get_usize("rounds").is_err());
+    }
+}

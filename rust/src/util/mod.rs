@@ -1,0 +1,13 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `tokio`, …) are unavailable; these modules are
+//! small, tested replacements for exactly the slices of functionality the
+//! coordinator needs.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;
+pub mod toml;

@@ -1,0 +1,129 @@
+//! Scoped thread pool for simulated federated clients (no `tokio`/`rayon`
+//! offline).
+//!
+//! The coordinator dispatches one job per sampled client per round. Jobs are
+//! closures returning `R`; `scope_map` preserves input order in the output.
+//! On this 1-core testbed the pool mostly provides *structural* concurrency
+//! (and exercises the same code path a many-core host would use), sized by
+//! `available_parallelism`.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `f(i, &items[i])` for every item on `workers` threads, collecting
+/// results in input order. Panics in workers propagate as `Err`.
+pub fn scope_map<T, R, F>(items: &[T], workers: usize, f: F) -> anyhow::Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(n);
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= n {
+                        break;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(i, &items[i])
+                }));
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panicked = false;
+        for (i, res) in rx {
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(_) => panicked = true,
+            }
+        }
+        if panicked {
+            anyhow::bail!("worker job panicked");
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    })
+}
+
+/// Default worker count: one per available core (min 1).
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = scope_map(&items, 4, |_, &x| x * 2).unwrap();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..57).collect();
+        let _ = scope_map(&items, 8, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 57);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = scope_map(&Vec::<u32>::new(), 4, |_, _| 1).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_matches_many() {
+        let items: Vec<u64> = (0..31).collect();
+        let a = scope_map(&items, 1, |i, &x| x + i as u64).unwrap();
+        let b = scope_map(&items, 7, |i, &x| x + i as u64).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn panic_propagates_as_error() {
+        let items = vec![1, 2, 3];
+        let r = scope_map(&items, 2, |_, &x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = vec![5u32];
+        let out = scope_map(&items, 16, |_, &x| x).unwrap();
+        assert_eq!(out, vec![5]);
+    }
+}

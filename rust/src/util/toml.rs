@@ -1,0 +1,281 @@
+//! TOML-subset parser for experiment configs (no `toml` crate offline).
+//!
+//! Supported grammar — everything the configs in `configs/` use:
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Values land in a flat `section.key -> Value` map, which the typed config
+//! layer (`coordinator::config`) consumes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flat `section.key` map; keys in the root table have no prefix.
+pub type Table = BTreeMap<String, Value>;
+
+pub fn parse(input: &str) -> Result<Table, TomlError> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: ln + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let vtxt = line[eq + 1..].trim();
+        let value = parse_value(vtxt).map_err(|m| err(&m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if table.insert(full.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key {full:?}")));
+        }
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(txt: &str) -> Result<Value, String> {
+    if txt.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = txt.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        // minimal escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if let Some(inner) = txt.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    match txt {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = txt.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = txt.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {txt:?}"))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_config_shape() {
+        let txt = r#"
+            # experiment
+            name = "table1"
+            rounds = 300
+
+            [omc]
+            format = "S1E4M14"
+            quantize_fraction = 0.9   # PPQ
+            weights_only = true
+
+            [fl]
+            clients = 64
+            clients_per_round = 16
+            lrs = [0.1, 0.05]
+        "#;
+        let t = parse(txt).unwrap();
+        assert_eq!(t["name"].as_str(), Some("table1"));
+        assert_eq!(t["rounds"].as_i64(), Some(300));
+        assert_eq!(t["omc.format"].as_str(), Some("S1E4M14"));
+        assert_eq!(t["omc.quantize_fraction"].as_f64(), Some(0.9));
+        assert_eq!(t["omc.weights_only"].as_bool(), Some(true));
+        assert_eq!(t["fl.lrs"].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(t["x"].as_i64(), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse("s = \"a#b\"").unwrap();
+        assert_eq!(t["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(t["s"].as_str(), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse(r#"a = [1, 2, 3]
+                         b = ["x", "y,z"]
+                         c = []"#)
+        .unwrap();
+        assert_eq!(t["a"].as_arr().unwrap().len(), 3);
+        assert_eq!(t["b"].as_arr().unwrap()[1].as_str(), Some("y,z"));
+        assert!(t["c"].as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = 1\ny =").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[bad\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("x = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let t = parse("n = 1_000_000").unwrap();
+        assert_eq!(t["n"].as_i64(), Some(1_000_000));
+    }
+}

@@ -1,0 +1,27 @@
+//! Shared helpers for integration tests (which need `make artifacts`).
+
+use std::path::PathBuf;
+
+/// Repo root (tests run with CWD = crate root).
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    repo_root().join("artifacts")
+}
+
+/// Skip (returning true) when artifacts have not been built. CI and the
+/// Makefile always build them; this keeps a bare `cargo test` usable.
+pub fn artifacts_missing(sub: &str) -> bool {
+    let p = artifacts_dir().join(sub);
+    if p.exists() {
+        false
+    } else {
+        eprintln!(
+            "SKIP: {} not found — run `make artifacts` first",
+            p.display()
+        );
+        true
+    }
+}

@@ -1,0 +1,105 @@
+//! Cross-layer bit-exactness: the Rust OMC codec vs the Pallas kernel.
+//!
+//! Executes `artifacts/quant.hlo.txt` (the standalone L1 quantizer, lowered
+//! from the Pallas kernel) on the PJRT CPU client and asserts the outputs
+//! equal `omc::quantize` **bit for bit** across formats and input
+//! distributions. This is the invariant that lets quantized values cross
+//! the wire bit-packed (DESIGN.md §6).
+
+mod common;
+
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::pack;
+use omc_fl::omc::quantize::quantize_vec;
+use omc_fl::runtime::engine::{lit_f32, lit_i32_scalar, to_f32_vec, Engine};
+use omc_fl::util::rng::Xoshiro256pp;
+
+const N: usize = 8192; // must match aot.QUANT_TEST_N
+
+fn gen_inputs(seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut v = vec![0.0f32; N];
+    rng.fill_normal(&mut v, scale);
+    // sprinkle special values
+    v[0] = 0.0;
+    v[1] = -0.0;
+    v[2] = f32::MIN_POSITIVE;
+    v[3] = -f32::MIN_POSITIVE / 2.0;
+    v[4] = 3.4e38;
+    v[5] = -3.4e38;
+    v
+}
+
+#[test]
+fn rust_codec_matches_pallas_kernel_bitexact() {
+    if common::artifacts_missing("quant.hlo.txt") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let exe = engine
+        .load_hlo_text(&common::artifacts_dir().join("quant.hlo.txt"))
+        .unwrap();
+    for fmt_s in [
+        "S1E8M23", "S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3", "S1E3M9",
+        "S1E4M8", "S1E5M7",
+    ] {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        for (seed, scale) in [(1u64, 0.05f32), (2, 1.0), (3, 1e-4), (4, 300.0)] {
+            let v = gen_inputs(seed, scale);
+            let outs = exe
+                .run(&[
+                    lit_f32(&v, &[N as i64]).unwrap(),
+                    lit_i32_scalar(fmt.exp_bits as i32),
+                    lit_i32_scalar(fmt.mant_bits as i32),
+                ])
+                .unwrap();
+            let kernel = to_f32_vec(&outs[0]).unwrap();
+            let rust = quantize_vec(&v, fmt);
+            let mut mismatches = 0;
+            for i in 0..N {
+                if kernel[i].to_bits() != rust[i].to_bits() {
+                    if mismatches < 5 {
+                        eprintln!(
+                            "{fmt_s} seed {seed} idx {i}: x={:e} kernel={:e}({:#010x}) rust={:e}({:#010x})",
+                            v[i],
+                            kernel[i],
+                            kernel[i].to_bits(),
+                            rust[i],
+                            rust[i].to_bits()
+                        );
+                    }
+                    mismatches += 1;
+                }
+            }
+            assert_eq!(mismatches, 0, "{fmt_s} seed {seed}: {mismatches}/{N}");
+        }
+    }
+}
+
+#[test]
+fn kernel_outputs_pack_without_loss() {
+    // end-to-end: kernel-quantized values must survive the Rust bit-packer
+    if common::artifacts_missing("quant.hlo.txt") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let exe = engine
+        .load_hlo_text(&common::artifacts_dir().join("quant.hlo.txt"))
+        .unwrap();
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let v = gen_inputs(7, 0.05);
+    let outs = exe
+        .run(&[
+            lit_f32(&v, &[N as i64]).unwrap(),
+            lit_i32_scalar(3),
+            lit_i32_scalar(7),
+        ])
+        .unwrap();
+    let kernel = to_f32_vec(&outs[0]).unwrap();
+    let bytes = pack::pack(&kernel, fmt).expect("kernel output must be packable");
+    assert_eq!(bytes.len(), fmt.packed_bytes(N));
+    let back = pack::unpack(&bytes, N, fmt);
+    for i in 0..N {
+        assert_eq!(back[i].to_bits(), kernel[i].to_bits(), "idx {i}");
+    }
+}

@@ -1,0 +1,180 @@
+//! End-to-end federated runs on the tiny model: learning, determinism,
+//! communication accounting, checkpointing, and the FP32-vs-OMC parity
+//! shape at small scale.
+
+mod common;
+
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::{params_io, Experiment};
+use omc_fl::data::partition::Partition;
+use omc_fl::runtime::engine::Engine;
+
+fn base_cfg(name: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_with(
+        name,
+        &common::artifacts_dir().join("tiny"),
+    );
+    cfg.rounds = rounds;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 1;
+    cfg.lr = 0.1;
+    cfg.eval_every = rounds; // evaluate once at the end
+    cfg.eval_batches = 4;
+    cfg.output_dir = std::env::temp_dir().join("omc_fl_test_results");
+    cfg
+}
+
+#[test]
+fn fp32_run_learns_and_is_deterministic() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+
+    let run = |seed: u64| {
+        let mut cfg = base_cfg("fp32", 6);
+        cfg.seed = seed;
+        let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+        let (rec, summary) = exp.run().unwrap();
+        (rec, summary, exp.server.params.clone())
+    };
+
+    let (rec, summary, params_a) = run(5);
+    assert_eq!(rec.records.len(), 6);
+    // loss decreases over the run
+    let first = rec.records.first().unwrap().train_loss;
+    let last = rec.records.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+    assert!(summary.final_wer.is_finite());
+    // FP32 communicates 4 bytes/param each way (+ small headers)
+    let n_params = 26_272; // tiny model
+    let per_round_min = (2 * 4 * n_params * 4) as usize; // 4 clients
+    let r0 = &rec.records[0];
+    assert!(r0.down_bytes + r0.up_bytes >= per_round_min);
+    assert!((summary.memory_ratio - 1.0).abs() < 1e-9);
+
+    // exact replay with the same seed
+    let (_, _, params_b) = run(5);
+    for (a, b) in params_a.iter().zip(&params_b) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn omc_run_learns_with_reduced_communication() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = base_cfg("omc_s1e4m14", 6);
+    cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let expected_ratio = exp.client_param_bytes() as f64
+        / (exp.model.manifest.total_params * 4) as f64;
+    let (rec, summary) = exp.run().unwrap();
+    let first = rec.records.first().unwrap().train_loss;
+    let last = rec.records.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+
+    // communication ratio ~= memory ratio (tiny model has ~93% weight
+    // fraction, so the exact value differs from the paper's 64%; the
+    // *accounting identity* is what we assert here)
+    let fp32_round_bytes = (2 * 4 * exp.model.manifest.total_params
+        * exp.cfg.clients_per_round) as f64;
+    let measured = (rec.records[0].down_bytes + rec.records[0].up_bytes) as f64;
+    let measured_ratio = measured / fp32_round_bytes;
+    assert!(
+        (measured_ratio - expected_ratio).abs() < 0.02,
+        "measured {measured_ratio:.4} vs accounted {expected_ratio:.4}"
+    );
+    assert!(summary.memory_ratio < 0.75);
+}
+
+#[test]
+fn noniid_partition_runs() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = base_cfg("noniid", 4);
+    cfg.partition = Partition::BySpeaker;
+    cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, _) = exp.run().unwrap();
+    assert_eq!(rec.records.len(), 4);
+    assert!(rec.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_adaptation() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let ckpt = std::env::temp_dir().join(format!(
+        "omc_fl_ckpt_{}.bin",
+        std::process::id()
+    ));
+
+    // pretrain on domain 0, save
+    let mut cfg = base_cfg("pretrain", 4);
+    cfg.save_to = Some(ckpt.clone());
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    exp.run().unwrap();
+    let saved = exp.server.params.clone();
+
+    // checkpoint content matches the in-memory final model
+    let loaded = params_io::load(&ckpt).unwrap();
+    for (a, b) in saved.iter().zip(&loaded) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    // adaptation: init_from the checkpoint, train on domain 1
+    let mut cfg = base_cfg("adapt", 3);
+    cfg.init_from = Some(ckpt.clone());
+    cfg.domain = 1;
+    cfg.omc = OmcConfig::paper("S1E3M7".parse().unwrap());
+    let mut exp2 = Experiment::prepare(&engine, cfg).unwrap();
+    // server starts exactly at the checkpoint
+    for (a, b) in exp2.server.params.iter().zip(&saved) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    let (rec, _) = exp2.run().unwrap();
+    assert!(rec.records.iter().all(|r| r.train_loss.is_finite()));
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn ppq_fraction_drives_bytes_monotonically() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut bytes = Vec::new();
+    for frac in [0.25, 0.5, 0.9, 1.0] {
+        let mut cfg = base_cfg(&format!("frac{frac}"), 1);
+        cfg.omc = OmcConfig {
+            format: "S1E3M7".parse().unwrap(),
+            use_pvt: true,
+            weights_only: true,
+            fraction: frac,
+        };
+        let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+        let (rec, _) = exp.run().unwrap();
+        bytes.push(rec.records[0].down_bytes);
+    }
+    assert!(
+        bytes.windows(2).all(|w| w[0] > w[1]),
+        "more quantization => fewer bytes: {bytes:?}"
+    );
+}

@@ -1,0 +1,173 @@
+//! Runtime integration: the tiny model's full artifact set through PJRT.
+//!
+//! Covers the L3↔L2 contract: init determinism, training-step semantics
+//! (loss decreases, OMC outputs are exactly representable, masks respected),
+//! eval outputs, and shape validation errors.
+
+mod common;
+
+use omc_fl::data::synth::{Domain, TaskConfig};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::quantize::is_representable;
+use omc_fl::runtime::engine::{Engine, LoadedModel};
+use omc_fl::util::rng::Xoshiro256pp;
+
+fn load_tiny(engine: &Engine) -> LoadedModel {
+    engine
+        .load_model(&common::artifacts_dir().join("tiny"))
+        .unwrap()
+}
+
+fn task_for(model: &LoadedModel, seed: u64) -> (Domain, Xoshiro256pp) {
+    let mc = &model.manifest.config;
+    let task = TaskConfig::from_model(mc.vocab, mc.feature_dim, mc.seq_len, seed);
+    (Domain::new(&task, 0), Xoshiro256pp::new(seed))
+}
+
+#[test]
+fn full_runtime_contract() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load_tiny(&engine);
+    let n = model.num_vars();
+    let mc = model.manifest.config.clone();
+
+    // ---- init: deterministic in the seed, correct shapes ----------------
+    let p1 = model.run_init(7).unwrap();
+    let p2 = model.run_init(7).unwrap();
+    let p3 = model.run_init(8).unwrap();
+    assert_eq!(p1.len(), n);
+    for (i, spec) in model.manifest.variables.iter().enumerate() {
+        assert_eq!(p1[i].len(), spec.size, "{}", spec.name);
+        assert_eq!(
+            p1[i].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            p2[i].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    assert!(
+        p1.iter()
+            .zip(&p3)
+            .any(|(a, b)| a.iter().zip(b).any(|(x, y)| x != y)),
+        "different seeds must differ"
+    );
+
+    // ---- fp32 training reduces loss -------------------------------------
+    let (domain, mut rng) = task_for(&model, 11);
+    let speakers: Vec<usize> = (0..8).collect();
+    let mut params = p1.clone();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let b = domain.batch(&speakers, mc.batch, &mut rng);
+        let out = model.run_train_fp32(&params, &b.x, &b.y, 0.1).unwrap();
+        params = out.params;
+        last = out.loss;
+        first.get_or_insert(out.loss);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.8,
+        "fp32 loss did not decrease: {first} -> {last}"
+    );
+
+    // ---- OMC step: representability + mask semantics --------------------
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let mask: Vec<f32> = model
+        .manifest
+        .variables
+        .iter()
+        .map(|v| {
+            if v.kind == omc_fl::model::manifest::VarKind::Weight {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let s = vec![1.0f32; n];
+    let bb = vec![0.0f32; n];
+    let b = domain.batch(&speakers, mc.batch, &mut rng);
+    let out = model
+        .run_train_omc(
+            true, &params, &s, &bb, &mask, &b.x, &b.y, 0.05, fmt.exp_bits,
+            fmt.mant_bits,
+        )
+        .unwrap();
+    assert!(out.loss.is_finite());
+    for i in 0..n {
+        if mask[i] > 0.5 {
+            for (j, &x) in out.tildes[i].iter().enumerate() {
+                assert!(
+                    is_representable(x, fmt),
+                    "var {i} ({}) elem {j} = {x:e} not representable",
+                    model.manifest.variables[i].name
+                );
+            }
+        } else {
+            assert_eq!(out.s[i], 1.0, "unselected var {i} must keep s=1");
+            assert_eq!(out.b[i], 0.0, "unselected var {i} must keep b=0");
+        }
+    }
+
+    // ---- OMC with zero mask == fp32 step (tight tolerance) --------------
+    let zero_mask = vec![0.0f32; n];
+    let omc_out = model
+        .run_train_omc(
+            true, &params, &s, &bb, &zero_mask, &b.x, &b.y, 0.1, 3, 7,
+        )
+        .unwrap();
+    let fp_out = model.run_train_fp32(&params, &b.x, &b.y, 0.1).unwrap();
+    assert!((omc_out.loss - fp_out.loss).abs() < 1e-5);
+    for i in 0..n {
+        for (a, c) in omc_out.tildes[i].iter().zip(&fp_out.params[i]) {
+            assert!(
+                (a - c).abs() <= 1e-5 * c.abs().max(1e-3),
+                "var {i}: {a} vs {c}"
+            );
+        }
+    }
+
+    // ---- eval outputs ----------------------------------------------------
+    let ev = model.run_eval(&params, &b.x, &b.y).unwrap();
+    assert!(ev.loss.is_finite());
+    assert_eq!(ev.pred.len(), mc.batch * mc.seq_len);
+    assert!(ev
+        .pred
+        .iter()
+        .all(|&t| t >= 0 && (t as usize) < mc.vocab));
+
+    // ---- shape validation errors -----------------------------------------
+    let mut bad = params.clone();
+    bad[0].pop();
+    assert!(model.run_train_fp32(&bad, &b.x, &b.y, 0.1).is_err());
+    assert!(model
+        .run_train_fp32(&params, &b.x[..b.x.len() - 1], &b.y, 0.1)
+        .is_err());
+    assert!(model
+        .run_train_omc(true, &params, &s[..n - 1], &bb, &mask, &b.x, &b.y, 0.1, 3, 7)
+        .is_err());
+}
+
+#[test]
+fn nopvt_artifact_keeps_identity_transform() {
+    if common::artifacts_missing("tiny") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load_tiny(&engine);
+    let n = model.num_vars();
+    let mc = model.manifest.config.clone();
+    let params = model.run_init(1).unwrap();
+    let (domain, mut rng) = task_for(&model, 2);
+    let b = domain.batch(&[0, 1], mc.batch, &mut rng);
+    let mask = vec![1.0f32; n];
+    let s = vec![1.0f32; n];
+    let bb = vec![0.0f32; n];
+    let out = model
+        .run_train_omc(false, &params, &s, &bb, &mask, &b.x, &b.y, 0.05, 3, 7)
+        .unwrap();
+    assert!(out.s.iter().all(|&x| x == 1.0));
+    assert!(out.b.iter().all(|&x| x == 0.0));
+}
