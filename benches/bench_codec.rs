@@ -3,7 +3,7 @@
 
 use omc_fl::benchkit::{consume, Suite};
 use omc_fl::fl::client::make_downlink;
-use omc_fl::omc::codec::{decode, encode};
+use omc_fl::omc::codec::{decode, decode_decompressed, encode, Encoder};
 use omc_fl::omc::format::FloatFormat;
 use omc_fl::omc::store::{CompressedModel, StoredVar};
 use omc_fl::util::rng::Xoshiro256pp;
@@ -43,6 +43,9 @@ fn main() {
     suite.bench("decode + decompress_all", Some(total), || {
         consume(decode(&wire).unwrap().decompress_all());
     });
+    suite.bench("decode_decompressed (fused)", Some(total), || {
+        consume(decode_decompressed(&wire).unwrap());
+    });
 
     let model = CompressedModel::new(
         global
@@ -60,6 +63,10 @@ fn main() {
     suite.bench("encode (pre-compressed model)", Some(total), || {
         consume(encode(&model));
     });
+    let mut enc = Encoder::new();
+    suite.bench("encode (recycled Encoder buf)", Some(total), || {
+        consume(enc.encode(&model).len());
+    });
 
-    suite.report();
+    suite.finish("BENCH_codec.json");
 }

@@ -1,16 +1,27 @@
 //! Bit-packing throughput — turning quantized values into the wire/memory
-//! representation and back.
+//! representation and back. Compares the scalar reference path against the
+//! block/word kernels, the fused pipelines, and the threaded variants (the
+//! acceptance gate for the block-codec work: pack+unpack ≥ 2x scalar on
+//! S1E5M10 and S1E3M7).
+//!
+//! Set `OMC_BENCH_JSON=1` to also write `BENCH_pack.json` for cross-PR
+//! tracking.
 
 use omc_fl::benchkit::{consume, Suite};
 use omc_fl::omc::format::FloatFormat;
-use omc_fl::omc::pack::{pack, unpack};
+use omc_fl::omc::pack::{
+    pack, pack_scalar, pack_threaded, quantize_transform_pack, unpack,
+    unpack_scalar, unpack_transform_into, unpack_transform_into_threaded,
+};
 use omc_fl::omc::quantize::quantize_vec;
 use omc_fl::util::rng::Xoshiro256pp;
+use omc_fl::util::threadpool::default_workers;
 
 fn main() {
     let mut suite = Suite::new("omc::pack / unpack throughput");
     let mut rng = Xoshiro256pp::new(2);
     let n = 262_144usize;
+    let workers = default_workers();
 
     for fmt_s in ["S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3"] {
         let fmt: FloatFormat = fmt_s.parse().unwrap();
@@ -18,13 +29,52 @@ fn main() {
         rng.fill_normal(&mut v, 0.05);
         let q = quantize_vec(&v, fmt);
         let bytes = pack(&q, fmt).unwrap();
-        suite.bench(&format!("pack   {fmt_s} n={n}"), Some(n), || {
+
+        suite.bench(&format!("pack scalar   {fmt_s} n={n}"), Some(n), || {
+            consume(pack_scalar(&q, fmt).unwrap());
+        });
+        suite.bench(&format!("pack block    {fmt_s} n={n}"), Some(n), || {
             consume(pack(&q, fmt).unwrap());
         });
-        suite.bench(&format!("unpack {fmt_s} n={n}"), Some(n), || {
+        let mut payload = Vec::new();
+        suite.bench(&format!("fused q+f+p   {fmt_s} n={n}"), Some(n), || {
+            payload.clear();
+            consume(quantize_transform_pack(&v, fmt, true, &mut payload));
+        });
+        if workers > 1 {
+            suite.bench(
+                &format!("pack thr({workers})   {fmt_s} n={n}"),
+                Some(n),
+                || {
+                    consume(pack_threaded(&q, fmt, workers).unwrap());
+                },
+            );
+        }
+
+        suite.bench(&format!("unpack scalar {fmt_s} n={n}"), Some(n), || {
+            consume(unpack_scalar(&bytes, n, fmt));
+        });
+        suite.bench(&format!("unpack block  {fmt_s} n={n}"), Some(n), || {
             consume(unpack(&bytes, n, fmt));
         });
+        let mut out = Vec::new();
+        suite.bench(&format!("unpack+xform  {fmt_s} n={n}"), Some(n), || {
+            unpack_transform_into(&bytes, n, fmt, 1.25, -0.5, &mut out);
+            consume(&out);
+        });
+        if workers > 1 {
+            suite.bench(
+                &format!("unpack thr({workers}) {fmt_s} n={n}"),
+                Some(n),
+                || {
+                    unpack_transform_into_threaded(
+                        &bytes, n, fmt, 1.25, -0.5, workers, &mut out,
+                    );
+                    consume(&out);
+                },
+            );
+        }
     }
 
-    suite.report();
+    suite.finish("BENCH_pack.json");
 }

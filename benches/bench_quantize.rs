@@ -31,5 +31,5 @@ fn main() {
         consume(quantize_vec(&v, FloatFormat::FP32));
     });
 
-    suite.report();
+    suite.finish("BENCH_quantize.json");
 }

@@ -42,7 +42,7 @@ fn main() {
         });
     }
 
-    suite.report();
+    suite.finish("BENCH_round.json");
     println!(
         "The FP32-vs-OMC ratio here is the Tables' Speed column \
          (paper: OMC ~91-93% of FP32)."

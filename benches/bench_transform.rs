@@ -27,5 +27,5 @@ fn main() {
         });
     }
 
-    suite.report();
+    suite.finish("BENCH_transform.json");
 }

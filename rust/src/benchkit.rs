@@ -8,6 +8,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use crate::metrics::stats::{median_abs_dev, percentile};
+use crate::util::json::{self, Json};
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -126,6 +127,63 @@ impl Suite {
         }
         println!();
     }
+
+    /// Serialize the results as a JSON object (machine-readable companion
+    /// to the markdown table, used to track the perf trajectory across
+    /// PRs).
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("median_ns", json::num(r.median_ns)),
+                    ("mad_ns", json::num(r.mad_ns)),
+                    ("iters", json::num(r.iters as f64)),
+                    (
+                        "elems",
+                        r.elems.map(|e| json::num(e as f64)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "melem_per_s",
+                        r.throughput_m_elems_s()
+                            .map(json::num)
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write the machine-readable results to `path`.
+    pub fn write_json_to(&self, path: &std::path::Path) {
+        match std::fs::write(path, self.to_json().to_string()) {
+            Ok(()) => eprintln!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+        }
+    }
+
+    /// Report, then — when `OMC_BENCH_JSON` is set — also write the
+    /// machine-readable results. `OMC_BENCH_JSON=1` (or empty) writes
+    /// `file_name` into the current directory (the repo root under
+    /// `cargo bench`); any other value is treated as the target directory.
+    pub fn finish(&self, file_name: &str) {
+        self.report();
+        let Ok(dest) = std::env::var("OMC_BENCH_JSON") else {
+            return;
+        };
+        let path = if dest.is_empty() || dest == "1" {
+            std::path::PathBuf::from(file_name)
+        } else {
+            std::path::Path::new(&dest).join(file_name)
+        };
+        self.write_json_to(&path);
+    }
 }
 
 /// Re-export for bench binaries.
@@ -163,6 +221,50 @@ mod tests {
         assert!(fmt_ns(1.2e4).contains("µs"));
         assert!(fmt_ns(3.4e6).contains("ms"));
         assert!(fmt_ns(2.1e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_output_roundtrips() {
+        std::env::set_var("OMC_BENCH_FAST", "1");
+        let mut s = Suite::new("json test");
+        s.bench("case_a", Some(100), || {
+            consume(41 + 1);
+        });
+        let j = s.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("title").unwrap().as_str(),
+            Some("json test")
+        );
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str(),
+            Some("case_a")
+        );
+        assert!(results[0].get("melem_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_produces_parseable_file() {
+        // the injected-path writer finish() delegates to; no env mutation
+        // here (set_var races with concurrent env reads on the default
+        // multi-threaded test harness)
+        std::env::set_var("OMC_BENCH_FAST", "1");
+        let dir = std::env::temp_dir().join(format!(
+            "omc_bench_json_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Suite::new("file test");
+        s.bench("c", None, || {
+            consume(1);
+        });
+        let path = dir.join("BENCH_test.json");
+        s.write_json_to(&path);
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(&txt).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::coordinator::params_io;
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::{collapse_words, Domain, TaskConfig};
 use crate::fl::client::ClientTrainConfig;
-use crate::fl::round::{run_round, RoundContext};
+use crate::fl::round::{run_round, RoundContext, RoundScratch};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::Server;
 use crate::metrics::recorder::{Recorder, RoundRecord};
@@ -28,6 +28,8 @@ pub struct Experiment {
     pub assignment: ClientAssignment,
     pub sampler: Sampler,
     pub server: Server,
+    /// codec buffers reused across rounds (zero-alloc steady state)
+    scratch: RoundScratch,
 }
 
 /// Final summary, one per experiment run (a row of a paper table).
@@ -105,6 +107,7 @@ impl Experiment {
             assignment,
             sampler,
             server,
+            scratch: RoundScratch::new(),
         })
     }
 
@@ -212,7 +215,7 @@ impl Experiment {
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };
-        let outcome = run_round(&ctx, &mut self.server)?;
+        let outcome = run_round(&ctx, &mut self.server, &mut self.scratch)?;
         Ok((outcome.mean_loss, outcome.down_bytes + outcome.up_bytes))
     }
 
@@ -245,7 +248,7 @@ impl Experiment {
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
             };
-            let outcome = run_round(&ctx, &mut self.server)?;
+            let outcome = run_round(&ctx, &mut self.server, &mut self.scratch)?;
             let round_seconds = t.elapsed_s();
             let (wer, eval_loss) = if (r + 1) % self.cfg.eval_every == 0
                 || r + 1 == self.cfg.rounds

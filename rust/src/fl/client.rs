@@ -6,16 +6,34 @@
 //! lowered OMC training graph (which decompresses on the fly, updates, and
 //! re-compresses), and re-packs the returned Ṽ' for the uplink. The FP32
 //! baseline path stores and ships raw f32.
+//!
+//! # Zero-alloc round contract (§Perf)
+//!
+//! In the steady state, `run_client_round` performs **no per-variable heap
+//! allocation for codec buffers**:
+//!
+//! * the downlink is decoded *streaming* (`codec::for_each_var`) straight
+//!   into [`ClientScratch`] buffers whose capacity persists across rounds —
+//!   no `CompressedModel`, no per-variable `Vec` churn;
+//! * the uplink is emitted *streaming* (`WireWriter::packed_values` /
+//!   `raw`) — quantized variables are bit-packed directly into the frame
+//!   buffer, never through an intermediate payload `Vec`;
+//! * the only steady-state allocation is the single upload frame handed to
+//!   the caller in [`ClientResult`] (it is consumed by the server).
+//!
+//! The `fl_integration` tests exercise this path end-to-end; the buffer
+//! reuse itself is unit-tested in `rust/tests/omc_kernels.rs`.
 
 use anyhow::{Context, Result};
 
 use crate::data::synth::Domain;
-use crate::omc::codec;
+use crate::omc::codec::{self, VarView, WireWriter};
 use crate::omc::format::FloatFormat;
-use crate::omc::store::{CompressedModel, StoredVar};
+use crate::omc::store::StoredVar;
 use crate::omc::transform::Pvt;
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool;
 
 /// Static client-side hyper-parameters for a round.
 #[derive(Clone, Copy, Debug)]
@@ -38,11 +56,30 @@ pub struct ClientResult {
     pub peak_param_bytes: usize,
 }
 
+/// Reusable per-client working set: the decoded-variable buffers and PVT
+/// scalar vectors whose capacity survives across clients and rounds. One
+/// instance per execution thread (client training is pinned to the PJRT
+/// thread, so the round loop owns exactly one).
+#[derive(Default)]
+pub struct ClientScratch {
+    /// decoded variable values, one buffer per manifest variable
+    vals: Vec<Vec<f32>>,
+    s: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl ClientScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Run one client round.
 ///
 /// `download` is the server's wire payload for this client; `mask` is the
 /// PPQ selection the server drew for it (needed by the graph to know which
-/// variables to re-quantize).
+/// variables to re-quantize). `scratch` holds the reused codec buffers —
+/// pass the same instance every round for the zero-alloc steady state.
 #[allow(clippy::too_many_arguments)]
 pub fn run_client_round(
     model: &LoadedModel,
@@ -52,35 +89,61 @@ pub fn run_client_round(
     mask: &[f32],
     cfg: ClientTrainConfig,
     rng: &mut Xoshiro256pp,
+    scratch: &mut ClientScratch,
 ) -> Result<ClientResult> {
     let mc = &model.manifest.config;
-    let received = codec::decode(download).context("decoding downlink payload")?;
+    let nvars = model.num_vars();
+    scratch.vals.resize_with(nvars, Vec::new);
+    scratch.s.clear();
+    scratch.b.clear();
+
+    // Streaming downlink decode into the scratch buffers. The baseline
+    // consumes decompressed values V̄; the OMC graph consumes (Ṽ, s, b).
+    let mut down_param_bytes = 0usize;
+    let vals = &mut scratch.vals;
+    let (s, b) = (&mut scratch.s, &mut scratch.b);
+    let decoded = codec::for_each_var(download, |i, view| {
+        anyhow::ensure!(i < nvars, "downlink has more vars than the model");
+        down_param_bytes += view.memory_bytes();
+        if cfg.fp32_baseline {
+            view.decompress_into(&mut vals[i]);
+        } else {
+            view.tilde_into(&mut vals[i]);
+        }
+        let pvt = match view {
+            VarView::Packed { pvt, .. } => pvt,
+            VarView::Raw { .. } => Pvt::IDENTITY,
+        };
+        s.push(pvt.s);
+        b.push(pvt.b);
+        Ok(())
+    })
+    .context("decoding downlink payload")?;
     anyhow::ensure!(
-        received.num_vars() == model.num_vars(),
-        "downlink has {} vars, model expects {}",
-        received.num_vars(),
-        model.num_vars()
+        decoded == nvars,
+        "downlink has {decoded} vars, model expects {nvars}"
     );
     // the client's resident state: compressed payload only
-    let mut peak_param_bytes = received.memory_bytes();
+    let mut peak_param_bytes = down_param_bytes;
 
     if cfg.fp32_baseline {
         // baseline: raw parameters, plain SGD steps
-        let mut params = received.decompress_all();
-        drop(received);
         let mut loss_sum = 0.0f64;
         for _ in 0..cfg.local_steps {
             let batch = domain.batch(speakers, mc.batch, rng);
-            let out = model.run_train_fp32(&params, &batch.x, &batch.y, cfg.lr)?;
-            params = out.params;
+            let out =
+                model.run_train_fp32(&scratch.vals, &batch.x, &batch.y, cfg.lr)?;
+            scratch.vals = out.params;
             loss_sum += out.loss as f64;
         }
-        let up = CompressedModel::new(
-            params.into_iter().map(StoredVar::raw).collect(),
-        );
-        peak_param_bytes = peak_param_bytes.max(up.memory_bytes());
+        let up_bytes: usize = scratch.vals.iter().map(|v| v.len() * 4).sum();
+        let mut w = WireWriter::with_capacity(up_bytes + 5 * nvars);
+        for v in &scratch.vals {
+            w.raw(v);
+        }
+        peak_param_bytes = peak_param_bytes.max(up_bytes);
         return Ok(ClientResult {
-            upload: codec::encode(&up),
+            upload: w.finish(),
             loss: loss_sum / cfg.local_steps.max(1) as f64,
             peak_param_bytes,
         });
@@ -89,20 +152,14 @@ pub fn run_client_round(
     // OMC path: the graph consumes (Ṽ, s, b, mask) and returns the same
     // triple re-quantized. Transient decoded copies live only inside this
     // loop, mirroring Fig. 1's dashed-border variables.
-    let mut tildes: Vec<Vec<f32>> =
-        received.vars.iter().map(|v| v.decode_tilde()).collect();
-    let mut s: Vec<f32> = received.vars.iter().map(|v| v.pvt().s).collect();
-    let mut b: Vec<f32> = received.vars.iter().map(|v| v.pvt().b).collect();
-    drop(received);
-
     let mut loss_sum = 0.0f64;
     for _ in 0..cfg.local_steps {
         let batch = domain.batch(speakers, mc.batch, rng);
         let out = model.run_train_omc(
             cfg.use_pvt,
-            &tildes,
-            &s,
-            &b,
+            &scratch.vals,
+            &scratch.s,
+            &scratch.b,
             mask,
             &batch.x,
             &batch.y,
@@ -110,62 +167,84 @@ pub fn run_client_round(
             cfg.format.exp_bits,
             cfg.format.mant_bits,
         )?;
-        tildes = out.tildes;
-        s = out.s;
-        b = out.b;
+        scratch.vals = out.tildes;
+        scratch.s = out.s;
+        scratch.b = out.b;
         loss_sum += out.loss as f64;
     }
 
-    // re-pack for the uplink: quantized vars bit-packed, the rest raw
-    let mut vars = Vec::with_capacity(tildes.len());
-    for (i, t) in tildes.into_iter().enumerate() {
-        if mask[i] > 0.5 {
-            let pvt = Pvt { s: s[i], b: b[i] };
-            let sv = StoredVar::from_quantized(&t, cfg.format, pvt)
-                .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
-            vars.push(sv);
+    // Streaming uplink: quantized vars bit-pack straight into the frame,
+    // the rest ship raw. No per-variable buffers.
+    let mut up_param_bytes = 0usize;
+    let mut cap = 0usize;
+    for (i, t) in scratch.vals.iter().enumerate() {
+        cap += if mask[i] > 0.5 {
+            19 + cfg.format.packed_bytes(t.len())
         } else {
-            vars.push(StoredVar::raw(t));
+            5 + 4 * t.len()
+        };
+    }
+    let mut w = WireWriter::with_capacity(cap);
+    for (i, t) in scratch.vals.iter().enumerate() {
+        if mask[i] > 0.5 {
+            let pvt = Pvt {
+                s: scratch.s[i],
+                b: scratch.b[i],
+            };
+            w.packed_values(t, cfg.format, pvt)
+                .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
+            up_param_bytes += cfg.format.packed_bytes(t.len()) + 8;
+        } else {
+            w.raw(t);
+            up_param_bytes += 4 * t.len();
         }
     }
-    let up = CompressedModel::new(vars);
-    peak_param_bytes = peak_param_bytes.max(up.memory_bytes());
+    peak_param_bytes = peak_param_bytes.max(up_param_bytes);
     Ok(ClientResult {
-        upload: codec::encode(&up),
+        upload: w.finish(),
         loss: loss_sum / cfg.local_steps.max(1) as f64,
         peak_param_bytes,
     })
 }
 
 /// Build the downlink payload for one client: compress the server's global
-/// model according to the client's PPQ mask.
+/// model according to the client's PPQ mask (streaming fused pipeline —
+/// no intermediate `CompressedModel`).
 pub fn make_downlink(
     global: &[Vec<f32>],
     mask: &[f32],
     format: FloatFormat,
     use_pvt: bool,
 ) -> Vec<u8> {
-    let vars: Vec<StoredVar> = global
+    let cap: usize = global
         .iter()
         .zip(mask)
         .map(|(v, &m)| {
             if m > 0.5 && !format.is_fp32() {
-                StoredVar::compress(v, format, use_pvt)
+                19 + format.packed_bytes(v.len())
             } else {
-                StoredVar::raw(v.clone())
+                5 + 4 * v.len()
             }
         })
-        .collect();
-    codec::encode(&CompressedModel::new(vars))
+        .sum();
+    let mut w = WireWriter::with_capacity(cap);
+    for (v, &m) in global.iter().zip(mask) {
+        if m > 0.5 && !format.is_fp32() {
+            w.compress_values(v, format, use_pvt);
+        } else {
+            w.raw(v);
+        }
+    }
+    w.finish()
 }
 
 /// Per-round downlink compression cache (§Perf).
 ///
 /// The quantize + PVT-fit + bit-pack of a given variable is identical for
 /// every client whose mask selects it, so the server compresses each
-/// variable ONCE per round and per-client payloads are assembled from
-/// borrowed parts (framing + memcpy only). With 8 clients/round this cuts
-/// the downlink build cost ~8x.
+/// variable ONCE per round (in parallel over the thread pool) and
+/// per-client payloads are assembled from borrowed parts (framing + memcpy
+/// only). With 8 clients/round this cuts the downlink build cost ~8x.
 pub struct DownlinkCache {
     /// compressed version of each variable (None when format is FP32)
     packed: Vec<Option<StoredVar>>,
@@ -176,24 +255,36 @@ impl DownlinkCache {
         global: &[Vec<f32>],
         format: FloatFormat,
         use_pvt: bool,
+        workers: usize,
         any_selected: impl Fn(usize) -> bool,
     ) -> Self {
-        let packed = global
-            .iter()
-            .enumerate()
-            .map(|(i, v)| {
-                if format.is_fp32() || !any_selected(i) {
-                    None
-                } else {
-                    Some(StoredVar::compress(v, format, use_pvt))
-                }
-            })
-            .collect();
+        let selected: Vec<bool> =
+            (0..global.len()).map(any_selected).collect();
+        let packed = threadpool::scope_map(global, workers, |i, v| {
+            if format.is_fp32() || !selected[i] {
+                None
+            } else {
+                Some(StoredVar::compress(v, format, use_pvt))
+            }
+        })
+        .expect("downlink compress worker panicked");
         Self { packed }
     }
 
     /// Assemble one client's payload from the cache.
     pub fn assemble(&self, global: &[Vec<f32>], mask: &[f32]) -> Vec<u8> {
+        self.assemble_into(global, mask, Vec::new())
+    }
+
+    /// [`assemble`](Self::assemble) into a recycled buffer (cleared first,
+    /// capacity retained — the round loop reuses one buffer per client
+    /// slot across rounds).
+    pub fn assemble_into(
+        &self,
+        global: &[Vec<f32>],
+        mask: &[f32],
+        buf: Vec<u8>,
+    ) -> Vec<u8> {
         let cap: usize = global
             .iter()
             .zip(mask.iter())
@@ -209,7 +300,8 @@ impl DownlinkCache {
                 }
             })
             .sum();
-        let mut w = codec::WireWriter::with_capacity(cap + 16 * global.len());
+        let mut w =
+            WireWriter::with_buf_and_capacity(buf, cap + 16 * global.len());
         for (i, v) in global.iter().enumerate() {
             match (&self.packed[i], mask[i] > 0.5) {
                 (Some(p), true) => w.var(p),
@@ -223,6 +315,7 @@ impl DownlinkCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::omc::codec;
     use crate::testkit::Gen;
 
     #[test]
@@ -250,5 +343,55 @@ mod tests {
         let none = make_downlink(&global, &[0.0; 10], fmt, true).len();
         let ratio = all as f64 / none as f64;
         assert!((ratio - 11.0 / 32.0).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn streaming_downlink_matches_storedvar_encoding() {
+        // make_downlink now streams through the fused pipeline; the frame
+        // must stay byte-identical to the old CompressedModel + encode path
+        let mut g = Gen::new(3);
+        let global = vec![
+            g.vec_normal(700, 0.05),
+            g.vec_normal(64, 1.0),
+            g.vec_normal(333, 0.2),
+        ];
+        let mask = [1.0f32, 0.0, 1.0];
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let streamed = make_downlink(&global, &mask, fmt, true);
+        let model = crate::omc::store::CompressedModel::new(
+            global
+                .iter()
+                .zip(&mask)
+                .map(|(v, &m)| {
+                    if m > 0.5 && !fmt.is_fp32() {
+                        StoredVar::compress(v, fmt, true)
+                    } else {
+                        StoredVar::raw(v.clone())
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(streamed, codec::encode(&model));
+    }
+
+    #[test]
+    fn cache_assemble_matches_make_downlink() {
+        let mut g = Gen::new(4);
+        let global: Vec<Vec<f32>> =
+            (0..6).map(|_| g.vec_normal(1500, 0.05)).collect();
+        let mask = [1.0f32, 0.0, 1.0, 1.0, 0.0, 1.0];
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+        for workers in [1, 4] {
+            let cache =
+                DownlinkCache::build(&global, fmt, true, workers, |i| mask[i] > 0.5);
+            let assembled = cache.assemble(&global, &mask);
+            assert_eq!(assembled, make_downlink(&global, &mask, fmt, true));
+            // recycled-buffer variant is identical and reuses the allocation
+            let buf = Vec::with_capacity(2 * assembled.len() + 1024);
+            let ptr = buf.as_ptr();
+            let again = cache.assemble_into(&global, &mask, buf);
+            assert_eq!(again, assembled);
+            assert_eq!(again.as_ptr(), ptr, "assemble_into must recycle");
+        }
     }
 }

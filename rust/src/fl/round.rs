@@ -1,11 +1,16 @@
 //! Round orchestration: sample clients, build per-client downlinks, run the
 //! client work on the thread pool, aggregate the uplinks.
+//!
+//! Steady-state allocation discipline: [`RoundScratch`] carries the
+//! per-client downlink frame buffers and the client codec scratch across
+//! rounds, so the codec layer performs no per-variable heap allocation once
+//! capacities have warmed up (see `fl::client` module docs).
 
 use anyhow::{Context, Result};
 
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::Domain;
-use crate::fl::client::{self, ClientTrainConfig};
+use crate::fl::client::{self, ClientScratch, ClientTrainConfig};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::Server;
 use crate::omc::codec;
@@ -26,6 +31,21 @@ pub struct RoundContext<'a> {
     pub workers: usize,
 }
 
+/// Buffers reused across rounds (owned by the experiment driver).
+#[derive(Default)]
+pub struct RoundScratch {
+    /// per-client downlink frame buffers, recycled round-to-round
+    downlink_bufs: Vec<Vec<u8>>,
+    /// the (single-threaded) client training loop's codec scratch
+    client: ClientScratch,
+}
+
+impl RoundScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Aggregate numbers for one completed round.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
@@ -37,14 +57,19 @@ pub struct RoundOutcome {
 }
 
 /// Run one federated round, updating `server` in place.
-pub fn run_round(ctx: &RoundContext<'_>, server: &mut Server) -> Result<RoundOutcome> {
+pub fn run_round(
+    ctx: &RoundContext<'_>,
+    server: &mut Server,
+    scratch: &mut RoundScratch,
+) -> Result<RoundOutcome> {
     let round = server.round as u64;
     let participants = ctx.sampler.sample(round);
     let specs = &ctx.model.manifest.variables;
 
     // per-client PPQ masks + downlink payloads. Each variable is
-    // compressed ONCE per round (DownlinkCache, §Perf) and the per-client
-    // payloads are assembled on the thread pool; PJRT execution below is
+    // compressed ONCE per round (DownlinkCache, §Perf, built in parallel
+    // over the thread pool) and the per-client payloads are assembled on
+    // the thread pool into recycled buffers; PJRT execution below is
     // pinned to this thread (`PjRtLoadedExecutable` is !Send).
     let masks: Vec<Vec<f32>> = participants
         .iter()
@@ -54,13 +79,16 @@ pub fn run_round(ctx: &RoundContext<'_>, server: &mut Server) -> Result<RoundOut
     // !Sync LoadedModel reference
     let (fmt, use_pvt, workers) = (ctx.train.format, ctx.train.use_pvt, ctx.workers);
     let global = &server.params;
-    let cache = client::DownlinkCache::build(global, fmt, use_pvt, |i| {
+    let cache = client::DownlinkCache::build(global, fmt, use_pvt, workers, |i| {
         masks.iter().any(|m| m[i] > 0.5)
     });
     let cache_ref = &cache;
+    let mut bufs = std::mem::take(&mut scratch.downlink_bufs);
+    bufs.resize_with(masks.len(), Vec::new);
+    let items: Vec<(&Vec<f32>, Vec<u8>)> = masks.iter().zip(bufs).collect();
     let downlinks: Vec<Vec<u8>> =
-        threadpool::scope_map(&masks, workers, move |_, mask| {
-            cache_ref.assemble(global, mask)
+        threadpool::scope_map_send(items, workers, move |_, (mask, buf)| {
+            cache_ref.assemble_into(global, mask, buf)
         })?;
     let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
 
@@ -80,6 +108,7 @@ pub fn run_round(ctx: &RoundContext<'_>, server: &mut Server) -> Result<RoundOut
             &masks[i],
             ctx.train,
             &mut rng,
+            &mut scratch.client,
         )
         .with_context(|| format!("client {cid} round {round}"))?;
         loss_sum += r.loss;
@@ -87,11 +116,13 @@ pub fn run_round(ctx: &RoundContext<'_>, server: &mut Server) -> Result<RoundOut
         uploads.push(r.upload);
     }
     let up_bytes: usize = uploads.iter().map(|u| u.len()).sum();
+    // recycle the downlink frame buffers for the next round
+    scratch.downlink_bufs = downlinks;
 
-    // server: decode + decompress uplinks (thread pool), then FedAvg
+    // server: decode + fused-decompress uplinks (thread pool), then FedAvg
     let client_models: Vec<Vec<Vec<f32>>> =
         threadpool::scope_map(&uploads, workers, |_, u: &Vec<u8>| {
-            Ok(codec::decode(u)?.decompress_all())
+            codec::decode_decompressed(u)
         })?
         .into_iter()
         .collect::<Result<_>>()?;

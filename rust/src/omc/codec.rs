@@ -20,6 +20,7 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use super::format::FloatFormat;
+use super::pack::{self, PackError};
 use super::store::{CompressedModel, StoredVar};
 use super::transform::Pvt;
 
@@ -37,7 +38,15 @@ pub struct WireWriter {
 
 impl WireWriter {
     pub fn with_capacity(cap: usize) -> Self {
-        let mut buf = Vec::with_capacity(cap + 16);
+        Self::with_buf_and_capacity(Vec::new(), cap)
+    }
+
+    /// Start a frame in a recycled buffer (cleared; its capacity plus
+    /// `cap` extra is retained) — the round loop's per-client payload
+    /// buffers live across rounds this way.
+    pub fn with_buf_and_capacity(mut buf: Vec<u8>, cap: usize) -> Self {
+        buf.clear();
+        buf.reserve(cap + 16);
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&VERSION.to_le_bytes());
         buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
@@ -55,14 +64,47 @@ impl WireWriter {
     }
 
     pub fn packed(&mut self, bytes: &[u8], n: usize, fmt: FloatFormat, pvt: Pvt) {
+        self.packed_header(n, fmt, pvt, bytes.len());
+        self.buf.extend_from_slice(bytes);
+        self.nvars += 1;
+    }
+
+    fn packed_header(&mut self, n: usize, fmt: FloatFormat, pvt: Pvt, plen: usize) {
         self.buf.push(1u8);
         self.buf.extend_from_slice(&(n as u32).to_le_bytes());
         self.buf.push(fmt.exp_bits as u8);
         self.buf.push(fmt.mant_bits as u8);
         self.buf.extend_from_slice(&pvt.s.to_le_bytes());
         self.buf.extend_from_slice(&pvt.b.to_le_bytes());
-        self.buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-        self.buf.extend_from_slice(bytes);
+        self.buf.extend_from_slice(&(plen as u32).to_le_bytes());
+    }
+
+    /// Emit a packed variable by bit-packing `vt` (already-quantized fixed
+    /// points, e.g. the Ṽ' a training step returned) straight into the
+    /// frame — the client uplink path, with no intermediate payload `Vec`.
+    pub fn packed_values(
+        &mut self,
+        vt: &[f32],
+        fmt: FloatFormat,
+        pvt: Pvt,
+    ) -> std::result::Result<(), PackError> {
+        self.packed_header(vt.len(), fmt, pvt, fmt.packed_bytes(vt.len()));
+        pack::pack_extend(vt, fmt, &mut self.buf)?;
+        self.nvars += 1;
+        Ok(())
+    }
+
+    /// Emit a packed variable by running the fused quantize → PVT-fit →
+    /// pack pipeline straight into the frame (`values` need not be
+    /// quantized). The PVT scalars land in the header retroactively.
+    pub fn compress_values(&mut self, values: &[f32], fmt: FloatFormat, use_pvt: bool) {
+        let plen = fmt.packed_bytes(values.len());
+        self.packed_header(values.len(), fmt, Pvt::IDENTITY, plen);
+        // s/b sit 12 bytes back from the header end (s f32, b f32, plen u32)
+        let sb_at = self.buf.len() - 12;
+        let pvt = pack::quantize_transform_pack(values, fmt, use_pvt, &mut self.buf);
+        self.buf[sb_at..sb_at + 4].copy_from_slice(&pvt.s.to_le_bytes());
+        self.buf[sb_at + 4..sb_at + 8].copy_from_slice(&pvt.b.to_le_bytes());
         self.nvars += 1;
     }
 
@@ -91,8 +133,111 @@ pub fn encode(model: &CompressedModel) -> Vec<u8> {
     w.finish()
 }
 
-/// Decode wire bytes back into a compressed model.
-pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
+/// [`encode`] into a recycled buffer (cleared; capacity retained).
+pub fn encode_into(model: &CompressedModel, buf: &mut Vec<u8>) {
+    let cap = model.memory_bytes() + 8 * model.vars.len();
+    let mut w = WireWriter::with_buf_and_capacity(std::mem::take(buf), cap);
+    for var in &model.vars {
+        w.var(var);
+    }
+    *buf = w.finish();
+}
+
+/// Reusable wire encoder: owns a buffer recycled across `encode` calls so
+/// repeated whole-model serialization performs no steady-state allocation.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode into the internal buffer and borrow the frame.
+    pub fn encode(&mut self, model: &CompressedModel) -> &[u8] {
+        encode_into(model, &mut self.buf);
+        &self.buf
+    }
+}
+
+/// A borrowed view of one variable in a wire frame — what the streaming
+/// decoder hands to its callback. Payloads reference the input buffer;
+/// nothing is copied until the caller decides where the values go.
+#[derive(Debug)]
+pub enum VarView<'a> {
+    /// Unquantized variable: `n` f32 values, little-endian bytes.
+    Raw { data: &'a [u8], n: usize },
+    /// Bit-packed variable: decode with `pack::unpack*` family.
+    Packed {
+        payload: &'a [u8],
+        n: usize,
+        fmt: FloatFormat,
+        pvt: Pvt,
+    },
+}
+
+impl VarView<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            VarView::Raw { n, .. } | VarView::Packed { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes this variable would occupy in a client's parameter store
+    /// (the Sec. 3.4 accounting: payload + PVT scalars when packed).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            VarView::Raw { data, .. } => data.len(),
+            VarView::Packed { payload, .. } => payload.len() + 8,
+        }
+    }
+
+    /// Decode this variable's decompressed values (`V̄ = s·Ṽ + b`) into a
+    /// reused buffer.
+    pub fn decompress_into(&self, out: &mut Vec<f32>) {
+        match *self {
+            VarView::Raw { data, .. } => raw_f32s_into(data, out),
+            VarView::Packed { payload, n, fmt, pvt } => {
+                pack::unpack_transform_into(payload, n, fmt, pvt.s, pvt.b, out)
+            }
+        }
+    }
+
+    /// Decode this variable's quantized values Ṽ (no transform) into a
+    /// reused buffer.
+    pub fn tilde_into(&self, out: &mut Vec<f32>) {
+        match *self {
+            VarView::Raw { data, .. } => raw_f32s_into(data, out),
+            VarView::Packed { payload, n, fmt, .. } => {
+                pack::unpack_into(payload, n, fmt, out)
+            }
+        }
+    }
+}
+
+/// Copy a little-endian f32 image into a reused buffer.
+fn raw_f32s_into(data: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(data.len() / 4);
+    for c in data.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+}
+
+/// Streaming decoder: validate the frame and hand each variable to `f` as
+/// a borrowed [`VarView`], in order. Returns the variable count. This is
+/// the single wire parser — [`decode`] and the client's zero-alloc
+/// downlink path are both built on it.
+pub fn for_each_var<F>(bytes: &[u8], mut f: F) -> Result<usize>
+where
+    F: FnMut(usize, VarView<'_>) -> Result<()>,
+{
     let mut r = Reader { b: bytes, i: 0 };
     let magic = r.take(4)?;
     ensure!(magic == MAGIC, "bad magic {:?}", &magic);
@@ -104,18 +249,13 @@ pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
         nvars <= bytes.len() / 5 + 1,
         "implausible variable count {nvars}"
     );
-    let mut vars = Vec::with_capacity(nvars);
     for vi in 0..nvars {
         let tag = r.u8()?;
         let n = r.u32()? as usize;
         match tag {
             0 => {
-                let raw = r.take(n * 4).with_context(|| format!("raw var {vi}"))?;
-                let mut v = Vec::with_capacity(n);
-                for c in raw.chunks_exact(4) {
-                    v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-                }
-                vars.push(StoredVar::Raw(v));
+                let data = r.take(n * 4).with_context(|| format!("raw var {vi}"))?;
+                f(vi, VarView::Raw { data, n })?;
             }
             1 => {
                 let e = r.u8()? as u32;
@@ -133,19 +273,58 @@ pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
                     plen == fmt.packed_bytes(n),
                     "payload length {plen} inconsistent with n={n} at {fmt}"
                 );
-                let payload = r.take(plen)?.to_vec();
-                vars.push(StoredVar::Packed {
-                    bytes: payload,
-                    n,
-                    fmt,
-                    pvt: Pvt { s, b },
-                });
+                let payload = r.take(plen)?;
+                f(
+                    vi,
+                    VarView::Packed {
+                        payload,
+                        n,
+                        fmt,
+                        pvt: Pvt { s, b },
+                    },
+                )?;
             }
             t => bail!("unknown variable tag {t}"),
         }
     }
     ensure!(r.i == bytes.len(), "trailing bytes after payload");
+    Ok(nvars)
+}
+
+/// Decode wire bytes back into a compressed model.
+pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
+    let mut vars = Vec::new();
+    for_each_var(bytes, |_, view| {
+        vars.push(match view {
+            VarView::Raw { data, .. } => {
+                let mut v = Vec::new();
+                raw_f32s_into(data, &mut v);
+                StoredVar::Raw(v)
+            }
+            VarView::Packed { payload, n, fmt, pvt } => StoredVar::Packed {
+                bytes: payload.to_vec(),
+                n,
+                fmt,
+                pvt,
+            },
+        });
+        Ok(())
+    })?;
     Ok(CompressedModel::new(vars))
+}
+
+/// Decode wire bytes straight to decompressed `V̄` values (fused
+/// unpack+transform per variable, no `CompressedModel` intermediate) — the
+/// server's uplink-decode hot path.
+pub fn decode_decompressed(bytes: &[u8]) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::new();
+    for_each_var(bytes, |_, view| {
+        let mut v = Vec::new();
+        view.decompress_into(&mut v);
+        out.push(v);
+        Ok(())
+    })?;
+    Ok(out)
 }
 
 struct Reader<'a> {
@@ -264,6 +443,76 @@ mod tests {
         let m = CompressedModel::default();
         let back = decode(&encode(&m)).unwrap();
         assert_eq!(back.num_vars(), 0);
+    }
+
+    #[test]
+    fn streaming_writers_match_storedvar_path() {
+        // packed_values (pre-quantized) and compress_values (fused) must
+        // emit byte-identical frames to the StoredVar::compress + var path
+        let mut g = Gen::new(6);
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let v = g.vec_normal(1000, 0.05);
+        let sv = StoredVar::compress(&v, fmt, true);
+
+        let mut a = WireWriter::with_capacity(0);
+        a.var(&sv);
+        let a = a.finish();
+
+        let mut b = WireWriter::with_capacity(0);
+        b.compress_values(&v, fmt, true);
+        let b = b.finish();
+        assert_eq!(a, b, "compress_values frame differs");
+
+        let tilde = sv.decode_tilde();
+        let mut c = WireWriter::with_capacity(0);
+        c.packed_values(&tilde, fmt, sv.pvt()).unwrap();
+        let c = c.finish();
+        assert_eq!(a, c, "packed_values frame differs");
+    }
+
+    #[test]
+    fn encoder_reuses_buffer() {
+        let mut g = Gen::new(7);
+        let model = sample_model(&mut g);
+        let reference = encode(&model);
+        let mut enc = Encoder::new();
+        assert_eq!(enc.encode(&model), reference.as_slice());
+        let ptr = enc.encode(&model).as_ptr();
+        assert_eq!(enc.encode(&model).as_ptr(), ptr, "Encoder must recycle");
+    }
+
+    #[test]
+    fn decode_decompressed_matches_two_step() {
+        let mut g = Gen::new(8);
+        let wire = encode(&sample_model(&mut g));
+        let two_step = decode(&wire).unwrap().decompress_all();
+        let fused = decode_decompressed(&wire).unwrap();
+        assert_eq!(two_step.len(), fused.len());
+        for (a, b) in two_step.iter().zip(&fused) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn for_each_var_reports_views_in_order() {
+        let mut g = Gen::new(9);
+        let model = sample_model(&mut g);
+        let wire = encode(&model);
+        let mut seen = Vec::new();
+        let count = for_each_var(&wire, |i, view| {
+            seen.push((i, view.len(), view.memory_bytes()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count, model.num_vars());
+        for (i, (vi, n, mem)) in seen.iter().enumerate() {
+            assert_eq!(i, *vi);
+            assert_eq!(*n, model.vars[i].len());
+            assert_eq!(*mem, model.vars[i].memory_bytes());
+        }
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! * [`format`] — `SxEyMz` floating-point formats (Sec. 2.2).
 //! * [`quantize`] — bit-exact mirror of the L1 Pallas kernel.
-//! * [`transform`] — per-variable transformation (Sec. 2.3).
+//! * [`transform`] — per-variable transformation (Sec. 2.3), including the
+//!   streaming [`transform::FitAcc`] the fused pipelines share with `fit`.
 //! * [`pack`] — bit-packing of quantized values into (1+e+m)-bit codes;
 //!   this is the *actual* in-memory / on-wire representation whose size the
 //!   paper's memory and communication columns measure.
@@ -10,6 +11,34 @@
 //! * [`selection`] — weight-matrices-only + partial parameter quantization
 //!   (Secs. 2.4, 2.5).
 //! * [`codec`] — the transport wire format and byte accounting.
+//!
+//! # Codec kernel layer (§Perf)
+//!
+//! OMC's compress/decompress is *online* — every simulated client round
+//! pays quantize → transform → pack on the uplink and unpack → transform on
+//! the downlink — so the codec is organized as a high-throughput kernel
+//! layer rather than a per-value loop:
+//!
+//! * **Block kernels** ([`pack`]): values are processed in 256-value blocks
+//!   through a 64-bit word accumulator. 256 is a multiple of 8, so a block
+//!   spans exactly `32·w` bytes for a `w`-bit format — blocks are
+//!   byte-aligned, independently codable, and the basis for the threaded
+//!   variants. The paper's four table formats (`S1E5M10`, `S1E4M14`,
+//!   `S1E3M7`, `S1E2M3`) dispatch to const-generic monomorphized kernels;
+//!   everything else takes the same kernel with runtime parameters, and the
+//!   original scalar path remains in-tree as the bit-exact reference.
+//! * **Fused pipelines**: [`pack::quantize_transform_pack`] (uplink:
+//!   quantize + PVT fit + pack in one pass) and
+//!   [`pack::unpack_transform_into`] (downlink: unpack + affine in one
+//!   pass) never materialize an intermediate quantized `Vec<f32>`.
+//! * **Zero-alloc round loop**: every stage has a `*_into` variant writing
+//!   into caller-owned buffers; `fl::client` reuses them across rounds so
+//!   the steady state performs no per-variable heap allocation
+//!   (`fl::client` module docs state the full contract).
+//!
+//! Correctness contract: block, fused, and threaded paths produce
+//! byte-identical wire payloads and bit-identical decoded f32s vs. the
+//! scalar reference — property-tested in `rust/tests/omc_kernels.rs`.
 
 pub mod codec;
 pub mod fixed;

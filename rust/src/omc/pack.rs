@@ -11,8 +11,51 @@
 //! holds zero and subnormals, exactly as IEEE. Values must be representable
 //! (`quantize` fixed points) — enforced with debug assertions and a checked
 //! error in release via [`PackError`].
+//!
+//! # Block kernel layer (§Perf)
+//!
+//! The wire format is a single little-endian bitstream (code 0 occupies the
+//! lowest bits of byte 0), but it is *processed* in fixed-size blocks of
+//! [`BLOCK`] = 256 values. Because 256 is a multiple of 8, every block spans
+//! exactly `256·w` bits = `32·w` bytes = `4·w` u64 words for a `w`-bit
+//! format, so
+//!
+//! * blocks start and end on byte (indeed word) boundaries,
+//! * each block can be encoded/decoded independently (the basis of the
+//!   threaded variants), and
+//! * the block kernels move whole 64-bit words instead of single bytes.
+//!
+//! Dispatch rules: the four formats the paper tables use — `S1E5M10`,
+//! `S1E4M14`, `S1E3M7`, `S1E2M3` — hit const-generic monomorphized kernels
+//! (`*_mono::<E, M>`) whose shifts, masks and biases constant-fold;
+//! `S1E8M23` (plain f32) is a byte copy; every other format runs the same
+//! block kernel with runtime `e`/`m`. The pre-block scalar path is kept
+//! in-tree as [`pack_scalar`] / [`unpack_scalar`] — it is the correctness
+//! reference (block output must be **byte-identical**, asserted by the
+//! property tests in `rust/tests/omc_kernels.rs`) and handles the `< 256`
+//! value tail of every array.
+//!
+//! Zero-alloc contract: the `*_into` / `*_extend` variants write into
+//! caller-provided buffers and never allocate beyond growing the
+//! destination `Vec` to the (exactly known) output size — the steady-state
+//! round loop in `fl::client` reuses those buffers across rounds so the
+//! codec performs no per-variable heap allocation.
 
 use super::format::FloatFormat;
+use super::quantize::quantize_one;
+use super::transform::{FitAcc, Pvt};
+use crate::util::threadpool;
+
+/// Number of values per codec block. 256 keeps a block's f32 image (1 KiB)
+/// and packed image (≤ 1 KiB) inside L1 while making every block span a
+/// whole number of u64 words for any code width ≤ 32.
+pub const BLOCK: usize = 256;
+
+/// Below this many values the threaded variants fall back to single-thread
+/// (thread hand-off costs more than the packing).
+const PAR_MIN: usize = 8 * PAR_CHUNK_VALUES;
+/// Values per parallel work item: 64 blocks ≈ 64 KiB of f32 input.
+const PAR_CHUNK_VALUES: usize = 64 * BLOCK;
 
 #[derive(Debug, PartialEq)]
 pub enum PackError {
@@ -35,7 +78,7 @@ impl std::fmt::Display for PackError {
 impl std::error::Error for PackError {}
 
 /// Encode one representable f32 into its `(1+e+m)`-bit code.
-#[inline]
+#[inline(always)]
 pub fn encode_one(x: f32, fmt: FloatFormat) -> u32 {
     let e = fmt.exp_bits;
     let m = fmt.mant_bits;
@@ -90,7 +133,7 @@ pub fn encode_one(x: f32, fmt: FloatFormat) -> u32 {
 /// Pure bit construction (§Perf: the original f64 `powi` path ran at
 /// ~40 Melem/s; this runs branch-light on the integer units). `quantum` must
 /// be `fmt.min_positive() as f32` — hoisted out by the bulk paths.
-#[inline]
+#[inline(always)]
 pub fn decode_one_with_quantum(code: u32, fmt: FloatFormat, quantum: f32) -> f32 {
     let e = fmt.exp_bits;
     let m = fmt.mant_bits;
@@ -116,66 +159,62 @@ pub fn decode_one(code: u32, fmt: FloatFormat) -> f32 {
     decode_one_with_quantum(code, fmt, fmt.min_positive() as f32)
 }
 
-/// Pack a slice of representable values into bytes (little-endian bit
-/// order: code 0 occupies the lowest bits of byte 0).
-///
-/// §Perf: rolling u64 bit accumulator flushing whole bytes — the original
-/// scatter-OR into 5 output bytes per value ran at ~80–160 Melem/s.
-pub fn pack(values: &[f32], fmt: FloatFormat) -> Result<Vec<u8>, PackError> {
+// ---------------------------------------------------------------------------
+// scalar reference path
+// ---------------------------------------------------------------------------
+
+/// Representability pre-check — same debug-only contract the scalar packer
+/// always had: checked error in debug builds, trusted caller in release.
+#[inline]
+fn check_representable(values: &[f32], fmt: FloatFormat) -> Result<(), PackError> {
+    if cfg!(debug_assertions) {
+        for (i, &x) in values.iter().enumerate() {
+            if !super::quantize::is_representable(x, fmt) {
+                return Err(PackError::NotRepresentable { index: i, value: x });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Scalar bitstream packer writing into an exactly-sized slice. This is the
+/// reference implementation the block kernels must match byte-for-byte; it
+/// also encodes the sub-block tail of every array.
+fn pack_scalar_slice(values: &[f32], fmt: FloatFormat, out: &mut [u8]) {
     let width = fmt.bits() as usize;
-    let mut out = Vec::with_capacity(fmt.packed_bytes(values.len()));
     let mut acc: u64 = 0;
     let mut nbits: usize = 0;
-    for (i, &x) in values.iter().enumerate() {
-        if cfg!(debug_assertions) && !super::quantize::is_representable(x, fmt) {
-            return Err(PackError::NotRepresentable { index: i, value: x });
-        }
+    let mut o = 0usize;
+    for &x in values {
         acc |= (encode_one(x, fmt) as u64) << nbits;
         nbits += width;
         while nbits >= 8 {
-            out.push((acc & 0xFF) as u8);
+            out[o] = (acc & 0xFF) as u8;
+            o += 1;
             acc >>= 8;
             nbits -= 8;
         }
     }
     if nbits > 0 {
-        out.push((acc & 0xFF) as u8);
+        out[o] = (acc & 0xFF) as u8;
+        o += 1;
     }
-    debug_assert_eq!(out.len(), fmt.packed_bytes(values.len()));
+    debug_assert_eq!(o, out.len());
+}
+
+/// Scalar reference packer (byte-granular accumulator, one value at a
+/// time). Kept in-tree as the correctness baseline for the block kernels —
+/// `pack` must produce byte-identical output.
+pub fn pack_scalar(values: &[f32], fmt: FloatFormat) -> Result<Vec<u8>, PackError> {
+    check_representable(values, fmt)?;
+    let mut out = vec![0u8; fmt.packed_bytes(values.len())];
+    pack_scalar_slice(values, fmt, &mut out);
     Ok(out)
 }
 
-/// Unpack `n` values from `bytes`.
-///
-/// §Perf: rolling accumulator + bit-construction decode (the original
-/// 8-byte-window + f64 `powi` path ran at ~40 Melem/s).
-pub fn unpack(bytes: &[u8], n: usize, fmt: FloatFormat) -> Vec<f32> {
-    let mut out = Vec::with_capacity(n);
-    unpack_into(bytes, n, fmt, |v| out.push(v));
-    out
-}
-
-/// Unpack `n` values, applying the per-variable transform in the same pass
-/// (`V̄ = s·Ṽ + b` in f32, the wire-contract decompression) — saves a full
-/// re-traversal on the server's uplink-decode hot path.
-pub fn unpack_transform(
-    bytes: &[u8],
-    n: usize,
-    fmt: FloatFormat,
-    s: f32,
-    b: f32,
-) -> Vec<f32> {
-    let mut out = Vec::with_capacity(n);
-    if s == 1.0 && b == 0.0 {
-        unpack_into(bytes, n, fmt, |v| out.push(v));
-    } else {
-        unpack_into(bytes, n, fmt, |v| out.push(s * v + b));
-    }
-    out
-}
-
+/// Scalar bitstream decoder feeding values (in order) to `sink`.
 #[inline]
-fn unpack_into<F: FnMut(f32)>(bytes: &[u8], n: usize, fmt: FloatFormat, mut sink: F) {
+fn unpack_scalar_sink<F: FnMut(f32)>(bytes: &[u8], n: usize, fmt: FloatFormat, mut sink: F) {
     let width = fmt.bits() as usize;
     let mask = if width == 32 {
         u32::MAX as u64
@@ -199,10 +238,400 @@ fn unpack_into<F: FnMut(f32)>(bytes: &[u8], n: usize, fmt: FloatFormat, mut sink
     }
 }
 
+/// Scalar reference decoder — the baseline `unpack` must match bit-for-bit.
+pub fn unpack_scalar(bytes: &[u8], n: usize, fmt: FloatFormat) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    unpack_scalar_sink(bytes, n, fmt, |v| out.push(v));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// block kernels (word-level, 256 values / block)
+// ---------------------------------------------------------------------------
+
+/// Pack whole blocks (`values.len() % BLOCK == 0`) into an exactly-sized
+/// slice using a rolling u64 accumulator that flushes whole words.
+///
+/// Loop invariants (`w = fmt.bits() ≤ 32`): `nbits < 64` on entry to every
+/// iteration; a flush happens only when `nbits + w ≥ 64`, i.e. `nbits ≥ 32`,
+/// so both shifts (`code << nbits`, `code >> (64 - nbits)`) stay in range.
+/// A block is `256·w` bits = a whole number of u64 words, so `nbits == 0`
+/// at block end and the final word is always flushed.
+#[inline(always)]
+fn pack_blocks_body(values: &[f32], fmt: FloatFormat, out: &mut [u8]) {
+    let width = fmt.bits();
+    let bpb = BLOCK * width as usize / 8;
+    debug_assert_eq!(values.len() % BLOCK, 0);
+    debug_assert_eq!(out.len(), values.len() / BLOCK * bpb);
+    for (chunk, obuf) in values.chunks_exact(BLOCK).zip(out.chunks_exact_mut(bpb)) {
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut o = 0usize;
+        for &x in chunk {
+            let code = encode_one(x, fmt) as u64;
+            acc |= code << nbits;
+            let total = nbits + width;
+            if total >= 64 {
+                obuf[o..o + 8].copy_from_slice(&acc.to_le_bytes());
+                o += 8;
+                acc = code >> (64 - nbits);
+                nbits = total - 64;
+            } else {
+                nbits = total;
+            }
+        }
+        debug_assert_eq!(nbits, 0);
+        debug_assert_eq!(o, bpb);
+    }
+}
+
+/// Const-generic instantiation: `E`/`M` become compile-time constants so the
+/// format-dependent shifts and masks in `encode_one` constant-fold.
+fn pack_blocks_mono<const E: u32, const M: u32>(values: &[f32], out: &mut [u8]) {
+    pack_blocks_body(values, FloatFormat { exp_bits: E, mant_bits: M }, out);
+}
+
+/// Whole-block packer with the fast-path dispatch (see module docs).
+fn pack_blocks(values: &[f32], fmt: FloatFormat, out: &mut [u8]) {
+    match (fmt.exp_bits, fmt.mant_bits) {
+        (5, 10) => pack_blocks_mono::<5, 10>(values, out),
+        (4, 14) => pack_blocks_mono::<4, 14>(values, out),
+        (3, 7) => pack_blocks_mono::<3, 7>(values, out),
+        (2, 3) => pack_blocks_mono::<2, 3>(values, out),
+        _ => pack_blocks_body(values, fmt, out),
+    }
+}
+
+/// Decode whole blocks from an exactly-sized byte slice, applying `map` to
+/// every decoded value (identity or the PVT affine — monomorphized per
+/// closure type, so the fused transform costs one fma in-register).
+///
+/// Mirrors `pack_blocks_body`: reads whole u64 words; `nbits < 64` always,
+/// and the refill branch runs only when `nbits < w ≤ 32`, keeping all three
+/// shifts in range.
+#[inline(always)]
+fn unpack_blocks_body<F: Fn(f32) -> f32 + Copy>(
+    bytes: &[u8],
+    fmt: FloatFormat,
+    out: &mut [f32],
+    map: F,
+) {
+    let width = fmt.bits();
+    let mask: u64 = if width == 32 {
+        u32::MAX as u64
+    } else {
+        (1u64 << width) - 1
+    };
+    let quantum = fmt.min_positive() as f32;
+    let bpb = BLOCK * width as usize / 8;
+    debug_assert_eq!(out.len() % BLOCK, 0);
+    debug_assert_eq!(bytes.len(), out.len() / BLOCK * bpb);
+    for (obuf, chunk) in out.chunks_exact_mut(BLOCK).zip(bytes.chunks_exact(bpb)) {
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut i = 0usize;
+        for o in obuf.iter_mut() {
+            let code = if nbits >= width {
+                let c = acc & mask;
+                acc >>= width;
+                nbits -= width;
+                c
+            } else {
+                let word = u64::from_le_bytes(chunk[i..i + 8].try_into().unwrap());
+                i += 8;
+                let c = (acc | (word << nbits)) & mask;
+                acc = word >> (width - nbits);
+                nbits += 64 - width;
+                c
+            };
+            *o = map(decode_one_with_quantum(code as u32, fmt, quantum));
+        }
+        debug_assert_eq!(nbits, 0);
+        debug_assert_eq!(i, bpb);
+    }
+}
+
+fn unpack_blocks_mono<const E: u32, const M: u32, F: Fn(f32) -> f32 + Copy>(
+    bytes: &[u8],
+    out: &mut [f32],
+    map: F,
+) {
+    unpack_blocks_body(bytes, FloatFormat { exp_bits: E, mant_bits: M }, out, map);
+}
+
+fn unpack_blocks<F: Fn(f32) -> f32 + Copy>(
+    bytes: &[u8],
+    fmt: FloatFormat,
+    out: &mut [f32],
+    map: F,
+) {
+    match (fmt.exp_bits, fmt.mant_bits) {
+        (5, 10) => unpack_blocks_mono::<5, 10, F>(bytes, out, map),
+        (4, 14) => unpack_blocks_mono::<4, 14, F>(bytes, out, map),
+        (3, 7) => unpack_blocks_mono::<3, 7, F>(bytes, out, map),
+        (2, 3) => unpack_blocks_mono::<2, 3, F>(bytes, out, map),
+        _ => unpack_blocks_body(bytes, fmt, out, map),
+    }
+}
+
+/// Fill an exactly-sized slice: blocks via the word kernel, tail via the
+/// scalar reference, `map` applied to every value.
+fn unpack_slice_with<F: Fn(f32) -> f32 + Copy>(
+    bytes: &[u8],
+    fmt: FloatFormat,
+    out: &mut [f32],
+    map: F,
+) {
+    if fmt.is_fp32() {
+        // degenerate 32-bit format: the payload is the raw f32 LE image
+        for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *o = map(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        return;
+    }
+    let n = out.len();
+    let nb = n / BLOCK * BLOCK;
+    let split = fmt.packed_bytes(nb); // block region is byte-aligned
+    unpack_blocks(&bytes[..split], fmt, &mut out[..nb], map);
+    let tail = &mut out[nb..];
+    let mut i = 0;
+    unpack_scalar_sink(&bytes[split..], n - nb, fmt, |v| {
+        tail[i] = map(v);
+        i += 1;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// public bulk API
+// ---------------------------------------------------------------------------
+
+/// Pack a slice of representable values into bytes (little-endian bit
+/// order: code 0 occupies the lowest bits of byte 0). Block fast path; the
+/// output is byte-identical to [`pack_scalar`].
+pub fn pack(values: &[f32], fmt: FloatFormat) -> Result<Vec<u8>, PackError> {
+    let mut out = Vec::new();
+    pack_extend(values, fmt, &mut out)?;
+    Ok(out)
+}
+
+/// Pack into a reused buffer (cleared first; capacity is retained across
+/// calls — the zero-alloc steady state).
+pub fn pack_into(values: &[f32], fmt: FloatFormat, out: &mut Vec<u8>) -> Result<(), PackError> {
+    out.clear();
+    pack_extend(values, fmt, out)
+}
+
+/// Pack, *appending* to `out` (used by the wire writer to emit payloads
+/// directly into the frame buffer with no intermediate allocation).
+pub fn pack_extend(
+    values: &[f32],
+    fmt: FloatFormat,
+    out: &mut Vec<u8>,
+) -> Result<(), PackError> {
+    check_representable(values, fmt)?;
+    let start = out.len();
+    out.resize(start + fmt.packed_bytes(values.len()), 0);
+    let dst = &mut out[start..];
+    if fmt.is_fp32() {
+        for (c, &x) in dst.chunks_exact_mut(4).zip(values) {
+            c.copy_from_slice(&x.to_le_bytes());
+        }
+        return Ok(());
+    }
+    let nb = values.len() / BLOCK * BLOCK;
+    let split = fmt.packed_bytes(nb);
+    let (head, tail) = dst.split_at_mut(split);
+    pack_blocks(&values[..nb], fmt, head);
+    pack_scalar_slice(&values[nb..], fmt, tail);
+    Ok(())
+}
+
+/// Multi-threaded pack for large tensors: whole-block chunks fan out over
+/// the scoped thread pool; the (byte-aligned) chunks land in disjoint spans
+/// of the output, so the result is byte-identical to the serial path.
+pub fn pack_threaded(
+    values: &[f32],
+    fmt: FloatFormat,
+    workers: usize,
+) -> Result<Vec<u8>, PackError> {
+    check_representable(values, fmt)?;
+    let n = values.len();
+    if workers <= 1 || n < PAR_MIN || fmt.is_fp32() {
+        return pack(values, fmt);
+    }
+    let mut out = vec![0u8; fmt.packed_bytes(n)];
+    let nb = n / BLOCK * BLOCK;
+    let split = fmt.packed_bytes(nb);
+    let bpb = BLOCK * fmt.bits() as usize / 8;
+    {
+        let (head, tail) = out.split_at_mut(split);
+        let items: Vec<(&[f32], &mut [u8])> = values[..nb]
+            .chunks(PAR_CHUNK_VALUES)
+            .zip(head.chunks_mut(PAR_CHUNK_VALUES / BLOCK * bpb))
+            .collect();
+        threadpool::scope_map_send(items, workers, |_, (v, o)| pack_blocks(v, fmt, o))
+            .expect("pack worker panicked");
+        pack_scalar_slice(&values[nb..], fmt, tail);
+    }
+    Ok(out)
+}
+
+/// Unpack `n` values from `bytes` (block fast path, bit-identical to
+/// [`unpack_scalar`]).
+pub fn unpack(bytes: &[u8], n: usize, fmt: FloatFormat) -> Vec<f32> {
+    let mut out = Vec::new();
+    unpack_into(bytes, n, fmt, &mut out);
+    out
+}
+
+/// Unpack into a reused buffer (cleared first, capacity retained).
+pub fn unpack_into(bytes: &[u8], n: usize, fmt: FloatFormat, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(n, 0.0);
+    unpack_slice_with(bytes, fmt, out, |v| v);
+}
+
+/// Unpack `n` values, applying the per-variable transform in the same pass
+/// (`V̄ = s·Ṽ + b` in f32, the wire-contract decompression) — saves a full
+/// re-traversal on the server's uplink-decode hot path.
+pub fn unpack_transform(bytes: &[u8], n: usize, fmt: FloatFormat, s: f32, b: f32) -> Vec<f32> {
+    let mut out = Vec::new();
+    unpack_transform_into(bytes, n, fmt, s, b, &mut out);
+    out
+}
+
+/// Fused unpack + transform into a reused buffer: the downlink decode path
+/// never materializes an intermediate `Vec<f32>` of quantized values.
+pub fn unpack_transform_into(
+    bytes: &[u8],
+    n: usize,
+    fmt: FloatFormat,
+    s: f32,
+    b: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(n, 0.0);
+    if s == 1.0 && b == 0.0 {
+        unpack_slice_with(bytes, fmt, out, |v| v);
+    } else {
+        unpack_slice_with(bytes, fmt, out, |v| s * v + b);
+    }
+}
+
+/// Multi-threaded fused unpack+transform for large tensors (block chunks
+/// over the thread pool; bit-identical to the serial path).
+pub fn unpack_transform_into_threaded(
+    bytes: &[u8],
+    n: usize,
+    fmt: FloatFormat,
+    s: f32,
+    b: f32,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    if workers <= 1 || n < PAR_MIN || fmt.is_fp32() {
+        return unpack_transform_into(bytes, n, fmt, s, b, out);
+    }
+    out.clear();
+    out.resize(n, 0.0);
+    let nb = n / BLOCK * BLOCK;
+    let split = fmt.packed_bytes(nb);
+    let bpb = BLOCK * fmt.bits() as usize / 8;
+    let (head, tail) = out.split_at_mut(nb);
+    let identity = s == 1.0 && b == 0.0;
+    let items: Vec<(&[u8], &mut [f32])> = bytes[..split]
+        .chunks(PAR_CHUNK_VALUES / BLOCK * bpb)
+        .zip(head.chunks_mut(PAR_CHUNK_VALUES))
+        .collect();
+    threadpool::scope_map_send(items, workers, |_, (bseg, oseg)| {
+        if identity {
+            unpack_blocks(bseg, fmt, oseg, |v| v);
+        } else {
+            unpack_blocks(bseg, fmt, oseg, |v| s * v + b);
+        }
+    })
+    .expect("unpack worker panicked");
+    let mut i = 0;
+    unpack_scalar_sink(&bytes[split..], n - nb, fmt, |v| {
+        tail[i] = if identity { v } else { s * v + b };
+        i += 1;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fused uplink pipeline: quantize → PVT fit → pack in one pass
+// ---------------------------------------------------------------------------
+
+/// Single-pass compress: quantize each 256-value block into a stack buffer,
+/// feed the (value, quantized) pairs to the PVT least-squares accumulator,
+/// and bit-pack the block — no intermediate `Vec<f32>` of quantized values
+/// is ever materialized. Appends the payload to `out` and returns the
+/// fitted transform (identity when `use_pvt` is false).
+///
+/// Bit-exactness: the f64 fit sums accumulate in the same element order as
+/// `transform::fit` over `quantize::quantize_vec`, and the packed bytes go
+/// through the same block kernels as `pack`, so payload and PVT scalars are
+/// identical to the separate-pass reference (property-tested in
+/// `rust/tests/omc_kernels.rs`).
+pub fn quantize_transform_pack(
+    values: &[f32],
+    fmt: FloatFormat,
+    use_pvt: bool,
+    out: &mut Vec<u8>,
+) -> Pvt {
+    match (fmt.exp_bits, fmt.mant_bits) {
+        (5, 10) => qtp_mono::<5, 10>(values, use_pvt, out),
+        (4, 14) => qtp_mono::<4, 14>(values, use_pvt, out),
+        (3, 7) => qtp_mono::<3, 7>(values, use_pvt, out),
+        (2, 3) => qtp_mono::<2, 3>(values, use_pvt, out),
+        _ => qtp_body(values, fmt, use_pvt, out),
+    }
+}
+
+fn qtp_mono<const E: u32, const M: u32>(values: &[f32], use_pvt: bool, out: &mut Vec<u8>) -> Pvt {
+    qtp_body(values, FloatFormat { exp_bits: E, mant_bits: M }, use_pvt, out)
+}
+
+#[inline(always)]
+fn qtp_body(values: &[f32], fmt: FloatFormat, use_pvt: bool, out: &mut Vec<u8>) -> Pvt {
+    let width = fmt.bits() as usize;
+    let start = out.len();
+    out.resize(start + fmt.packed_bytes(values.len()), 0);
+    let dst = &mut out[start..];
+    let mut q = [0.0f32; BLOCK];
+    let mut acc = FitAcc::new();
+    let mut off = 0usize;
+    for chunk in values.chunks(BLOCK) {
+        let qs = &mut q[..chunk.len()];
+        for (o, &x) in qs.iter_mut().zip(chunk) {
+            *o = quantize_one(x, fmt);
+        }
+        if use_pvt {
+            acc.update(chunk, qs);
+        }
+        let nbytes = (chunk.len() * width + 7) / 8;
+        let seg = &mut dst[off..off + nbytes];
+        if chunk.len() == BLOCK {
+            pack_blocks_body(qs, fmt, seg);
+        } else {
+            pack_scalar_slice(qs, fmt, seg);
+        }
+        off += nbytes;
+    }
+    debug_assert_eq!(off, dst.len());
+    if use_pvt {
+        acc.finish()
+    } else {
+        Pvt::IDENTITY
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::omc::quantize::{quantize_one, quantize_vec};
+    use crate::omc::transform;
     use crate::testkit::{check, Gen};
 
     const FORMATS: [&str; 7] = [
@@ -233,6 +662,115 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn block_path_matches_scalar_reference_property() {
+        // the core correctness contract of the block kernel layer:
+        // byte-identical payloads, bit-identical decodes, across formats,
+        // scales, and tail lengths (incl. exactly-BLOCK boundaries)
+        check("block_vs_scalar", 80, |g| {
+            let fmt: FloatFormat =
+                FORMATS[g.usize_below(FORMATS.len())].parse().unwrap();
+            let n = match g.usize_below(5) {
+                0 => g.usize_below(BLOCK),               // scalar only
+                1 => BLOCK * (1 + g.usize_below(4)),     // whole blocks
+                _ => 1 + g.usize_below(3 * BLOCK),       // blocks + tail
+            };
+            let scale = [1e-6f32, 0.05, 1.0, 1e4][g.usize_below(4)];
+            let v = quantize_vec(&g.vec_normal(n, scale), fmt);
+            let reference = pack_scalar(&v, fmt).map_err(|e| e.to_string())?;
+            let fast = pack(&v, fmt).map_err(|e| e.to_string())?;
+            if reference != fast {
+                return Err(format!("{fmt} n={n}: pack bytes differ"));
+            }
+            let a = unpack_scalar(&reference, n, fmt);
+            let b = unpack(&fast, n, fmt);
+            for i in 0..n {
+                if a[i].to_bits() != b[i].to_bits() {
+                    return Err(format!("{fmt} n={n} idx {i}: decode differs"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_pipeline_matches_separate_passes() {
+        check("fused_qtp", 40, |g| {
+            let fmt: FloatFormat =
+                FORMATS[g.usize_below(FORMATS.len())].parse().unwrap();
+            let n = 1 + g.usize_below(2000);
+            let scale = [1e-5f32, 0.05, 10.0][g.usize_below(3)];
+            let v = g.vec_normal(n, scale);
+            let use_pvt = g.usize_below(2) == 0;
+            // reference: three separate passes
+            let vt = quantize_vec(&v, fmt);
+            let ref_pvt = if use_pvt {
+                transform::fit(&v, &vt)
+            } else {
+                Pvt::IDENTITY
+            };
+            let ref_bytes = pack_scalar(&vt, fmt).map_err(|e| e.to_string())?;
+            // fused single pass
+            let mut bytes = Vec::new();
+            let pvt = quantize_transform_pack(&v, fmt, use_pvt, &mut bytes);
+            if bytes != ref_bytes {
+                return Err(format!("{fmt} n={n}: fused payload differs"));
+            }
+            if pvt.s.to_bits() != ref_pvt.s.to_bits()
+                || pvt.b.to_bits() != ref_pvt.b.to_bits()
+            {
+                return Err(format!(
+                    "{fmt} n={n}: pvt {pvt:?} != {ref_pvt:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn into_variants_reuse_capacity() {
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let mut g = Gen::new(21);
+        let v = quantize_vec(&g.vec_normal(4096, 0.05), fmt);
+        let mut bytes = Vec::new();
+        pack_into(&v, fmt, &mut bytes).unwrap();
+        let cap = bytes.capacity();
+        let ptr = bytes.as_ptr();
+        pack_into(&v, fmt, &mut bytes).unwrap();
+        assert_eq!(bytes.capacity(), cap);
+        assert_eq!(bytes.as_ptr(), ptr, "pack_into must not reallocate");
+        let mut out = Vec::new();
+        unpack_into(&bytes, v.len(), fmt, &mut out);
+        let optr = out.as_ptr();
+        unpack_into(&bytes, v.len(), fmt, &mut out);
+        assert_eq!(out.as_ptr(), optr, "unpack_into must not reallocate");
+        for (a, b) in out.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn threaded_variants_match_serial() {
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let mut g = Gen::new(23);
+        // large enough to cross PAR_MIN, with a non-block tail
+        let v = quantize_vec(&g.vec_normal(PAR_MIN + 777, 0.05), fmt);
+        let serial = pack(&v, fmt).unwrap();
+        for workers in [1, 2, 5] {
+            let par = pack_threaded(&v, fmt, workers).unwrap();
+            assert_eq!(serial, par, "workers={workers}");
+            let mut out = Vec::new();
+            unpack_transform_into_threaded(
+                &par, v.len(), fmt, 1.5, -0.25, workers, &mut out,
+            );
+            let reference = unpack_transform(&serial, v.len(), fmt, 1.5, -0.25);
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]
@@ -309,6 +847,8 @@ mod tests {
             let fmt: FloatFormat = "S1E3M7".parse().unwrap();
             let r = pack(&[0.1f32], fmt);
             assert!(matches!(r, Err(PackError::NotRepresentable { .. })));
+            let r = pack_scalar(&[0.1f32], fmt);
+            assert!(matches!(r, Err(PackError::NotRepresentable { .. })));
         }
     }
 
@@ -344,9 +884,21 @@ mod tests {
         let v = g.vec_normal(100, 1.0);
         let bytes = pack(&v, fmt).unwrap();
         assert_eq!(bytes.len(), 400);
+        assert_eq!(bytes, pack_scalar(&v, fmt).unwrap());
         let back = unpack(&bytes, 100, fmt);
         for (a, b) in back.iter().zip(&v) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn unpack_transform_preserves_identity_bits() {
+        // s=1, b=0 must take the bit-copy path: -0.0 stays -0.0 (an affine
+        // -0.0*1+0 would flip it to +0.0)
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let vals = quantize_vec(&[-0.0f32, 0.5, -0.25], fmt);
+        let bytes = pack(&vals, fmt).unwrap();
+        let back = unpack_transform(&bytes, 3, fmt, 1.0, 0.0);
+        assert_eq!(back[0].to_bits(), (-0.0f32).to_bits());
     }
 }

@@ -85,6 +85,14 @@ pub fn quantize_vec(xs: &[f32], fmt: FloatFormat) -> Vec<f32> {
     out
 }
 
+/// Quantize into a reused buffer (cleared first, capacity retained across
+/// calls — the codec scratch-buffer discipline).
+pub fn quantize_into(xs: &[f32], fmt: FloatFormat, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(xs.len(), 0.0);
+    quantize_slice(xs, fmt, out);
+}
+
 /// True iff `x` is exactly representable in `fmt` (i.e. a fixed point of
 /// the quantizer). Used by debug assertions and the packer.
 pub fn is_representable(x: f32, fmt: FloatFormat) -> bool {
@@ -310,6 +318,22 @@ mod tests {
         assert_eq!(
             a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn quantize_into_reuses_capacity() {
+        let fmt = fmt("S1E3M7");
+        let mut g = Gen::new(23);
+        let xs: Vec<f32> = (0..500).map(|_| g.f32_normalish(0.1)).collect();
+        let mut out = Vec::new();
+        quantize_into(&xs, fmt, &mut out);
+        let ptr = out.as_ptr();
+        quantize_into(&xs, fmt, &mut out);
+        assert_eq!(out.as_ptr(), ptr, "quantize_into must not reallocate");
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            quantize_vec(&xs, fmt).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
     }
 

@@ -7,10 +7,11 @@
 //! they are consumed — mirroring the paper's transient-variable discipline.
 //! `memory_bytes()` is the quantity Sec. 3.4 measures.
 
+use std::borrow::Cow;
+
 use super::format::FloatFormat;
 use super::pack;
-use super::quantize;
-use super::transform::{self, Pvt};
+use super::transform::Pvt;
 
 /// One variable in the store.
 #[derive(Clone, Debug)]
@@ -29,17 +30,18 @@ pub enum StoredVar {
 impl StoredVar {
     /// Compress `values` (exact quantizer fixed points NOT required — this
     /// quantizes) with a PVT fit, or store raw when `fmt` is FP32.
+    ///
+    /// Runs the fused single-pass pipeline
+    /// [`pack::quantize_transform_pack`]: quantize → PVT fit → bit-pack per
+    /// 256-value block, never materializing the intermediate quantized
+    /// `Vec<f32>`. Payload bytes and PVT scalars are bit-identical to the
+    /// separate-pass reference.
     pub fn compress(values: &[f32], fmt: FloatFormat, use_pvt: bool) -> Self {
         if fmt.is_fp32() {
             return StoredVar::Raw(values.to_vec());
         }
-        let vt = quantize::quantize_vec(values, fmt);
-        let pvt = if use_pvt {
-            transform::fit(values, &vt)
-        } else {
-            Pvt::IDENTITY
-        };
-        let bytes = pack::pack(&vt, fmt).expect("quantized values must pack");
+        let mut bytes = Vec::new();
+        let pvt = pack::quantize_transform_pack(values, fmt, use_pvt, &mut bytes);
         StoredVar::Packed {
             bytes,
             n: values.len(),
@@ -91,6 +93,20 @@ impl StoredVar {
         }
     }
 
+    /// [`decode_tilde`](Self::decode_tilde) into a reused buffer (cleared
+    /// first, capacity retained — no allocation in the steady state).
+    pub fn decode_tilde_into(&self, out: &mut Vec<f32>) {
+        match self {
+            StoredVar::Raw(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+            }
+            StoredVar::Packed { bytes, n, fmt, .. } => {
+                pack::unpack_into(bytes, *n, *fmt, out)
+            }
+        }
+    }
+
     /// Decompress to the transformed view `V̄ = s·Ṽ + b` — the values the
     /// model actually computes with (single fused unpack+affine pass).
     pub fn decompress(&self) -> Vec<f32> {
@@ -99,6 +115,40 @@ impl StoredVar {
             StoredVar::Packed { bytes, n, fmt, pvt } => {
                 pack::unpack_transform(bytes, *n, *fmt, pvt.s, pvt.b)
             }
+        }
+    }
+
+    /// [`decompress`](Self::decompress) into a reused buffer.
+    pub fn decompress_into(&self, out: &mut Vec<f32>) {
+        match self {
+            StoredVar::Raw(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+            }
+            StoredVar::Packed { bytes, n, fmt, pvt } => {
+                pack::unpack_transform_into(bytes, *n, *fmt, pvt.s, pvt.b, out)
+            }
+        }
+    }
+
+    /// Borrowing decompressed view: `Raw` variables are returned as a
+    /// borrow (no copy — the fix for the per-call clone the old
+    /// `decompress` forced on unquantized variables); packed variables
+    /// decode into an owned vector.
+    pub fn as_f32s(&self) -> Cow<'_, [f32]> {
+        match self {
+            StoredVar::Raw(v) => Cow::Borrowed(v.as_slice()),
+            StoredVar::Packed { .. } => Cow::Owned(self.decompress()),
+        }
+    }
+
+    /// Consuming decompress: `Raw` variables are *moved* out (zero-copy),
+    /// packed variables decode. Use when the store is dropped right after —
+    /// e.g. the server's uplink-decode path.
+    pub fn into_f32s(self) -> Vec<f32> {
+        match self {
+            StoredVar::Raw(v) => v,
+            packed => packed.decompress(),
         }
     }
 
@@ -156,11 +206,18 @@ impl CompressedModel {
     pub fn decompress_all(&self) -> Vec<Vec<f32>> {
         self.vars.iter().map(|v| v.decompress()).collect()
     }
+
+    /// Consuming [`decompress_all`](Self::decompress_all): raw variables
+    /// move out without copying.
+    pub fn into_decompressed(self) -> Vec<Vec<f32>> {
+        self.vars.into_iter().map(|v| v.into_f32s()).collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::omc::{quantize, transform};
     use crate::testkit::Gen;
 
     fn fmt(s: &str) -> FloatFormat {
@@ -249,5 +306,53 @@ mod tests {
         let m = CompressedModel::default();
         assert_eq!(m.memory_bytes(), 0);
         assert_eq!(m.memory_ratio(), 1.0);
+    }
+
+    #[test]
+    fn borrowing_and_consuming_accessors_agree() {
+        let mut g = Gen::new(6);
+        let v = g.vec_normal(700, 0.05);
+        let raw = StoredVar::raw(v.clone());
+        let packed = StoredVar::compress(&v, fmt("S1E3M7"), true);
+        // as_f32s borrows for Raw (no copy), owns for Packed
+        assert!(matches!(raw.as_f32s(), std::borrow::Cow::Borrowed(_)));
+        assert!(matches!(packed.as_f32s(), std::borrow::Cow::Owned(_)));
+        for sv in [&raw, &packed] {
+            let reference = sv.decompress();
+            assert_eq!(sv.as_f32s().as_ref(), reference.as_slice());
+            let mut buf = Vec::new();
+            sv.decompress_into(&mut buf);
+            assert_eq!(buf, reference);
+            let mut tilde = Vec::new();
+            sv.decode_tilde_into(&mut tilde);
+            assert_eq!(tilde, sv.decode_tilde());
+        }
+        // into_f32s moves the Raw storage (pointer-stable)
+        let ptr = match &raw {
+            StoredVar::Raw(v) => v.as_ptr(),
+            _ => unreachable!(),
+        };
+        let moved = raw.into_f32s();
+        assert_eq!(moved.as_ptr(), ptr, "Raw into_f32s must move, not copy");
+        assert_eq!(packed.into_f32s(), packed2_reference(&v));
+    }
+
+    fn packed2_reference(v: &[f32]) -> Vec<f32> {
+        StoredVar::compress(v, fmt("S1E3M7"), true).decompress()
+    }
+
+    #[test]
+    fn into_decompressed_matches_decompress_all() {
+        let mut g = Gen::new(7);
+        let mk = |g: &mut Gen| {
+            CompressedModel::new(vec![
+                StoredVar::compress(&g.vec_normal(500, 0.05), fmt("S1E3M7"), true),
+                StoredVar::raw(g.vec_normal(64, 1.0)),
+            ])
+        };
+        let a = mk(&mut g).decompress_all();
+        let mut g2 = Gen::new(7);
+        let b = mk(&mut g2).into_decompressed();
+        assert_eq!(a, b);
     }
 }

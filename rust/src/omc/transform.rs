@@ -29,36 +29,72 @@ impl Pvt {
     }
 }
 
+/// Streaming accumulator for the least-squares fit — the single source of
+/// truth for the PVT math, shared by [`fit`] and the fused
+/// quantize→fit→pack pipeline (`pack::quantize_transform_pack`). Feeding
+/// the same `(v, vt)` pairs in the same order produces bit-identical f64
+/// sums, which is what keeps the fused path's scalars exactly equal to the
+/// separate-pass reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FitAcc {
+    n: usize,
+    sum_v: f64,
+    sum_t: f64,
+    sum_tt: f64,
+    sum_vt: f64,
+}
+
+impl FitAcc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: f32, t: f32) {
+        let a = v as f64;
+        let t = t as f64;
+        self.sum_v += a;
+        self.sum_t += t;
+        self.sum_tt += t * t;
+        self.sum_vt += a * t;
+        self.n += 1;
+    }
+
+    /// Accumulate a batch of pairs (same element order as a plain loop).
+    pub fn update(&mut self, v: &[f32], vt: &[f32]) {
+        assert_eq!(v.len(), vt.len());
+        for (&a, &t) in v.iter().zip(vt) {
+            self.push(a, t);
+        }
+    }
+
+    /// Solve for `(s, b)`; degenerate cases fall back to `s = 1`.
+    pub fn finish(&self) -> Pvt {
+        if self.n == 0 {
+            return Pvt::IDENTITY;
+        }
+        let nf = self.n as f64;
+        let den = nf * self.sum_tt - self.sum_t * self.sum_t;
+        let num = nf * self.sum_vt - self.sum_v * self.sum_t;
+        let s_raw = num / den;
+        let s = if den == 0.0 || !s_raw.is_finite() {
+            1.0
+        } else {
+            s_raw
+        };
+        let b = (self.sum_v - s * self.sum_t) / nf;
+        Pvt {
+            s: s as f32,
+            b: b as f32,
+        }
+    }
+}
+
 /// Least-squares fit of `s·vt + b ≈ v` (both slices the same length).
 pub fn fit(v: &[f32], vt: &[f32]) -> Pvt {
-    assert_eq!(v.len(), vt.len());
-    let n = v.len();
-    if n == 0 {
-        return Pvt::IDENTITY;
-    }
-    let nf = n as f64;
-    let (mut sum_v, mut sum_t, mut sum_tt, mut sum_vt) = (0f64, 0f64, 0f64, 0f64);
-    for i in 0..n {
-        let a = v[i] as f64;
-        let t = vt[i] as f64;
-        sum_v += a;
-        sum_t += t;
-        sum_tt += t * t;
-        sum_vt += a * t;
-    }
-    let den = nf * sum_tt - sum_t * sum_t;
-    let num = nf * sum_vt - sum_v * sum_t;
-    let s_raw = num / den;
-    let s = if den == 0.0 || !s_raw.is_finite() {
-        1.0
-    } else {
-        s_raw
-    };
-    let b = (sum_v - s * sum_t) / nf;
-    Pvt {
-        s: s as f32,
-        b: b as f32,
-    }
+    let mut acc = FitAcc::new();
+    acc.update(v, vt);
+    acc.finish()
 }
 
 /// Apply the transform in f32 — exactly what the lowered graph computes on
@@ -196,6 +232,23 @@ mod tests {
         let mut b = vt.clone();
         apply_in_place(p, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn streaming_fit_matches_batch_bitexact() {
+        // FitAcc fed block-by-block (as the fused pipeline does) must equal
+        // a single fit() call bit-for-bit — f64 sums in identical order
+        let mut g = Gen::new(27);
+        let v = g.vec_normal(4096 + 133, 0.05);
+        let vt = quantize_vec(&v, FloatFormat::new(3, 7).unwrap());
+        let whole = fit(&v, &vt);
+        let mut acc = FitAcc::new();
+        for (cv, ct) in v.chunks(256).zip(vt.chunks(256)) {
+            acc.update(cv, ct);
+        }
+        let streamed = acc.finish();
+        assert_eq!(whole.s.to_bits(), streamed.s.to_bits());
+        assert_eq!(whole.b.to_bits(), streamed.b.to_bits());
     }
 
     #[test]

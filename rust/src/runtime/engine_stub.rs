@@ -1,0 +1,158 @@
+//! Stub PJRT engine — compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of `engine.rs` so the rest of the crate (FL
+//! substrate, coordinator, examples, integration tests) builds without the
+//! `xla` bindings. Every constructor fails with a clear error at runtime;
+//! nothing downstream of [`Engine::cpu`] can execute. Integration tests
+//! guard on `artifacts/` existing before touching the engine, so a stub
+//! build still runs the whole pure-Rust test suite.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::Manifest;
+
+const STUB_MSG: &str =
+    "PJRT runtime not available: this binary was built without the `pjrt` \
+     feature (requires the xla/xla_extension toolchain). Rebuild with \
+     `cargo build --features pjrt`.";
+
+/// Placeholder for an on-device literal (never constructed in stub builds).
+pub struct Literal(());
+
+/// The PJRT client stub.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn load_model(&self, _dir: &Path) -> Result<LoadedModel> {
+        bail!(STUB_MSG)
+    }
+}
+
+/// A compiled artifact (stub).
+pub struct Executable {
+    pub name: String,
+    _private: (),
+}
+
+impl Executable {
+    pub fn run(&self, _args: &[Literal]) -> Result<Vec<Literal>> {
+        bail!(STUB_MSG)
+    }
+}
+
+pub fn lit_f32(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+    bail!(STUB_MSG)
+}
+
+pub fn lit_i32(_data: &[i32], _dims: &[i64]) -> Result<Literal> {
+    bail!(STUB_MSG)
+}
+
+pub fn lit_f32_scalar(_x: f32) -> Literal {
+    unreachable!("stub build: literals cannot be constructed")
+}
+
+pub fn lit_i32_scalar(_x: i32) -> Literal {
+    unreachable!("stub build: literals cannot be constructed")
+}
+
+pub fn to_f32_vec(_lit: &Literal) -> Result<Vec<f32>> {
+    bail!(STUB_MSG)
+}
+
+pub fn to_i32_vec(_lit: &Literal) -> Result<Vec<i32>> {
+    bail!(STUB_MSG)
+}
+
+pub fn to_f32_scalar(_lit: &Literal) -> Result<f32> {
+    bail!(STUB_MSG)
+}
+
+/// The bound artifact set for one model size (stub — never constructed).
+pub struct LoadedModel {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    _private: (),
+}
+
+/// Outputs of one OMC training step.
+pub struct OmcStepOut {
+    pub tildes: Vec<Vec<f32>>,
+    pub s: Vec<f32>,
+    pub b: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Outputs of one FP32 training step.
+pub struct Fp32StepOut {
+    pub params: Vec<Vec<f32>>,
+    pub loss: f32,
+}
+
+/// Outputs of one eval step.
+pub struct EvalOut {
+    pub loss: f32,
+    /// greedy framewise predictions, row-major [batch, seq_len]
+    pub pred: Vec<i32>,
+}
+
+impl LoadedModel {
+    pub fn num_vars(&self) -> usize {
+        self.manifest.num_vars()
+    }
+
+    pub fn warmup(&self, _fp32_baseline: bool, _use_pvt: bool) -> Result<()> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn run_init(&self, _seed: i32) -> Result<Vec<Vec<f32>>> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn run_train_fp32(
+        &self,
+        _params: &[Vec<f32>],
+        _x: &[f32],
+        _y: &[i32],
+        _lr: f32,
+    ) -> Result<Fp32StepOut> {
+        bail!(STUB_MSG)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_train_omc(
+        &self,
+        _use_pvt: bool,
+        _tildes: &[Vec<f32>],
+        _s: &[f32],
+        _b: &[f32],
+        _mask: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _lr: f32,
+        _exp_bits: u32,
+        _mant_bits: u32,
+    ) -> Result<OmcStepOut> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn run_eval(&self, _params: &[Vec<f32>], _x: &[f32], _y: &[i32]) -> Result<EvalOut> {
+        bail!(STUB_MSG)
+    }
+}

@@ -3,7 +3,17 @@
 //! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
 //! `HloModuleProto` → compile → execute. One compiled executable per
 //! artifact; Python never runs here.
+//!
+//! The `xla` bindings are only present behind the `pjrt` feature; default
+//! builds get `engine_stub.rs`, an API-identical stub whose constructors
+//! error at runtime (integration tests skip themselves when `artifacts/`
+//! is missing, so the pure-Rust suite runs either way).
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use engine::{Engine, LoadedModel};

@@ -7,62 +7,78 @@
 //! (and exercises the same code path a many-core host would use), sized by
 //! `available_parallelism`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 use std::thread;
 
 /// Run `f(i, &items[i])` for every item on `workers` threads, collecting
 /// results in input order. Panics in workers propagate as `Err`.
+/// (Thin wrapper over [`scope_map_send`]: `&T` is `Send` when `T: Sync`.)
 pub fn scope_map<T, R, F>(items: &[T], workers: usize, f: F) -> anyhow::Result<Vec<R>>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    scope_map_send(items.iter().collect(), workers, |i, t| f(i, t))
+}
+
+/// Like [`scope_map`], but items are consumed *by value* (`T: Send`, not
+/// `Sync`). This is what lets the block codec hand each worker a disjoint
+/// `(&[f32], &mut [u8])` span of one large tensor: mutable slices are
+/// `Send` but not `Sync`, so they cannot go through `scope_map`'s shared
+/// `&[T]`. Results come back in input order; worker panics become `Err`.
+pub fn scope_map_send<T, R, F>(items: Vec<T>, workers: usize, f: F) -> anyhow::Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Ok(Vec::new());
     }
     let workers = workers.max(1).min(n);
-    let next = Arc::new(Mutex::new(0usize));
+    if workers == 1 {
+        return Ok(items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect());
+    }
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
 
     thread::scope(|scope| {
         for _ in 0..workers {
-            let next = Arc::clone(&next);
             let tx = tx.clone();
-            let f = &f;
+            let (f, slots, next) = (&f, &slots, &next);
             scope.spawn(move || loop {
-                let i = {
-                    let mut g = next.lock().unwrap();
-                    if *g >= n {
-                        break;
-                    }
-                    let i = *g;
-                    *g += 1;
-                    i
-                };
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    f(i, &items[i])
-                }));
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().unwrap();
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || f(i, item),
+                ));
                 if tx.send((i, out)).is_err() {
                     break;
                 }
             });
         }
         drop(tx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let mut panicked = false;
         for (i, res) in rx {
             match res {
-                Ok(r) => slots[i] = Some(r),
+                Ok(r) => out[i] = Some(r),
                 Err(_) => panicked = true,
             }
         }
         if panicked {
             anyhow::bail!("worker job panicked");
         }
-        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+        Ok(out.into_iter().map(|s| s.unwrap()).collect())
     })
 }
 
@@ -125,5 +141,37 @@ mod tests {
         let items = vec![5u32];
         let out = scope_map(&items, 16, |_, &x| x).unwrap();
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn send_variant_consumes_mutable_slices() {
+        // the parallel-codec use case: disjoint &mut spans of one buffer
+        let mut buf = vec![0u32; 64];
+        let items: Vec<(usize, &mut [u32])> =
+            buf.chunks_mut(16).enumerate().collect();
+        scope_map_send(items, 4, |_, (ci, chunk)| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 16 + j) as u32;
+            }
+        })
+        .unwrap();
+        assert_eq!(buf, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn send_variant_matches_serial_and_propagates_panics() {
+        let items: Vec<u64> = (0..57).collect();
+        let a = scope_map_send(items.clone(), 1, |i, x| x * 2 + i as u64).unwrap();
+        let b = scope_map_send(items, 6, |i, x| x * 2 + i as u64).unwrap();
+        assert_eq!(a, b);
+        let r = scope_map_send(vec![1, 2, 3], 2, |_, x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        assert!(r.is_err());
+        let empty: Vec<u32> = scope_map_send(Vec::<u32>::new(), 3, |_, x| x).unwrap();
+        assert!(empty.is_empty());
     }
 }

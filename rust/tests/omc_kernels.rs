@@ -1,0 +1,231 @@
+//! Bit-exactness property tests for the block codec kernel layer.
+//!
+//! Correctness contract (see `omc::pack` module docs): the block/word
+//! kernels, the fused pipelines, and the threaded variants must produce
+//! **byte-identical wire payloads** and **bit-identical decoded f32s**
+//! versus the scalar reference path (`pack_scalar` / `unpack_scalar`) —
+//! for every format, including subnormals, saturated values, signed
+//! zeros, and tail lengths not divisible by the 256-value block size.
+
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::pack::{
+    pack, pack_scalar, pack_threaded, quantize_transform_pack, unpack,
+    unpack_scalar, unpack_transform, unpack_transform_into,
+    unpack_transform_into_threaded, BLOCK,
+};
+use omc_fl::omc::quantize::{quantize_one, quantize_vec};
+use omc_fl::omc::transform::{fit, Pvt};
+use omc_fl::testkit::{check, Gen};
+
+/// The paper's table formats (monomorphized fast paths) plus two formats
+/// that exercise the generic-width kernel.
+const FORMATS: [&str; 6] = [
+    "S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3", "S1E3M9", "S1E5M7",
+];
+
+/// Lengths straddling every dispatch boundary: empty, scalar-only tails,
+/// exact block multiples, and block multiples ± small tails.
+const LENGTHS: [usize; 10] = [
+    0,
+    1,
+    7,
+    BLOCK - 1,
+    BLOCK,
+    BLOCK + 1,
+    2 * BLOCK,
+    4 * BLOCK - 3,
+    4 * BLOCK,
+    4 * BLOCK + 129,
+];
+
+/// A value set deliberately heavy in edge cases for `fmt`: signed zeros,
+/// the whole subnormal neighborhood, saturation at ±max, and normals
+/// across scales.
+fn edge_heavy_values(g: &mut Gen, n: usize, fmt: FloatFormat) -> Vec<f32> {
+    let quantum = fmt.min_positive() as f32;
+    let max = fmt.max_value() as f32;
+    let mut v = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = match i % 8 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => quantum * g.usize_below(1 << fmt.mant_bits.min(16)) as f32,
+            3 => -quantum * g.usize_below(3) as f32,
+            4 => 1e30,  // saturates to +max
+            5 => -1e30, // saturates to -max
+            6 => max,
+            _ => g.f32_normalish([1e-6, 0.05, 1.0, 1e3][g.usize_below(4)]),
+        };
+        v.push(x);
+    }
+    quantize_vec(&v, fmt)
+}
+
+#[test]
+fn block_pack_is_byte_identical_to_scalar_for_all_formats_and_tails() {
+    let mut g = Gen::new(101);
+    for fmt_s in FORMATS {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        for n in LENGTHS {
+            let v = edge_heavy_values(&mut g, n, fmt);
+            let reference = pack_scalar(&v, fmt).unwrap();
+            let fast = pack(&v, fmt).unwrap();
+            assert_eq!(reference, fast, "{fmt_s} n={n}: payload bytes differ");
+            assert_eq!(reference.len(), fmt.packed_bytes(n), "{fmt_s} n={n}");
+        }
+    }
+}
+
+#[test]
+fn block_unpack_is_bit_identical_to_scalar_for_all_formats_and_tails() {
+    let mut g = Gen::new(102);
+    for fmt_s in FORMATS {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        for n in LENGTHS {
+            let v = edge_heavy_values(&mut g, n, fmt);
+            let bytes = pack_scalar(&v, fmt).unwrap();
+            let a = unpack_scalar(&bytes, n, fmt);
+            let b = unpack(&bytes, n, fmt);
+            for i in 0..n {
+                assert_eq!(
+                    a[i].to_bits(),
+                    b[i].to_bits(),
+                    "{fmt_s} n={n} idx {i}"
+                );
+                assert_eq!(
+                    b[i].to_bits(),
+                    v[i].to_bits(),
+                    "{fmt_s} n={n} idx {i}: roundtrip"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_compress_matches_separate_passes_property() {
+    // quantize_transform_pack == quantize_vec + fit + pack_scalar, bit for
+    // bit, across random formats, scales, pvt on/off, subnormal-heavy and
+    // saturating inputs
+    check("fused_qtp_full", 120, |g| {
+        let fmt: FloatFormat =
+            FORMATS[g.usize_below(FORMATS.len())].parse().unwrap();
+        let n = g.usize_below(3 * BLOCK + 2);
+        let use_pvt = g.usize_below(2) == 0;
+        // raw (unquantized) inputs — the fused pipeline quantizes itself
+        let mut v = g.vec_normal(n, [1e-7f32, 0.05, 1.0, 1e5][g.usize_below(4)]);
+        if n > 2 {
+            v[0] = f32::INFINITY; // saturates
+            v[1] = -0.0;
+            v[2] = fmt.min_positive() as f32 / 2.0; // subnormal rounding
+        }
+        let vt = quantize_vec(&v, fmt);
+        let ref_pvt = if use_pvt { fit(&v, &vt) } else { Pvt::IDENTITY };
+        let ref_bytes = pack_scalar(&vt, fmt).map_err(|e| e.to_string())?;
+
+        let mut bytes = Vec::new();
+        let pvt = quantize_transform_pack(&v, fmt, use_pvt, &mut bytes);
+        if bytes != ref_bytes {
+            return Err(format!("{fmt} n={n} pvt={use_pvt}: payload differs"));
+        }
+        if pvt.s.to_bits() != ref_pvt.s.to_bits()
+            || pvt.b.to_bits() != ref_pvt.b.to_bits()
+        {
+            return Err(format!("{fmt} n={n}: pvt {pvt:?} != {ref_pvt:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_decompress_matches_separate_passes_property() {
+    check("fused_unpack_transform", 100, |g| {
+        let fmt: FloatFormat =
+            FORMATS[g.usize_below(FORMATS.len())].parse().unwrap();
+        let n = g.usize_below(3 * BLOCK + 2);
+        let v = quantize_vec(
+            &g.vec_normal(n, [1e-6f32, 0.05, 1e3][g.usize_below(3)]),
+            fmt,
+        );
+        let bytes = pack_scalar(&v, fmt).map_err(|e| e.to_string())?;
+        let (s, b) = if g.usize_below(3) == 0 {
+            (1.0, 0.0) // identity fast path (must preserve -0.0 bits)
+        } else {
+            (g.f32_normalish(1.0), g.f32_normalish(0.1))
+        };
+        // reference: scalar unpack, then the affine in a separate pass
+        let tilde = unpack_scalar(&bytes, n, fmt);
+        let reference: Vec<f32> = if s == 1.0 && b == 0.0 {
+            tilde
+        } else {
+            tilde.iter().map(|&t| s * t + b).collect()
+        };
+        let fused = unpack_transform(&bytes, n, fmt, s, b);
+        let mut fused_into = Vec::new();
+        unpack_transform_into(&bytes, n, fmt, s, b, &mut fused_into);
+        for i in 0..n {
+            if fused[i].to_bits() != reference[i].to_bits()
+                || fused_into[i].to_bits() != reference[i].to_bits()
+            {
+                return Err(format!("{fmt} n={n} idx {i} s={s} b={b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_kernels_match_serial_property() {
+    check("threaded_vs_serial", 8, |g| {
+        let fmt: FloatFormat =
+            ["S1E5M10", "S1E3M7"][g.usize_below(2)].parse().unwrap();
+        // big enough to engage the parallel path, odd tail included
+        let n = 640 * BLOCK + g.usize_below(2 * BLOCK);
+        let v = quantize_vec(&g.vec_normal(n, 0.05), fmt);
+        let serial = pack(&v, fmt).map_err(|e| e.to_string())?;
+        let workers = 2 + g.usize_below(4);
+        let par = pack_threaded(&v, fmt, workers).map_err(|e| e.to_string())?;
+        if serial != par {
+            return Err(format!("{fmt} n={n} workers={workers}: pack differs"));
+        }
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        unpack_transform_into(&serial, n, fmt, 1.1, 0.01, &mut a);
+        unpack_transform_into_threaded(&par, n, fmt, 1.1, 0.01, workers, &mut b);
+        for i in 0..n {
+            if a[i].to_bits() != b[i].to_bits() {
+                return Err(format!("{fmt} idx {i}: unpack differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saturated_and_subnormal_codes_survive_the_wire() {
+    // the classic trouble spots, checked end to end through pack→unpack
+    for fmt_s in FORMATS {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        let quantum = fmt.min_positive() as f32;
+        let max = fmt.max_value() as f32;
+        let mut vals = vec![0.0f32, -0.0, max, -max];
+        for k in 0..(1usize << fmt.mant_bits.min(10)) {
+            vals.push(k as f32 * quantum);
+            vals.push(-(k as f32) * quantum);
+        }
+        // every one must already be a quantizer fixed point
+        for &x in &vals {
+            assert_eq!(quantize_one(x, fmt).to_bits(), x.to_bits(), "{fmt_s}");
+        }
+        // pad to cross a block boundary so both kernels run
+        while vals.len() < BLOCK + 17 {
+            vals.push(quantum);
+        }
+        let bytes = pack(&vals, fmt).unwrap();
+        assert_eq!(bytes, pack_scalar(&vals, fmt).unwrap(), "{fmt_s}");
+        let back = unpack(&bytes, vals.len(), fmt);
+        for (i, (a, b)) in back.iter().zip(&vals).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{fmt_s} idx {i}");
+        }
+    }
+}
