@@ -1,17 +1,23 @@
-//! End-to-end federated round latency, FP32 vs OMC — the micro version of
-//! the Tables' "Speed (Rounds/Min)" column. Needs `make artifacts`.
+//! End-to-end federated round latency — the micro version of the Tables'
+//! "Speed (Rounds/Min)" column, plus cohort-scaling rows for the streaming
+//! round engine (sequential vs sharded dispatch, failure scenarios).
+//! Needs the AOT artifacts: `python python/compile/aot.py --out-dir artifacts`.
 
 use std::sync::Arc;
 
 use omc_fl::benchkit::Suite;
 use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
 use omc_fl::coordinator::experiment::Experiment;
+use omc_fl::fl::cohort::CohortConfig;
 use omc_fl::runtime::engine::Engine;
 
 fn main() {
     let dir = std::path::Path::new("artifacts/tiny");
     if !dir.exists() {
-        eprintln!("SKIP bench_round: artifacts/tiny missing — run `make artifacts`");
+        eprintln!(
+            "SKIP bench_round: artifacts/tiny missing — run \
+             `python python/compile/aot.py --out-dir artifacts`"
+        );
         return;
     }
     let engine = Engine::cpu().expect("pjrt cpu client");
@@ -37,6 +43,40 @@ fn main() {
         exp.warmup().unwrap();
         // run one round per iteration (server state advances; that's fine —
         // the cost is stationary)
+        suite.bench(label, None, || {
+            let _ = exp.run_one_round_for_bench().unwrap();
+        });
+    }
+
+    // Cohort-scaling rows: the same OMC round at a doubled cohort, run
+    // with workers=1 vs workers=4, plus a failure-model round. With the
+    // PJRT backend client *training* stays pinned (`Engine::is_send_safe`
+    // is false), so the delta between these rows comes from the parallel
+    // downlink build and the thread-pooled uplink decode+aggregation; a
+    // Send-safe engine would additionally shard the training loop itself
+    // over the same rows.
+    let stress = CohortConfig {
+        dropout_prob: 0.1,
+        straggler_mean_s: 2.0,
+        deadline_s: 4.0,
+        weight_by_examples: true,
+    };
+    for (label, workers, cohort) in [
+        ("round OMC cohort=8 sequential (workers=1)", 1, CohortConfig::ideal()),
+        ("round OMC cohort=8 sharded (workers=4)", 4, CohortConfig::ideal()),
+        ("round OMC cohort=8 dropout+stragglers", 4, stress),
+    ] {
+        let mut cfg = ExperimentConfig::default_with(label, dir);
+        cfg.rounds = 1;
+        cfg.num_clients = 16;
+        cfg.clients_per_round = 8;
+        cfg.eval_every = 10_000;
+        cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+        cfg.cohort = cohort;
+        cfg.workers = workers;
+        let mut exp =
+            Experiment::prepare_with_model(cfg, Arc::clone(&model)).unwrap();
+        exp.warmup().unwrap();
         suite.bench(label, None, || {
             let _ = exp.run_one_round_for_bench().unwrap();
         });

@@ -2,7 +2,7 @@
 //! in FP32, once with OMC at the paper's S1E4M14 format — and compare WER,
 //! parameter memory, communication, and speed.
 //!
-//!     make artifacts
+//!     python python/compile/aot.py --out-dir artifacts
 //!     cargo run --release --example quickstart -- --rounds 30
 //!
 //! This is deliberately the whole public-API surface in ~60 lines: engine,

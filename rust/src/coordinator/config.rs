@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::data::partition::Partition;
+use crate::fl::cohort::CohortConfig;
 use crate::fl::sampler::SamplerKind;
 use crate::omc::format::FloatFormat;
 use crate::util::toml::{self, Table};
@@ -51,7 +52,7 @@ impl OmcConfig {
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// artifacts/<size> directory with manifest + HLO files
+    /// `artifacts/<size>` directory with manifest + HLO files
     pub model_dir: PathBuf,
     pub rounds: usize,
     pub num_clients: usize,
@@ -67,6 +68,8 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     pub eval_batches: usize,
     pub omc: OmcConfig,
+    /// cohort failure model: dropout, stragglers, weighted FedAvg
+    pub cohort: CohortConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -94,6 +97,7 @@ impl ExperimentConfig {
             eval_every: 5,
             eval_batches: 8,
             omc: OmcConfig::fp32_baseline(),
+            cohort: CohortConfig::default(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -179,6 +183,18 @@ impl ExperimentConfig {
                 cfg.omc.format
             );
         }
+        if let Some(v) = get_f("cohort.dropout") {
+            cfg.cohort.dropout_prob = v;
+        }
+        if let Some(v) = get_f("cohort.straggler_mean_s") {
+            cfg.cohort.straggler_mean_s = v;
+        }
+        if let Some(v) = get_f("cohort.deadline_s") {
+            cfg.cohort.deadline_s = v;
+        }
+        if let Some(v) = get_b("cohort.weight_by_examples") {
+            cfg.cohort.weight_by_examples = v;
+        }
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -205,6 +221,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.local_steps > 0, "local_steps must be > 0");
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!(self.eval_every > 0, "eval_every must be > 0");
+        self.cohort.validate()?;
         Ok(())
     }
 }
@@ -232,6 +249,12 @@ mod tests {
         weights_only = true
         fraction = 0.9
 
+        [cohort]
+        dropout = 0.1
+        straggler_mean_s = 2.0
+        deadline_s = 5.0
+        weight_by_examples = true
+
         [eval]
         every = 10
         batches = 4
@@ -250,6 +273,28 @@ mod tests {
         assert_eq!(c.omc.fraction, 0.9);
         assert_eq!(c.eval_every, 10);
         assert!(!c.omc.is_baseline());
+        assert_eq!(c.cohort.dropout_prob, 0.1);
+        assert_eq!(c.cohort.straggler_mean_s, 2.0);
+        assert_eq!(c.cohort.deadline_s, 5.0);
+        assert!(c.cohort.weight_by_examples);
+        assert!(!c.cohort.is_ideal());
+    }
+
+    #[test]
+    fn cohort_defaults_to_ideal_and_rejects_bad_knobs() {
+        let minimal = r#"name = "x""#;
+        let t = toml::parse(minimal).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.cohort.is_ideal());
+        for (from, to) in [
+            ("dropout = 0.1", "dropout = 1.5"),
+            ("deadline_s = 5.0", "deadline_s = 0.0"),
+            ("straggler_mean_s = 2.0", "straggler_mean_s = -1.0"),
+        ] {
+            let bad = SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
     }
 
     #[test]

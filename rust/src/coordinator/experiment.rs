@@ -212,6 +212,7 @@ impl Experiment {
             sampler: &self.sampler,
             policy,
             train,
+            cohort: self.cfg.cohort,
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };
@@ -236,6 +237,15 @@ impl Experiment {
             self.cfg.omc.weights_only,
             self.cfg.omc.fraction
         );
+        if !self.cfg.cohort.is_ideal() {
+            crate::log_info!(
+                "cohort failure model: dropout={}, straggler_mean={}s, deadline={}s, weight_by_examples={}",
+                self.cfg.cohort.dropout_prob,
+                self.cfg.cohort.straggler_mean_s,
+                self.cfg.cohort.deadline_s,
+                self.cfg.cohort.weight_by_examples
+            );
+        }
         for r in 0..self.cfg.rounds {
             let t = Timer::start();
             let ctx = RoundContext {
@@ -245,6 +255,7 @@ impl Experiment {
                 sampler: &self.sampler,
                 policy,
                 train,
+                cohort: self.cfg.cohort,
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
             };
@@ -280,6 +291,11 @@ impl Experiment {
                 eval_wer: wer,
                 down_bytes: outcome.down_bytes,
                 up_bytes: outcome.up_bytes,
+                up_bytes_discarded: outcome.up_bytes_discarded,
+                sampled: outcome.sampled,
+                completed: outcome.completed,
+                dropped: outcome.dropped,
+                late: outcome.late,
                 round_seconds,
             });
         }

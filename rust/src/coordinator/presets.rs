@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::coordinator::config::{ExperimentConfig, OmcConfig};
 use crate::coordinator::experiment::{Experiment, RunSummary};
 use crate::data::partition::Partition;
+use crate::fl::cohort::CohortConfig;
 use crate::metrics::recorder::Recorder;
 use crate::runtime::engine::{Engine, LoadedModel};
 
@@ -124,6 +125,39 @@ pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
     ])
 }
 
+/// The cohort-failure scenario ladder driven by `examples/cohort_stress.rs`
+/// and the stress rows of `bench_round`: from the tables' ideal cohort to a
+/// production-shaped one (dropout + stragglers + example-weighted FedAvg).
+pub fn cohort_ladder() -> Vec<(String, CohortConfig)> {
+    vec![
+        ("ideal cohort".into(), CohortConfig::ideal()),
+        (
+            "10% dropout".into(),
+            CohortConfig {
+                dropout_prob: 0.1,
+                ..CohortConfig::ideal()
+            },
+        ),
+        (
+            "stragglers (mean 2s, deadline 4s)".into(),
+            CohortConfig {
+                straggler_mean_s: 2.0,
+                deadline_s: 4.0,
+                ..CohortConfig::ideal()
+            },
+        ),
+        (
+            "dropout + stragglers, weighted".into(),
+            CohortConfig {
+                dropout_prob: 0.1,
+                straggler_mean_s: 2.0,
+                deadline_s: 4.0,
+                weight_by_examples: true,
+            },
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +174,21 @@ mod tests {
         assert!(rows[2].1.use_pvt && !rows[2].1.weights_only);
         assert!(rows[3].1.use_pvt && rows[3].1.weights_only);
         assert_eq!(rows[4].1.fraction, 0.9);
+    }
+
+    #[test]
+    fn cohort_ladder_escalates_from_ideal() {
+        let rows = cohort_ladder();
+        assert_eq!(rows.len(), 4);
+        assert!(rows[0].1.is_ideal());
+        for (_, c) in &rows {
+            c.validate().unwrap();
+        }
+        assert!(rows[1].1.dropout_prob > 0.0);
+        assert!(rows[2].1.straggler_mean_s > 0.0);
+        assert!(rows[2].1.deadline_s.is_finite());
+        let last = rows[3].1;
+        assert!(last.dropout_prob > 0.0 && last.weight_by_examples);
     }
 
     #[test]

@@ -58,8 +58,10 @@ pub struct ClientResult {
 
 /// Reusable per-client working set: the decoded-variable buffers and PVT
 /// scalar vectors whose capacity survives across clients and rounds. One
-/// instance per execution thread (client training is pinned to the PJRT
-/// thread, so the round loop owns exactly one).
+/// instance per execution thread: the PJRT backend pins client training to
+/// the engine thread (one scratch), while a Send-safe engine runs shards
+/// of the cohort in parallel, one scratch per worker (`RoundScratch` owns
+/// the persistent set — see `fl::round`).
 #[derive(Default)]
 pub struct ClientScratch {
     /// decoded variable values, one buffer per manifest variable

@@ -1,0 +1,381 @@
+//! Cohort failure scenarios: dropout, stragglers, and weighted FedAvg.
+//!
+//! Real cross-device cohorts are not the clean `clients_per_round` the
+//! tables assume: devices go offline mid-round (dropout), report after the
+//! server's deadline (stragglers), and hold different amounts of data
+//! (example-weighted FedAvg). This module decides each sampled client's
+//! *fate* for a round — deterministically from `(seed, round, client)`, so
+//! a run replays exactly and the planned fates are known before any client
+//! trains (which is what lets the round engine normalize FedAvg weights up
+//! front and aggregate uplinks *streaming*, see `fl::round`).
+//!
+//! Semantics, mirroring a production FL server:
+//!
+//! * **Dropped** clients received their downlink (those bytes were spent)
+//!   but never report back: no training cost, no uplink, no aggregation.
+//! * **Late** clients train and upload — both directions count toward the
+//!   round's transport — but the server's reporting deadline has passed, so
+//!   their update is discarded, never aggregated.
+//! * **Completing** clients are aggregated with weight proportional to
+//!   their example count (or uniformly when `weight_by_examples` is off).
+
+use crate::data::partition::ClientAssignment;
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Knobs of the simulated cohort failure model (all off by default, which
+/// reproduces the paper's ideal full-participation rounds).
+#[derive(Clone, Copy, Debug)]
+pub struct CohortConfig {
+    /// Probability a sampled client drops after receiving its downlink and
+    /// never reports back. In `[0, 1)`.
+    pub dropout_prob: f64,
+    /// Mean of the exponential per-client latency model, in simulated
+    /// seconds; `0.0` disables the straggler model (latency 0 for all).
+    pub straggler_mean_s: f64,
+    /// Per-round reporting deadline in simulated seconds. Clients whose
+    /// drawn latency exceeds it are excluded from aggregation (their
+    /// uplink bytes still count). `f64::INFINITY` means no deadline.
+    pub deadline_s: f64,
+    /// Weight each completing client's update by its example count
+    /// (speakers it holds) instead of uniformly — weighted FedAvg.
+    pub weight_by_examples: bool,
+}
+
+impl Default for CohortConfig {
+    fn default() -> Self {
+        Self {
+            dropout_prob: 0.0,
+            straggler_mean_s: 0.0,
+            deadline_s: f64::INFINITY,
+            weight_by_examples: false,
+        }
+    }
+}
+
+impl CohortConfig {
+    /// The ideal cohort: nobody drops, nobody is late, uniform weights.
+    pub fn ideal() -> Self {
+        Self::default()
+    }
+
+    /// True when the failure model is fully disabled (the tables' setting).
+    pub fn is_ideal(&self) -> bool {
+        self.dropout_prob == 0.0
+            && self.straggler_mean_s == 0.0
+            && self.deadline_s.is_infinite()
+            && !self.weight_by_examples
+    }
+
+    /// Bounds-check the knobs (called by `ExperimentConfig::validate`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.dropout_prob),
+            "cohort.dropout must be in [0, 1), got {}",
+            self.dropout_prob
+        );
+        anyhow::ensure!(
+            self.straggler_mean_s >= 0.0 && self.straggler_mean_s.is_finite(),
+            "cohort.straggler_mean_s must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.deadline_s > 0.0,
+            "cohort.deadline_s must be > 0 (use infinity for no deadline)"
+        );
+        Ok(())
+    }
+}
+
+/// What happens to one sampled client this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientFate {
+    /// Trains, uploads before the deadline, is aggregated.
+    Completes,
+    /// Goes offline after the downlink; never trains or uploads.
+    Dropped,
+    /// Trains and uploads after the deadline; excluded from aggregation.
+    Late,
+}
+
+/// One sampled client's planned round, decided before any training runs.
+#[derive(Clone, Debug)]
+pub struct ClientPlan {
+    /// Client id (index into the population).
+    pub cid: usize,
+    /// The client's fate under the failure model.
+    pub fate: ClientFate,
+    /// Simulated downlink-to-upload latency in seconds (0 when the
+    /// straggler model is off).
+    pub latency_s: f64,
+    /// Unnormalized FedAvg weight (example count, or 1.0 when uniform).
+    pub weight: f64,
+}
+
+/// Draw the deterministic per-client fates for one round's participants.
+///
+/// Each client gets an independent RNG stream keyed by
+/// `(seed, round, cid)`; the same triple always yields the same fate, so
+/// replaying a run — or re-executing it with a different worker count —
+/// produces the identical cohort.
+pub fn plan_cohort(
+    cohort: &CohortConfig,
+    participants: &[usize],
+    assignment: &ClientAssignment,
+    seed: u64,
+    round: u64,
+) -> Vec<ClientPlan> {
+    participants
+        .iter()
+        .map(|&cid| {
+            let mut rng = Xoshiro256pp::new(hash_seed(&[
+                seed, 0xFA7E5, round, cid as u64,
+            ]));
+            // every knob consumes its RNG draw unconditionally, so the
+            // latency stream stays aligned when dropout is toggled (and
+            // vice versa) — A/B scenario comparisons at the same seed see
+            // the same per-client draws
+            let u_drop = rng.next_f64();
+            let u_lat = rng.next_f64();
+            let dropped = u_drop < cohort.dropout_prob;
+            let latency_s = if cohort.straggler_mean_s > 0.0 {
+                // inverse-CDF exponential draw; u in [0,1) keeps ln finite
+                -(1.0 - u_lat).ln() * cohort.straggler_mean_s
+            } else {
+                0.0
+            };
+            let fate = if dropped {
+                ClientFate::Dropped
+            } else if latency_s > cohort.deadline_s {
+                ClientFate::Late
+            } else {
+                ClientFate::Completes
+            };
+            let weight = if cohort.weight_by_examples {
+                assignment.speakers(cid).len() as f64
+            } else {
+                1.0
+            };
+            ClientPlan {
+                cid,
+                fate,
+                latency_s,
+                weight,
+            }
+        })
+        .collect()
+}
+
+/// FedAvg weights normalized over the clients planned to complete: the
+/// `i`-th entry is `plans[i].weight / Σ completing weights` for completing
+/// clients and `0.0` for dropped/late ones (also `0.0` everywhere when no
+/// client completes). The single source of truth the round engine and its
+/// tests share.
+pub fn normalized_weights(plans: &[ClientPlan]) -> Vec<f64> {
+    let total: f64 = plans
+        .iter()
+        .filter(|p| p.fate == ClientFate::Completes)
+        .map(|p| p.weight)
+        .sum();
+    plans
+        .iter()
+        .map(|p| {
+            if p.fate == ClientFate::Completes && total > 0.0 {
+                p.weight / total
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+
+    fn assignment(clients: usize) -> ClientAssignment {
+        ClientAssignment::build(Partition::BySpeaker, clients, 64, 7)
+    }
+
+    #[test]
+    fn ideal_cohort_all_complete_with_uniform_weights() {
+        let a = assignment(8);
+        let ids: Vec<usize> = (0..8).collect();
+        let plans = plan_cohort(&CohortConfig::ideal(), &ids, &a, 42, 3);
+        assert_eq!(plans.len(), 8);
+        for p in &plans {
+            assert_eq!(p.fate, ClientFate::Completes);
+            assert_eq!(p.latency_s, 0.0);
+            assert_eq!(p.weight, 1.0);
+        }
+        assert!(CohortConfig::ideal().is_ideal());
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_round_sensitive() {
+        let a = assignment(16);
+        let ids: Vec<usize> = (0..16).collect();
+        let cfg = CohortConfig {
+            dropout_prob: 0.3,
+            straggler_mean_s: 2.0,
+            deadline_s: 3.0,
+            weight_by_examples: true,
+        };
+        let p1 = plan_cohort(&cfg, &ids, &a, 42, 5);
+        let p2 = plan_cohort(&cfg, &ids, &a, 42, 5);
+        let p3 = plan_cohort(&cfg, &ids, &a, 42, 6);
+        for (x, y) in p1.iter().zip(&p2) {
+            assert_eq!(x.fate, y.fate);
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.weight, y.weight);
+        }
+        // some fate must differ across rounds (16 clients, 30% dropout —
+        // identical fates would mean the round isn't in the seed)
+        assert!(p1
+            .iter()
+            .zip(&p3)
+            .any(|(x, y)| x.fate != y.fate || x.latency_s != y.latency_s));
+    }
+
+    #[test]
+    fn dropout_rate_is_statistically_right() {
+        let a = assignment(4);
+        let ids = [0usize, 1, 2, 3];
+        let cfg = CohortConfig {
+            dropout_prob: 0.25,
+            ..CohortConfig::default()
+        };
+        let mut dropped = 0usize;
+        let trials = 4_000;
+        for round in 0..trials / 4 {
+            for p in plan_cohort(&cfg, &ids, &a, 1, round as u64) {
+                if p.fate == ClientFate::Dropped {
+                    dropped += 1;
+                }
+            }
+        }
+        let rate = dropped as f64 / trials as f64;
+        assert!((rate - 0.25).abs() < 0.03, "dropout rate {rate}");
+    }
+
+    #[test]
+    fn straggler_latency_has_exponential_mean_and_deadline_splits() {
+        let a = assignment(4);
+        let ids = [0usize, 1, 2, 3];
+        let cfg = CohortConfig {
+            straggler_mean_s: 2.0,
+            deadline_s: 2.0 * std::f64::consts::LN_2, // median → ~50% late
+            ..CohortConfig::default()
+        };
+        let (mut sum, mut late, mut n) = (0.0f64, 0usize, 0usize);
+        for round in 0..2_000u64 {
+            for p in plan_cohort(&cfg, &ids, &a, 9, round) {
+                sum += p.latency_s;
+                n += 1;
+                if p.fate == ClientFate::Late {
+                    late += 1;
+                    assert!(p.latency_s > cfg.deadline_s);
+                } else {
+                    assert!(p.latency_s <= cfg.deadline_s);
+                }
+            }
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.15, "latency mean {mean}");
+        let late_rate = late as f64 / n as f64;
+        assert!((late_rate - 0.5).abs() < 0.05, "late rate {late_rate}");
+    }
+
+    #[test]
+    fn example_weights_follow_assignment_sizes() {
+        let a = assignment(6);
+        let ids: Vec<usize> = (0..6).collect();
+        let cfg = CohortConfig {
+            weight_by_examples: true,
+            ..CohortConfig::default()
+        };
+        for p in plan_cohort(&cfg, &ids, &a, 3, 0) {
+            assert_eq!(p.weight, a.speakers(p.cid).len() as f64);
+            assert!(p.weight >= 1.0);
+        }
+    }
+
+    #[test]
+    fn latency_stream_survives_dropout_toggle() {
+        // toggling dropout must not reshuffle the straggler draws — the
+        // scenario ladder A/Bs these knobs at the same seed
+        let a = assignment(8);
+        let ids: Vec<usize> = (0..8).collect();
+        let base = CohortConfig {
+            straggler_mean_s: 2.0,
+            deadline_s: 3.0,
+            ..CohortConfig::default()
+        };
+        let with_drop = CohortConfig {
+            dropout_prob: 0.5,
+            ..base
+        };
+        for round in 0..50u64 {
+            let p0 = plan_cohort(&base, &ids, &a, 5, round);
+            let p1 = plan_cohort(&with_drop, &ids, &a, 5, round);
+            for (x, y) in p0.iter().zip(&p1) {
+                assert_eq!(x.latency_s, y.latency_s, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_weights_cover_completers_only() {
+        let plans: Vec<ClientPlan> = (0..6)
+            .map(|i| ClientPlan {
+                cid: i,
+                fate: match i % 3 {
+                    0 => ClientFate::Completes,
+                    1 => ClientFate::Dropped,
+                    _ => ClientFate::Late,
+                },
+                latency_s: 0.0,
+                weight: 1.0 + i as f64,
+            })
+            .collect();
+        let w = normalized_weights(&plans);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        for (p, &wi) in plans.iter().zip(&w) {
+            if p.fate == ClientFate::Completes {
+                assert!(wi > 0.0);
+            } else {
+                assert_eq!(wi, 0.0);
+            }
+        }
+        // an entirely failed cohort yields all-zero weights, not NaN
+        let failed: Vec<ClientPlan> = plans
+            .into_iter()
+            .map(|mut p| {
+                p.fate = ClientFate::Dropped;
+                p
+            })
+            .collect();
+        assert!(normalized_weights(&failed).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ok = CohortConfig {
+            dropout_prob: 0.5,
+            straggler_mean_s: 1.0,
+            deadline_s: 2.0,
+            weight_by_examples: true,
+        };
+        ok.validate().unwrap();
+        assert!(!ok.is_ideal());
+        for bad in [
+            CohortConfig { dropout_prob: 1.0, ..ok },
+            CohortConfig { dropout_prob: -0.1, ..ok },
+            CohortConfig { straggler_mean_s: -1.0, ..ok },
+            CohortConfig { straggler_mean_s: f64::INFINITY, ..ok },
+            CohortConfig { deadline_s: 0.0, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,7 +1,9 @@
-//! Federated-learning substrate: server state + aggregation, simulated
-//! clients, client sampling, and round orchestration.
+//! Federated-learning substrate: server state + aggregation (reference and
+//! streaming paths), simulated clients, cohort failure scenarios, client
+//! sampling, and round orchestration.
 
 pub mod client;
+pub mod cohort;
 pub mod round;
 pub mod sampler;
 pub mod server;

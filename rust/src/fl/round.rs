@@ -1,19 +1,62 @@
-//! Round orchestration: sample clients, build per-client downlinks, run the
-//! client work on the thread pool, aggregate the uplinks.
+//! Round orchestration: sample clients, plan the cohort's fates, build
+//! per-client downlinks, execute the clients (sequentially or sharded over
+//! the thread pool), and fold every uplink into a streaming FedAvg
+//! accumulator.
 //!
-//! Steady-state allocation discipline: [`RoundScratch`] carries the
-//! per-client downlink frame buffers and the client codec scratch across
-//! rounds, so the codec layer performs no per-variable heap allocation once
-//! capacities have warmed up (see `fl::client` module docs).
+//! # Streaming, sharded round engine (§Scale)
+//!
+//! The round loop never materializes the decoded cohort. Each client's
+//! uplink frame is folded into a [`StreamingAggregator`] the moment it is
+//! produced and then dropped, so server working memory is
+//! O(params + workers × accumulator) — independent of cohort size — where
+//! the old path held O(cohort × params) decoded f32s before FedAvg.
+//!
+//! Client execution dispatches on the engine:
+//!
+//! * **Sharded** ([`run_cohort_sharded`]) — when the engine advertises
+//!   [`is_send_safe`], the cohort is split into contiguous shards, one per
+//!   worker, each with its own [`ClientScratch`] and its own per-shard
+//!   aggregator; the shard aggregators are merged in shard order
+//!   (deterministic for a fixed worker count; merging only reassociates
+//!   f64 sums). No in-tree engine is Send-safe *and executable* yet — the
+//!   stub advertises `true` but cannot run training graphs — so today
+//!   this path is exercised end-to-end by the mock-job tests below and is
+//!   the dispatch a pure-CPU backend will land on.
+//! * **Pinned** ([`run_cohort_pinned`]) — the PJRT backend's
+//!   `PjRtLoadedExecutable` is `!Send`, so client training stays on the
+//!   engine thread; the collected uplink frames are still decoded and
+//!   folded over the thread pool (decode is pure Send work).
+//! * **Strict sequential** ([`run_cohort_sequential`]) — one thread, one
+//!   aggregator, cohort order: the reference the others are compared to,
+//!   bit-identical to [`Server::aggregate`] on the same inputs.
+//!
+//! Per-client RNG streams are keyed by `(seed, round, cid)` — never by
+//! worker or execution order — so every path produces identical uploads
+//! (asserted by tests below).
+//!
+//! Cohort failures (`fl::cohort`) are planned before execution: dropped
+//! clients consume their downlink and nothing else; late clients train and
+//! upload (bytes counted) but are excluded from aggregation; weights are
+//! normalized over the completing subset up front, which is what lets the
+//! accumulation be one pass.
+//!
+//! Steady-state allocation discipline: [`RoundScratch`] pools the
+//! per-client downlink frame buffers (the pool never shrinks when the
+//! cohort does) and the per-worker client codec scratches across rounds.
+//! The aggregator f64 sums and decode scratches are allocated fresh each
+//! round — O(params × workers), same order as the downlink compression
+//! cache the round already builds, and independent of cohort size.
+//!
+//! [`is_send_safe`]: crate::runtime::engine::LoadedModel::is_send_safe
 
 use anyhow::{Context, Result};
 
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::Domain;
-use crate::fl::client::{self, ClientScratch, ClientTrainConfig};
+use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
+use crate::fl::cohort::{self, ClientFate, ClientPlan, CohortConfig};
 use crate::fl::sampler::Sampler;
-use crate::fl::server::Server;
-use crate::omc::codec;
+use crate::fl::server::{Server, StreamingAggregator};
 use crate::omc::selection::SelectionPolicy;
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
@@ -21,39 +64,350 @@ use crate::util::threadpool;
 
 /// Everything a round needs, borrowed from the experiment.
 pub struct RoundContext<'a> {
+    /// the bound artifact set (training/eval graphs + manifest)
     pub model: &'a LoadedModel,
+    /// synthetic-data domain the clients draw batches from
     pub domain: &'a Domain,
+    /// speaker shards per client
     pub assignment: &'a ClientAssignment,
+    /// which clients participate each round
     pub sampler: &'a Sampler,
+    /// PPQ variable-selection policy
     pub policy: SelectionPolicy,
+    /// client-side hyper-parameters
     pub train: ClientTrainConfig,
+    /// cohort failure model (dropout / stragglers / weighting)
+    pub cohort: CohortConfig,
+    /// experiment seed (all per-round randomness derives from it)
     pub seed: u64,
+    /// thread-pool width for codec work and sharded client execution
     pub workers: usize,
 }
 
 /// Buffers reused across rounds (owned by the experiment driver).
 #[derive(Default)]
 pub struct RoundScratch {
-    /// per-client downlink frame buffers, recycled round-to-round
+    /// pool of downlink frame buffers, recycled round-to-round; excess
+    /// buffers stay pooled when the cohort shrinks
     downlink_bufs: Vec<Vec<u8>>,
-    /// the (single-threaded) client training loop's codec scratch
-    client: ClientScratch,
+    /// per-worker client codec scratches (index 0 serves the sequential
+    /// path); capacity persists across rounds
+    clients: Vec<ClientScratch>,
 }
 
 impl RoundScratch {
+    /// Fresh, empty scratch (buffers warm up over the first rounds).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Take `n` downlink buffers from the pool (empty ones are created if
+    /// the pool is short). The pool keeps whatever the caller does not
+    /// take, so a shrinking cohort never drops warmed capacity.
+    fn take_downlink_bufs(&mut self, n: usize) -> Vec<Vec<u8>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.downlink_bufs.pop().unwrap_or_default());
+        }
+        out
+    }
+
+    /// Return buffers to the pool for the next round.
+    fn return_downlink_bufs(&mut self, bufs: Vec<Vec<u8>>) {
+        self.downlink_bufs.extend(bufs);
+    }
+
+    /// At least `n` per-worker client scratches, growing (never shrinking)
+    /// the persistent set.
+    fn client_scratches(&mut self, n: usize) -> &mut [ClientScratch] {
+        if self.clients.len() < n {
+            self.clients.resize_with(n, ClientScratch::default);
+        }
+        &mut self.clients[..n]
     }
 }
 
 /// Aggregate numbers for one completed round.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
+    /// mean training loss over clients that ran (completing + late);
+    /// NaN when the whole cohort dropped before training
     pub mean_loss: f64,
+    /// server→client bytes, all sampled clients (dropped ones included —
+    /// the server spent those bytes before learning of the drop)
     pub down_bytes: usize,
+    /// client→server bytes, every client that uploaded (late included)
     pub up_bytes: usize,
+    /// the subset of `up_bytes` from past-deadline clients, spent but
+    /// excluded from aggregation
+    pub up_bytes_discarded: usize,
+    /// max client parameter-store bytes observed (Sec. 3.4)
     pub peak_client_param_bytes: usize,
+    /// accounted server-side aggregation working set: accumulators + decode
+    /// scratch. O(params × workers); must not scale with cohort size.
+    pub server_accum_bytes: usize,
+    /// sampled client ids, in cohort order
     pub participants: Vec<usize>,
+    /// cohort size sampled this round
+    pub sampled: usize,
+    /// clients aggregated (reported before the deadline)
+    pub completed: usize,
+    /// clients that dropped after the downlink
+    pub dropped: usize,
+    /// clients that reported after the deadline
+    pub late: usize,
+}
+
+/// Byte/loss tallies from executing (part of) a cohort.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CohortStats {
+    /// uplink bytes from every client that uploaded
+    pub up_bytes: usize,
+    /// uplink bytes from late clients (subset of `up_bytes`)
+    pub up_bytes_discarded: usize,
+    /// sum of per-client mean losses (over clients that trained)
+    pub loss_sum: f64,
+    /// clients that ran training (completing + late)
+    pub trained: usize,
+    /// clients folded into the aggregator
+    pub completed: usize,
+    /// clients skipped entirely
+    pub dropped: usize,
+    /// clients that uploaded past the deadline
+    pub late: usize,
+    /// max per-client parameter-store bytes
+    pub peak_client_param_bytes: usize,
+    /// decode-scratch capacity, bytes (summed across workers)
+    pub scratch_bytes: usize,
+    /// bytes of every live aggregator (chunk accumulators, plus the merge
+    /// target on the sharded path)
+    pub accum_bytes: usize,
+}
+
+impl CohortStats {
+    fn absorb(&mut self, o: &CohortStats) {
+        self.up_bytes += o.up_bytes;
+        self.up_bytes_discarded += o.up_bytes_discarded;
+        self.loss_sum += o.loss_sum;
+        self.trained += o.trained;
+        self.completed += o.completed;
+        self.dropped += o.dropped;
+        self.late += o.late;
+        self.peak_client_param_bytes =
+            self.peak_client_param_bytes.max(o.peak_client_param_bytes);
+        self.scratch_bytes += o.scratch_bytes;
+        self.accum_bytes += o.accum_bytes;
+    }
+
+    /// Accounted server-side aggregation working set: every live
+    /// accumulator plus the decode scratches. O(params × workers) — the
+    /// cohort-independence tests read this.
+    pub fn server_accum_bytes(&self) -> usize {
+        self.accum_bytes + self.scratch_bytes
+    }
+}
+
+/// Execute one contiguous chunk of the cohort: run each non-dropped
+/// client's job, account its bytes, and fold completing uploads straight
+/// into a chunk-local [`StreamingAggregator`] (the upload is dropped
+/// immediately after — decoded client models never accumulate).
+fn run_chunk<F>(
+    base: usize,
+    chunk: &[ClientPlan],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    scratch: &mut ClientScratch,
+    mut job: F,
+) -> Result<(CohortStats, StreamingAggregator)>
+where
+    F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
+{
+    let mut agg = StreamingAggregator::new(var_lens);
+    let mut stats = CohortStats::default();
+    let mut decode_scratch: Vec<f32> = Vec::new();
+    for (k, plan) in chunk.iter().enumerate() {
+        let i = base + k;
+        if plan.fate == ClientFate::Dropped {
+            stats.dropped += 1;
+            continue;
+        }
+        let r = job(i, plan, scratch)?;
+        stats.up_bytes += r.upload.len();
+        stats.loss_sum += r.loss;
+        stats.trained += 1;
+        stats.peak_client_param_bytes =
+            stats.peak_client_param_bytes.max(r.peak_param_bytes);
+        if plan.fate == ClientFate::Late {
+            stats.late += 1;
+            stats.up_bytes_discarded += r.upload.len();
+        } else {
+            agg.accumulate_wire(&r.upload, norm_w[i], &mut decode_scratch)?;
+            stats.completed += 1;
+        }
+    }
+    stats.scratch_bytes = decode_scratch.capacity() * 4;
+    stats.accum_bytes = agg.memory_bytes();
+    Ok((stats, agg))
+}
+
+/// Run a planned cohort strictly in order on the calling thread with one
+/// shared [`ClientScratch`] — the pinned path the PJRT backend requires
+/// (`PjRtLoadedExecutable` is `!Send`). Folding happens in cohort order,
+/// so the result is bit-identical to the reference [`Server::aggregate`]
+/// fed the same decoded models and normalized weights.
+pub fn run_cohort_sequential<F>(
+    plans: &[ClientPlan],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    scratch: &mut ClientScratch,
+    job: F,
+) -> Result<(CohortStats, StreamingAggregator)>
+where
+    F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
+{
+    run_chunk(0, plans, norm_w, var_lens, scratch, job)
+}
+
+/// Run a planned cohort with training pinned to the calling thread but
+/// uplink *decode* parallelized: clients execute strictly in order (the
+/// PJRT backend's `!Send` executable requirement), completing uploads are
+/// collected as wire frames, and the frames are then folded into
+/// per-chunk streaming accumulators over the thread pool, merged in chunk
+/// order.
+///
+/// Memory: the collected wire frames are the compressed in-flight
+/// transport (the pre-streaming engine held these too) plus
+/// O(params × workers) accumulators — the decoded cohort still never
+/// materializes. With `workers == 1` the result is bit-identical to
+/// [`run_cohort_sequential`]; larger worker counts only reassociate the
+/// f64 sums.
+pub fn run_cohort_pinned<F>(
+    plans: &[ClientPlan],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    workers: usize,
+    scratch: &mut ClientScratch,
+    mut job: F,
+) -> Result<(CohortStats, StreamingAggregator)>
+where
+    F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
+{
+    let mut stats = CohortStats::default();
+    let mut uploads: Vec<(usize, Vec<u8>)> = Vec::new();
+    for (i, plan) in plans.iter().enumerate() {
+        if plan.fate == ClientFate::Dropped {
+            stats.dropped += 1;
+            continue;
+        }
+        let r = job(i, plan, scratch)?;
+        stats.up_bytes += r.upload.len();
+        stats.loss_sum += r.loss;
+        stats.trained += 1;
+        stats.peak_client_param_bytes =
+            stats.peak_client_param_bytes.max(r.peak_param_bytes);
+        if plan.fate == ClientFate::Late {
+            stats.late += 1;
+            stats.up_bytes_discarded += r.upload.len();
+        } else {
+            stats.completed += 1;
+            uploads.push((i, r.upload));
+        }
+    }
+    let agg = aggregate_uploads(&uploads, norm_w, var_lens, workers, &mut stats)?;
+    Ok((stats, agg))
+}
+
+/// Fold collected `(cohort index, wire frame)` uploads into one merged
+/// streaming aggregator, chunked over the thread pool; accounting lands in
+/// `stats` (`scratch_bytes`, `accum_bytes`).
+fn aggregate_uploads(
+    uploads: &[(usize, Vec<u8>)],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    workers: usize,
+    stats: &mut CohortStats,
+) -> Result<StreamingAggregator> {
+    let mut merged = StreamingAggregator::new(var_lens);
+    if uploads.is_empty() {
+        stats.accum_bytes += merged.memory_bytes();
+        return Ok(merged);
+    }
+    let shards = workers.max(1).min(uploads.len());
+    let chunk = (uploads.len() + shards - 1) / shards;
+    let chunks: Vec<&[(usize, Vec<u8>)]> = uploads.chunks(chunk).collect();
+    let parts = threadpool::scope_map_send(chunks, shards, |_, c| {
+        let mut agg = StreamingAggregator::new(var_lens);
+        let mut decode_scratch: Vec<f32> = Vec::new();
+        for (i, wire) in c {
+            agg.accumulate_wire(wire, norm_w[*i], &mut decode_scratch)?;
+        }
+        Ok::<_, anyhow::Error>((decode_scratch.capacity() * 4, agg))
+    })?;
+    for p in parts {
+        let (scratch_bytes, agg) = p?;
+        stats.scratch_bytes += scratch_bytes;
+        stats.accum_bytes += agg.memory_bytes();
+        merged.merge(agg)?;
+    }
+    stats.accum_bytes += merged.memory_bytes();
+    Ok(merged)
+}
+
+/// Run a planned cohort sharded over the thread pool: contiguous chunks,
+/// one per worker, each with its own [`ClientScratch`] and per-shard
+/// aggregator; shard aggregators merge in shard order. Requires a
+/// `Send`-safe engine (the job closure must be `Sync`). Uploads are
+/// bit-identical to the sequential path — per-client RNG streams depend
+/// only on `(seed, round, cid)` — and the merged aggregate differs from it
+/// only by f64 re-association (≤ 1e-6 per element).
+pub fn run_cohort_sharded<F>(
+    plans: &[ClientPlan],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    workers: usize,
+    scratches: &mut [ClientScratch],
+    job: F,
+) -> Result<(CohortStats, StreamingAggregator)>
+where
+    F: Fn(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult> + Sync,
+{
+    let n = plans.len();
+    if n == 0 {
+        return Ok((CohortStats::default(), StreamingAggregator::new(var_lens)));
+    }
+    let shards = workers.max(1).min(n);
+    anyhow::ensure!(
+        scratches.len() >= shards,
+        "need one ClientScratch per shard ({} < {shards})",
+        scratches.len()
+    );
+    let chunk = (n + shards - 1) / shards;
+    let items: Vec<(usize, &[ClientPlan], &mut ClientScratch)> = plans
+        .chunks(chunk)
+        .zip(scratches.iter_mut())
+        .enumerate()
+        .map(|(si, (c, s))| (si * chunk, c, s))
+        .collect();
+    let job = &job;
+    let results = threadpool::scope_map_send(items, shards, move |_, (base, c, s)| {
+        run_chunk(base, c, norm_w, var_lens, s, job)
+    })?;
+    let mut stats = CohortStats::default();
+    let mut agg = StreamingAggregator::new(var_lens);
+    for r in results {
+        let (s, a) = r?;
+        stats.absorb(&s);
+        agg.merge(a)?;
+    }
+    // the merge target coexisted with the chunk accumulators
+    stats.accum_bytes += agg.memory_bytes();
+    Ok((stats, agg))
+}
+
+/// Number of shards the engine would use for this cohort/worker pair.
+#[cfg_attr(feature = "pjrt", allow(dead_code))]
+fn shard_count(workers: usize, cohort: usize) -> usize {
+    workers.max(1).min(cohort.max(1))
 }
 
 /// Run one federated round, updating `server` in place.
@@ -66,11 +420,23 @@ pub fn run_round(
     let participants = ctx.sampler.sample(round);
     let specs = &ctx.model.manifest.variables;
 
-    // per-client PPQ masks + downlink payloads. Each variable is
-    // compressed ONCE per round (DownlinkCache, §Perf, built in parallel
-    // over the thread pool) and the per-client payloads are assembled on
-    // the thread pool into recycled buffers; PJRT execution below is
-    // pinned to this thread (`PjRtLoadedExecutable` is !Send).
+    // every sampled client's fate is decided before anything executes —
+    // deterministic in (seed, round, cid), so the completing subset and
+    // its normalized FedAvg weights are known up front
+    let plans = cohort::plan_cohort(
+        &ctx.cohort,
+        &participants,
+        ctx.assignment,
+        ctx.seed,
+        round,
+    );
+
+    // per-client PPQ masks + downlink payloads, for ALL sampled clients —
+    // the server commits the downlink before it can know a client will
+    // drop or miss the deadline. Each variable is compressed ONCE per
+    // round (DownlinkCache, §Perf, built in parallel over the thread
+    // pool) and the per-client payloads are assembled on the thread pool
+    // into pooled buffers.
     let masks: Vec<Vec<f32>> = participants
         .iter()
         .map(|&c| ctx.policy.draw_mask(specs, ctx.seed, round, c as u64))
@@ -83,8 +449,7 @@ pub fn run_round(
         masks.iter().any(|m| m[i] > 0.5)
     });
     let cache_ref = &cache;
-    let mut bufs = std::mem::take(&mut scratch.downlink_bufs);
-    bufs.resize_with(masks.len(), Vec::new);
+    let bufs = scratch.take_downlink_bufs(masks.len());
     let items: Vec<(&Vec<f32>, Vec<u8>)> = masks.iter().zip(bufs).collect();
     let downlinks: Vec<Vec<u8>> =
         threadpool::scope_map_send(items, workers, move |_, (mask, buf)| {
@@ -92,54 +457,462 @@ pub fn run_round(
         })?;
     let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
 
-    // client training (sequential over the shared PJRT device queue)
-    let mut uploads = Vec::with_capacity(participants.len());
-    let mut loss_sum = 0.0;
-    let mut peak = 0usize;
-    for (i, &cid) in participants.iter().enumerate() {
+    // FedAvg weights, normalized over the clients planned to complete
+    let norm_w = cohort::normalized_weights(&plans);
+
+    let var_lens = server.var_lens();
+    let job = |i: usize, plan: &ClientPlan, cs: &mut ClientScratch| {
         let mut rng = Xoshiro256pp::new(hash_seed(&[
-            ctx.seed, 0xC11E27, round, cid as u64,
+            ctx.seed,
+            0xC11E27,
+            round,
+            plan.cid as u64,
         ]));
-        let r = client::run_client_round(
+        client::run_client_round(
             ctx.model,
             ctx.domain,
-            ctx.assignment.speakers(cid),
+            ctx.assignment.speakers(plan.cid),
             &downlinks[i],
             &masks[i],
             ctx.train,
             &mut rng,
-            &mut scratch.client,
+            cs,
         )
-        .with_context(|| format!("client {cid} round {round}"))?;
-        loss_sum += r.loss;
-        peak = peak.max(r.peak_param_bytes);
-        uploads.push(r.upload);
-    }
-    let up_bytes: usize = uploads.iter().map(|u| u.len()).sum();
-    // recycle the downlink frame buffers for the next round
-    scratch.downlink_bufs = downlinks;
+        .with_context(|| format!("client {} round {round}", plan.cid))
+    };
 
-    // server: decode + fused-decompress uplinks (thread pool), then FedAvg
-    let client_models: Vec<Vec<Vec<f32>>> =
-        threadpool::scope_map(&uploads, workers, |_, u: &Vec<u8>| {
-            codec::decode_decompressed(u)
-        })?
-        .into_iter()
-        .collect::<Result<_>>()?;
-    server.aggregate(&client_models, None)?;
+    // dispatch: sharded client execution needs a Send-safe engine; the
+    // PJRT executable is !Send, so that build pins training to this
+    // thread (the sharded generic is only instantiated where the job
+    // closure is Sync)
+    #[cfg(not(feature = "pjrt"))]
+    let (stats, agg) = {
+        let shards = shard_count(ctx.workers, plans.len());
+        if ctx.model.is_send_safe() && shards > 1 {
+            let scratches = scratch.client_scratches(shards);
+            run_cohort_sharded(&plans, &norm_w, &var_lens, shards, scratches, job)?
+        } else {
+            let cs = &mut scratch.client_scratches(1)[0];
+            run_cohort_pinned(&plans, &norm_w, &var_lens, ctx.workers, cs, job)?
+        }
+    };
+    #[cfg(feature = "pjrt")]
+    let (stats, agg) = {
+        // training is pinned (!Send executable) but uplink decode is pure
+        // Send work — keep it on the thread pool
+        let cs = &mut scratch.client_scratches(1)[0];
+        run_cohort_pinned(&plans, &norm_w, &var_lens, ctx.workers, cs, job)?
+    };
+
+    // recycle the downlink frame buffers for the next round
+    scratch.return_downlink_bufs(downlinks);
+
+    // accounted server working set for aggregation — O(params × workers),
+    // never O(cohort × params)
+    let server_accum_bytes = stats.server_accum_bytes();
+
+    if agg.clients() > 0 {
+        agg.apply(server)?;
+    } else {
+        // the whole cohort dropped or missed the deadline: the global
+        // model stands, but the round still happened and is accounted
+        crate::log_debug!("round {round}: no completing clients, skipping FedAvg");
+        server.skip_round();
+    }
 
     Ok(RoundOutcome {
-        mean_loss: loss_sum / participants.len().max(1) as f64,
+        // NaN, not a perfect-looking 0.0, when no client trained at all
+        mean_loss: if stats.trained > 0 {
+            stats.loss_sum / stats.trained as f64
+        } else {
+            f64::NAN
+        },
         down_bytes,
-        up_bytes,
-        peak_client_param_bytes: peak,
+        up_bytes: stats.up_bytes,
+        up_bytes_discarded: stats.up_bytes_discarded,
+        peak_client_param_bytes: stats.peak_client_param_bytes,
+        server_accum_bytes,
+        sampled: plans.len(),
+        completed: stats.completed,
+        dropped: stats.dropped,
+        late: stats.late,
         participants,
     })
 }
 
 #[cfg(test)]
 mod tests {
-    // run_round requires compiled artifacts; its integration tests live in
-    // rust/tests/fl_integration.rs. Pure-logic pieces (masks, downlinks,
-    // aggregation) are tested in their own modules.
+    // run_round itself requires compiled artifacts (integration tests in
+    // rust/tests/fl_integration.rs). The cohort execution machinery —
+    // sequential/sharded dispatch, streaming aggregation, buffer pooling —
+    // is pure Rust and tested here with a mock client job.
+    use std::sync::Mutex;
+
+    use super::*;
+    use crate::omc::codec::{self, WireWriter};
+
+    const VAR_LENS: [usize; 2] = [300, 17];
+
+    fn mk_plans(n: usize, fate: impl Fn(usize) -> ClientFate) -> Vec<ClientPlan> {
+        (0..n)
+            .map(|i| ClientPlan {
+                cid: 100 + i,
+                fate: fate(i),
+                latency_s: 0.0,
+                weight: 1.0 + (i % 3) as f64,
+            })
+            .collect()
+    }
+
+    // the production weight rule itself — tests must exercise the same
+    // code run_round uses, not a copy
+    use crate::fl::cohort::normalized_weights as norm_weights;
+
+    /// Deterministic mock client: the "upload" depends only on the client
+    /// id (like the real path, whose RNG is keyed by (seed, round, cid)),
+    /// never on worker or execution order. Loss values are dyadic so f64
+    /// sums are exact under any association.
+    fn mock_result(cid: usize) -> ClientResult {
+        let mut rng = Xoshiro256pp::new(hash_seed(&[0xBEEF, cid as u64]));
+        let mut w = WireWriter::with_capacity(0);
+        for &n in &VAR_LENS {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.5);
+            w.raw(&v);
+        }
+        ClientResult {
+            upload: w.finish(),
+            loss: 1.0 + cid as f64 * 0.25,
+            peak_param_bytes: 1000 + cid,
+        }
+    }
+
+    /// A mock job that records each produced upload by cohort index.
+    fn recording_job(
+        uploads: &Mutex<Vec<Option<Vec<u8>>>>,
+    ) -> impl Fn(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult> + Sync + '_
+    {
+        move |i: usize, plan: &ClientPlan, _cs: &mut ClientScratch| {
+            let r = mock_result(plan.cid);
+            uploads.lock().unwrap()[i] = Some(r.upload.clone());
+            Ok(r)
+        }
+    }
+
+    fn mixed_fates(i: usize) -> ClientFate {
+        match i % 5 {
+            3 => ClientFate::Dropped,
+            4 => ClientFate::Late,
+            _ => ClientFate::Completes,
+        }
+    }
+
+    #[test]
+    fn sharded_execution_matches_sequential() {
+        let plans = mk_plans(13, mixed_fates);
+        let norm_w = norm_weights(&plans);
+
+        let seq_uploads = Mutex::new(vec![None; plans.len()]);
+        let mut seq_scratch = ClientScratch::default();
+        let (seq_stats, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut seq_scratch,
+            recording_job(&seq_uploads),
+        )
+        .unwrap();
+        let mut seq_server = Server::new(
+            VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+        );
+        seq_agg.apply(&mut seq_server).unwrap();
+
+        for workers in [2usize, 4, 32] {
+            let par_uploads = Mutex::new(vec![None; plans.len()]);
+            let mut scratches: Vec<ClientScratch> =
+                (0..workers).map(|_| ClientScratch::default()).collect();
+            let (par_stats, par_agg) = run_cohort_sharded(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                workers,
+                &mut scratches,
+                recording_job(&par_uploads),
+            )
+            .unwrap();
+
+            // identical uploads, bit for bit, regardless of sharding
+            assert_eq!(
+                *seq_uploads.lock().unwrap(),
+                *par_uploads.lock().unwrap(),
+                "uploads differ at workers={workers}"
+            );
+            // identical accounting (dyadic losses ⇒ exact f64 sums)
+            assert_eq!(seq_stats.up_bytes, par_stats.up_bytes);
+            assert_eq!(
+                seq_stats.up_bytes_discarded,
+                par_stats.up_bytes_discarded
+            );
+            assert_eq!(seq_stats.trained, par_stats.trained);
+            assert_eq!(seq_stats.completed, par_stats.completed);
+            assert_eq!(seq_stats.dropped, par_stats.dropped);
+            assert_eq!(seq_stats.late, par_stats.late);
+            assert_eq!(
+                seq_stats.peak_client_param_bytes,
+                par_stats.peak_client_param_bytes
+            );
+            assert_eq!(seq_stats.loss_sum, par_stats.loss_sum);
+            // the merged aggregate only reassociates f64 sums
+            assert_eq!(par_agg.clients(), seq_stats.completed);
+            let mut par_server = Server::new(
+                VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+            );
+            par_agg.apply(&mut par_server).unwrap();
+            for (a, b) in par_server.params.iter().zip(&seq_server.params) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-6,
+                        "sharded {x} vs sequential {y} (workers={workers})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_execution_matches_sequential() {
+        let plans = mk_plans(11, mixed_fates);
+        let norm_w = norm_weights(&plans);
+
+        let seq_uploads = Mutex::new(vec![None; plans.len()]);
+        let mut seq_scratch = ClientScratch::default();
+        let (seq_stats, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut seq_scratch,
+            recording_job(&seq_uploads),
+        )
+        .unwrap();
+        let mut seq_server = Server::new(
+            VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+        );
+        seq_agg.apply(&mut seq_server).unwrap();
+
+        for workers in [1usize, 4] {
+            let pin_uploads = Mutex::new(vec![None; plans.len()]);
+            let mut cs = ClientScratch::default();
+            let (pin_stats, pin_agg) = run_cohort_pinned(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                workers,
+                &mut cs,
+                recording_job(&pin_uploads),
+            )
+            .unwrap();
+            assert_eq!(
+                *seq_uploads.lock().unwrap(),
+                *pin_uploads.lock().unwrap()
+            );
+            assert_eq!(seq_stats.up_bytes, pin_stats.up_bytes);
+            assert_eq!(seq_stats.completed, pin_stats.completed);
+            assert_eq!(seq_stats.loss_sum, pin_stats.loss_sum);
+            let mut pin_server = Server::new(
+                VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+            );
+            pin_agg.apply(&mut pin_server).unwrap();
+            for (a, b) in pin_server.params.iter().zip(&seq_server.params) {
+                for (x, y) in a.iter().zip(b) {
+                    if workers == 1 {
+                        // one chunk merged into a zero target: exact
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    } else {
+                        assert!((x - y).abs() <= 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_streaming_matches_reference_aggregate_bit_for_bit() {
+        let plans = mk_plans(9, mixed_fates);
+        let norm_w = norm_weights(&plans);
+        let uploads = Mutex::new(vec![None; plans.len()]);
+        let mut scratch = ClientScratch::default();
+        let (_, agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut scratch,
+            recording_job(&uploads),
+        )
+        .unwrap();
+        let mut streaming = Server::new(
+            VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+        );
+        agg.apply(&mut streaming).unwrap();
+
+        // reference: materialize exactly the completing clients' decoded
+        // models and hand them to the slow-path Server::aggregate
+        let uploads = uploads.into_inner().unwrap();
+        let mut models = Vec::new();
+        let mut weights = Vec::new();
+        for (i, p) in plans.iter().enumerate() {
+            if p.fate == ClientFate::Completes {
+                models.push(
+                    codec::decode_decompressed(uploads[i].as_ref().unwrap())
+                        .unwrap(),
+                );
+                weights.push(p.weight);
+            }
+        }
+        let mut reference = Server::new(
+            VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect(),
+        );
+        reference.aggregate(&models, Some(&weights)).unwrap();
+
+        for (a, b) in streaming.params.iter().zip(&reference.params) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn fates_account_bytes_and_exclusions() {
+        let plans = mk_plans(10, mixed_fates);
+        let norm_w = norm_weights(&plans);
+        let uploads = Mutex::new(vec![None; plans.len()]);
+        let mut scratch = ClientScratch::default();
+        let (stats, agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut scratch,
+            recording_job(&uploads),
+        )
+        .unwrap();
+        // i % 5: 0,1,2 complete; 3 dropped; 4 late → of 10: 6/2/2
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.dropped, 2);
+        assert_eq!(stats.late, 2);
+        assert_eq!(stats.trained, 8);
+        assert_eq!(agg.clients(), 6);
+        assert!((agg.total_weight() - 1.0).abs() < 1e-9);
+        // dropped clients never uploaded
+        let uploads = uploads.into_inner().unwrap();
+        let late_bytes: usize = plans
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.fate == ClientFate::Late)
+            .map(|(i, _)| uploads[i].as_ref().unwrap().len())
+            .sum();
+        let all_bytes: usize = uploads
+            .iter()
+            .flatten()
+            .map(|u| u.len())
+            .sum();
+        assert_eq!(stats.up_bytes, all_bytes);
+        assert_eq!(stats.up_bytes_discarded, late_bytes);
+        assert!(plans
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.fate == ClientFate::Dropped)
+            .all(|(i, _)| uploads[i].is_none()));
+    }
+
+    #[test]
+    fn server_working_memory_independent_of_cohort_size() {
+        let workers = 4usize;
+        let mut accounted = Vec::new();
+        for cohort in [4usize, 64] {
+            let plans = mk_plans(cohort, |_| ClientFate::Completes);
+            let norm_w = norm_weights(&plans);
+            let uploads = Mutex::new(vec![None; plans.len()]);
+            let mut scratches: Vec<ClientScratch> =
+                (0..workers).map(|_| ClientScratch::default()).collect();
+            let (stats, agg) = run_cohort_sharded(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                workers,
+                &mut scratches,
+                recording_job(&uploads),
+            )
+            .unwrap();
+            assert_eq!(agg.clients(), cohort);
+            // read the same accounting run_round reports
+            accounted.push(stats.server_accum_bytes());
+        }
+        assert_eq!(
+            accounted[0], accounted[1],
+            "server aggregation working set must not scale with cohort"
+        );
+    }
+
+    #[test]
+    fn all_failed_cohort_aggregates_nothing() {
+        let plans = mk_plans(4, |i| {
+            if i % 2 == 0 {
+                ClientFate::Dropped
+            } else {
+                ClientFate::Late
+            }
+        });
+        let norm_w = norm_weights(&plans);
+        assert!(norm_w.iter().all(|&w| w == 0.0));
+        let uploads = Mutex::new(vec![None; plans.len()]);
+        let mut scratch = ClientScratch::default();
+        let (stats, agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut scratch,
+            recording_job(&uploads),
+        )
+        .unwrap();
+        assert_eq!(agg.clients(), 0);
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.trained, 2); // late clients still trained
+        assert!(stats.up_bytes > 0);
+        assert_eq!(stats.up_bytes, stats.up_bytes_discarded);
+    }
+
+    #[test]
+    fn downlink_buffer_pool_survives_cohort_shrink() {
+        let mut s = RoundScratch::new();
+        // warm the pool with 4 buffers of real capacity
+        s.return_downlink_bufs(
+            (0..4).map(|_| Vec::with_capacity(4096)).collect(),
+        );
+        // a smaller round takes 2; the other 2 must stay pooled
+        let bufs = s.take_downlink_bufs(2);
+        assert_eq!(bufs.len(), 2);
+        assert!(bufs.iter().all(|b| b.capacity() >= 4096));
+        assert_eq!(s.downlink_bufs.len(), 2, "excess buffers were dropped");
+        s.return_downlink_bufs(bufs);
+        assert_eq!(s.downlink_bufs.len(), 4);
+        // a larger round later reuses all four warmed buffers
+        let bufs = s.take_downlink_bufs(5);
+        assert_eq!(bufs.len(), 5);
+        assert_eq!(
+            bufs.iter().filter(|b| b.capacity() >= 4096).count(),
+            4,
+            "warmed capacity was lost across a cohort shrink"
+        );
+    }
+
+    #[test]
+    fn per_worker_scratches_grow_and_persist() {
+        let mut s = RoundScratch::new();
+        assert_eq!(s.client_scratches(3).len(), 3);
+        // asking for fewer does not shrink the persistent set
+        assert_eq!(s.client_scratches(1).len(), 1);
+        assert_eq!(s.clients.len(), 3);
+        assert_eq!(s.client_scratches(5).len(), 5);
+        assert_eq!(s.clients.len(), 5);
+    }
 }

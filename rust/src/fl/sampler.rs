@@ -29,12 +29,16 @@ pub struct Sampler {
 }
 
 impl Sampler {
+    /// Build a sampler. `per_round` is clamped to the population size —
+    /// asking for a larger cohort than exists means full participation,
+    /// not a panic (stress configs legitimately over-ask).
     pub fn new(kind: SamplerKind, population: usize, per_round: usize, seed: u64) -> Self {
-        assert!(per_round > 0 && per_round <= population);
+        assert!(population > 0, "sampler needs a non-empty population");
+        assert!(per_round > 0, "per_round must be > 0");
         Self {
             kind,
             population,
-            per_round,
+            per_round: per_round.min(population),
             seed,
         }
     }
@@ -52,7 +56,10 @@ impl Sampler {
             }
             SamplerKind::RoundRobin => (0..self.per_round)
                 .map(|i| {
-                    (round as usize * self.per_round + i) % self.population
+                    // reduce the round first: same residue class, but the
+                    // product can never overflow for huge round indices
+                    ((round as usize % self.population) * self.per_round + i)
+                        % self.population
                 })
                 .collect(),
         }
@@ -110,5 +117,54 @@ mod tests {
         let mut ids = s.sample(0);
         ids.sort_unstable();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_round_larger_than_population_clamps() {
+        // over-asking must degrade to full participation, not panic
+        for kind in [SamplerKind::Uniform, SamplerKind::RoundRobin] {
+            let s = Sampler::new(kind, 6, 100, 1);
+            assert_eq!(s.per_round, 6);
+            for round in 0..5 {
+                let mut ids = s.sample(round);
+                ids.sort_unstable();
+                assert_eq!(ids, (0..6).collect::<Vec<_>>(), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_wraparound_is_deterministic() {
+        // per_round does not divide the population: the window straddles
+        // the wrap point and must replay exactly
+        let s = Sampler::new(SamplerKind::RoundRobin, 5, 2, 9);
+        assert_eq!(s.sample(0), vec![0, 1]);
+        assert_eq!(s.sample(1), vec![2, 3]);
+        assert_eq!(s.sample(2), vec![4, 0]);
+        assert_eq!(s.sample(3), vec![1, 2]);
+        // one full cycle of 5 rounds returns to the start
+        assert_eq!(s.sample(5), s.sample(0));
+        // independent instances with the same parameters agree
+        let t = Sampler::new(SamplerKind::RoundRobin, 5, 2, 1234);
+        for round in 0..10 {
+            assert_eq!(s.sample(round), t.sample(round), "round {round}");
+        }
+        // huge round indices must not overflow into a panic
+        let far = s.sample(u64::MAX / 256);
+        assert_eq!(far.len(), 2);
+        assert!(far.iter().all(|&i| i < 5));
+    }
+
+    #[test]
+    fn uniform_reproducible_across_instances_under_fixed_seed() {
+        let a = Sampler::new(SamplerKind::Uniform, 64, 16, 77);
+        let b = Sampler::new(SamplerKind::Uniform, 64, 16, 77);
+        let c = Sampler::new(SamplerKind::Uniform, 64, 16, 78);
+        let mut any_diff = false;
+        for round in 0..20 {
+            assert_eq!(a.sample(round), b.sample(round), "round {round}");
+            any_diff |= a.sample(round) != c.sample(round);
+        }
+        assert!(any_diff, "seed must actually enter the stream");
     }
 }

@@ -1,12 +1,33 @@
-//! Server state and FedAvg aggregation.
+//! Server state, FedAvg aggregation, and the streaming aggregation path.
 //!
 //! The server keeps the global model in full precision (OMC targets
 //! *client* memory and the *transport*; the paper's server receives
 //! decompressed updates and aggregates them). Aggregation is weighted
 //! FedAvg over client models, with optional server momentum (FedAvgM) —
 //! off by default, matching the paper's setup of plain averaging.
+//!
+//! # Two aggregation paths (§Scale)
+//!
+//! * [`Server::aggregate`] is the **reference** implementation: it takes
+//!   every client model fully materialized (`&[Vec<Vec<f32>>]`,
+//!   O(cohort × params) f32s) and folds the weighted mean in f64. Simple,
+//!   obviously correct, kept as the comparison baseline.
+//! * [`StreamingAggregator`] is the **production** path the round engine
+//!   uses: each client's uplink wire frame is decoded one variable at a
+//!   time into a reused scratch buffer and folded into per-variable f64
+//!   sums, then the frame is dropped. Server working memory is
+//!   O(params) per accumulator — independent of cohort size. Accumulating
+//!   clients in the same order with the same normalized weights performs
+//!   the identical f64 operations as the reference, so the two paths are
+//!   bit-exact (asserted by tests); merging per-shard accumulators only
+//!   reassociates the f64 sums (differences ≤ 1e-6 per element).
+//!
+//! Both paths share [`Server::apply_mean`] for the momentum / write-back
+//! tail, so they cannot diverge there.
 
 use anyhow::Result;
+
+use crate::omc::codec;
 
 /// The server's global model + optimizer state.
 #[derive(Clone, Debug)]
@@ -15,11 +36,14 @@ pub struct Server {
     pub params: Vec<Vec<f32>>,
     /// momentum buffers (allocated lazily when momentum > 0)
     velocity: Option<Vec<Vec<f32>>>,
+    /// FedAvgM momentum coefficient in `[0, 1)`; 0 = plain FedAvg
     pub momentum: f32,
+    /// rounds aggregated (or skipped) so far
     pub round: usize,
 }
 
 impl Server {
+    /// Wrap initial global parameters (one `Vec<f32>` per variable).
     pub fn new(params: Vec<Vec<f32>>) -> Self {
         Self {
             params,
@@ -29,19 +53,36 @@ impl Server {
         }
     }
 
+    /// Enable FedAvgM server momentum.
     pub fn with_momentum(mut self, m: f32) -> Self {
         assert!((0.0..1.0).contains(&m), "momentum in [0,1)");
         self.momentum = m;
         self
     }
 
+    /// Total scalar parameter count across variables.
     pub fn num_params(&self) -> usize {
         self.params.iter().map(|v| v.len()).sum()
     }
 
-    /// FedAvg: replace the global model with the weighted mean of client
-    /// models. `weights` default to uniform; with momentum > 0 the weighted
-    /// mean *delta* is applied through a velocity buffer instead.
+    /// Per-variable element counts (the shape a [`StreamingAggregator`]
+    /// must match).
+    pub fn var_lens(&self) -> Vec<usize> {
+        self.params.iter().map(|v| v.len()).collect()
+    }
+
+    /// Advance the round counter without touching the global model — used
+    /// when an entire cohort dropped out or missed the deadline and there
+    /// is nothing to aggregate.
+    pub fn skip_round(&mut self) {
+        self.round += 1;
+    }
+
+    /// Reference FedAvg: replace the global model with the weighted mean of
+    /// fully-materialized client models. `weights` default to uniform; with
+    /// momentum > 0 the weighted mean *delta* is applied through a velocity
+    /// buffer instead. The streaming path ([`StreamingAggregator`]) must
+    /// match this bit-for-bit when fed the same clients in the same order.
     pub fn aggregate(
         &mut self,
         client_models: &[Vec<Vec<f32>>],
@@ -85,7 +126,16 @@ impl Server {
                 }
             }
         }
+        self.apply_mean(mean);
+        Ok(())
+    }
 
+    /// Write a computed f64 weighted mean into the global model (through
+    /// the momentum buffer when enabled) and advance the round counter.
+    /// Shared tail of the reference and streaming aggregation paths; the
+    /// caller guarantees `mean` matches the parameter shapes.
+    pub fn apply_mean(&mut self, mean: Vec<Vec<f64>>) {
+        debug_assert_eq!(mean.len(), self.params.len());
         if self.momentum > 0.0 {
             let mom = self.momentum as f64;
             let vel = self.velocity.get_or_insert_with(|| {
@@ -107,6 +157,163 @@ impl Server {
             }
         }
         self.round += 1;
+    }
+}
+
+/// Streaming weighted-FedAvg accumulator (see the module docs).
+///
+/// Feed it client updates one at a time — as decoded models
+/// ([`accumulate_model`](Self::accumulate_model)) or directly as uplink
+/// wire frames ([`accumulate_wire`](Self::accumulate_wire), which decodes
+/// each variable into a caller-owned scratch buffer and never materializes
+/// a whole client model). Weights must be pre-normalized (sum to 1 over
+/// everything accumulated into the final aggregator) so the accumulation
+/// performs exactly the reference implementation's f64 operations.
+///
+/// Shard-parallel use: give each worker its own accumulator, then
+/// [`merge`](Self::merge) them in a fixed order and
+/// [`apply`](Self::apply) once.
+#[derive(Clone, Debug)]
+pub struct StreamingAggregator {
+    /// per-variable f64 weighted sums
+    sums: Vec<Vec<f64>>,
+    /// total normalized weight accumulated (must end at ~1.0)
+    weight: f64,
+    /// number of client updates folded in
+    clients: usize,
+}
+
+impl StreamingAggregator {
+    /// Empty accumulator for variables of the given element counts.
+    pub fn new(var_lens: &[usize]) -> Self {
+        Self {
+            sums: var_lens.iter().map(|&n| vec![0.0f64; n]).collect(),
+            weight: 0.0,
+            clients: 0,
+        }
+    }
+
+    /// Empty accumulator shaped like the server's global model.
+    pub fn for_server(server: &Server) -> Self {
+        Self::new(&server.var_lens())
+    }
+
+    /// Client updates folded in so far.
+    pub fn clients(&self) -> usize {
+        self.clients
+    }
+
+    /// Sum of the normalized weights folded in so far.
+    pub fn total_weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Accounted working memory of this accumulator in bytes (the f64
+    /// sums). O(params), independent of how many clients were folded in —
+    /// the quantity the cohort-scaling tests assert.
+    pub fn memory_bytes(&self) -> usize {
+        self.sums.iter().map(|v| v.len() * 8).sum()
+    }
+
+    /// Fold one fully-decoded client model in with normalized weight `wc`.
+    pub fn accumulate_model(&mut self, model: &[Vec<f32>], wc: f64) -> Result<()> {
+        anyhow::ensure!(
+            model.len() == self.sums.len(),
+            "client model has {} vars, aggregator has {}",
+            model.len(),
+            self.sums.len()
+        );
+        for (vi, var) in model.iter().enumerate() {
+            anyhow::ensure!(
+                var.len() == self.sums[vi].len(),
+                "variable {vi} length mismatch"
+            );
+            for (a, &x) in self.sums[vi].iter_mut().zip(var) {
+                *a += wc * x as f64;
+            }
+        }
+        self.weight += wc;
+        self.clients += 1;
+        Ok(())
+    }
+
+    /// Fold one client's uplink wire frame in with normalized weight `wc`.
+    ///
+    /// Variables are decoded (fused unpack + PVT transform) one at a time
+    /// into `scratch`, whose capacity is reused across calls — the frame's
+    /// decompressed form never exists in full, so server memory stays
+    /// O(params + one variable) no matter the cohort size.
+    pub fn accumulate_wire(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        let nvars = self.sums.len();
+        let sums = &mut self.sums;
+        let decoded = codec::for_each_var(wire, |vi, view| {
+            anyhow::ensure!(vi < nvars, "uplink has more vars than the model");
+            view.decompress_into(&mut *scratch);
+            anyhow::ensure!(
+                scratch.len() == sums[vi].len(),
+                "uplink variable {vi} has {} elements, expected {}",
+                scratch.len(),
+                sums[vi].len()
+            );
+            for (a, &x) in sums[vi].iter_mut().zip(scratch.iter()) {
+                *a += wc * x as f64;
+            }
+            Ok(())
+        })?;
+        anyhow::ensure!(
+            decoded == nvars,
+            "uplink has {decoded} vars, model expects {nvars}"
+        );
+        self.weight += wc;
+        self.clients += 1;
+        Ok(())
+    }
+
+    /// Fold another accumulator (e.g. a shard's) into this one. Merging is
+    /// pure f64 addition, so merge order only reassociates the sums.
+    pub fn merge(&mut self, other: StreamingAggregator) -> Result<()> {
+        anyhow::ensure!(
+            other.sums.len() == self.sums.len(),
+            "aggregator shape mismatch"
+        );
+        for (vi, ov) in other.sums.into_iter().enumerate() {
+            anyhow::ensure!(
+                ov.len() == self.sums[vi].len(),
+                "aggregator variable {vi} length mismatch"
+            );
+            for (a, x) in self.sums[vi].iter_mut().zip(ov) {
+                *a += x;
+            }
+        }
+        self.weight += other.weight;
+        self.clients += other.clients;
+        Ok(())
+    }
+
+    /// Finish: write the accumulated weighted mean into the server (through
+    /// the shared [`Server::apply_mean`] tail) and advance the round.
+    pub fn apply(self, server: &mut Server) -> Result<()> {
+        anyhow::ensure!(self.clients > 0, "no client updates to aggregate");
+        anyhow::ensure!(
+            (self.weight - 1.0).abs() < 1e-6,
+            "aggregation weights must be normalized (sum {}, expected 1)",
+            self.weight
+        );
+        anyhow::ensure!(
+            self.sums.len() == server.params.len()
+                && self
+                    .sums
+                    .iter()
+                    .zip(&server.params)
+                    .all(|(s, p)| s.len() == p.len()),
+            "aggregator/server shape mismatch"
+        );
+        server.apply_mean(self.sums);
         Ok(())
     }
 }
@@ -114,6 +321,8 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::omc::codec::WireWriter;
+    use crate::testkit::Gen;
 
     fn model(vals: &[f32]) -> Vec<Vec<f32>> {
         vec![vals.to_vec()]
@@ -183,5 +392,191 @@ mod tests {
         s1.aggregate(&[a.clone(), b.clone()], None).unwrap();
         s2.aggregate(&[b, a], None).unwrap();
         assert_eq!(s1.params, s2.params);
+    }
+
+    #[test]
+    fn skip_round_advances_without_update() {
+        let mut s = Server::new(model(&[1.5, -2.0]));
+        let before = s.params.clone();
+        s.skip_round();
+        assert_eq!(s.round, 1);
+        assert_eq!(s.params, before);
+    }
+
+    // -------- streaming path --------
+
+    /// Irregular multi-variable client models + weights for the
+    /// streaming-vs-reference comparisons.
+    fn cohort(g: &mut Gen, clients: usize) -> (Vec<Vec<Vec<f32>>>, Vec<f64>) {
+        let lens = [257usize, 64, 1000, 3];
+        let models: Vec<Vec<Vec<f32>>> = (0..clients)
+            .map(|_| {
+                lens.iter()
+                    .map(|&n| g.vec_normal(n, 0.5))
+                    .collect()
+            })
+            .collect();
+        let weights: Vec<f64> =
+            (0..clients).map(|i| 1.0 + (i % 5) as f64).collect();
+        (models, weights)
+    }
+
+    fn raw_wire(model: &[Vec<f32>]) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(0);
+        for v in model {
+            w.raw(v);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn streaming_model_path_is_bit_exact_vs_reference() {
+        let mut g = Gen::new(11);
+        let (models, weights) = cohort(&mut g, 7);
+        let init: Vec<Vec<f32>> =
+            models[0].iter().map(|v| vec![0.0f32; v.len()]).collect();
+
+        let mut reference = Server::new(init.clone());
+        reference.aggregate(&models, Some(&weights)).unwrap();
+
+        let mut streaming = Server::new(init);
+        let total: f64 = weights.iter().sum();
+        let mut agg = StreamingAggregator::for_server(&streaming);
+        for (m, &w) in models.iter().zip(&weights) {
+            agg.accumulate_model(m, w / total).unwrap();
+        }
+        assert_eq!(agg.clients(), 7);
+        agg.apply(&mut streaming).unwrap();
+
+        assert_eq!(streaming.round, reference.round);
+        for (a, b) in streaming.params.iter().zip(&reference.params) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_wire_path_is_bit_exact_vs_reference() {
+        // raw f32 frames decode losslessly, so the wire path must match the
+        // reference exactly too (same client order, same weights)
+        let mut g = Gen::new(12);
+        let (models, weights) = cohort(&mut g, 5);
+        let init: Vec<Vec<f32>> =
+            models[0].iter().map(|v| vec![0.0f32; v.len()]).collect();
+
+        let mut reference = Server::new(init.clone()).with_momentum(0.5);
+        reference.aggregate(&models, Some(&weights)).unwrap();
+
+        let mut streaming = Server::new(init).with_momentum(0.5);
+        let total: f64 = weights.iter().sum();
+        let mut agg = StreamingAggregator::for_server(&streaming);
+        let mut scratch = Vec::new();
+        for (m, &w) in models.iter().zip(&weights) {
+            agg.accumulate_wire(&raw_wire(m), w / total, &mut scratch)
+                .unwrap();
+        }
+        agg.apply(&mut streaming).unwrap();
+
+        for (a, b) in streaming.params.iter().zip(&reference.params) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_merge_matches_reference_within_tolerance() {
+        let mut g = Gen::new(13);
+        let (models, weights) = cohort(&mut g, 9);
+        let init: Vec<Vec<f32>> =
+            models[0].iter().map(|v| vec![0.0f32; v.len()]).collect();
+
+        let mut reference = Server::new(init.clone());
+        reference.aggregate(&models, Some(&weights)).unwrap();
+
+        // 3 shards of 3 clients, merged in shard order
+        let total: f64 = weights.iter().sum();
+        let lens: Vec<usize> = init.iter().map(|v| v.len()).collect();
+        let mut merged = StreamingAggregator::new(&lens);
+        let mut scratch = Vec::new();
+        for shard in 0..3 {
+            let mut part = StreamingAggregator::new(&lens);
+            for i in (shard * 3)..(shard * 3 + 3) {
+                part.accumulate_wire(
+                    &raw_wire(&models[i]),
+                    weights[i] / total,
+                    &mut scratch,
+                )
+                .unwrap();
+            }
+            merged.merge(part).unwrap();
+        }
+        assert_eq!(merged.clients(), 9);
+        let mut streaming = Server::new(init);
+        merged.apply(&mut streaming).unwrap();
+
+        for (a, b) in streaming.params.iter().zip(&reference.params) {
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x - y).abs() <= 1e-6,
+                    "sharded {x} vs reference {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_memory_is_cohort_independent() {
+        let lens = [500usize, 32];
+        let mut g = Gen::new(14);
+        let mut sizes = Vec::new();
+        for clients in [2usize, 64] {
+            let mut agg = StreamingAggregator::new(&lens);
+            let mut scratch = Vec::new();
+            for _ in 0..clients {
+                let m: Vec<Vec<f32>> =
+                    lens.iter().map(|&n| g.vec_normal(n, 0.1)).collect();
+                agg.accumulate_wire(
+                    &raw_wire(&m),
+                    1.0 / clients as f64,
+                    &mut scratch,
+                )
+                .unwrap();
+            }
+            sizes.push(agg.memory_bytes());
+        }
+        assert_eq!(sizes[0], sizes[1], "accumulator must not grow with cohort");
+        assert_eq!(sizes[0], (500 + 32) * 8);
+    }
+
+    #[test]
+    fn streaming_rejects_mismatches_and_bad_weights() {
+        let lens = [4usize];
+        let mut agg = StreamingAggregator::new(&lens);
+        // wrong variable count
+        assert!(agg
+            .accumulate_model(&[vec![0.0; 4], vec![0.0; 2]], 0.5)
+            .is_err());
+        // wrong variable length
+        assert!(agg.accumulate_model(&[vec![0.0; 3]], 0.5).is_err());
+        // wire frame with wrong length
+        let mut scratch = Vec::new();
+        let wire = raw_wire(&[vec![0.0f32; 5]]);
+        assert!(agg.accumulate_wire(&wire, 0.5, &mut scratch).is_err());
+        // empty apply
+        let mut s = Server::new(vec![vec![0.0f32; 4]]);
+        assert!(StreamingAggregator::new(&lens).apply(&mut s).is_err());
+        // unnormalized weights
+        let mut agg = StreamingAggregator::new(&lens);
+        agg.accumulate_model(&[vec![1.0f32; 4]], 0.4).unwrap();
+        assert!(agg.apply(&mut s).is_err());
+        // shape mismatch vs server
+        let mut agg = StreamingAggregator::new(&[3]);
+        agg.accumulate_model(&[vec![1.0f32; 3]], 1.0).unwrap();
+        assert!(agg.apply(&mut s).is_err());
+        assert_eq!(s.round, 0, "failed applies must not advance the round");
     }
 }

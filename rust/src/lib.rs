@@ -7,7 +7,8 @@
 //!   client scheduling, the OMC compressed parameter store + bit-packing
 //!   codec, transport accounting, WER evaluation, metrics and the CLI.
 //! * **L2** — the conformer-lite training/eval graphs, written in JAX and
-//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//!   AOT-lowered to HLO text under `artifacts/`
+//!   (`python python/compile/aot.py --out-dir artifacts`).
 //! * **L1** — the Pallas SxEyMz fake-quantization kernel, lowered inside the
 //!   L2 graphs.
 //!
@@ -15,9 +16,34 @@
 //! artifacts through the PJRT C API (`xla` crate) and every training step is
 //! a compiled executable call.
 //!
-//! Start with [`coordinator::Experiment`] (driving a whole federated run) or
-//! the `examples/` directory, which regenerates every table and figure of
-//! the paper (see `DESIGN.md` §5 for the experiment index).
+//! # Crate map
+//!
+//! * [`omc`] — the compression core: `SxEyMz` formats, the bit-exact
+//!   quantizer mirror, per-variable transforms, the block bit-packing
+//!   kernels and fused pipelines, the compressed store, and the wire
+//!   codec. Fully documented (`#![warn(missing_docs)]`).
+//! * [`fl`] — the federated substrate: [`fl::server`] (reference FedAvg +
+//!   the streaming [`fl::server::StreamingAggregator`]), [`fl::client`]
+//!   (one simulated client round, zero-alloc codec contract),
+//!   [`fl::cohort`] (dropout / straggler / weighted-FedAvg failure
+//!   scenarios), [`fl::sampler`], and [`fl::round`] — the streaming,
+//!   sharded round engine.
+//! * [`coordinator`] — experiment configs (TOML or builders), the
+//!   [`coordinator::Experiment`] driver, presets for the paper's tables,
+//!   and checkpoint I/O.
+//! * [`runtime`] — the PJRT engine behind the `pjrt` feature; default
+//!   builds get an API-identical stub so the pure-Rust stack builds and
+//!   tests without the XLA toolchain.
+//! * [`data`] / [`metrics`] — synthetic ASR task + client partitioning,
+//!   and WER / round-log recording.
+//! * [`benchkit`] / [`testkit`] / [`util`] — the bench harness
+//!   (`OMC_BENCH_JSON` emits `BENCH_*.json`), property-test helpers, and
+//!   the dependency-free substrate (RNG, thread pool, TOML/JSON, CLI).
+//!
+//! Start with [`coordinator::Experiment`] (driving a whole federated run)
+//! or the `examples/` directory, which regenerates every table and figure
+//! of the paper — `README.md` has the quickstart and
+//! `docs/REPRODUCING.md` maps each example to its table/figure.
 
 pub mod benchkit;
 pub mod coordinator;

@@ -20,6 +20,17 @@ pub struct RoundRecord {
     pub down_bytes: usize,
     /// bytes clients->server this round
     pub up_bytes: usize,
+    /// uplink bytes that arrived past the reporting deadline (spent but
+    /// excluded from aggregation; subset of `up_bytes`)
+    pub up_bytes_discarded: usize,
+    /// clients sampled into the cohort
+    pub sampled: usize,
+    /// clients whose update was aggregated
+    pub completed: usize,
+    /// clients that dropped after the downlink
+    pub dropped: usize,
+    /// clients that reported after the deadline
+    pub late: usize,
     pub round_seconds: f64,
 }
 
@@ -80,19 +91,39 @@ impl Recorder {
         60.0 * self.records.len() as f64 / secs
     }
 
+    /// Mean fraction of sampled clients whose update was aggregated
+    /// (1.0 for ideal cohorts; NaN when nothing was recorded).
+    pub fn mean_completion_rate(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        let rates: f64 = self
+            .records
+            .iter()
+            .map(|r| r.completed as f64 / r.sampled.max(1) as f64)
+            .sum();
+        rates / self.records.len() as f64
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,round_seconds\n",
+            "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,\
+             up_bytes_discarded,sampled,completed,dropped,late,round_seconds\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.4},{},{},{:.6}\n",
+                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
                 r.eval_wer,
                 r.down_bytes,
                 r.up_bytes,
+                r.up_bytes_discarded,
+                r.sampled,
+                r.completed,
+                r.dropped,
+                r.late,
                 r.round_seconds
             ));
         }
@@ -111,6 +142,10 @@ impl Recorder {
             (
                 "total_comm_bytes",
                 json::num(self.total_comm_bytes() as f64),
+            ),
+            (
+                "mean_completion_rate",
+                json::num(self.mean_completion_rate()),
             ),
             ("rounds_per_min", json::num(self.rounds_per_min())),
         ])
@@ -142,6 +177,11 @@ mod tests {
             eval_wer: wer,
             down_bytes: 100,
             up_bytes: 50,
+            up_bytes_discarded: 0,
+            sampled: 4,
+            completed: 4,
+            dropped: 0,
+            late: 0,
             round_seconds: 0.5,
         }
     }
@@ -175,6 +215,27 @@ mod tests {
         assert!(csv.starts_with("round,"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("12.5"));
+        // header and rows have the same column count (incl. cohort columns)
+        let cols = csv.lines().next().unwrap().split(',').count();
+        assert_eq!(cols, 12);
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+
+    #[test]
+    fn completion_rate_tracks_cohort_failures() {
+        let mut r = Recorder::new("t");
+        assert!(r.mean_completion_rate().is_nan());
+        r.push(rec(0, 10.0)); // 4/4
+        let mut partial = rec(1, 10.0); // 2/4
+        partial.completed = 2;
+        partial.dropped = 1;
+        partial.late = 1;
+        partial.up_bytes_discarded = 10;
+        r.push(partial);
+        assert!((r.mean_completion_rate() - 0.75).abs() < 1e-9);
+        assert!(r.to_csv().contains(",2,1,1,"));
     }
 
     #[test]

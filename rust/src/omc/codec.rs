@@ -37,6 +37,7 @@ pub struct WireWriter {
 }
 
 impl WireWriter {
+    /// Start a frame in a fresh buffer with `cap` bytes reserved.
     pub fn with_capacity(cap: usize) -> Self {
         Self::with_buf_and_capacity(Vec::new(), cap)
     }
@@ -53,6 +54,7 @@ impl WireWriter {
         Self { buf, nvars: 0 }
     }
 
+    /// Emit an unquantized variable: `n` f32 values shipped as-is.
     pub fn raw(&mut self, v: &[f32]) {
         self.buf.push(0u8);
         self.buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
@@ -63,6 +65,7 @@ impl WireWriter {
         self.nvars += 1;
     }
 
+    /// Emit an already bit-packed variable payload with its PVT scalars.
     pub fn packed(&mut self, bytes: &[u8], n: usize, fmt: FloatFormat, pvt: Pvt) {
         self.packed_header(n, fmt, pvt, bytes.len());
         self.buf.extend_from_slice(bytes);
@@ -108,6 +111,7 @@ impl WireWriter {
         self.nvars += 1;
     }
 
+    /// Emit a stored variable (raw or packed, whichever it is).
     pub fn var(&mut self, v: &StoredVar) {
         match v {
             StoredVar::Raw(data) => self.raw(data),
@@ -117,6 +121,7 @@ impl WireWriter {
         }
     }
 
+    /// Patch the header's variable count and hand back the finished frame.
     pub fn finish(mut self) -> Vec<u8> {
         let nv = self.nvars.to_le_bytes();
         self.buf[6..10].copy_from_slice(&nv);
@@ -151,6 +156,7 @@ pub struct Encoder {
 }
 
 impl Encoder {
+    /// Fresh encoder with an empty (cold) buffer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -168,23 +174,34 @@ impl Encoder {
 #[derive(Debug)]
 pub enum VarView<'a> {
     /// Unquantized variable: `n` f32 values, little-endian bytes.
-    Raw { data: &'a [u8], n: usize },
+    Raw {
+        /// the `n * 4` little-endian f32 bytes, borrowed from the frame
+        data: &'a [u8],
+        /// element count
+        n: usize,
+    },
     /// Bit-packed variable: decode with `pack::unpack*` family.
     Packed {
+        /// the bit-packed codes, borrowed from the frame
         payload: &'a [u8],
+        /// element count
         n: usize,
+        /// the `SxEyMz` format the codes are packed at
         fmt: FloatFormat,
+        /// per-variable transform scalars
         pvt: Pvt,
     },
 }
 
 impl VarView<'_> {
+    /// Element count of the variable.
     pub fn len(&self) -> usize {
         match self {
             VarView::Raw { n, .. } | VarView::Packed { n, .. } => *n,
         }
     }
 
+    /// Whether the variable has zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -232,8 +249,27 @@ fn raw_f32s_into(data: &[u8], out: &mut Vec<f32>) {
 
 /// Streaming decoder: validate the frame and hand each variable to `f` as
 /// a borrowed [`VarView`], in order. Returns the variable count. This is
-/// the single wire parser — [`decode`] and the client's zero-alloc
-/// downlink path are both built on it.
+/// the single wire parser — [`decode`], the client's zero-alloc downlink
+/// path, and the server's streaming uplink aggregation are all built on it.
+///
+/// ```
+/// use omc_fl::omc::codec::{self, WireWriter};
+///
+/// // assemble a two-variable frame...
+/// let mut w = WireWriter::with_capacity(0);
+/// w.raw(&[1.0f32, 2.0, 3.0]);
+/// w.raw(&[-4.0f32]);
+/// let frame = w.finish();
+///
+/// // ...and stream it back out without materializing a model
+/// let mut total = 0usize;
+/// let nvars = codec::for_each_var(&frame, |_i, view| {
+///     total += view.len();
+///     Ok(())
+/// })
+/// .unwrap();
+/// assert_eq!((nvars, total), (2, 4));
+/// ```
 pub fn for_each_var<F>(bytes: &[u8], mut f: F) -> Result<usize>
 where
     F: FnMut(usize, VarView<'_>) -> Result<()>,

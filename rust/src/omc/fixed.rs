@@ -20,19 +20,23 @@ pub struct FixedFormat {
 }
 
 impl FixedFormat {
+    /// Validated constructor (`bits` in 2..=16).
     pub fn new(bits: u32, symmetric: bool) -> anyhow::Result<Self> {
         anyhow::ensure!((2..=16).contains(&bits), "fixed bits in 2..=16");
         Ok(Self { bits, symmetric })
     }
 
+    /// Largest representable code `2^(bits-1) - 1`.
     pub fn qmax(&self) -> i32 {
         (1i32 << (self.bits - 1)) - 1
     }
 
+    /// Smallest representable code `-2^(bits-1)`.
     pub fn qmin(&self) -> i32 {
         -(1i32 << (self.bits - 1))
     }
 
+    /// Bytes needed to store `n` codes bit-packed at this width.
     pub fn packed_bytes(&self, n: usize) -> usize {
         (n * self.bits as usize + 7) / 8
     }
@@ -41,10 +45,15 @@ impl FixedFormat {
 /// A fixed-point-compressed variable.
 #[derive(Clone, Debug)]
 pub struct FixedVar {
-    pub codes: Vec<u8>, // bit-packed two's-complement codes
+    /// bit-packed two's-complement codes
+    pub codes: Vec<u8>,
+    /// element count
     pub n: usize,
+    /// the fixed-point format the codes use
     pub fmt: FixedFormat,
+    /// affine scale in `x ≈ scale·q + zero`
     pub scale: f32,
+    /// affine zero-point (0 in symmetric mode)
     pub zero: f32,
 }
 

@@ -8,17 +8,24 @@
 use std::fmt;
 use std::str::FromStr;
 
+/// An `SxEyMz` storage format: 1 sign bit, `exp_bits` exponent bits,
+/// `mant_bits` mantissa bits (parse one with `"S1E4M14".parse()`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FloatFormat {
+    /// exponent bits `e`, 1..=8
     pub exp_bits: u32,
+    /// mantissa bits `m`, 0..=23
     pub mant_bits: u32,
 }
 
 impl FloatFormat {
+    /// `S1E8M23` — exactly f32; quantization to it is the identity and the
+    /// store/transport layers ship such variables raw.
     pub const FP32: FloatFormat = FloatFormat { exp_bits: 8, mant_bits: 23 };
     /// IEEE binary16 (used for the Sec. 3.4 memory measurement).
     pub const FP16: FloatFormat = FloatFormat { exp_bits: 5, mant_bits: 10 };
 
+    /// Validated constructor (same rules the `FromStr` parser applies).
     pub fn new(exp_bits: u32, mant_bits: u32) -> anyhow::Result<Self> {
         anyhow::ensure!(
             (1..=8).contains(&exp_bits),
@@ -43,6 +50,7 @@ impl FloatFormat {
         1 + self.exp_bits + self.mant_bits
     }
 
+    /// Whether this is plain f32 (the no-compression baseline).
     pub fn is_fp32(&self) -> bool {
         *self == Self::FP32
     }

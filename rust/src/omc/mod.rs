@@ -40,6 +40,10 @@
 //! byte-identical wire payloads and bit-identical decoded f32s vs. the
 //! scalar reference — property-tested in `rust/tests/omc_kernels.rs`.
 
+// This module is the crate's public compression API: every public item
+// must carry documentation.
+#![warn(missing_docs)]
+
 pub mod codec;
 pub mod fixed;
 pub mod format;

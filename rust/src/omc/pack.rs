@@ -57,11 +57,17 @@ const PAR_MIN: usize = 8 * PAR_CHUNK_VALUES;
 /// Values per parallel work item: 64 blocks ≈ 64 KiB of f32 input.
 const PAR_CHUNK_VALUES: usize = 64 * BLOCK;
 
+/// Why a pack of already-quantized values failed.
 #[derive(Debug, PartialEq)]
 pub enum PackError {
     /// Value is not representable in the target format — the caller skipped
     /// quantization or the artifact and codec disagree.
-    NotRepresentable { index: usize, value: f32 },
+    NotRepresentable {
+        /// index of the offending element
+        index: usize,
+        /// the non-representable value
+        value: f32,
+    },
 }
 
 impl std::fmt::Display for PackError {
@@ -574,6 +580,24 @@ pub fn unpack_transform_into_threaded(
 /// through the same block kernels as `pack`, so payload and PVT scalars are
 /// identical to the separate-pass reference (property-tested in
 /// `rust/tests/omc_kernels.rs`).
+///
+/// ```
+/// use omc_fl::omc::pack;
+/// use omc_fl::FloatFormat;
+///
+/// let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+/// let values = vec![0.25f32, -0.5, 0.125, 1.0, -0.0625];
+///
+/// // uplink: quantize → PVT-fit → bit-pack, one pass
+/// let mut payload = Vec::new();
+/// let pvt = pack::quantize_transform_pack(&values, fmt, true, &mut payload);
+/// assert_eq!(payload.len(), fmt.packed_bytes(values.len()));
+///
+/// // downlink: unpack + affine transform, one pass
+/// let mut decoded = Vec::new();
+/// pack::unpack_transform_into(&payload, values.len(), fmt, pvt.s, pvt.b, &mut decoded);
+/// assert_eq!(decoded.len(), values.len());
+/// ```
 pub fn quantize_transform_pack(
     values: &[f32],
     fmt: FloatFormat,

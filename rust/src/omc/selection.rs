@@ -21,15 +21,17 @@ pub struct SelectionPolicy {
 }
 
 impl SelectionPolicy {
+    /// Baseline: nothing quantized (used with `FloatFormat::FP32`).
     pub fn fp32() -> Self {
-        // Baseline: nothing quantized (used with FloatFormat::FP32).
         Self { weights_only: true, fraction: 0.0 }
     }
 
+    /// The paper's PPQ setting: 90% of the weight matrices per client.
     pub fn paper_default() -> Self {
         Self { weights_only: true, fraction: 0.9 }
     }
 
+    /// Whether a variable may be quantized at all under this policy.
     pub fn eligible(&self, spec: &VarSpec) -> bool {
         !self.weights_only || spec.kind == VarKind::Weight
     }

@@ -14,15 +14,35 @@ use super::pack;
 use super::transform::Pvt;
 
 /// One variable in the store.
+///
+/// ```
+/// use omc_fl::omc::store::StoredVar;
+/// use omc_fl::FloatFormat;
+///
+/// let values = vec![0.5f32, -1.25, 3.0, 0.0625];
+/// let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+/// let sv = StoredVar::compress(&values, fmt, true);
+/// assert!(sv.is_packed());
+/// assert_eq!(sv.len(), 4);
+/// // 19-bit codes + 8 bytes of PVT scalars, vs 16 bytes raw
+/// assert_eq!(sv.memory_bytes(), fmt.packed_bytes(4) + 8);
+/// // decompress applies the fitted per-variable transform
+/// let back = sv.decompress();
+/// assert_eq!(back.len(), 4);
+/// ```
 #[derive(Clone, Debug)]
 pub enum StoredVar {
     /// Raw f32 (unquantized) — 4 bytes/element.
     Raw(Vec<f32>),
     /// Bit-packed SxEyMz codes + per-variable transform.
     Packed {
+        /// the bit-packed codes
         bytes: Vec<u8>,
+        /// element count
         n: usize,
+        /// the `SxEyMz` format the codes are packed at
         fmt: FloatFormat,
+        /// per-variable transform scalars
         pvt: Pvt,
     },
 }
@@ -65,10 +85,12 @@ impl StoredVar {
         })
     }
 
+    /// Store values unquantized (norm parameters, PPQ-unselected weights).
     pub fn raw(values: Vec<f32>) -> Self {
         StoredVar::Raw(values)
     }
 
+    /// Element count of the variable.
     pub fn len(&self) -> usize {
         match self {
             StoredVar::Raw(v) => v.len(),
@@ -76,10 +98,12 @@ impl StoredVar {
         }
     }
 
+    /// Whether the variable has zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether the variable is bit-packed (vs raw f32).
     pub fn is_packed(&self) -> bool {
         matches!(self, StoredVar::Packed { .. })
     }
@@ -152,6 +176,7 @@ impl StoredVar {
         }
     }
 
+    /// The per-variable transform scalars (identity for raw variables).
     pub fn pvt(&self) -> Pvt {
         match self {
             StoredVar::Raw(_) => Pvt::IDENTITY,
@@ -172,18 +197,22 @@ impl StoredVar {
 /// A full model in compressed form (one entry per manifest variable).
 #[derive(Clone, Debug, Default)]
 pub struct CompressedModel {
+    /// the stored variables, in manifest order
     pub vars: Vec<StoredVar>,
 }
 
 impl CompressedModel {
+    /// Wrap a list of stored variables (manifest order).
     pub fn new(vars: Vec<StoredVar>) -> Self {
         Self { vars }
     }
 
+    /// Number of variables.
     pub fn num_vars(&self) -> usize {
         self.vars.len()
     }
 
+    /// Total scalar parameter count across variables.
     pub fn num_params(&self) -> usize {
         self.vars.iter().map(|v| v.len()).sum()
     }

@@ -17,13 +17,17 @@
 /// unquantized variables.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Pvt {
+    /// scale
     pub s: f32,
+    /// bias
     pub b: f32,
 }
 
 impl Pvt {
+    /// The identity transform `(s, b) = (1, 0)` used for raw variables.
     pub const IDENTITY: Pvt = Pvt { s: 1.0, b: 0.0 };
 
+    /// Whether this is exactly the identity transform.
     pub fn is_identity(&self) -> bool {
         self.s == 1.0 && self.b == 0.0
     }
@@ -45,10 +49,12 @@ pub struct FitAcc {
 }
 
 impl FitAcc {
+    /// Empty accumulator (zero pairs seen).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulate one `(original, quantized)` pair.
     #[inline]
     pub fn push(&mut self, v: f32, t: f32) {
         let a = v as f64;

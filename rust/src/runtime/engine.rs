@@ -38,6 +38,14 @@ impl Engine {
         self.client.platform_name()
     }
 
+    /// Whether models loaded by this engine may be driven from multiple
+    /// threads. PJRT's `PjRtLoadedExecutable` holds an `Rc` into the
+    /// client, so: no — the round engine keeps client training pinned to
+    /// the thread that created the engine (see `fl::round`).
+    pub fn is_send_safe(&self) -> bool {
+        false
+    }
+
     /// Load one HLO-text artifact and compile it.
     pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
         compile_hlo_text(&self.client, path)
@@ -81,7 +89,7 @@ impl Engine {
 fn compile_hlo_text(client: &PjRtClient, path: &Path) -> Result<Executable> {
     anyhow::ensure!(
         path.exists(),
-        "artifact {} not found — run `make artifacts` first",
+        "artifact {} not found — run `python python/compile/aot.py --out-dir artifacts` first",
         path.display()
     );
     let t = std::time::Instant::now();
@@ -235,6 +243,12 @@ pub struct EvalOut {
 impl LoadedModel {
     pub fn num_vars(&self) -> usize {
         self.manifest.num_vars()
+    }
+
+    /// See [`Engine::is_send_safe`]: PJRT executables are `!Send`, so the
+    /// round engine must not shard client execution across threads.
+    pub fn is_send_safe(&self) -> bool {
+        false
     }
 
     /// Force-compile the executables a run will need (eval + the relevant

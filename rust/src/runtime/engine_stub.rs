@@ -35,6 +35,14 @@ impl Engine {
         unreachable!("stub Engine cannot be constructed")
     }
 
+    /// Whether models loaded by this engine may be driven from multiple
+    /// threads. The stub's types are plain data (`Send + Sync`), so a
+    /// Send-safe CPU engine with this surface lets the round engine shard
+    /// client execution across the thread pool (see `fl::round`).
+    pub fn is_send_safe(&self) -> bool {
+        true
+    }
+
     pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
         bail!(STUB_MSG)
     }
@@ -115,6 +123,12 @@ pub struct EvalOut {
 impl LoadedModel {
     pub fn num_vars(&self) -> usize {
         self.manifest.num_vars()
+    }
+
+    /// See [`Engine::is_send_safe`]: stub models are plain data, so the
+    /// round engine may shard client execution across threads.
+    pub fn is_send_safe(&self) -> bool {
+        true
     }
 
     pub fn warmup(&self, _fp32_baseline: bool, _use_pvt: bool) -> Result<()> {

@@ -99,7 +99,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity tokens; emitting them would
+                    // make the whole file unparseable (e.g. a summary whose
+                    // final_train_loss is NaN after a fully-dropped round)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -399,6 +404,17 @@ mod tests {
     fn numbers() {
         for (t, v) in [("0", 0.0), ("-1", -1.0), ("3.25", 3.25), ("1e3", 1000.0)] {
             assert_eq!(parse(t).unwrap().as_f64(), Some(v), "{t}");
+        }
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // JSON has no NaN/Infinity; the emitted file must stay parseable
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let obj = super::obj(vec![("v", super::num(x))]);
+            let text = obj.to_string();
+            assert_eq!(text, r#"{"v":null}"#);
+            assert!(parse(&text).unwrap().get("v").unwrap().as_f64().is_none());
         }
     }
 

@@ -1,4 +1,4 @@
-//! Shared helpers for integration tests (which need `make artifacts`).
+//! Shared helpers for integration tests (which need the AOT artifacts).
 
 use std::path::PathBuf;
 
@@ -19,7 +19,7 @@ pub fn artifacts_missing(sub: &str) -> bool {
         false
     } else {
         eprintln!(
-            "SKIP: {} not found — run `make artifacts` first",
+            "SKIP: {} not found — run `python python/compile/aot.py --out-dir artifacts` first",
             p.display()
         );
         true
