@@ -12,16 +12,37 @@ use omc_fl::fl::cohort::CohortConfig;
 use omc_fl::runtime::engine::Engine;
 
 fn main() {
-    let dir = std::path::Path::new("artifacts/tiny");
-    if !dir.exists() {
-        eprintln!(
-            "SKIP bench_round: artifacts/tiny missing — run \
-             `python python/compile/aot.py --out-dir artifacts`"
-        );
-        return;
-    }
-    let engine = Engine::cpu().expect("pjrt cpu client");
-    let model = Arc::new(engine.load_model(dir).expect("load model"));
+    // Prefer the compiled artifacts; fall back to the pure-Rust native
+    // backend so the round-latency trajectory exists in every environment
+    // (CI has no artifacts; default builds can't execute artifacts even
+    // when present). If a bench genuinely cannot run it must print a
+    // `SKIPPED:` line — CI greps for it so a wholly-skipped bench can't
+    // masquerade as a passing smoke.
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIPPED: bench_round — engine unavailable: {e}");
+            return;
+        }
+    };
+    let artifact_dir = std::path::Path::new("artifacts/tiny");
+    let native_dir = std::path::Path::new("native:tiny");
+    let (dir, model) = match engine.load_model(artifact_dir) {
+        Ok(m) => (artifact_dir, Arc::new(m)),
+        Err(first) => match engine.load_model(native_dir) {
+            Ok(m) => {
+                eprintln!(
+                    "NOTE bench_round: cannot run artifacts/tiny ({first:#}) \
+                     — falling back to the native backend (native:tiny)."
+                );
+                (native_dir, Arc::new(m))
+            }
+            Err(e) => {
+                println!("SKIPPED: bench_round — no runnable model: {e}");
+                return;
+            }
+        },
+    };
 
     let mut suite = Suite::new("end-to-end federated round (tiny model, 4 clients)");
     // rounds are ~100 ms; cap the sample budget

@@ -1,0 +1,106 @@
+//! Sweep-engine throughput: cells/sec for the smoke grid, sequential vs
+//! pooled over the thread pool. Runs entirely on the native backend
+//! (`native:tiny`), so it needs no artifacts and no `pjrt` feature — this
+//! bench can never silently self-skip.
+//!
+//! The pooled row measures the *scheduling* win only: cells are
+//! self-contained (intra-cell workers pinned to 1), so pooled and
+//! sequential runs produce byte-identical summaries — asserted here on
+//! every iteration's output so the bench doubles as a determinism smoke.
+
+use omc_fl::benchkit::Suite;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::runtime::engine::Engine;
+
+fn main() {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            // unreachable in default builds (the native engine always
+            // constructs); kept so a failure is loud, not a fake pass
+            println!("SKIPPED: bench_sweep — engine unavailable: {e}");
+            return;
+        }
+    };
+    let out_root = std::env::temp_dir().join(format!(
+        "omc_bench_sweep_{}",
+        std::process::id()
+    ));
+    let spec_for = |dir: &str| {
+        let mut spec = sweep::smoke(42).expect("smoke spec");
+        spec.output_dir = out_root.join(dir);
+        spec
+    };
+    let n_cells = spec_for("probe").cells.len();
+
+    let mut suite = Suite::new(&format!(
+        "sweep engine (smoke grid, {n_cells} cells, native:tiny)"
+    ));
+    suite.min_time_s = suite.min_time_s.min(2.0);
+
+    let seq_spec = spec_for("seq");
+    let seq_opts = SweepOptions {
+        workers: 1,
+        sequential: true,
+        resume: false,
+    };
+    let mut seq_bytes = String::new();
+    suite.bench(
+        &format!("sweep {n_cells} cells sequential"),
+        Some(n_cells),
+        || {
+            let report =
+                sweep::run_sweep(&engine, &seq_spec, &seq_opts).expect("sweep");
+            seq_bytes = report.summary_bytes;
+        },
+    );
+
+    for workers in [2usize, 4] {
+        let spec = spec_for(&format!("pool{workers}"));
+        let opts = SweepOptions {
+            workers,
+            sequential: false,
+            resume: false,
+        };
+        suite.bench(
+            &format!("sweep {n_cells} cells pooled (workers={workers})"),
+            Some(n_cells),
+            || {
+                let report =
+                    sweep::run_sweep(&engine, &spec, &opts).expect("sweep");
+                assert_eq!(
+                    report.summary_bytes, seq_bytes,
+                    "pooled summary bytes diverged from sequential"
+                );
+            },
+        );
+    }
+
+    // resume throughput: every cell already has a matching summary
+    let resume_spec = spec_for("seq");
+    let resume_opts = SweepOptions {
+        workers: 1,
+        sequential: true,
+        resume: true,
+    };
+    suite.bench(
+        &format!("sweep {n_cells} cells resumed (all cached)"),
+        Some(n_cells),
+        || {
+            let report = sweep::run_sweep(&engine, &resume_spec, &resume_opts)
+                .expect("sweep");
+            assert_eq!(report.cells_resumed, n_cells);
+            assert_eq!(report.summary_bytes, seq_bytes);
+        },
+    );
+
+    suite.finish("BENCH_sweep.json");
+    for r in suite.results() {
+        println!(
+            "  {}: {:.1} cells/s",
+            r.name,
+            n_cells as f64 / (r.median_ns / 1e9)
+        );
+    }
+    std::fs::remove_dir_all(&out_root).ok();
+}

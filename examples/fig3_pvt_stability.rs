@@ -12,77 +12,62 @@
 //! quantizer bias actually bites within ~100 rounds). The *comparison*
 //! (with-PVT stays stable and strictly better) is the reproduced shape.
 //!
+//! Thin wrapper over `presets::fig3_grid` — identical to
+//! `omc-fl sweep --preset fig3`. Curves print from the cells'
+//! deterministic `eval_wer_curve` summaries.
+//!
 //!     cargo run --release --example fig3_pvt_stability -- --rounds 100
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::metrics::sweep::CellView;
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
 fn main() -> Result<()> {
     let mut args = Args::new("fig3", "Fig. 3: with vs without PVT, from scratch");
     args.flag("rounds", "federated rounds", Some("100"));
-    args.flag("seed", "rng seed", Some("42"));
+    args.flag("seed", "sweep seed", Some("42"));
     args.flag(
         "format",
         "storage format (paper: S1E5M10 at 12K rounds; coarser here to \
          surface the effect at small scale)",
         Some("S1E3M4"),
     );
-    args.flag("model-dir", "artifact dir", Some("artifacts/small"));
+    args.flag("model-dir", "artifact dir (or native:tiny)", Some("artifacts/small"));
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
-    let model_dir = m.get("model-dir").unwrap();
     let fmt = m.get("format").unwrap();
-    let out = "results/fig3";
+    let spec = presets::fig3_grid(m.get("model-dir").unwrap(), &scale, fmt)?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
 
-    let mut curves = Vec::new();
-    for (label, use_pvt) in [("with_pvt", true), ("without_pvt", false)] {
-        let omc = OmcConfig {
-            format: fmt.parse()?,
-            use_pvt,
-            weights_only: false, // quantize everything: the unstable regime
-            fraction: 1.0,
-        };
-        let mut cfg = presets::experiment(
-            label, model_dir, &scale, Partition::Iid, 0, omc, out,
-        );
-        cfg.eval_every = (scale.rounds / 25).max(1); // dense curve
-        println!("== from-scratch at {fmt}, {label} ==");
-        let (rec, summary) = presets::run_variant(&model, cfg)?;
-        curves.push((label, rec, summary));
-    }
-
+    let with = CellView(&report.cells[0].cell_json);
+    let without = CellView(&report.cells[1].cell_json);
     println!("\n## Figure 3 — WER vs round, from scratch at {fmt}\n");
     println!("{:>6} {:>14} {:>14}", "round", "with PVT", "without PVT");
-    let (with, without) = (&curves[0].1, &curves[1].1);
-    for (a, b) in with.records.iter().zip(&without.records) {
-        if a.eval_wer >= 0.0 {
-            println!("{:>6} {:>13.2}% {:>13.2}%", a.round, a.eval_wer, b.eval_wer);
+    let without_curve = without.eval_wer_curve();
+    for (i, (round, wer_with)) in with.eval_wer_curve().iter().enumerate() {
+        if let Some((_, wer_without)) = without_curve.get(i) {
+            println!("{round:>6} {wer_with:>13.2}% {wer_without:>13.2}%");
         }
     }
-    let wer_with = curves[0].2.final_wer;
-    let wer_without = curves[1].2.final_wer;
+    let (wer_with, wer_without) = (with.final_wer(), without.final_wer());
     println!(
         "\nfinal WER: with PVT {wer_with:.2}% vs without {wer_without:.2}% \
          (paper shape: without-PVT diverges/stalls; with-PVT keeps improving)"
     );
     // divergence check: did the without-PVT curve rise from its best?
-    let best_without = without
-        .records
+    let best_without = without_curve
         .iter()
-        .filter(|r| r.eval_wer >= 0.0)
-        .map(|r| r.eval_wer)
+        .map(|&(_, w)| w)
         .fold(f64::INFINITY, f64::min);
     println!(
         "without-PVT best {best_without:.2}% -> final {wer_without:.2}% \
          (rise = instability signal)"
     );
-    println!("curve CSVs: {out}/*.csv");
+    println!("curve CSVs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
 }

@@ -6,13 +6,16 @@
 //! APQ@13bit variant, even though the average bitwidth is comparable
 //! (90%·11 + 10%·32 ≈ 13.1 bits).
 //!
+//! Thin wrapper over `presets::fig4_grid` — identical to
+//! `omc-fl sweep --preset fig4`. Curves print from the cells'
+//! deterministic `eval_wer_curve` summaries.
+//!
 //!     cargo run --release --example fig4_ppq_vs_apq -- --rounds 60
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
-use omc_fl::coordinator::experiment::print_table;
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::metrics::sweep::CellView;
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
@@ -20,99 +23,57 @@ fn main() -> Result<()> {
     let mut args = Args::new("fig4", "Fig. 4: PPQ 11-bit vs APQ 13-bit");
     args.flag("pretrain-rounds", "rounds on the source domain", Some("60"));
     args.flag("rounds", "adaptation rounds per curve", Some("60"));
-    args.flag("seed", "rng seed", Some("42"));
-    args.flag("model-dir", "artifact dir", Some("artifacts/small_streaming"));
+    args.flag("seed", "sweep seed", Some("42"));
+    args.flag(
+        "model-dir",
+        "artifact dir (or native:tiny)",
+        Some("artifacts/small_streaming"),
+    );
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
-    let model_dir = m.get("model-dir").unwrap();
-    let out = "results/fig4";
-    let ckpt = std::path::PathBuf::from(out).join("pretrained.bin");
+    let spec = presets::fig4_grid(
+        m.get("model-dir").unwrap(),
+        &scale,
+        m.get_usize("pretrain-rounds")?,
+    )?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
 
-    // shared pretraining (same adaptation setting as Table 2 / Table 4)
-    let mut pre_cfg = presets::experiment(
-        "pretrain_domain0",
-        model_dir,
-        &Scale::from_flags(m.get_usize("pretrain-rounds")?, scale.seed),
-        Partition::Iid,
-        0,
-        OmcConfig::fp32_baseline(),
-        out,
-    );
-    pre_cfg.save_to = Some(ckpt.clone());
-    println!("== pretraining on source domain (FP32) ==");
-    presets::run_variant(&model, pre_cfg)?;
-
-    // PPQ: 90% of weights at 11 bits. APQ: 100% of weights at 13 bits.
-    let variants: Vec<(String, OmcConfig)> = vec![
-        (
-            "PPQ S1E3M7 @ 90%".into(),
-            OmcConfig {
-                format: "S1E3M7".parse()?,
-                use_pvt: true,
-                weights_only: true,
-                fraction: 0.9,
-            },
-        ),
-        ("APQ S1E3M9 @ 100%".into(), apq("S1E3M9")?),
-        ("APQ S1E4M8 @ 100%".into(), apq("S1E4M8")?),
-        ("APQ S1E5M7 @ 100%".into(), apq("S1E5M7")?),
-    ];
-
-    let mut rows = Vec::new();
-    let mut curves = Vec::new();
-    for (label, omc) in variants {
-        let mut cfg = presets::experiment(
-            &label, model_dir, &scale, Partition::Iid, 1, omc, out,
-        );
-        cfg.init_from = Some(ckpt.clone());
-        cfg.lr = 0.05;
-        cfg.eval_every = (scale.rounds / 15).max(1);
-        println!("== adaptation curve: {label} ==");
-        let (rec, summary) = presets::run_variant(&model, cfg)?;
-        curves.push((label.clone(), rec));
-        rows.push(summary);
-    }
-
+    let cells: Vec<CellView<'_>> = report
+        .cells
+        .iter()
+        .map(|o| CellView(&o.cell_json))
+        .collect();
     println!("\n## Figure 4 — WER vs round (adaptation)\n");
     print!("{:>6}", "round");
-    for (label, _) in &curves {
-        print!(" {:>19}", label);
+    for c in &cells {
+        print!(" {:>19}", c.label());
     }
     println!();
-    let nrec = curves[0].1.records.len();
-    for i in 0..nrec {
-        if curves[0].1.records[i].eval_wer < 0.0 {
-            continue;
-        }
-        print!("{:>6}", curves[0].1.records[i].round);
-        for (_, rec) in &curves {
-            print!(" {:>18.2}%", rec.records[i].eval_wer);
+    let curves: Vec<Vec<(usize, f64)>> =
+        cells.iter().map(|c| c.eval_wer_curve()).collect();
+    for (i, &(round, _)) in curves[0].iter().enumerate() {
+        print!("{round:>6}");
+        for curve in &curves {
+            match curve.get(i) {
+                Some(&(_, wer)) => print!(" {wer:>18.2}%"),
+                None => print!(" {:>19}", "-"),
+            }
         }
         println!();
     }
 
-    print_table("Figure 4 — final WERs", &rows);
-    let ppq = rows[0].final_wer;
-    let best_apq = rows[1..]
+    sweep::print_report("Figure 4 — final WERs", &report);
+    let ppq = cells[0].final_wer();
+    let best_apq = cells[1..]
         .iter()
-        .map(|r| r.final_wer)
+        .map(|c| c.final_wer())
         .fold(f64::INFINITY, f64::min);
     println!(
         "shape check: PPQ {ppq:.2}% vs best APQ {best_apq:.2}% \
          (paper: PPQ wins every APQ-13bit variant)"
     );
-    println!("curve CSVs: {out}/*.csv");
+    println!("curve CSVs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
-}
-
-fn apq(fmt: &str) -> Result<OmcConfig> {
-    Ok(OmcConfig {
-        format: fmt.parse()?,
-        use_pvt: true,
-        weights_only: true,
-        fraction: 1.0,
-    })
 }

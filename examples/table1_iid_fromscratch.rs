@@ -3,57 +3,46 @@
 //! Paper rows: FP32 (S1E8M23) vs OMC (S1E4M14): comparable WER at 64%
 //! parameter memory/communication and 91% speed.
 //!
-//! Here: conformer-lite (`artifacts/small`, non-streaming) on the IID
-//! synthetic ASR task, trained from scratch. The shape to reproduce:
-//! WER(OMC) ≈ WER(FP32), memory/comm ratio ≈ 0.9·19/32 + 0.1 per weight
-//! byte, speed within a modest overhead.
+//! Thin wrapper over the `presets::table1_grid` sweep — identical to
+//! `omc-fl sweep --preset table1`. Cell seeds derive from
+//! `(seed, cell index)`; per-cell logs and deterministic summaries land
+//! under `results/table1/cells/`.
 //!
 //!     cargo run --release --example table1_iid_fromscratch -- --rounds 80
+//!
+//! Runs against the PJRT artifacts by default; pass
+//! `--model-dir native:tiny` to exercise it anywhere.
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
-use omc_fl::coordinator::experiment::print_table;
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::metrics::sweep::CellView;
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
 fn main() -> Result<()> {
     let mut args = Args::new("table1", "Table 1: FP32 vs OMC S1E4M14, IID, from scratch");
     args.flag("rounds", "federated rounds", Some("80"));
-    args.flag("seed", "rng seed", Some("42"));
-    args.flag("model-dir", "artifact dir", Some("artifacts/small"));
+    args.flag("seed", "sweep seed", Some("42"));
+    args.flag("model-dir", "artifact dir (or native:tiny)", Some("artifacts/small"));
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
-    let model_dir = m.get("model-dir").unwrap();
-    let out = "results/table1";
+    let spec = presets::table1_grid(m.get("model-dir").unwrap(), &scale)?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
-
-    let variants = [
-        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
-        ("OMC (S1E4M14)", OmcConfig::paper("S1E4M14".parse()?)),
-    ];
-    let mut rows = Vec::new();
-    for (label, omc) in variants {
-        let cfg = presets::experiment(
-            label, model_dir, &scale, Partition::Iid, 0, omc, out,
-        );
-        let (_, summary) = presets::run_variant(&model, cfg)?;
-        rows.push(summary);
-    }
-
-    print_table(
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
+    sweep::print_report(
         "Table 1 — non-streaming conformer-lite on IID synthetic ASR (from scratch)",
-        &rows,
+        &report,
     );
-    let wer_gap = (rows[1].final_wer - rows[0].final_wer).abs();
+    let wer = |i: usize| CellView(&report.cells[i].cell_json).final_wer();
+    let ratio = CellView(&report.cells[1].cell_json).memory_ratio();
     println!(
-        "WER gap |OMC - FP32| = {wer_gap:.2} points (paper: ~0); \
+        "WER gap |OMC - FP32| = {:.2} points (paper: ~0); \
          memory ratio {:.0}% (paper: 64%)",
-        100.0 * rows[1].memory_ratio
+        (wer(1) - wer(0)).abs(),
+        100.0 * ratio
     );
-    println!("per-round logs: {out}/*.csv");
+    println!("per-cell logs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
 }

@@ -1,21 +1,22 @@
 //! **Table 2** — Streaming Conformer on the Multi-Domain dataset
 //! (domain adaptation: non-MF → MF).
 //!
-//! Paper rows: before-adaptation WER; FP32; OMC S1E3M7 (matches FP32 at 41%
-//! memory); OMC S1E2M3 (worse WER but still better than before-adaptation,
-//! at 29%).
+//! Paper rows: before-adaptation WER; FP32; OMC S1E3M7 (matches FP32 at
+//! 41% memory); OMC S1E2M3 (worse WER but still better than
+//! before-adaptation, at 29%).
 //!
-//! Here: the *streaming* conformer-lite (`artifacts/small_streaming`,
-//! causal attention + causal conv) is pretrained on synthetic domain 0,
-//! then adapted to domain 1 under each compression setting.
+//! Thin wrapper over `presets::table2_grid` — identical to
+//! `omc-fl sweep --preset table2`. The sweep pretrains on source domain 0
+//! into a shared checkpoint, then runs every adaptation cell from it; the
+//! before-adaptation probe is a direct evaluation of that checkpoint.
 //!
 //!     cargo run --release --example table2_domain_adaptation -- --rounds 60
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
-use omc_fl::coordinator::experiment::{print_table, Experiment};
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::coordinator::Experiment;
+use omc_fl::metrics::sweep::CellView;
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
@@ -26,81 +27,54 @@ fn main() -> Result<()> {
     );
     args.flag("pretrain-rounds", "rounds on the source domain", Some("60"));
     args.flag("rounds", "adaptation rounds per variant", Some("60"));
-    args.flag("seed", "rng seed", Some("42"));
-    args.flag("model-dir", "artifact dir", Some("artifacts/small_streaming"));
+    args.flag("seed", "sweep seed", Some("42"));
+    args.flag(
+        "model-dir",
+        "artifact dir (or native:tiny)",
+        Some("artifacts/small_streaming"),
+    );
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
     let model_dir = m.get("model-dir").unwrap();
-    let out = "results/table2";
-    let ckpt = std::path::PathBuf::from(out).join("pretrained.bin");
+    let spec = presets::table2_grid(
+        model_dir,
+        &scale,
+        m.get_usize("pretrain-rounds")?,
+    )?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
 
-    // ---- phase 1: pretrain on the source domain (the "non-MF" analog) ----
-    let mut pre_cfg = presets::experiment(
-        "pretrain_domain0",
-        model_dir,
-        &Scale::from_flags(m.get_usize("pretrain-rounds")?, scale.seed),
-        Partition::Iid,
-        0,
-        OmcConfig::fp32_baseline(),
-        out,
-    );
-    pre_cfg.save_to = Some(ckpt.clone());
-    println!("== pretraining on source domain (FP32) ==");
-    presets::run_variant(&model, pre_cfg)?;
-
-    // ---- before-adaptation WER on the target domain ----------------------
-    let mut probe_cfg = presets::experiment(
-        "before_adaptation",
-        model_dir,
-        &Scale::from_flags(1, scale.seed),
-        Partition::Iid,
-        1,
-        OmcConfig::fp32_baseline(),
-        out,
-    );
-    probe_cfg.init_from = Some(ckpt.clone());
-    let probe = Experiment::prepare_with_model(probe_cfg, model.clone())?;
+    // before-adaptation probe: evaluate the pretrained checkpoint on the
+    // target domain without any training, reusing the sweep's bound model
+    // (a fresh binding would recompile the eval graph under PJRT)
+    let pre = spec.pretrain.as_ref().expect("table2 pretrains");
+    let mut probe_cfg = spec.cells[0].clone();
+    probe_cfg.name = "before_adaptation".into();
+    probe_cfg.init_from = pre.save_to.clone();
+    let model = report
+        .model_for(&probe_cfg.model_dir)
+        .expect("sweep bound the model dir");
+    let probe = Experiment::prepare_with_model(probe_cfg, model)?;
     let (before_wer, _) = probe.evaluate()?;
     drop(probe);
 
-    // ---- phase 2: adaptation on the target domain under each format ------
-    let variants = [
-        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
-        ("OMC (S1E3M7)", OmcConfig::paper("S1E3M7".parse()?)),
-        ("OMC (S1E2M3)", OmcConfig::paper("S1E2M3".parse()?)),
-    ];
-    let mut rows = Vec::new();
-    for (label, omc) in variants {
-        let mut cfg = presets::experiment(
-            label, model_dir, &scale, Partition::Iid, 1, omc, out,
-        );
-        cfg.init_from = Some(ckpt.clone());
-        // adaptation uses a lower lr, as finetuning does
-        cfg.lr = 0.05;
-        println!("== adapting to target domain: {label} ==");
-        let (_, summary) = presets::run_variant(&model, cfg)?;
-        rows.push(summary);
-    }
-
     println!("\nBefore Adaptation WER: {before_wer:.2}%");
-    print_table(
+    sweep::print_report(
         "Table 2 — streaming conformer-lite, domain adaptation (WER on target domain)",
-        &rows,
+        &report,
     );
+    let cell = |i: usize| CellView(&report.cells[i].cell_json);
     println!(
         "shape checks: S1E3M7 ≈ FP32 ({:.2} vs {:.2}); S1E2M3 ({:.2}) worse than \
-         S1E3M7 but better than before-adaptation ({:.2}); memory 41%/29% of FP32 \
+         S1E3M7 but better than before-adaptation ({before_wer:.2}); memory 41%/29% of FP32 \
          (paper) vs {:.0}%/{:.0}% here",
-        rows[1].final_wer,
-        rows[0].final_wer,
-        rows[2].final_wer,
-        before_wer,
-        100.0 * rows[1].memory_ratio,
-        100.0 * rows[2].memory_ratio,
+        cell(1).final_wer(),
+        cell(0).final_wer(),
+        cell(2).final_wer(),
+        100.0 * cell(1).memory_ratio(),
+        100.0 * cell(2).memory_ratio(),
     );
-    println!("per-round logs: {out}/*.csv");
+    println!("per-cell logs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
 }

@@ -1,59 +1,42 @@
 //! **Table 3** — Non-streaming Conformer on *non-IID* LibriSpeech
 //! (partitioned by speaker), FP32 vs OMC S1E4M14.
 //!
-//! The paper's point: OMC attains comparable WERs even under non-IID client
-//! distributions. Here the non-IID axis is the per-speaker channel vectors:
-//! each client owns a disjoint speaker shard.
+//! The paper's point: OMC attains comparable WERs even under non-IID
+//! client distributions. Here the non-IID axis is the per-speaker channel
+//! vectors: each client owns a disjoint speaker shard.
+//!
+//! Thin wrapper over `presets::table3_grid` — identical to
+//! `omc-fl sweep --preset table3`.
 //!
 //!     cargo run --release --example table3_noniid -- --rounds 80
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
-use omc_fl::coordinator::experiment::print_table;
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
+use omc_fl::metrics::sweep::CellView;
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
 fn main() -> Result<()> {
     let mut args = Args::new("table3", "Table 3: FP32 vs OMC S1E4M14 on non-IID data");
     args.flag("rounds", "federated rounds", Some("80"));
-    args.flag("seed", "rng seed", Some("42"));
-    args.flag("model-dir", "artifact dir", Some("artifacts/small"));
+    args.flag("seed", "sweep seed", Some("42"));
+    args.flag("model-dir", "artifact dir (or native:tiny)", Some("artifacts/small"));
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
-    let model_dir = m.get("model-dir").unwrap();
-    let out = "results/table3";
+    let spec = presets::table3_grid(m.get("model-dir").unwrap(), &scale)?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
-
-    let mut rows = Vec::new();
-    for (label, omc) in [
-        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
-        ("OMC (S1E4M14)", OmcConfig::paper("S1E4M14".parse()?)),
-    ] {
-        let cfg = presets::experiment(
-            label,
-            model_dir,
-            &scale,
-            Partition::BySpeaker,
-            0,
-            omc,
-            out,
-        );
-        let (_, summary) = presets::run_variant(&model, cfg)?;
-        rows.push(summary);
-    }
-
-    print_table(
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
+    sweep::print_report(
         "Table 3 — non-streaming conformer-lite on NON-IID (by-speaker) synthetic ASR",
-        &rows,
+        &report,
     );
+    let wer = |i: usize| CellView(&report.cells[i].cell_json).final_wer();
     println!(
         "WER gap |OMC - FP32| = {:.2} points (paper: ~0 on non-IID too)",
-        (rows[1].final_wer - rows[0].final_wer).abs()
+        (wer(1) - wer(0)).abs()
     );
-    println!("per-round logs: {out}/*.csv");
+    println!("per-cell logs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
 }

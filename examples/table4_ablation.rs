@@ -2,17 +2,18 @@
 //! S1E3M7 on the domain-adaptation workload.
 //!
 //! Paper ladder (WER): FP32 4.6 → quant-only 6.9 → +PVT 6.5 →
-//! +weights-only 4.7 → +90% 4.6. The shape to reproduce: quantization alone
-//! opens a WER gap; PVT, weights-only and PPQ close it monotonically back
-//! to the baseline.
+//! +weights-only 4.7 → +90% 4.6. The shape to reproduce: quantization
+//! alone opens a WER gap; PVT, weights-only and PPQ close it monotonically
+//! back to the baseline.
+//!
+//! Thin wrapper over `presets::table4_grid` — identical to
+//! `omc-fl sweep --preset table4`.
 //!
 //!     cargo run --release --example table4_ablation -- --rounds 50
 
 use anyhow::Result;
-use omc_fl::coordinator::config::OmcConfig;
-use omc_fl::coordinator::experiment::print_table;
 use omc_fl::coordinator::presets::{self, Scale};
-use omc_fl::data::partition::Partition;
+use omc_fl::coordinator::sweep::{self, SweepOptions};
 use omc_fl::runtime::engine::Engine;
 use omc_fl::util::cli::Args;
 
@@ -20,54 +21,35 @@ fn main() -> Result<()> {
     let mut args = Args::new("table4", "Table 4: OMC method ablation at S1E3M7");
     args.flag("pretrain-rounds", "rounds on the source domain", Some("60"));
     args.flag("rounds", "adaptation rounds per row", Some("50"));
-    args.flag("seed", "rng seed", Some("42"));
+    args.flag("seed", "sweep seed", Some("42"));
     args.flag("format", "quantization format", Some("S1E3M7"));
-    args.flag("model-dir", "artifact dir", Some("artifacts/small_streaming"));
+    args.flag(
+        "model-dir",
+        "artifact dir (or native:tiny)",
+        Some("artifacts/small_streaming"),
+    );
     let m = args.parse();
     let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
-    let model_dir = m.get("model-dir").unwrap();
-    let out = "results/table4";
-    let ckpt = std::path::PathBuf::from(out).join("pretrained.bin");
+    let spec = presets::table4_grid(
+        m.get("model-dir").unwrap(),
+        &scale,
+        m.get_usize("pretrain-rounds")?,
+        m.get("format").unwrap(),
+    )?;
 
     let engine = Engine::cpu()?;
-    let model = presets::bind_model(&engine, model_dir)?;
-
-    // shared pretraining checkpoint (source domain, FP32)
-    let mut pre_cfg = presets::experiment(
-        "pretrain_domain0",
-        model_dir,
-        &Scale::from_flags(m.get_usize("pretrain-rounds")?, scale.seed),
-        Partition::Iid,
-        0,
-        OmcConfig::fp32_baseline(),
-        out,
+    let report = sweep::run_sweep(&engine, &spec, &SweepOptions::default())?;
+    sweep::print_report(
+        &format!(
+            "Table 4 — ablation ladder at {} (adaptation workload)",
+            m.get("format").unwrap()
+        ),
+        &report,
     );
-    pre_cfg.save_to = Some(ckpt.clone());
-    println!("== pretraining on source domain (FP32) ==");
-    presets::run_variant(&model, pre_cfg)?;
-
-    let mut rows = Vec::new();
-    for (label, omc) in presets::table4_ladder(m.get("format").unwrap())? {
-        let mut cfg = presets::experiment(
-            &label, model_dir, &scale, Partition::Iid, 1, omc, out,
-        );
-        cfg.init_from = Some(ckpt.clone());
-        cfg.lr = 0.05;
-        println!("== ablation row: {label} ==");
-        let (_, summary) = presets::run_variant(&model, cfg)?;
-        rows.push(summary);
-    }
-
-    print_table(
-        "Table 4 — ablation: proposed methods applied sequentially (adaptation WER)",
-        &rows,
-    );
-    println!("shape check (paper): FP32 {:.2} <= full OMC {:.2} << quant-only {:.2};",
-        rows[0].final_wer, rows[4].final_wer, rows[1].final_wer);
     println!(
-        "ladder: quant-only {:.2} -> +PVT {:.2} -> +weights-only {:.2} -> +90% {:.2}",
-        rows[1].final_wer, rows[2].final_wer, rows[3].final_wer, rows[4].final_wer
+        "shape check: the ladder should close the quant-only WER gap \
+         monotonically back toward the FP32 row"
     );
-    println!("per-round logs: {out}/*.csv");
+    println!("per-cell logs: {}/cells/*.csv", spec.output_dir.display());
     Ok(())
 }

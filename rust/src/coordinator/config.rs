@@ -173,15 +173,7 @@ impl ExperimentConfig {
             cfg.omc.weights_only = v;
         }
         if let Some(v) = get_f("omc.fraction") {
-            anyhow::ensure!((0.0..=1.0).contains(&v), "omc.fraction in [0,1]");
             cfg.omc.fraction = v;
-        }
-        if !cfg.omc.format.is_fp32() && cfg.omc.fraction == 0.0 {
-            // a quantized format with nothing selected is a config smell
-            anyhow::bail!(
-                "omc.format is {} but omc.fraction is 0 — set fraction or use S1E8M23",
-                cfg.omc.format
-            );
         }
         if let Some(v) = get_f("cohort.dropout") {
             cfg.cohort.dropout_prob = v;
@@ -221,6 +213,18 @@ impl ExperimentConfig {
         anyhow::ensure!(self.local_steps > 0, "local_steps must be > 0");
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!(self.eval_every > 0, "eval_every must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.omc.fraction),
+            "omc.fraction must be in [0, 1]"
+        );
+        // a quantized format with nothing selected silently trains the
+        // FP32 path while reporting the quantized label — reject it on
+        // every construction path (TOML, presets, sweep grid expansion)
+        anyhow::ensure!(
+            self.omc.format.is_fp32() || self.omc.fraction > 0.0,
+            "omc.format is {} but omc.fraction is 0 — set fraction or use S1E8M23",
+            self.omc.format
+        );
         self.cohort.validate()?;
         Ok(())
     }

@@ -10,7 +10,7 @@ use crate::coordinator::params_io;
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::{collapse_words, Domain, TaskConfig};
 use crate::fl::client::ClientTrainConfig;
-use crate::fl::round::{run_round, RoundContext, RoundScratch};
+use crate::fl::round::{RoundContext, RoundEngine};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::Server;
 use crate::metrics::recorder::{Recorder, RoundRecord};
@@ -28,8 +28,10 @@ pub struct Experiment {
     pub assignment: ClientAssignment,
     pub sampler: Sampler,
     pub server: Server,
-    /// codec buffers reused across rounds (zero-alloc steady state)
-    scratch: RoundScratch,
+    /// round executor owning the codec buffers reused across rounds
+    /// (zero-alloc steady state); [`Experiment::run_with`] lets a caller
+    /// substitute its own handle so buffers survive across experiments
+    rounds: RoundEngine,
 }
 
 /// Final summary, one per experiment run (a row of a paper table).
@@ -107,7 +109,7 @@ impl Experiment {
             assignment,
             sampler,
             server,
-            scratch: RoundScratch::new(),
+            rounds: RoundEngine::new(),
         })
     }
 
@@ -216,12 +218,22 @@ impl Experiment {
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };
-        let outcome = run_round(&ctx, &mut self.server, &mut self.scratch)?;
+        let outcome = self.rounds.run(&ctx, &mut self.server)?;
         Ok((outcome.mean_loss, outcome.down_bytes + outcome.up_bytes))
     }
 
     /// Run the full experiment; returns the recorder with per-round logs.
     pub fn run(&mut self) -> Result<(Recorder, RunSummary)> {
+        let mut rounds = std::mem::take(&mut self.rounds);
+        let out = self.run_with(&mut rounds);
+        self.rounds = rounds;
+        out
+    }
+
+    /// Like [`run`](Self::run), but executing through a caller-owned
+    /// [`RoundEngine`] — the sweep engine passes one handle per worker so
+    /// warmed codec buffers carry across cells.
+    pub fn run_with(&mut self, rounds: &mut RoundEngine) -> Result<(Recorder, RunSummary)> {
         self.warmup()?;
         let mut rec = Recorder::new(&self.cfg.name);
         let policy = self.policy();
@@ -259,7 +271,7 @@ impl Experiment {
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
             };
-            let outcome = run_round(&ctx, &mut self.server, &mut self.scratch)?;
+            let outcome = rounds.run(&ctx, &mut self.server)?;
             let round_seconds = t.elapsed_s();
             let (wer, eval_loss) = if (r + 1) % self.cfg.eval_every == 0
                 || r + 1 == self.cfg.rounds

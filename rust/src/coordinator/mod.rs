@@ -1,10 +1,12 @@
 //! The experiment coordinator — ties config, runtime, data and FL together
-//! and drives whole federated runs (the L3 entry point).
+//! and drives whole federated runs and grid sweeps (the L3 entry point).
 
 pub mod config;
 pub mod experiment;
 pub mod params_io;
 pub mod presets;
+pub mod sweep;
 
 pub use config::ExperimentConfig;
 pub use experiment::Experiment;
+pub use sweep::{SweepOptions, SweepSpec};

@@ -2,13 +2,14 @@
 //! `examples/` (DESIGN.md §5): standard experiment shapes, format ladders,
 //! and output conventions.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::config::{ExperimentConfig, OmcConfig};
 use crate::coordinator::experiment::{Experiment, RunSummary};
+use crate::coordinator::sweep::SweepSpec;
 use crate::data::partition::Partition;
 use crate::fl::cohort::CohortConfig;
 use crate::metrics::recorder::Recorder;
@@ -158,6 +159,193 @@ pub fn cohort_ladder() -> Vec<(String, CohortConfig)> {
     ]
 }
 
+// ---- paper sweep grids ---------------------------------------------------
+//
+// Each table/figure of the paper as a ready-to-run `SweepSpec`; the
+// `examples/` drivers are thin wrappers over these. Cell seeds are derived
+// per-cell by `SweepSpec::finalize` from `(scale.seed, cell index)`.
+
+/// Shared pretraining phase for the adaptation grids (source domain, FP32,
+/// checkpoint under the grid's output dir).
+fn pretrain_phase(
+    model_dir: &str,
+    rounds: usize,
+    seed: u64,
+    out: &str,
+) -> (ExperimentConfig, PathBuf) {
+    let ckpt = PathBuf::from(out).join("pretrained.bin");
+    let mut pre = experiment(
+        "pretrain_domain0",
+        model_dir,
+        &Scale::from_flags(rounds, seed),
+        Partition::Iid,
+        0,
+        OmcConfig::fp32_baseline(),
+        out,
+    );
+    pre.save_to = Some(ckpt.clone());
+    (pre, ckpt)
+}
+
+/// Table 1 — FP32 vs OMC S1E4M14, IID, from scratch.
+pub fn table1_grid(model_dir: &str, scale: &Scale) -> Result<SweepSpec> {
+    let out = "results/table1";
+    let mut spec = SweepSpec::new("table1", scale.seed, Path::new(out));
+    for (label, omc) in [
+        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
+        ("OMC (S1E4M14)", OmcConfig::paper("S1E4M14".parse()?)),
+    ] {
+        spec.cells
+            .push(experiment(label, model_dir, scale, Partition::Iid, 0, omc, out));
+    }
+    spec.finalize()
+}
+
+/// Table 2 — domain adaptation (FP32 / S1E3M7 / S1E2M3) from a shared
+/// source-domain checkpoint.
+pub fn table2_grid(
+    model_dir: &str,
+    scale: &Scale,
+    pretrain_rounds: usize,
+) -> Result<SweepSpec> {
+    let out = "results/table2";
+    let mut spec = SweepSpec::new("table2", scale.seed, Path::new(out));
+    let (pre, ckpt) = pretrain_phase(model_dir, pretrain_rounds, scale.seed, out);
+    spec.pretrain = Some(pre);
+    for (label, omc) in [
+        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
+        ("OMC (S1E3M7)", OmcConfig::paper("S1E3M7".parse()?)),
+        ("OMC (S1E2M3)", OmcConfig::paper("S1E2M3".parse()?)),
+    ] {
+        let mut cfg =
+            experiment(label, model_dir, scale, Partition::Iid, 1, omc, out);
+        cfg.init_from = Some(ckpt.clone());
+        cfg.lr = 0.05; // adaptation uses a lower lr, as finetuning does
+        spec.cells.push(cfg);
+    }
+    spec.finalize()
+}
+
+/// Table 3 — FP32 vs OMC S1E4M14 on the non-IID (by-speaker) partition.
+pub fn table3_grid(model_dir: &str, scale: &Scale) -> Result<SweepSpec> {
+    let out = "results/table3";
+    let mut spec = SweepSpec::new("table3", scale.seed, Path::new(out));
+    for (label, omc) in [
+        ("FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
+        ("OMC (S1E4M14)", OmcConfig::paper("S1E4M14".parse()?)),
+    ] {
+        spec.cells.push(experiment(
+            label,
+            model_dir,
+            scale,
+            Partition::BySpeaker,
+            0,
+            omc,
+            out,
+        ));
+    }
+    spec.finalize()
+}
+
+/// Table 4 — the ablation ladder at `format` on the adaptation workload.
+pub fn table4_grid(
+    model_dir: &str,
+    scale: &Scale,
+    pretrain_rounds: usize,
+    format: &str,
+) -> Result<SweepSpec> {
+    let out = "results/table4";
+    let mut spec = SweepSpec::new("table4", scale.seed, Path::new(out));
+    let (pre, ckpt) = pretrain_phase(model_dir, pretrain_rounds, scale.seed, out);
+    spec.pretrain = Some(pre);
+    for (label, omc) in table4_ladder(format)? {
+        let mut cfg =
+            experiment(&label, model_dir, scale, Partition::Iid, 1, omc, out);
+        cfg.init_from = Some(ckpt.clone());
+        cfg.lr = 0.05;
+        spec.cells.push(cfg);
+    }
+    spec.finalize()
+}
+
+/// Fig. 3 — with vs without the per-variable transform, from scratch, at a
+/// coarse format (dense eval cadence for the curves).
+pub fn fig3_grid(model_dir: &str, scale: &Scale, format: &str) -> Result<SweepSpec> {
+    let out = "results/fig3";
+    let fmt = format.parse()?;
+    let mut spec = SweepSpec::new("fig3", scale.seed, Path::new(out));
+    for (label, use_pvt) in [("with_pvt", true), ("without_pvt", false)] {
+        let omc = OmcConfig {
+            format: fmt,
+            use_pvt,
+            weights_only: false, // quantize everything: the unstable regime
+            fraction: 1.0,
+        };
+        let mut cfg =
+            experiment(label, model_dir, scale, Partition::Iid, 0, omc, out);
+        cfg.eval_every = (scale.rounds / 25).max(1); // dense curve
+        spec.cells.push(cfg);
+    }
+    spec.finalize()
+}
+
+/// Fig. 4 — PPQ at 11 bits (90% of weights) vs APQ at 13 bits, on the
+/// adaptation workload.
+pub fn fig4_grid(
+    model_dir: &str,
+    scale: &Scale,
+    pretrain_rounds: usize,
+) -> Result<SweepSpec> {
+    let out = "results/fig4";
+    let mut spec = SweepSpec::new("fig4", scale.seed, Path::new(out));
+    let (pre, ckpt) = pretrain_phase(model_dir, pretrain_rounds, scale.seed, out);
+    spec.pretrain = Some(pre);
+    let apq = |fmt: &str| -> Result<OmcConfig> {
+        Ok(OmcConfig {
+            format: fmt.parse()?,
+            use_pvt: true,
+            weights_only: true,
+            fraction: 1.0,
+        })
+    };
+    let variants: Vec<(String, OmcConfig)> = vec![
+        (
+            "PPQ S1E3M7 @ 90%".into(),
+            OmcConfig {
+                format: "S1E3M7".parse()?,
+                use_pvt: true,
+                weights_only: true,
+                fraction: 0.9,
+            },
+        ),
+        ("APQ S1E3M9 @ 100%".into(), apq("S1E3M9")?),
+        ("APQ S1E4M8 @ 100%".into(), apq("S1E4M8")?),
+        ("APQ S1E5M7 @ 100%".into(), apq("S1E5M7")?),
+    ];
+    for (label, omc) in variants {
+        let mut cfg =
+            experiment(&label, model_dir, scale, Partition::Iid, 1, omc, out);
+        cfg.init_from = Some(ckpt.clone());
+        cfg.lr = 0.05;
+        cfg.eval_every = (scale.rounds / 15).max(1);
+        spec.cells.push(cfg);
+    }
+    spec.finalize()
+}
+
+/// Every paper grid with its default model dir — the full reproduction as
+/// one list (`omc-fl sweep --preset all` runs them back to back).
+pub fn paper_grids(scale: &Scale) -> Result<Vec<SweepSpec>> {
+    Ok(vec![
+        table1_grid("artifacts/small", scale)?,
+        table2_grid("artifacts/small_streaming", scale, 60)?,
+        table3_grid("artifacts/small", scale)?,
+        table4_grid("artifacts/small_streaming", scale, 60, "S1E3M7")?,
+        fig3_grid("artifacts/small", scale, "S1E3M4")?,
+        fig4_grid("artifacts/small_streaming", scale, 60)?,
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +377,33 @@ mod tests {
         assert!(rows[2].1.deadline_s.is_finite());
         let last = rows[3].1;
         assert!(last.dropout_prob > 0.0 && last.weight_by_examples);
+    }
+
+    #[test]
+    fn paper_grids_cover_every_table_and_figure() {
+        let scale = Scale::from_flags(40, 7);
+        let grids = paper_grids(&scale).unwrap();
+        let names: Vec<&str> = grids.iter().map(|g| g.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["table1", "table2", "table3", "table4", "fig3", "fig4"]
+        );
+        for g in &grids {
+            g.validate().unwrap();
+            // per-cell seeds were derived (no cell keeps the sweep seed
+            // unless the hash happens to collide, which it does not here)
+            assert!(g.cells.iter().all(|c| c.seed != 7), "{}", g.name);
+        }
+        // adaptation grids pretrain into the checkpoint the cells read
+        for name in ["table2", "table4", "fig4"] {
+            let g = grids.iter().find(|g| g.name == name).unwrap();
+            let ckpt = g.pretrain.as_ref().unwrap().save_to.clone().unwrap();
+            assert!(g.cells.iter().all(|c| c.init_from.as_ref() == Some(&ckpt)));
+        }
+        // table4 is the 5-row ablation ladder
+        let t4 = grids.iter().find(|g| g.name == "table4").unwrap();
+        assert_eq!(t4.cells.len(), 5);
+        assert!(t4.cells[0].omc.is_baseline());
     }
 
     #[test]

@@ -1,0 +1,1037 @@
+//! Grid-sweep engine: run whole experiment grids concurrently with
+//! byte-deterministic summaries.
+//!
+//! The paper's headline results are *grids* — format × transform ×
+//! quantized-fraction × cohort — and reproducing a table used to mean one
+//! process per cell plus hand-collected JSON. A [`SweepSpec`] describes
+//! the whole grid up front: an ordered list of [`ExperimentConfig`] cells
+//! (stable order is part of the output contract) plus an optional
+//! pretraining phase that produces the shared checkpoint the adaptation
+//! tables start from.
+//!
+//! # Determinism contract
+//!
+//! * Cell seeds derive from `(sweep seed, cell index)`
+//!   ([`SweepSpec::finalize`]) — never from scheduling.
+//! * Each cell is self-contained: its result depends only on its config
+//!   (including its *intra-cell* `workers` count, which profiles pin to 1
+//!   for byte-stable aggregation) — never on which sweep worker ran it.
+//! * Summaries contain no wall-clock fields ([`crate::metrics::sweep`]);
+//!   timing lands in the separate, non-golden `sweep_timing.json`.
+//!
+//! Together: `sweep_summary.json` is byte-identical across runs and across
+//! sequential vs pooled scheduling — the property the CI `smoke-goldens`
+//! job gates on with a plain `cmp`.
+//!
+//! # Scheduling
+//!
+//! Cells are independent, so they pool over [`threadpool`] in contiguous
+//! chunks, one chunk per worker, each worker reusing a warmed
+//! [`RoundEngine`] across its cells ([`threadpool::scope_map_chunked`]).
+//! Engines that are not `Send`-safe (PJRT: `is_send_safe() == false`) pin
+//! every cell to the calling thread — same dispatch rule as `fl::round`.
+//!
+//! # Resume
+//!
+//! `--resume` skips a cell when its on-disk summary exists **and** its
+//! `config_hash` matches the cell's [`SweepSpec::cell_fingerprint_hex`]
+//! (a hash over every semantically relevant config field, including the
+//! sweep's pretrain phase when one exists — a changed pretrain
+//! invalidates dependent cells AND the checkpoint, whose own fingerprint
+//! is kept beside it). Stale or corrupt summaries re-run.
+//! Spliced-in summaries keep byte equality because the JSON writer is
+//! idempotent over its own output (tested in `metrics::sweep`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::{ExperimentConfig, OmcConfig};
+use crate::coordinator::experiment::{self, Experiment, RunSummary};
+use crate::data::partition::Partition;
+use crate::fl::cohort::CohortConfig;
+use crate::fl::round::RoundEngine;
+use crate::metrics::stats::Timer;
+use crate::metrics::sweep as summaries;
+use crate::metrics::sweep::CellView;
+use crate::omc::format::FloatFormat;
+use crate::runtime::engine::{Engine, LoadedModel};
+use crate::util::json::{self, Json};
+use crate::util::rng::hash_seed;
+use crate::util::threadpool;
+use crate::util::toml::{self, Table};
+
+/// A fully-expanded sweep: ordered cells + optional pretraining phase.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// sweep name — also the golden file stem (`goldens/<name>.json`)
+    pub name: String,
+    /// sweep-level seed; cell seeds derive from `(seed, cell_index)`
+    pub seed: u64,
+    /// output root: `sweep_summary.json`, `sweep_timing.json`, `cells/`
+    pub output_dir: PathBuf,
+    /// optional checkpoint-producing phase run before any cell (domain
+    /// adaptation); its `save_to` is the cells' `init_from`
+    pub pretrain: Option<ExperimentConfig>,
+    /// grid cells in presentation order (the order is part of the output)
+    pub cells: Vec<ExperimentConfig>,
+}
+
+impl SweepSpec {
+    /// Empty spec; push cells then call [`finalize`](Self::finalize).
+    pub fn new(name: &str, seed: u64, output_dir: &Path) -> Self {
+        Self {
+            name: name.to_string(),
+            seed,
+            output_dir: output_dir.to_path_buf(),
+            pretrain: None,
+            cells: Vec::new(),
+        }
+    }
+
+    /// Derive per-cell seeds from `(sweep seed, cell index)` and validate.
+    /// Call after the cell list is complete — the derivation is positional.
+    pub fn finalize(mut self) -> Result<Self> {
+        for (i, cell) in self.cells.iter_mut().enumerate() {
+            cell.seed = hash_seed(&[self.seed, i as u64]);
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Structural checks: at least one cell, valid configs, unique file
+    /// stems (labels may repeat across sweeps, not within one).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.cells.is_empty(), "sweep has no cells");
+        let mut stems = std::collections::BTreeSet::new();
+        for (i, cell) in self.cells.iter().enumerate() {
+            cell.validate()
+                .with_context(|| format!("cell {i} ({})", cell.name))?;
+            anyhow::ensure!(
+                stems.insert(cell_file_stem(i, &cell.name)),
+                "duplicate cell file stem for label {:?}",
+                cell.name
+            );
+        }
+        if let Some(pre) = &self.pretrain {
+            pre.validate().context("pretrain config")?;
+            anyhow::ensure!(
+                pre.save_to.is_some(),
+                "pretrain phase must set save_to (cells start from it)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Runtime options for one sweep invocation (scheduling + resume — nothing
+/// here may change summary bytes).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// pool width across cells (intra-cell parallelism is the cell
+    /// config's own `workers` field)
+    pub workers: usize,
+    /// force cell-at-a-time scheduling on the calling thread
+    pub sequential: bool,
+    /// skip cells whose on-disk summary matches their config fingerprint
+    pub resume: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            workers: threadpool::default_workers(),
+            sequential: false,
+            resume: false,
+        }
+    }
+}
+
+/// One cell's result inside a [`SweepReport`].
+pub struct CellOutcome {
+    /// position in the grid (also the seed-derivation index)
+    pub index: usize,
+    /// the cell's pretty label (config `name`)
+    pub label: String,
+    /// the deterministic summary document, as written to disk
+    pub cell_json: Json,
+    /// live run summary — `None` when the cell was resumed from disk
+    pub run: Option<RunSummary>,
+    /// whether `--resume` spliced this cell in without re-running
+    pub resumed: bool,
+}
+
+/// What [`run_sweep`] hands back.
+pub struct SweepReport {
+    /// sweep name (golden stem)
+    pub name: String,
+    /// where the consolidated summary was written
+    pub summary_path: PathBuf,
+    /// the exact bytes written — the golden artifact
+    pub summary_bytes: String,
+    /// per-cell outcomes in grid order
+    pub cells: Vec<CellOutcome>,
+    /// how many cells `--resume` skipped
+    pub cells_resumed: usize,
+    /// wall-clock for the whole sweep (reporting only — never in goldens)
+    pub wall_s: f64,
+    /// the models the sweep bound, keyed by model-dir string — reuse
+    /// these for follow-up evaluation instead of re-binding (under PJRT a
+    /// fresh binding would recompile its graphs from scratch)
+    pub models: BTreeMap<String, Arc<LoadedModel>>,
+}
+
+impl SweepReport {
+    /// The bound model for a model dir, if the sweep used that dir.
+    pub fn model_for(&self, dir: &Path) -> Option<Arc<LoadedModel>> {
+        self.models.get(&dir.display().to_string()).map(Arc::clone)
+    }
+}
+
+// ---- fingerprinting ------------------------------------------------------
+
+/// Canonical encoding of every semantically relevant config field. Floats
+/// are encoded by bit pattern; the string feeds [`fingerprint_hex`].
+fn canonical_config(cfg: &ExperimentConfig) -> String {
+    format!(
+        "schema={};name={};model={};rounds={};clients={};cpr={};steps={};\
+         lr={:08x};seed={};partition={};sampler={};domain={};noise={:08x};\
+         eval_every={};eval_batches={};fmt={};pvt={};wo={};frac={:016x};\
+         dropout={:016x};straggler={:016x};deadline={:016x};weighted={};\
+         init={};save={};workers={}",
+        summaries::SWEEP_SCHEMA_VERSION,
+        cfg.name,
+        cfg.model_dir.display(),
+        cfg.rounds,
+        cfg.num_clients,
+        cfg.clients_per_round,
+        cfg.local_steps,
+        cfg.lr.to_bits(),
+        cfg.seed,
+        cfg.partition,
+        cfg.sampler,
+        cfg.domain,
+        cfg.noise.to_bits(),
+        cfg.eval_every,
+        cfg.eval_batches,
+        cfg.omc.format,
+        cfg.omc.use_pvt,
+        cfg.omc.weights_only,
+        cfg.omc.fraction.to_bits(),
+        cfg.cohort.dropout_prob.to_bits(),
+        cfg.cohort.straggler_mean_s.to_bits(),
+        cfg.cohort.deadline_s.to_bits(),
+        cfg.cohort.weight_by_examples,
+        cfg.init_from
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_default(),
+        cfg.save_to
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_default(),
+        cfg.workers,
+    )
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The cell's config hash (16 hex digits) — written into its summary as
+/// `config_hash` and verified by `--resume`.
+pub fn fingerprint_hex(cfg: &ExperimentConfig) -> String {
+    format!("{:016x}", fnv1a64(canonical_config(cfg).as_bytes()))
+}
+
+impl SweepSpec {
+    /// A cell's fingerprint *in this sweep*: the cell config plus the
+    /// pretrain phase (if any) that produced the checkpoint the cell
+    /// starts from. Changing the pretrain — its rounds, its seed —
+    /// invalidates every dependent cell summary, not just the checkpoint.
+    /// Equal to [`fingerprint_hex`] for sweeps without a pretrain phase.
+    pub fn cell_fingerprint_hex(&self, cfg: &ExperimentConfig) -> String {
+        let mut canon = canonical_config(cfg);
+        if let Some(pre) = &self.pretrain {
+            canon.push_str(";pretrain=");
+            canon.push_str(&canonical_config(pre));
+        }
+        format!("{:016x}", fnv1a64(canon.as_bytes()))
+    }
+
+    /// Fingerprint of the pretrain phase itself — written beside the
+    /// checkpoint so `--resume` can tell a reusable checkpoint from a
+    /// stale one.
+    fn pretrain_fingerprint_hex(pre: &ExperimentConfig) -> String {
+        fingerprint_hex(pre)
+    }
+}
+
+/// Filesystem-safe stem for cell output files:
+/// `c<index>_<sanitized label>`.
+pub fn cell_file_stem(index: usize, label: &str) -> String {
+    let safe: String = label
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '-' | '_') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    format!("c{index:02}_{safe}")
+}
+
+// ---- grid expansion from TOML --------------------------------------------
+
+/// Load a sweep description from a TOML file: the usual experiment keys
+/// form the base cell, and the `[sweep]` table holds the grid axes
+/// (`formats` is required; `pvt`, `fractions`, `partitions`, `domains`
+/// default to the base config's values).
+pub fn from_toml_file(path: &Path) -> Result<SweepSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let t = toml::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    from_table(&t).with_context(|| format!("expanding {}", path.display()))
+}
+
+/// Named cohort-failure scenario for the `sweep.cohorts` axis — the same
+/// ladder `presets::cohort_ladder` escalates through.
+fn cohort_by_name(name: &str) -> Result<CohortConfig> {
+    Ok(match name {
+        "ideal" => CohortConfig::ideal(),
+        "dropout" => CohortConfig {
+            dropout_prob: 0.1,
+            ..CohortConfig::ideal()
+        },
+        "stragglers" => CohortConfig {
+            straggler_mean_s: 2.0,
+            deadline_s: 4.0,
+            ..CohortConfig::ideal()
+        },
+        "stress" => CohortConfig {
+            dropout_prob: 0.1,
+            straggler_mean_s: 2.0,
+            deadline_s: 4.0,
+            weight_by_examples: true,
+        },
+        other => anyhow::bail!(
+            "unknown cohort scenario {other:?} (ideal | dropout | stragglers | stress)"
+        ),
+    })
+}
+
+/// Expand a parsed table into a sweep. Cell order is the nested axis order
+/// `partition → domain → cohort → format → pvt → fraction`; an FP32 entry
+/// in `formats` contributes exactly one baseline cell per
+/// `(partition, domain, cohort)` (transform/fraction axes do not apply to
+/// the baseline).
+pub fn from_table(t: &Table) -> Result<SweepSpec> {
+    let base = ExperimentConfig::from_table(t)?;
+    let axis_strs = |key: &str| -> Result<Option<Vec<String>>> {
+        match t.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be an array"))?;
+                arr.iter()
+                    .map(|x| {
+                        x.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!("{key} entries must be strings")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(Some)
+            }
+        }
+    };
+
+    let formats: Vec<FloatFormat> = axis_strs("sweep.formats")?
+        .ok_or_else(|| anyhow::anyhow!("a sweep needs sweep.formats"))?
+        .iter()
+        .map(|s| s.parse())
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!formats.is_empty(), "sweep.formats is empty");
+
+    let pvts: Vec<bool> = match t.get("sweep.pvt") {
+        None => vec![base.omc.use_pvt],
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("sweep.pvt must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("sweep.pvt entries must be bools"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let fractions: Vec<f64> = match t.get("sweep.fractions") {
+        None => vec![base.omc.fraction],
+        Some(v) => {
+            let fr: Vec<f64> = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("sweep.fractions must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("sweep.fractions entries must be numbers")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            for &f in &fr {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&f) && f > 0.0,
+                    "sweep fractions must be in (0, 1], got {f}"
+                );
+            }
+            fr
+        }
+    };
+    let partitions: Vec<Partition> = match axis_strs("sweep.partitions")? {
+        None => vec![base.partition],
+        Some(v) => v
+            .iter()
+            .map(|s| Partition::parse(s))
+            .collect::<Result<_>>()?,
+    };
+    let domains: Vec<u64> = match t.get("sweep.domains") {
+        None => vec![base.domain],
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("sweep.domains must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_i64().map(|d| d as u64).ok_or_else(|| {
+                    anyhow::anyhow!("sweep.domains entries must be integers")
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let cohorts: Vec<(String, CohortConfig)> = match axis_strs("sweep.cohorts")? {
+        None => vec![(String::new(), base.cohort)],
+        Some(names) => names
+            .iter()
+            .map(|n| cohort_by_name(n).map(|c| (n.clone(), c)))
+            .collect::<Result<_>>()?,
+    };
+
+    let mut spec = SweepSpec::new(&base.name, base.seed, &base.output_dir);
+    let multi_axis =
+        partitions.len() > 1 || domains.len() > 1 || cohorts.len() > 1;
+    for &partition in &partitions {
+        for &domain in &domains {
+            for (cohort_name, cohort) in &cohorts {
+                let suffix = if multi_axis {
+                    let c = if cohort_name.is_empty() {
+                        String::new()
+                    } else {
+                        format!("_{cohort_name}")
+                    };
+                    format!("_{partition}_d{domain}{c}")
+                } else {
+                    String::new()
+                };
+                let mut cell_with = |label: String, omc: OmcConfig| {
+                    let mut c = base.clone();
+                    c.name = label;
+                    c.omc = omc;
+                    c.partition = partition;
+                    c.domain = domain;
+                    c.cohort = *cohort;
+                    spec.cells.push(c);
+                };
+                if formats.iter().any(|f| f.is_fp32()) {
+                    cell_with(
+                        format!("fp32_baseline{suffix}"),
+                        OmcConfig::fp32_baseline(),
+                    );
+                }
+                for &fmt in formats.iter().filter(|f| !f.is_fp32()) {
+                    for &use_pvt in &pvts {
+                        for &fraction in &fractions {
+                            let label = format!(
+                                "{fmt}_{}_f{fraction}{suffix}",
+                                if use_pvt { "pvt" } else { "nopvt" }
+                            );
+                            cell_with(
+                                label,
+                                OmcConfig {
+                                    format: fmt,
+                                    use_pvt,
+                                    weights_only: base.omc.weights_only,
+                                    fraction,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    spec.finalize()
+}
+
+// ---- built-in profiles ---------------------------------------------------
+
+/// The CI smoke tier: five cells on `native:tiny` covering the format,
+/// transform, and selection axes. Small enough for seconds-scale CI, and
+/// byte-deterministic: every cell pins `workers = 1` so the streaming
+/// aggregation order is fixed.
+pub fn smoke(seed: u64) -> Result<SweepSpec> {
+    let mut base =
+        ExperimentConfig::default_with("smoke", Path::new("native:tiny"));
+    base.rounds = 4;
+    base.num_clients = 8;
+    base.clients_per_round = 4;
+    base.local_steps = 1;
+    base.lr = 0.2;
+    base.eval_every = 2;
+    base.eval_batches = 2;
+    base.workers = 1; // byte-stable aggregation order
+    base.output_dir = PathBuf::from("results/sweep_smoke");
+
+    let mut spec = SweepSpec::new("sweep_smoke", seed, &base.output_dir);
+    let cells: Vec<(String, OmcConfig)> = vec![
+        ("fp32_baseline".into(), OmcConfig::fp32_baseline()),
+        (
+            "S1E4M14_pvt_f0.9".into(),
+            OmcConfig::paper("S1E4M14".parse()?),
+        ),
+        (
+            "S1E4M14_nopvt_f0.9".into(),
+            OmcConfig {
+                use_pvt: false,
+                ..OmcConfig::paper("S1E4M14".parse()?)
+            },
+        ),
+        (
+            "S1E3M7_pvt_f0.9".into(),
+            OmcConfig::paper("S1E3M7".parse()?),
+        ),
+        (
+            "S1E2M3_apq".into(),
+            OmcConfig {
+                format: "S1E2M3".parse()?,
+                use_pvt: true,
+                weights_only: false,
+                fraction: 1.0,
+            },
+        ),
+    ];
+    for (label, omc) in cells {
+        let mut c = base.clone();
+        c.name = label;
+        c.omc = omc;
+        spec.cells.push(c);
+    }
+    spec.finalize()
+}
+
+// ---- execution -----------------------------------------------------------
+
+type CellRun = (Json, RunSummary, f64);
+
+/// Execute one cell end-to-end: prepare, run (through the caller's
+/// [`RoundEngine`]), write `cells/<stem>.csv` + `cells/<stem>.json`, and
+/// return the summary document.
+fn run_cell(
+    index: usize,
+    cfg: ExperimentConfig,
+    fp: String,
+    model: Arc<LoadedModel>,
+    cells_dir: &Path,
+    rounds: &mut RoundEngine,
+) -> Result<CellRun> {
+    let t = Timer::start();
+    let stem = cell_file_stem(index, &cfg.name);
+    let mut exp = Experiment::prepare_with_model(cfg, model)?;
+    let (rec, summary) = exp.run_with(rounds)?;
+    let cell = summaries::cell_summary(index, &exp.cfg, &fp, &rec, &summary);
+    std::fs::write(cells_dir.join(format!("{stem}.csv")), rec.to_csv())
+        .with_context(|| format!("writing {stem}.csv"))?;
+    std::fs::write(cells_dir.join(format!("{stem}.json")), cell.to_string())
+        .with_context(|| format!("writing {stem}.json"))?;
+    Ok((cell, summary, t.elapsed_s()))
+}
+
+/// Run a sweep: pretrain (if any), schedule the cells, write per-cell
+/// outputs plus the consolidated `sweep_summary.json` and the non-golden
+/// `sweep_timing.json`.
+pub fn run_sweep(
+    engine: &Engine,
+    spec: &SweepSpec,
+    opts: &SweepOptions,
+) -> Result<SweepReport> {
+    let t = Timer::start();
+    spec.validate()?;
+    let cells_dir = spec.output_dir.join("cells");
+    std::fs::create_dir_all(&cells_dir)
+        .with_context(|| format!("creating {}", cells_dir.display()))?;
+
+    // bind each distinct model dir once (shared compile cache)
+    let mut models: BTreeMap<String, Arc<LoadedModel>> = BTreeMap::new();
+    let all_dirs = spec
+        .cells
+        .iter()
+        .map(|c| &c.model_dir)
+        .chain(spec.pretrain.iter().map(|p| &p.model_dir));
+    for dir in all_dirs {
+        let key = dir.display().to_string();
+        if !models.contains_key(&key) {
+            models.insert(key, Arc::new(engine.load_model(dir)?));
+        }
+    }
+
+    // pretraining phase (shared checkpoint for adaptation grids). Resume
+    // only trusts a checkpoint whose recorded fingerprint matches this
+    // spec's pretrain config — a checkpoint left by a different seed or
+    // round count re-trains instead of silently contaminating the cells.
+    if let Some(pre) = &spec.pretrain {
+        let ckpt = pre.save_to.as_ref().expect("validated");
+        let fp_path = ckpt.with_extension("fingerprint");
+        let pre_fp = SweepSpec::pretrain_fingerprint_hex(pre);
+        let ckpt_fresh = ckpt.exists()
+            && std::fs::read_to_string(&fp_path)
+                .map(|s| s.trim() == pre_fp)
+                .unwrap_or(false);
+        if opts.resume && ckpt_fresh {
+            crate::log_info!(
+                "sweep '{}': resume — pretrain checkpoint {} matches, skipping",
+                spec.name,
+                ckpt.display()
+            );
+        } else {
+            crate::log_info!("sweep '{}': pretraining '{}'", spec.name, pre.name);
+            if let Some(parent) = ckpt.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let model = Arc::clone(&models[&pre.model_dir.display().to_string()]);
+            let mut exp = Experiment::prepare_with_model(pre.clone(), model)
+                .context("preparing pretrain phase")?;
+            exp.run().context("pretrain phase")?;
+            std::fs::write(&fp_path, &pre_fp)
+                .with_context(|| format!("writing {}", fp_path.display()))?;
+        }
+    }
+
+    // resume pass: accept on-disk summaries whose fingerprint matches
+    let n = spec.cells.len();
+    let mut resumed: Vec<Option<Json>> = Vec::with_capacity(n);
+    for (i, cfg) in spec.cells.iter().enumerate() {
+        let mut hit = None;
+        if opts.resume {
+            let path = cells_dir.join(format!("{}.json", cell_file_stem(i, &cfg.name)));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                match json::parse(&text) {
+                    Ok(doc)
+                        if doc.get("config_hash").and_then(|v| v.as_str())
+                            == Some(spec.cell_fingerprint_hex(cfg).as_str()) =>
+                    {
+                        hit = Some(doc);
+                    }
+                    _ => crate::log_info!(
+                        "resume: cell '{}' summary stale or unreadable — re-running",
+                        cfg.name
+                    ),
+                }
+            }
+        }
+        resumed.push(hit);
+    }
+
+    // schedule the remaining cells
+    type CellJob = (usize, ExperimentConfig, String, Arc<LoadedModel>);
+    let jobs: Vec<CellJob> = spec
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| resumed[*i].is_none())
+        .map(|(i, cfg)| {
+            let model =
+                Arc::clone(&models[&cfg.model_dir.display().to_string()]);
+            (i, cfg.clone(), spec.cell_fingerprint_hex(cfg), model)
+        })
+        .collect();
+    let pool = !opts.sequential
+        && opts.workers > 1
+        && jobs.len() > 1
+        && jobs.iter().all(|(_, _, _, m)| m.is_send_safe());
+    let sequential_run = |jobs: Vec<CellJob>| {
+        let mut rounds = RoundEngine::new();
+        jobs.into_iter()
+            .map(|(i, cfg, fp, model)| {
+                (i, run_cell(i, cfg, fp, model, &cells_dir, &mut rounds))
+            })
+            .collect::<Vec<(usize, Result<CellRun>)>>()
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let results: Vec<(usize, Result<CellRun>)> = if pool {
+        crate::log_info!(
+            "sweep '{}': {} cells pooled over {} workers",
+            spec.name,
+            jobs.len(),
+            opts.workers
+        );
+        threadpool::scope_map_chunked(
+            jobs,
+            opts.workers,
+            RoundEngine::new,
+            |_, (i, cfg, fp, model), rounds| {
+                (i, run_cell(i, cfg, fp, model, &cells_dir, rounds))
+            },
+        )?
+    } else {
+        sequential_run(jobs)
+    };
+    #[cfg(feature = "pjrt")]
+    let results: Vec<(usize, Result<CellRun>)> = {
+        // PJRT models are !Send — every cell is pinned to this thread
+        let _ = pool;
+        sequential_run(jobs)
+    };
+
+    // assemble outcomes in grid order
+    let mut fresh: BTreeMap<usize, CellRun> = BTreeMap::new();
+    for (i, r) in results {
+        let run = r.with_context(|| {
+            format!("cell {i} ({})", spec.cells[i].name)
+        })?;
+        fresh.insert(i, run);
+    }
+    let mut outcomes = Vec::with_capacity(n);
+    let mut cell_seconds: Vec<(usize, f64)> = Vec::new();
+    let mut cells_resumed = 0usize;
+    for (i, doc) in resumed.into_iter().enumerate() {
+        let label = spec.cells[i].name.clone();
+        match doc {
+            Some(cell_json) => {
+                cells_resumed += 1;
+                outcomes.push(CellOutcome {
+                    index: i,
+                    label,
+                    cell_json,
+                    run: None,
+                    resumed: true,
+                });
+            }
+            None => {
+                let (cell_json, summary, secs) =
+                    fresh.remove(&i).expect("every unplanned cell ran");
+                cell_seconds.push((i, secs));
+                outcomes.push(CellOutcome {
+                    index: i,
+                    label,
+                    cell_json,
+                    run: Some(summary),
+                    resumed: false,
+                });
+            }
+        }
+    }
+
+    // consolidated summary (the golden artifact) + timing (non-golden)
+    let doc = summaries::sweep_summary(
+        &spec.name,
+        spec.seed,
+        outcomes.iter().map(|o| o.cell_json.clone()).collect(),
+    );
+    let summary_bytes = doc.to_string();
+    let summary_path = spec.output_dir.join("sweep_summary.json");
+    std::fs::write(&summary_path, &summary_bytes)
+        .with_context(|| format!("writing {}", summary_path.display()))?;
+
+    let wall_s = t.elapsed_s();
+    let timing = json::obj(vec![
+        ("sweep", json::s(&spec.name)),
+        ("wall_s", json::num(wall_s)),
+        ("workers", json::num(opts.workers as f64)),
+        ("sequential", Json::Bool(opts.sequential || !pool)),
+        ("cells_run", json::num((n - cells_resumed) as f64)),
+        ("cells_resumed", json::num(cells_resumed as f64)),
+        (
+            "cells_per_s",
+            json::num(if wall_s > 0.0 {
+                (n - cells_resumed) as f64 / wall_s
+            } else {
+                f64::NAN
+            }),
+        ),
+        (
+            "cell_seconds",
+            Json::Arr(
+                cell_seconds
+                    .iter()
+                    .map(|&(i, s)| {
+                        Json::Arr(vec![json::num(i as f64), json::num(s)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(
+        spec.output_dir.join("sweep_timing.json"),
+        timing.to_string(),
+    )?;
+
+    crate::log_info!(
+        "sweep '{}': {} cells ({} resumed) in {:.2}s → {}",
+        spec.name,
+        n,
+        cells_resumed,
+        wall_s,
+        summary_path.display()
+    );
+    Ok(SweepReport {
+        name: spec.name.clone(),
+        summary_path,
+        summary_bytes,
+        cells: outcomes,
+        cells_resumed,
+        wall_s,
+        models,
+    })
+}
+
+/// Print a sweep as a paper-style table. Rows come from the deterministic
+/// cell summaries, so fresh and resumed cells render identically (resumed
+/// cells have no timing — their Speed column reads 0).
+pub fn print_report(title: &str, report: &SweepReport) {
+    let rows: Vec<RunSummary> = report
+        .cells
+        .iter()
+        .map(|o| match &o.run {
+            Some(r) => r.clone(),
+            None => {
+                let v = CellView(&o.cell_json);
+                RunSummary {
+                    label: v.label().to_string(),
+                    final_wer: v.final_wer(),
+                    final_loss: v.final_train_loss(),
+                    param_memory_bytes: v.param_memory_bytes(),
+                    memory_ratio: v.memory_ratio(),
+                    comm_bytes_per_round: v.total_comm_bytes()
+                        / v.rounds().max(1) as f64,
+                    rounds_per_min: 0.0,
+                    rounds: v.rounds(),
+                }
+            }
+        })
+        .collect();
+    experiment::print_table(title, &rows);
+}
+
+/// Copy a report's consolidated summary into the goldens directory
+/// (`goldens/<sweep name>.json`) — the `--bless` workflow.
+pub fn bless_golden(report: &SweepReport, goldens_dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(goldens_dir)
+        .with_context(|| format!("creating {}", goldens_dir.display()))?;
+    let path = goldens_dir.join(format!("{}.json", report.name));
+    std::fs::write(&path, &report.summary_bytes)
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SWEEP_TOML: &str = r#"
+        name = "grid"
+        model_dir = "native:tiny"
+        rounds = 3
+        seed = 9
+        output_dir = "results/grid"
+        workers = 1
+
+        [fl]
+        clients = 8
+        clients_per_round = 4
+
+        [sweep]
+        formats = ["S1E8M23", "S1E4M14", "S1E3M7"]
+        pvt = [true, false]
+        fractions = [0.9]
+    "#;
+
+    #[test]
+    fn grid_expands_in_stable_order() {
+        let t = toml::parse(SWEEP_TOML).unwrap();
+        let spec = from_table(&t).unwrap();
+        assert_eq!(spec.name, "grid");
+        assert_eq!(spec.seed, 9);
+        // 1 baseline + 2 formats × 2 pvt × 1 fraction = 5 cells
+        assert_eq!(spec.cells.len(), 5);
+        assert_eq!(spec.cells[0].name, "fp32_baseline");
+        assert_eq!(spec.cells[1].name, "S1E4M14_pvt_f0.9");
+        assert_eq!(spec.cells[2].name, "S1E4M14_nopvt_f0.9");
+        assert_eq!(spec.cells[3].name, "S1E3M7_pvt_f0.9");
+        assert_eq!(spec.cells[4].name, "S1E3M7_nopvt_f0.9");
+        assert!(spec.cells[0].omc.is_baseline());
+        assert!(!spec.cells[1].omc.is_baseline());
+        // identical expansion both times (the order is a contract)
+        let again = from_table(&toml::parse(SWEEP_TOML).unwrap()).unwrap();
+        let names: Vec<_> = spec.cells.iter().map(|c| &c.name).collect();
+        let names2: Vec<_> = again.cells.iter().map(|c| &c.name).collect();
+        assert_eq!(names, names2);
+    }
+
+    #[test]
+    fn cell_seeds_derive_from_sweep_seed_and_index() {
+        let t = toml::parse(SWEEP_TOML).unwrap();
+        let spec = from_table(&t).unwrap();
+        for (i, cell) in spec.cells.iter().enumerate() {
+            assert_eq!(cell.seed, hash_seed(&[9, i as u64]), "cell {i}");
+        }
+        // a different sweep seed moves every cell seed
+        let other = SWEEP_TOML.replace("seed = 9", "seed = 10");
+        let spec2 = from_table(&toml::parse(&other).unwrap()).unwrap();
+        for (a, b) in spec.cells.iter().zip(&spec2.cells) {
+            assert_ne!(a.seed, b.seed);
+        }
+    }
+
+    #[test]
+    fn multi_axis_grids_carry_partition_and_domain_labels() {
+        // [sweep] is the last section, so appending keeps the keys in it
+        let toml_text = format!(
+            "{SWEEP_TOML}\npartitions = [\"iid\", \"by_speaker\"]\ndomains = [0, 1]\n"
+        );
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 4 (partition, domain) pairs × 5 cells
+        assert_eq!(spec.cells.len(), 20);
+        assert!(spec.cells[0].name.ends_with("_iid_d0"));
+        assert!(spec.cells[19].name.ends_with("_by_speaker_d1"));
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn cohort_axis_expands_named_scenarios() {
+        let toml_text =
+            format!("{SWEEP_TOML}\ncohorts = [\"ideal\", \"stress\"]\n");
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 2 cohorts × 5 cells
+        assert_eq!(spec.cells.len(), 10);
+        assert!(spec.cells[0].name.ends_with("_ideal"));
+        assert!(spec.cells[0].cohort.is_ideal());
+        assert!(spec.cells[5].name.ends_with("_stress"));
+        assert!(!spec.cells[5].cohort.is_ideal());
+        assert!(spec.cells[5].cohort.weight_by_examples);
+        // unknown scenario names are rejected
+        let bad = format!("{SWEEP_TOML}\ncohorts = [\"chaos\"]\n");
+        assert!(from_table(&toml::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let t = toml::parse(SWEEP_TOML).unwrap();
+        let spec = from_table(&t).unwrap();
+        let a = fingerprint_hex(&spec.cells[1]);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, fingerprint_hex(&spec.cells[1]));
+        // any semantic change moves the hash
+        let mut changed = spec.cells[1].clone();
+        changed.rounds += 1;
+        assert_ne!(a, fingerprint_hex(&changed));
+        let mut changed = spec.cells[1].clone();
+        changed.omc.fraction = 0.8;
+        assert_ne!(a, fingerprint_hex(&changed));
+        let mut changed = spec.cells[1].clone();
+        changed.seed ^= 1;
+        assert_ne!(a, fingerprint_hex(&changed));
+        // sibling cells differ
+        assert_ne!(a, fingerprint_hex(&spec.cells[2]));
+    }
+
+    #[test]
+    fn pretrain_phase_is_part_of_cell_fingerprints() {
+        let mut spec = smoke(1).unwrap();
+        let plain = spec.cell_fingerprint_hex(&spec.cells[0]);
+        // no pretrain phase → identical to the standalone fingerprint
+        assert_eq!(plain, fingerprint_hex(&spec.cells[0]));
+        let mut pre = spec.cells[0].clone();
+        pre.save_to = Some(PathBuf::from("pre.bin"));
+        spec.pretrain = Some(pre);
+        let with_pre = spec.cell_fingerprint_hex(&spec.cells[0]);
+        assert_ne!(plain, with_pre);
+        // changing the pretrain invalidates every dependent cell summary
+        spec.pretrain.as_mut().unwrap().rounds += 1;
+        assert_ne!(with_pre, spec.cell_fingerprint_hex(&spec.cells[0]));
+    }
+
+    #[test]
+    fn file_stems_are_sanitized_and_unique() {
+        assert_eq!(
+            cell_file_stem(3, "FP32 (S1E8M23)"),
+            "c03_FP32__S1E8M23_"
+        );
+        let spec = smoke(42).unwrap();
+        let stems: std::collections::BTreeSet<_> = spec
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| cell_file_stem(i, &c.name))
+            .collect();
+        assert_eq!(stems.len(), spec.cells.len());
+    }
+
+    #[test]
+    fn smoke_profile_is_small_and_pinned() {
+        let spec = smoke(42).unwrap();
+        assert_eq!(spec.name, "sweep_smoke");
+        assert_eq!(spec.cells.len(), 5);
+        for c in &spec.cells {
+            assert_eq!(c.workers, 1, "{}: intra-cell workers must be pinned", c.name);
+            assert!(c.rounds <= 8, "smoke must stay CI-fast");
+            assert_eq!(c.model_dir.to_str(), Some("native:tiny"));
+        }
+        // covers baseline, pvt on/off, and an APQ cell
+        assert!(spec.cells.iter().any(|c| c.omc.is_baseline()));
+        assert!(spec.cells.iter().any(|c| !c.omc.use_pvt && !c.omc.is_baseline()));
+        assert!(spec.cells.iter().any(|c| c.omc.fraction == 1.0));
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_labels_and_empty_sweeps() {
+        let empty = SweepSpec::new("x", 1, Path::new("results/x"));
+        assert!(empty.validate().is_err());
+        let mut spec = smoke(1).unwrap();
+        let dup = spec.cells[0].clone();
+        spec.cells[1] = dup;
+        // same label at a different index is fine (stem embeds the index)…
+        spec.validate().unwrap();
+        // …but a pretrain phase without save_to is not
+        let mut pre = spec.cells[0].clone();
+        pre.save_to = None;
+        spec.pretrain = Some(pre);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn toml_requires_formats() {
+        let t = toml::parse("name = \"x\"\n").unwrap();
+        assert!(from_table(&t).is_err());
+    }
+
+    #[test]
+    fn example_sweep_config_parses() {
+        // the committed example file must stay expandable
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/sweep_smoke.toml");
+        let spec = from_toml_file(&path).unwrap();
+        assert_eq!(spec.cells.len(), 5);
+        assert!(spec.cells.iter().all(|c| c.workers == 1));
+        assert!(spec.cells.iter().all(|c| c.model_dir.to_str()
+            == Some("native:tiny")));
+    }
+}

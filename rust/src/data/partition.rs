@@ -24,6 +24,17 @@ impl Partition {
     }
 }
 
+impl std::fmt::Display for Partition {
+    /// The canonical config spelling — `parse(x.to_string())` round-trips,
+    /// and the sweep summaries/fingerprints use this form.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Partition::Iid => "iid",
+            Partition::BySpeaker => "by_speaker",
+        })
+    }
+}
+
 /// The speaker sets assigned to each client.
 #[derive(Clone, Debug)]
 pub struct ClientAssignment {

@@ -127,6 +127,38 @@ impl RoundScratch {
     }
 }
 
+/// Reusable round-execution handle: owns the [`RoundScratch`] so one
+/// warmed buffer set can serve *many experiments*, not just many rounds.
+/// The sweep engine keeps one `RoundEngine` per worker and threads it
+/// through every cell that worker runs — cell-to-cell the downlink pool
+/// and per-worker client scratches keep their capacity, which is the same
+/// zero-alloc steady state `Experiment` has within a single run.
+#[derive(Default)]
+pub struct RoundEngine {
+    scratch: RoundScratch,
+}
+
+impl RoundEngine {
+    /// Fresh handle with cold buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run one round against this handle's persistent scratch.
+    pub fn run(
+        &mut self,
+        ctx: &RoundContext<'_>,
+        server: &mut Server,
+    ) -> Result<RoundOutcome> {
+        run_round(ctx, server, &mut self.scratch)
+    }
+
+    /// Direct access to the pooled buffers (for accounting/tests).
+    pub fn scratch_mut(&mut self) -> &mut RoundScratch {
+        &mut self.scratch
+    }
+}
+
 /// Aggregate numbers for one completed round.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {

@@ -20,6 +20,17 @@ impl SamplerKind {
     }
 }
 
+impl std::fmt::Display for SamplerKind {
+    /// The canonical config spelling — `parse(x.to_string())` round-trips,
+    /// and the sweep fingerprints use this form.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::RoundRobin => "round_robin",
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Sampler {
     pub kind: SamplerKind,

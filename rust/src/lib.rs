@@ -29,13 +29,18 @@
 //!   scenarios), [`fl::sampler`], and [`fl::round`] — the streaming,
 //!   sharded round engine.
 //! * [`coordinator`] — experiment configs (TOML or builders), the
-//!   [`coordinator::Experiment`] driver, presets for the paper's tables,
-//!   and checkpoint I/O.
-//! * [`runtime`] — the PJRT engine behind the `pjrt` feature; default
-//!   builds get an API-identical stub so the pure-Rust stack builds and
+//!   [`coordinator::Experiment`] driver, presets for the paper's tables
+//!   (including the [`coordinator::presets`] sweep grids), the
+//!   [`coordinator::sweep`] grid engine with byte-deterministic
+//!   summaries, and checkpoint I/O.
+//! * [`runtime`] — the PJRT engine behind the `pjrt` feature, plus the
+//!   pure-Rust executable [`runtime::native`] backend (`native:tiny`)
+//!   available in every build; default builds get an API-identical stub
+//!   for the artifact-backed paths so the pure-Rust stack builds and
 //!   tests without the XLA toolchain.
 //! * [`data`] / [`metrics`] — synthetic ASR task + client partitioning,
-//!   and WER / round-log recording.
+//!   WER / round-log recording, and the deterministic sweep summaries
+//!   ([`metrics::sweep`]).
 //! * [`benchkit`] / [`testkit`] / [`util`] — the bench harness
 //!   (`OMC_BENCH_JSON` emits `BENCH_*.json`), property-test helpers, and
 //!   the dependency-free substrate (RNG, thread pool, TOML/JSON, CLI).

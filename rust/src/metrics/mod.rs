@@ -1,5 +1,7 @@
-//! Metrics substrate: WER, run statistics, and round-log recording.
+//! Metrics substrate: WER, run statistics, round-log recording, and the
+//! deterministic sweep summaries.
 
 pub mod recorder;
 pub mod stats;
+pub mod sweep;
 pub mod wer;

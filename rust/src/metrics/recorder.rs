@@ -82,6 +82,32 @@ impl Recorder {
             .sum()
     }
 
+    /// Total server→client bytes across the run.
+    pub fn total_down_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.down_bytes).sum()
+    }
+
+    /// Total client→server bytes across the run.
+    pub fn total_up_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.up_bytes).sum()
+    }
+
+    /// Total uplink bytes spent by past-deadline clients (subset of
+    /// [`total_up_bytes`](Self::total_up_bytes)).
+    pub fn total_up_bytes_discarded(&self) -> usize {
+        self.records.iter().map(|r| r.up_bytes_discarded).sum()
+    }
+
+    /// `(round, WER)` for every evaluated round, in order — the figure
+    /// curves, and the deterministic per-cell sweep summaries.
+    pub fn eval_wer_curve(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter(|r| r.eval_wer >= 0.0 && r.eval_loss > 0.0)
+            .map(|r| (r.round, r.eval_wer))
+            .collect()
+    }
+
     /// Rounds per minute over the whole run (the tables' Speed column).
     pub fn rounds_per_min(&self) -> f64 {
         let secs: f64 = self.records.iter().map(|r| r.round_seconds).sum();
@@ -255,6 +281,20 @@ mod tests {
         .unwrap();
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("demo"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn byte_splits_and_eval_curve() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 12.0));
+        r.push(rec(1, -1.0)); // no eval this round
+        let mut late = rec(2, 8.0);
+        late.up_bytes_discarded = 7;
+        r.push(late);
+        assert_eq!(r.total_down_bytes(), 300);
+        assert_eq!(r.total_up_bytes(), 150);
+        assert_eq!(r.total_up_bytes_discarded(), 7);
+        assert_eq!(r.eval_wer_curve(), vec![(0, 12.0), (2, 8.0)]);
     }
 
     #[test]

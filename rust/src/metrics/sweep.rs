@@ -1,0 +1,272 @@
+//! Deterministic sweep summaries — the byte-stable JSON the CI golden
+//! gate diffs.
+//!
+//! A sweep produces one JSON document per cell plus one consolidated
+//! `sweep_summary.json`. Every field in these documents is a pure function
+//! of `(cell config, cell seed)`: **no wall-clock numbers** — timing goes
+//! to the separate, non-golden `sweep_timing.json` written by
+//! `coordinator::sweep`. Combined with the canonical writer in
+//! [`crate::util::json`] (sorted keys, shortest-round-trip floats,
+//! non-finite → `null`), two runs of the same sweep emit byte-identical
+//! summaries, which is what lets CI gate on `cmp` and a committed golden.
+//!
+//! Round-trip stability: a summary parsed back through
+//! [`crate::util::json::parse`] and re-serialized is byte-identical to the
+//! original (the writer's number formatting is idempotent over its own
+//! output). `--resume` relies on this to splice previously-written cell
+//! files into a fresh consolidated summary without breaking byte equality.
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiment::RunSummary;
+use crate::metrics::recorder::Recorder;
+use crate::util::json::{self, Json};
+
+/// Schema version stamped into every summary (bump on field changes so
+/// stale goldens fail loudly instead of diffing field-by-field).
+pub const SWEEP_SCHEMA_VERSION: usize = 1;
+
+/// Build the deterministic summary document for one finished cell.
+///
+/// `fingerprint` is the cell's config hash (hex) — `--resume` verifies it
+/// before trusting an on-disk summary.
+pub fn cell_summary(
+    index: usize,
+    cfg: &ExperimentConfig,
+    fingerprint: &str,
+    rec: &Recorder,
+    run: &RunSummary,
+) -> Json {
+    let curve: Vec<Json> = rec
+        .eval_wer_curve()
+        .into_iter()
+        .map(|(r, w)| Json::Arr(vec![json::num(r as f64), json::num(w)]))
+        .collect();
+    json::obj(vec![
+        ("cell_index", json::num(index as f64)),
+        ("config_hash", json::s(fingerprint)),
+        ("label", json::s(&cfg.name)),
+        // derived seeds are full u64s (hash_seed outputs exceed 2^53, the
+        // largest exactly-representable f64 integer) — a string keeps the
+        // recorded seed exact so a cell can be reproduced from its summary
+        ("seed", json::s(&cfg.seed.to_string())),
+        ("model_dir", json::s(&cfg.model_dir.display().to_string())),
+        ("format", json::s(&cfg.omc.format.to_string())),
+        ("pvt", Json::Bool(cfg.omc.use_pvt)),
+        ("weights_only", Json::Bool(cfg.omc.weights_only)),
+        ("fraction", json::num(cfg.omc.fraction)),
+        ("partition", json::s(&format!("{}", cfg.partition))),
+        ("domain", json::num(cfg.domain as f64)),
+        ("num_clients", json::num(cfg.num_clients as f64)),
+        (
+            "clients_per_round",
+            json::num(cfg.clients_per_round as f64),
+        ),
+        ("local_steps", json::num(cfg.local_steps as f64)),
+        ("rounds", json::num(rec.records.len() as f64)),
+        ("cohort_ideal", Json::Bool(cfg.cohort.is_ideal())),
+        ("final_wer", json::num(run.final_wer)),
+        ("final_train_loss", json::num(run.final_loss)),
+        (
+            "param_memory_bytes",
+            json::num(run.param_memory_bytes as f64),
+        ),
+        ("memory_ratio", json::num(run.memory_ratio)),
+        (
+            "total_down_bytes",
+            json::num(rec.total_down_bytes() as f64),
+        ),
+        ("total_up_bytes", json::num(rec.total_up_bytes() as f64)),
+        (
+            "total_up_bytes_discarded",
+            json::num(rec.total_up_bytes_discarded() as f64),
+        ),
+        (
+            "mean_completion_rate",
+            json::num(rec.mean_completion_rate()),
+        ),
+        ("eval_wer_curve", Json::Arr(curve)),
+    ])
+}
+
+/// Build the consolidated sweep summary from per-cell documents (in cell
+/// order — the order is part of the byte contract).
+pub fn sweep_summary(name: &str, seed: u64, cells: Vec<Json>) -> Json {
+    json::obj(vec![
+        ("schema_version", json::num(SWEEP_SCHEMA_VERSION as f64)),
+        ("sweep", json::s(name)),
+        // string for the same exactness reason as the per-cell seeds
+        ("seed", json::s(&seed.to_string())),
+        ("num_cells", json::num(cells.len() as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Convenience readers for consumers of a cell document (the example
+/// wrappers print their tables from these instead of live `RunSummary`
+/// values so fresh and `--resume` runs render identically).
+pub struct CellView<'a>(pub &'a Json);
+
+impl<'a> CellView<'a> {
+    fn f(&self, key: &str) -> f64 {
+        self.0.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    }
+
+    pub fn label(&self) -> &'a str {
+        self.0.get("label").and_then(|v| v.as_str()).unwrap_or("?")
+    }
+
+    pub fn final_wer(&self) -> f64 {
+        self.f("final_wer")
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.f("final_train_loss")
+    }
+
+    pub fn param_memory_bytes(&self) -> usize {
+        self.f("param_memory_bytes") as usize
+    }
+
+    pub fn memory_ratio(&self) -> f64 {
+        self.f("memory_ratio")
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.f("rounds") as usize
+    }
+
+    pub fn total_comm_bytes(&self) -> f64 {
+        self.f("total_down_bytes") + self.f("total_up_bytes")
+    }
+
+    /// `(round, WER)` pairs of the evaluated rounds.
+    pub fn eval_wer_curve(&self) -> Vec<(usize, f64)> {
+        let Some(arr) = self.0.get("eval_wer_curve").and_then(|v| v.as_arr())
+        else {
+            return Vec::new();
+        };
+        arr.iter()
+            .filter_map(|p| {
+                let pair = p.as_arr()?;
+                Some((pair.first()?.as_f64()? as usize, pair.get(1)?.as_f64()?))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::RoundRecord;
+    use std::path::Path;
+
+    fn sample_cell() -> Json {
+        let cfg = ExperimentConfig::default_with("cell_a", Path::new("native:tiny"));
+        let mut rec = Recorder::new("cell_a");
+        rec.push(RoundRecord {
+            round: 0,
+            train_loss: 1.5,
+            eval_loss: 0.5,
+            eval_wer: 42.25,
+            down_bytes: 1000,
+            up_bytes: 900,
+            up_bytes_discarded: 10,
+            sampled: 4,
+            completed: 4,
+            dropped: 0,
+            late: 0,
+            round_seconds: 0.123, // must never appear in the summary
+        });
+        let run = RunSummary {
+            label: "cell_a".into(),
+            final_wer: 42.25,
+            final_loss: 1.5,
+            param_memory_bytes: 6400,
+            memory_ratio: 1.0,
+            comm_bytes_per_round: 1900.0,
+            rounds_per_min: 480.0, // timing — must never appear
+            rounds: 1,
+        };
+        cell_summary(0, &cfg, "00ff00ff00ff00ff", &rec, &run)
+    }
+
+    #[test]
+    fn cell_summary_has_no_timing_fields() {
+        let text = sample_cell().to_string();
+        assert!(!text.contains("seconds"), "{text}");
+        assert!(!text.contains("rounds_per_min"), "{text}");
+        assert!(text.contains("\"config_hash\":\"00ff00ff00ff00ff\""));
+        assert!(text.contains("\"eval_wer_curve\":[[0,42.25]]"));
+    }
+
+    #[test]
+    fn summary_roundtrip_is_byte_identical() {
+        // --resume splices parsed cell files back into the consolidated
+        // summary; parse∘write must be the identity on our own output
+        let doc = sweep_summary("smoke", 42, vec![sample_cell()]);
+        let bytes = doc.to_string();
+        let reparsed = json::parse(&bytes).unwrap();
+        assert_eq!(reparsed.to_string(), bytes);
+    }
+
+    #[test]
+    fn cell_view_reads_back_fields() {
+        let cell = sample_cell();
+        let v = CellView(&cell);
+        assert_eq!(v.label(), "cell_a");
+        assert_eq!(v.final_wer(), 42.25);
+        assert_eq!(v.param_memory_bytes(), 6400);
+        assert_eq!(v.rounds(), 1);
+        assert_eq!(v.total_comm_bytes(), 1900.0);
+        assert_eq!(v.eval_wer_curve(), vec![(0, 42.25)]);
+    }
+
+    #[test]
+    fn derived_u64_seeds_are_recorded_exactly() {
+        let mut cfg =
+            ExperimentConfig::default_with("s", Path::new("native:tiny"));
+        cfg.seed = u64::MAX - 7; // > 2^53: would round through f64
+        let rec = Recorder::new("s");
+        let run = RunSummary {
+            label: "s".into(),
+            final_wer: 0.0,
+            final_loss: 0.0,
+            param_memory_bytes: 0,
+            memory_ratio: 0.0,
+            comm_bytes_per_round: 0.0,
+            rounds_per_min: 0.0,
+            rounds: 0,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        assert_eq!(
+            cell.get("seed").and_then(|v| v.as_str()),
+            Some((u64::MAX - 7).to_string().as_str())
+        );
+        let sweep = sweep_summary("x", u64::MAX - 7, vec![cell]);
+        assert_eq!(
+            sweep.get("seed").and_then(|v| v.as_str()),
+            Some((u64::MAX - 7).to_string().as_str())
+        );
+    }
+
+    #[test]
+    fn nan_fields_serialize_as_null_and_stay_stable() {
+        let cfg = ExperimentConfig::default_with("x", Path::new("native:tiny"));
+        let rec = Recorder::new("x"); // empty: final_wer is NaN
+        let run = RunSummary {
+            label: "x".into(),
+            final_wer: f64::NAN,
+            final_loss: f64::NAN,
+            param_memory_bytes: 0,
+            memory_ratio: 0.0,
+            comm_bytes_per_round: 0.0,
+            rounds_per_min: 0.0,
+            rounds: 0,
+        };
+        let cell = cell_summary(3, &cfg, "abcd", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"final_wer\":null"));
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+}

@@ -17,6 +17,9 @@ use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputat
 
 use crate::model::manifest::Manifest;
 
+use super::native::{self, NativeModel};
+pub use super::{EvalOut, Fp32StepOut, OmcStepOut};
+
 /// The PJRT client plus artifact compilation cache.
 pub struct Engine {
     client: PjRtClient,
@@ -56,6 +59,30 @@ impl Engine {
     /// artifacts it actually executes (an FP32 baseline never compiles the
     /// OMC graph and vice versa).
     pub fn load_model(&self, dir: &Path) -> Result<LoadedModel> {
+        // `native:` dirs bind the pure-Rust backend (no artifacts, no
+        // compilation) — available in every build; see `runtime::native`.
+        if let Some(name) = native::model_name(dir) {
+            let manifest = native::manifest_for(name)?;
+            let nm = NativeModel::from_manifest(&manifest)?;
+            crate::log_info!(
+                "binding native model '{}' ({} vars, {} params)",
+                manifest.config.name,
+                manifest.num_vars(),
+                manifest.total_params
+            );
+            let lazy = |n: &str| LazyExecutable::new(dir.join(n));
+            return Ok(LoadedModel {
+                dir: dir.to_path_buf(),
+                init: lazy("init"),
+                train_fp32: lazy("train_fp32"),
+                train_omc: lazy("train_omc"),
+                train_omc_nopvt: lazy("train_omc_nopvt"),
+                eval: lazy("eval"),
+                manifest,
+                engine_client: self.client.clone(),
+                native: Some(nm),
+            });
+        }
         let manifest = Manifest::load(dir)?;
         crate::log_info!(
             "binding model '{}' ({} vars, {} params) from {}",
@@ -81,6 +108,7 @@ impl Engine {
             eval: lazy("eval"),
             manifest,
             engine_client: self.client.clone(),
+            native: None,
         })
     }
 }
@@ -217,27 +245,9 @@ pub struct LoadedModel {
     pub train_omc_nopvt: LazyExecutable,
     pub eval: LazyExecutable,
     engine_client: PjRtClient,
-}
-
-/// Outputs of one OMC training step.
-pub struct OmcStepOut {
-    pub tildes: Vec<Vec<f32>>,
-    pub s: Vec<f32>,
-    pub b: Vec<f32>,
-    pub loss: f32,
-}
-
-/// Outputs of one FP32 training step.
-pub struct Fp32StepOut {
-    pub params: Vec<Vec<f32>>,
-    pub loss: f32,
-}
-
-/// Outputs of one eval step.
-pub struct EvalOut {
-    pub loss: f32,
-    /// greedy framewise predictions, row-major [batch, seq_len]
-    pub pred: Vec<i32>,
+    /// `Some` for `native:` model dirs — the pure-Rust backend handles
+    /// every entry point and the lazy executables are never compiled
+    native: Option<NativeModel>,
 }
 
 impl LoadedModel {
@@ -246,7 +256,9 @@ impl LoadedModel {
     }
 
     /// See [`Engine::is_send_safe`]: PJRT executables are `!Send`, so the
-    /// round engine must not shard client execution across threads.
+    /// round engine must not shard client execution across threads. This
+    /// stays `false` even for native-backed models in `pjrt` builds — the
+    /// struct holds the PJRT client, so the type itself is `!Send`.
     pub fn is_send_safe(&self) -> bool {
         false
     }
@@ -254,6 +266,9 @@ impl LoadedModel {
     /// Force-compile the executables a run will need (eval + the relevant
     /// training graph), so compile time stays out of round timings.
     pub fn warmup(&self, fp32_baseline: bool, use_pvt: bool) -> Result<()> {
+        if self.native.is_some() {
+            return Ok(()); // nothing to compile
+        }
         self.eval.get(&self.engine_client)?;
         if fp32_baseline {
             self.train_fp32.get(&self.engine_client)?;
@@ -332,6 +347,9 @@ impl LoadedModel {
 
     /// Run the init artifact: seed → initial parameters.
     pub fn run_init(&self, seed: i32) -> Result<Vec<Vec<f32>>> {
+        if let Some(n) = &self.native {
+            return n.run_init(seed);
+        }
         let outs = self.init.get(&self.engine_client)?.run(&[lit_i32_scalar(seed)])?;
         anyhow::ensure!(
             outs.len() == self.num_vars(),
@@ -350,6 +368,9 @@ impl LoadedModel {
         y: &[i32],
         lr: f32,
     ) -> Result<Fp32StepOut> {
+        if let Some(n) = &self.native {
+            return n.run_train_fp32(params, x, y, lr);
+        }
         self.check_params(params)?;
         self.check_batch(x, y)?;
         let mut args = self.param_literals(params)?;
@@ -381,6 +402,11 @@ impl LoadedModel {
         exp_bits: u32,
         mant_bits: u32,
     ) -> Result<OmcStepOut> {
+        if let Some(n) = &self.native {
+            return n.run_train_omc(
+                use_pvt, tildes, s, b, mask, x, y, lr, exp_bits, mant_bits,
+            );
+        }
         self.check_params(tildes)?;
         self.check_batch(x, y)?;
         let n = self.num_vars();
@@ -420,6 +446,9 @@ impl LoadedModel {
         x: &[f32],
         y: &[i32],
     ) -> Result<EvalOut> {
+        if let Some(n) = &self.native {
+            return n.run_eval(params, x, y);
+        }
         self.check_params(params)?;
         self.check_batch(x, y)?;
         let mut args = self.param_literals(params)?;

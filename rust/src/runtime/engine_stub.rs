@@ -1,11 +1,13 @@
-//! Stub PJRT engine — compiled when the `pjrt` feature is off.
+//! Stub PJRT engine + native dispatch — compiled when the `pjrt` feature
+//! is off.
 //!
 //! Mirrors the public surface of `engine.rs` so the rest of the crate (FL
 //! substrate, coordinator, examples, integration tests) builds without the
-//! `xla` bindings. Every constructor fails with a clear error at runtime;
-//! nothing downstream of [`Engine::cpu`] can execute. Integration tests
-//! guard on `artifacts/` existing before touching the engine, so a stub
-//! build still runs the whole pure-Rust test suite.
+//! `xla` bindings. `native:` model dirs (see [`super::native`]) load and
+//! **execute** — that is the backend plain `cargo test`, the sweep smoke
+//! tier, and CI run on. Artifact-backed model dirs still fail with a clear
+//! error at runtime; integration tests guard on `artifacts/` existing
+//! before touching them, so a stub build runs the whole pure-Rust suite.
 
 use std::path::{Path, PathBuf};
 
@@ -13,32 +15,39 @@ use anyhow::{bail, Result};
 
 use crate::model::manifest::Manifest;
 
+use super::native::{self, NativeModel};
+pub use super::{EvalOut, Fp32StepOut, OmcStepOut};
+
 const STUB_MSG: &str =
     "PJRT runtime not available: this binary was built without the `pjrt` \
      feature (requires the xla/xla_extension toolchain). Rebuild with \
-     `cargo build --features pjrt`.";
+     `cargo build --features pjrt`, or use a `native:` model dir \
+     (native:tiny / native:small) which runs in every build.";
 
 /// Placeholder for an on-device literal (never constructed in stub builds).
 pub struct Literal(());
 
-/// The PJRT client stub.
+/// The engine handle: native models execute, PJRT constructors fail.
 pub struct Engine {
     _private: (),
 }
 
 impl Engine {
+    /// Create the engine. Always succeeds in stub builds — whether a model
+    /// can *execute* is decided per-`load_model` (native: yes, artifacts:
+    /// needs the `pjrt` feature).
     pub fn cpu() -> Result<Self> {
-        bail!(STUB_MSG)
+        Ok(Self { _private: () })
     }
 
     pub fn platform(&self) -> String {
-        unreachable!("stub Engine cannot be constructed")
+        "native-cpu (pjrt feature off)".to_string()
     }
 
     /// Whether models loaded by this engine may be driven from multiple
-    /// threads. The stub's types are plain data (`Send + Sync`), so a
-    /// Send-safe CPU engine with this surface lets the round engine shard
-    /// client execution across the thread pool (see `fl::round`).
+    /// threads. Native models are plain data (`Send + Sync`), so the round
+    /// engine shards client execution across the thread pool (see
+    /// `fl::round`).
     pub fn is_send_safe(&self) -> bool {
         true
     }
@@ -47,12 +56,29 @@ impl Engine {
         bail!(STUB_MSG)
     }
 
-    pub fn load_model(&self, _dir: &Path) -> Result<LoadedModel> {
-        bail!(STUB_MSG)
+    /// Load a model. `native:<preset>` dirs synthesize their manifest and
+    /// bind the pure-Rust backend; artifact dirs need the `pjrt` feature.
+    pub fn load_model(&self, dir: &Path) -> Result<LoadedModel> {
+        let Some(name) = native::model_name(dir) else {
+            bail!("{} (requested model dir: {})", STUB_MSG, dir.display());
+        };
+        let manifest = native::manifest_for(name)?;
+        let native = NativeModel::from_manifest(&manifest)?;
+        crate::log_info!(
+            "binding native model '{}' ({} vars, {} params)",
+            manifest.config.name,
+            manifest.num_vars(),
+            manifest.total_params
+        );
+        Ok(LoadedModel {
+            dir: dir.to_path_buf(),
+            manifest,
+            native,
+        })
     }
 }
 
-/// A compiled artifact (stub).
+/// A compiled artifact (stub — never constructed).
 pub struct Executable {
     pub name: String,
     _private: (),
@@ -92,32 +118,11 @@ pub fn to_f32_scalar(_lit: &Literal) -> Result<f32> {
     bail!(STUB_MSG)
 }
 
-/// The bound artifact set for one model size (stub — never constructed).
+/// The bound model: in stub builds, always native-backed.
 pub struct LoadedModel {
     pub dir: PathBuf,
     pub manifest: Manifest,
-    _private: (),
-}
-
-/// Outputs of one OMC training step.
-pub struct OmcStepOut {
-    pub tildes: Vec<Vec<f32>>,
-    pub s: Vec<f32>,
-    pub b: Vec<f32>,
-    pub loss: f32,
-}
-
-/// Outputs of one FP32 training step.
-pub struct Fp32StepOut {
-    pub params: Vec<Vec<f32>>,
-    pub loss: f32,
-}
-
-/// Outputs of one eval step.
-pub struct EvalOut {
-    pub loss: f32,
-    /// greedy framewise predictions, row-major [batch, seq_len]
-    pub pred: Vec<i32>,
+    native: NativeModel,
 }
 
 impl LoadedModel {
@@ -125,48 +130,79 @@ impl LoadedModel {
         self.manifest.num_vars()
     }
 
-    /// See [`Engine::is_send_safe`]: stub models are plain data, so the
+    /// See [`Engine::is_send_safe`]: native models are plain data, so the
     /// round engine may shard client execution across threads.
     pub fn is_send_safe(&self) -> bool {
         true
     }
 
+    /// No-op: the native backend has nothing to compile.
     pub fn warmup(&self, _fp32_baseline: bool, _use_pvt: bool) -> Result<()> {
-        bail!(STUB_MSG)
+        Ok(())
     }
 
-    pub fn run_init(&self, _seed: i32) -> Result<Vec<Vec<f32>>> {
-        bail!(STUB_MSG)
+    pub fn run_init(&self, seed: i32) -> Result<Vec<Vec<f32>>> {
+        self.native.run_init(seed)
     }
 
     pub fn run_train_fp32(
         &self,
-        _params: &[Vec<f32>],
-        _x: &[f32],
-        _y: &[i32],
-        _lr: f32,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
     ) -> Result<Fp32StepOut> {
-        bail!(STUB_MSG)
+        self.native.run_train_fp32(params, x, y, lr)
     }
 
     #[allow(clippy::too_many_arguments)]
     pub fn run_train_omc(
         &self,
-        _use_pvt: bool,
-        _tildes: &[Vec<f32>],
-        _s: &[f32],
-        _b: &[f32],
-        _mask: &[f32],
-        _x: &[f32],
-        _y: &[i32],
-        _lr: f32,
-        _exp_bits: u32,
-        _mant_bits: u32,
+        use_pvt: bool,
+        tildes: &[Vec<f32>],
+        s: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        exp_bits: u32,
+        mant_bits: u32,
     ) -> Result<OmcStepOut> {
-        bail!(STUB_MSG)
+        self.native.run_train_omc(
+            use_pvt, tildes, s, b, mask, x, y, lr, exp_bits, mant_bits,
+        )
     }
 
-    pub fn run_eval(&self, _params: &[Vec<f32>], _x: &[f32], _y: &[i32]) -> Result<EvalOut> {
-        bail!(STUB_MSG)
+    pub fn run_eval(&self, params: &[Vec<f32>], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        self.native.run_eval(params, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_dirs_load_and_run() {
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.is_send_safe());
+        let model = engine.load_model(Path::new("native:tiny")).unwrap();
+        assert!(model.is_send_safe());
+        assert_eq!(model.num_vars(), 4);
+        model.warmup(true, true).unwrap();
+        let params = model.run_init(1).unwrap();
+        assert_eq!(params.len(), 4);
+    }
+
+    #[test]
+    fn artifact_dirs_error_clearly() {
+        let engine = Engine::cpu().unwrap();
+        let Err(e) = engine.load_model(Path::new("artifacts/tiny")) else {
+            panic!("artifact dirs must need pjrt");
+        };
+        let err = e.to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(err.contains("native:"), "{err}");
     }
 }

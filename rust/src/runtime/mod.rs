@@ -1,13 +1,22 @@
-//! PJRT runtime — loading and executing the AOT artifacts.
+//! Execution runtimes: the PJRT engine for the AOT artifacts, and the
+//! pure-Rust native backend.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
-//! `HloModuleProto` → compile → execute. One compiled executable per
-//! artifact; Python never runs here.
+//! Two backends implement the same model surface (`Engine::cpu` →
+//! `load_model` → `run_init` / `run_train_fp32` / `run_train_omc` /
+//! `run_eval`):
 //!
-//! The `xla` bindings are only present behind the `pjrt` feature; default
-//! builds get `engine_stub.rs`, an API-identical stub whose constructors
-//! error at runtime (integration tests skip themselves when `artifacts/`
-//! is missing, so the pure-Rust suite runs either way).
+//! * **PJRT** (`--features pjrt`) — wraps the `xla` crate (PJRT C API, CPU
+//!   plugin): HLO **text** → `HloModuleProto` → compile → execute, one
+//!   compiled executable per artifact. Python never runs here. Its
+//!   executables are `!Send`, so the round engine pins client training to
+//!   the engine thread.
+//! * **Native** ([`native`]) — a deterministic pure-Rust MLP selected by
+//!   `native:` model dirs (`native:tiny`, `native:small`). Available in
+//!   every build, needs no artifacts, and is `Send`-safe — the backend the
+//!   sweep smoke tier, CI goldens, and the sharded round dispatch run on.
+//!
+//! Default (non-`pjrt`) builds get `engine_stub.rs`, which executes
+//! `native:` models and returns a clear error for artifact-backed ones.
 
 #[cfg(feature = "pjrt")]
 pub mod engine;
@@ -16,4 +25,34 @@ pub mod engine;
 #[path = "engine_stub.rs"]
 pub mod engine;
 
+pub mod native;
+
 pub use engine::{Engine, LoadedModel};
+
+/// Outputs of one OMC training step (shared by both backends).
+pub struct OmcStepOut {
+    /// re-quantized values Ṽ′, one `Vec` per variable
+    pub tildes: Vec<Vec<f32>>,
+    /// per-variable transform scales
+    pub s: Vec<f32>,
+    /// per-variable transform biases
+    pub b: Vec<f32>,
+    /// mean training loss of the step
+    pub loss: f32,
+}
+
+/// Outputs of one FP32 training step (shared by both backends).
+pub struct Fp32StepOut {
+    /// updated raw parameters
+    pub params: Vec<Vec<f32>>,
+    /// mean training loss of the step
+    pub loss: f32,
+}
+
+/// Outputs of one eval step (shared by both backends).
+pub struct EvalOut {
+    /// mean framewise negative log-likelihood
+    pub loss: f32,
+    /// greedy framewise predictions, row-major `[batch, seq_len]`
+    pub pred: Vec<i32>,
+}

@@ -1,0 +1,558 @@
+//! Pure-Rust executable backend: a tiny MLP trained with the exact OMC
+//! step semantics, requiring no artifacts and no XLA toolchain.
+//!
+//! The PJRT engine can only execute where the `xla` bindings and the AOT
+//! artifacts exist, which leaves plain `cargo test`, CI, and the sweep
+//! smoke tier with nothing that *runs*. This module closes that gap: a
+//! deterministic one-hidden-layer classifier over the synthetic ASR task,
+//! implementing the same model surface as the lowered graphs —
+//! `run_init` / `run_train_fp32` / `run_train_omc` / `run_eval` — with the
+//! OMC step reusing the crate's own quantizer ([`crate::omc::quantize`])
+//! and PVT fit ([`crate::omc::transform`]), so the compression dynamics
+//! the sweep measures are the real ones.
+//!
+//! Model directories select this backend with the `native:` scheme
+//! (`native:tiny`, `native:small`); [`manifest_for`] synthesizes the
+//! manifest in memory, so no files are read.
+//!
+//! # Determinism and thread safety
+//!
+//! Every entry point is a pure function of its inputs (plus the seed in
+//! `run_init`): plain sequential f32 arithmetic, no time, no global state.
+//! Two runs with the same inputs produce bit-identical outputs, which is
+//! what makes the sweep goldens byte-stable. The struct is plain data
+//! (`Send + Sync`), so the round engine's sharded dispatch — previously
+//! only reachable from mock-job tests — executes real training on it.
+
+use anyhow::Result;
+
+use crate::model::manifest::{Manifest, ModelConfig, VarKind, VarSpec};
+use crate::omc::format::FloatFormat;
+use crate::omc::quantize::quantize_slice;
+use crate::omc::transform;
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+use super::{EvalOut, Fp32StepOut, OmcStepOut};
+
+/// `native:<preset>` model-dir scheme → preset name.
+pub fn model_name(dir: &std::path::Path) -> Option<&str> {
+    dir.to_str()?.strip_prefix("native:")
+}
+
+/// Synthesize the manifest for a native preset (`tiny` or `small`).
+pub fn manifest_for(name: &str) -> Result<Manifest> {
+    let (f, h, v, batch, seq_len) = match name {
+        "tiny" => (16usize, 32usize, 32usize, 4usize, 16usize),
+        "small" => (32, 64, 48, 4, 24),
+        other => anyhow::bail!(
+            "unknown native model {other:?} (use native:tiny or native:small)"
+        ),
+    };
+    let variables = vec![
+        VarSpec {
+            name: "enc_w".into(),
+            shape: vec![f, h],
+            kind: VarKind::Weight,
+            size: f * h,
+        },
+        VarSpec {
+            name: "enc_b".into(),
+            shape: vec![h],
+            kind: VarKind::Bias,
+            size: h,
+        },
+        VarSpec {
+            name: "dec_w".into(),
+            shape: vec![h, v],
+            kind: VarKind::Weight,
+            size: h * v,
+        },
+        VarSpec {
+            name: "dec_b".into(),
+            shape: vec![v],
+            kind: VarKind::Bias,
+            size: v,
+        },
+    ];
+    let total_params = variables.iter().map(|s| s.size).sum();
+    Ok(Manifest {
+        config: ModelConfig {
+            name: format!("native-{name}"),
+            feature_dim: f,
+            vocab: v,
+            d_model: h,
+            num_blocks: 1,
+            streaming: false,
+            batch,
+            seq_len,
+        },
+        variables,
+        total_params,
+        artifacts: std::collections::BTreeMap::new(),
+    })
+}
+
+/// The native model: `relu(x·W1 + b1)·W2 + b2` framewise, softmax
+/// cross-entropy loss, SGD. Parameter order matches the manifest:
+/// `[enc_w, enc_b, dec_w, dec_b]` (weights row-major `[in][out]`).
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    f: usize,
+    h: usize,
+    v: usize,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl NativeModel {
+    /// Bind to a synthesized manifest (validates the variable table).
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        let c = &m.config;
+        let nm = Self {
+            f: c.feature_dim,
+            h: c.d_model,
+            v: c.vocab,
+            batch: c.batch,
+            seq_len: c.seq_len,
+        };
+        let expect = [nm.f * nm.h, nm.h, nm.h * nm.v, nm.v];
+        anyhow::ensure!(
+            m.variables.len() == expect.len()
+                && m.variables.iter().zip(expect).all(|(s, e)| s.size == e),
+            "manifest variable table does not match the native MLP layout"
+        );
+        Ok(nm)
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        let expect = [self.f * self.h, self.h, self.h * self.v, self.v];
+        anyhow::ensure!(
+            params.len() == expect.len(),
+            "expected {} variables, got {}",
+            expect.len(),
+            params.len()
+        );
+        for (i, (p, e)) in params.iter().zip(expect).enumerate() {
+            anyhow::ensure!(
+                p.len() == e,
+                "variable {i} has {} elements, expected {e}",
+                p.len()
+            );
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<()> {
+        let frames = self.batch * self.seq_len;
+        anyhow::ensure!(
+            x.len() == frames * self.f,
+            "batch x has {} elements, expected {}",
+            x.len(),
+            frames * self.f
+        );
+        anyhow::ensure!(
+            y.len() == frames,
+            "batch y has {} elements, expected {frames}",
+            y.len()
+        );
+        Ok(())
+    }
+
+    /// Deterministic initial parameters (keyed by `(seed, var index)`).
+    pub fn run_init(&self, seed: i32) -> Result<Vec<Vec<f32>>> {
+        let sizes = [self.f * self.h, self.h, self.h * self.v, self.v];
+        let scales = [
+            1.0 / (self.f as f32).sqrt(),
+            0.0,
+            1.0 / (self.h as f32).sqrt(),
+            0.0,
+        ];
+        Ok(sizes
+            .iter()
+            .zip(scales)
+            .enumerate()
+            .map(|(i, (&n, scale))| {
+                let mut v = vec![0.0f32; n];
+                if scale > 0.0 {
+                    let mut rng = Xoshiro256pp::new(hash_seed(&[
+                        seed as i64 as u64,
+                        0x1A17,
+                        i as u64,
+                    ]));
+                    rng.fill_normal(&mut v, scale);
+                }
+                v
+            })
+            .collect())
+    }
+
+    /// Forward + backward + SGD over one batch; returns updated parameters
+    /// and the mean framewise cross-entropy loss. Pure and sequential —
+    /// bit-deterministic for fixed inputs.
+    fn sgd_step(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, f32)> {
+        self.check_params(params)?;
+        self.check_batch(x, y)?;
+        let (f, h, v) = (self.f, self.h, self.v);
+        let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
+        let frames = self.batch * self.seq_len;
+
+        let mut gw1 = vec![0.0f32; f * h];
+        let mut gb1 = vec![0.0f32; h];
+        let mut gw2 = vec![0.0f32; h * v];
+        let mut gb2 = vec![0.0f32; v];
+        let mut hid = vec![0.0f32; h];
+        let mut z = vec![0.0f32; v];
+        let mut dh = vec![0.0f32; h];
+        let mut loss_sum = 0.0f64;
+
+        for t in 0..frames {
+            let xf = &x[t * f..(t + 1) * f];
+            let yi = y[t] as usize;
+            anyhow::ensure!(yi < v, "label {} out of range (vocab {v})", y[t]);
+
+            // hidden = relu(x·W1 + b1)
+            for j in 0..h {
+                let mut acc = b1[j];
+                for i in 0..f {
+                    acc += xf[i] * w1[i * h + j];
+                }
+                hid[j] = if acc > 0.0 { acc } else { 0.0 };
+            }
+            // logits = hidden·W2 + b2
+            for k in 0..v {
+                let mut acc = b2[k];
+                for j in 0..h {
+                    acc += hid[j] * w2[j * v + k];
+                }
+                z[k] = acc;
+            }
+            // softmax cross-entropy; z becomes dz in place
+            let zmax = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let zy = z[yi];
+            let mut sum = 0.0f32;
+            for zk in z.iter_mut() {
+                *zk = (*zk - zmax).exp();
+                sum += *zk;
+            }
+            loss_sum += (sum.ln() + zmax - zy) as f64;
+            let inv = 1.0 / sum;
+            for (k, zk) in z.iter_mut().enumerate() {
+                *zk = *zk * inv - if k == yi { 1.0 } else { 0.0 };
+            }
+            // grads
+            for k in 0..v {
+                gb2[k] += z[k];
+            }
+            for j in 0..h {
+                let hj = hid[j];
+                if hj > 0.0 {
+                    let row = &mut gw2[j * v..(j + 1) * v];
+                    let mut acc = 0.0f32;
+                    for k in 0..v {
+                        row[k] += hj * z[k];
+                        acc += w2[j * v + k] * z[k];
+                    }
+                    dh[j] = acc; // relu grad: pre-activation > 0
+                } else {
+                    dh[j] = 0.0; // relu inactive: no gradient through unit j
+                }
+            }
+            for j in 0..h {
+                gb1[j] += dh[j];
+            }
+            for i in 0..f {
+                let xi = xf[i];
+                let row = &mut gw1[i * h..(i + 1) * h];
+                for j in 0..h {
+                    row[j] += xi * dh[j];
+                }
+            }
+        }
+
+        let scale = lr / frames as f32;
+        let apply = |p: &[f32], g: &[f32]| -> Vec<f32> {
+            p.iter().zip(g).map(|(&pv, &gv)| pv - scale * gv).collect()
+        };
+        let new = vec![
+            apply(w1, &gw1),
+            apply(b1, &gb1),
+            apply(w2, &gw2),
+            apply(b2, &gb2),
+        ];
+        Ok((new, (loss_sum / frames as f64) as f32))
+    }
+
+    /// One FP32 client step (the baseline path).
+    pub fn run_train_fp32(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<Fp32StepOut> {
+        let (params, loss) = self.sgd_step(params, x, y, lr)?;
+        Ok(Fp32StepOut { params, loss })
+    }
+
+    /// One OMC client step: decompress `V̄ = s·Ṽ + b`, SGD, then masked
+    /// re-compress with the crate's quantizer + PVT fit — the same
+    /// semantics as the lowered `train_omc` graph
+    /// (`python/compile/omc.py::compress_masked`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_train_omc(
+        &self,
+        use_pvt: bool,
+        tildes: &[Vec<f32>],
+        s: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        exp_bits: u32,
+        mant_bits: u32,
+    ) -> Result<OmcStepOut> {
+        self.check_params(tildes)?;
+        let n = tildes.len();
+        anyhow::ensure!(
+            s.len() == n && b.len() == n && mask.len() == n,
+            "s/b/mask must have {n} entries"
+        );
+        let fmt = FloatFormat::new(exp_bits, mant_bits)?;
+        // decompress (identity for raw variables: s=1, b=0)
+        let decoded: Vec<Vec<f32>> = tildes
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t.iter().map(|&tv| s[i] * tv + b[i]).collect())
+            .collect();
+        let (updated, loss) = self.sgd_step(&decoded, x, y, lr)?;
+        // masked re-compress
+        let mut out_t = Vec::with_capacity(n);
+        let mut out_s = Vec::with_capacity(n);
+        let mut out_b = Vec::with_capacity(n);
+        for (i, vnew) in updated.into_iter().enumerate() {
+            if mask[i] > 0.5 {
+                let mut vt = vec![0.0f32; vnew.len()];
+                quantize_slice(&vnew, fmt, &mut vt);
+                let pvt = if use_pvt {
+                    transform::fit(&vnew, &vt)
+                } else {
+                    transform::Pvt::IDENTITY
+                };
+                out_t.push(vt);
+                out_s.push(pvt.s);
+                out_b.push(pvt.b);
+            } else {
+                out_t.push(vnew);
+                out_s.push(1.0);
+                out_b.push(0.0);
+            }
+        }
+        Ok(OmcStepOut {
+            tildes: out_t,
+            s: out_s,
+            b: out_b,
+            loss,
+        })
+    }
+
+    /// One eval step: mean framewise NLL + greedy (first-max) predictions.
+    pub fn run_eval(&self, params: &[Vec<f32>], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        self.check_params(params)?;
+        self.check_batch(x, y)?;
+        let (f, h, v) = (self.f, self.h, self.v);
+        let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
+        let frames = self.batch * self.seq_len;
+        let mut hid = vec![0.0f32; h];
+        let mut z = vec![0.0f32; v];
+        let mut pred = Vec::with_capacity(frames);
+        let mut loss_sum = 0.0f64;
+        for t in 0..frames {
+            let xf = &x[t * f..(t + 1) * f];
+            let yi = y[t] as usize;
+            anyhow::ensure!(yi < v, "label {} out of range (vocab {v})", y[t]);
+            for j in 0..h {
+                let mut acc = b1[j];
+                for i in 0..f {
+                    acc += xf[i] * w1[i * h + j];
+                }
+                hid[j] = if acc > 0.0 { acc } else { 0.0 };
+            }
+            let mut best = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for k in 0..v {
+                let mut acc = b2[k];
+                for j in 0..h {
+                    acc += hid[j] * w2[j * v + k];
+                }
+                z[k] = acc;
+                if acc > best {
+                    best = acc;
+                    arg = k;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &zk in z.iter() {
+                sum += (zk - best).exp();
+            }
+            loss_sum += (sum.ln() + best - z[yi]) as f64;
+            pred.push(arg as i32);
+        }
+        Ok(EvalOut {
+            loss: (loss_sum / frames as f64) as f32,
+            pred,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn tiny() -> (NativeModel, Manifest) {
+        let m = manifest_for("tiny").unwrap();
+        (NativeModel::from_manifest(&m).unwrap(), m)
+    }
+
+    fn batch_for(m: &NativeModel, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let frames = m.batch * m.seq_len;
+        let mut x = vec![0.0f32; frames * m.f];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<i32> =
+            (0..frames).map(|_| rng.next_below(m.v as u64) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn manifests_are_consistent() {
+        for name in ["tiny", "small"] {
+            let m = manifest_for(name).unwrap();
+            assert_eq!(
+                m.variables.iter().map(|v| v.size).sum::<usize>(),
+                m.total_params
+            );
+            NativeModel::from_manifest(&m).unwrap();
+        }
+        assert!(manifest_for("huge").is_err());
+        assert_eq!(
+            model_name(std::path::Path::new("native:tiny")),
+            Some("tiny")
+        );
+        assert_eq!(model_name(std::path::Path::new("artifacts/tiny")), None);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let (nm, _) = tiny();
+        let a = nm.run_init(7).unwrap();
+        let b = nm.run_init(7).unwrap();
+        assert_eq!(a, b);
+        let c = nm.run_init(8).unwrap();
+        assert_ne!(a, c);
+        // biases start at zero
+        assert!(a[1].iter().all(|&x| x == 0.0));
+        assert!(a[3].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn training_reduces_loss_deterministically() {
+        let (nm, _) = tiny();
+        let mut params = nm.run_init(1).unwrap();
+        let (x, y) = batch_for(&nm, 2);
+        let first = nm.run_train_fp32(&params, &x, &y, 0.5).unwrap();
+        let mut last = first.loss;
+        params = first.params;
+        for _ in 0..30 {
+            let out = nm.run_train_fp32(&params, &x, &y, 0.5).unwrap();
+            params = out.params;
+            last = out.loss;
+        }
+        assert!(
+            last < first.loss,
+            "loss should fall on a fixed batch: {} -> {last}",
+            first.loss
+        );
+        // bit-determinism: replay the exact same trajectory
+        let mut p2 = nm.run_init(1).unwrap();
+        for _ in 0..31 {
+            p2 = nm.run_train_fp32(&p2, &x, &y, 0.5).unwrap().params;
+        }
+        for (a, b) in params.iter().zip(&p2) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn omc_step_outputs_are_representable_and_respect_mask() {
+        let (nm, _) = tiny();
+        let params = nm.run_init(3).unwrap();
+        let (x, y) = batch_for(&nm, 4);
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let n = params.len();
+        let s = vec![1.0f32; n];
+        let b = vec![0.0f32; n];
+        let mask = vec![1.0f32, 0.0, 1.0, 0.0]; // weights only
+        let out = nm
+            .run_train_omc(
+                true, &params, &s, &b, &mask, &x, &y, 0.1, fmt.exp_bits,
+                fmt.mant_bits,
+            )
+            .unwrap();
+        assert!(out.loss.is_finite());
+        for (i, t) in out.tildes.iter().enumerate() {
+            if mask[i] > 0.5 {
+                for &tv in t {
+                    assert!(
+                        crate::omc::quantize::is_representable(tv, fmt),
+                        "masked var {i} value {tv} not {fmt}-representable"
+                    );
+                }
+            } else {
+                // raw variables carry the identity transform
+                assert_eq!(out.s[i], 1.0);
+                assert_eq!(out.b[i], 0.0);
+            }
+        }
+        // with PVT on, at least one masked var fits a non-identity scale
+        assert!(
+            (0..n).any(|i| mask[i] > 0.5
+                && (out.s[i] != 1.0 || out.b[i] != 0.0)),
+            "PVT fit should be non-trivial"
+        );
+        // no-PVT ablation: identity transforms everywhere
+        let out2 = nm
+            .run_train_omc(
+                false, &params, &s, &b, &mask, &x, &y, 0.1, fmt.exp_bits,
+                fmt.mant_bits,
+            )
+            .unwrap();
+        assert!(out2.s.iter().all(|&v| v == 1.0));
+        assert!(out2.b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn eval_loss_tracks_training_and_preds_in_range() {
+        let (nm, _) = tiny();
+        let mut params = nm.run_init(5).unwrap();
+        let (x, y) = batch_for(&nm, 6);
+        let before = nm.run_eval(&params, &x, &y).unwrap();
+        for _ in 0..40 {
+            params = nm.run_train_fp32(&params, &x, &y, 0.5).unwrap().params;
+        }
+        let after = nm.run_eval(&params, &x, &y).unwrap();
+        assert!(after.loss < before.loss);
+        assert_eq!(after.pred.len(), nm.batch * nm.seq_len);
+        assert!(after.pred.iter().all(|&p| (0..nm.v as i32).contains(&p)));
+    }
+}

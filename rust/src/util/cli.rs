@@ -223,6 +223,20 @@ impl Matches {
     pub fn get_f32(&self, name: &str) -> anyhow::Result<f32> {
         Ok(self.get_f64(name)? as f32)
     }
+
+    /// Comma-separated list value (`--formats S1E4M14,S1E3M7`); empty
+    /// string → empty list. Items are trimmed.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        match self.get(name) {
+            None => Vec::new(),
+            Some(v) if v.trim().is_empty() => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +300,19 @@ mod tests {
         assert!(u.contains("--rounds"));
         assert!(u.contains("(required)"));
         assert!(u.contains("default: 10"));
+    }
+
+    #[test]
+    fn list_values() {
+        let mut a = Args::new("t", "test");
+        a.flag("formats", "list", Some(""));
+        let m = a
+            .parse_from(vec!["--formats".into(), "S1E4M14, S1E3M7,".into()])
+            .unwrap();
+        assert_eq!(m.get_list("formats"), vec!["S1E4M14", "S1E3M7"]);
+        let m = a.parse_from(vec![]).unwrap();
+        assert!(m.get_list("formats").is_empty());
+        assert!(m.get_list("missing").is_empty());
     }
 
     #[test]

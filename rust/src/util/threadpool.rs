@@ -82,6 +82,64 @@ where
     })
 }
 
+/// Run items split into contiguous chunks — one chunk per worker — where
+/// each worker builds private state once (`init`) and threads `&mut` state
+/// through every item of its chunk. Results come back in input order.
+///
+/// This is the shape the sweep engine needs: cells are independent jobs,
+/// but each worker keeps a warmed `RoundEngine` (codec buffer pools)
+/// across the cells it runs, which a plain [`scope_map_send`] cannot
+/// express (no per-worker identity). The chunking is contiguous, so for a
+/// fixed item order the mapping of item → result index is independent of
+/// the worker count.
+pub fn scope_map_chunked<T, R, S, FI, F>(
+    items: Vec<T>,
+    workers: usize,
+    init: FI,
+    f: F,
+) -> anyhow::Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(usize, T, &mut S) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        let mut state = init();
+        return Ok(items
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| f(i, t, &mut state))
+            .collect());
+    }
+    let chunk = n.div_ceil(workers);
+    let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(workers);
+    let mut it = items.into_iter();
+    let mut base = 0usize;
+    loop {
+        let c: Vec<T> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        base += c.len();
+        chunks.push((base - c.len(), c));
+    }
+    let nested = scope_map_send(chunks, workers, |_, (start, items)| {
+        let mut state = init();
+        items
+            .into_iter()
+            .enumerate()
+            .map(|(k, t)| f(start + k, t, &mut state))
+            .collect::<Vec<R>>()
+    })?;
+    Ok(nested.into_iter().flatten().collect())
+}
+
 /// Default worker count: one per available core (min 1).
 pub fn default_workers() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -156,6 +214,50 @@ mod tests {
         })
         .unwrap();
         assert_eq!(buf, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn chunked_preserves_order_and_reuses_state() {
+        let items: Vec<u64> = (0..23).collect();
+        for workers in [1usize, 3, 8, 64] {
+            // state counts how many items this worker has seen; results
+            // must be ordered by input index regardless of worker count
+            let out = scope_map_chunked(
+                items.clone(),
+                workers,
+                || 0usize,
+                |i, x, seen| {
+                    *seen += 1;
+                    (i as u64, x, *seen)
+                },
+            )
+            .unwrap();
+            assert_eq!(out.len(), 23);
+            for (i, (idx, x, seen)) in out.iter().enumerate() {
+                assert_eq!(*idx, i as u64);
+                assert_eq!(*x, i as u64);
+                assert!(*seen >= 1);
+            }
+            // contiguous chunking: within a chunk the per-worker counter
+            // increments by one per item
+            if workers == 1 {
+                assert!(out.iter().enumerate().all(|(i, r)| r.2 == i + 1));
+            }
+        }
+        let empty: Vec<u8> =
+            scope_map_chunked(Vec::<u8>::new(), 4, || (), |_, x, _| x).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn chunked_propagates_panics() {
+        let r = scope_map_chunked(vec![1, 2, 3], 2, || (), |_, x, _| {
+            if x == 3 {
+                panic!("boom");
+            }
+            x
+        });
+        assert!(r.is_err());
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! End-to-end federated runs on the pure-Rust native backend.
+//!
+//! These are the artifact-free twins of `fl_integration.rs`: they run in
+//! every build (no PJRT, no `artifacts/`), so CI finally executes whole
+//! federated rounds — including the sharded dispatch, which until the
+//! native backend existed was only reachable from mock-job unit tests.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::Experiment;
+use omc_fl::runtime::engine::Engine;
+
+fn base_cfg(name: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    cfg.rounds = rounds;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 1;
+    cfg.lr = 0.5;
+    cfg.seed = 11;
+    cfg.eval_every = rounds; // evaluate once at the end
+    cfg.eval_batches = 2;
+    cfg.workers = 1;
+    cfg.output_dir = std::env::temp_dir().join("omc_native_test_results");
+    cfg
+}
+
+fn run_cfg(cfg: ExperimentConfig) -> (Experiment, Vec<f64>) {
+    let engine = Engine::cpu().unwrap();
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, _) = exp.run().unwrap();
+    let losses = rec.records.iter().map(|r| r.train_loss).collect();
+    (exp, losses)
+}
+
+#[test]
+fn fp32_run_learns_and_replays_exactly() {
+    let (exp_a, losses) = run_cfg(base_cfg("fp32", 8));
+    assert_eq!(losses.len(), 8);
+    assert!(
+        losses[7] < losses[0],
+        "loss should fall: {} -> {}",
+        losses[0],
+        losses[7]
+    );
+    // exact replay with the same seed
+    let (exp_b, _) = run_cfg(base_cfg("fp32", 8));
+    for (a, b) in exp_a.server.params.iter().zip(&exp_b.server.params) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    // a different seed moves the trajectory
+    let mut other = base_cfg("fp32_other", 8);
+    other.seed = 12;
+    let (exp_c, _) = run_cfg(other);
+    assert!(exp_a
+        .server
+        .params
+        .iter()
+        .zip(&exp_c.server.params)
+        .any(|(a, c)| a != c));
+}
+
+#[test]
+fn omc_cell_compresses_and_still_learns() {
+    let fp32 = {
+        let (exp, _) = run_cfg(base_cfg("fp32_ref", 6));
+        let bytes = exp.client_param_bytes();
+        drop(exp);
+        bytes
+    };
+    let mut cfg = base_cfg("omc", 6);
+    cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+    let engine = Engine::cpu().unwrap();
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, summary) = exp.run().unwrap();
+    assert!(summary.final_wer.is_finite());
+    assert!(
+        rec.records.last().unwrap().train_loss
+            < rec.records.first().unwrap().train_loss,
+        "OMC at 15 bits should still learn"
+    );
+    // compressed store + wire both beat FP32
+    assert!(summary.memory_ratio < 1.0, "{}", summary.memory_ratio);
+    assert!(summary.param_memory_bytes < fp32);
+    let r0 = &rec.records[0];
+    let fp32_round_bytes = 2 * 4 * 4 * 1600; // 4 clients × 1600 params × 4B, both ways
+    assert!(
+        r0.down_bytes + r0.up_bytes < fp32_round_bytes,
+        "comm {} should be below the FP32 wire volume {fp32_round_bytes}",
+        r0.down_bytes + r0.up_bytes
+    );
+}
+
+#[test]
+fn sharded_execution_matches_pinned_within_reassociation() {
+    // native models advertise Send-safety, so workers > 1 takes the
+    // sharded dispatch with real training jobs
+    let engine = Engine::cpu().unwrap();
+    assert!(engine
+        .load_model(Path::new("native:tiny"))
+        .unwrap()
+        .is_send_safe());
+
+    let run_with_workers = |workers: usize| {
+        let mut cfg = base_cfg("shard", 4);
+        cfg.clients_per_round = 8; // whole population, several shards
+        cfg.workers = workers;
+        let engine = Engine::cpu().unwrap();
+        let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+        let (rec, _) = exp.run().unwrap();
+        let bytes: Vec<(usize, usize)> = rec
+            .records
+            .iter()
+            .map(|r| (r.down_bytes, r.up_bytes))
+            .collect();
+        (exp.server.params.clone(), bytes)
+    };
+    let (pinned, bytes_pinned) = run_with_workers(1);
+    let (sharded, bytes_sharded) = run_with_workers(4);
+    // byte accounting is exact across dispatches
+    assert_eq!(bytes_pinned, bytes_sharded);
+    // aggregation only reassociates f64 sums
+    for (a, b) in pinned.iter().zip(&sharded) {
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() <= 1e-5,
+                "sharded {y} vs pinned {x} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_via_native_models() {
+    let dir = std::env::temp_dir().join(format!(
+        "omc_native_ckpt_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("pre.bin");
+    let mut cfg = base_cfg("pre", 3);
+    cfg.save_to = Some(ckpt.clone());
+    let (exp, _) = run_cfg(cfg);
+    let final_params = exp.server.params.clone();
+    drop(exp);
+
+    let mut cfg = base_cfg("adapt", 2);
+    cfg.init_from = Some(ckpt);
+    cfg.domain = 1;
+    let engine = Engine::cpu().unwrap();
+    let exp = Experiment::prepare(&engine, cfg).unwrap();
+    // the adaptation run starts exactly from the checkpoint
+    for (a, b) in exp.server.params.iter().zip(&final_params) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shared_model_binding_serves_multiple_variants() {
+    let engine = Engine::cpu().unwrap();
+    let model = Arc::new(engine.load_model(Path::new("native:tiny")).unwrap());
+    for (name, omc) in [
+        ("a_fp32", OmcConfig::fp32_baseline()),
+        ("b_omc", OmcConfig::paper("S1E3M7".parse().unwrap())),
+    ] {
+        let mut cfg = base_cfg(name, 2);
+        cfg.omc = omc;
+        let mut exp =
+            Experiment::prepare_with_model(cfg, Arc::clone(&model)).unwrap();
+        let (rec, _) = exp.run().unwrap();
+        assert_eq!(rec.records.len(), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Sweep-engine guarantees: byte-identical summaries across runs and
+//! across sequential vs pooled scheduling, and resume equivalence (an
+//! interrupted sweep completed with `--resume` emits the exact bytes of an
+//! uninterrupted run). Everything runs on the native backend, so these
+//! gates hold in every build — they are the in-repo twin of the CI
+//! `smoke-goldens` job.
+
+use std::path::PathBuf;
+
+use omc_fl::coordinator::sweep::{self, SweepOptions, SweepSpec};
+use omc_fl::runtime::engine::Engine;
+use omc_fl::util::json;
+
+fn tmp_dir(case: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "omc_sweep_test_{}_{case}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn smoke_spec(out: &PathBuf) -> SweepSpec {
+    let mut spec = sweep::smoke(7).unwrap();
+    spec.output_dir = out.clone();
+    spec
+}
+
+fn opts(workers: usize, sequential: bool, resume: bool) -> SweepOptions {
+    SweepOptions {
+        workers,
+        sequential,
+        resume,
+    }
+}
+
+#[test]
+fn summary_bytes_identical_across_runs_and_scheduling() {
+    let engine = Engine::cpu().unwrap();
+    let dirs: Vec<PathBuf> =
+        ["a", "b", "c"].iter().map(|s| tmp_dir(s)).collect();
+
+    // two sequential runs + one pooled run of the same spec
+    let seq_a = sweep::run_sweep(&engine, &smoke_spec(&dirs[0]), &opts(1, true, false)).unwrap();
+    let seq_b = sweep::run_sweep(&engine, &smoke_spec(&dirs[1]), &opts(1, true, false)).unwrap();
+    let pooled = sweep::run_sweep(&engine, &smoke_spec(&dirs[2]), &opts(4, false, false)).unwrap();
+
+    assert!(!seq_a.summary_bytes.is_empty());
+    assert_eq!(
+        seq_a.summary_bytes, seq_b.summary_bytes,
+        "same spec, two runs: summary bytes must match"
+    );
+    assert_eq!(
+        seq_a.summary_bytes, pooled.summary_bytes,
+        "sequential vs pooled scheduling: summary bytes must match"
+    );
+    // the bytes on disk are the bytes reported
+    let on_disk = std::fs::read_to_string(&seq_a.summary_path).unwrap();
+    assert_eq!(on_disk, seq_a.summary_bytes);
+
+    // sanity: the document is well-formed and cell-complete
+    let doc = json::parse(&seq_a.summary_bytes).unwrap();
+    assert_eq!(
+        doc.get("num_cells").and_then(|v| v.as_usize()),
+        Some(seq_a.cells.len())
+    );
+    assert_eq!(doc.get("sweep").and_then(|v| v.as_str()), Some("sweep_smoke"));
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 5);
+    // every cell carries a finite loss and its fingerprint
+    for c in cells {
+        assert!(c.get("config_hash").and_then(|v| v.as_str()).is_some());
+        assert!(c
+            .get("final_train_loss")
+            .and_then(|v| v.as_f64())
+            .is_some());
+    }
+    for d in dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn resume_completes_interrupted_sweep_byte_identically() {
+    let engine = Engine::cpu().unwrap();
+    let full_dir = tmp_dir("full");
+    let resume_dir = tmp_dir("resume");
+
+    // reference: uninterrupted run
+    let full = sweep::run_sweep(&engine, &smoke_spec(&full_dir), &opts(1, true, false)).unwrap();
+
+    // "killed after 2 cells": run a truncated copy of the same spec —
+    // cells keep their positions and derived seeds (no re-finalize)
+    let mut partial = smoke_spec(&resume_dir);
+    partial.cells.truncate(2);
+    sweep::run_sweep(&engine, &partial, &opts(1, true, false)).unwrap();
+
+    // --resume completes the remaining cells
+    let resumed = sweep::run_sweep(
+        &engine,
+        &smoke_spec(&resume_dir),
+        &opts(1, true, true),
+    )
+    .unwrap();
+    assert_eq!(resumed.cells_resumed, 2);
+    assert!(resumed.cells[0].resumed && resumed.cells[1].resumed);
+    assert!(resumed.cells[2..].iter().all(|c| !c.resumed));
+    assert_eq!(
+        resumed.summary_bytes, full.summary_bytes,
+        "resumed sweep must emit the uninterrupted run's exact bytes"
+    );
+
+    // a second resume touches nothing and still matches
+    let again = sweep::run_sweep(
+        &engine,
+        &smoke_spec(&resume_dir),
+        &opts(1, true, true),
+    )
+    .unwrap();
+    assert_eq!(again.cells_resumed, 5);
+    assert_eq!(again.summary_bytes, full.summary_bytes);
+
+    std::fs::remove_dir_all(full_dir).ok();
+    std::fs::remove_dir_all(resume_dir).ok();
+}
+
+#[test]
+fn resume_reruns_cells_with_stale_fingerprints() {
+    let engine = Engine::cpu().unwrap();
+    let dir = tmp_dir("stale");
+    let spec = smoke_spec(&dir);
+    let full = sweep::run_sweep(&engine, &spec, &opts(1, true, false)).unwrap();
+
+    // tamper with cell 1's recorded fingerprint → its summary is stale
+    let stem = sweep::cell_file_stem(1, &spec.cells[1].name);
+    let path = dir.join("cells").join(format!("{stem}.json"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let real = spec.cell_fingerprint_hex(&spec.cells[1]);
+    let tampered = text.replace(&real, "0000000000000000");
+    assert_ne!(tampered, text, "fingerprint must appear in the summary");
+    std::fs::write(&path, tampered).unwrap();
+
+    let resumed = sweep::run_sweep(&engine, &spec, &opts(1, true, true)).unwrap();
+    assert_eq!(resumed.cells_resumed, 4, "the stale cell must re-run");
+    assert!(!resumed.cells[1].resumed);
+    assert_eq!(
+        resumed.summary_bytes, full.summary_bytes,
+        "re-running the stale cell restores the reference bytes"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn bless_writes_the_golden_copy() {
+    let engine = Engine::cpu().unwrap();
+    let dir = tmp_dir("bless");
+    let goldens = tmp_dir("bless_goldens");
+    let report =
+        sweep::run_sweep(&engine, &smoke_spec(&dir), &opts(1, true, false)).unwrap();
+    let path = sweep::bless_golden(&report, &goldens).unwrap();
+    assert_eq!(path.file_name().unwrap(), "sweep_smoke.json");
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        report.summary_bytes
+    );
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(goldens).ok();
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json results against committed baselines.
+
+Reads every BENCH_*.json in --dir (default: cwd, where `cargo bench` with
+OMC_BENCH_JSON=1 writes them) and compares per-case `median_ns` against
+the same file under --baselines (default: benches/baselines/). A case
+slower than baseline by more than --threshold (default 25%) prints a
+warning — CI *warns, never fails* on this (shared-runner noise), unless
+--strict is passed.
+
+Bless the current numbers as the new baseline:
+    python3 scripts/bench_trend.py --bless
+
+Exit codes: 0 = ok/warnings (or regressions without --strict),
+1 = regressions with --strict, 2 = usage error.
+"""
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+
+def load_cases(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    return {r["name"]: r for r in doc.get("results", []) if "name" in r}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=".", help="where fresh BENCH_*.json live")
+    ap.add_argument("--baselines", default="benches/baselines",
+                    help="committed baseline directory")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative slowdown that triggers a warning")
+    ap.add_argument("--bless", action="store_true",
+                    help="copy fresh results into the baseline directory")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regressions (default: warn only)")
+    args = ap.parse_args()
+
+    fresh_files = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not fresh_files:
+        print(f"bench-trend: no BENCH_*.json under {args.dir} — "
+              f"run benches with OMC_BENCH_JSON=1 first")
+        return 0
+
+    if args.bless:
+        os.makedirs(args.baselines, exist_ok=True)
+        for f in fresh_files:
+            dest = os.path.join(args.baselines, os.path.basename(f))
+            shutil.copyfile(f, dest)
+            print(f"blessed baseline: {dest}")
+        return 0
+
+    regressions, improvements, missing = [], [], []
+    for f in fresh_files:
+        name = os.path.basename(f)
+        base_path = os.path.join(args.baselines, name)
+        if not os.path.exists(base_path):
+            missing.append(name)
+            continue
+        fresh_cases = load_cases(f)
+        base_cases = load_cases(base_path)
+        for case, fr in sorted(fresh_cases.items()):
+            ba = base_cases.get(case)
+            if not ba or not ba.get("median_ns") or not fr.get("median_ns"):
+                continue
+            ratio = fr["median_ns"] / ba["median_ns"]
+            line = (f"{name}:{case}  baseline {ba['median_ns']:.0f}ns -> "
+                    f"fresh {fr['median_ns']:.0f}ns  ({ratio:.2f}x)")
+            if ratio > 1.0 + args.threshold:
+                regressions.append(line)
+            elif ratio < 1.0 - args.threshold:
+                improvements.append(line)
+
+    for name in missing:
+        print(f"bench-trend: no committed baseline for {name} — bless one with "
+              f"`python3 scripts/bench_trend.py --bless` on a quiet machine")
+    for line in improvements:
+        print(f"bench-trend: improvement: {line}")
+    if regressions:
+        pct = int(args.threshold * 100)
+        for line in regressions:
+            # ::warning:: renders as a GitHub Actions annotation
+            print(f"::warning::bench-trend >{pct}% slowdown: {line}")
+        if args.strict:
+            return 1
+    if not regressions and not missing:
+        print(f"bench-trend: {len(fresh_files)} suite(s) within "
+              f"{int(args.threshold * 100)}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Diff a fresh sweep summary against a committed golden.
+
+Comparison rules (per leaf value, by JSON type):
+  * integers (byte/count fields)  -> exact match
+  * floats                        -> relative tolerance (--rel-tol, 1e-6)
+  * strings / bools / nulls       -> exact match
+  * structure (keys, array len)   -> exact match
+
+Exit codes: 0 = match (or golden missing without --strict-missing),
+1 = mismatch, 2 = usage/IO error.
+
+Workflows:
+  check:   python3 scripts/check_goldens.py \
+               --fresh results/sweep_smoke/sweep_summary.json \
+               --golden goldens/sweep_smoke.json
+  bless:   python3 scripts/check_goldens.py --bless \
+               --fresh results/sweep_smoke/sweep_summary.json \
+               --golden goldens/sweep_smoke.json
+(or regenerate from Rust directly: `omc-fl sweep --profile smoke --bless`)
+"""
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+
+
+def walk_diff(golden, fresh, rel_tol, path="$"):
+    """Yield (path, golden_value, fresh_value, reason) mismatch tuples."""
+    if type(golden) is not type(fresh) and not (
+        isinstance(golden, (int, float))
+        and isinstance(fresh, (int, float))
+        and not isinstance(golden, bool)
+        and not isinstance(fresh, bool)
+    ):
+        yield (path, golden, fresh, "type mismatch")
+        return
+    if isinstance(golden, dict):
+        for key in sorted(set(golden) | set(fresh)):
+            if key not in golden:
+                yield (f"{path}.{key}", "<absent>", fresh[key], "extra key")
+            elif key not in fresh:
+                yield (f"{path}.{key}", golden[key], "<absent>", "missing key")
+            else:
+                yield from walk_diff(golden[key], fresh[key], rel_tol, f"{path}.{key}")
+    elif isinstance(golden, list):
+        if len(golden) != len(fresh):
+            yield (path, f"len {len(golden)}", f"len {len(fresh)}", "array length")
+            return
+        for i, (g, f) in enumerate(zip(golden, fresh)):
+            yield from walk_diff(g, f, rel_tol, f"{path}[{i}]")
+    elif isinstance(golden, bool) or golden is None or isinstance(golden, str):
+        if golden != fresh:
+            yield (path, golden, fresh, "value mismatch")
+    elif isinstance(golden, int) and isinstance(fresh, int):
+        # byte/count fields: exact
+        if golden != fresh:
+            yield (path, golden, fresh, "integer mismatch (exact field)")
+    else:
+        # at least one side is a float: relative tolerance
+        g, f = float(golden), float(fresh)
+        if math.isnan(g) and math.isnan(f):
+            return
+        if g == f:
+            return
+        denom = max(abs(g), abs(f))
+        rel = abs(g - f) / denom if denom else 0.0
+        if rel > rel_tol:
+            yield (path, golden, fresh, f"float mismatch (rel {rel:.3e} > {rel_tol:g})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="results/sweep_smoke/sweep_summary.json",
+                    help="freshly generated sweep summary")
+    ap.add_argument("--golden", default="goldens/sweep_smoke.json",
+                    help="committed golden to compare against")
+    ap.add_argument("--rel-tol", type=float, default=1e-6,
+                    help="relative tolerance for float fields")
+    ap.add_argument("--bless", action="store_true",
+                    help="copy the fresh summary over the golden and exit")
+    ap.add_argument("--strict-missing", action="store_true",
+                    help="fail (instead of warn) when the golden is absent")
+    ap.add_argument("--max-report", type=int, default=50,
+                    help="cap on printed mismatches")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.fresh):
+        print(f"error: fresh summary {args.fresh} not found "
+              f"(run `omc-fl sweep --profile smoke` first)", file=sys.stderr)
+        return 2
+
+    if args.bless:
+        os.makedirs(os.path.dirname(args.golden) or ".", exist_ok=True)
+        shutil.copyfile(args.fresh, args.golden)
+        print(f"blessed: {args.fresh} -> {args.golden}")
+        return 0
+
+    if not os.path.exists(args.golden):
+        msg = (f"golden {args.golden} not committed yet — bless it locally with\n"
+               f"  python3 scripts/check_goldens.py --bless --fresh {args.fresh} "
+               f"--golden {args.golden}\n"
+               f"(or `omc-fl sweep --profile smoke --bless`) and commit the file")
+        if args.strict_missing:
+            print(f"error: {msg}", file=sys.stderr)
+            return 1
+        print(f"warning: {msg}")
+        return 0
+
+    with open(args.golden) as fh:
+        golden = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    mismatches = list(walk_diff(golden, fresh, args.rel_tol))
+    if not mismatches:
+        print(f"goldens OK: {args.fresh} matches {args.golden} "
+              f"(floats within rel {args.rel_tol:g}, ints exact)")
+        return 0
+
+    print(f"GOLDEN MISMATCH: {len(mismatches)} field(s) differ "
+          f"({args.fresh} vs {args.golden})", file=sys.stderr)
+    for path, g, f, reason in mismatches[: args.max_report]:
+        print(f"  {path}: golden={g!r} fresh={f!r}  [{reason}]", file=sys.stderr)
+    if len(mismatches) > args.max_report:
+        print(f"  … and {len(mismatches) - args.max_report} more", file=sys.stderr)
+    print("if the change is intentional, re-bless: "
+          "python3 scripts/check_goldens.py --bless", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
