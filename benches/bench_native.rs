@@ -1,0 +1,86 @@
+//! Native-backend GEMM throughput — the compute side of every
+//! `cargo test`/CI sweep round since PR 3. Rows compare the naive
+//! dot-product loop (the scalar baseline the acceptance gate measures
+//! against) with the blocked axpy-form kernel and its threaded variant,
+//! plus whole `sgd_step`/`run_eval` rows for the round-level trajectory.
+//!
+//! The GEMM pair is the PR 4 acceptance gate: blocked ≥ 2x naive on an
+//! AVX2 host. Bytes per iteration = x + w + bias + out traffic (one pass).
+//! Elems = multiply-accumulates, so Melem/s reads as MMAC/s.
+//!
+//! This bench runs everywhere (pure Rust, no artifacts) and never skips.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::runtime::gemm::{
+    gemm_bias_act, gemm_bias_act_threaded, gemm_naive, Act,
+};
+use omc_fl::runtime::native::{manifest_for, NativeModel};
+use omc_fl::util::rng::Xoshiro256pp;
+use omc_fl::util::threadpool::default_workers;
+
+fn main() {
+    let mut suite = Suite::new("runtime::native GEMM + step throughput");
+    let mut rng = Xoshiro256pp::new(7);
+    let workers = default_workers();
+
+    // a bench-scale GEMM: big enough that blocking and vectorization show,
+    // small enough for the OMC_BENCH_FAST smoke tier
+    for (rows, in_dim, out_dim) in [(256usize, 256usize, 256usize), (512, 128, 64)] {
+        let mut x = vec![0.0f32; rows * in_dim];
+        rng.fill_normal(&mut x, 1.0);
+        let mut w = vec![0.0f32; in_dim * out_dim];
+        rng.fill_normal(&mut w, 0.1);
+        let mut bias = vec![0.0f32; out_dim];
+        rng.fill_normal(&mut bias, 0.1);
+        let mut out = vec![0.0f32; rows * out_dim];
+        let macs = rows * in_dim * out_dim;
+        let io = 4 * (x.len() + w.len() + bias.len() + out.len());
+        let shape = format!("{rows}x{in_dim}x{out_dim}");
+
+        suite.bench_case(&format!("gemm naive   {shape}"), Some(macs), Some(io), || {
+            gemm_naive(&x, &w, &bias, rows, in_dim, out_dim, Act::Relu, &mut out);
+            consume(&out);
+        });
+        suite.bench_case(&format!("gemm blocked {shape}"), Some(macs), Some(io), || {
+            gemm_bias_act(&x, &w, &bias, rows, in_dim, out_dim, Act::Relu, &mut out);
+            consume(&out);
+        });
+        if workers > 1 {
+            suite.bench_case(
+                &format!("gemm thr({workers}) {shape}"),
+                Some(macs),
+                Some(io),
+                || {
+                    gemm_bias_act_threaded(
+                        &x, &w, &bias, rows, in_dim, out_dim, Act::Relu, workers,
+                        &mut out,
+                    );
+                    consume(&out);
+                },
+            );
+        }
+    }
+
+    // whole native training/eval steps (the unit the sweep engine pays
+    // per client per round)
+    for name in ["tiny", "small"] {
+        let manifest = manifest_for(name).unwrap();
+        let nm = NativeModel::from_manifest(&manifest).unwrap();
+        let params = nm.run_init(1).unwrap();
+        let c = &manifest.config;
+        let frames = c.batch * c.seq_len;
+        let mut x = vec![0.0f32; frames * c.feature_dim];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<i32> = (0..frames)
+            .map(|i| (i % c.vocab) as i32)
+            .collect();
+        suite.bench(&format!("sgd_step native:{name}"), Some(frames), || {
+            consume(nm.run_train_fp32(&params, &x, &y, 0.1).unwrap());
+        });
+        suite.bench(&format!("run_eval native:{name}"), Some(frames), || {
+            consume(nm.run_eval(&params, &x, &y).unwrap());
+        });
+    }
+
+    suite.finish("BENCH_native.json");
+}

@@ -1,8 +1,15 @@
 //! Bit-packing throughput — turning quantized values into the wire/memory
 //! representation and back. Compares the scalar reference path against the
-//! block/word kernels, the fused pipelines, and the threaded variants (the
-//! acceptance gate for the block-codec work: pack+unpack ≥ 2x scalar on
-//! S1E5M10 and S1E3M7).
+//! dispatched SIMD/block kernels, the fused pipelines, and the threaded
+//! variants. Acceptance gates: block pack+unpack ≥ 2x scalar (PR 1), and
+//! the dispatched quantize / fused rows ≥ 2x their scalar rows on an AVX2
+//! host (PR 4).
+//!
+//! Dispatched rows carry the resolved ISA level in the label (`[avx2]`,
+//! `[sse2]`, `[scalar]`); reference rows say `[ref-scalar]` — a name that
+//! stays distinct even when the dispatch resolves to scalar, so
+//! `bench_trend.py` never sees duplicate row keys. Bytes per iteration =
+//! f32 input + packed output (pack direction) or the reverse (unpack).
 //!
 //! Set `OMC_BENCH_JSON=1` to also write `BENCH_pack.json` for cross-PR
 //! tracking.
@@ -13,12 +20,21 @@ use omc_fl::omc::pack::{
     pack, pack_scalar, pack_threaded, quantize_transform_pack, unpack,
     unpack_scalar, unpack_transform_into, unpack_transform_into_threaded,
 };
-use omc_fl::omc::quantize::quantize_vec;
+use omc_fl::omc::quantize::{quantize_slice, quantize_slice_scalar, quantize_vec};
 use omc_fl::util::rng::Xoshiro256pp;
+use omc_fl::util::simd;
 use omc_fl::util::threadpool::default_workers;
 
 fn main() {
-    let mut suite = Suite::new("omc::pack / unpack throughput");
+    let isa = simd::kernels().level.label();
+    if cfg!(target_arch = "x86_64") && simd::kernels().level != simd::Level::Avx2 {
+        // CI greps for this (PR 3 convention): the dispatched rows below
+        // would silently measure a lower ISA level, so fail the smoke
+        // loudly instead of reporting misleading numbers.
+        println!("SKIPPED: bench_pack SIMD rows — AVX2 unavailable (resolved: {isa})");
+    }
+
+    let mut suite = Suite::new("omc::pack / unpack / quantize throughput");
     let mut rng = Xoshiro256pp::new(2);
     let n = 262_144usize;
     let workers = default_workers();
@@ -29,43 +45,97 @@ fn main() {
         rng.fill_normal(&mut v, 0.05);
         let q = quantize_vec(&v, fmt);
         let bytes = pack(&q, fmt).unwrap();
+        let io_pack = 4 * n + bytes.len(); // f32 in + packed out
+        let io_q = 8 * n; // f32 in + f32 out
 
-        suite.bench(&format!("pack scalar   {fmt_s} n={n}"), Some(n), || {
-            consume(pack_scalar(&q, fmt).unwrap());
-        });
-        suite.bench(&format!("pack block    {fmt_s} n={n}"), Some(n), || {
-            consume(pack(&q, fmt).unwrap());
-        });
+        let mut out_q = vec![0.0f32; n];
+        suite.bench_case(
+            &format!("quantize [ref-scalar] {fmt_s} n={n}"),
+            Some(n),
+            Some(io_q),
+            || {
+                quantize_slice_scalar(&v, fmt, &mut out_q);
+                consume(&out_q);
+            },
+        );
+        suite.bench_case(
+            &format!("quantize [{isa}]   {fmt_s} n={n}"),
+            Some(n),
+            Some(io_q),
+            || {
+                quantize_slice(&v, fmt, &mut out_q);
+                consume(&out_q);
+            },
+        );
+
+        suite.bench_case(
+            &format!("pack [ref-scalar]   {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                consume(pack_scalar(&q, fmt).unwrap());
+            },
+        );
+        suite.bench_case(
+            &format!("pack [{isa}]       {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                consume(pack(&q, fmt).unwrap());
+            },
+        );
         let mut payload = Vec::new();
-        suite.bench(&format!("fused q+f+p   {fmt_s} n={n}"), Some(n), || {
-            payload.clear();
-            consume(quantize_transform_pack(&v, fmt, true, &mut payload));
-        });
+        suite.bench_case(
+            &format!("fused q+f+p [{isa}] {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                payload.clear();
+                consume(quantize_transform_pack(&v, fmt, true, &mut payload));
+            },
+        );
         if workers > 1 {
-            suite.bench(
-                &format!("pack thr({workers})   {fmt_s} n={n}"),
+            suite.bench_case(
+                &format!("pack thr({workers}) [{isa}] {fmt_s} n={n}"),
                 Some(n),
+                Some(io_pack),
                 || {
                     consume(pack_threaded(&q, fmt, workers).unwrap());
                 },
             );
         }
 
-        suite.bench(&format!("unpack scalar {fmt_s} n={n}"), Some(n), || {
-            consume(unpack_scalar(&bytes, n, fmt));
-        });
-        suite.bench(&format!("unpack block  {fmt_s} n={n}"), Some(n), || {
-            consume(unpack(&bytes, n, fmt));
-        });
+        suite.bench_case(
+            &format!("unpack [ref-scalar] {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                consume(unpack_scalar(&bytes, n, fmt));
+            },
+        );
+        suite.bench_case(
+            &format!("unpack [{isa}]     {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                consume(unpack(&bytes, n, fmt));
+            },
+        );
         let mut out = Vec::new();
-        suite.bench(&format!("unpack+xform  {fmt_s} n={n}"), Some(n), || {
-            unpack_transform_into(&bytes, n, fmt, 1.25, -0.5, &mut out);
-            consume(&out);
-        });
+        suite.bench_case(
+            &format!("unpack+xform [{isa}] {fmt_s} n={n}"),
+            Some(n),
+            Some(io_pack),
+            || {
+                unpack_transform_into(&bytes, n, fmt, 1.25, -0.5, &mut out);
+                consume(&out);
+            },
+        );
         if workers > 1 {
-            suite.bench(
-                &format!("unpack thr({workers}) {fmt_s} n={n}"),
+            suite.bench_case(
+                &format!("unpack thr({workers}) [{isa}] {fmt_s} n={n}"),
                 Some(n),
+                Some(io_pack),
                 || {
                     unpack_transform_into_threaded(
                         &bytes, n, fmt, 1.25, -0.5, workers, &mut out,

@@ -1,14 +1,19 @@
 //! Quantizer throughput across the paper's formats and variable sizes —
-//! the L3-side half of OMC's per-round compression cost.
+//! the L3-side half of OMC's per-round compression cost. Rows are labeled
+//! with the resolved SIMD dispatch level; the scalar-vs-dispatched pair
+//! lives in `bench_pack` (one suite owns the comparison rows so the JSON
+//! trajectory has a single source). Bytes per iteration = f32 in + out.
 
 use omc_fl::benchkit::{consume, Suite};
 use omc_fl::omc::format::FloatFormat;
 use omc_fl::omc::quantize::{quantize_slice, quantize_vec};
 use omc_fl::util::rng::Xoshiro256pp;
+use omc_fl::util::simd;
 
 fn main() {
     let mut suite = Suite::new("omc::quantize throughput");
     let mut rng = Xoshiro256pp::new(1);
+    let isa = simd::kernels().level.label();
 
     for fmt_s in ["S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3"] {
         let fmt: FloatFormat = fmt_s.parse().unwrap();
@@ -16,10 +21,15 @@ fn main() {
             let mut v = vec![0.0f32; n];
             rng.fill_normal(&mut v, 0.05);
             let mut out = vec![0.0f32; n];
-            suite.bench(&format!("quantize {fmt_s} n={n}"), Some(n), || {
-                quantize_slice(&v, fmt, &mut out);
-                consume(&out);
-            });
+            suite.bench_case(
+                &format!("quantize [{isa}] {fmt_s} n={n}"),
+                Some(n),
+                Some(8 * n),
+                || {
+                    quantize_slice(&v, fmt, &mut out);
+                    consume(&out);
+                },
+            );
         }
     }
 
@@ -27,9 +37,14 @@ fn main() {
     let n = 262_144;
     let mut v = vec![0.0f32; n];
     rng.fill_normal(&mut v, 0.05);
-    suite.bench("quantize S1E8M23 (identity) n=262144", Some(n), || {
-        consume(quantize_vec(&v, FloatFormat::FP32));
-    });
+    suite.bench_case(
+        "quantize S1E8M23 (identity) n=262144",
+        Some(n),
+        Some(8 * n),
+        || {
+            consume(quantize_vec(&v, FloatFormat::FP32));
+        },
+    );
 
     suite.finish("BENCH_quantize.json");
 }

@@ -10,8 +10,15 @@ use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
 use omc_fl::coordinator::experiment::Experiment;
 use omc_fl::fl::cohort::CohortConfig;
 use omc_fl::runtime::engine::Engine;
+use omc_fl::util::simd;
 
 fn main() {
+    let isa = simd::kernels().level.label();
+    if cfg!(target_arch = "x86_64") && simd::kernels().level != simd::Level::Avx2 {
+        // CI greps for this (PR 3 convention): the dispatched rows would
+        // measure a lower ISA level than the trajectory expects.
+        println!("SKIPPED: bench_round SIMD rows — AVX2 unavailable (resolved: {isa})");
+    }
     // Prefer the compiled artifacts; fall back to the pure-Rust native
     // backend so the round-latency trajectory exists in every environment
     // (CI has no artifacts; default builds can't execute artifacts even
@@ -48,6 +55,9 @@ fn main() {
     // rounds are ~100 ms; cap the sample budget
     suite.min_time_s = suite.min_time_s.min(2.0);
 
+    // scalar-vs-dispatched pairs: the same round config, once with the
+    // dispatch forced to the scalar kernels and once resolved — the delta
+    // is the whole-round win of the SIMD codec layer
     for (label, omc) in [
         ("round FP32 (S1E8M23)", OmcConfig::fp32_baseline()),
         ("round OMC S1E4M14", OmcConfig::paper("S1E4M14".parse().unwrap())),
@@ -64,7 +74,15 @@ fn main() {
         exp.warmup().unwrap();
         // run one round per iteration (server state advances; that's fine —
         // the cost is stationary)
-        suite.bench(label, None, || {
+        // "[forced-scalar]" vs "[<isa>]": structurally distinct names even
+        // when the resolved level IS scalar, so bench_trend.py never sees
+        // duplicate row keys
+        assert!(simd::force_level(Some(simd::Level::Scalar)));
+        suite.bench(&format!("{label} [forced-scalar]"), None, || {
+            let _ = exp.run_one_round_for_bench().unwrap();
+        });
+        assert!(simd::force_level(None));
+        suite.bench(&format!("{label} [{isa}]"), None, || {
             let _ = exp.run_one_round_for_bench().unwrap();
         });
     }

@@ -19,6 +19,12 @@ pub struct BenchResult {
     pub iters: usize,
     /// optional elements-processed-per-iteration for throughput
     pub elems: Option<usize>,
+    /// optional bytes-moved-per-iteration for bandwidth (input + output
+    /// traffic of the measured operation — each bench documents what it
+    /// counts)
+    pub bytes: Option<usize>,
+    /// iterations spent in calibration + warmup before sampling started
+    pub warmup_iters: usize,
 }
 
 impl BenchResult {
@@ -27,17 +33,27 @@ impl BenchResult {
             .map(|e| e as f64 / (self.median_ns / 1e9) / 1e6)
     }
 
+    /// Decimal GB/s (1 byte/ns = 1 GB/s) when the case recorded bytes.
+    pub fn throughput_gb_s(&self) -> Option<f64> {
+        self.bytes.map(|b| b as f64 / self.median_ns)
+    }
+
     pub fn row(&self) -> String {
         let thr = match self.throughput_m_elems_s() {
             Some(t) => format!("{t:10.1}"),
             None => format!("{:>10}", "-"),
         };
+        let bw = match self.throughput_gb_s() {
+            Some(t) => format!("{t:8.2}"),
+            None => format!("{:>8}", "-"),
+        };
         format!(
-            "| {:<38} | {:>12} | {:>9} | {} |",
+            "| {:<38} | {:>12} | {:>9} | {} | {} |",
             self.name,
             fmt_ns(self.median_ns),
             fmt_ns(self.mad_ns),
-            thr
+            thr,
+            bw
         )
     }
 }
@@ -78,12 +94,31 @@ impl Suite {
     }
 
     /// Time `f`, which should fully consume its work (`black_box` inside).
-    pub fn bench<F: FnMut()>(&mut self, name: &str, elems: Option<usize>, mut f: F) {
-        // warmup + calibration: find an iteration count that runs ~10ms
+    pub fn bench<F: FnMut()>(&mut self, name: &str, elems: Option<usize>, f: F) {
+        self.bench_case(name, elems, None, f)
+    }
+
+    /// [`Suite::bench`] additionally recording the bytes each iteration
+    /// moves, so the JSON rows carry a GB/s figure comparable across
+    /// hosts and PRs.
+    pub fn bench_case<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elems: Option<usize>,
+        bytes: Option<usize>,
+        mut f: F,
+    ) {
+        // warmup + calibration: one timed call sizes a ~10ms batch, then
+        // one untimed batch warms caches/branch predictors before sampling
         let t0 = Instant::now();
         f();
         let once = t0.elapsed().as_secs_f64().max(1e-9);
         let batch = ((0.01 / once) as usize).clamp(1, self.max_iters);
+        let warmup_batch = batch.min(self.max_iters / 10 + 1);
+        for _ in 0..warmup_batch {
+            f();
+        }
+        let warmup_iters = 1 + warmup_batch;
 
         let mut samples = Vec::new();
         let start = Instant::now();
@@ -105,6 +140,8 @@ impl Suite {
             mad_ns: median_abs_dev(&samples),
             iters: total_iters,
             elems,
+            bytes,
+            warmup_iters,
         };
         eprintln!("  measured {name}: {}", fmt_ns(res.median_ns));
         self.results.push(res);
@@ -118,10 +155,17 @@ impl Suite {
     pub fn report(&self) {
         println!("\n### {}\n", self.title);
         println!(
-            "| {:<38} | {:>12} | {:>9} | {:>10} |",
-            "case", "median", "mad", "Melem/s"
+            "| {:<38} | {:>12} | {:>9} | {:>10} | {:>8} |",
+            "case", "median", "mad", "Melem/s", "GB/s"
         );
-        println!("|{}|{}|{}|{}|", "-".repeat(40), "-".repeat(14), "-".repeat(11), "-".repeat(12));
+        println!(
+            "|{}|{}|{}|{}|{}|",
+            "-".repeat(40),
+            "-".repeat(14),
+            "-".repeat(11),
+            "-".repeat(12),
+            "-".repeat(10)
+        );
         for r in &self.results {
             println!("{}", r.row());
         }
@@ -141,15 +185,24 @@ impl Suite {
                     ("median_ns", json::num(r.median_ns)),
                     ("mad_ns", json::num(r.mad_ns)),
                     ("iters", json::num(r.iters as f64)),
+                    ("warmup_iters", json::num(r.warmup_iters as f64)),
                     (
                         "elems",
                         r.elems.map(|e| json::num(e as f64)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "bytes",
+                        r.bytes.map(|b| json::num(b as f64)).unwrap_or(Json::Null),
                     ),
                     (
                         "melem_per_s",
                         r.throughput_m_elems_s()
                             .map(json::num)
                             .unwrap_or(Json::Null),
+                    ),
+                    (
+                        "gb_per_s",
+                        r.throughput_gb_s().map(json::num).unwrap_or(Json::Null),
                     ),
                 ])
             })
@@ -227,7 +280,7 @@ mod tests {
     fn json_output_roundtrips() {
         std::env::set_var("OMC_BENCH_FAST", "1");
         let mut s = Suite::new("json test");
-        s.bench("case_a", Some(100), || {
+        s.bench_case("case_a", Some(100), Some(800), || {
             consume(41 + 1);
         });
         let j = s.to_json();
@@ -243,6 +296,12 @@ mod tests {
             Some("case_a")
         );
         assert!(results[0].get("melem_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // the cross-PR trajectory fields: element/byte counts, derived
+        // bandwidth, and the warmup spent before sampling
+        assert_eq!(results[0].get("elems").unwrap().as_f64(), Some(100.0));
+        assert_eq!(results[0].get("bytes").unwrap().as_f64(), Some(800.0));
+        assert!(results[0].get("gb_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(results[0].get("warmup_iters").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]
@@ -275,8 +334,25 @@ mod tests {
             mad_ns: 1.0,
             iters: 10,
             elems: None,
+            bytes: None,
+            warmup_iters: 1,
         };
         assert!(r.row().starts_with('|'));
         assert!(r.row().contains(" - "));
+    }
+
+    #[test]
+    fn gb_per_s_derivation() {
+        let r = BenchResult {
+            name: "bw".into(),
+            median_ns: 1000.0,
+            mad_ns: 1.0,
+            iters: 10,
+            elems: Some(500),
+            bytes: Some(2000),
+            warmup_iters: 3,
+        };
+        // 2000 bytes / 1000 ns = 2 GB/s (decimal)
+        assert!((r.throughput_gb_s().unwrap() - 2.0).abs() < 1e-12);
     }
 }

@@ -43,7 +43,9 @@
 //!   ([`metrics::sweep`]).
 //! * [`benchkit`] / [`testkit`] / [`util`] — the bench harness
 //!   (`OMC_BENCH_JSON` emits `BENCH_*.json`), property-test helpers, and
-//!   the dependency-free substrate (RNG, thread pool, TOML/JSON, CLI).
+//!   the dependency-free substrate (RNG, thread pool, TOML/JSON, CLI,
+//!   and the [`util::simd`] runtime kernel dispatch —
+//!   `docs/PERFORMANCE.md` documents the determinism contract).
 //!
 //! Start with [`coordinator::Experiment`] (driving a whole federated run)
 //! or the `examples/` directory, which regenerates every table and figure

@@ -19,14 +19,23 @@
 //! the downlink — so the codec is organized as a high-throughput kernel
 //! layer rather than a per-value loop:
 //!
+//! * **SIMD lane kernels** ([`crate::util::simd`]): the elementwise hot
+//!   loops — quantization, the PVT affine, the f64 fit sums, and the
+//!   8/16-bit byte-lane block codecs — go through a dispatch table
+//!   resolved once per process (AVX2 / SSE2 / scalar;
+//!   `OMC_FORCE_SCALAR=1` pins scalar). Every vector path is bit-exact
+//!   against the scalar reference; reductions use a fixed virtual lane
+//!   schedule so even the PVT scalars are ISA-independent
+//!   (`docs/PERFORMANCE.md` states the full contract).
 //! * **Block kernels** ([`pack`]): values are processed in 256-value blocks
 //!   through a 64-bit word accumulator. 256 is a multiple of 8, so a block
 //!   spans exactly `32·w` bytes for a `w`-bit format — blocks are
 //!   byte-aligned, independently codable, and the basis for the threaded
-//!   variants. The paper's four table formats (`S1E5M10`, `S1E4M14`,
-//!   `S1E3M7`, `S1E2M3`) dispatch to const-generic monomorphized kernels;
-//!   everything else takes the same kernel with runtime parameters, and the
-//!   original scalar path remains in-tree as the bit-exact reference.
+//!   variants. 8/16-bit-wide formats take the SIMD lane kernels; the
+//!   paper's other table formats (`S1E4M14`, `S1E3M7`, `S1E2M3`) dispatch
+//!   to const-generic monomorphized word kernels; everything else takes
+//!   the same kernel with runtime parameters, and the original scalar
+//!   path remains in-tree as the bit-exact reference.
 //! * **Fused pipelines**: [`pack::quantize_transform_pack`] (uplink:
 //!   quantize + PVT fit + pack in one pass) and
 //!   [`pack::unpack_transform_into`] (downlink: unpack + affine in one

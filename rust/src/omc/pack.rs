@@ -25,15 +25,26 @@
 //!   threaded variants), and
 //! * the block kernels move whole 64-bit words instead of single bytes.
 //!
-//! Dispatch rules: the four formats the paper tables use — `S1E5M10`,
-//! `S1E4M14`, `S1E3M7`, `S1E2M3` — hit const-generic monomorphized kernels
-//! (`*_mono::<E, M>`) whose shifts, masks and biases constant-fold;
-//! `S1E8M23` (plain f32) is a byte copy; every other format runs the same
-//! block kernel with runtime `e`/`m`. The pre-block scalar path is kept
-//! in-tree as [`pack_scalar`] / [`unpack_scalar`] — it is the correctness
-//! reference (block output must be **byte-identical**, asserted by the
-//! property tests in `rust/tests/omc_kernels.rs`) and handles the `< 256`
-//! value tail of every array.
+//! Dispatch rules, fastest eligible path first:
+//!
+//! 1. **SIMD lane kernels** (`util::simd`): formats whose code width is
+//!    exactly 8 or 16 bits (and `e` in `2..8`) are byte-lane formats — a block's
+//!    bitstream is literally a little-endian `u8`/`u16` array — so whole
+//!    blocks encode/decode 8 values per vector through the
+//!    runtime-dispatched `pack_pow2`/`unpack_pow2` kernels (AVX2 shuffles
+//!    narrow the lanes; the decoder fuses the PVT affine). `S1E5M10`, the
+//!    paper's 16-bit format, takes this path.
+//! 2. **Const-generic word kernels**: the paper's other table formats —
+//!    `S1E4M14`, `S1E3M7`, `S1E2M3` — hit monomorphized block kernels
+//!    (`*_mono::<E, M>`) whose shifts, masks and biases constant-fold.
+//! 3. `S1E8M23` (plain f32) is a byte copy; every other format runs the
+//!    generic block kernel with runtime `e`/`m`.
+//!
+//! The pre-block scalar path is kept in-tree as [`pack_scalar`] /
+//! [`unpack_scalar`] — it is the correctness reference (every other path
+//! must be **byte-identical**, asserted by the property tests in
+//! `rust/tests/omc_kernels.rs`) and handles the `< 256` value tail of
+//! every array.
 //!
 //! Zero-alloc contract: the `*_into` / `*_extend` variants write into
 //! caller-provided buffers and never allocate beyond growing the
@@ -42,8 +53,9 @@
 //! codec performs no per-variable heap allocation.
 
 use super::format::FloatFormat;
-use super::quantize::quantize_one;
+use super::quantize::quantize_slice;
 use super::transform::{FitAcc, Pvt};
+use crate::util::simd;
 use crate::util::threadpool;
 
 /// Number of values per codec block. 256 keeps a block's f32 image (1 KiB)
@@ -297,8 +309,27 @@ fn pack_blocks_mono<const E: u32, const M: u32>(values: &[f32], out: &mut [u8]) 
     pack_blocks_body(values, FloatFormat { exp_bits: E, mant_bits: M }, out);
 }
 
+/// Whether `fmt` is a byte-lane format eligible for the SIMD block
+/// kernels: code width exactly 8 or 16 bits and `e` in `2..8`. `e = 8`
+/// formats other than plain f32 are exotic and `1/quantum` would leave
+/// the normal f32 range; `e = 1` (bias 0) makes every finite value
+/// subnormal-coded including the non-grid-aligned saturation value
+/// `2 − 2^−m`, where the SIMD encoder's exact-multiple assumption and
+/// the scalar shift truncation disagree — both stay on the word
+/// kernels, which match `encode_one` bit for bit on every input.
+#[inline]
+fn pow2_lane_format(fmt: FloatFormat) -> bool {
+    (2..8).contains(&fmt.exp_bits) && matches!(fmt.bits(), 8 | 16)
+}
+
 /// Whole-block packer with the fast-path dispatch (see module docs).
 fn pack_blocks(values: &[f32], fmt: FloatFormat, out: &mut [u8]) {
+    if pow2_lane_format(fmt) {
+        if let Some(kernel) = simd::kernels().pack_pow2 {
+            kernel(values, fmt.exp_bits, fmt.mant_bits, out);
+            return;
+        }
+    }
     match (fmt.exp_bits, fmt.mant_bits) {
         (5, 10) => pack_blocks_mono::<5, 10>(values, out),
         (4, 14) => pack_blocks_mono::<4, 14>(values, out),
@@ -380,29 +411,59 @@ fn unpack_blocks<F: Fn(f32) -> f32 + Copy>(
     }
 }
 
-/// Fill an exactly-sized slice: blocks via the word kernel, tail via the
-/// scalar reference, `map` applied to every value.
-fn unpack_slice_with<F: Fn(f32) -> f32 + Copy>(
+/// Decode whole blocks applying the optional PVT affine (`Some((s, b))`;
+/// `None` is the bit-preserving identity). Byte-lane formats go through
+/// the SIMD dispatch table; everything else takes the word kernels with
+/// the map monomorphized per closure.
+fn unpack_blocks_affine(
     bytes: &[u8],
     fmt: FloatFormat,
     out: &mut [f32],
-    map: F,
+    map: Option<(f32, f32)>,
+) {
+    if pow2_lane_format(fmt) {
+        if let Some(kernel) = simd::kernels().unpack_pow2 {
+            let quantum = fmt.min_positive() as f32;
+            kernel(bytes, fmt.exp_bits, fmt.mant_bits, quantum, map, out);
+            return;
+        }
+    }
+    match map {
+        None => unpack_blocks(bytes, fmt, out, |v| v),
+        Some((s, b)) => unpack_blocks(bytes, fmt, out, move |v| s * v + b),
+    }
+}
+
+/// Fill an exactly-sized slice: blocks via the kernel dispatch, tail via
+/// the scalar reference, the optional affine applied to every value.
+fn unpack_slice_affine(
+    bytes: &[u8],
+    fmt: FloatFormat,
+    out: &mut [f32],
+    map: Option<(f32, f32)>,
 ) {
     if fmt.is_fp32() {
         // degenerate 32-bit format: the payload is the raw f32 LE image
         for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
-            *o = map(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            *o = match map {
+                None => v,
+                Some((s, b)) => s * v + b,
+            };
         }
         return;
     }
     let n = out.len();
     let nb = n / BLOCK * BLOCK;
     let split = fmt.packed_bytes(nb); // block region is byte-aligned
-    unpack_blocks(&bytes[..split], fmt, &mut out[..nb], map);
+    unpack_blocks_affine(&bytes[..split], fmt, &mut out[..nb], map);
     let tail = &mut out[nb..];
     let mut i = 0;
     unpack_scalar_sink(&bytes[split..], n - nb, fmt, |v| {
-        tail[i] = map(v);
+        tail[i] = match map {
+            None => v,
+            Some((s, b)) => s * v + b,
+        };
         i += 1;
     });
 }
@@ -414,6 +475,11 @@ fn unpack_slice_with<F: Fn(f32) -> f32 + Copy>(
 /// Pack a slice of representable values into bytes (little-endian bit
 /// order: code 0 occupies the lowest bits of byte 0). Block fast path; the
 /// output is byte-identical to [`pack_scalar`].
+///
+/// Values must be quantizer fixed points: debug builds reject others via
+/// [`PackError`]; in release builds the payload for a non-representable
+/// value is unspecified and — since the SIMD byte-lane encoder rounds
+/// where the scalar encoder truncates — may differ across ISA paths.
 pub fn pack(values: &[f32], fmt: FloatFormat) -> Result<Vec<u8>, PackError> {
     let mut out = Vec::new();
     pack_extend(values, fmt, &mut out)?;
@@ -494,7 +560,7 @@ pub fn unpack(bytes: &[u8], n: usize, fmt: FloatFormat) -> Vec<f32> {
 pub fn unpack_into(bytes: &[u8], n: usize, fmt: FloatFormat, out: &mut Vec<f32>) {
     out.clear();
     out.resize(n, 0.0);
-    unpack_slice_with(bytes, fmt, out, |v| v);
+    unpack_slice_affine(bytes, fmt, out, None);
 }
 
 /// Unpack `n` values, applying the per-variable transform in the same pass
@@ -519,9 +585,9 @@ pub fn unpack_transform_into(
     out.clear();
     out.resize(n, 0.0);
     if s == 1.0 && b == 0.0 {
-        unpack_slice_with(bytes, fmt, out, |v| v);
+        unpack_slice_affine(bytes, fmt, out, None);
     } else {
-        unpack_slice_with(bytes, fmt, out, |v| s * v + b);
+        unpack_slice_affine(bytes, fmt, out, Some((s, b)));
     }
 }
 
@@ -546,16 +612,13 @@ pub fn unpack_transform_into_threaded(
     let bpb = BLOCK * fmt.bits() as usize / 8;
     let (head, tail) = out.split_at_mut(nb);
     let identity = s == 1.0 && b == 0.0;
+    let map = if identity { None } else { Some((s, b)) };
     let items: Vec<(&[u8], &mut [f32])> = bytes[..split]
         .chunks(PAR_CHUNK_VALUES / BLOCK * bpb)
         .zip(head.chunks_mut(PAR_CHUNK_VALUES))
         .collect();
     threadpool::scope_map_send(items, workers, |_, (bseg, oseg)| {
-        if identity {
-            unpack_blocks(bseg, fmt, oseg, |v| v);
-        } else {
-            unpack_blocks(bseg, fmt, oseg, |v| s * v + b);
-        }
+        unpack_blocks_affine(bseg, fmt, oseg, map)
     })
     .expect("unpack worker panicked");
     let mut i = 0;
@@ -604,20 +667,11 @@ pub fn quantize_transform_pack(
     use_pvt: bool,
     out: &mut Vec<u8>,
 ) -> Pvt {
-    match (fmt.exp_bits, fmt.mant_bits) {
-        (5, 10) => qtp_mono::<5, 10>(values, use_pvt, out),
-        (4, 14) => qtp_mono::<4, 14>(values, use_pvt, out),
-        (3, 7) => qtp_mono::<3, 7>(values, use_pvt, out),
-        (2, 3) => qtp_mono::<2, 3>(values, use_pvt, out),
-        _ => qtp_body(values, fmt, use_pvt, out),
-    }
+    // quantize / fit / pack each do their own kernel dispatch per block,
+    // so no per-format monomorphization is needed at this level
+    qtp_body(values, fmt, use_pvt, out)
 }
 
-fn qtp_mono<const E: u32, const M: u32>(values: &[f32], use_pvt: bool, out: &mut Vec<u8>) -> Pvt {
-    qtp_body(values, FloatFormat { exp_bits: E, mant_bits: M }, use_pvt, out)
-}
-
-#[inline(always)]
 fn qtp_body(values: &[f32], fmt: FloatFormat, use_pvt: bool, out: &mut Vec<u8>) -> Pvt {
     let width = fmt.bits() as usize;
     let start = out.len();
@@ -628,16 +682,14 @@ fn qtp_body(values: &[f32], fmt: FloatFormat, use_pvt: bool, out: &mut Vec<u8>) 
     let mut off = 0usize;
     for chunk in values.chunks(BLOCK) {
         let qs = &mut q[..chunk.len()];
-        for (o, &x) in qs.iter_mut().zip(chunk) {
-            *o = quantize_one(x, fmt);
-        }
+        quantize_slice(chunk, fmt, qs);
         if use_pvt {
             acc.update(chunk, qs);
         }
         let nbytes = (chunk.len() * width + 7) / 8;
         let seg = &mut dst[off..off + nbytes];
         if chunk.len() == BLOCK {
-            pack_blocks_body(qs, fmt, seg);
+            pack_blocks(qs, fmt, seg);
         } else {
             pack_scalar_slice(qs, fmt, seg);
         }

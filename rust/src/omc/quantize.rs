@@ -11,53 +11,38 @@
 //! Bit-exactness matters because the quantized values cross the wire
 //! bit-packed (`omc::pack`): the Rust decoder must reproduce the exact f32
 //! values the training graph emitted.
+//!
+//! The scalar algorithm lives in [`crate::util::simd::quantize_one_em`]
+//! (the substrate layer, so the SIMD kernels and this module share one
+//! source of truth); the bulk entry points here go through the
+//! runtime-resolved dispatch table ([`crate::util::simd::kernels`]) and
+//! are **bit-exact** against the scalar reference on every ISA path —
+//! property-tested in `rust/tests/omc_kernels.rs`.
 
 use super::format::FloatFormat;
+use crate::util::simd;
 
 /// Quantize a single f32 to `fmt`. Inf/NaN saturate to max finite
 /// (documented in DESIGN.md; training values are finite).
 #[inline]
 pub fn quantize_one(x: f32, fmt: FloatFormat) -> f32 {
-    let e = fmt.exp_bits;
-    let m = fmt.mant_bits;
-    let u = x.to_bits();
-    let sign = u & 0x8000_0000;
-    let mag = u & 0x7FFF_FFFF;
-
-    let bexp = (mag >> 23) as i32;
-    let unb = bexp.max(1) - 127;
-    let bias_f = (1i32 << (e - 1)) - 1;
-    let min_normal_unb = 1 - bias_f;
-
-    let q = if unb < min_normal_unb {
-        // subnormal range: round to the uniform grid 2^(min_normal - m)
-        // via the exact additive trick (pure f32 IEEE RNE arithmetic,
-        // matching XLA's CPU semantics exactly)
-        let t_plus_150 = (min_normal_unb - m as i32 + 150) as u32;
-        let c = f32::from_bits((t_plus_150 << 23) | 0x0040_0000); // 1.5*2^(t+23)
-        let absx = f32::from_bits(mag);
-        ((absx + c) - c).to_bits()
-    } else {
-        // normal range: RNE at (23 - m) encoding bits
-        let shift = 23 - m;
-        if shift == 0 {
-            mag
-        } else {
-            let half = 1u32 << (shift - 1);
-            let lsb = (mag >> shift) & 1;
-            ((mag.wrapping_add(half - 1 + lsb)) >> shift) << shift
-        }
-    };
-
-    // saturate to max finite (also inf/NaN and RNE carry past the top)
-    let max_bexp = (bias_f + 127) as u32;
-    let frac = ((1u32 << m) - 1) << (23 - m);
-    let max_mag = (max_bexp << 23) | frac;
-    f32::from_bits(sign | q.min(max_mag))
+    simd::quantize_one_em(x, fmt.exp_bits, fmt.mant_bits)
 }
 
-/// Quantize a slice out-of-place.
+/// Quantize a slice out-of-place (runtime-dispatched SIMD kernel).
 pub fn quantize_slice(xs: &[f32], fmt: FloatFormat, out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len());
+    if fmt.is_fp32() {
+        out.copy_from_slice(xs);
+        return;
+    }
+    (simd::kernels().quantize)(xs, fmt.exp_bits, fmt.mant_bits, out);
+}
+
+/// Quantize a slice out-of-place on the scalar reference path, whatever
+/// the dispatch resolved (benches use this for scalar-vs-SIMD rows; the
+/// kernel tests use it as the ground truth).
+pub fn quantize_slice_scalar(xs: &[f32], fmt: FloatFormat, out: &mut [f32]) {
     assert_eq!(xs.len(), out.len());
     if fmt.is_fp32() {
         out.copy_from_slice(xs);
@@ -68,14 +53,12 @@ pub fn quantize_slice(xs: &[f32], fmt: FloatFormat, out: &mut [f32]) {
     }
 }
 
-/// Quantize in place.
+/// Quantize in place (runtime-dispatched SIMD kernel).
 pub fn quantize_in_place(xs: &mut [f32], fmt: FloatFormat) {
     if fmt.is_fp32() {
         return;
     }
-    for x in xs.iter_mut() {
-        *x = quantize_one(*x, fmt);
-    }
+    (simd::kernels().quantize_in_place)(xs, fmt.exp_bits, fmt.mant_bits);
 }
 
 /// Allocating convenience wrapper.
@@ -335,6 +318,29 @@ mod tests {
             out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             quantize_vec(&xs, fmt).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn dispatched_slice_matches_scalar_reference() {
+        let mut g = Gen::new(29);
+        for f in PAPER_FORMATS {
+            let fmt = fmt(f);
+            for n in [0usize, 1, 7, 8, 9, 31, 256, 1000] {
+                let xs: Vec<f32> =
+                    (0..n).map(|_| g.f32_wide()).collect();
+                let mut scalar = vec![0.0f32; n];
+                quantize_slice_scalar(&xs, fmt, &mut scalar);
+                let mut fast = vec![0.0f32; n];
+                quantize_slice(&xs, fmt, &mut fast);
+                for i in 0..n {
+                    assert_eq!(
+                        scalar[i].to_bits(),
+                        fast[i].to_bits(),
+                        "{f} n={n} idx {i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

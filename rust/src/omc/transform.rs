@@ -12,6 +12,16 @@
 //! Accumulation in f64 (Sec. 2.3: "s and b are computed in the 64-bit
 //! floating-point precision"); the stored scalars are f32. Degenerate case
 //! (`Ṽ` constant ⇒ denominator 0) falls back to `s = 1`.
+//!
+//! The f64 sums accumulate through [`crate::util::simd::FitSums`]: a
+//! **fixed virtual lane width** of 4 f64 accumulators (element `i` lands
+//! in lane `i % 4`), folded in a fixed pairwise order at
+//! [`FitAcc::finish`]. Every ISA path performs the identical addition
+//! sequence, so the fitted scalars — and everything downstream of them,
+//! including `sweep_summary.json` — are byte-identical whether the
+//! scalar, SSE2, or AVX2 kernels ran (see `docs/PERFORMANCE.md`).
+
+use crate::util::simd;
 
 /// The fitted per-variable transform. `(1.0, 0.0)` is the identity used for
 /// unquantized variables.
@@ -38,14 +48,11 @@ impl Pvt {
 /// quantize→fit→pack pipeline (`pack::quantize_transform_pack`). Feeding
 /// the same `(v, vt)` pairs in the same order produces bit-identical f64
 /// sums, which is what keeps the fused path's scalars exactly equal to the
-/// separate-pass reference.
+/// separate-pass reference. Internally a [`simd::FitSums`]: fixed
+/// virtual-lane accumulation, identical on every ISA path.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FitAcc {
-    n: usize,
-    sum_v: f64,
-    sum_t: f64,
-    sum_tt: f64,
-    sum_vt: f64,
+    sums: simd::FitSums,
 }
 
 impl FitAcc {
@@ -57,38 +64,40 @@ impl FitAcc {
     /// Accumulate one `(original, quantized)` pair.
     #[inline]
     pub fn push(&mut self, v: f32, t: f32) {
-        let a = v as f64;
-        let t = t as f64;
-        self.sum_v += a;
-        self.sum_t += t;
-        self.sum_tt += t * t;
-        self.sum_vt += a * t;
-        self.n += 1;
+        self.sums.push(v, t);
     }
 
-    /// Accumulate a batch of pairs (same element order as a plain loop).
+    /// Accumulate a batch of pairs through the dispatched SIMD kernel
+    /// (bit-identical to element-by-element [`FitAcc::push`]).
     pub fn update(&mut self, v: &[f32], vt: &[f32]) {
         assert_eq!(v.len(), vt.len());
-        for (&a, &t) in v.iter().zip(vt) {
-            self.push(a, t);
-        }
+        self.sums.update(v, vt);
+    }
+
+    /// [`FitAcc::update`] through an explicit kernel table — how the
+    /// cross-ISA determinism tests compare every available level against
+    /// the scalar reference from one process.
+    pub fn update_with(&mut self, kernels: &simd::Kernels, v: &[f32], vt: &[f32]) {
+        assert_eq!(v.len(), vt.len());
+        (kernels.fit_update)(&mut self.sums, v, vt);
     }
 
     /// Solve for `(s, b)`; degenerate cases fall back to `s = 1`.
     pub fn finish(&self) -> Pvt {
-        if self.n == 0 {
+        let (n, sum_v, sum_t, sum_tt, sum_vt) = self.sums.totals();
+        if n == 0 {
             return Pvt::IDENTITY;
         }
-        let nf = self.n as f64;
-        let den = nf * self.sum_tt - self.sum_t * self.sum_t;
-        let num = nf * self.sum_vt - self.sum_v * self.sum_t;
+        let nf = n as f64;
+        let den = nf * sum_tt - sum_t * sum_t;
+        let num = nf * sum_vt - sum_v * sum_t;
         let s_raw = num / den;
         let s = if den == 0.0 || !s_raw.is_finite() {
             1.0
         } else {
             s_raw
         };
-        let b = (self.sum_v - s * self.sum_t) / nf;
+        let b = (sum_v - s * sum_t) / nf;
         Pvt {
             s: s as f32,
             b: b as f32,
@@ -104,16 +113,15 @@ pub fn fit(v: &[f32], vt: &[f32]) -> Pvt {
 }
 
 /// Apply the transform in f32 — exactly what the lowered graph computes on
-/// decompression (`V̄ = s·Ṽ + b` with f32 scalars).
+/// decompression (`V̄ = s·Ṽ + b` with f32 scalars; runtime-dispatched
+/// SIMD lanes, mul-then-add so every path rounds like the scalar code).
 pub fn apply(pvt: Pvt, vt: &[f32], out: &mut [f32]) {
     assert_eq!(vt.len(), out.len());
     if pvt.is_identity() {
         out.copy_from_slice(vt);
         return;
     }
-    for (o, &t) in out.iter_mut().zip(vt) {
-        *o = pvt.s * t + pvt.b;
-    }
+    (simd::kernels().axpb)(pvt.s, pvt.b, vt, out);
 }
 
 /// In-place variant of [`apply`].
@@ -121,9 +129,7 @@ pub fn apply_in_place(pvt: Pvt, xs: &mut [f32]) {
     if pvt.is_identity() {
         return;
     }
-    for x in xs.iter_mut() {
-        *x = pvt.s * *x + pvt.b;
-    }
+    (simd::kernels().axpb_in_place)(pvt.s, pvt.b, xs);
 }
 
 /// Mean squared error between two slices, in f64 (used by tests/benches and

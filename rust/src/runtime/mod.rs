@@ -25,6 +25,7 @@ pub mod engine;
 #[path = "engine_stub.rs"]
 pub mod engine;
 
+pub mod gemm;
 pub mod native;
 
 pub use engine::{Engine, LoadedModel};

@@ -18,8 +18,13 @@
 //! # Determinism and thread safety
 //!
 //! Every entry point is a pure function of its inputs (plus the seed in
-//! `run_init`): plain sequential f32 arithmetic, no time, no global state.
-//! Two runs with the same inputs produce bit-identical outputs, which is
+//! `run_init`): no time, no global state. The matrix products run on the
+//! blocked GEMM kernels in [`super::gemm`], whose per-output-element
+//! accumulation order is fixed (bias, then `i` ascending — bit-identical
+//! to a naive loop) regardless of cache blocking, worker count, or ISA;
+//! the one true reduction in the backward pass (`dh = W₂·dz`) uses the
+//! fixed-virtual-lane [`super::gemm::dot_lanes`]. Two runs with the same
+//! inputs therefore produce bit-identical outputs on any host, which is
 //! what makes the sweep goldens byte-stable. The struct is plain data
 //! (`Send + Sync`), so the round engine's sharded dispatch — previously
 //! only reachable from mock-job tests — executes real training on it.
@@ -31,6 +36,9 @@ use crate::omc::format::FloatFormat;
 use crate::omc::quantize::quantize_slice;
 use crate::omc::transform;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
+use crate::util::threadpool;
+
+use super::gemm::{self, Act};
 
 use super::{EvalOut, Fp32StepOut, OmcStepOut};
 
@@ -187,8 +195,10 @@ impl NativeModel {
     }
 
     /// Forward + backward + SGD over one batch; returns updated parameters
-    /// and the mean framewise cross-entropy loss. Pure and sequential —
-    /// bit-deterministic for fixed inputs.
+    /// and the mean framewise cross-entropy loss. Forward runs on the
+    /// blocked GEMM kernels (whole batch at once, fused bias+relu);
+    /// backward keeps the axpy loop shapes with the fixed-lane dot for
+    /// `dh` — bit-deterministic for fixed inputs on any host.
     fn sgd_step(
         &self,
         params: &[Vec<f32>],
@@ -201,76 +211,71 @@ impl NativeModel {
         let (f, h, v) = (self.f, self.h, self.v);
         let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
         let frames = self.batch * self.seq_len;
+        for &yt in y {
+            anyhow::ensure!(
+                (yt as usize) < v,
+                "label {yt} out of range (vocab {v})"
+            );
+        }
+        let workers = threadpool::default_workers();
+
+        // forward for the whole batch: H = relu(X·W1 + b1), Z = H·W2 + b2
+        let mut hid = vec![0.0f32; frames * h];
+        gemm::gemm_bias_act_auto(x, w1, b1, frames, f, h, Act::Relu, workers, &mut hid);
+        let mut z = vec![0.0f32; frames * v];
+        gemm::gemm_bias_act_auto(&hid, w2, b2, frames, h, v, Act::Linear, workers, &mut z);
 
         let mut gw1 = vec![0.0f32; f * h];
         let mut gb1 = vec![0.0f32; h];
         let mut gw2 = vec![0.0f32; h * v];
         let mut gb2 = vec![0.0f32; v];
-        let mut hid = vec![0.0f32; h];
-        let mut z = vec![0.0f32; v];
         let mut dh = vec![0.0f32; h];
         let mut loss_sum = 0.0f64;
 
         for t in 0..frames {
-            let xf = &x[t * f..(t + 1) * f];
             let yi = y[t] as usize;
-            anyhow::ensure!(yi < v, "label {} out of range (vocab {v})", y[t]);
-
-            // hidden = relu(x·W1 + b1)
-            for j in 0..h {
-                let mut acc = b1[j];
-                for i in 0..f {
-                    acc += xf[i] * w1[i * h + j];
-                }
-                hid[j] = if acc > 0.0 { acc } else { 0.0 };
-            }
-            // logits = hidden·W2 + b2
-            for k in 0..v {
-                let mut acc = b2[k];
-                for j in 0..h {
-                    acc += hid[j] * w2[j * v + k];
-                }
-                z[k] = acc;
-            }
-            // softmax cross-entropy; z becomes dz in place
-            let zmax = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let zy = z[yi];
+            let zrow = &mut z[t * v..(t + 1) * v];
+            // softmax cross-entropy; zrow becomes dz in place
+            let zmax = zrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let zy = zrow[yi];
             let mut sum = 0.0f32;
-            for zk in z.iter_mut() {
+            for zk in zrow.iter_mut() {
                 *zk = (*zk - zmax).exp();
                 sum += *zk;
             }
             loss_sum += (sum.ln() + zmax - zy) as f64;
             let inv = 1.0 / sum;
-            for (k, zk) in z.iter_mut().enumerate() {
+            for (k, zk) in zrow.iter_mut().enumerate() {
                 *zk = *zk * inv - if k == yi { 1.0 } else { 0.0 };
             }
-            // grads
-            for k in 0..v {
-                gb2[k] += z[k];
+            // grads: every loop is axpy over a contiguous row except the
+            // dh reduction, which uses the fixed-lane dot
+            for (g, &d) in gb2.iter_mut().zip(zrow.iter()) {
+                *g += d;
             }
+            let hrow = &hid[t * h..(t + 1) * h];
             for j in 0..h {
-                let hj = hid[j];
+                let hj = hrow[j];
                 if hj > 0.0 {
                     let row = &mut gw2[j * v..(j + 1) * v];
-                    let mut acc = 0.0f32;
-                    for k in 0..v {
-                        row[k] += hj * z[k];
-                        acc += w2[j * v + k] * z[k];
+                    for (rk, &d) in row.iter_mut().zip(zrow.iter()) {
+                        *rk += hj * d;
                     }
-                    dh[j] = acc; // relu grad: pre-activation > 0
+                    // relu grad: pre-activation > 0
+                    dh[j] = gemm::dot_lanes(&w2[j * v..(j + 1) * v], zrow);
                 } else {
                     dh[j] = 0.0; // relu inactive: no gradient through unit j
                 }
             }
-            for j in 0..h {
-                gb1[j] += dh[j];
+            for (g, &d) in gb1.iter_mut().zip(dh.iter()) {
+                *g += d;
             }
+            let xf = &x[t * f..(t + 1) * f];
             for i in 0..f {
                 let xi = xf[i];
                 let row = &mut gw1[i * h..(i + 1) * h];
-                for j in 0..h {
-                    row[j] += xi * dh[j];
+                for (rj, &d) in row.iter_mut().zip(dh.iter()) {
+                    *rj += xi * d;
                 }
             }
         }
@@ -325,11 +330,20 @@ impl NativeModel {
             "s/b/mask must have {n} entries"
         );
         let fmt = FloatFormat::new(exp_bits, mant_bits)?;
-        // decompress (identity for raw variables: s=1, b=0)
+        // decompress V̄ = s·Ṽ + b on the dispatched affine kernel
+        // (identity transforms bit-copy, preserving signed zeros)
         let decoded: Vec<Vec<f32>> = tildes
             .iter()
             .enumerate()
-            .map(|(i, t)| t.iter().map(|&tv| s[i] * tv + b[i]).collect())
+            .map(|(i, t)| {
+                let mut out = vec![0.0f32; t.len()];
+                transform::apply(
+                    transform::Pvt { s: s[i], b: b[i] },
+                    t,
+                    &mut out,
+                );
+                out
+            })
             .collect();
         let (updated, loss) = self.sgd_step(&decoded, x, y, lr)?;
         // masked re-compress
@@ -363,45 +377,45 @@ impl NativeModel {
     }
 
     /// One eval step: mean framewise NLL + greedy (first-max) predictions.
+    /// Forward runs on the blocked GEMM kernels, whole batch at once; the
+    /// per-frame argmax/softmax scan keeps the exact first-max semantics
+    /// of the original loop.
     pub fn run_eval(&self, params: &[Vec<f32>], x: &[f32], y: &[i32]) -> Result<EvalOut> {
         self.check_params(params)?;
         self.check_batch(x, y)?;
         let (f, h, v) = (self.f, self.h, self.v);
         let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
         let frames = self.batch * self.seq_len;
-        let mut hid = vec![0.0f32; h];
-        let mut z = vec![0.0f32; v];
+        for &yt in y {
+            anyhow::ensure!(
+                (yt as usize) < v,
+                "label {yt} out of range (vocab {v})"
+            );
+        }
+        let workers = threadpool::default_workers();
+        let mut hid = vec![0.0f32; frames * h];
+        gemm::gemm_bias_act_auto(x, w1, b1, frames, f, h, Act::Relu, workers, &mut hid);
+        let mut z = vec![0.0f32; frames * v];
+        gemm::gemm_bias_act_auto(&hid, w2, b2, frames, h, v, Act::Linear, workers, &mut z);
+
         let mut pred = Vec::with_capacity(frames);
         let mut loss_sum = 0.0f64;
         for t in 0..frames {
-            let xf = &x[t * f..(t + 1) * f];
             let yi = y[t] as usize;
-            anyhow::ensure!(yi < v, "label {} out of range (vocab {v})", y[t]);
-            for j in 0..h {
-                let mut acc = b1[j];
-                for i in 0..f {
-                    acc += xf[i] * w1[i * h + j];
-                }
-                hid[j] = if acc > 0.0 { acc } else { 0.0 };
-            }
+            let zrow = &z[t * v..(t + 1) * v];
             let mut best = f32::NEG_INFINITY;
             let mut arg = 0usize;
-            for k in 0..v {
-                let mut acc = b2[k];
-                for j in 0..h {
-                    acc += hid[j] * w2[j * v + k];
-                }
-                z[k] = acc;
-                if acc > best {
-                    best = acc;
+            for (k, &zk) in zrow.iter().enumerate() {
+                if zk > best {
+                    best = zk;
                     arg = k;
                 }
             }
             let mut sum = 0.0f32;
-            for &zk in z.iter() {
+            for &zk in zrow.iter() {
                 sum += (zk - best).exp();
             }
-            loss_sum += (sum.ln() + best - z[yi]) as f64;
+            loss_sum += (sum.ln() + best - zrow[yi]) as f64;
             pred.push(arg as i32);
         }
         Ok(EvalOut {
@@ -539,6 +553,58 @@ mod tests {
             .unwrap();
         assert!(out2.s.iter().all(|&v| v == 1.0));
         assert!(out2.b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn eval_forward_matches_naive_loops_bitwise() {
+        // the GEMM rewrite must preserve the exact per-element accumulation
+        // order of the original dot-form loops: replay them here and compare
+        // logits, loss, and predictions bit for bit
+        let (nm, _) = tiny();
+        let params = nm.run_init(9).unwrap();
+        let (x, y) = batch_for(&nm, 10);
+        let out = nm.run_eval(&params, &x, &y).unwrap();
+
+        let (f, h, v) = (nm.f, nm.h, nm.v);
+        let (w1, b1, w2, b2) =
+            (&params[0], &params[1], &params[2], &params[3]);
+        let frames = nm.batch * nm.seq_len;
+        let mut hid = vec![0.0f32; h];
+        let mut z = vec![0.0f32; v];
+        let mut pred = Vec::new();
+        let mut loss_sum = 0.0f64;
+        for t in 0..frames {
+            let xf = &x[t * f..(t + 1) * f];
+            for j in 0..h {
+                let mut acc = b1[j];
+                for i in 0..f {
+                    acc += xf[i] * w1[i * h + j];
+                }
+                hid[j] = if acc > 0.0 { acc } else { 0.0 };
+            }
+            let mut best = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for k in 0..v {
+                let mut acc = b2[k];
+                for j in 0..h {
+                    acc += hid[j] * w2[j * v + k];
+                }
+                z[k] = acc;
+                if acc > best {
+                    best = acc;
+                    arg = k;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &zk in z.iter() {
+                sum += (zk - best).exp();
+            }
+            loss_sum += (sum.ln() + best - z[y[t] as usize]) as f64;
+            pred.push(arg as i32);
+        }
+        let naive_loss = (loss_sum / frames as f64) as f32;
+        assert_eq!(out.loss.to_bits(), naive_loss.to_bits());
+        assert_eq!(out.pred, pred);
     }
 
     #[test]

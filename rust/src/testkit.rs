@@ -61,6 +61,28 @@ impl Gen {
     pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|_| self.f32_normalish(scale)).collect()
     }
+
+    /// Edge-case-heavy raw f32 vector for kernel bit-exactness tests:
+    /// signed zeros, ±inf, an f32 subnormal, and normals across tiny /
+    /// huge / ordinary scales — every eighth slot cycles the specials so
+    /// any SIMD lane position sees each of them.
+    pub fn vec_edge_heavy(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match i % 8 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::INFINITY,
+                3 => f32::NEG_INFINITY,
+                4 => 1e-40, // f32 subnormal
+                5 => self.f32_normalish(1e-7),
+                6 => self.f32_normalish(1e5),
+                _ => {
+                    let scale = [1e-3, 0.05, 1.0][self.usize_below(3)];
+                    self.f32_normalish(scale)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Run `prop` over `cases` generated inputs; panic with the seed on failure.

@@ -9,5 +9,6 @@ pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod simd;
 pub mod threadpool;
 pub mod toml;

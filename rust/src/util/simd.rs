@@ -1,0 +1,1115 @@
+//! Runtime-dispatched SIMD kernel layer for the OMC hot loops (§Perf).
+//!
+//! Every simulated round pays the paper's "OMC tax" — decompress
+//! `s·Ṽ + b` before each step, requantize + pack after it — and those
+//! loops are pure lanewise f32 math. This module resolves, **once per
+//! process**, a table of kernel function pointers ([`Kernels`]) for the
+//! best instruction set the CPU offers and hands it to the `omc` kernel
+//! call sites:
+//!
+//! * **avx2** — 8-lane f32 / 4-lane f64 kernels via `std::arch::x86_64`,
+//!   selected when `is_x86_feature_detected!("avx2")` holds.
+//! * **sse2** — 4-lane f32 / 2-lane f64 baseline; always available on
+//!   `x86_64` (part of the base ISA).
+//! * **scalar** — portable fallback, the only table on other
+//!   architectures and the *reference semantics* for every other level.
+//!
+//! `OMC_FORCE_SCALAR=1` in the environment pins the dispatch to the
+//! scalar table (checked once, at first use) — this is how CI proves the
+//! sweep goldens are ISA-independent.
+//!
+//! # Determinism contract
+//!
+//! Vector kernels must be **bit-exact** against the scalar reference, so
+//! results never depend on which ISA path ran:
+//!
+//! * The quantizer and the pow2-width encode/decode kernels are pure
+//!   lanewise integer/bit math plus individually-rounded IEEE f32
+//!   add/sub/mul — lanewise identical to scalar by construction. No FMA
+//!   contraction is ever used (it would change the rounding).
+//! * Reductions cannot be vectorized without reassociating the sum, so
+//!   [`FitSums`] fixes a **virtual lane width** of [`FIT_LANES`] = 4
+//!   f64 accumulators: element `i` always lands in lane `i % 4`, and
+//!   [`FitSums::totals`] folds lanes in the fixed order
+//!   `(l0 + l1) + (l2 + l3)` — every level (and the plain [`FitSums::push`]
+//!   loop) performs the identical addition sequence.
+//!
+//! Bit-exactness across levels is property-tested in
+//! `rust/tests/omc_kernels.rs`; the sweep byte-determinism gate in CI
+//! additionally compares `OMC_FORCE_SCALAR=1` vs dispatched whole runs.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Resolved instruction-set level of a kernel table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// portable scalar fallback (reference semantics)
+    Scalar,
+    /// x86_64 baseline vectors (4-lane f32, 2-lane f64)
+    Sse2,
+    /// AVX2 (8-lane f32, 4-lane f64)
+    Avx2,
+}
+
+impl Level {
+    /// Short lowercase label for bench rows and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// `fn(values, exp_bits, mant_bits, out)` — lanewise quantization.
+pub type QuantizeFn = fn(&[f32], u32, u32, &mut [f32]);
+/// In-place variant of [`QuantizeFn`].
+pub type QuantizeInPlaceFn = fn(&mut [f32], u32, u32);
+/// `fn(s, b, xs, out)` — the PVT affine `out[i] = s * xs[i] + b`.
+pub type AxpbFn = fn(f32, f32, &[f32], &mut [f32]);
+/// In-place variant of [`AxpbFn`].
+pub type AxpbInPlaceFn = fn(f32, f32, &mut [f32]);
+/// Accumulate `(v, t)` pairs into a [`FitSums`] (virtual-lane order).
+pub type FitUpdateFn = fn(&mut FitSums, &[f32], &[f32]);
+/// `fn(values, e, m, out)` — encode whole 256-value blocks of an 8- or
+/// 16-bit-wide format straight to its byte image (codes are byte-lanes).
+pub type PackPow2Fn = fn(&[f32], u32, u32, &mut [u8]);
+/// `fn(bytes, e, m, quantum, map, out)` — decode whole blocks of an 8- or
+/// 16-bit-wide format, applying `map = Some((s, b))` as a fused affine
+/// (`None` preserves the decoded bits, including `-0.0`).
+pub type UnpackPow2Fn = fn(&[u8], u32, u32, f32, Option<(f32, f32)>, &mut [f32]);
+
+/// One resolved kernel table. Obtain the process-wide table with
+/// [`kernels`], or a specific level's table with [`kernels_for`].
+pub struct Kernels {
+    /// which ISA level this table implements
+    pub level: Level,
+    /// lanewise quantization (bit-exact vs `quantize_one_em`)
+    pub quantize: QuantizeFn,
+    /// in-place lanewise quantization
+    pub quantize_in_place: QuantizeInPlaceFn,
+    /// the PVT affine `s·x + b` (mul then add; never fused)
+    pub axpb: AxpbFn,
+    /// in-place PVT affine
+    pub axpb_in_place: AxpbInPlaceFn,
+    /// least-squares accumulator update (virtual-lane schedule)
+    pub fit_update: FitUpdateFn,
+    /// whole-block encode for 8/16-bit-wide formats (`None`: use the
+    /// generic word kernels)
+    pub pack_pow2: Option<PackPow2Fn>,
+    /// whole-block decode for 8/16-bit-wide formats
+    pub unpack_pow2: Option<UnpackPow2Fn>,
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+/// Bench/test override: 0 = none, otherwise a `Level` discriminant + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn env_forces_scalar() -> bool {
+    match std::env::var("OMC_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+fn resolve() -> &'static Kernels {
+    if env_forces_scalar() {
+        return &SCALAR;
+    }
+    detect()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> &'static Kernels {
+    if is_x86_feature_detected!("avx2") {
+        &x86::AVX2
+    } else {
+        &x86::SSE2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The process-wide kernel table: resolved once (honoring
+/// `OMC_FORCE_SCALAR=1`), then handed out by reference. One relaxed
+/// atomic load per call checks the bench-only [`force_level`] override.
+pub fn kernels() -> &'static Kernels {
+    static RESOLVED: OnceLock<&'static Kernels> = OnceLock::new();
+    let resolved = *RESOLVED.get_or_init(resolve);
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        2 => &x86::SSE2,
+        #[cfg(target_arch = "x86_64")]
+        3 => &x86::AVX2,
+        _ => resolved,
+    }
+}
+
+/// The table for a specific level, or `None` when this CPU cannot run it
+/// (tests iterate [`available_levels`] and compare every table against
+/// [`Level::Scalar`] bit for bit).
+pub fn kernels_for(level: Level) -> Option<&'static Kernels> {
+    match level {
+        Level::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => Some(&x86::SSE2),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => {
+            if is_x86_feature_detected!("avx2") {
+                Some(&x86::AVX2)
+            } else {
+                None
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => None,
+    }
+}
+
+/// Every level this CPU can execute (always includes `Scalar`).
+pub fn available_levels() -> Vec<Level> {
+    [Level::Scalar, Level::Sse2, Level::Avx2]
+        .into_iter()
+        .filter(|&l| kernels_for(l).is_some())
+        .collect()
+}
+
+/// Force [`kernels`] to a specific level (benches use this to emit
+/// scalar-vs-dispatched rows from one process). `None` restores the
+/// resolved table. Returns `false` (and changes nothing) when the level
+/// is not available on this CPU. Not for concurrent use: set it before
+/// spawning workers.
+pub fn force_level(level: Option<Level>) -> bool {
+    match level {
+        None => {
+            OVERRIDE.store(0, Ordering::Relaxed);
+            true
+        }
+        Some(l) => {
+            if kernels_for(l).is_none() {
+                return false;
+            }
+            let code = match l {
+                Level::Scalar => 1,
+                Level::Sse2 => 2,
+                Level::Avx2 => 3,
+            };
+            OVERRIDE.store(code, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference kernels
+// ---------------------------------------------------------------------------
+
+/// Quantize one f32 to the `S1E{e}M{m}` grid — the canonical scalar
+/// algorithm every vector kernel must match bit for bit (see
+/// `omc::quantize` for the paper-level contract): round-to-nearest-even
+/// on the f32 encoding for the normal range, the exact additive trick
+/// `(|x| + C) − C` for the subnormal range, saturation to max finite.
+#[inline(always)]
+pub fn quantize_one_em(x: f32, e: u32, m: u32) -> f32 {
+    let u = x.to_bits();
+    let sign = u & 0x8000_0000;
+    let mag = u & 0x7FFF_FFFF;
+
+    let bexp = (mag >> 23) as i32;
+    let unb = bexp.max(1) - 127;
+    let bias_f = (1i32 << (e - 1)) - 1;
+    let min_normal_unb = 1 - bias_f;
+
+    let q = if unb < min_normal_unb {
+        // subnormal range: round to the uniform grid 2^(min_normal - m)
+        // via the exact additive trick (pure f32 IEEE RNE arithmetic,
+        // matching XLA's CPU semantics exactly)
+        let t_plus_150 = (min_normal_unb - m as i32 + 150) as u32;
+        let c = f32::from_bits((t_plus_150 << 23) | 0x0040_0000); // 1.5*2^(t+23)
+        let absx = f32::from_bits(mag);
+        ((absx + c) - c).to_bits()
+    } else {
+        // normal range: RNE at (23 - m) encoding bits
+        let shift = 23 - m;
+        if shift == 0 {
+            mag
+        } else {
+            let half = 1u32 << (shift - 1);
+            let lsb = (mag >> shift) & 1;
+            ((mag.wrapping_add(half - 1 + lsb)) >> shift) << shift
+        }
+    };
+
+    // saturate to max finite (also inf/NaN and RNE carry past the top)
+    let max_bexp = (bias_f + 127) as u32;
+    let frac = ((1u32 << m) - 1) << (23 - m);
+    let max_mag = (max_bexp << 23) | frac;
+    f32::from_bits(sign | q.min(max_mag))
+}
+
+fn quantize_scalar(xs: &[f32], e: u32, m: u32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = quantize_one_em(x, e, m);
+    }
+}
+
+fn quantize_in_place_scalar(xs: &mut [f32], e: u32, m: u32) {
+    for x in xs.iter_mut() {
+        *x = quantize_one_em(*x, e, m);
+    }
+}
+
+fn axpb_scalar(s: f32, b: f32, xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = s * x + b;
+    }
+}
+
+fn axpb_in_place_scalar(s: f32, b: f32, xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = s * *x + b;
+    }
+}
+
+fn fit_update_scalar(acc: &mut FitSums, v: &[f32], t: &[f32]) {
+    debug_assert_eq!(v.len(), t.len());
+    for (&a, &b) in v.iter().zip(t) {
+        acc.push(a, b);
+    }
+}
+
+static SCALAR: Kernels = Kernels {
+    level: Level::Scalar,
+    quantize: quantize_scalar,
+    quantize_in_place: quantize_in_place_scalar,
+    axpb: axpb_scalar,
+    axpb_in_place: axpb_in_place_scalar,
+    fit_update: fit_update_scalar,
+    pack_pow2: None,
+    unpack_pow2: None,
+};
+
+// ---------------------------------------------------------------------------
+// virtual-lane least-squares sums
+// ---------------------------------------------------------------------------
+
+/// Virtual lane width of [`FitSums`]: 4 f64 lanes (one AVX2 `ymm`; two
+/// SSE2 `xmm`; a 4-element array in scalar code). Fixed so the
+/// accumulation schedule — and therefore every bit of the result — is
+/// identical on every ISA path.
+pub const FIT_LANES: usize = 4;
+
+/// Lane-split f64 sums for the PVT least-squares fit. Element `i` of the
+/// stream always lands in lane `i % FIT_LANES`; [`FitSums::totals`]
+/// folds the lanes in a fixed pairwise order. `omc::transform::FitAcc`
+/// wraps this with the closed-form solve.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FitSums {
+    n: usize,
+    v: [f64; FIT_LANES],
+    t: [f64; FIT_LANES],
+    tt: [f64; FIT_LANES],
+    vt: [f64; FIT_LANES],
+}
+
+impl FitSums {
+    /// Empty sums (zero pairs seen).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of pairs accumulated so far.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Accumulate one `(original, quantized)` pair into lane
+    /// `len() % FIT_LANES` — the scalar reference schedule.
+    #[inline]
+    pub fn push(&mut self, v: f32, t: f32) {
+        let lane = self.n % FIT_LANES;
+        let a = v as f64;
+        let b = t as f64;
+        self.v[lane] += a;
+        self.t[lane] += b;
+        self.tt[lane] += b * b;
+        self.vt[lane] += a * b;
+        self.n += 1;
+    }
+
+    /// Accumulate a batch through the dispatched kernel (identical lane
+    /// schedule as element-by-element [`FitSums::push`]).
+    pub fn update(&mut self, v: &[f32], t: &[f32]) {
+        assert_eq!(v.len(), t.len());
+        (kernels().fit_update)(self, v, t);
+    }
+
+    /// Folded totals `(n, Σv, Σt, Σt², Σvt)`. The fold order is fixed —
+    /// `(l0 + l1) + (l2 + l3)` per sum — so the totals are a pure
+    /// function of the input stream, never of the ISA path.
+    pub fn totals(&self) -> (usize, f64, f64, f64, f64) {
+        let fold = |s: &[f64; FIT_LANES]| (s[0] + s[1]) + (s[2] + s[3]);
+        (self.n, fold(&self.v), fold(&self.t), fold(&self.tt), fold(&self.vt))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 vector kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! SSE2 + AVX2 implementations. Safety pattern: the `unsafe`
+    //! target-feature inner functions are only reachable through the
+    //! tables below, and the AVX2 table is only handed out after
+    //! `is_x86_feature_detected!("avx2")` succeeded (SSE2 is part of the
+    //! x86_64 base ISA, so its intrinsics are always safe to issue).
+
+    use std::arch::x86_64::*;
+
+    use super::{
+        quantize_in_place_scalar, quantize_one_em, quantize_scalar, FitSums,
+        Kernels, Level, FIT_LANES,
+    };
+
+    pub(super) static SSE2: Kernels = Kernels {
+        level: Level::Sse2,
+        quantize: quantize_sse2,
+        quantize_in_place: quantize_in_place_sse2,
+        axpb: axpb_sse2,
+        axpb_in_place: axpb_in_place_sse2,
+        fit_update: fit_update_sse2,
+        pack_pow2: None,
+        unpack_pow2: None,
+    };
+
+    pub(super) static AVX2: Kernels = Kernels {
+        level: Level::Avx2,
+        quantize: quantize_avx2,
+        quantize_in_place: quantize_in_place_avx2,
+        axpb: axpb_avx2,
+        axpb_in_place: axpb_in_place_avx2,
+        fit_update: fit_update_avx2,
+        pack_pow2: Some(pack_pow2_avx2),
+        unpack_pow2: Some(unpack_pow2_avx2),
+    };
+
+    // -- sse2 helpers (emulating the SSE4.1/AVX2-only lane ops) ------------
+
+    /// `mask ? b : a` with full-lane masks.
+    #[inline(always)]
+    unsafe fn blend_sse2(a: __m128i, b: __m128i, mask: __m128i) -> __m128i {
+        _mm_or_si128(_mm_and_si128(mask, b), _mm_andnot_si128(mask, a))
+    }
+
+    /// Lanewise signed 32-bit max (SSE4.1's `pmaxsd`, emulated).
+    #[inline(always)]
+    unsafe fn max_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
+        let gt = _mm_cmpgt_epi32(a, b);
+        blend_sse2(b, a, gt)
+    }
+
+    /// Lanewise unsigned 32-bit min via the sign-bias trick (the rounded
+    /// magnitude can exceed `i32::MAX` for NaN-payload inputs, so the
+    /// compare must be unsigned, exactly like the scalar `u32::min`).
+    #[inline(always)]
+    unsafe fn min_epu32_sse2(a: __m128i, b: __m128i) -> __m128i {
+        let bias = _mm_set1_epi32(i32::MIN);
+        let gt = _mm_cmpgt_epi32(_mm_xor_si128(a, bias), _mm_xor_si128(b, bias));
+        blend_sse2(a, b, gt)
+    }
+
+    // -- quantize ----------------------------------------------------------
+
+    fn quantize_sse2(xs: &[f32], e: u32, m: u32, out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        if m >= 23 {
+            // no vector path for full-width mantissas (`shift == 0`);
+            // delegate so every level stays bit-exact, including the
+            // scalar path's non-finite saturation
+            return quantize_scalar(xs, e, m, out);
+        }
+        unsafe { quantize_sse2_raw(xs.as_ptr(), out.as_mut_ptr(), xs.len(), e, m) }
+    }
+
+    fn quantize_in_place_sse2(xs: &mut [f32], e: u32, m: u32) {
+        if m >= 23 {
+            return quantize_in_place_scalar(xs, e, m);
+        }
+        // both pointers from one as_mut_ptr: a later shared-derived src
+        // would be invalidated by the mutable reborrow (aliasing-model UB)
+        let p = xs.as_mut_ptr();
+        unsafe { quantize_sse2_raw(p, p, xs.len(), e, m) }
+    }
+
+    /// Safety: SSE2 is part of the x86_64 base ISA; `src`/`dst` must each
+    /// be valid for `n` f32 reads/writes (they may alias exactly).
+    unsafe fn quantize_sse2_raw(src: *const f32, dst: *mut f32, n: usize, e: u32, m: u32) {
+        let shift = 23 - m;
+        let bias_f = (1i32 << (e - 1)) - 1;
+        let min_normal_unb = 1 - bias_f;
+        let t_plus_150 = (min_normal_unb - m as i32 + 150) as u32;
+        let max_bexp = (bias_f + 127) as u32;
+        let max_mag = (max_bexp << 23) | (((1u32 << m) - 1) << shift);
+
+        let vsign = _mm_set1_epi32(0x8000_0000u32 as i32);
+        let vmagm = _mm_set1_epi32(0x7FFF_FFFF);
+        let vone = _mm_set1_epi32(1);
+        let v127 = _mm_set1_epi32(127);
+        let vmn = _mm_set1_epi32(min_normal_unb);
+        let vc = _mm_set1_ps(f32::from_bits((t_plus_150 << 23) | 0x0040_0000));
+        let vhalf = _mm_set1_epi32((1i32 << (shift - 1)) - 1);
+        let vmax = _mm_set1_epi32(max_mag as i32);
+        let csh = _mm_cvtsi32_si128(shift as i32);
+        let c23 = _mm_cvtsi32_si128(23);
+
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let u = _mm_loadu_si128(src.add(i) as *const __m128i);
+            let sign = _mm_and_si128(u, vsign);
+            let mag = _mm_and_si128(u, vmagm);
+            let bexp = _mm_srl_epi32(mag, c23);
+            let unb = _mm_sub_epi32(max_epi32_sse2(bexp, vone), v127);
+            let absx = _mm_castsi128_ps(mag);
+            let qsub = _mm_castps_si128(_mm_sub_ps(_mm_add_ps(absx, vc), vc));
+            let lsb = _mm_and_si128(_mm_srl_epi32(mag, csh), vone);
+            let bump = _mm_add_epi32(_mm_add_epi32(mag, vhalf), lsb);
+            let qnorm = _mm_sll_epi32(_mm_srl_epi32(bump, csh), csh);
+            let is_sub = _mm_cmpgt_epi32(vmn, unb);
+            let q = min_epu32_sse2(blend_sse2(qnorm, qsub, is_sub), vmax);
+            _mm_storeu_si128(dst.add(i) as *mut __m128i, _mm_or_si128(sign, q));
+            i += 4;
+        }
+        while i < n {
+            *dst.add(i) = quantize_one_em(*src.add(i), e, m);
+            i += 1;
+        }
+    }
+
+    fn quantize_avx2(xs: &[f32], e: u32, m: u32, out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        if m >= 23 {
+            return quantize_scalar(xs, e, m, out);
+        }
+        unsafe { quantize_avx2_raw(xs.as_ptr(), out.as_mut_ptr(), xs.len(), e, m) }
+    }
+
+    fn quantize_in_place_avx2(xs: &mut [f32], e: u32, m: u32) {
+        if m >= 23 {
+            return quantize_in_place_scalar(xs, e, m);
+        }
+        let p = xs.as_mut_ptr();
+        unsafe { quantize_avx2_raw(p, p, xs.len(), e, m) }
+    }
+
+    /// Safety: caller proved AVX2 (table gating); `src`/`dst` must each
+    /// be valid for `n` f32 reads/writes (they may alias exactly).
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_avx2_raw(src: *const f32, dst: *mut f32, n: usize, e: u32, m: u32) {
+        let shift = 23 - m;
+        let bias_f = (1i32 << (e - 1)) - 1;
+        let min_normal_unb = 1 - bias_f;
+        let t_plus_150 = (min_normal_unb - m as i32 + 150) as u32;
+        let max_bexp = (bias_f + 127) as u32;
+        let max_mag = (max_bexp << 23) | (((1u32 << m) - 1) << shift);
+
+        let vsign = _mm256_set1_epi32(0x8000_0000u32 as i32);
+        let vmagm = _mm256_set1_epi32(0x7FFF_FFFF);
+        let vone = _mm256_set1_epi32(1);
+        let v127 = _mm256_set1_epi32(127);
+        let vmn = _mm256_set1_epi32(min_normal_unb);
+        let vc = _mm256_set1_ps(f32::from_bits((t_plus_150 << 23) | 0x0040_0000));
+        let vhalf = _mm256_set1_epi32((1i32 << (shift - 1)) - 1);
+        let vmax = _mm256_set1_epi32(max_mag as i32);
+        let csh = _mm_cvtsi32_si128(shift as i32);
+        let c23 = _mm_cvtsi32_si128(23);
+
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let u = _mm256_loadu_si256(src.add(i) as *const __m256i);
+            let sign = _mm256_and_si256(u, vsign);
+            let mag = _mm256_and_si256(u, vmagm);
+            let bexp = _mm256_srl_epi32(mag, c23);
+            let unb = _mm256_sub_epi32(_mm256_max_epi32(bexp, vone), v127);
+            let absx = _mm256_castsi256_ps(mag);
+            let qsub = _mm256_castps_si256(_mm256_sub_ps(_mm256_add_ps(absx, vc), vc));
+            let lsb = _mm256_and_si256(_mm256_srl_epi32(mag, csh), vone);
+            let bump = _mm256_add_epi32(_mm256_add_epi32(mag, vhalf), lsb);
+            let qnorm = _mm256_sll_epi32(_mm256_srl_epi32(bump, csh), csh);
+            let is_sub = _mm256_cmpgt_epi32(vmn, unb);
+            let q = _mm256_min_epu32(_mm256_blendv_epi8(qnorm, qsub, is_sub), vmax);
+            _mm256_storeu_si256(dst.add(i) as *mut __m256i, _mm256_or_si256(sign, q));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) = quantize_one_em(*src.add(i), e, m);
+            i += 1;
+        }
+    }
+
+    // -- affine ------------------------------------------------------------
+
+    fn axpb_sse2(s: f32, b: f32, xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        unsafe {
+            let vs = _mm_set1_ps(s);
+            let vb = _mm_set1_ps(b);
+            let n = xs.len();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let x = _mm_loadu_ps(xs.as_ptr().add(i));
+                let y = _mm_add_ps(_mm_mul_ps(x, vs), vb);
+                _mm_storeu_ps(out.as_mut_ptr().add(i), y);
+                i += 4;
+            }
+            while i < n {
+                *out.get_unchecked_mut(i) = s * *xs.get_unchecked(i) + b;
+                i += 1;
+            }
+        }
+    }
+
+    fn axpb_in_place_sse2(s: f32, b: f32, xs: &mut [f32]) {
+        unsafe {
+            let vs = _mm_set1_ps(s);
+            let vb = _mm_set1_ps(b);
+            let n = xs.len();
+            let p = xs.as_mut_ptr();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let x = _mm_loadu_ps(p.add(i));
+                _mm_storeu_ps(p.add(i), _mm_add_ps(_mm_mul_ps(x, vs), vb));
+                i += 4;
+            }
+            while i < n {
+                *p.add(i) = s * *p.add(i) + b;
+                i += 1;
+            }
+        }
+    }
+
+    fn axpb_avx2(s: f32, b: f32, xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        unsafe { axpb_avx2_raw(s, b, xs.as_ptr(), out.as_mut_ptr(), xs.len()) }
+    }
+
+    fn axpb_in_place_avx2(s: f32, b: f32, xs: &mut [f32]) {
+        let p = xs.as_mut_ptr();
+        unsafe { axpb_avx2_raw(s, b, p, p, xs.len()) }
+    }
+
+    /// Safety: caller proved AVX2; `src`/`dst` valid for `n` f32s (may
+    /// alias exactly). Mul-then-add per lane — never FMA-fused, matching
+    /// scalar `s * x + b` rounding.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpb_avx2_raw(s: f32, b: f32, src: *const f32, dst: *mut f32, n: usize) {
+        let vs = _mm256_set1_ps(s);
+        let vb = _mm256_set1_ps(b);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(src.add(i));
+            _mm256_storeu_ps(dst.add(i), _mm256_add_ps(_mm256_mul_ps(x, vs), vb));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) = s * *src.add(i) + b;
+            i += 1;
+        }
+    }
+
+    // -- fit update --------------------------------------------------------
+
+    fn fit_update_sse2(acc: &mut FitSums, v: &[f32], t: &[f32]) {
+        debug_assert_eq!(v.len(), t.len());
+        let n = v.len();
+        let mut i = 0usize;
+        while acc.n % FIT_LANES != 0 && i < n {
+            acc.push(v[i], t[i]);
+            i += 1;
+        }
+        let vec_n = (n - i) / FIT_LANES * FIT_LANES;
+        if vec_n > 0 {
+            unsafe {
+                // two f64 lane pairs per sum: lanes {0,1} and {2,3}
+                let mut sv0 = _mm_loadu_pd(acc.v.as_ptr());
+                let mut sv1 = _mm_loadu_pd(acc.v.as_ptr().add(2));
+                let mut st0 = _mm_loadu_pd(acc.t.as_ptr());
+                let mut st1 = _mm_loadu_pd(acc.t.as_ptr().add(2));
+                let mut stt0 = _mm_loadu_pd(acc.tt.as_ptr());
+                let mut stt1 = _mm_loadu_pd(acc.tt.as_ptr().add(2));
+                let mut svt0 = _mm_loadu_pd(acc.vt.as_ptr());
+                let mut svt1 = _mm_loadu_pd(acc.vt.as_ptr().add(2));
+                let mut k = i;
+                let end = i + vec_n;
+                while k < end {
+                    // 8-byte loads: 2 f32 -> 2 f64, no over-read at the tail
+                    let a0 = _mm_cvtps_pd(_mm_castsi128_ps(_mm_loadl_epi64(
+                        v.as_ptr().add(k) as *const __m128i,
+                    )));
+                    let a1 = _mm_cvtps_pd(_mm_castsi128_ps(_mm_loadl_epi64(
+                        v.as_ptr().add(k + 2) as *const __m128i,
+                    )));
+                    let b0 = _mm_cvtps_pd(_mm_castsi128_ps(_mm_loadl_epi64(
+                        t.as_ptr().add(k) as *const __m128i,
+                    )));
+                    let b1 = _mm_cvtps_pd(_mm_castsi128_ps(_mm_loadl_epi64(
+                        t.as_ptr().add(k + 2) as *const __m128i,
+                    )));
+                    sv0 = _mm_add_pd(sv0, a0);
+                    sv1 = _mm_add_pd(sv1, a1);
+                    st0 = _mm_add_pd(st0, b0);
+                    st1 = _mm_add_pd(st1, b1);
+                    stt0 = _mm_add_pd(stt0, _mm_mul_pd(b0, b0));
+                    stt1 = _mm_add_pd(stt1, _mm_mul_pd(b1, b1));
+                    svt0 = _mm_add_pd(svt0, _mm_mul_pd(a0, b0));
+                    svt1 = _mm_add_pd(svt1, _mm_mul_pd(a1, b1));
+                    k += 4;
+                }
+                _mm_storeu_pd(acc.v.as_mut_ptr(), sv0);
+                _mm_storeu_pd(acc.v.as_mut_ptr().add(2), sv1);
+                _mm_storeu_pd(acc.t.as_mut_ptr(), st0);
+                _mm_storeu_pd(acc.t.as_mut_ptr().add(2), st1);
+                _mm_storeu_pd(acc.tt.as_mut_ptr(), stt0);
+                _mm_storeu_pd(acc.tt.as_mut_ptr().add(2), stt1);
+                _mm_storeu_pd(acc.vt.as_mut_ptr(), svt0);
+                _mm_storeu_pd(acc.vt.as_mut_ptr().add(2), svt1);
+            }
+            acc.n += vec_n;
+            i += vec_n;
+        }
+        while i < n {
+            acc.push(v[i], t[i]);
+            i += 1;
+        }
+    }
+
+    fn fit_update_avx2(acc: &mut FitSums, v: &[f32], t: &[f32]) {
+        debug_assert_eq!(v.len(), t.len());
+        unsafe { fit_update_avx2_inner(acc, v, t) }
+    }
+
+    /// Safety: caller proved AVX2 (table gating).
+    #[target_feature(enable = "avx2")]
+    unsafe fn fit_update_avx2_inner(acc: &mut FitSums, v: &[f32], t: &[f32]) {
+        let n = v.len();
+        let mut i = 0usize;
+        while acc.n % FIT_LANES != 0 && i < n {
+            acc.push(v[i], t[i]);
+            i += 1;
+        }
+        let vec_n = (n - i) / FIT_LANES * FIT_LANES;
+        if vec_n > 0 {
+            let mut sv = _mm256_loadu_pd(acc.v.as_ptr());
+            let mut st = _mm256_loadu_pd(acc.t.as_ptr());
+            let mut stt = _mm256_loadu_pd(acc.tt.as_ptr());
+            let mut svt = _mm256_loadu_pd(acc.vt.as_ptr());
+            let mut k = i;
+            let end = i + vec_n;
+            while k < end {
+                let a = _mm256_cvtps_pd(_mm_loadu_ps(v.as_ptr().add(k)));
+                let b = _mm256_cvtps_pd(_mm_loadu_ps(t.as_ptr().add(k)));
+                sv = _mm256_add_pd(sv, a);
+                st = _mm256_add_pd(st, b);
+                stt = _mm256_add_pd(stt, _mm256_mul_pd(b, b));
+                svt = _mm256_add_pd(svt, _mm256_mul_pd(a, b));
+                k += 4;
+            }
+            _mm256_storeu_pd(acc.v.as_mut_ptr(), sv);
+            _mm256_storeu_pd(acc.t.as_mut_ptr(), st);
+            _mm256_storeu_pd(acc.tt.as_mut_ptr(), stt);
+            _mm256_storeu_pd(acc.vt.as_mut_ptr(), svt);
+            acc.n += vec_n;
+            i += vec_n;
+        }
+        while i < n {
+            acc.push(v[i], t[i]);
+            i += 1;
+        }
+    }
+
+    // -- pow2-width block encode/decode -------------------------------------
+
+    /// Broadcast constants for the lanewise `SxEyMz` encoder. Only valid
+    /// for `e` in `2..8` (the dispatcher guarantees it): then no
+    /// representable value is an f32 subnormal, `1/quantum` is a normal
+    /// f32, and every target-subnormal value — including the saturation
+    /// value — lies exactly on the `quantum` grid, so the subnormal
+    /// integer `k` is exactly `|x| * (1/quantum)` (an exact product,
+    /// converted by `cvtps` on an exact integer). `e = 1` breaks the
+    /// grid-alignment premise: its saturation value `2 − 2^−m` is not a
+    /// quantum multiple, so those formats stay on the word kernels.
+    struct EncConsts {
+        vsignm: __m256i,
+        vmagm: __m256i,
+        vfracm: __m256i,
+        v127: __m256i,
+        vbias: __m256i,
+        vmn: __m256i,
+        vinvq: __m256,
+        c_sign: __m128i,
+        c_mant: __m128i,
+        c_m: __m128i,
+        c23: __m128i,
+    }
+
+    #[inline(always)]
+    unsafe fn enc_consts(e: u32, m: u32) -> EncConsts {
+        let bias_f = (1i32 << (e - 1)) - 1;
+        let min_normal_unb = 1 - bias_f;
+        // 2^(m - min_normal) = 1/quantum; exponent m + bias - 1 <= 127
+        // for every e < 8 format of width 8 or 16
+        let invq_bits = ((m as i32 + bias_f - 1 + 127) as u32) << 23;
+        EncConsts {
+            vsignm: _mm256_set1_epi32(0x8000_0000u32 as i32),
+            vmagm: _mm256_set1_epi32(0x7FFF_FFFF),
+            vfracm: _mm256_set1_epi32(0x007F_FFFF),
+            v127: _mm256_set1_epi32(127),
+            vbias: _mm256_set1_epi32(bias_f),
+            vmn: _mm256_set1_epi32(min_normal_unb),
+            vinvq: _mm256_set1_ps(f32::from_bits(invq_bits)),
+            c_sign: _mm_cvtsi32_si128((31 - (e + m)) as i32),
+            c_mant: _mm_cvtsi32_si128((23 - m) as i32),
+            c_m: _mm_cvtsi32_si128(m as i32),
+            c23: _mm_cvtsi32_si128(23),
+        }
+    }
+
+    /// Encode 8 representable f32s to their `(1+e+m)`-bit codes.
+    #[inline(always)]
+    unsafe fn encode8_avx2(u: __m256i, c: &EncConsts) -> __m256i {
+        let sign_c = _mm256_srl_epi32(_mm256_and_si256(u, c.vsignm), c.c_sign);
+        let mag = _mm256_and_si256(u, c.vmagm);
+        let bexp = _mm256_srl_epi32(mag, c.c23);
+        let unb = _mm256_sub_epi32(bexp, c.v127);
+        // normal in the target: field = unb + bias, mantissa = top m bits
+        let field = _mm256_add_epi32(unb, c.vbias);
+        let mant = _mm256_srl_epi32(_mm256_and_si256(mag, c.vfracm), c.c_mant);
+        let code_n = _mm256_or_si256(_mm256_sll_epi32(field, c.c_m), mant);
+        // subnormal (or zero): k = |x| / quantum, an exact small integer
+        let absx = _mm256_castsi256_ps(mag);
+        let k = _mm256_cvtps_epi32(_mm256_mul_ps(absx, c.vinvq));
+        let is_sub = _mm256_cmpgt_epi32(c.vmn, unb);
+        _mm256_or_si256(sign_c, _mm256_blendv_epi8(code_n, k, is_sub))
+    }
+
+    fn pack_pow2_avx2(values: &[f32], e: u32, m: u32, out: &mut [u8]) {
+        debug_assert!((2..8).contains(&e) && (e + m == 7 || e + m == 15));
+        debug_assert_eq!(values.len() % 256, 0);
+        debug_assert_eq!(out.len(), values.len() * (1 + e + m) as usize / 8);
+        unsafe {
+            if e + m == 15 {
+                pack16_avx2(values, e, m, out)
+            } else {
+                pack8_avx2(values, e, m, out)
+            }
+        }
+    }
+
+    /// Safety: caller proved AVX2; slices sized per `pack_pow2_avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn pack16_avx2(values: &[f32], e: u32, m: u32, out: &mut [u8]) {
+        let c = enc_consts(e, m);
+        let mut src = values.as_ptr();
+        let mut dst = out.as_mut_ptr();
+        for _ in 0..values.len() / 16 {
+            let a = encode8_avx2(_mm256_loadu_si256(src as *const __m256i), &c);
+            let b = encode8_avx2(_mm256_loadu_si256(src.add(8) as *const __m256i), &c);
+            // packus interleaves 128-bit halves: fix with a qword permute
+            let p = _mm256_packus_epi32(a, b);
+            let fixed = _mm256_permute4x64_epi64::<0b11011000>(p);
+            _mm256_storeu_si256(dst as *mut __m256i, fixed);
+            src = src.add(16);
+            dst = dst.add(32);
+        }
+    }
+
+    /// Safety: caller proved AVX2; slices sized per `pack_pow2_avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn pack8_avx2(values: &[f32], e: u32, m: u32, out: &mut [u8]) {
+        let c = enc_consts(e, m);
+        // the two packus stages leave the 32 bytes in dword groups
+        // [a0 b0 c0 d0 a1 b1 c1 d1]; this permutation restores stream order
+        let idx = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+        let mut src = values.as_ptr();
+        let mut dst = out.as_mut_ptr();
+        for _ in 0..values.len() / 32 {
+            let a = encode8_avx2(_mm256_loadu_si256(src as *const __m256i), &c);
+            let b = encode8_avx2(_mm256_loadu_si256(src.add(8) as *const __m256i), &c);
+            let cc = encode8_avx2(_mm256_loadu_si256(src.add(16) as *const __m256i), &c);
+            let d = encode8_avx2(_mm256_loadu_si256(src.add(24) as *const __m256i), &c);
+            let p = _mm256_packus_epi16(_mm256_packus_epi32(a, b), _mm256_packus_epi32(cc, d));
+            let fixed = _mm256_permutevar8x32_epi32(p, idx);
+            _mm256_storeu_si256(dst as *mut __m256i, fixed);
+            src = src.add(32);
+            dst = dst.add(32);
+        }
+    }
+
+    /// Broadcast constants for the lanewise decoder.
+    struct DecConsts {
+        vem: __m256i,
+        vmm: __m256i,
+        vzero: __m256i,
+        vrebias: __m256i,
+        vq: __m256,
+        c_m: __m128i,
+        c_em: __m128i,
+        c_shift: __m128i,
+        c23: __m128i,
+        c31: __m128i,
+    }
+
+    #[inline(always)]
+    unsafe fn dec_consts(e: u32, m: u32, quantum: f32) -> DecConsts {
+        let bias_f = (1i32 << (e - 1)) - 1;
+        DecConsts {
+            vem: _mm256_set1_epi32(((1u32 << e) - 1) as i32),
+            vmm: _mm256_set1_epi32(((1u32 << m) - 1) as i32),
+            vzero: _mm256_setzero_si256(),
+            vrebias: _mm256_set1_epi32(127 - bias_f),
+            vq: _mm256_set1_ps(quantum),
+            c_m: _mm_cvtsi32_si128(m as i32),
+            c_em: _mm_cvtsi32_si128((e + m) as i32),
+            c_shift: _mm_cvtsi32_si128((23 - m) as i32),
+            c23: _mm_cvtsi32_si128(23),
+            c31: _mm_cvtsi32_si128(31),
+        }
+    }
+
+    /// Decode 8 codes back to the exact f32 values.
+    #[inline(always)]
+    unsafe fn decode8_avx2(code: __m256i, c: &DecConsts) -> __m256 {
+        let field = _mm256_and_si256(_mm256_srl_epi32(code, c.c_m), c.vem);
+        let mant = _mm256_and_si256(code, c.vmm);
+        let signb = _mm256_sll_epi32(_mm256_srl_epi32(code, c.c_em), c.c31);
+        // zero/subnormal: mant * quantum, an exact product
+        let sub = _mm256_castps_si256(_mm256_mul_ps(_mm256_cvtepi32_ps(mant), c.vq));
+        // normal: rebuild the f32 encoding directly
+        let bexp = _mm256_add_epi32(field, c.vrebias);
+        let norm = _mm256_or_si256(
+            _mm256_sll_epi32(bexp, c.c23),
+            _mm256_sll_epi32(mant, c.c_shift),
+        );
+        let is_sub = _mm256_cmpeq_epi32(field, c.vzero);
+        let bits = _mm256_or_si256(signb, _mm256_blendv_epi8(norm, sub, is_sub));
+        _mm256_castsi256_ps(bits)
+    }
+
+    fn unpack_pow2_avx2(
+        bytes: &[u8],
+        e: u32,
+        m: u32,
+        quantum: f32,
+        map: Option<(f32, f32)>,
+        out: &mut [f32],
+    ) {
+        debug_assert!((2..8).contains(&e) && (e + m == 7 || e + m == 15));
+        debug_assert_eq!(out.len() % 256, 0);
+        debug_assert_eq!(bytes.len(), out.len() * (1 + e + m) as usize / 8);
+        unsafe {
+            if e + m == 15 {
+                unpack16_avx2(bytes, e, m, quantum, map, out)
+            } else {
+                unpack8_avx2(bytes, e, m, quantum, map, out)
+            }
+        }
+    }
+
+    /// Safety: caller proved AVX2; slices sized per `unpack_pow2_avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack16_avx2(
+        bytes: &[u8],
+        e: u32,
+        m: u32,
+        quantum: f32,
+        map: Option<(f32, f32)>,
+        out: &mut [f32],
+    ) {
+        let c = dec_consts(e, m, quantum);
+        let (vs, vb) = match map {
+            Some((s, b)) => (_mm256_set1_ps(s), _mm256_set1_ps(b)),
+            None => (_mm256_setzero_ps(), _mm256_setzero_ps()),
+        };
+        let mut src = bytes.as_ptr();
+        let mut dst = out.as_mut_ptr();
+        for _ in 0..out.len() / 16 {
+            let raw = _mm256_loadu_si256(src as *const __m256i);
+            let lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(raw));
+            let hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(raw));
+            let mut f0 = decode8_avx2(lo, &c);
+            let mut f1 = decode8_avx2(hi, &c);
+            if map.is_some() {
+                f0 = _mm256_add_ps(_mm256_mul_ps(f0, vs), vb);
+                f1 = _mm256_add_ps(_mm256_mul_ps(f1, vs), vb);
+            }
+            _mm256_storeu_ps(dst, f0);
+            _mm256_storeu_ps(dst.add(8), f1);
+            src = src.add(32);
+            dst = dst.add(16);
+        }
+    }
+
+    /// Safety: caller proved AVX2; slices sized per `unpack_pow2_avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack8_avx2(
+        bytes: &[u8],
+        e: u32,
+        m: u32,
+        quantum: f32,
+        map: Option<(f32, f32)>,
+        out: &mut [f32],
+    ) {
+        let c = dec_consts(e, m, quantum);
+        let (vs, vb) = match map {
+            Some((s, b)) => (_mm256_set1_ps(s), _mm256_set1_ps(b)),
+            None => (_mm256_setzero_ps(), _mm256_setzero_ps()),
+        };
+        let mut src = bytes.as_ptr();
+        let mut dst = out.as_mut_ptr();
+        for _ in 0..out.len() / 8 {
+            let codes = _mm256_cvtepu8_epi32(_mm_loadl_epi64(src as *const __m128i));
+            let mut f = decode8_avx2(codes, &c);
+            if map.is_some() {
+                f = _mm256_add_ps(_mm256_mul_ps(f, vs), vb);
+            }
+            _mm256_storeu_ps(dst, f);
+            src = src.add(8);
+            dst = dst.add(8);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn edge_values(g: &mut Gen, n: usize) -> Vec<f32> {
+        g.vec_edge_heavy(n)
+    }
+
+    #[test]
+    fn scalar_level_always_available() {
+        let levels = available_levels();
+        assert!(levels.contains(&Level::Scalar));
+        assert_eq!(kernels_for(Level::Scalar).unwrap().level, Level::Scalar);
+        // the resolved table is one of the available levels
+        assert!(levels.contains(&kernels().level));
+    }
+
+    #[test]
+    fn quantize_levels_match_scalar_bitwise() {
+        let mut g = Gen::new(31);
+        for level in available_levels() {
+            let k = kernels_for(level).unwrap();
+            // (8, 23) locks the full-width-mantissa delegation: every
+            // level must saturate non-finite inputs like the scalar path
+            for (e, m) in [(5, 10), (4, 14), (3, 7), (2, 3), (4, 3), (5, 2), (8, 23)] {
+                for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 100, 257] {
+                    let xs = edge_values(&mut g, n);
+                    let mut a = vec![0.0f32; n];
+                    let mut b = vec![0.0f32; n];
+                    quantize_scalar(&xs, e, m, &mut a);
+                    (k.quantize)(&xs, e, m, &mut b);
+                    let mut c = xs.clone();
+                    (k.quantize_in_place)(&mut c, e, m);
+                    for i in 0..n {
+                        assert_eq!(
+                            a[i].to_bits(),
+                            b[i].to_bits(),
+                            "{level:?} S1E{e}M{m} n={n} idx {i}"
+                        );
+                        assert_eq!(a[i].to_bits(), c[i].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpb_levels_match_scalar_bitwise() {
+        let mut g = Gen::new(33);
+        for level in available_levels() {
+            let k = kernels_for(level).unwrap();
+            for n in [0usize, 1, 5, 8, 13, 64, 129] {
+                let xs = edge_values(&mut g, n);
+                let (s, b) = (g.f32_normalish(1.0), g.f32_normalish(0.1));
+                let mut want = vec![0.0f32; n];
+                axpb_scalar(s, b, &xs, &mut want);
+                let mut got = vec![0.0f32; n];
+                (k.axpb)(s, b, &xs, &mut got);
+                let mut inp = xs.clone();
+                (k.axpb_in_place)(s, b, &mut inp);
+                for i in 0..n {
+                    assert_eq!(want[i].to_bits(), got[i].to_bits(), "{level:?} n={n}");
+                    assert_eq!(want[i].to_bits(), inp[i].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fit_sums_levels_and_phases_agree_bitwise() {
+        let mut g = Gen::new(35);
+        let v: Vec<f32> = (0..1000).map(|_| g.f32_normalish(0.05)).collect();
+        let t: Vec<f32> = (0..1000).map(|_| g.f32_normalish(0.05)).collect();
+        // reference: element-by-element push
+        let mut reference = FitSums::new();
+        for (&a, &b) in v.iter().zip(&t) {
+            reference.push(a, b);
+        }
+        for level in available_levels() {
+            let k = kernels_for(level).unwrap();
+            // deliberately misaligned chunking to exercise the phase logic
+            for chunk in [1usize, 2, 3, 4, 5, 7, 8, 64, 1000] {
+                let mut acc = FitSums::new();
+                for (cv, ct) in v.chunks(chunk).zip(t.chunks(chunk)) {
+                    (k.fit_update)(&mut acc, cv, ct);
+                }
+                let (n0, a0, b0, c0, d0) = reference.totals();
+                let (n1, a1, b1, c1, d1) = acc.totals();
+                assert_eq!(n0, n1);
+                assert_eq!(a0.to_bits(), a1.to_bits(), "{level:?} chunk={chunk}");
+                assert_eq!(b0.to_bits(), b1.to_bits(), "{level:?} chunk={chunk}");
+                assert_eq!(c0.to_bits(), c1.to_bits(), "{level:?} chunk={chunk}");
+                assert_eq!(d0.to_bits(), d1.to_bits(), "{level:?} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn force_level_overrides_and_restores() {
+        let resolved = kernels().level;
+        assert!(force_level(Some(Level::Scalar)));
+        assert_eq!(kernels().level, Level::Scalar);
+        assert!(force_level(None));
+        assert_eq!(kernels().level, resolved);
+        // an unavailable level is rejected without changing the dispatch
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            assert!(!force_level(Some(Level::Avx2)));
+            assert_eq!(kernels().level, resolved);
+        }
+    }
+
+    #[test]
+    fn quantize_one_em_basics() {
+        // ties round to even at S1E4M2 (mirrors omc::quantize's tests)
+        assert_eq!(quantize_one_em(1.125, 4, 2), 1.0);
+        assert_eq!(quantize_one_em(1.375, 4, 2), 1.5);
+        // signed zeros survive
+        assert_eq!(quantize_one_em(0.0, 3, 7).to_bits(), 0.0f32.to_bits());
+        assert_eq!(quantize_one_em(-0.0, 3, 7).to_bits(), (-0.0f32).to_bits());
+    }
+}

@@ -13,14 +13,16 @@ use omc_fl::omc::pack::{
     unpack_scalar, unpack_transform, unpack_transform_into,
     unpack_transform_into_threaded, BLOCK,
 };
-use omc_fl::omc::quantize::{quantize_one, quantize_vec};
-use omc_fl::omc::transform::{fit, Pvt};
+use omc_fl::omc::quantize::{quantize_one, quantize_slice_scalar, quantize_vec};
+use omc_fl::omc::transform::{fit, FitAcc, Pvt};
 use omc_fl::testkit::{check, Gen};
+use omc_fl::util::simd;
 
-/// The paper's table formats (monomorphized fast paths) plus two formats
-/// that exercise the generic-width kernel.
-const FORMATS: [&str; 6] = [
-    "S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3", "S1E3M9", "S1E5M7",
+/// The paper's table formats (SIMD byte-lane / monomorphized fast paths)
+/// plus `S1E4M3` (the 8-bit byte-lane path) and two formats that
+/// exercise the generic-width kernel.
+const FORMATS: [&str; 7] = [
+    "S1E5M10", "S1E4M14", "S1E3M7", "S1E2M3", "S1E4M3", "S1E3M9", "S1E5M7",
 ];
 
 /// Lengths straddling every dispatch boundary: empty, scalar-only tails,
@@ -54,7 +56,10 @@ fn edge_heavy_values(g: &mut Gen, n: usize, fmt: FloatFormat) -> Vec<f32> {
             4 => 1e30,  // saturates to +max
             5 => -1e30, // saturates to -max
             6 => max,
-            _ => g.f32_normalish([1e-6, 0.05, 1.0, 1e3][g.usize_below(4)]),
+            _ => {
+                let scale = [1e-6, 0.05, 1.0, 1e3][g.usize_below(4)];
+                g.f32_normalish(scale)
+            }
         };
         v.push(x);
     }
@@ -113,7 +118,8 @@ fn fused_compress_matches_separate_passes_property() {
         let n = g.usize_below(3 * BLOCK + 2);
         let use_pvt = g.usize_below(2) == 0;
         // raw (unquantized) inputs — the fused pipeline quantizes itself
-        let mut v = g.vec_normal(n, [1e-7f32, 0.05, 1.0, 1e5][g.usize_below(4)]);
+        let scale = [1e-7f32, 0.05, 1.0, 1e5][g.usize_below(4)];
+        let mut v = g.vec_normal(n, scale);
         if n > 2 {
             v[0] = f32::INFINITY; // saturates
             v[1] = -0.0;
@@ -143,10 +149,8 @@ fn fused_decompress_matches_separate_passes_property() {
         let fmt: FloatFormat =
             FORMATS[g.usize_below(FORMATS.len())].parse().unwrap();
         let n = g.usize_below(3 * BLOCK + 2);
-        let v = quantize_vec(
-            &g.vec_normal(n, [1e-6f32, 0.05, 1e3][g.usize_below(3)]),
-            fmt,
-        );
+        let scale = [1e-6f32, 0.05, 1e3][g.usize_below(3)];
+        let v = quantize_vec(&g.vec_normal(n, scale), fmt);
         let bytes = pack_scalar(&v, fmt).map_err(|e| e.to_string())?;
         let (s, b) = if g.usize_below(3) == 0 {
             (1.0, 0.0) // identity fast path (must preserve -0.0 bits)
@@ -199,6 +203,150 @@ fn threaded_kernels_match_serial_property() {
         }
         Ok(())
     });
+}
+
+/// Lengths spanning every SIMD dispatch boundary: tails mod the 256-value
+/// block and mod the 8-wide (and 4-wide) vector lane count.
+const SIMD_LENGTHS: [usize; 12] = [
+    0,
+    1,
+    3,
+    4,
+    7,
+    8,
+    9,
+    15,
+    17,
+    BLOCK - 1,
+    BLOCK,
+    2 * BLOCK + 13,
+];
+
+#[test]
+fn simd_quantize_levels_match_scalar_for_all_formats_and_tails() {
+    let mut g = Gen::new(201);
+    for level in simd::available_levels() {
+        let k = simd::kernels_for(level).unwrap();
+        for fmt_s in FORMATS {
+            let fmt: FloatFormat = fmt_s.parse().unwrap();
+            for n in SIMD_LENGTHS {
+                let xs = g.vec_edge_heavy(n);
+                let mut want = vec![0.0f32; n];
+                quantize_slice_scalar(&xs, fmt, &mut want);
+                let mut got = vec![0.0f32; n];
+                (k.quantize)(&xs, fmt.exp_bits, fmt.mant_bits, &mut got);
+                let mut inp = xs.clone();
+                (k.quantize_in_place)(&mut inp, fmt.exp_bits, fmt.mant_bits);
+                for i in 0..n {
+                    assert_eq!(
+                        want[i].to_bits(),
+                        got[i].to_bits(),
+                        "{level:?} {fmt_s} n={n} idx {i} x={:e}",
+                        xs[i]
+                    );
+                    assert_eq!(want[i].to_bits(), inp[i].to_bits());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_affine_levels_match_scalar_for_all_tails() {
+    let mut g = Gen::new(202);
+    for level in simd::available_levels() {
+        let k = simd::kernels_for(level).unwrap();
+        for n in SIMD_LENGTHS {
+            let xs = g.vec_edge_heavy(n);
+            let (s, b) = (g.f32_normalish(1.0), g.f32_normalish(0.1));
+            let want: Vec<f32> = xs.iter().map(|&x| s * x + b).collect();
+            let mut got = vec![0.0f32; n];
+            (k.axpb)(s, b, &xs, &mut got);
+            let mut inp = xs.clone();
+            (k.axpb_in_place)(s, b, &mut inp);
+            for i in 0..n {
+                assert_eq!(want[i].to_bits(), got[i].to_bits(), "{level:?} n={n}");
+                assert_eq!(want[i].to_bits(), inp[i].to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_pack_unpack_levels_match_scalar_for_byte_lane_formats() {
+    // the pow2-width (8/16-bit) whole-block kernels vs the scalar
+    // bitstream reference: payload bytes and decoded bits must agree,
+    // with and without the fused affine
+    let mut g = Gen::new(203);
+    for level in simd::available_levels() {
+        let k = simd::kernels_for(level).unwrap();
+        let (Some(pack_k), Some(unpack_k)) = (k.pack_pow2, k.unpack_pow2) else {
+            continue; // level has no byte-lane kernels (scalar / sse2)
+        };
+        for fmt_s in ["S1E5M10", "S1E4M3", "S1E2M5"] {
+            let fmt: FloatFormat = fmt_s.parse().unwrap();
+            for blocks in [1usize, 2, 5] {
+                let n = blocks * BLOCK;
+                let v = edge_heavy_values(&mut g, n, fmt);
+                let want = pack_scalar(&v, fmt).unwrap();
+                let mut got = vec![0u8; fmt.packed_bytes(n)];
+                pack_k(&v, fmt.exp_bits, fmt.mant_bits, &mut got);
+                assert_eq!(want, got, "{level:?} {fmt_s} blocks={blocks}: pack");
+
+                let quantum = fmt.min_positive() as f32;
+                for map in [None, Some((1.25f32, -0.5f32))] {
+                    let mut dec = vec![0.0f32; n];
+                    unpack_k(&want, fmt.exp_bits, fmt.mant_bits, quantum, map, &mut dec);
+                    let reference = unpack_scalar(&want, n, fmt);
+                    for i in 0..n {
+                        let r = match map {
+                            None => reference[i],
+                            Some((s, b)) => s * reference[i] + b,
+                        };
+                        assert_eq!(
+                            r.to_bits(),
+                            dec[i].to_bits(),
+                            "{level:?} {fmt_s} map={map:?} idx {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fit_acc_is_identical_under_forced_scalar_and_dispatched_paths() {
+    // the FitAcc determinism contract: the fixed virtual-lane schedule
+    // makes the PVT scalars a pure function of the stream, not the ISA
+    let mut g = Gen::new(204);
+    let v = g.vec_normal(4 * BLOCK + 77, 0.05);
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let vt = quantize_vec(&v, fmt);
+
+    let scalar_k = simd::kernels_for(simd::Level::Scalar).unwrap();
+    let mut scalar_acc = FitAcc::new();
+    for (cv, ct) in v.chunks(100).zip(vt.chunks(100)) {
+        // odd chunking (100 % 4 != 0) exercises the lane phase logic
+        scalar_acc.update_with(scalar_k, cv, ct);
+    }
+    let scalar_pvt = scalar_acc.finish();
+
+    for level in simd::available_levels() {
+        let k = simd::kernels_for(level).unwrap();
+        let mut acc = FitAcc::new();
+        for (cv, ct) in v.chunks(100).zip(vt.chunks(100)) {
+            acc.update_with(k, cv, ct);
+        }
+        let pvt = acc.finish();
+        assert_eq!(scalar_pvt.s.to_bits(), pvt.s.to_bits(), "{level:?}");
+        assert_eq!(scalar_pvt.b.to_bits(), pvt.b.to_bits(), "{level:?}");
+    }
+
+    // and the dispatched public path agrees with the forced-scalar one
+    let dispatched = fit(&v, &vt);
+    assert_eq!(scalar_pvt.s.to_bits(), dispatched.s.to_bits());
+    assert_eq!(scalar_pvt.b.to_bits(), dispatched.b.to_bits());
 }
 
 #[test]

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Capture a full bench baseline: run every suite with OMC_BENCH_JSON
+# pointed at benches/baselines/, so scripts/bench_trend.py has committed
+# numbers to diff against. Run on a quiet machine (ideally the CI runner
+# class), then commit the BENCH_*.json files.
+#
+# Usage:
+#   scripts/bench_capture.sh            # full budgets (~minutes)
+#   OMC_BENCH_FAST=1 scripts/bench_capture.sh   # smoke budgets
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+dest="benches/baselines"
+mkdir -p "$dest"
+
+benches=(bench_pack bench_quantize bench_transform bench_codec
+         bench_round bench_sweep bench_native)
+
+for b in "${benches[@]}"; do
+  echo "== $b"
+  OMC_BENCH_JSON="$dest" cargo bench --bench "$b"
+done
+
+echo "captured $(ls "$dest"/BENCH_*.json | wc -l) baseline file(s) in $dest/"
+echo "review + commit them, then scripts/bench_trend.py diffs future runs"
