@@ -1,0 +1,161 @@
+//! Async round-engine throughput: commits/sec sequential vs pooled, a
+//! sync-rounds comparison row, and the snapshot-ring memory/compression
+//! row. Runs entirely on the native backend (`native:tiny`), so it needs
+//! no artifacts and no `pjrt` feature — this bench can never silently
+//! self-skip.
+//!
+//! The pooled row measures the wave-training parallelism only: the async
+//! engine folds every commit centrally in plan order, so pooled and
+//! sequential runs produce *byte-identical* committed models — asserted
+//! here on every iteration, making the bench double as a determinism
+//! smoke (the same property the CI `async-determinism` leg gates).
+
+use std::path::Path;
+
+use omc_fl::benchkit::Suite;
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::Experiment;
+use omc_fl::fl::async_round::{self, AsyncConfig, StalenessPolicy};
+use omc_fl::omc::selection::SelectionPolicy;
+use omc_fl::omc::store::SnapshotRing;
+use omc_fl::runtime::engine::Engine;
+
+const COMMITS: usize = 6;
+
+fn cfg(name: &str, workers: usize, async_on: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    c.rounds = COMMITS;
+    c.num_clients = 16;
+    c.clients_per_round = 8;
+    c.local_steps = 1;
+    c.lr = 0.2;
+    c.eval_every = COMMITS + 1; // only the mandatory final eval
+    c.eval_batches = 1;
+    c.workers = workers;
+    c.omc = OmcConfig {
+        format: "S1E4M14".parse().unwrap(),
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+    };
+    c.cohort.straggler_mean_s = 2.0;
+    if async_on {
+        c.async_cfg = AsyncConfig {
+            enabled: true,
+            concurrency: 8,
+            buffer_k: 4,
+            policy: StalenessPolicy::Polynomial { alpha: 0.5 },
+            max_staleness: usize::MAX,
+            snapshot_ring: 4,
+        };
+    }
+    c
+}
+
+fn run_params(engine: &Engine, cfg: ExperimentConfig) -> Vec<Vec<u32>> {
+    let mut exp = Experiment::prepare(engine, cfg).expect("prepare");
+    exp.run().expect("run");
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn main() {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            // unreachable in default builds (the native engine always
+            // constructs); kept so a failure is loud, not a fake pass
+            println!("SKIPPED: bench_async — engine unavailable: {e}");
+            return;
+        }
+    };
+
+    let mut suite = Suite::new(&format!(
+        "async round engine ({COMMITS} commits, K=4, conc=8, native:tiny)"
+    ));
+
+    let seq_bits = run_params(&engine, cfg("async_seq_probe", 1, true));
+    suite.bench(
+        &format!("async {COMMITS} commits sequential [workers=1]"),
+        Some(COMMITS),
+        || {
+            let bits = run_params(&engine, cfg("async_seq", 1, true));
+            assert_eq!(bits, seq_bits, "sequential run became nondeterministic");
+        },
+    );
+    for workers in [2usize, 4] {
+        suite.bench(
+            &format!("async {COMMITS} commits pooled [workers={workers}]"),
+            Some(COMMITS),
+            || {
+                let bits =
+                    run_params(&engine, cfg("async_pool", workers, true));
+                assert_eq!(
+                    bits, seq_bits,
+                    "pooled committed bytes diverged from sequential"
+                );
+            },
+        );
+    }
+    // the sync engine on the same transport shape, for the rounds/sec
+    // comparison column (not byte-comparable: different aggregation order)
+    suite.bench(
+        &format!("sync {COMMITS} rounds [workers=1] (reference)"),
+        Some(COMMITS),
+        || {
+            let _ = run_params(&engine, cfg("sync_ref", 1, false));
+        },
+    );
+
+    // snapshot-ring row: compress-and-push a committed model version at
+    // the experiment format. `elems` = params, `bytes` = the compressed
+    // snapshot size, so the row reads as snapshot GB/s; the printed line
+    // below is the ring-memory accounting the baselines README references.
+    let exp = Experiment::prepare(&engine, cfg("ring_probe", 1, true)).expect("prepare");
+    let params = exp.server.params.clone();
+    let specs = exp.model.manifest.variables.clone();
+    let n_params: usize = params.iter().map(|v| v.len()).sum();
+    let policy = SelectionPolicy {
+        weights_only: true,
+        fraction: 1.0,
+    };
+    let fmt = "S1E4M14".parse().unwrap();
+    let snap = async_round::snapshot_model(&params, &specs, &policy, fmt, true, 1);
+    let snap_bytes = snap.memory_bytes();
+    let mut ring = SnapshotRing::new(4);
+    let mut version = 0usize;
+    suite.bench_case(
+        "snapshot ring push (compress one version)",
+        Some(n_params),
+        Some(snap_bytes),
+        || {
+            ring.push(
+                version,
+                async_round::snapshot_model(&params, &specs, &policy, fmt, true, 1),
+            );
+            version += 1;
+        },
+    );
+
+    suite.finish("BENCH_async.json");
+    for r in suite.results() {
+        if r.name.contains("commits") || r.name.contains("rounds") {
+            println!(
+                "  {}: {:.2} commits/s",
+                r.name,
+                COMMITS as f64 / (r.median_ns / 1e9)
+            );
+        }
+    }
+    let ring_full = 4 * snap_bytes;
+    let ring_fp32 = 4 * n_params * 4;
+    println!(
+        "  snapshot ring memory (R=4, S1E4M14): {} vs {} fp32 ({:.0}% of fp32)",
+        ring_full,
+        ring_fp32,
+        100.0 * ring_full as f64 / ring_fp32 as f64
+    );
+}

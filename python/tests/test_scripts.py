@@ -1,0 +1,247 @@
+"""Unit tests for the CI gate scripts: scripts/check_goldens.py (golden
+diff: tolerance edges, missing golden, malformed JSON) and
+scripts/bench_trend.py (trend gate: thresholds, strict suites, missing
+baselines, bless, malformed JSON). These run under the existing
+``python-tests`` CI job, so a behavior change in either gate fails CI
+before it can silently weaken the smoke-goldens or bench-smoke jobs.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPTS = Path(__file__).resolve().parents[2] / "scripts"
+
+
+def load_script(name):
+    spec = importlib.util.spec_from_file_location(name, SCRIPTS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_goldens = load_script("check_goldens")
+bench_trend = load_script("bench_trend")
+
+
+def run_main(mod, argv, monkeypatch):
+    monkeypatch.setattr(sys, "argv", [f"{mod.__name__}.py"] + argv)
+    return mod.main()
+
+
+# ---- check_goldens.walk_diff ----------------------------------------------
+
+
+def diffs(golden, fresh, rel_tol=1e-6):
+    return list(check_goldens.walk_diff(golden, fresh, rel_tol))
+
+
+def test_walk_diff_integers_are_exact():
+    assert diffs({"n": 5}, {"n": 5}) == []
+    out = diffs({"n": 5}, {"n": 6})
+    assert len(out) == 1
+    assert "integer" in out[0][3]
+
+
+def test_walk_diff_float_tolerance_edges():
+    # rel == tol passes (strict > comparison), just above fails
+    g, tol = 1.0, 1e-6
+    assert diffs({"x": g}, {"x": g * (1 + tol)}, rel_tol=tol * (1 + 1e-9)) == []
+    assert diffs({"x": g}, {"x": g * (1 + 3 * tol)}, rel_tol=tol) != []
+    # exact equality short-circuits even at rel_tol 0
+    assert diffs({"x": 0.25}, {"x": 0.25}, rel_tol=0.0) == []
+    # int golden vs float fresh compares numerically, not as a type error
+    assert diffs({"x": 1}, {"x": 1.0}) == []
+    # NaN (serialized null in our summaries, but guard the numeric path)
+    assert diffs({"x": float("nan")}, {"x": float("nan")}) == []
+
+
+def test_walk_diff_structure_and_type_mismatches():
+    assert any("missing key" in d[3] for d in diffs({"a": 1, "b": 2}, {"a": 1}))
+    assert any("extra key" in d[3] for d in diffs({"a": 1}, {"a": 1, "b": 2}))
+    assert any("array length" in d[3] for d in diffs({"a": [1, 2]}, {"a": [1]}))
+    assert any("type mismatch" in d[3] for d in diffs({"a": "1"}, {"a": 1}))
+    # bools are not numbers
+    assert any("type" in d[3] for d in diffs({"a": True}, {"a": 1}))
+    # nested paths are reported
+    out = diffs({"a": {"b": [1, 2]}}, {"a": {"b": [1, 3]}})
+    assert out and out[0][0] == "$.a.b[1]"
+
+
+# ---- check_goldens.main ----------------------------------------------------
+
+
+def write(path, doc):
+    path.write_text(json.dumps(doc) if not isinstance(doc, str) else doc)
+    return str(path)
+
+
+def test_check_goldens_match_and_mismatch(tmp_path, monkeypatch):
+    fresh = write(tmp_path / "fresh.json", {"cells": [1, 2], "wer": 10.5})
+    golden = write(tmp_path / "golden.json", {"cells": [1, 2], "wer": 10.5})
+    assert run_main(check_goldens, ["--fresh", fresh, "--golden", golden], monkeypatch) == 0
+    bad = write(tmp_path / "bad.json", {"cells": [1, 3], "wer": 10.5})
+    assert run_main(check_goldens, ["--fresh", bad, "--golden", golden], monkeypatch) == 1
+
+
+def test_check_goldens_missing_inputs(tmp_path, monkeypatch):
+    fresh = write(tmp_path / "fresh.json", {"a": 1})
+    absent = str(tmp_path / "nope.json")
+    # missing golden warns by default, fails under --strict-missing
+    assert run_main(check_goldens, ["--fresh", fresh, "--golden", absent], monkeypatch) == 0
+    assert (
+        run_main(
+            check_goldens,
+            ["--fresh", fresh, "--golden", absent, "--strict-missing"],
+            monkeypatch,
+        )
+        == 1
+    )
+    # missing fresh summary is a usage error
+    assert run_main(check_goldens, ["--fresh", absent, "--golden", fresh], monkeypatch) == 2
+
+
+def test_check_goldens_malformed_json_is_an_error(tmp_path, monkeypatch):
+    fresh = write(tmp_path / "fresh.json", '{"cells": [1,')
+    golden = write(tmp_path / "golden.json", {"cells": [1]})
+    assert run_main(check_goldens, ["--fresh", fresh, "--golden", golden], monkeypatch) == 2
+    assert run_main(check_goldens, ["--fresh", golden, "--golden", fresh], monkeypatch) == 2
+
+
+def test_check_goldens_bless_copies(tmp_path, monkeypatch):
+    fresh = write(tmp_path / "fresh.json", {"a": 1})
+    golden = tmp_path / "goldens" / "g.json"
+    assert (
+        run_main(
+            check_goldens,
+            ["--fresh", fresh, "--golden", str(golden), "--bless"],
+            monkeypatch,
+        )
+        == 0
+    )
+    assert json.loads(golden.read_text()) == {"a": 1}
+
+
+# ---- bench_trend -----------------------------------------------------------
+
+
+def bench_doc(median_by_case):
+    return {
+        "results": [
+            {"name": k, "median_ns": v, "mad_ns": 0.0, "iters": 10}
+            for k, v in median_by_case.items()
+        ]
+    }
+
+
+def trend_env(tmp_path, fresh, baseline, suite="codec", tag="t0"):
+    fresh_dir = tmp_path / tag / "fresh"
+    base_dir = tmp_path / tag / "baselines"
+    fresh_dir.mkdir(parents=True, exist_ok=True)
+    base_dir.mkdir(parents=True, exist_ok=True)
+    write(fresh_dir / f"BENCH_{suite}.json", bench_doc(fresh))
+    if baseline is not None:
+        write(base_dir / f"BENCH_{suite}.json", bench_doc(baseline))
+    return ["--dir", str(fresh_dir), "--baselines", str(base_dir)]
+
+
+def test_bench_trend_within_threshold_passes(tmp_path, monkeypatch):
+    argv = trend_env(tmp_path, {"pack": 110.0}, {"pack": 100.0})
+    assert run_main(bench_trend, argv, monkeypatch) == 0
+
+
+def test_bench_trend_regression_warns_without_gate(tmp_path, monkeypatch, capsys):
+    argv = trend_env(tmp_path, {"pack": 200.0}, {"pack": 100.0})
+    assert run_main(bench_trend, argv, monkeypatch) == 0
+    assert "::warning::" in capsys.readouterr().out
+    # --strict promotes every suite to a failure
+    assert run_main(bench_trend, argv + ["--strict"], monkeypatch) == 1
+
+
+def test_bench_trend_strict_suites_gate_fails(tmp_path, monkeypatch, capsys):
+    argv = trend_env(tmp_path, {"pack": 200.0}, {"pack": 100.0}, suite="codec")
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,pack,round"], monkeypatch
+    )
+    assert rc == 1
+    assert "::error::" in capsys.readouterr().out
+    # the same regression in a non-gated suite only warns
+    argv = trend_env(
+        tmp_path, {"gemm": 200.0}, {"gemm": 100.0}, suite="native", tag="t1"
+    )
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,pack,round"], monkeypatch
+    )
+    assert rc == 0
+    assert "::warning::" in capsys.readouterr().out
+
+
+def test_bench_trend_strict_threshold_edges(tmp_path, monkeypatch, capsys):
+    gate = ["--strict-suites", "codec", "--strict-threshold", "0.35"]
+    # exactly at the threshold passes (strict > comparison)...
+    argv = trend_env(tmp_path, {"c": 135.0}, {"c": 100.0}, suite="codec")
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    # ...just above fails
+    argv = trend_env(tmp_path, {"c": 135.2}, {"c": 100.0}, suite="codec")
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
+    capsys.readouterr()
+    # a gated suite between the warn and fail thresholds keeps the
+    # ::warning:: tier (a 30% codec slip must not go silent)
+    argv = trend_env(
+        tmp_path, {"c": 130.0}, {"c": 100.0}, suite="codec", tag="t2"
+    )
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    assert "::warning::" in capsys.readouterr().out
+    # --strict means ANY regression fails — it must tighten gated suites
+    # to the lower threshold, not exempt them
+    assert run_main(bench_trend, argv + gate + ["--strict"], monkeypatch) == 1
+
+
+def test_bench_trend_missing_baseline_is_not_a_failure(tmp_path, monkeypatch, capsys):
+    argv = trend_env(tmp_path, {"c": 100.0}, None, suite="codec")
+    rc = run_main(bench_trend, argv + ["--strict-suites", "codec"], monkeypatch)
+    assert rc == 0
+    assert "no committed baseline" in capsys.readouterr().out
+
+
+def test_bench_trend_malformed_json_is_an_error(tmp_path, monkeypatch):
+    argv = trend_env(tmp_path, {"c": 100.0}, {"c": 100.0}, suite="codec")
+    fresh_dir = Path(argv[1])
+    (fresh_dir / "BENCH_codec.json").write_text("{not json")
+    assert run_main(bench_trend, argv, monkeypatch) == 2
+    # a malformed BASELINE is equally fatal for a gated comparison
+    (fresh_dir / "BENCH_codec.json").write_text(json.dumps(bench_doc({"c": 1.0})))
+    base_dir = Path(argv[3])
+    (base_dir / "BENCH_codec.json").write_text("[1, 2]")
+    assert run_main(bench_trend, argv, monkeypatch) == 2
+
+
+def test_bench_trend_bless_and_empty_dir(tmp_path, monkeypatch):
+    argv = trend_env(tmp_path, {"c": 123.0}, None, suite="codec")
+    assert run_main(bench_trend, argv + ["--bless"], monkeypatch) == 0
+    blessed = Path(argv[3]) / "BENCH_codec.json"
+    assert json.loads(blessed.read_text())["results"][0]["median_ns"] == 123.0
+    # an empty fresh dir is a no-op, not an error
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert (
+        run_main(
+            bench_trend,
+            ["--dir", str(empty), "--baselines", str(tmp_path / "b2")],
+            monkeypatch,
+        )
+        == 0
+    )
+
+
+def test_bench_trend_suite_name_parsing():
+    assert bench_trend.suite_name("BENCH_codec.json") == "codec"
+    assert bench_trend.suite_name("/tmp/x/BENCH_round.json") == "round"
+    assert bench_trend.suite_name("other.json") == "other.json"
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::data::partition::Partition;
+use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::cohort::CohortConfig;
 use crate::fl::sampler::SamplerKind;
 use crate::omc::format::FloatFormat;
@@ -70,6 +71,10 @@ pub struct ExperimentConfig {
     pub omc: OmcConfig,
     /// cohort failure model: dropout, stragglers, weighted FedAvg
     pub cohort: CohortConfig,
+    /// buffered asynchronous aggregation (`[async]` table); when enabled,
+    /// `rounds` counts commits and `clients_per_round` seeds the default
+    /// concurrency/buffer size
+    pub async_cfg: AsyncConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -98,6 +103,7 @@ impl ExperimentConfig {
             eval_batches: 8,
             omc: OmcConfig::fp32_baseline(),
             cohort: CohortConfig::default(),
+            async_cfg: AsyncConfig::default(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -187,6 +193,37 @@ impl ExperimentConfig {
         if let Some(v) = get_b("cohort.weight_by_examples") {
             cfg.cohort.weight_by_examples = v;
         }
+        if let Some(v) = get_b("async.enabled") {
+            cfg.async_cfg.enabled = v;
+        }
+        if let Some(v) = get_i("async.concurrency") {
+            anyhow::ensure!(v >= 0, "async.concurrency must be >= 0");
+            cfg.async_cfg.concurrency = v as usize;
+        }
+        if let Some(v) = get_i("async.buffer_k") {
+            anyhow::ensure!(v >= 0, "async.buffer_k must be >= 0");
+            cfg.async_cfg.buffer_k = v as usize;
+        }
+        let (discount, alpha) = (get_f("async.discount"), get_f("async.alpha"));
+        match get_str("async.policy") {
+            Some(p) => {
+                cfg.async_cfg.policy = StalenessPolicy::parse(p, discount, alpha)?;
+            }
+            // a dangling discount/alpha would otherwise be silently ignored
+            // (default Constant(1.0)) — reject the misconfiguration instead
+            None => anyhow::ensure!(
+                discount.is_none() && alpha.is_none(),
+                "async.discount/async.alpha need async.policy (constant | polynomial)"
+            ),
+        }
+        if let Some(v) = get_i("async.max_staleness") {
+            anyhow::ensure!(v >= 0, "async.max_staleness must be >= 0");
+            cfg.async_cfg.max_staleness = v as usize;
+        }
+        if let Some(v) = get_i("async.snapshot_ring") {
+            anyhow::ensure!(v >= 1, "async.snapshot_ring must be >= 1");
+            cfg.async_cfg.snapshot_ring = v as usize;
+        }
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -226,6 +263,7 @@ impl ExperimentConfig {
             self.omc.format
         );
         self.cohort.validate()?;
+        self.async_cfg.validate()?;
         Ok(())
     }
 }
@@ -319,6 +357,72 @@ mod tests {
             let t = toml::parse(&bad).unwrap();
             assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
         }
+    }
+
+    const ASYNC_SAMPLE: &str = r#"
+        name = "async_cell"
+
+        [fl]
+        clients = 16
+        clients_per_round = 8
+
+        [async]
+        enabled = true
+        concurrency = 6
+        buffer_k = 3
+        policy = "polynomial"
+        alpha = 0.5
+        max_staleness = 4
+        snapshot_ring = 3
+    "#;
+
+    #[test]
+    fn parses_async_table_and_defaults() {
+        let t = toml::parse(ASYNC_SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.async_cfg.enabled);
+        assert_eq!(c.async_cfg.concurrency, 6);
+        assert_eq!(c.async_cfg.buffer_k, 3);
+        assert_eq!(
+            c.async_cfg.policy,
+            StalenessPolicy::Polynomial { alpha: 0.5 }
+        );
+        assert_eq!(c.async_cfg.max_staleness, 4);
+        assert_eq!(c.async_cfg.snapshot_ring, 3);
+        // absent table → disabled sync defaults; 0-knobs resolve to cpr
+        let plain = ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap()).unwrap();
+        assert!(!plain.async_cfg.enabled);
+        let r = plain.async_cfg.resolved(plain.clients_per_round);
+        assert_eq!(r.concurrency, plain.clients_per_round);
+        assert_eq!(r.buffer_k, plain.clients_per_round);
+    }
+
+    #[test]
+    fn rejects_bad_async_knobs() {
+        for (from, to) in [
+            ("snapshot_ring = 3", "snapshot_ring = 0"),
+            ("policy = \"polynomial\"", "policy = \"chaos\""),
+            ("alpha = 0.5", "alpha = -1.0"),
+            ("max_staleness = 4", "max_staleness = -1"),
+        ] {
+            let bad = ASYNC_SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+        // discount/alpha without a policy key would silently no-op — reject
+        let dangling = ASYNC_SAMPLE.replace("policy = \"polynomial\"", "");
+        assert!(
+            ExperimentConfig::from_table(&toml::parse(&dangling).unwrap()).is_err(),
+            "alpha without async.policy must be rejected, not ignored"
+        );
+        // constant policy with an explicit discount parses; 0 is rejected
+        let constant = ASYNC_SAMPLE
+            .replace("policy = \"polynomial\"", "policy = \"constant\"")
+            .replace("alpha = 0.5", "discount = 0.5");
+        let c = ExperimentConfig::from_table(&toml::parse(&constant).unwrap()).unwrap();
+        assert_eq!(c.async_cfg.policy, StalenessPolicy::Constant(0.5));
+        let zero = constant.replace("discount = 0.5", "discount = 0.0");
+        assert!(ExperimentConfig::from_table(&toml::parse(&zero).unwrap()).is_err());
     }
 
     #[test]

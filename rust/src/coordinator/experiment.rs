@@ -9,6 +9,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::params_io;
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::{collapse_words, Domain, TaskConfig};
+use crate::fl::async_round::{AsyncContext, AsyncRoundEngine};
 use crate::fl::client::ClientTrainConfig;
 use crate::fl::round::{RoundContext, RoundEngine};
 use crate::fl::sampler::Sampler;
@@ -232,7 +233,11 @@ impl Experiment {
 
     /// Like [`run`](Self::run), but executing through a caller-owned
     /// [`RoundEngine`] — the sweep engine passes one handle per worker so
-    /// warmed codec buffers carry across cells.
+    /// warmed codec buffers carry across cells. With `[async] enabled`,
+    /// the experiment's rounds run as buffered asynchronous *commits*
+    /// through `fl::async_round` instead of synchronous rounds (the
+    /// engine's pooled downlink buffers and client scratches are shared
+    /// either way).
     pub fn run_with(&mut self, rounds: &mut RoundEngine) -> Result<(Recorder, RunSummary)> {
         self.warmup()?;
         let mut rec = Recorder::new(&self.cfg.name);
@@ -258,6 +263,39 @@ impl Experiment {
                 self.cfg.cohort.weight_by_examples
             );
         }
+        if self.cfg.async_cfg.enabled {
+            self.run_async_rounds(rounds, &mut rec, policy, train)?;
+        } else {
+            self.run_sync_rounds(rounds, &mut rec, policy, train)?;
+        }
+        if let Some(path) = &self.cfg.save_to {
+            params_io::save(path, &self.server.params)?;
+            crate::log_info!("saved checkpoint to {}", path.display());
+        }
+        let param_bytes = self.client_param_bytes();
+        let fp32_bytes = self.model.manifest.total_params * 4;
+        let summary = RunSummary {
+            label: self.cfg.name.clone(),
+            final_wer: rec.final_wer(3),
+            final_loss: rec.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+            param_memory_bytes: param_bytes,
+            memory_ratio: param_bytes as f64 / fp32_bytes as f64,
+            comm_bytes_per_round: rec.total_comm_bytes() as f64
+                / rec.records.len().max(1) as f64,
+            rounds_per_min: rec.rounds_per_min(),
+            rounds: rec.records.len(),
+        };
+        Ok((rec, summary))
+    }
+
+    /// The synchronous round loop (the paper's setting).
+    fn run_sync_rounds(
+        &mut self,
+        rounds: &mut RoundEngine,
+        rec: &mut Recorder,
+        policy: SelectionPolicy,
+        train: ClientTrainConfig,
+    ) -> Result<()> {
         for r in 0..self.cfg.rounds {
             let t = Timer::start();
             let ctx = RoundContext {
@@ -273,13 +311,7 @@ impl Experiment {
             };
             let outcome = rounds.run(&ctx, &mut self.server)?;
             let round_seconds = t.elapsed_s();
-            let (wer, eval_loss) = if (r + 1) % self.cfg.eval_every == 0
-                || r + 1 == self.cfg.rounds
-            {
-                self.evaluate()?
-            } else {
-                (-1.0, 0.0)
-            };
+            let (wer, eval_loss) = self.maybe_evaluate(r)?;
             if wer >= 0.0 {
                 crate::log_info!(
                     "round {:>4}: loss {:.4} | WER {:.2}% | {:.0} ms",
@@ -311,24 +343,105 @@ impl Experiment {
                 round_seconds,
             });
         }
-        if let Some(path) = &self.cfg.save_to {
-            params_io::save(path, &self.server.params)?;
-            crate::log_info!("saved checkpoint to {}", path.display());
-        }
-        let param_bytes = self.client_param_bytes();
-        let fp32_bytes = self.model.manifest.total_params * 4;
-        let summary = RunSummary {
-            label: self.cfg.name.clone(),
-            final_wer: rec.final_wer(3),
-            final_loss: rec.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
-            param_memory_bytes: param_bytes,
-            memory_ratio: param_bytes as f64 / fp32_bytes as f64,
-            comm_bytes_per_round: rec.total_comm_bytes() as f64
-                / rec.records.len().max(1) as f64,
-            rounds_per_min: rec.rounds_per_min(),
-            rounds: rec.records.len(),
+        Ok(())
+    }
+
+    /// The buffered asynchronous commit loop: `cfg.rounds` commits through
+    /// `fl::async_round`, one [`RoundRecord`] + `CommitRecord` per commit.
+    /// Column mapping for the shared round log: `sampled` counts the wave's
+    /// dispatches, `completed` the folded updates (buffer K), and `late`
+    /// the stale-discarded updates of the commit *window*. Note the
+    /// attribution asymmetry: `up_bytes_discarded` is attributed to the
+    /// row whose wave *trained* the update (keeping it a subset of that
+    /// row's `up_bytes`, the field's documented invariant), while `late`
+    /// and `CommitRecord::discarded_bytes` are attributed to the window
+    /// the discard happened in — per-row the two can disagree; run totals
+    /// always match.
+    fn run_async_rounds(
+        &mut self,
+        rounds: &mut RoundEngine,
+        rec: &mut Recorder,
+        policy: SelectionPolicy,
+        train: ClientTrainConfig,
+    ) -> Result<()> {
+        let acfg = self.cfg.async_cfg.resolved(self.cfg.clients_per_round);
+        crate::log_info!(
+            "async engine: concurrency={}, buffer K={}, policy={}, max_staleness={}, ring={}",
+            acfg.concurrency,
+            acfg.buffer_k,
+            acfg.policy,
+            if acfg.max_staleness == usize::MAX {
+                "unlimited".to_string()
+            } else {
+                acfg.max_staleness.to_string()
+            },
+            acfg.snapshot_ring
+        );
+        let ctx = AsyncContext {
+            model: &self.model,
+            domain: &self.domain,
+            assignment: &self.assignment,
+            sampler: &self.sampler,
+            policy,
+            train,
+            cohort: self.cfg.cohort,
+            acfg,
+            seed: self.cfg.seed,
+            workers: self.cfg.workers,
         };
-        Ok((rec, summary))
+        let mut engine = AsyncRoundEngine::plan(&ctx, self.cfg.rounds)?;
+        for r in 0..self.cfg.rounds {
+            let t = Timer::start();
+            let outcome =
+                engine.run_commit(&ctx, &mut self.server, rounds.scratch_mut())?;
+            let round_seconds = t.elapsed_s();
+            let (wer, eval_loss) = self.maybe_evaluate(r)?;
+            if wer >= 0.0 {
+                crate::log_info!(
+                    "commit {:>4}: loss {:.4} | WER {:.2}% | vt {:.1}s | {:.0} ms",
+                    r,
+                    outcome.mean_loss,
+                    wer,
+                    outcome.commit.virtual_time,
+                    round_seconds * 1e3
+                );
+            } else {
+                crate::log_debug!(
+                    "commit {:>4}: loss {:.4} | vt {:.1}s | {:.0} ms",
+                    r,
+                    outcome.mean_loss,
+                    outcome.commit.virtual_time,
+                    round_seconds * 1e3
+                );
+            }
+            rec.push(RoundRecord {
+                round: r,
+                train_loss: outcome.mean_loss,
+                eval_loss,
+                eval_wer: wer,
+                down_bytes: outcome.down_bytes,
+                up_bytes: outcome.up_bytes,
+                up_bytes_discarded: outcome.up_bytes_discarded,
+                sampled: outcome.dispatched,
+                completed: outcome.folded,
+                dropped: outcome.dropped,
+                late: outcome.commit.discarded_updates,
+                round_seconds,
+            });
+            rec.push_commit(outcome.commit);
+        }
+        Ok(())
+    }
+
+    /// Evaluate on the cadence the sync and async loops share: every
+    /// `eval_every` rounds and always on the final round. Returns
+    /// `(-1.0, 0.0)` on skipped rounds.
+    fn maybe_evaluate(&self, r: usize) -> Result<(f64, f64)> {
+        if (r + 1) % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds {
+            self.evaluate()
+        } else {
+            Ok((-1.0, 0.0))
+        }
     }
 }
 

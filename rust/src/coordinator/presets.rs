@@ -11,6 +11,7 @@ use crate::coordinator::config::{ExperimentConfig, OmcConfig};
 use crate::coordinator::experiment::{Experiment, RunSummary};
 use crate::coordinator::sweep::SweepSpec;
 use crate::data::partition::Partition;
+use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::cohort::CohortConfig;
 use crate::metrics::recorder::Recorder;
 use crate::runtime::engine::{Engine, LoadedModel};
@@ -154,6 +155,51 @@ pub fn cohort_ladder() -> Vec<(String, CohortConfig)> {
                 straggler_mean_s: 2.0,
                 deadline_s: 4.0,
                 weight_by_examples: true,
+            },
+        ),
+    ]
+}
+
+/// The buffered-async scenario ladder driven by `examples/async_stress.rs`
+/// and `benches/bench_async.rs`: from synchronous rounds (the tables'
+/// setting) through fully-buffered async (first commit ≡ one sync round)
+/// down to small aggressive buffers with polynomial staleness discounts
+/// and a staleness cutoff. `concurrency`/`buffer_k` of `0` resolve to the
+/// experiment's `clients_per_round` at run time, so the ladder fits any
+/// cohort scale.
+pub fn async_ladder() -> Vec<(String, AsyncConfig)> {
+    let on = AsyncConfig {
+        enabled: true,
+        snapshot_ring: 4,
+        ..AsyncConfig::default()
+    };
+    let poly = StalenessPolicy::Polynomial { alpha: 0.5 };
+    vec![
+        ("sync rounds (reference)".into(), AsyncConfig::default()),
+        ("async K=cohort, constant".into(), on),
+        (
+            "async K=4, poly(0.5)".into(),
+            AsyncConfig {
+                buffer_k: 4,
+                policy: poly,
+                ..on
+            },
+        ),
+        (
+            "async K=2, poly(0.5)".into(),
+            AsyncConfig {
+                buffer_k: 2,
+                policy: poly,
+                ..on
+            },
+        ),
+        (
+            "async K=2, poly(0.5), max_staleness=2".into(),
+            AsyncConfig {
+                buffer_k: 2,
+                policy: poly,
+                max_staleness: 2,
+                ..on
             },
         ),
     ]
@@ -377,6 +423,29 @@ mod tests {
         assert!(rows[2].1.deadline_s.is_finite());
         let last = rows[3].1;
         assert!(last.dropout_prob > 0.0 && last.weight_by_examples);
+    }
+
+    #[test]
+    fn async_ladder_escalates_from_sync() {
+        let rows = async_ladder();
+        assert_eq!(rows.len(), 5);
+        assert!(!rows[0].1.enabled, "rung 0 is the sync reference");
+        for (_, a) in &rows[1..] {
+            assert!(a.enabled);
+            a.validate().unwrap();
+        }
+        // rung 1 is the sync-equivalent full buffer: K and concurrency
+        // resolve to the cohort, constant discount
+        assert_eq!(rows[1].1.buffer_k, 0);
+        assert!(matches!(rows[1].1.policy, StalenessPolicy::Constant(_)));
+        // buffers shrink down the ladder; the last rung adds the cutoff
+        assert_eq!(rows[2].1.buffer_k, 4);
+        assert_eq!(rows[3].1.buffer_k, 2);
+        assert_eq!(rows[4].1.max_staleness, 2);
+        assert!(matches!(
+            rows[4].1.policy,
+            StalenessPolicy::Polynomial { .. }
+        ));
     }
 
     #[test]

@@ -51,6 +51,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::config::{ExperimentConfig, OmcConfig};
 use crate::coordinator::experiment::{self, Experiment, RunSummary};
 use crate::data::partition::Partition;
+use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::cohort::CohortConfig;
 use crate::fl::round::RoundEngine;
 use crate::metrics::stats::Timer;
@@ -200,7 +201,8 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
          lr={:08x};seed={};partition={};sampler={};domain={};noise={:08x};\
          eval_every={};eval_batches={};fmt={};pvt={};wo={};frac={:016x};\
          dropout={:016x};straggler={:016x};deadline={:016x};weighted={};\
-         init={};save={};workers={}",
+         init={};save={};workers={};\
+         async={};aconc={};ak={};apol={};astale={};aring={}",
         summaries::SWEEP_SCHEMA_VERSION,
         cfg.name,
         cfg.model_dir.display(),
@@ -233,6 +235,12 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
             .map(|p| p.display().to_string())
             .unwrap_or_default(),
         cfg.workers,
+        cfg.async_cfg.enabled,
+        cfg.async_cfg.concurrency,
+        cfg.async_cfg.buffer_k,
+        cfg.async_cfg.policy.canonical(),
+        cfg.async_cfg.max_staleness,
+        cfg.async_cfg.snapshot_ring,
     )
 }
 
@@ -426,53 +434,80 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
             .collect::<Result<_>>()?,
     };
 
+    // execution-mode axis: each entry runs the grid synchronously or
+    // through the buffered async engine (the base `[async]` table supplies
+    // the async knobs; `sweep.modes = ["sync", "async"]` A/Bs them)
+    let modes: Vec<String> = match axis_strs("sweep.modes")? {
+        None => vec![if base.async_cfg.enabled { "async" } else { "sync" }
+            .to_string()],
+        Some(names) => {
+            for n in &names {
+                anyhow::ensure!(
+                    n == "sync" || n == "async",
+                    "unknown sweep mode {n:?} (sync | async)"
+                );
+            }
+            names
+        }
+    };
+
     let mut spec = SweepSpec::new(&base.name, base.seed, &base.output_dir);
-    let multi_axis =
-        partitions.len() > 1 || domains.len() > 1 || cohorts.len() > 1;
+    let multi_axis = partitions.len() > 1
+        || domains.len() > 1
+        || cohorts.len() > 1
+        || modes.len() > 1;
     for &partition in &partitions {
         for &domain in &domains {
             for (cohort_name, cohort) in &cohorts {
-                let suffix = if multi_axis {
-                    let c = if cohort_name.is_empty() {
-                        String::new()
+                for mode in &modes {
+                    let suffix = if multi_axis {
+                        let c = if cohort_name.is_empty() {
+                            String::new()
+                        } else {
+                            format!("_{cohort_name}")
+                        };
+                        let m = if modes.len() > 1 {
+                            format!("_{mode}")
+                        } else {
+                            String::new()
+                        };
+                        format!("_{partition}_d{domain}{c}{m}")
                     } else {
-                        format!("_{cohort_name}")
+                        String::new()
                     };
-                    format!("_{partition}_d{domain}{c}")
-                } else {
-                    String::new()
-                };
-                let mut cell_with = |label: String, omc: OmcConfig| {
-                    let mut c = base.clone();
-                    c.name = label;
-                    c.omc = omc;
-                    c.partition = partition;
-                    c.domain = domain;
-                    c.cohort = *cohort;
-                    spec.cells.push(c);
-                };
-                if formats.iter().any(|f| f.is_fp32()) {
-                    cell_with(
-                        format!("fp32_baseline{suffix}"),
-                        OmcConfig::fp32_baseline(),
-                    );
-                }
-                for &fmt in formats.iter().filter(|f| !f.is_fp32()) {
-                    for &use_pvt in &pvts {
-                        for &fraction in &fractions {
-                            let label = format!(
-                                "{fmt}_{}_f{fraction}{suffix}",
-                                if use_pvt { "pvt" } else { "nopvt" }
-                            );
-                            cell_with(
-                                label,
-                                OmcConfig {
-                                    format: fmt,
-                                    use_pvt,
-                                    weights_only: base.omc.weights_only,
-                                    fraction,
-                                },
-                            );
+                    let mut cell_with = |label: String, omc: OmcConfig| {
+                        let mut c = base.clone();
+                        c.name = label;
+                        c.omc = omc;
+                        c.partition = partition;
+                        c.domain = domain;
+                        c.cohort = *cohort;
+                        c.async_cfg.enabled = mode == "async";
+                        spec.cells.push(c);
+                    };
+                    if formats.iter().any(|f| f.is_fp32()) {
+                        cell_with(
+                            format!("fp32_baseline{suffix}"),
+                            OmcConfig::fp32_baseline(),
+                        );
+                    }
+                    for &fmt in formats.iter().filter(|f| !f.is_fp32()) {
+                        for &use_pvt in &pvts {
+                            for &fraction in &fractions {
+                                let label = format!(
+                                    "{fmt}_{}_f{fraction}{suffix}",
+                                    if use_pvt { "pvt" } else { "nopvt" }
+                                );
+                                cell_with(
+                                    label,
+                                    OmcConfig {
+                                        format: fmt,
+                                        use_pvt,
+                                        weights_only: base.omc.weights_only,
+                                        fraction,
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -538,6 +573,89 @@ pub fn smoke(seed: u64) -> Result<SweepSpec> {
     spec.finalize()
 }
 
+/// The async CI smoke tier (`--profile smoke-async`): four `native:tiny`
+/// cells covering sync-vs-async, buffer sizes, the polynomial staleness
+/// discount, and the `max_staleness` discard path. The sync cell pins
+/// `workers = 1` (its shard-merge order depends on the worker count); the
+/// async cells deliberately run with `workers = 4` — the async engine's
+/// committed bytes and metrics are worker-count-independent by
+/// construction (training parallelism only; one central fold), which is
+/// exactly what the CI `async-determinism` leg gates with `cmp`.
+pub fn smoke_async(seed: u64) -> Result<SweepSpec> {
+    let mut base =
+        ExperimentConfig::default_with("smoke_async", Path::new("native:tiny"));
+    base.rounds = 4; // commits, for the async cells
+    base.num_clients = 8;
+    base.clients_per_round = 4;
+    base.local_steps = 1;
+    base.lr = 0.2;
+    base.eval_every = 2;
+    base.eval_batches = 2;
+    base.output_dir = PathBuf::from("results/sweep_smoke_async");
+    base.omc = OmcConfig {
+        format: "S1E4M14".parse()?,
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+    };
+    // stragglers make staleness real; async ignores the deadline
+    let straggled = CohortConfig {
+        straggler_mean_s: 2.0,
+        ..CohortConfig::ideal()
+    };
+
+    let mut spec =
+        SweepSpec::new("sweep_smoke_async", seed, &base.output_dir);
+    let poly = StalenessPolicy::Polynomial { alpha: 0.5 };
+    let cells: Vec<(&str, AsyncConfig, CohortConfig, usize)> = vec![
+        ("sync_fedavg", AsyncConfig::default(), CohortConfig::ideal(), 1),
+        (
+            "async_k4_const",
+            AsyncConfig {
+                enabled: true,
+                snapshot_ring: 2,
+                ..AsyncConfig::default()
+            },
+            CohortConfig::ideal(),
+            4,
+        ),
+        (
+            "async_k2_poly",
+            AsyncConfig {
+                enabled: true,
+                buffer_k: 2,
+                policy: poly,
+                snapshot_ring: 2,
+                ..AsyncConfig::default()
+            },
+            straggled,
+            4,
+        ),
+        (
+            "async_k2_poly_stale1",
+            AsyncConfig {
+                enabled: true,
+                buffer_k: 2,
+                policy: poly,
+                max_staleness: 1,
+                snapshot_ring: 2,
+                ..AsyncConfig::default()
+            },
+            straggled,
+            4,
+        ),
+    ];
+    for (label, acfg, cohort, workers) in cells {
+        let mut c = base.clone();
+        c.name = label.to_string();
+        c.async_cfg = acfg;
+        c.cohort = cohort;
+        c.workers = workers;
+        spec.cells.push(c);
+    }
+    spec.finalize()
+}
+
 // ---- execution -----------------------------------------------------------
 
 type CellRun = (Json, RunSummary, f64);
@@ -560,6 +678,13 @@ fn run_cell(
     let cell = summaries::cell_summary(index, &exp.cfg, &fp, &rec, &summary);
     std::fs::write(cells_dir.join(format!("{stem}.csv")), rec.to_csv())
         .with_context(|| format!("writing {stem}.csv"))?;
+    if rec.is_async() {
+        std::fs::write(
+            cells_dir.join(format!("{stem}_commits.csv")),
+            rec.commits_csv(),
+        )
+        .with_context(|| format!("writing {stem}_commits.csv"))?;
+    }
     std::fs::write(cells_dir.join(format!("{stem}.json")), cell.to_string())
         .with_context(|| format!("writing {stem}.json"))?;
     Ok((cell, summary, t.elapsed_s()))
@@ -933,6 +1058,90 @@ mod tests {
     }
 
     #[test]
+    fn modes_axis_expands_sync_and_async_cells() {
+        let toml_text = format!(
+            "{SWEEP_TOML}\nmodes = [\"sync\", \"async\"]\n"
+        );
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 2 modes × 5 cells
+        assert_eq!(spec.cells.len(), 10);
+        assert!(spec.cells[0].name.ends_with("_sync"));
+        assert!(!spec.cells[0].async_cfg.enabled);
+        assert!(spec.cells[5].name.ends_with("_async"));
+        assert!(spec.cells[5].async_cfg.enabled);
+        spec.validate().unwrap();
+        // unknown mode names are rejected
+        let bad = format!("{SWEEP_TOML}\nmodes = [\"warp\"]\n");
+        assert!(from_table(&toml::parse(&bad).unwrap()).is_err());
+        // single-mode grids keep the unsuffixed labels
+        let plain = from_table(&toml::parse(SWEEP_TOML).unwrap()).unwrap();
+        assert_eq!(plain.cells[0].name, "fp32_baseline");
+        assert!(plain.cells.iter().all(|c| !c.async_cfg.enabled));
+    }
+
+    #[test]
+    fn smoke_async_profile_covers_the_async_matrix() {
+        let spec = smoke_async(42).unwrap();
+        assert_eq!(spec.name, "sweep_smoke_async");
+        assert_eq!(spec.cells.len(), 4);
+        for c in &spec.cells {
+            assert!(c.rounds <= 8, "smoke must stay CI-fast");
+            assert_eq!(c.model_dir.to_str(), Some("native:tiny"));
+            c.validate().unwrap();
+        }
+        // one sync reference cell, pinned to one worker
+        let sync: Vec<_> = spec
+            .cells
+            .iter()
+            .filter(|c| !c.async_cfg.enabled)
+            .collect();
+        assert_eq!(sync.len(), 1);
+        assert_eq!(sync[0].workers, 1);
+        // async cells exercise the pooled intra-cell path...
+        assert!(spec
+            .cells
+            .iter()
+            .filter(|c| c.async_cfg.enabled)
+            .all(|c| c.workers > 1));
+        // ...and cover constant + polynomial discounts and the discard path
+        assert!(spec.cells.iter().any(|c| c.async_cfg.enabled
+            && matches!(c.async_cfg.policy, StalenessPolicy::Constant(_))));
+        assert!(spec.cells.iter().any(|c| {
+            matches!(c.async_cfg.policy, StalenessPolicy::Polynomial { .. })
+        }));
+        assert!(spec
+            .cells
+            .iter()
+            .any(|c| c.async_cfg.max_staleness != usize::MAX));
+        // determinism of the expansion itself
+        let again = smoke_async(42).unwrap();
+        let names: Vec<_> = spec.cells.iter().map(|c| &c.name).collect();
+        assert_eq!(names, again.cells.iter().map(|c| &c.name).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fingerprint_covers_async_knobs() {
+        let spec = smoke_async(1).unwrap();
+        let sync_cell = &spec.cells[0];
+        let async_cell = &spec.cells[1];
+        assert_ne!(fingerprint_hex(sync_cell), fingerprint_hex(async_cell));
+        // every async knob moves the hash — resume must re-run on change
+        let base = fingerprint_hex(async_cell);
+        let mut c = async_cell.clone();
+        c.async_cfg.buffer_k = 3;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = async_cell.clone();
+        c.async_cfg.policy = StalenessPolicy::Polynomial { alpha: 0.25 };
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = async_cell.clone();
+        c.async_cfg.max_staleness = 7;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = async_cell.clone();
+        c.async_cfg.snapshot_ring = 9;
+        assert_ne!(base, fingerprint_hex(&c));
+    }
+
+    #[test]
     fn fingerprint_is_stable_and_sensitive() {
         let t = toml::parse(SWEEP_TOML).unwrap();
         let spec = from_table(&t).unwrap();
@@ -1033,5 +1242,32 @@ mod tests {
         assert!(spec.cells.iter().all(|c| c.workers == 1));
         assert!(spec.cells.iter().all(|c| c.model_dir.to_str()
             == Some("native:tiny")));
+    }
+
+    #[test]
+    fn example_async_sweep_config_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/sweep_async.toml");
+        let spec = from_toml_file(&path).unwrap();
+        // 2 modes × (1 baseline + 1 format) = 4 cells
+        assert_eq!(spec.cells.len(), 4);
+        let (sync, async_): (Vec<_>, Vec<_>) = spec
+            .cells
+            .iter()
+            .partition(|c| !c.async_cfg.enabled);
+        assert_eq!(sync.len(), 2);
+        assert_eq!(async_.len(), 2);
+        for c in &async_ {
+            assert!(c.name.ends_with("_async"), "{}", c.name);
+            assert_eq!(c.async_cfg.buffer_k, 2);
+            assert_eq!(c.async_cfg.max_staleness, 3);
+            assert_eq!(
+                c.async_cfg.policy,
+                StalenessPolicy::Polynomial { alpha: 0.5 }
+            );
+        }
+        for c in &sync {
+            assert!(c.name.ends_with("_sync"), "{}", c.name);
+        }
     }
 }

@@ -1,0 +1,1311 @@
+//! Buffered asynchronous aggregation with staleness-aware FedAvg weights
+//! (§Scale — the async round engine).
+//!
+//! Synchronous rounds (`fl::round`) pay the straggler tax: every round
+//! waits for its slowest reporting client. This module implements the
+//! standard production answer — *buffered asynchronous* aggregation: a
+//! fixed number of clients is always in flight, each training against the
+//! server version that was current when it was dispatched, and the server
+//! folds uplinks into a buffer as they arrive, committing a new model
+//! version every `K` buffered updates with a staleness discount applied to
+//! the FedAvg weights ([`StalenessPolicy`]).
+//!
+//! # Virtual-time determinism contract
+//!
+//! The engine is a *simulator*: arrivals are ordered by the deterministic
+//! virtual-time latency model of `fl::cohort` (exponential per-dispatch
+//! draws keyed by `(seed, wave, cid)`), ties broken FIFO on the dispatch
+//! sequence — `(arrival, cid)` order within a wave, since waves dispatch
+//! in sorted-cid order (see the `Event` ordering note below).
+//! Because latencies do not depend on training, the whole event timeline —
+//! who trains against which version, which commit each uplink folds into,
+//! every staleness value and normalized weight — is planned up front
+//! ([`plan_async`]) as a pure function of the config and seed. Execution
+//! then proceeds one *wave* per version: the clients that start from
+//! version `v` run (sequentially, or sharded over the thread pool), their
+//! uploads are stashed, and commit `v` folds its planned updates **in plan
+//! order through a single [`StreamingAggregator`] on the coordinator
+//! thread**. Parallelism only ever touches client training, and uploads
+//! are bit-identical across schedules (RNG keyed by `(seed, wave, cid)`),
+//! so the committed model bytes and every recorded metric are
+//! *byte-identical* for any worker count — a stronger guarantee than the
+//! sync sharded path (which reassociates f64 sums when merging shard
+//! accumulators). Asserted by `rust/tests/async_round.rs` and the CI
+//! `async-determinism` leg.
+//!
+//! # Snapshot ring
+//!
+//! Committed versions live in an [`SnapshotRing`] under the paper's own
+//! storage discipline: each version is kept as a [`CompressedModel`]
+//! (policy-eligible variables bit-packed at the experiment format, the
+//! rest raw). Downlinks for a wave assemble from the ring entry — packed
+//! variables ship their packed bytes verbatim when the client's PPQ mask
+//! selects them, everything else ships the snapshot's decompressed values.
+//! With full selection (`fraction = 1.0`) or the FP32 baseline this is
+//! bit-identical to the synchronous downlink; with partial selection the
+//! deselected-but-eligible variables arrive as the server's compressed
+//! copy decompressed (the ring never retains a raw duplicate) — a
+//! deliberate, documented fidelity trade the sync path does not make. See
+//! `docs/ASYNC.md`.
+//!
+//! # Sync equivalence
+//!
+//! With the discount pinned to `constant` (any `c`: it cancels in the
+//! per-commit normalization), `buffer_k == concurrency == cohort size`,
+//! and an ideal-latency cohort, the first commit performs exactly the f64
+//! operations of one synchronous `fl::round` round: same participants
+//! (`sampler.sample(0)`), same masks and client RNG streams (wave 0 ≡
+//! round 0), same downlink bytes, same fold order (zero-latency arrivals
+//! process FIFO, i.e. in the sampled cohort order the sync path folds
+//! in) and the same normalized weights. `rust/tests/async_round.rs` pins
+//! this bit-exactly.
+
+use std::collections::BinaryHeap;
+
+use anyhow::{Context, Result};
+
+use crate::data::partition::ClientAssignment;
+use crate::data::synth::Domain;
+use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
+use crate::fl::cohort::{self, ClientFate, CohortConfig};
+use crate::fl::round::RoundScratch;
+use crate::fl::sampler::Sampler;
+use crate::fl::server::{Server, StreamingAggregator};
+use crate::metrics::recorder::CommitRecord;
+use crate::model::manifest::VarSpec;
+use crate::omc::codec::WireWriter;
+use crate::omc::format::FloatFormat;
+use crate::omc::selection::SelectionPolicy;
+use crate::omc::store::{CompressedModel, SnapshotRing, StoredVar};
+use crate::runtime::engine::LoadedModel;
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+use crate::util::threadpool;
+
+/// Client-RNG stream tag — MUST equal the constant `fl::round::run_round`
+/// uses, so wave-0 uploads are bit-identical to sync round-0 uploads (the
+/// first-commit equivalence test enforces this).
+const CLIENT_STREAM: u64 = 0xC11E27;
+
+// ---- configuration -------------------------------------------------------
+
+/// Staleness discount applied to a buffered update's FedAvg weight before
+/// per-commit normalization. `staleness` is the number of commits the
+/// server performed between the client's dispatch and its arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalenessPolicy {
+    /// A constant multiplier. Note it cancels in the per-commit weight
+    /// normalization, so every constant behaves like `1.0` — the variant
+    /// exists as the explicit "no discount" reference.
+    Constant(f64),
+    /// `1 / (1 + staleness)^alpha` — the FedAsync/FedBuff-style polynomial
+    /// decay; `alpha = 0` degenerates to constant.
+    Polynomial {
+        /// decay exponent (`>= 0`)
+        alpha: f64,
+    },
+}
+
+impl StalenessPolicy {
+    /// The weight multiplier for an update that is `staleness` commits old.
+    pub fn discount(&self, staleness: usize) -> f64 {
+        match self {
+            StalenessPolicy::Constant(c) => *c,
+            StalenessPolicy::Polynomial { alpha } => {
+                (1.0 + staleness as f64).powf(-alpha)
+            }
+        }
+    }
+
+    /// Parse the TOML spelling: `constant` (with optional `discount`) or
+    /// `polynomial`/`poly` (with optional `alpha`, default `0.5`). A knob
+    /// belonging to the *other* policy is rejected, never silently
+    /// dropped — `constant` + `alpha` almost certainly meant `polynomial`.
+    pub fn parse(
+        name: &str,
+        discount: Option<f64>,
+        alpha: Option<f64>,
+    ) -> Result<Self> {
+        match name {
+            "constant" => {
+                anyhow::ensure!(
+                    alpha.is_none(),
+                    "async.alpha belongs to the polynomial policy, not constant"
+                );
+                Ok(StalenessPolicy::Constant(discount.unwrap_or(1.0)))
+            }
+            "polynomial" | "poly" => {
+                anyhow::ensure!(
+                    discount.is_none(),
+                    "async.discount belongs to the constant policy, not polynomial"
+                );
+                Ok(StalenessPolicy::Polynomial {
+                    alpha: alpha.unwrap_or(0.5),
+                })
+            }
+            other => anyhow::bail!(
+                "unknown staleness policy {other:?} (constant | polynomial)"
+            ),
+        }
+    }
+
+    /// Bounds-check the policy parameters.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            StalenessPolicy::Constant(c) => anyhow::ensure!(
+                c.is_finite() && *c > 0.0,
+                "async constant discount must be finite and > 0, got {c}"
+            ),
+            StalenessPolicy::Polynomial { alpha } => anyhow::ensure!(
+                alpha.is_finite() && *alpha >= 0.0,
+                "async polynomial alpha must be finite and >= 0, got {alpha}"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Stable canonical encoding (float bit patterns) for the sweep config
+    /// fingerprint.
+    pub fn canonical(&self) -> String {
+        match self {
+            StalenessPolicy::Constant(c) => format!("c{:016x}", c.to_bits()),
+            StalenessPolicy::Polynomial { alpha } => {
+                format!("p{:016x}", alpha.to_bits())
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for StalenessPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StalenessPolicy::Constant(c) => write!(f, "constant({c})"),
+            StalenessPolicy::Polynomial { alpha } => {
+                write!(f, "polynomial({alpha})")
+            }
+        }
+    }
+}
+
+/// Knobs of the buffered asynchronous engine (`[async]` TOML table).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// run the experiment's rounds as async commits instead of sync rounds
+    pub enabled: bool,
+    /// clients kept in flight at all times; `0` means "the experiment's
+    /// `clients_per_round`"
+    pub concurrency: usize,
+    /// commit a new model version every K buffered updates; `0` means
+    /// "equal to the resolved concurrency" (fully-buffered FedAvg)
+    pub buffer_k: usize,
+    /// staleness discount applied to buffered updates' weights
+    pub policy: StalenessPolicy,
+    /// discard updates staler than this many commits (bytes still count);
+    /// `usize::MAX` = never discard
+    pub max_staleness: usize,
+    /// committed versions retained compressed in the [`SnapshotRing`]
+    pub snapshot_ring: usize,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            concurrency: 0,
+            buffer_k: 0,
+            policy: StalenessPolicy::Constant(1.0),
+            max_staleness: usize::MAX,
+            snapshot_ring: 4,
+        }
+    }
+}
+
+impl AsyncConfig {
+    /// Resolve the `0`-means-default knobs against the experiment's
+    /// `clients_per_round`.
+    pub fn resolved(&self, clients_per_round: usize) -> AsyncConfig {
+        let mut r = *self;
+        if r.concurrency == 0 {
+            r.concurrency = clients_per_round;
+        }
+        if r.buffer_k == 0 {
+            r.buffer_k = r.concurrency;
+        }
+        r
+    }
+
+    /// Bounds-check the knobs (called by `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.snapshot_ring >= 1,
+            "async.snapshot_ring must be >= 1"
+        );
+        self.policy.validate()
+    }
+}
+
+// ---- planning ------------------------------------------------------------
+
+/// What ultimately happened to one dispatched client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchOutcome {
+    /// Arrived and was folded into `commit` with the given staleness.
+    Folded {
+        /// commit index the update folded into
+        commit: usize,
+        /// commits performed between dispatch and arrival
+        staleness: usize,
+    },
+    /// Arrived too stale (`staleness > max_staleness`): bytes spent,
+    /// update dropped in commit window `window`.
+    Discarded {
+        /// commit window the discard happened in
+        window: usize,
+        /// the offending staleness
+        staleness: usize,
+    },
+    /// Went offline after the downlink; the server learns at the would-be
+    /// report time and refills the slot. Downlink bytes only.
+    Dropped,
+    /// Still training when the final commit landed; downlink bytes were
+    /// spent, training is never executed.
+    InFlight,
+}
+
+/// One planned client dispatch (slot fill) of the async timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedDispatch {
+    /// dispatch sequence number (index into [`AsyncPlan::dispatches`])
+    pub seq: usize,
+    /// sampler wave the client was drawn from — the RNG/mask key
+    pub wave: u64,
+    /// client id
+    pub cid: usize,
+    /// unnormalized FedAvg weight (example count or 1.0)
+    pub weight: f64,
+    /// virtual dispatch time (seconds)
+    pub start_time: f64,
+    /// virtual report time: `start_time` + the cohort latency draw
+    pub arrival_time: f64,
+    /// server version the client trains against
+    pub start_version: usize,
+    /// planned fate of the uplink
+    pub outcome: DispatchOutcome,
+}
+
+/// One planned commit: which updates fold, in which order, at what weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedCommit {
+    /// dispatch seqs in fold order (virtual arrival order, FIFO-tied)
+    pub updates: Vec<usize>,
+    /// normalized fold weights (`discount(staleness) × weight`, divided by
+    /// the buffer sum — sums to 1)
+    pub weights: Vec<f64>,
+    /// virtual time the commit fired (the K-th buffered arrival)
+    pub virtual_time: f64,
+    /// staleness histogram of the folded updates (index = staleness)
+    pub staleness_hist: Vec<usize>,
+    /// mean buffer fill observed at each event of this commit window
+    pub mean_occupancy: f64,
+    /// arrival/drop events processed during the window
+    pub window_events: usize,
+    /// updates discarded as too stale during the window
+    pub discarded: usize,
+}
+
+/// The fully planned async timeline (a pure function of config + seed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncPlan {
+    /// every slot fill, in dispatch order
+    pub dispatches: Vec<PlannedDispatch>,
+    /// the commits, in version order
+    pub commits: Vec<PlannedCommit>,
+}
+
+/// Virtual-time event: a dispatched client reporting (or being detected as
+/// dropped). Ordered by `(time, seq)`: virtual arrival time first, then
+/// FIFO on the dispatch sequence — an update dispatched at instant `t`
+/// can never overtake one already in flight at `t`. Within one sampler
+/// wave, dispatch order is the wave's order (sorted cids for the uniform
+/// sampler), so same-instant arrivals fold in `(arrival, cid)` order —
+/// and a zero-latency cohort's first commit folds exactly the wave-0
+/// cohort in sync cohort order, which is what makes the first commit
+/// bit-exact vs one synchronous round.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: usize,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap pops the max, so reverse: the smallest key wins
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Round-robin view over the sampler's waves: wave `w` is
+/// `sampler.sample(w)`, consumed one client at a time. Each drawn client
+/// remembers its wave — the key of its RNG, mask, and latency streams.
+struct DispatchStream<'a> {
+    sampler: &'a Sampler,
+    wave: u64,
+    queue: std::collections::VecDeque<usize>,
+    queue_wave: u64,
+}
+
+impl<'a> DispatchStream<'a> {
+    fn new(sampler: &'a Sampler) -> Self {
+        Self {
+            sampler,
+            wave: 0,
+            queue: std::collections::VecDeque::new(),
+            queue_wave: 0,
+        }
+    }
+
+    fn next(&mut self) -> (u64, usize) {
+        if self.queue.is_empty() {
+            self.queue.extend(self.sampler.sample(self.wave));
+            self.queue_wave = self.wave;
+            self.wave += 1;
+        }
+        (self.queue_wave, self.queue.pop_front().expect("non-empty wave"))
+    }
+}
+
+/// Plan the whole async timeline: `commits` commits with `acfg` (must be
+/// [`resolved`](AsyncConfig::resolved)) over the cohort latency/dropout
+/// model. Deterministic in `(acfg, cohort, sampler, seed)`; independent of
+/// scheduling and worker count.
+pub fn plan_async(
+    acfg: &AsyncConfig,
+    cohort: &CohortConfig,
+    sampler: &Sampler,
+    assignment: &ClientAssignment,
+    seed: u64,
+    commits: usize,
+) -> Result<AsyncPlan> {
+    anyhow::ensure!(commits > 0, "async plan needs at least one commit");
+    anyhow::ensure!(acfg.concurrency >= 1, "async concurrency must be >= 1");
+    anyhow::ensure!(acfg.buffer_k >= 1, "async buffer_k must be >= 1");
+    // async has no reporting deadline — staleness replaces it. Dropout and
+    // the latency draws are untouched (plan_cohort consumes its RNG draws
+    // unconditionally, so latencies match the sync draws at the same
+    // (seed, wave, cid)).
+    let async_cohort = CohortConfig {
+        deadline_s: f64::INFINITY,
+        ..*cohort
+    };
+
+    let mut stream = DispatchStream::new(sampler);
+    let mut dispatches: Vec<PlannedDispatch> = Vec::new();
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut dispatch_one =
+        |start_time: f64,
+         start_version: usize,
+         dispatches: &mut Vec<PlannedDispatch>,
+         heap: &mut BinaryHeap<Event>| {
+            let (wave, cid) = stream.next();
+            let p = cohort::plan_cohort(
+                &async_cohort,
+                &[cid],
+                assignment,
+                seed,
+                wave,
+            )
+            .pop()
+            .expect("one plan per client");
+            let seq = dispatches.len();
+            let arrival_time = start_time + p.latency_s;
+            dispatches.push(PlannedDispatch {
+                seq,
+                wave,
+                cid,
+                weight: p.weight,
+                start_time,
+                arrival_time,
+                start_version,
+                outcome: if p.fate == ClientFate::Dropped {
+                    DispatchOutcome::Dropped
+                } else {
+                    DispatchOutcome::InFlight
+                },
+            });
+            heap.push(Event {
+                time: arrival_time,
+                seq,
+            });
+        };
+
+    for _ in 0..acfg.concurrency {
+        dispatch_one(0.0, 0, &mut dispatches, &mut heap);
+    }
+
+    // pure safety net: the loop converges whenever dropout < 1 (enforced
+    // by CohortConfig::validate), but a bound keeps a logic bug loud
+    let dispatch_cap = acfg.concurrency + (commits * acfg.buffer_k + 1) * 1024;
+
+    let mut version = 0usize;
+    let mut buffer: Vec<(usize, usize)> = Vec::new(); // (seq, staleness)
+    let mut out_commits: Vec<PlannedCommit> = Vec::with_capacity(commits);
+    let (mut win_events, mut win_occupancy, mut win_discarded) = (0usize, 0usize, 0usize);
+    while out_commits.len() < commits {
+        anyhow::ensure!(
+            dispatches.len() <= dispatch_cap,
+            "async plan did not converge after {} dispatches \
+             (commits={commits}, K={}, concurrency={})",
+            dispatches.len(),
+            acfg.buffer_k,
+            acfg.concurrency
+        );
+        let e = heap.pop().expect("in-flight slots keep the heap non-empty");
+        win_events += 1;
+        let dropped = dispatches[e.seq].outcome == DispatchOutcome::Dropped;
+        if !dropped {
+            let staleness = version - dispatches[e.seq].start_version;
+            if staleness > acfg.max_staleness {
+                dispatches[e.seq].outcome = DispatchOutcome::Discarded {
+                    window: version,
+                    staleness,
+                };
+                win_discarded += 1;
+            } else {
+                buffer.push((e.seq, staleness));
+            }
+        }
+        win_occupancy += buffer.len();
+
+        if buffer.len() == acfg.buffer_k {
+            let folded = std::mem::take(&mut buffer);
+            let max_stale =
+                folded.iter().map(|&(_, s)| s).max().unwrap_or(0);
+            let mut hist = vec![0usize; max_stale + 1];
+            let mut raw_w = Vec::with_capacity(folded.len());
+            for &(seq, s) in &folded {
+                hist[s] += 1;
+                raw_w.push(acfg.policy.discount(s) * dispatches[seq].weight);
+            }
+            let total: f64 = raw_w.iter().sum();
+            anyhow::ensure!(
+                total > 0.0,
+                "commit {} has non-positive total weight",
+                out_commits.len()
+            );
+            let commit_idx = out_commits.len();
+            let mut updates = Vec::with_capacity(folded.len());
+            let mut weights = Vec::with_capacity(folded.len());
+            for (&(seq, s), &w) in folded.iter().zip(&raw_w) {
+                dispatches[seq].outcome = DispatchOutcome::Folded {
+                    commit: commit_idx,
+                    staleness: s,
+                };
+                updates.push(seq);
+                weights.push(w / total);
+            }
+            out_commits.push(PlannedCommit {
+                updates,
+                weights,
+                virtual_time: e.time,
+                staleness_hist: hist,
+                mean_occupancy: win_occupancy as f64 / win_events as f64,
+                window_events: win_events,
+                discarded: win_discarded,
+            });
+            version += 1;
+            (win_events, win_occupancy, win_discarded) = (0, 0, 0);
+            if out_commits.len() == commits {
+                break; // no refill after the final commit
+            }
+        }
+        dispatch_one(e.time, version, &mut dispatches, &mut heap);
+    }
+
+    Ok(AsyncPlan {
+        dispatches,
+        commits: out_commits,
+    })
+}
+
+impl AsyncPlan {
+    /// Total clients dispatched over the phase (downlink bytes were spent
+    /// for every one of them).
+    pub fn total_dispatched(&self) -> usize {
+        self.dispatches.len()
+    }
+}
+
+// ---- execution -----------------------------------------------------------
+
+/// Everything an async phase needs, borrowed from the experiment.
+pub struct AsyncContext<'a> {
+    /// the bound artifact set (training/eval graphs + manifest)
+    pub model: &'a LoadedModel,
+    /// synthetic-data domain the clients draw batches from
+    pub domain: &'a Domain,
+    /// speaker shards per client
+    pub assignment: &'a ClientAssignment,
+    /// the dispatch stream's client source
+    pub sampler: &'a Sampler,
+    /// PPQ variable-selection policy
+    pub policy: SelectionPolicy,
+    /// client-side hyper-parameters
+    pub train: ClientTrainConfig,
+    /// cohort failure model (dropout + latency; the deadline is ignored —
+    /// `max_staleness` replaces it)
+    pub cohort: CohortConfig,
+    /// resolved async knobs
+    pub acfg: AsyncConfig,
+    /// experiment seed
+    pub seed: u64,
+    /// thread-pool width for codec work and sharded client execution
+    pub workers: usize,
+}
+
+/// Aggregate numbers for one executed commit (the async analog of
+/// `fl::round::RoundOutcome`).
+#[derive(Clone, Debug)]
+pub struct CommitOutcome {
+    /// mean training loss over clients that trained this wave (NaN when
+    /// the wave trained nobody)
+    pub mean_loss: f64,
+    /// server→client bytes for every client dispatched this wave
+    pub down_bytes: usize,
+    /// client→server bytes for every client trained this wave
+    pub up_bytes: usize,
+    /// subset of `up_bytes` from updates planned to be discarded as stale
+    pub up_bytes_discarded: usize,
+    /// max client parameter-store bytes observed this wave
+    pub peak_client_param_bytes: usize,
+    /// clients dispatched from the committed version (the wave size)
+    pub dispatched: usize,
+    /// updates folded into this commit (= buffer K)
+    pub folded: usize,
+    /// wave clients that dropped after the downlink
+    pub dropped: usize,
+    /// wave clients still in flight when the phase ends (downlink spent,
+    /// training skipped)
+    pub in_flight: usize,
+    /// the commit's deterministic metrics record
+    pub commit: CommitRecord,
+}
+
+/// The buffered async executor: owns the plan, the snapshot ring, and the
+/// stash of uploads waiting for their commit. One instance per async
+/// phase; per-call scratch comes from the caller's [`RoundScratch`] so
+/// warmed codec buffers are shared with the sync engine across sweep
+/// cells.
+pub struct AsyncRoundEngine {
+    plan: AsyncPlan,
+    ring: SnapshotRing,
+    /// dispatch seqs grouped by start version (the execution waves)
+    by_version: Vec<Vec<usize>>,
+    /// uploads stashed until their commit folds them (≈ concurrency live)
+    uploads: Vec<Option<Vec<u8>>>,
+    /// bytes of stale-discarded updates, by commit window
+    discard_bytes: Vec<usize>,
+    /// decompressed values of one snapshot version (reused across waves)
+    wave_vals: Vec<Vec<f32>>,
+    /// which version `wave_vals` currently holds (`usize::MAX` = none);
+    /// the drift pass leaves the freshly committed version decoded here,
+    /// so the next wave skips its full-model decompress
+    wave_vals_version: usize,
+    /// spare per-variable buffer for the drift pass (capacity reused)
+    spare_vals: Vec<f32>,
+    /// streaming-fold decode scratch (reused across commits)
+    decode_scratch: Vec<f32>,
+    next_commit: usize,
+}
+
+impl AsyncRoundEngine {
+    /// Plan the phase (`commits` commits) and build a cold engine.
+    pub fn plan(ctx: &AsyncContext<'_>, commits: usize) -> Result<Self> {
+        let plan = plan_async(
+            &ctx.acfg,
+            &ctx.cohort,
+            ctx.sampler,
+            ctx.assignment,
+            ctx.seed,
+            commits,
+        )?;
+        let mut by_version = vec![Vec::new(); commits];
+        for d in &plan.dispatches {
+            by_version[d.start_version].push(d.seq);
+        }
+        let uploads = vec![None; plan.dispatches.len()];
+        Ok(Self {
+            ring: SnapshotRing::new(ctx.acfg.snapshot_ring),
+            discard_bytes: vec![0; commits],
+            uploads,
+            by_version,
+            plan,
+            wave_vals: Vec::new(),
+            wave_vals_version: usize::MAX,
+            spare_vals: Vec::new(),
+            decode_scratch: Vec::new(),
+            next_commit: 0,
+        })
+    }
+
+    /// The planned timeline (read-only — for tests and reporting).
+    pub fn timeline(&self) -> &AsyncPlan {
+        &self.plan
+    }
+
+    /// Commits planned for this phase.
+    pub fn commits_planned(&self) -> usize {
+        self.plan.commits.len()
+    }
+
+    /// The snapshot ring (read-only — for memory accounting and analysis).
+    pub fn ring(&self) -> &SnapshotRing {
+        &self.ring
+    }
+
+    /// Execute the next wave and commit one model version, updating
+    /// `server` in place. Call exactly [`commits_planned`] times.
+    ///
+    /// [`commits_planned`]: Self::commits_planned
+    pub fn run_commit(
+        &mut self,
+        ctx: &AsyncContext<'_>,
+        server: &mut Server,
+        scratch: &mut RoundScratch,
+    ) -> Result<CommitOutcome> {
+        let v = self.next_commit;
+        anyhow::ensure!(
+            v < self.plan.commits.len(),
+            "async phase already finished ({v} commits)"
+        );
+        let specs = &ctx.model.manifest.variables;
+        if v == 0 {
+            // seed the ring with the initial global model (version 0)
+            self.ring.push(
+                0,
+                snapshot_model(
+                    &server.params,
+                    specs,
+                    &ctx.policy,
+                    ctx.train.format,
+                    ctx.train.use_pvt,
+                    ctx.workers,
+                ),
+            );
+        }
+
+        let plan = &self.plan;
+        let tasks: &[usize] = &self.by_version[v];
+        let snap = self.ring.get(v).with_context(|| {
+            format!(
+                "snapshot for version {v} evicted (ring depth {})",
+                self.ring.capacity()
+            )
+        })?;
+
+        // decompressed snapshot values — the raw-shipping side of downlink
+        // assembly (and the drift baseline after the commit). The drift
+        // pass of the previous commit already left this version decoded,
+        // so in the steady state nothing decompresses here.
+        self.wave_vals.resize_with(specs.len(), Vec::new);
+        if self.wave_vals_version != v {
+            for (i, sv) in snap.vars.iter().enumerate() {
+                sv.decompress_into(&mut self.wave_vals[i]);
+            }
+            self.wave_vals_version = v;
+        }
+        let wave_vals: &[Vec<f32>] = &self.wave_vals;
+
+        // per-task PPQ masks + downlinks, assembled in parallel from the
+        // ring entry into pooled buffers (same discipline as fl::round)
+        let masks: Vec<Vec<f32>> = tasks
+            .iter()
+            .map(|&s| {
+                let d = &plan.dispatches[s];
+                ctx.policy.draw_mask(specs, ctx.seed, d.wave, d.cid as u64)
+            })
+            .collect();
+        let bufs = scratch.take_downlink_bufs(tasks.len());
+        let items: Vec<(&Vec<f32>, Vec<u8>)> = masks.iter().zip(bufs).collect();
+        let downlinks: Vec<Vec<u8>> =
+            threadpool::scope_map_send(items, ctx.workers, move |_, (mask, buf)| {
+                assemble_downlink(snap, wave_vals, mask, buf)
+            })?;
+        let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
+
+        // trainable = planned to arrive (folded or stale-discarded);
+        // dropped and end-of-phase in-flight dispatches spend downlink only
+        let trainable: Vec<usize> = (0..tasks.len())
+            .filter(|&t| {
+                matches!(
+                    plan.dispatches[tasks[t]].outcome,
+                    DispatchOutcome::Folded { .. } | DispatchOutcome::Discarded { .. }
+                )
+            })
+            .collect();
+        let (mut dropped, mut in_flight) = (0usize, 0usize);
+        for &s in tasks {
+            match plan.dispatches[s].outcome {
+                DispatchOutcome::Dropped => dropped += 1,
+                DispatchOutcome::InFlight => in_flight += 1,
+                _ => {}
+            }
+        }
+
+        let job = |t: usize, cs: &mut ClientScratch| -> Result<ClientResult> {
+            let d = &plan.dispatches[tasks[t]];
+            let mut rng = Xoshiro256pp::new(hash_seed(&[
+                ctx.seed,
+                CLIENT_STREAM,
+                d.wave,
+                d.cid as u64,
+            ]));
+            client::run_client_round(
+                ctx.model,
+                ctx.domain,
+                ctx.assignment.speakers(d.cid),
+                &downlinks[t],
+                &masks[t],
+                ctx.train,
+                &mut rng,
+                cs,
+            )
+            .with_context(|| format!("client {} wave {}", d.cid, d.wave))
+        };
+
+        // dispatch mirrors fl::round: sharded client execution needs a
+        // Send-safe engine; PJRT executables are !Send and stay pinned
+        #[cfg(not(feature = "pjrt"))]
+        let results: Vec<(usize, ClientResult)> = {
+            let shards = ctx.workers.max(1).min(trainable.len().max(1));
+            if ctx.model.is_send_safe() && shards > 1 && trainable.len() > 1 {
+                let scratches = scratch.client_scratches(shards);
+                let chunk = (trainable.len() + shards - 1) / shards;
+                let items: Vec<(&[usize], &mut ClientScratch)> = trainable
+                    .chunks(chunk)
+                    .zip(scratches.iter_mut())
+                    .collect();
+                let job = &job;
+                let parts = threadpool::scope_map_send(
+                    items,
+                    shards,
+                    move |_, (c, cs): (&[usize], &mut ClientScratch)| {
+                        let mut out = Vec::with_capacity(c.len());
+                        for &t in c {
+                            let r = job(t, cs)?;
+                            out.push((t, r));
+                        }
+                        Ok::<Vec<(usize, ClientResult)>, anyhow::Error>(out)
+                    },
+                )?;
+                let mut flat = Vec::with_capacity(trainable.len());
+                for p in parts {
+                    flat.extend(p?);
+                }
+                flat
+            } else {
+                let cs = &mut scratch.client_scratches(1)[0];
+                let mut out = Vec::with_capacity(trainable.len());
+                for &t in &trainable {
+                    out.push((t, job(t, cs)?));
+                }
+                out
+            }
+        };
+        #[cfg(feature = "pjrt")]
+        let results: Vec<(usize, ClientResult)> = {
+            let cs = &mut scratch.client_scratches(1)[0];
+            let mut out = Vec::with_capacity(trainable.len());
+            for &t in &trainable {
+                out.push((t, job(t, cs)?));
+            }
+            out
+        };
+
+        // stats folded sequentially in task order — NOT per shard — so
+        // every reported f64 is identical for any worker count
+        let (mut loss_sum, mut trained) = (0.0f64, 0usize);
+        let (mut up_bytes, mut up_disc, mut peak) = (0usize, 0usize, 0usize);
+        for (t, r) in results {
+            let d = &plan.dispatches[tasks[t]];
+            up_bytes += r.upload.len();
+            loss_sum += r.loss;
+            trained += 1;
+            peak = peak.max(r.peak_param_bytes);
+            match d.outcome {
+                DispatchOutcome::Folded { .. } => {
+                    self.uploads[d.seq] = Some(r.upload);
+                }
+                DispatchOutcome::Discarded { window, .. } => {
+                    self.discard_bytes[window] += r.upload.len();
+                    up_disc += r.upload.len();
+                }
+                _ => unreachable!("only arriving dispatches train"),
+            }
+        }
+        scratch.return_downlink_bufs(downlinks);
+
+        // fold this commit's planned updates in plan order through ONE
+        // aggregator on this thread — commit bytes are schedule-independent
+        let pc = &plan.commits[v];
+        let mut agg = StreamingAggregator::new(&server.var_lens());
+        for (&s, &w) in pc.updates.iter().zip(&pc.weights) {
+            let wire = self.uploads[s].take().with_context(|| {
+                format!("upload for dispatch {s} missing at commit {v}")
+            })?;
+            agg.accumulate_wire(&wire, w, &mut self.decode_scratch)?;
+        }
+        agg.apply(server)?;
+
+        // snapshot the committed version; drift vs the served version is
+        // RMS over the decompressed views (wave_vals still holds v's)
+        let new_snap = snapshot_model(
+            &server.params,
+            specs,
+            &ctx.policy,
+            ctx.train.format,
+            ctx.train.use_pvt,
+            ctx.workers,
+        );
+        let mut drift_sq = 0.0f64;
+        let mut drift_n = 0usize;
+        for (i, sv) in new_snap.vars.iter().enumerate() {
+            let buf = &mut self.spare_vals;
+            sv.decompress_into(buf);
+            for (a, b) in buf.iter().zip(&self.wave_vals[i]) {
+                let d = (*a - *b) as f64;
+                drift_sq += d * d;
+            }
+            drift_n += buf.len();
+            // leave version v+1 decoded in wave_vals for the next wave
+            // (buf takes the old values, recycling its capacity)
+            std::mem::swap(buf, &mut self.wave_vals[i]);
+        }
+        self.wave_vals_version = v + 1;
+        let param_drift = if drift_n > 0 {
+            (drift_sq / drift_n as f64).sqrt()
+        } else {
+            f64::NAN
+        };
+        self.ring.push(v + 1, new_snap);
+
+        let folded = pc.updates.len();
+        let mean_staleness = {
+            let total: usize = pc.staleness_hist.iter().sum();
+            let weighted: usize = pc
+                .staleness_hist
+                .iter()
+                .enumerate()
+                .map(|(s, &c)| s * c)
+                .sum();
+            weighted as f64 / total.max(1) as f64
+        };
+        let commit = CommitRecord {
+            commit: v,
+            folded,
+            mean_staleness,
+            staleness_hist: pc.staleness_hist.clone(),
+            mean_occupancy: pc.mean_occupancy,
+            window_events: pc.window_events,
+            discarded_updates: pc.discarded,
+            discarded_bytes: self.discard_bytes[v],
+            ring_bytes: self.ring.memory_bytes(),
+            virtual_time: pc.virtual_time,
+            param_drift,
+        };
+        self.next_commit += 1;
+        Ok(CommitOutcome {
+            mean_loss: if trained > 0 {
+                loss_sum / trained as f64
+            } else {
+                f64::NAN
+            },
+            down_bytes,
+            up_bytes,
+            up_bytes_discarded: up_disc,
+            peak_client_param_bytes: peak,
+            dispatched: tasks.len(),
+            folded,
+            dropped,
+            in_flight,
+            commit,
+        })
+    }
+}
+
+/// Compress a committed global model into a ring snapshot: policy-eligible
+/// variables bit-packed at the experiment format (in parallel over the
+/// thread pool), everything else raw. FP32 experiments store everything
+/// raw — byte-identical to the sync downlink source in that case.
+pub fn snapshot_model(
+    params: &[Vec<f32>],
+    specs: &[VarSpec],
+    policy: &SelectionPolicy,
+    format: FloatFormat,
+    use_pvt: bool,
+    workers: usize,
+) -> CompressedModel {
+    let eligible: Vec<bool> = specs
+        .iter()
+        .map(|s| !format.is_fp32() && policy.eligible(s))
+        .collect();
+    let vars = threadpool::scope_map(params, workers, |i, v| {
+        if eligible[i] {
+            StoredVar::compress(v, format, use_pvt)
+        } else {
+            StoredVar::raw(v.clone())
+        }
+    })
+    .expect("snapshot compress worker panicked");
+    CompressedModel::new(vars)
+}
+
+/// Assemble one client's downlink from a ring snapshot: packed variables
+/// ship verbatim when the mask selects them; everything else ships the
+/// snapshot's decompressed values (`vals[i]`, decoded once per wave).
+fn assemble_downlink(
+    snap: &CompressedModel,
+    vals: &[Vec<f32>],
+    mask: &[f32],
+    buf: Vec<u8>,
+) -> Vec<u8> {
+    let cap: usize = snap
+        .vars
+        .iter()
+        .enumerate()
+        .map(|(i, sv)| {
+            if mask[i] > 0.5 && sv.is_packed() {
+                sv.memory_bytes()
+            } else {
+                4 * sv.len()
+            }
+        })
+        .sum();
+    let mut w = WireWriter::with_buf_and_capacity(buf, cap + 19 * snap.vars.len());
+    for (i, sv) in snap.vars.iter().enumerate() {
+        if mask[i] > 0.5 && sv.is_packed() {
+            w.var(sv);
+        } else {
+            w.raw(&vals[i]);
+        }
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+    use crate::fl::sampler::SamplerKind;
+
+    fn assignment(clients: usize) -> ClientAssignment {
+        ClientAssignment::build(Partition::BySpeaker, clients, 64, 7)
+    }
+
+    fn resolved(acfg: AsyncConfig) -> AsyncConfig {
+        acfg.resolved(4)
+    }
+
+    fn plan_with(
+        acfg: AsyncConfig,
+        cohort: CohortConfig,
+        seed: u64,
+        commits: usize,
+    ) -> AsyncPlan {
+        let a = assignment(16);
+        let sampler = Sampler::new(SamplerKind::Uniform, 16, 4, 9);
+        plan_async(&resolved(acfg), &cohort, &sampler, &a, seed, commits).unwrap()
+    }
+
+    fn enabled() -> AsyncConfig {
+        AsyncConfig {
+            enabled: true,
+            ..AsyncConfig::default()
+        }
+    }
+
+    #[test]
+    fn discount_policies() {
+        let c = StalenessPolicy::Constant(0.7);
+        assert_eq!(c.discount(0), 0.7);
+        assert_eq!(c.discount(9), 0.7);
+        let p = StalenessPolicy::Polynomial { alpha: 0.5 };
+        assert_eq!(p.discount(0), 1.0);
+        assert!((p.discount(3) - 0.5).abs() < 1e-12); // (1+3)^-0.5
+        // monotone non-increasing
+        for s in 0..20 {
+            assert!(p.discount(s + 1) <= p.discount(s));
+        }
+        // alpha = 0 degenerates to constant 1
+        let z = StalenessPolicy::Polynomial { alpha: 0.0 };
+        assert_eq!(z.discount(7), 1.0);
+    }
+
+    #[test]
+    fn policy_parse_validate_and_canonical() {
+        assert_eq!(
+            StalenessPolicy::parse("constant", None, None).unwrap(),
+            StalenessPolicy::Constant(1.0)
+        );
+        assert_eq!(
+            StalenessPolicy::parse("poly", None, Some(0.25)).unwrap(),
+            StalenessPolicy::Polynomial { alpha: 0.25 }
+        );
+        assert!(StalenessPolicy::parse("chaos", None, None).is_err());
+        // a knob from the other policy is rejected, not silently dropped
+        assert!(StalenessPolicy::parse("constant", None, Some(0.5)).is_err());
+        assert!(StalenessPolicy::parse("poly", Some(0.9), None).is_err());
+        assert!(StalenessPolicy::Constant(0.0).validate().is_err());
+        assert!(StalenessPolicy::Constant(f64::NAN).validate().is_err());
+        assert!(StalenessPolicy::Polynomial { alpha: -1.0 }
+            .validate()
+            .is_err());
+        StalenessPolicy::Polynomial { alpha: 0.5 }.validate().unwrap();
+        // canonical encodings are distinct per parameter bits
+        assert_ne!(
+            StalenessPolicy::Constant(1.0).canonical(),
+            StalenessPolicy::Constant(0.5).canonical()
+        );
+        assert_ne!(
+            StalenessPolicy::Constant(0.5).canonical(),
+            StalenessPolicy::Polynomial { alpha: 0.5 }.canonical()
+        );
+    }
+
+    #[test]
+    fn config_resolution_and_validation() {
+        let a = AsyncConfig::default();
+        let r = a.resolved(8);
+        assert_eq!(r.concurrency, 8);
+        assert_eq!(r.buffer_k, 8);
+        let b = AsyncConfig {
+            concurrency: 6,
+            buffer_k: 0,
+            ..AsyncConfig::default()
+        }
+        .resolved(8);
+        assert_eq!(b.concurrency, 6);
+        assert_eq!(b.buffer_k, 6);
+        assert!(AsyncConfig {
+            snapshot_ring: 0,
+            ..AsyncConfig::default()
+        }
+        .validate()
+        .is_err());
+        AsyncConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_commit_weights_normalize() {
+        let cohort = CohortConfig {
+            straggler_mean_s: 2.0,
+            weight_by_examples: true,
+            ..CohortConfig::ideal()
+        };
+        let p1 = plan_with(enabled(), cohort, 42, 8);
+        let p2 = plan_with(enabled(), cohort, 42, 8);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.commits.len(), 8);
+        for (j, c) in p1.commits.iter().enumerate() {
+            assert_eq!(c.updates.len(), 4, "commit {j} must fold K updates");
+            let sum: f64 = c.weights.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "commit {j} weights sum {sum}");
+            assert!(c.weights.iter().all(|&w| w > 0.0));
+        }
+        // virtual time is nondecreasing across commits, and fold order
+        // within a commit is nondecreasing in arrival time
+        for w in p1.commits.windows(2) {
+            assert!(w[1].virtual_time >= w[0].virtual_time);
+        }
+        for c in &p1.commits {
+            for pair in c.updates.windows(2) {
+                let (a, b) = (&p1.dispatches[pair[0]], &p1.dispatches[pair[1]]);
+                assert!(b.arrival_time >= a.arrival_time);
+            }
+        }
+        // a different seed moves the timeline
+        let p3 = plan_with(enabled(), cohort, 43, 8);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn zero_latency_first_commit_folds_wave0_in_cohort_order() {
+        // ideal cohort: all latencies 0, so same-instant refills must NOT
+        // overtake the initial wave (FIFO tie-break) and the first
+        // commit's fold order must equal the cohort the uniform sampler
+        // draws — the property the first-commit sync equivalence rests on
+        let plan = plan_with(enabled(), CohortConfig::ideal(), 11, 2);
+        let sampler = Sampler::new(SamplerKind::Uniform, 16, 4, 9);
+        let wave0 = sampler.sample(0);
+        let first: Vec<usize> = plan.commits[0]
+            .updates
+            .iter()
+            .map(|&s| plan.dispatches[s].cid)
+            .collect();
+        assert_eq!(first, wave0, "fold order must be the sorted wave-0 cohort");
+        for &s in &plan.commits[0].updates {
+            assert_eq!(plan.dispatches[s].start_version, 0);
+            assert_eq!(
+                plan.dispatches[s].outcome,
+                DispatchOutcome::Folded {
+                    commit: 0,
+                    staleness: 0
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn constant_discount_cancels_in_normalization() {
+        let cohort = CohortConfig {
+            straggler_mean_s: 1.0,
+            weight_by_examples: true,
+            ..CohortConfig::ideal()
+        };
+        let one = plan_with(
+            AsyncConfig {
+                policy: StalenessPolicy::Constant(1.0),
+                ..enabled()
+            },
+            cohort,
+            5,
+            6,
+        );
+        let half = plan_with(
+            AsyncConfig {
+                policy: StalenessPolicy::Constant(0.5),
+                ..enabled()
+            },
+            cohort,
+            5,
+            6,
+        );
+        for (a, b) in one.commits.iter().zip(&half.commits) {
+            assert_eq!(a.updates, b.updates);
+            assert_eq!(a.weights, b.weights, "constant discount must cancel");
+        }
+    }
+
+    #[test]
+    fn polynomial_discount_downweights_stale_updates() {
+        // K=1 commits on every arrival, so the remaining in-flight clients
+        // accumulate staleness; a poly commit mixing stalenesses must give
+        // the fresher update the larger normalized weight per unit weight
+        let cohort = CohortConfig {
+            straggler_mean_s: 2.0,
+            ..CohortConfig::ideal()
+        };
+        let mut checked = 0;
+        for seed in 0..10u64 {
+            let plan = plan_with(
+                AsyncConfig {
+                    buffer_k: 2,
+                    policy: StalenessPolicy::Polynomial { alpha: 1.0 },
+                    ..enabled()
+                },
+                cohort,
+                seed,
+                12,
+            );
+            for c in &plan.commits {
+                let stals: Vec<usize> = c
+                    .updates
+                    .iter()
+                    .map(|&s| match plan.dispatches[s].outcome {
+                        DispatchOutcome::Folded { staleness, .. } => staleness,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                if stals[0] != stals[1] {
+                    // per-unit-weight normalized weight follows the discount
+                    let per_w: Vec<f64> = c
+                        .updates
+                        .iter()
+                        .zip(&c.weights)
+                        .map(|(&s, &w)| w / plan.dispatches[s].weight)
+                        .collect();
+                    let (fresh, stale) =
+                        if stals[0] < stals[1] { (0, 1) } else { (1, 0) };
+                    assert!(per_w[fresh] > per_w[stale]);
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "no mixed-staleness commit over 10 seeds");
+    }
+
+    #[test]
+    fn max_staleness_zero_discards_overlapping_updates() {
+        // K=1: the first arrival commits immediately, making every other
+        // in-flight client stale — with max_staleness=0 they must all be
+        // discarded on arrival, and the window accounting must see them
+        let cohort = CohortConfig {
+            straggler_mean_s: 2.0,
+            ..CohortConfig::ideal()
+        };
+        let plan = plan_with(
+            AsyncConfig {
+                buffer_k: 1,
+                max_staleness: 0,
+                ..enabled()
+            },
+            cohort,
+            17,
+            6,
+        );
+        let discarded: usize = plan
+            .dispatches
+            .iter()
+            .filter(|d| matches!(d.outcome, DispatchOutcome::Discarded { .. }))
+            .count();
+        assert!(discarded > 0, "expected stale discards");
+        let window_total: usize = plan.commits.iter().map(|c| c.discarded).sum();
+        // every discard recorded in a window that was actually committed
+        // (discards after the final commit are impossible: the plan stops)
+        assert_eq!(discarded, window_total);
+        for d in &plan.dispatches {
+            if let DispatchOutcome::Discarded { staleness, window } = d.outcome {
+                assert!(staleness > 0);
+                assert!(window < plan.commits.len());
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_dispatches_never_fold_and_slots_refill() {
+        let cohort = CohortConfig {
+            dropout_prob: 0.4,
+            straggler_mean_s: 1.0,
+            ..CohortConfig::ideal()
+        };
+        let plan = plan_with(enabled(), cohort, 3, 6);
+        let dropped: usize = plan
+            .dispatches
+            .iter()
+            .filter(|d| d.outcome == DispatchOutcome::Dropped)
+            .count();
+        assert!(dropped > 0, "40% dropout over 6 commits must drop someone");
+        // every commit still folded exactly K updates
+        for c in &plan.commits {
+            assert_eq!(c.updates.len(), 4);
+        }
+        // dispatch order is chronological: refills are created as events
+        // are processed in virtual-time order
+        for d in plan.dispatches.windows(2) {
+            assert!(d[1].start_time >= d[0].start_time);
+            assert!(d[1].start_version >= d[0].start_version);
+        }
+    }
+}

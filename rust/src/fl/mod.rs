@@ -1,7 +1,9 @@
 //! Federated-learning substrate: server state + aggregation (reference and
 //! streaming paths), simulated clients, cohort failure scenarios, client
-//! sampling, and round orchestration.
+//! sampling, synchronous round orchestration, and the buffered
+//! staleness-aware asynchronous engine ([`async_round`]).
 
+pub mod async_round;
 pub mod client;
 pub mod cohort;
 pub mod round;

@@ -104,7 +104,9 @@ impl RoundScratch {
     /// Take `n` downlink buffers from the pool (empty ones are created if
     /// the pool is short). The pool keeps whatever the caller does not
     /// take, so a shrinking cohort never drops warmed capacity.
-    fn take_downlink_bufs(&mut self, n: usize) -> Vec<Vec<u8>> {
+    /// Crate-visible: `fl::async_round` shares the pool, so sync and async
+    /// cells of one sweep worker recycle the same warmed buffers.
+    pub(crate) fn take_downlink_bufs(&mut self, n: usize) -> Vec<Vec<u8>> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.downlink_bufs.pop().unwrap_or_default());
@@ -113,13 +115,13 @@ impl RoundScratch {
     }
 
     /// Return buffers to the pool for the next round.
-    fn return_downlink_bufs(&mut self, bufs: Vec<Vec<u8>>) {
+    pub(crate) fn return_downlink_bufs(&mut self, bufs: Vec<Vec<u8>>) {
         self.downlink_bufs.extend(bufs);
     }
 
     /// At least `n` per-worker client scratches, growing (never shrinking)
     /// the persistent set.
-    fn client_scratches(&mut self, n: usize) -> &mut [ClientScratch] {
+    pub(crate) fn client_scratches(&mut self, n: usize) -> &mut [ClientScratch] {
         if self.clients.len() < n {
             self.clients.resize_with(n, ClientScratch::default);
         }

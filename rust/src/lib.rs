@@ -26,8 +26,10 @@
 //!   the streaming [`fl::server::StreamingAggregator`]), [`fl::client`]
 //!   (one simulated client round, zero-alloc codec contract),
 //!   [`fl::cohort`] (dropout / straggler / weighted-FedAvg failure
-//!   scenarios), [`fl::sampler`], and [`fl::round`] — the streaming,
-//!   sharded round engine.
+//!   scenarios), [`fl::sampler`], [`fl::round`] — the streaming, sharded
+//!   synchronous round engine — and [`fl::async_round`] — the buffered
+//!   staleness-aware asynchronous engine (virtual-time planned, commits
+//!   byte-identical for any worker count; `docs/ASYNC.md`).
 //! * [`coordinator`] — experiment configs (TOML or builders), the
 //!   [`coordinator::Experiment`] driver, presets for the paper's tables
 //!   (including the [`coordinator::presets`] sweep grids), the

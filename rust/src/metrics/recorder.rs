@@ -1,5 +1,14 @@
 //! Round-log recording: per-round metrics to CSV + a JSON summary, the raw
 //! material for EXPERIMENTS.md and the figure-reproduction examples.
+//!
+//! Asynchronous runs (`fl::async_round`) record one [`RoundRecord`] per
+//! *commit* (the async analog of a round) plus a parallel [`CommitRecord`]
+//! carrying the async-only metrics: the per-commit staleness histogram,
+//! buffer occupancy, stale-discarded update bytes, snapshot-ring memory,
+//! and the deterministic virtual-time stamps. Everything in a
+//! `CommitRecord` is a pure function of `(config, seed)` — virtual time
+//! comes from the latency model, never the wall clock — so these fields
+//! may appear in the byte-deterministic sweep summaries.
 
 use std::fs;
 use std::io::Write;
@@ -34,10 +43,40 @@ pub struct RoundRecord {
     pub round_seconds: f64,
 }
 
+/// One async commit's deterministic metrics (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct CommitRecord {
+    /// commit index (== the recorded round index)
+    pub commit: usize,
+    /// updates folded into this commit (the buffer K)
+    pub folded: usize,
+    /// mean staleness of the folded updates
+    pub mean_staleness: f64,
+    /// staleness histogram of the folded updates (index = staleness)
+    pub staleness_hist: Vec<usize>,
+    /// mean buffer fill observed at each event of the commit window
+    pub mean_occupancy: f64,
+    /// arrival/drop events processed during the window
+    pub window_events: usize,
+    /// updates discarded as too stale during the window
+    pub discarded_updates: usize,
+    /// uplink bytes of those discarded updates (spent, never folded)
+    pub discarded_bytes: usize,
+    /// compressed snapshot-ring memory after the commit, bytes
+    pub ring_bytes: usize,
+    /// virtual time the commit fired (simulated seconds — deterministic)
+    pub virtual_time: f64,
+    /// RMS parameter drift of this commit vs the version it replaced
+    pub param_drift: f64,
+}
+
 /// Collects round records and writes them out.
 #[derive(Debug, Default)]
 pub struct Recorder {
     pub records: Vec<RoundRecord>,
+    /// async-only per-commit records (empty for synchronous runs),
+    /// parallel to `records`
+    pub commits: Vec<CommitRecord>,
     pub label: String,
 }
 
@@ -45,12 +84,97 @@ impl Recorder {
     pub fn new(label: &str) -> Self {
         Self {
             records: Vec::new(),
+            commits: Vec::new(),
             label: label.to_string(),
         }
     }
 
     pub fn push(&mut self, r: RoundRecord) {
         self.records.push(r);
+    }
+
+    /// Record one async commit's metrics (async runs push one per round).
+    pub fn push_commit(&mut self, c: CommitRecord) {
+        self.commits.push(c);
+    }
+
+    /// Whether this run recorded async commits.
+    pub fn is_async(&self) -> bool {
+        !self.commits.is_empty()
+    }
+
+    /// Staleness histogram merged over every commit (index = staleness).
+    pub fn staleness_histogram(&self) -> Vec<usize> {
+        let len = self
+            .commits
+            .iter()
+            .map(|c| c.staleness_hist.len())
+            .max()
+            .unwrap_or(0);
+        let mut merged = vec![0usize; len];
+        for c in &self.commits {
+            for (s, &n) in c.staleness_hist.iter().enumerate() {
+                merged[s] += n;
+            }
+        }
+        merged
+    }
+
+    /// Mean staleness over every folded update (NaN with no commits).
+    pub fn mean_staleness(&self) -> f64 {
+        let hist = self.staleness_histogram();
+        let total: usize = hist.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let weighted: usize =
+            hist.iter().enumerate().map(|(s, &n)| s * n).sum();
+        weighted as f64 / total as f64
+    }
+
+    /// Largest staleness any folded update carried.
+    pub fn max_staleness(&self) -> usize {
+        self.staleness_histogram()
+            .iter()
+            .rposition(|&n| n > 0)
+            .unwrap_or(0)
+    }
+
+    /// Event-weighted mean buffer occupancy over the run (NaN when sync).
+    pub fn mean_buffer_occupancy(&self) -> f64 {
+        let events: usize = self.commits.iter().map(|c| c.window_events).sum();
+        if events == 0 {
+            return f64::NAN;
+        }
+        let weighted: f64 = self
+            .commits
+            .iter()
+            .map(|c| c.mean_occupancy * c.window_events as f64)
+            .sum();
+        weighted / events as f64
+    }
+
+    /// Updates discarded as too stale across the run.
+    pub fn total_discarded_updates(&self) -> usize {
+        self.commits.iter().map(|c| c.discarded_updates).sum()
+    }
+
+    /// Uplink bytes spent on stale-discarded updates across the run.
+    pub fn total_discarded_bytes(&self) -> usize {
+        self.commits.iter().map(|c| c.discarded_bytes).sum()
+    }
+
+    /// Snapshot-ring memory after the final commit, bytes.
+    pub fn last_ring_bytes(&self) -> usize {
+        self.commits.last().map(|c| c.ring_bytes).unwrap_or(0)
+    }
+
+    /// Virtual time of the final commit (simulated seconds; NaN when sync).
+    pub fn final_virtual_time(&self) -> f64 {
+        self.commits
+            .last()
+            .map(|c| c.virtual_time)
+            .unwrap_or(f64::NAN)
     }
 
     pub fn last(&self) -> Option<&RoundRecord> {
@@ -177,7 +301,44 @@ impl Recorder {
         ])
     }
 
-    /// Write `<dir>/<label>.csv` and `<dir>/<label>.json`.
+    /// CSV of the async per-commit records (empty string when sync). The
+    /// staleness histogram is `|`-joined inside one column.
+    pub fn commits_csv(&self) -> String {
+        if self.commits.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "commit,folded,mean_staleness,staleness_hist,mean_occupancy,\
+             window_events,discarded_updates,discarded_bytes,ring_bytes,\
+             virtual_time,param_drift\n",
+        );
+        for c in &self.commits {
+            let hist = c
+                .staleness_hist
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("|");
+            out.push_str(&format!(
+                "{},{},{:.4},{},{:.4},{},{},{},{},{:.6},{:.6e}\n",
+                c.commit,
+                c.folded,
+                c.mean_staleness,
+                hist,
+                c.mean_occupancy,
+                c.window_events,
+                c.discarded_updates,
+                c.discarded_bytes,
+                c.ring_bytes,
+                c.virtual_time,
+                c.param_drift
+            ));
+        }
+        out
+    }
+
+    /// Write `<dir>/<label>.csv` and `<dir>/<label>.json` (plus
+    /// `<dir>/<label>_commits.csv` for async runs).
     pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
         fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
@@ -187,6 +348,11 @@ impl Recorder {
         let json_path = dir.join(format!("{}.json", self.label));
         let mut f = fs::File::create(&json_path)?;
         f.write_all(self.summary_json().to_string().as_bytes())?;
+        if self.is_async() {
+            let commits_path = dir.join(format!("{}_commits.csv", self.label));
+            let mut f = fs::File::create(&commits_path)?;
+            f.write_all(self.commits_csv().as_bytes())?;
+        }
         Ok((csv_path, json_path))
     }
 }
@@ -302,5 +468,70 @@ mod tests {
         let r = Recorder::new("e");
         assert!(r.final_wer(3).is_nan());
         assert_eq!(r.rounds_per_min(), 0.0);
+        assert!(!r.is_async());
+        assert!(r.mean_staleness().is_nan());
+        assert!(r.mean_buffer_occupancy().is_nan());
+        assert!(r.final_virtual_time().is_nan());
+        assert_eq!(r.commits_csv(), "");
+    }
+
+    fn commit(commit: usize, hist: Vec<usize>) -> CommitRecord {
+        CommitRecord {
+            commit,
+            folded: hist.iter().sum(),
+            mean_staleness: 0.0,
+            staleness_hist: hist,
+            mean_occupancy: 2.0 + commit as f64,
+            window_events: 4,
+            discarded_updates: commit,
+            discarded_bytes: commit * 100,
+            ring_bytes: 4096,
+            virtual_time: 1.5 * (commit + 1) as f64,
+            param_drift: 1e-3,
+        }
+    }
+
+    #[test]
+    fn async_readers_merge_commit_records() {
+        let mut r = Recorder::new("a");
+        r.push_commit(commit(0, vec![3, 1]));
+        r.push_commit(commit(1, vec![1, 2, 1]));
+        assert!(r.is_async());
+        assert_eq!(r.staleness_histogram(), vec![4, 3, 1]);
+        // (0*4 + 1*3 + 2*1) / 8
+        assert!((r.mean_staleness() - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(r.max_staleness(), 2);
+        // event-weighted occupancy: (2.0*4 + 3.0*4) / 8
+        assert!((r.mean_buffer_occupancy() - 2.5).abs() < 1e-12);
+        assert_eq!(r.total_discarded_updates(), 1);
+        assert_eq!(r.total_discarded_bytes(), 100);
+        assert_eq!(r.last_ring_bytes(), 4096);
+        assert_eq!(r.final_virtual_time(), 3.0);
+        let csv = r.commits_csv();
+        assert!(csv.starts_with("commit,"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("1|2|1"), "{csv}");
+        // header and rows keep the same column count
+        let cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+
+    #[test]
+    fn write_emits_commits_csv_only_for_async_runs() {
+        let dir = std::env::temp_dir().join(format!(
+            "omc_rec_async_test_{}",
+            std::process::id()
+        ));
+        let mut r = Recorder::new("demo");
+        r.push(rec(0, 5.0));
+        r.write(&dir).unwrap();
+        assert!(!dir.join("demo_commits.csv").exists());
+        r.push_commit(commit(0, vec![4]));
+        r.write(&dir).unwrap();
+        let commits = std::fs::read_to_string(dir.join("demo_commits.csv")).unwrap();
+        assert!(commits.starts_with("commit,"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

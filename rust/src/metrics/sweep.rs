@@ -23,7 +23,10 @@ use crate::util::json::{self, Json};
 
 /// Schema version stamped into every summary (bump on field changes so
 /// stale goldens fail loudly instead of diffing field-by-field).
-pub const SWEEP_SCHEMA_VERSION: usize = 1;
+/// v2: `async_mode` on every cell + the `async` metrics object on async
+/// cells (staleness histogram, buffer occupancy, discarded bytes, ring
+/// memory, virtual time — all deterministic in `(config, seed)`).
+pub const SWEEP_SCHEMA_VERSION: usize = 2;
 
 /// Build the deterministic summary document for one finished cell.
 ///
@@ -41,7 +44,7 @@ pub fn cell_summary(
         .into_iter()
         .map(|(r, w)| Json::Arr(vec![json::num(r as f64), json::num(w)]))
         .collect();
-    json::obj(vec![
+    let mut pairs = vec![
         ("cell_index", json::num(index as f64)),
         ("config_hash", json::s(fingerprint)),
         ("label", json::s(&cfg.name)),
@@ -85,7 +88,76 @@ pub fn cell_summary(
             json::num(rec.mean_completion_rate()),
         ),
         ("eval_wer_curve", Json::Arr(curve)),
-    ])
+        ("async_mode", Json::Bool(cfg.async_cfg.enabled)),
+    ];
+    if cfg.async_cfg.enabled {
+        let a = cfg.async_cfg.resolved(cfg.clients_per_round);
+        // merge the histogram once; mean/max derive from it directly
+        // instead of re-merging through the Recorder readers
+        let merged = rec.staleness_histogram();
+        let folded: usize = merged.iter().sum();
+        let mean_staleness = if folded > 0 {
+            merged
+                .iter()
+                .enumerate()
+                .map(|(s, &n)| s * n)
+                .sum::<usize>() as f64
+                / folded as f64
+        } else {
+            f64::NAN
+        };
+        let max_staleness =
+            merged.iter().rposition(|&n| n > 0).unwrap_or(0);
+        let hist: Vec<Json> = merged
+            .into_iter()
+            .map(|n| json::num(n as f64))
+            .collect();
+        pairs.push((
+            "async",
+            json::obj(vec![
+                ("concurrency", json::num(a.concurrency as f64)),
+                ("buffer_k", json::num(a.buffer_k as f64)),
+                ("policy", json::s(&a.policy.to_string())),
+                (
+                    "max_staleness",
+                    if a.max_staleness == usize::MAX {
+                        Json::Null
+                    } else {
+                        json::num(a.max_staleness as f64)
+                    },
+                ),
+                ("snapshot_ring", json::num(a.snapshot_ring as f64)),
+                ("commits", json::num(rec.commits.len() as f64)),
+                ("mean_staleness", json::num(mean_staleness)),
+                (
+                    "max_observed_staleness",
+                    json::num(max_staleness as f64),
+                ),
+                ("staleness_hist", Json::Arr(hist)),
+                (
+                    "mean_buffer_occupancy",
+                    json::num(rec.mean_buffer_occupancy()),
+                ),
+                (
+                    "discarded_updates",
+                    json::num(rec.total_discarded_updates() as f64),
+                ),
+                (
+                    "discarded_update_bytes",
+                    json::num(rec.total_discarded_bytes() as f64),
+                ),
+                (
+                    "snapshot_ring_bytes",
+                    json::num(rec.last_ring_bytes() as f64),
+                ),
+                (
+                    "final_virtual_time",
+                    json::num(rec.final_virtual_time()),
+                ),
+            ]),
+        ));
+    }
+    json::obj(pairs)
 }
 
 /// Build the consolidated sweep summary from per-cell documents (in cell
@@ -247,6 +319,103 @@ mod tests {
             sweep.get("seed").and_then(|v| v.as_str()),
             Some((u64::MAX - 7).to_string().as_str())
         );
+    }
+
+    #[test]
+    fn async_cells_carry_deterministic_async_metrics() {
+        use crate::metrics::recorder::CommitRecord;
+        let mut cfg =
+            ExperimentConfig::default_with("a", Path::new("native:tiny"));
+        cfg.async_cfg.enabled = true;
+        cfg.async_cfg.buffer_k = 3;
+        let mut rec = Recorder::new("a");
+        rec.push_commit(CommitRecord {
+            commit: 0,
+            folded: 3,
+            mean_staleness: 0.5,
+            staleness_hist: vec![2, 1],
+            mean_occupancy: 1.5,
+            window_events: 4,
+            discarded_updates: 1,
+            discarded_bytes: 99,
+            ring_bytes: 2048,
+            virtual_time: 2.25,
+            param_drift: 1e-3,
+        });
+        let run = RunSummary {
+            label: "a".into(),
+            final_wer: 10.0,
+            final_loss: 1.0,
+            param_memory_bytes: 100,
+            memory_ratio: 0.5,
+            comm_bytes_per_round: 10.0,
+            rounds_per_min: 1.0,
+            rounds: 1,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"async_mode\":true"));
+        assert!(text.contains("\"staleness_hist\":[2,1]"));
+        assert!(text.contains("\"discarded_update_bytes\":99"));
+        assert!(text.contains("\"snapshot_ring_bytes\":2048"));
+        assert!(text.contains("\"final_virtual_time\":2.25"));
+        // unlimited staleness records as null, and no timing leaks in
+        assert!(text.contains("\"max_staleness\":null"));
+        assert!(!text.contains("seconds"), "{text}");
+        // buffer_k resolved against the experiment's clients_per_round
+        assert!(text.contains("\"buffer_k\":3"));
+        // a sync cell carries the flag but no async object
+        let sync = sample_cell().to_string();
+        assert!(sync.contains("\"async_mode\":false"));
+        assert!(!sync.contains("\"staleness_hist\""));
+        // round-trip stability holds with the new fields
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
+    fn inf_and_nan_eval_metrics_round_trip_as_null() {
+        // regression: a summary whose eval metrics went non-finite (e.g. a
+        // diverged cell with +inf loss, or NaN WER after a fully-dropped
+        // run) must still emit parseable JSON whose parse∘write is the
+        // identity — never a bare `inf`/`NaN` token
+        let cfg = ExperimentConfig::default_with("x", Path::new("native:tiny"));
+        let mut rec = Recorder::new("x");
+        rec.push(RoundRecord {
+            round: 0,
+            train_loss: f64::INFINITY,
+            eval_loss: 0.5,
+            eval_wer: f64::NAN,
+            down_bytes: 1,
+            up_bytes: 1,
+            up_bytes_discarded: 0,
+            sampled: 1,
+            completed: 1,
+            dropped: 0,
+            late: 0,
+            round_seconds: 0.0,
+        });
+        let run = RunSummary {
+            label: "x".into(),
+            final_wer: f64::NAN,
+            final_loss: f64::INFINITY,
+            param_memory_bytes: 0,
+            memory_ratio: f64::NEG_INFINITY,
+            comm_bytes_per_round: 0.0,
+            rounds_per_min: 0.0,
+            rounds: 1,
+        };
+        let cell = cell_summary(0, &cfg, "ab", &rec, &run);
+        let sweep = sweep_summary("diverged", 1, vec![cell]);
+        let text = sweep.to_string();
+        assert!(text.contains("\"final_wer\":null"));
+        assert!(text.contains("\"final_train_loss\":null"));
+        assert!(text.contains("\"memory_ratio\":null"));
+        for tok in ["inf", "Inf", "NaN", "nan"] {
+            assert!(!text.contains(tok), "unparseable token {tok:?} in {text}");
+        }
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text, "parse∘write must be identity");
     }
 
     #[test]

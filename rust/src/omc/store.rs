@@ -243,6 +243,85 @@ impl CompressedModel {
     }
 }
 
+/// Bounded ring of recent committed model versions, stored compressed.
+///
+/// The async round engine (`fl::async_round`) commits a new global model
+/// version every K buffered updates and pushes each committed version here
+/// as a [`CompressedModel`] — the server applies the paper's own storage
+/// discipline to its version history, so retaining R versions costs
+/// R × compressed bytes instead of R × 4 bytes/param. Downlinks for
+/// clients that train against version `v` are assembled from `get(v)`;
+/// older entries stay addressable for analysis (per-commit parameter
+/// drift, replay tooling) until the ring evicts them.
+///
+/// Versions must be pushed in strictly increasing order; pushing past
+/// `capacity` evicts the oldest entry.
+#[derive(Clone, Debug)]
+pub struct SnapshotRing {
+    cap: usize,
+    entries: std::collections::VecDeque<(usize, CompressedModel)>,
+}
+
+impl SnapshotRing {
+    /// Empty ring retaining at most `capacity` versions (`capacity >= 1`).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "snapshot ring needs capacity >= 1");
+        Self {
+            cap: capacity,
+            entries: std::collections::VecDeque::with_capacity(capacity),
+        }
+    }
+
+    /// Retention capacity the ring was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Number of versions currently retained.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the ring holds no snapshots yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Push the snapshot for `version`, evicting the oldest entry when the
+    /// ring is full. Versions must arrive in strictly increasing order.
+    pub fn push(&mut self, version: usize, model: CompressedModel) {
+        if let Some(&(newest, _)) = self.entries.back() {
+            assert!(
+                version > newest,
+                "snapshot versions must be strictly increasing ({version} after {newest})"
+            );
+        }
+        if self.entries.len() == self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((version, model));
+    }
+
+    /// The snapshot for `version`, if still retained.
+    pub fn get(&self, version: usize) -> Option<&CompressedModel> {
+        self.entries
+            .iter()
+            .find(|(v, _)| *v == version)
+            .map(|(_, m)| m)
+    }
+
+    /// The most recently pushed `(version, snapshot)`.
+    pub fn newest(&self) -> Option<(usize, &CompressedModel)> {
+        self.entries.back().map(|(v, m)| (*v, m))
+    }
+
+    /// Total store bytes across retained snapshots (the quantity the async
+    /// bench reports against the R × 4 bytes/param fp32 alternative).
+    pub fn memory_bytes(&self) -> usize {
+        self.entries.iter().map(|(_, m)| m.memory_bytes()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +447,47 @@ mod tests {
 
     fn packed2_reference(v: &[f32]) -> Vec<f32> {
         StoredVar::compress(v, fmt("S1E3M7"), true).decompress()
+    }
+
+    #[test]
+    fn snapshot_ring_evicts_oldest_and_accounts_memory() {
+        let mut g = Gen::new(8);
+        let f = fmt("S1E4M14");
+        let mk = |g: &mut Gen| {
+            CompressedModel::new(vec![
+                StoredVar::compress(&g.vec_normal(2048, 0.05), f, true),
+                StoredVar::raw(g.vec_normal(64, 1.0)),
+            ])
+        };
+        let mut ring = SnapshotRing::new(3);
+        assert!(ring.is_empty());
+        assert_eq!(ring.memory_bytes(), 0);
+        for v in 0..5 {
+            ring.push(v, mk(&mut g));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.capacity(), 3);
+        // versions 0 and 1 were evicted; 2..=4 remain addressable
+        assert!(ring.get(0).is_none());
+        assert!(ring.get(1).is_none());
+        for v in 2..5 {
+            assert!(ring.get(v).is_some(), "version {v} missing");
+        }
+        let (newest, _) = ring.newest().unwrap();
+        assert_eq!(newest, 4);
+        // compressed retention beats R × fp32 for a mostly-packed model
+        let fp32_bytes = 3 * (2048 + 64) * 4;
+        assert!(ring.memory_bytes() < fp32_bytes);
+        let per_snap = f.packed_bytes(2048) + 8 + 64 * 4;
+        assert_eq!(ring.memory_bytes(), 3 * per_snap);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn snapshot_ring_rejects_stale_versions() {
+        let mut ring = SnapshotRing::new(2);
+        ring.push(3, CompressedModel::default());
+        ring.push(3, CompressedModel::default());
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Async round engine guarantees, end-to-end on the native backend:
+//!
+//! * **Sync equivalence** — with a constant staleness discount, buffer
+//!   `K = concurrency = cohort size`, and an ideal-latency cohort, the
+//!   async engine's first commit performs exactly the f64 operations of
+//!   one synchronous round — same cohort, masks, RNG streams, downlink
+//!   bytes, fold order (zero-latency arrivals process FIFO = the sync
+//!   cohort order) and normalized weights — so the committed model bytes
+//!   are bit-identical to the `StreamingAggregator` sync path.
+//! * **Schedule independence** — sequential vs `scope_map`-pooled async
+//!   execution produces byte-identical committed model bytes AND metrics
+//!   for any worker count (stronger than the sync sharded path, which
+//!   reassociates f64 sums). This is the in-repo twin of the CI
+//!   `async-determinism` leg.
+//! * **Smoke-async sweep determinism** — `sweep::smoke_async` summaries
+//!   are byte-identical across runs and cell-pool scheduling.
+
+use std::path::{Path, PathBuf};
+
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::{sweep, Experiment, SweepOptions};
+use omc_fl::data::partition::Partition;
+use omc_fl::fl::async_round::{AsyncConfig, StalenessPolicy};
+use omc_fl::fl::cohort::CohortConfig;
+use omc_fl::metrics::sweep::cell_summary;
+use omc_fl::runtime::engine::Engine;
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    c.rounds = 1;
+    c.num_clients = 8;
+    c.clients_per_round = 4;
+    c.local_steps = 1;
+    c.lr = 0.2;
+    c.eval_every = 10;
+    c.eval_batches = 2;
+    c.workers = 1;
+    // full selection: every eligible variable ships packed, so the async
+    // snapshot-ring downlink is byte-identical to the sync downlink
+    c.omc = OmcConfig {
+        format: "S1E4M14".parse().unwrap(),
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+    };
+    // by-speaker shards give clients different example counts, so the
+    // weighted normalization is non-trivial
+    c.partition = Partition::BySpeaker;
+    c.cohort = CohortConfig {
+        weight_by_examples: true,
+        ..CohortConfig::ideal()
+    };
+    c
+}
+
+fn run(cfg: ExperimentConfig) -> (Experiment, omc_fl::metrics::recorder::Recorder) {
+    let engine = Engine::cpu().unwrap();
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, _) = exp.run().unwrap();
+    (exp, rec)
+}
+
+fn param_bits(exp: &Experiment) -> Vec<Vec<u32>> {
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn async_first_commit_is_bit_exact_vs_sync_streaming_round() {
+    // sync: one round through the StreamingAggregator path
+    let (sync_exp, sync_rec) = run(base_cfg("sync_ref"));
+
+    // async: one commit, K = concurrency = cohort, constant discount 1.0
+    let mut acfg = base_cfg("async_eq");
+    acfg.async_cfg = AsyncConfig {
+        enabled: true,
+        concurrency: 0, // -> clients_per_round
+        buffer_k: 0,    // -> concurrency
+        policy: StalenessPolicy::Constant(1.0),
+        max_staleness: usize::MAX,
+        snapshot_ring: 2,
+    };
+    let (async_exp, async_rec) = run(acfg);
+
+    assert_eq!(
+        param_bits(&sync_exp),
+        param_bits(&async_exp),
+        "first async commit must be bit-exact vs the sync round"
+    );
+    // everything the folded cohort produced agrees bit-for-bit; the async
+    // engine additionally dispatched replacement clients that were still
+    // in flight when the run ended (their downlinks are honest spend, so
+    // down_bytes/sampled legitimately exceed the sync round's)
+    let (s, a) = (&sync_rec.records[0], &async_rec.records[0]);
+    assert_eq!(s.train_loss.to_bits(), a.train_loss.to_bits());
+    assert_eq!(s.eval_wer.to_bits(), a.eval_wer.to_bits());
+    assert_eq!(s.eval_loss.to_bits(), a.eval_loss.to_bits());
+    assert_eq!(s.up_bytes, a.up_bytes, "only the folded cohort trained");
+    assert_eq!(s.completed, a.completed);
+    assert!(a.down_bytes >= s.down_bytes, "refills spend extra downlink");
+    assert!(a.sampled >= s.sampled);
+    // async bookkeeping for the equivalent commit: no staleness at all
+    assert!(async_rec.is_async());
+    assert_eq!(async_rec.staleness_histogram(), vec![4]);
+    assert_eq!(async_rec.total_discarded_updates(), 0);
+    assert!(async_rec.last_ring_bytes() > 0);
+}
+
+#[test]
+fn async_constant_discount_value_does_not_change_commits() {
+    // the constant cancels in the per-commit normalization: 0.5 scales
+    // weights by an exact power of two that divides out bit-exactly
+    let mk = |c: f64, name: &str| {
+        let mut cfg = base_cfg(name);
+        cfg.rounds = 3;
+        cfg.async_cfg = AsyncConfig {
+            enabled: true,
+            policy: StalenessPolicy::Constant(c),
+            snapshot_ring: 2,
+            ..AsyncConfig::default()
+        };
+        run(cfg).0
+    };
+    assert_eq!(param_bits(&mk(1.0, "c1")), param_bits(&mk(0.5, "c05")));
+}
+
+/// A config that exercises everything at once: stragglers, dropout,
+/// weighted FedAvg, a small buffer, polynomial discount, staleness
+/// discards, and partial selection (the snapshot ring serves some
+/// variables as decompressed copies).
+fn stress_cfg(workers: usize) -> ExperimentConfig {
+    let mut c = base_cfg("async_stress");
+    c.rounds = 5;
+    c.num_clients = 16;
+    c.clients_per_round = 8;
+    c.workers = workers;
+    c.omc.fraction = 0.9;
+    c.cohort = CohortConfig {
+        dropout_prob: 0.1,
+        straggler_mean_s: 2.0,
+        deadline_s: f64::INFINITY,
+        weight_by_examples: true,
+    };
+    c.async_cfg = AsyncConfig {
+        enabled: true,
+        concurrency: 6,
+        buffer_k: 3,
+        policy: StalenessPolicy::Polynomial { alpha: 0.5 },
+        max_staleness: 4,
+        snapshot_ring: 3,
+    };
+    c
+}
+
+#[test]
+fn async_sequential_vs_pooled_is_byte_identical() {
+    let (ref_exp, ref_rec) = run(stress_cfg(1));
+    let ref_bits = param_bits(&ref_exp);
+    // the deterministic cell summary covers every recorded metric and
+    // carries no timing — byte-compare it across worker counts
+    let ref_summary =
+        cell_summary(0, &ref_exp.cfg, "wtest", &ref_rec, &dummy_run()).to_string();
+    assert!(ref_summary.contains("\"async_mode\":true"));
+    for workers in [2usize, 4, 32] {
+        let (exp, rec) = run(stress_cfg(workers));
+        assert_eq!(
+            ref_bits,
+            param_bits(&exp),
+            "committed model bytes diverged at workers={workers}"
+        );
+        let summary =
+            cell_summary(0, &exp.cfg, "wtest", &rec, &dummy_run()).to_string();
+        assert_eq!(
+            ref_summary, summary,
+            "async metrics diverged at workers={workers}"
+        );
+        // the commit-level records agree field by field too
+        assert_eq!(rec.commits_csv(), ref_rec.commits_csv());
+    }
+}
+
+fn dummy_run() -> omc_fl::coordinator::experiment::RunSummary {
+    omc_fl::coordinator::experiment::RunSummary {
+        label: "w".into(),
+        final_wer: 0.0,
+        final_loss: 0.0,
+        param_memory_bytes: 0,
+        memory_ratio: 0.0,
+        comm_bytes_per_round: 0.0,
+        rounds_per_min: 0.0,
+        rounds: 0,
+    }
+}
+
+#[test]
+fn async_run_is_deterministic_across_runs() {
+    let (a, rec_a) = run(stress_cfg(4));
+    let (b, rec_b) = run(stress_cfg(4));
+    assert_eq!(param_bits(&a), param_bits(&b));
+    assert_eq!(rec_a.commits_csv(), rec_b.commits_csv());
+}
+
+#[test]
+fn async_stress_actually_exercises_staleness_and_discards() {
+    // guard against the stress config silently degenerating into the
+    // sync-equivalent regime where the other tests prove nothing
+    let (_, rec) = run(stress_cfg(1));
+    assert_eq!(rec.commits.len(), 5);
+    assert!(rec.mean_staleness() > 0.0, "no staleness observed");
+    assert!(rec.final_virtual_time() > 0.0);
+    // virtual time is monotone across commits
+    for w in rec.commits.windows(2) {
+        assert!(w[1].virtual_time >= w[0].virtual_time);
+    }
+    // ring memory is reported and beats R × fp32 for this mostly-packed model
+    assert!(rec.last_ring_bytes() > 0);
+    // every commit folded exactly K updates with a valid histogram
+    for c in &rec.commits {
+        assert_eq!(c.folded, 3);
+        assert_eq!(c.staleness_hist.iter().sum::<usize>(), 3);
+        assert!(c.mean_occupancy > 0.0);
+        assert!(c.param_drift.is_finite());
+    }
+}
+
+#[test]
+fn smoke_async_sweep_bytes_identical_across_runs_and_scheduling() {
+    let engine = Engine::cpu().unwrap();
+    let tmp = |case: &str| -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "omc_async_sweep_{}_{case}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    };
+    let spec_for = |dir: &PathBuf| {
+        let mut s = sweep::smoke_async(7).unwrap();
+        s.output_dir = dir.clone();
+        s
+    };
+    let opts = |workers: usize, sequential: bool| SweepOptions {
+        workers,
+        sequential,
+        resume: false,
+    };
+    let dirs = [tmp("a"), tmp("b"), tmp("c")];
+    let seq_a = sweep::run_sweep(&engine, &spec_for(&dirs[0]), &opts(1, true)).unwrap();
+    let seq_b = sweep::run_sweep(&engine, &spec_for(&dirs[1]), &opts(1, true)).unwrap();
+    let pooled = sweep::run_sweep(&engine, &spec_for(&dirs[2]), &opts(4, false)).unwrap();
+    assert!(!seq_a.summary_bytes.is_empty());
+    assert_eq!(seq_a.summary_bytes, seq_b.summary_bytes);
+    assert_eq!(seq_a.summary_bytes, pooled.summary_bytes);
+    // the async cells actually recorded async metrics
+    assert!(seq_a.summary_bytes.contains("\"async_mode\":true"));
+    assert!(seq_a.summary_bytes.contains("\"staleness_hist\""));
+    for d in dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+}

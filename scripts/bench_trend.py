@@ -3,16 +3,22 @@
 
 Reads every BENCH_*.json in --dir (default: cwd, where `cargo bench` with
 OMC_BENCH_JSON=1 writes them) and compares per-case `median_ns` against
-the same file under --baselines (default: benches/baselines/). A case
-slower than baseline by more than --threshold (default 25%) prints a
-warning — CI *warns, never fails* on this (shared-runner noise), unless
---strict is passed.
+the same file under --baselines (default: benches/baselines/).
+
+Two tiers:
+  * suites named in --strict-suites (comma-separated, e.g. codec,pack,round)
+    are a FAILING gate: any case slower than baseline by more than
+    --strict-threshold (default 35%) exits 1 with a ::error:: annotation
+    (slowdowns between --threshold and --strict-threshold still warn);
+  * every other suite warns at --threshold (default 25%) and never fails
+    (shared-runner noise), unless --strict promotes them all.
 
 Bless the current numbers as the new baseline:
     python3 scripts/bench_trend.py --bless
+(see benches/baselines/README.md for the full refresh workflow)
 
-Exit codes: 0 = ok/warnings (or regressions without --strict),
-1 = regressions with --strict, 2 = usage error.
+Exit codes: 0 = ok/warnings, 1 = gated regression (strict suite, or any
+regression with --strict), 2 = usage/IO error (incl. malformed JSON).
 """
 
 import argparse
@@ -24,9 +30,25 @@ import sys
 
 
 def load_cases(path):
+    """Parse one BENCH_*.json into {case name: row}. Raises ValueError on
+    malformed JSON or a non-object document — a gate must fail loudly, not
+    silently skip a suite it cannot read."""
     with open(path) as fh:
-        doc = json.load(fh)
+        try:
+            doc = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}: malformed JSON ({e})") from e
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: expected a JSON object")
     return {r["name"]: r for r in doc.get("results", []) if "name" in r}
+
+
+def suite_name(filename):
+    """BENCH_codec.json -> codec"""
+    stem = os.path.basename(filename)
+    if stem.startswith("BENCH_") and stem.endswith(".json"):
+        return stem[len("BENCH_"):-len(".json")]
+    return stem
 
 
 def main():
@@ -36,11 +58,19 @@ def main():
                     help="committed baseline directory")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="relative slowdown that triggers a warning")
+    ap.add_argument("--strict-suites", default="",
+                    help="comma-separated suite names gated as failures "
+                         "(e.g. codec,pack,round)")
+    ap.add_argument("--strict-threshold", type=float, default=0.35,
+                    help="relative slowdown that FAILS a strict suite")
     ap.add_argument("--bless", action="store_true",
                     help="copy fresh results into the baseline directory")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 on regressions (default: warn only)")
+                    help="exit 1 on ANY regression (default: warn only "
+                         "outside --strict-suites)")
     args = ap.parse_args()
+
+    strict_suites = {s.strip() for s in args.strict_suites.split(",") if s.strip()}
 
     fresh_files = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
     if not fresh_files:
@@ -56,15 +86,33 @@ def main():
             print(f"blessed baseline: {dest}")
         return 0
 
-    regressions, improvements, missing = [], [], []
+    failures, warnings, improvements, missing = [], [], [], []
     for f in fresh_files:
         name = os.path.basename(f)
+        suite = suite_name(f)
+        # strict suites FAIL past strict-threshold but keep the ordinary
+        # warning tier below it — a 30% codec slip still prints ::warning::.
+        # --strict means "exit 1 on ANY regression", so it tightens gated
+        # suites to the lower of the two thresholds rather than exempting
+        # them.
+        if suite in strict_suites:
+            fail_threshold = args.strict_threshold
+            if args.strict:
+                fail_threshold = min(fail_threshold, args.threshold)
+        elif args.strict:
+            fail_threshold = args.threshold
+        else:
+            fail_threshold = None
         base_path = os.path.join(args.baselines, name)
         if not os.path.exists(base_path):
             missing.append(name)
             continue
-        fresh_cases = load_cases(f)
-        base_cases = load_cases(base_path)
+        try:
+            fresh_cases = load_cases(f)
+            base_cases = load_cases(base_path)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
         for case, fr in sorted(fresh_cases.items()):
             ba = base_cases.get(case)
             if not ba or not ba.get("median_ns") or not fr.get("median_ns"):
@@ -72,8 +120,10 @@ def main():
             ratio = fr["median_ns"] / ba["median_ns"]
             line = (f"{name}:{case}  baseline {ba['median_ns']:.0f}ns -> "
                     f"fresh {fr['median_ns']:.0f}ns  ({ratio:.2f}x)")
-            if ratio > 1.0 + args.threshold:
-                regressions.append(line)
+            if fail_threshold is not None and ratio > 1.0 + fail_threshold:
+                failures.append((fail_threshold, line))
+            elif ratio > 1.0 + args.threshold:
+                warnings.append((args.threshold, line))
             elif ratio < 1.0 - args.threshold:
                 improvements.append(line)
 
@@ -82,16 +132,19 @@ def main():
               f"`python3 scripts/bench_trend.py --bless` on a quiet machine")
     for line in improvements:
         print(f"bench-trend: improvement: {line}")
-    if regressions:
-        pct = int(args.threshold * 100)
-        for line in regressions:
-            # ::warning:: renders as a GitHub Actions annotation
-            print(f"::warning::bench-trend >{pct}% slowdown: {line}")
-        if args.strict:
-            return 1
-    if not regressions and not missing:
-        print(f"bench-trend: {len(fresh_files)} suite(s) within "
-              f"{int(args.threshold * 100)}% of baseline")
+    for threshold, line in warnings:
+        # ::warning:: renders as a GitHub Actions annotation
+        print(f"::warning::bench-trend >{int(threshold * 100)}% slowdown: {line}")
+    for threshold, line in failures:
+        print(f"::error::bench-trend >{int(threshold * 100)}% slowdown "
+              f"(gated suite): {line}")
+    if failures:
+        return 1
+    if not warnings and not missing:
+        print(f"bench-trend: {len(fresh_files)} suite(s) within tolerance "
+              f"(strict: {sorted(strict_suites) or 'none'} at "
+              f"{int(args.strict_threshold * 100)}%, rest warn at "
+              f"{int(args.threshold * 100)}%)")
     return 0
 
 

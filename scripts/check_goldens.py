@@ -110,10 +110,15 @@ def main():
         print(f"warning: {msg}")
         return 0
 
-    with open(args.golden) as fh:
-        golden = json.load(fh)
-    with open(args.fresh) as fh:
-        fresh = json.load(fh)
+    try:
+        with open(args.golden) as fh:
+            golden = json.load(fh)
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    except json.JSONDecodeError as e:
+        # a gate must fail loudly on an unreadable artifact, not diff junk
+        print(f"error: malformed JSON: {e}", file=sys.stderr)
+        return 2
 
     mismatches = list(walk_diff(golden, fresh, args.rel_tol))
     if not mismatches:
