@@ -3,10 +3,13 @@
 
 use omc_fl::benchkit::{consume, Suite};
 use omc_fl::fl::client::make_downlink;
-use omc_fl::omc::codec::{decode, decode_decompressed, encode, Encoder};
+use omc_fl::omc::codec::{
+    decode, decode_decompressed, encode, verify_frame, Encoder, WireWriter,
+};
 use omc_fl::omc::format::FloatFormat;
 use omc_fl::omc::store::{CompressedModel, StoredVar};
 use omc_fl::util::rng::Xoshiro256pp;
+use omc_fl::util::simd;
 
 fn main() {
     let mut suite = Suite::new("omc::codec whole-model wire path");
@@ -45,6 +48,41 @@ fn main() {
     });
     suite.bench("decode_decompressed (fused)", Some(total), || {
         consume(decode_decompressed(&wire).unwrap());
+    });
+
+    // wire-integrity overhead, isolated: the raw CRC32C kernel over a
+    // whole-model frame (dispatched vs reference), then verify_frame on
+    // the v1 layout (structural walk only — the integrity-off fast path)
+    // and on the checksummed v2 layout (header + per-var CRC)
+    let isa = simd::kernels().level.label();
+    suite.bench(
+        &format!("crc32c [{isa}] ({} KiB frame)", wire.len() / 1024),
+        Some(wire.len()),
+        || {
+            consume(simd::crc32c(0, &wire));
+        },
+    );
+    suite.bench(
+        &format!("crc32c [ref-scalar] ({} KiB frame)", wire.len() / 1024),
+        Some(wire.len()),
+        || {
+            consume(simd::crc32c_reference(0, &wire));
+        },
+    );
+    let mut w2 = WireWriter::with_integrity(0, 0xC4A05);
+    for (v, &m) in global.iter().zip(&mask) {
+        if m > 0.5 {
+            w2.compress_values(v, fmt, true);
+        } else {
+            w2.raw(v);
+        }
+    }
+    let wire2 = w2.finish();
+    suite.bench("verify_frame v1 (structural walk)", Some(total), || {
+        consume(verify_frame(&wire).unwrap().nvars);
+    });
+    suite.bench("verify_frame v2 (CRC all vars)", Some(total), || {
+        consume(verify_frame(&wire2).unwrap().nvars);
     });
 
     let model = CompressedModel::new(

@@ -87,6 +87,28 @@ fn main() {
         });
     }
 
+    // Wire-integrity row: the same OMC round framed in the checksummed v2
+    // layout (per-var CRC32C + nonces both directions). The delta against
+    // the "round OMC S1E4M14" row above is the whole-round integrity cost;
+    // the row above *is* the integrity-off fast path, so its trajectory
+    // doubles as the no-regression gate.
+    {
+        let mut cfg =
+            ExperimentConfig::default_with("round OMC S1E4M14 +integrity", dir);
+        cfg.rounds = 1;
+        cfg.num_clients = 8;
+        cfg.clients_per_round = 4;
+        cfg.eval_every = 10_000;
+        cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+        cfg.omc.integrity = true;
+        let mut exp =
+            Experiment::prepare_with_model(cfg, Arc::clone(&model)).unwrap();
+        exp.warmup().unwrap();
+        suite.bench(&format!("round OMC S1E4M14 +integrity [{isa}]"), None, || {
+            let _ = exp.run_one_round_for_bench().unwrap();
+        });
+    }
+
     // Cohort-scaling rows: the same OMC round at a doubled cohort, run
     // with workers=1 vs workers=4, plus a failure-model round. With the
     // PJRT backend client *training* stays pinned (`Engine::is_send_safe`

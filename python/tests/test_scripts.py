@@ -168,13 +168,14 @@ def test_bench_trend_strict_suites_gate_fails(tmp_path, monkeypatch, capsys):
     )
     assert rc == 1
     assert "::error::" in capsys.readouterr().out
-    # the same regression in a non-gated suite only warns
+    # the same regression in a non-gated suite only warns (the gated suite
+    # must still be present — an absent strict suite is itself a failure)
     argv = trend_env(
         tmp_path, {"gemm": 200.0}, {"gemm": 100.0}, suite="native", tag="t1"
     )
-    rc = run_main(
-        bench_trend, argv + ["--strict-suites", "codec,pack,round"], monkeypatch
-    )
+    write(Path(argv[1]) / "BENCH_codec.json", bench_doc({"pack": 100.0}))
+    write(Path(argv[3]) / "BENCH_codec.json", bench_doc({"pack": 100.0}))
+    rc = run_main(bench_trend, argv + ["--strict-suites", "codec"], monkeypatch)
     assert rc == 0
     assert "::warning::" in capsys.readouterr().out
 
@@ -235,6 +236,44 @@ def test_bench_trend_bless_and_empty_dir(tmp_path, monkeypatch):
         )
         == 0
     )
+
+
+def test_bench_trend_absent_strict_suite_fails(tmp_path, monkeypatch, capsys):
+    # only "codec" produced fresh JSON; the gated "round" bench was skipped
+    # or crashed — that must FAIL the gate, not silently pass
+    argv = trend_env(tmp_path, {"c": 100.0}, {"c": 100.0}, suite="codec")
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,round"], monkeypatch
+    )
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "::error::" in out
+    assert "round" in out
+    # the present suite with the same gate still passes
+    assert run_main(bench_trend, argv + ["--strict-suites", "codec"], monkeypatch) == 0
+
+
+def test_bench_trend_empty_dir_with_strict_suites_fails(tmp_path, monkeypatch, capsys):
+    # an empty fresh dir is a no-op WITHOUT strict suites (covered above),
+    # but with a gate it means every gated bench went missing
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    argv = ["--dir", str(empty), "--baselines", str(tmp_path / "b")]
+    rc = run_main(bench_trend, argv + ["--strict-suites", "codec,round"], monkeypatch)
+    assert rc == 1
+    out = capsys.readouterr().out
+    # one annotation per absent suite, deterministic order
+    assert out.index("'codec'") < out.index("'round'")
+
+
+def test_bench_trend_bless_ignores_absent_strict_suites(tmp_path, monkeypatch):
+    # blessing records whatever ran; the absence gate only guards comparisons
+    argv = trend_env(tmp_path, {"c": 123.0}, None, suite="codec")
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,round", "--bless"], monkeypatch
+    )
+    assert rc == 0
+    assert (Path(argv[3]) / "BENCH_codec.json").exists()
 
 
 def test_bench_trend_suite_name_parsing():

@@ -7,6 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
+use crate::fl::chaos::ChaosConfig;
 use crate::fl::cohort::CohortConfig;
 use crate::fl::sampler::SamplerKind;
 use crate::omc::format::FloatFormat;
@@ -23,6 +24,9 @@ pub struct OmcConfig {
     pub weights_only: bool,
     /// PPQ fraction (Sec. 2.5); 1.0 = all eligible params every client
     pub fraction: f64,
+    /// frame all transport in the checksummed v2 wire layout (CRC32C per
+    /// variable + header CRC + round/client nonce); required by `[chaos]`
+    pub integrity: bool,
 }
 
 impl OmcConfig {
@@ -32,6 +36,7 @@ impl OmcConfig {
             use_pvt: false,
             weights_only: true,
             fraction: 0.0,
+            integrity: false,
         }
     }
 
@@ -41,6 +46,7 @@ impl OmcConfig {
             use_pvt: true,
             weights_only: true,
             fraction: 0.9,
+            integrity: false,
         }
     }
 
@@ -75,6 +81,8 @@ pub struct ExperimentConfig {
     /// `rounds` counts commits and `clients_per_round` seeds the default
     /// concurrency/buffer size
     pub async_cfg: AsyncConfig,
+    /// fault-injection model (`[chaos]` table); requires `omc.integrity`
+    pub chaos: ChaosConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -104,6 +112,7 @@ impl ExperimentConfig {
             omc: OmcConfig::fp32_baseline(),
             cohort: CohortConfig::default(),
             async_cfg: AsyncConfig::default(),
+            chaos: ChaosConfig::default(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -181,6 +190,9 @@ impl ExperimentConfig {
         if let Some(v) = get_f("omc.fraction") {
             cfg.omc.fraction = v;
         }
+        if let Some(v) = get_b("omc.integrity") {
+            cfg.omc.integrity = v;
+        }
         if let Some(v) = get_f("cohort.dropout") {
             cfg.cohort.dropout_prob = v;
         }
@@ -224,6 +236,45 @@ impl ExperimentConfig {
             anyhow::ensure!(v >= 1, "async.snapshot_ring must be >= 1");
             cfg.async_cfg.snapshot_ring = v as usize;
         }
+        let chaos_enabled = get_b("chaos.enabled");
+        if let Some(v) = chaos_enabled {
+            cfg.chaos.enabled = v;
+        }
+        let mut chaos_knobs = false;
+        for (key, field) in [
+            ("chaos.bitflip", &mut cfg.chaos.bitflip_prob as &mut f64),
+            ("chaos.truncate", &mut cfg.chaos.truncate_prob),
+            ("chaos.duplicate", &mut cfg.chaos.duplicate_prob),
+            ("chaos.crash", &mut cfg.chaos.crash_prob),
+            ("chaos.commit_failure", &mut cfg.chaos.commit_failure_prob),
+            ("chaos.backoff_base_s", &mut cfg.chaos.backoff_base_s),
+        ] {
+            if let Some(v) = get_f(key) {
+                *field = v;
+                chaos_knobs = true;
+            }
+        }
+        if let Some(v) = get_i("chaos.max_retries") {
+            anyhow::ensure!(v >= 0, "chaos.max_retries must be >= 0");
+            cfg.chaos.max_retries = v as u32;
+            chaos_knobs = true;
+        }
+        if let Some(v) = get_i("chaos.quarantine_threshold") {
+            anyhow::ensure!(v >= 1, "chaos.quarantine_threshold must be >= 1");
+            cfg.chaos.quarantine_threshold = v as u32;
+            chaos_knobs = true;
+        }
+        if let Some(v) = get_i("chaos.quarantine_rounds") {
+            anyhow::ensure!(v >= 1, "chaos.quarantine_rounds must be >= 1");
+            cfg.chaos.quarantine_rounds = v as u64;
+            chaos_knobs = true;
+        }
+        // fault knobs without the master switch would silently no-op —
+        // reject the misconfiguration instead (same rule as async.policy)
+        anyhow::ensure!(
+            !chaos_knobs || chaos_enabled.is_some(),
+            "[chaos] knobs need an explicit chaos.enabled = true|false"
+        );
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -264,6 +315,15 @@ impl ExperimentConfig {
         );
         self.cohort.validate()?;
         self.async_cfg.validate()?;
+        self.chaos.validate()?;
+        // a corrupt frame on the unchecksummed v1 wire can be
+        // indistinguishable from a valid one — chaos without integrity
+        // would inject faults the server cannot reliably detect
+        anyhow::ensure!(
+            self.chaos.is_off() || self.omc.integrity,
+            "chaos.enabled requires omc.integrity = true (corrupt frames \
+             must be detectable to be rejected)"
+        );
         Ok(())
     }
 }
@@ -429,5 +489,90 @@ mod tests {
     fn baseline_detection() {
         assert!(OmcConfig::fp32_baseline().is_baseline());
         assert!(!OmcConfig::paper("S1E3M7".parse().unwrap()).is_baseline());
+    }
+
+    const CHAOS_SAMPLE: &str = r#"
+        name = "chaos_cell"
+
+        [omc]
+        integrity = true
+
+        [chaos]
+        enabled = true
+        bitflip = 0.1
+        truncate = 0.05
+        duplicate = 0.1
+        crash = 0.02
+        commit_failure = 0.2
+        max_retries = 2
+        backoff_base_s = 0.5
+        quarantine_threshold = 3
+        quarantine_rounds = 2
+    "#;
+
+    #[test]
+    fn parses_chaos_table_and_integrity() {
+        let t = toml::parse(CHAOS_SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.omc.integrity);
+        assert!(c.chaos.enabled);
+        assert_eq!(c.chaos.bitflip_prob, 0.1);
+        assert_eq!(c.chaos.truncate_prob, 0.05);
+        assert_eq!(c.chaos.duplicate_prob, 0.1);
+        assert_eq!(c.chaos.crash_prob, 0.02);
+        assert_eq!(c.chaos.commit_failure_prob, 0.2);
+        assert_eq!(c.chaos.max_retries, 2);
+        assert_eq!(c.chaos.backoff_base_s, 0.5);
+        assert_eq!(c.chaos.quarantine_threshold, 3);
+        assert_eq!(c.chaos.quarantine_rounds, 2);
+        // defaults: everything off, integrity off
+        let plain =
+            ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap())
+                .unwrap();
+        assert!(!plain.omc.integrity);
+        assert!(plain.chaos.is_off());
+    }
+
+    #[test]
+    fn chaos_requires_integrity() {
+        let bad = CHAOS_SAMPLE.replace("integrity = true", "integrity = false");
+        let t = toml::parse(&bad).unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err();
+        assert!(err.to_string().contains("omc.integrity"), "{err}");
+        // integrity alone (no chaos) is fine
+        let quiet = "name = \"x\"\n[omc]\nintegrity = true\n";
+        let c = ExperimentConfig::from_table(&toml::parse(quiet).unwrap()).unwrap();
+        assert!(c.omc.integrity && c.chaos.is_off());
+    }
+
+    #[test]
+    fn rejects_bad_chaos_knobs_and_dangling_table() {
+        for (from, to) in [
+            ("bitflip = 0.1", "bitflip = 1.5"),
+            ("crash = 0.02", "crash = -0.1"),
+            ("max_retries = 2", "max_retries = 99"),
+            ("backoff_base_s = 0.5", "backoff_base_s = -1.0"),
+            ("quarantine_threshold = 3", "quarantine_threshold = 0"),
+            ("quarantine_rounds = 2", "quarantine_rounds = 0"),
+        ] {
+            let bad = CHAOS_SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+        // bitflip + truncate must leave room for a clean attempt
+        let saturated = CHAOS_SAMPLE
+            .replace("bitflip = 0.1", "bitflip = 0.6")
+            .replace("truncate = 0.05", "truncate = 0.5");
+        assert!(
+            ExperimentConfig::from_table(&toml::parse(&saturated).unwrap())
+                .is_err()
+        );
+        // fault knobs without the master switch must be rejected, not
+        // silently ignored
+        let dangling = CHAOS_SAMPLE.replace("enabled = true", "");
+        let err =
+            ExperimentConfig::from_table(&toml::parse(&dangling).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("chaos.enabled"), "{err}");
     }
 }

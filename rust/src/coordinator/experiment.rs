@@ -10,6 +10,7 @@ use crate::coordinator::params_io;
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::{collapse_words, Domain, TaskConfig};
 use crate::fl::async_round::{AsyncContext, AsyncRoundEngine};
+use crate::fl::chaos::Quarantine;
 use crate::fl::client::ClientTrainConfig;
 use crate::fl::round::{RoundContext, RoundEngine};
 use crate::fl::sampler::Sampler;
@@ -122,6 +123,8 @@ impl Experiment {
             format: omc.format,
             use_pvt: omc.use_pvt,
             fp32_baseline: omc.is_baseline(),
+            // the engines stamp the per-client nonce when integrity is on
+            uplink_nonce: None,
         }
     }
 
@@ -216,6 +219,9 @@ impl Experiment {
             policy,
             train,
             cohort: self.cfg.cohort,
+            chaos: self.cfg.chaos,
+            integrity: self.cfg.omc.integrity,
+            quarantined: &[],
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };
@@ -263,6 +269,19 @@ impl Experiment {
                 self.cfg.cohort.weight_by_examples
             );
         }
+        if !self.cfg.chaos.is_off() {
+            crate::log_info!(
+                "chaos engine: bitflip={}, truncate={}, duplicate={}, crash={}, commit_failure={}, retries={}, quarantine {}x{} rounds",
+                self.cfg.chaos.bitflip_prob,
+                self.cfg.chaos.truncate_prob,
+                self.cfg.chaos.duplicate_prob,
+                self.cfg.chaos.crash_prob,
+                self.cfg.chaos.commit_failure_prob,
+                self.cfg.chaos.max_retries,
+                self.cfg.chaos.quarantine_threshold,
+                self.cfg.chaos.quarantine_rounds
+            );
+        }
         if self.cfg.async_cfg.enabled {
             self.run_async_rounds(rounds, &mut rec, policy, train)?;
         } else {
@@ -296,8 +315,13 @@ impl Experiment {
         policy: SelectionPolicy,
         train: ClientTrainConfig,
     ) -> Result<()> {
+        let mut quarantine = Quarantine::new();
         for r in 0..self.cfg.rounds {
             let t = Timer::start();
+            // the ladder's verdicts from earlier rounds gate this round's
+            // sampled cohort; async runs keep their timeline instead
+            // (planned up front) — see docs/ROBUSTNESS.md
+            let quarantined = quarantine.quarantined_at(r as u64);
             let ctx = RoundContext {
                 model: &self.model,
                 domain: &self.domain,
@@ -306,10 +330,29 @@ impl Experiment {
                 policy,
                 train,
                 cohort: self.cfg.cohort,
+                chaos: self.cfg.chaos,
+                integrity: self.cfg.omc.integrity,
+                quarantined: &quarantined,
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
             };
             let outcome = rounds.run(&ctx, &mut self.server)?;
+            for rep in &outcome.chaos_reports {
+                if quarantine.record(
+                    &self.cfg.chaos,
+                    rep.cid,
+                    rep.corrupt_frames,
+                    rep.delivered_clean,
+                    r as u64,
+                ) {
+                    crate::log_info!(
+                        "round {:>4}: client {} quarantined for {} rounds",
+                        r,
+                        rep.cid,
+                        self.cfg.chaos.quarantine_rounds
+                    );
+                }
+            }
             let round_seconds = t.elapsed_s();
             let (wer, eval_loss) = self.maybe_evaluate(r)?;
             if wer >= 0.0 {
@@ -340,6 +383,9 @@ impl Experiment {
                 completed: outcome.completed,
                 dropped: outcome.dropped,
                 late: outcome.late,
+                crashed: outcome.crashed,
+                frames_rejected: outcome.frames_rejected,
+                up_bytes_rejected: outcome.up_bytes_rejected,
                 round_seconds,
             });
         }
@@ -385,15 +431,38 @@ impl Experiment {
             policy,
             train,
             cohort: self.cfg.cohort,
+            chaos: self.cfg.chaos,
+            integrity: self.cfg.omc.integrity,
             acfg,
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };
         let mut engine = AsyncRoundEngine::plan(&ctx, self.cfg.rounds)?;
+        // async timelines are planned up front, so the ladder cannot gate
+        // dispatch — it still tracks strikes for monitoring parity with
+        // the sync engine (docs/ROBUSTNESS.md)
+        let mut quarantine = Quarantine::new();
         for r in 0..self.cfg.rounds {
             let t = Timer::start();
             let outcome =
                 engine.run_commit(&ctx, &mut self.server, rounds.scratch_mut())?;
+            for rep in &outcome.chaos_reports {
+                if quarantine.record(
+                    &self.cfg.chaos,
+                    rep.cid,
+                    rep.corrupt_frames,
+                    rep.delivered_clean,
+                    r as u64,
+                ) {
+                    crate::log_info!(
+                        "commit {:>4}: client {} crossed the quarantine \
+                         threshold ({} strikes)",
+                        r,
+                        rep.cid,
+                        self.cfg.chaos.quarantine_threshold
+                    );
+                }
+            }
             let round_seconds = t.elapsed_s();
             let (wer, eval_loss) = self.maybe_evaluate(r)?;
             if wer >= 0.0 {
@@ -426,6 +495,9 @@ impl Experiment {
                 completed: outcome.folded,
                 dropped: outcome.dropped,
                 late: outcome.commit.discarded_updates,
+                crashed: outcome.crashed,
+                frames_rejected: outcome.frames_rejected,
+                up_bytes_rejected: outcome.up_bytes_rejected,
                 round_seconds,
             });
             rec.push_commit(outcome.commit);

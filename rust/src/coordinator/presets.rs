@@ -95,6 +95,7 @@ pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
                 use_pvt: false,
                 weights_only: false,
                 fraction: 1.0,
+                integrity: false,
             },
         ),
         (
@@ -104,6 +105,7 @@ pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
                 use_pvt: true,
                 weights_only: false,
                 fraction: 1.0,
+                integrity: false,
             },
         ),
         (
@@ -113,6 +115,7 @@ pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
                 use_pvt: true,
                 weights_only: true,
                 fraction: 1.0,
+                integrity: false,
             },
         ),
         (
@@ -122,6 +125,7 @@ pub fn table4_ladder(format: &str) -> Result<Vec<(String, OmcConfig)>> {
                 use_pvt: true,
                 weights_only: true,
                 fraction: 0.9,
+                integrity: false,
             },
         ),
     ])
@@ -326,6 +330,7 @@ pub fn fig3_grid(model_dir: &str, scale: &Scale, format: &str) -> Result<SweepSp
             use_pvt,
             weights_only: false, // quantize everything: the unstable regime
             fraction: 1.0,
+            integrity: false,
         };
         let mut cfg =
             experiment(label, model_dir, scale, Partition::Iid, 0, omc, out);
@@ -352,6 +357,7 @@ pub fn fig4_grid(
             use_pvt: true,
             weights_only: true,
             fraction: 1.0,
+            integrity: false,
         })
     };
     let variants: Vec<(String, OmcConfig)> = vec![
@@ -362,6 +368,7 @@ pub fn fig4_grid(
                 use_pvt: true,
                 weights_only: true,
                 fraction: 0.9,
+                integrity: false,
             },
         ),
         ("APQ S1E3M9 @ 100%".into(), apq("S1E3M9")?),

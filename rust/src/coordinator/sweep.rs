@@ -52,6 +52,7 @@ use crate::coordinator::config::{ExperimentConfig, OmcConfig};
 use crate::coordinator::experiment::{self, Experiment, RunSummary};
 use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
+use crate::fl::chaos::ChaosConfig;
 use crate::fl::cohort::CohortConfig;
 use crate::fl::round::RoundEngine;
 use crate::metrics::stats::Timer;
@@ -202,7 +203,9 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
          eval_every={};eval_batches={};fmt={};pvt={};wo={};frac={:016x};\
          dropout={:016x};straggler={:016x};deadline={:016x};weighted={};\
          init={};save={};workers={};\
-         async={};aconc={};ak={};apol={};astale={};aring={}",
+         async={};aconc={};ak={};apol={};astale={};aring={};\
+         integrity={};chaos={};cbf={:016x};ctr={:016x};cdup={:016x};\
+         ccr={:016x};ccf={:016x};cret={};cbo={:016x};cqt={};cqr={}",
         summaries::SWEEP_SCHEMA_VERSION,
         cfg.name,
         cfg.model_dir.display(),
@@ -241,6 +244,17 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
         cfg.async_cfg.policy.canonical(),
         cfg.async_cfg.max_staleness,
         cfg.async_cfg.snapshot_ring,
+        cfg.omc.integrity,
+        cfg.chaos.enabled,
+        cfg.chaos.bitflip_prob.to_bits(),
+        cfg.chaos.truncate_prob.to_bits(),
+        cfg.chaos.duplicate_prob.to_bits(),
+        cfg.chaos.crash_prob.to_bits(),
+        cfg.chaos.commit_failure_prob.to_bits(),
+        cfg.chaos.max_retries,
+        cfg.chaos.backoff_base_s.to_bits(),
+        cfg.chaos.quarantine_threshold,
+        cfg.chaos.quarantine_rounds,
     )
 }
 
@@ -334,6 +348,40 @@ fn cohort_by_name(name: &str) -> Result<CohortConfig> {
         },
         other => anyhow::bail!(
             "unknown cohort scenario {other:?} (ideal | dropout | stragglers | stress)"
+        ),
+    })
+}
+
+/// Named fault-injection scenario for the `sweep.chaos` axis. Any scenario
+/// other than `off` forces `omc.integrity = true` on its cells — corrupt
+/// frames must be detectable to be rejected.
+fn chaos_by_name(name: &str) -> Result<ChaosConfig> {
+    Ok(match name {
+        "off" => ChaosConfig::default(),
+        "light" => ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.05,
+            truncate_prob: 0.05,
+            duplicate_prob: 0.05,
+            crash_prob: 0.05,
+            commit_failure_prob: 0.05,
+            ..ChaosConfig::default()
+        },
+        "heavy" => ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.25,
+            truncate_prob: 0.15,
+            duplicate_prob: 0.2,
+            crash_prob: 0.1,
+            // high enough that the smoke-chaos async cell's 4 planned
+            // commits register at least one failure at the CI seed (its
+            // lowest commit draw sits just under 0.29) — the
+            // chaos-determinism gate greps for a nonzero counter
+            commit_failure_prob: 0.35,
+            ..ChaosConfig::default()
+        },
+        other => anyhow::bail!(
+            "unknown chaos scenario {other:?} (off | light | heavy)"
         ),
     })
 }
@@ -451,62 +499,84 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
         }
     };
 
+    // fault-injection axis: named chaos scenarios (`chaos_by_name`); any
+    // non-`off` entry forces wire integrity on its cells
+    let chaoses: Vec<(String, ChaosConfig)> = match axis_strs("sweep.chaos")? {
+        None => vec![(String::new(), base.chaos)],
+        Some(names) => names
+            .iter()
+            .map(|n| chaos_by_name(n).map(|c| (n.clone(), c)))
+            .collect::<Result<_>>()?,
+    };
+
     let mut spec = SweepSpec::new(&base.name, base.seed, &base.output_dir);
     let multi_axis = partitions.len() > 1
         || domains.len() > 1
         || cohorts.len() > 1
-        || modes.len() > 1;
+        || modes.len() > 1
+        || chaoses.len() > 1;
     for &partition in &partitions {
         for &domain in &domains {
             for (cohort_name, cohort) in &cohorts {
                 for mode in &modes {
-                    let suffix = if multi_axis {
-                        let c = if cohort_name.is_empty() {
-                            String::new()
+                    for (chaos_name, chaos) in &chaoses {
+                        let suffix = if multi_axis {
+                            let c = if cohort_name.is_empty() {
+                                String::new()
+                            } else {
+                                format!("_{cohort_name}")
+                            };
+                            let m = if modes.len() > 1 {
+                                format!("_{mode}")
+                            } else {
+                                String::new()
+                            };
+                            let x = if chaos_name.is_empty() {
+                                String::new()
+                            } else {
+                                format!("_{chaos_name}")
+                            };
+                            format!("_{partition}_d{domain}{c}{m}{x}")
                         } else {
-                            format!("_{cohort_name}")
-                        };
-                        let m = if modes.len() > 1 {
-                            format!("_{mode}")
-                        } else {
                             String::new()
                         };
-                        format!("_{partition}_d{domain}{c}{m}")
-                    } else {
-                        String::new()
-                    };
-                    let mut cell_with = |label: String, omc: OmcConfig| {
-                        let mut c = base.clone();
-                        c.name = label;
-                        c.omc = omc;
-                        c.partition = partition;
-                        c.domain = domain;
-                        c.cohort = *cohort;
-                        c.async_cfg.enabled = mode == "async";
-                        spec.cells.push(c);
-                    };
-                    if formats.iter().any(|f| f.is_fp32()) {
-                        cell_with(
-                            format!("fp32_baseline{suffix}"),
-                            OmcConfig::fp32_baseline(),
-                        );
-                    }
-                    for &fmt in formats.iter().filter(|f| !f.is_fp32()) {
-                        for &use_pvt in &pvts {
-                            for &fraction in &fractions {
-                                let label = format!(
-                                    "{fmt}_{}_f{fraction}{suffix}",
-                                    if use_pvt { "pvt" } else { "nopvt" }
-                                );
-                                cell_with(
-                                    label,
-                                    OmcConfig {
-                                        format: fmt,
-                                        use_pvt,
-                                        weights_only: base.omc.weights_only,
-                                        fraction,
-                                    },
-                                );
+                        let mut cell_with = |label: String, omc: OmcConfig| {
+                            let mut c = base.clone();
+                            c.name = label;
+                            c.omc = omc;
+                            c.omc.integrity =
+                                base.omc.integrity || !chaos.is_off();
+                            c.partition = partition;
+                            c.domain = domain;
+                            c.cohort = *cohort;
+                            c.async_cfg.enabled = mode == "async";
+                            c.chaos = *chaos;
+                            spec.cells.push(c);
+                        };
+                        if formats.iter().any(|f| f.is_fp32()) {
+                            cell_with(
+                                format!("fp32_baseline{suffix}"),
+                                OmcConfig::fp32_baseline(),
+                            );
+                        }
+                        for &fmt in formats.iter().filter(|f| !f.is_fp32()) {
+                            for &use_pvt in &pvts {
+                                for &fraction in &fractions {
+                                    let label = format!(
+                                        "{fmt}_{}_f{fraction}{suffix}",
+                                        if use_pvt { "pvt" } else { "nopvt" }
+                                    );
+                                    cell_with(
+                                        label,
+                                        OmcConfig {
+                                            format: fmt,
+                                            use_pvt,
+                                            weights_only: base.omc.weights_only,
+                                            fraction,
+                                            integrity: base.omc.integrity,
+                                        },
+                                    );
+                                }
                             }
                         }
                     }
@@ -561,6 +631,7 @@ pub fn smoke(seed: u64) -> Result<SweepSpec> {
                 use_pvt: true,
                 weights_only: false,
                 fraction: 1.0,
+                integrity: false,
             },
         ),
     ];
@@ -597,6 +668,7 @@ pub fn smoke_async(seed: u64) -> Result<SweepSpec> {
         use_pvt: true,
         weights_only: true,
         fraction: 1.0,
+        integrity: false,
     };
     // stragglers make staleness real; async ignores the deadline
     let straggled = CohortConfig {
@@ -650,6 +722,68 @@ pub fn smoke_async(seed: u64) -> Result<SweepSpec> {
         c.name = label.to_string();
         c.async_cfg = acfg;
         c.cohort = cohort;
+        c.workers = workers;
+        spec.cells.push(c);
+    }
+    spec.finalize()
+}
+
+/// The chaos CI smoke tier (`--profile smoke-chaos`): four `native:tiny`
+/// cells exercising the wire-integrity + fault-injection stack end to end.
+/// One clean cell proves the checksummed v2 frames round-trip with zero
+/// rejections; two sync cells inject heavy faults (one tuned to trip the
+/// quarantine ladder); one async cell adds commit failures on top and runs
+/// with `workers = 4` — rejected-frame accounting happens in the
+/// deterministic task-order results pass, so its summary is worker-count
+/// independent. The CI `chaos-determinism` leg runs this profile at two
+/// worker counts plus `OMC_FORCE_SCALAR=1` and `cmp`s the summaries.
+pub fn smoke_chaos(seed: u64) -> Result<SweepSpec> {
+    let mut base =
+        ExperimentConfig::default_with("smoke_chaos", Path::new("native:tiny"));
+    base.rounds = 4;
+    base.num_clients = 8;
+    base.clients_per_round = 4;
+    base.local_steps = 1;
+    base.lr = 0.2;
+    base.eval_every = 2;
+    base.eval_batches = 2;
+    base.workers = 1; // byte-stable sync aggregation order
+    base.output_dir = PathBuf::from("results/sweep_smoke_chaos");
+    base.omc = OmcConfig {
+        format: "S1E4M14".parse()?,
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+        integrity: true,
+    };
+
+    let heavy = chaos_by_name("heavy")?;
+    // every corrupt frame counts against the client immediately — with
+    // heavy fault rates this trips the ladder within the smoke horizon
+    let trigger_happy = ChaosConfig {
+        quarantine_threshold: 1,
+        ..heavy
+    };
+
+    let mut spec = SweepSpec::new("sweep_smoke_chaos", seed, &base.output_dir);
+    let cells: Vec<(&str, ChaosConfig, bool, usize)> = vec![
+        ("sync_integrity_clean", ChaosConfig::default(), false, 1),
+        ("sync_chaos_heavy", heavy, false, 1),
+        ("sync_chaos_quarantine", trigger_happy, false, 1),
+        ("async_chaos_heavy", heavy, true, 4),
+    ];
+    for (label, chaos, is_async, workers) in cells {
+        let mut c = base.clone();
+        c.name = label.to_string();
+        c.chaos = chaos;
+        if is_async {
+            c.async_cfg = AsyncConfig {
+                enabled: true,
+                buffer_k: 2,
+                snapshot_ring: 2,
+                ..AsyncConfig::default()
+            };
+        }
         c.workers = workers;
         spec.cells.push(c);
     }
@@ -1120,6 +1254,96 @@ mod tests {
     }
 
     #[test]
+    fn chaos_axis_expands_named_scenarios_and_forces_integrity() {
+        let toml_text =
+            format!("{SWEEP_TOML}\nchaos = [\"off\", \"heavy\"]\n");
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 2 chaos scenarios × 5 cells
+        assert_eq!(spec.cells.len(), 10);
+        assert!(spec.cells[0].name.ends_with("_off"));
+        assert!(spec.cells[0].chaos.is_off());
+        assert!(!spec.cells[0].omc.integrity, "off keeps base integrity");
+        assert!(spec.cells[5].name.ends_with("_heavy"));
+        assert!(!spec.cells[5].chaos.is_off());
+        // chaos cells must be able to detect the corruption they inject
+        assert!(spec.cells[5].omc.integrity);
+        spec.validate().unwrap();
+        // unknown scenario names are rejected
+        let bad = format!("{SWEEP_TOML}\nchaos = [\"cosmic\"]\n");
+        assert!(from_table(&toml::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn smoke_chaos_profile_covers_the_fault_matrix() {
+        let spec = smoke_chaos(7).unwrap();
+        assert_eq!(spec.name, "sweep_smoke_chaos");
+        assert_eq!(spec.cells.len(), 4);
+        for c in &spec.cells {
+            assert!(c.rounds <= 8, "smoke must stay CI-fast");
+            assert_eq!(c.model_dir.to_str(), Some("native:tiny"));
+            assert!(c.omc.integrity, "{}: chaos tier always frames v2", c.name);
+            c.validate().unwrap();
+        }
+        // one clean control cell, the rest inject faults
+        assert_eq!(spec.cells.iter().filter(|c| c.chaos.is_off()).count(), 1);
+        // one cell trips the quarantine ladder on the first corrupt frame
+        assert!(spec
+            .cells
+            .iter()
+            .any(|c| !c.chaos.is_off() && c.chaos.quarantine_threshold == 1));
+        // the async cell layers commit failures on top and runs pooled
+        let async_cells: Vec<_> = spec
+            .cells
+            .iter()
+            .filter(|c| c.async_cfg.enabled)
+            .collect();
+        assert_eq!(async_cells.len(), 1);
+        assert!(async_cells[0].chaos.commit_failure_prob > 0.0);
+        assert!(async_cells[0].workers > 1);
+        // sync cells stay pinned for byte-stable fold order
+        assert!(spec
+            .cells
+            .iter()
+            .filter(|c| !c.async_cfg.enabled)
+            .all(|c| c.workers == 1));
+        // determinism of the expansion itself
+        let again = smoke_chaos(7).unwrap();
+        let names: Vec<_> = spec.cells.iter().map(|c| &c.name).collect();
+        assert_eq!(
+            names,
+            again.cells.iter().map(|c| &c.name).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fingerprint_covers_integrity_and_chaos_knobs() {
+        let spec = smoke_chaos(1).unwrap();
+        let clean = &spec.cells[0];
+        let stormy = &spec.cells[1];
+        assert_ne!(fingerprint_hex(clean), fingerprint_hex(stormy));
+        // integrity alone moves the hash — a resumed CRC-off summary must
+        // not satisfy a CRC-on cell
+        let base = fingerprint_hex(clean);
+        let mut c = clean.clone();
+        c.omc.integrity = false;
+        assert_ne!(base, fingerprint_hex(&c));
+        // every chaos knob moves the hash
+        let base = fingerprint_hex(stormy);
+        let mut c = stormy.clone();
+        c.chaos.bitflip_prob += 0.01;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = stormy.clone();
+        c.chaos.max_retries += 1;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = stormy.clone();
+        c.chaos.quarantine_threshold += 1;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = stormy.clone();
+        c.chaos.backoff_base_s *= 2.0;
+        assert_ne!(base, fingerprint_hex(&c));
+    }
+
+    #[test]
     fn fingerprint_covers_async_knobs() {
         let spec = smoke_async(1).unwrap();
         let sync_cell = &spec.cells[0];
@@ -1242,6 +1466,25 @@ mod tests {
         assert!(spec.cells.iter().all(|c| c.workers == 1));
         assert!(spec.cells.iter().all(|c| c.model_dir.to_str()
             == Some("native:tiny")));
+    }
+
+    #[test]
+    fn example_chaos_sweep_config_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/sweep_chaos.toml");
+        let spec = from_toml_file(&path).unwrap();
+        // 2 modes × 1 format = 2 cells, no baseline (formats has no FP32)
+        assert_eq!(spec.cells.len(), 2);
+        for c in &spec.cells {
+            assert!(c.omc.integrity, "{}", c.name);
+            assert!(!c.chaos.is_off(), "{}", c.name);
+            assert!(c.chaos.bitflip_prob > 0.0);
+            assert_eq!(c.chaos.max_retries, 2);
+            assert_eq!(c.chaos.quarantine_threshold, 3);
+            c.validate().unwrap();
+        }
+        assert!(spec.cells.iter().any(|c| c.async_cfg.enabled));
+        assert!(spec.cells.iter().any(|c| !c.async_cfg.enabled));
     }
 
     #[test]

@@ -66,14 +66,15 @@ use anyhow::{Context, Result};
 
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::Domain;
+use crate::fl::chaos::{self, ChaosClientReport, ChaosConfig, ClientChaos};
 use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
 use crate::fl::cohort::{self, ClientFate, CohortConfig};
-use crate::fl::round::RoundScratch;
+use crate::fl::round::{downlink_nonce, uplink_nonce, RoundScratch};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::{Server, StreamingAggregator};
 use crate::metrics::recorder::CommitRecord;
 use crate::model::manifest::VarSpec;
-use crate::omc::codec::WireWriter;
+use crate::omc::codec::{self, NonceLedger, WireWriter};
 use crate::omc::format::FloatFormat;
 use crate::omc::selection::SelectionPolicy;
 use crate::omc::store::{CompressedModel, SnapshotRing, StoredVar};
@@ -266,6 +267,11 @@ pub enum DispatchOutcome {
     /// Went offline after the downlink; the server learns at the would-be
     /// report time and refills the slot. Downlink bytes only.
     Dropped,
+    /// Killed by the chaos engine: crashed before training (no uplink), or
+    /// exhausted its retries sending only corrupt frames (every attempt's
+    /// bytes rejected). Either way the update never folds and the slot
+    /// refills when the server gives up.
+    Crashed,
     /// Still training when the final commit landed; downlink bytes were
     /// spent, training is never executed.
     InFlight,
@@ -284,12 +290,16 @@ pub struct PlannedDispatch {
     pub weight: f64,
     /// virtual dispatch time (seconds)
     pub start_time: f64,
-    /// virtual report time: `start_time` + the cohort latency draw
+    /// virtual report time: `start_time` + the cohort latency draw, plus
+    /// chaos retry backoff when the dispatch has a fault plan
     pub arrival_time: f64,
     /// server version the client trains against
     pub start_version: usize,
     /// planned fate of the uplink
     pub outcome: DispatchOutcome,
+    /// fault-injection plan for this dispatch (`None` when chaos is off or
+    /// the plan is entirely clean)
+    pub chaos: Option<ClientChaos>,
 }
 
 /// One planned commit: which updates fold, in which order, at what weight.
@@ -310,6 +320,9 @@ pub struct PlannedCommit {
     pub window_events: usize,
     /// updates discarded as too stale during the window
     pub discarded: usize,
+    /// transient commit failures injected by chaos before this commit
+    /// landed (each retry added backoff to `virtual_time`)
+    pub failures: u32,
 }
 
 /// The fully planned async timeline (a pure function of config + seed).
@@ -389,11 +402,15 @@ impl<'a> DispatchStream<'a> {
 
 /// Plan the whole async timeline: `commits` commits with `acfg` (must be
 /// [`resolved`](AsyncConfig::resolved)) over the cohort latency/dropout
-/// model. Deterministic in `(acfg, cohort, sampler, seed)`; independent of
-/// scheduling and worker count.
+/// model, with `chaos` faults superimposed (crashes and give-ups refill
+/// the slot; retry backoff shifts arrivals; transient commit failures
+/// delay the commit and everything dispatched after it). Deterministic in
+/// `(acfg, cohort, chaos, sampler, seed)`; independent of scheduling and
+/// worker count.
 pub fn plan_async(
     acfg: &AsyncConfig,
     cohort: &CohortConfig,
+    chaos_cfg: &ChaosConfig,
     sampler: &Sampler,
     assignment: &ClientAssignment,
     seed: u64,
@@ -430,7 +447,31 @@ pub fn plan_async(
             .pop()
             .expect("one plan per client");
             let seq = dispatches.len();
-            let arrival_time = start_time + p.latency_s;
+            let mut arrival_time = start_time + p.latency_s;
+            let mut outcome = if p.fate == ClientFate::Dropped {
+                DispatchOutcome::Dropped
+            } else {
+                DispatchOutcome::InFlight
+            };
+            let mut ch_plan = None;
+            if !chaos_cfg.is_off() && outcome != DispatchOutcome::Dropped {
+                let ch = chaos::plan_client(chaos_cfg, seed, wave, cid);
+                if ch.crashed {
+                    // died after the downlink: the server learns at the
+                    // would-be report time
+                    outcome = DispatchOutcome::Crashed;
+                } else {
+                    // retries (corrupt attempts) delay the delivery — or
+                    // the give-up — by the planned backoff
+                    arrival_time += ch.extra_latency_s;
+                    if ch.gave_up {
+                        outcome = DispatchOutcome::Crashed;
+                    }
+                }
+                if !ch.is_clean() || ch.gave_up {
+                    ch_plan = Some(ch);
+                }
+            }
             dispatches.push(PlannedDispatch {
                 seq,
                 wave,
@@ -439,11 +480,8 @@ pub fn plan_async(
                 start_time,
                 arrival_time,
                 start_version,
-                outcome: if p.fate == ClientFate::Dropped {
-                    DispatchOutcome::Dropped
-                } else {
-                    DispatchOutcome::InFlight
-                },
+                outcome,
+                chaos: ch_plan,
             });
             heap.push(Event {
                 time: arrival_time,
@@ -474,7 +512,10 @@ pub fn plan_async(
         );
         let e = heap.pop().expect("in-flight slots keep the heap non-empty");
         win_events += 1;
-        let dropped = dispatches[e.seq].outcome == DispatchOutcome::Dropped;
+        let dropped = matches!(
+            dispatches[e.seq].outcome,
+            DispatchOutcome::Dropped | DispatchOutcome::Crashed
+        );
         if !dropped {
             let staleness = version - dispatches[e.seq].start_version;
             if staleness > acfg.max_staleness {
@@ -489,6 +530,10 @@ pub fn plan_async(
         }
         win_occupancy += buffer.len();
 
+        // the slot refills at the event time — unless this event triggers
+        // a commit that chaos delays, in which case the server is busy
+        // retrying the commit and the refill waits for it
+        let mut refill_time = e.time;
         if buffer.len() == acfg.buffer_k {
             let folded = std::mem::take(&mut buffer);
             let max_stale =
@@ -516,14 +561,26 @@ pub fn plan_async(
                 updates.push(seq);
                 weights.push(w / total);
             }
+            // transient server-side commit failures: each planned failure
+            // is one failed attempt, retried after exponential backoff in
+            // virtual time — the commit lands late and the triggering
+            // slot's refill waits out the retries
+            let cc = if chaos_cfg.is_off() {
+                chaos::CommitChaos::default()
+            } else {
+                chaos::plan_commit(chaos_cfg, seed, commit_idx as u64)
+            };
+            let commit_time = e.time + cc.delay_s;
+            refill_time = commit_time;
             out_commits.push(PlannedCommit {
                 updates,
                 weights,
-                virtual_time: e.time,
+                virtual_time: commit_time,
                 staleness_hist: hist,
                 mean_occupancy: win_occupancy as f64 / win_events as f64,
                 window_events: win_events,
                 discarded: win_discarded,
+                failures: cc.failures,
             });
             version += 1;
             (win_events, win_occupancy, win_discarded) = (0, 0, 0);
@@ -531,7 +588,7 @@ pub fn plan_async(
                 break; // no refill after the final commit
             }
         }
-        dispatch_one(e.time, version, &mut dispatches, &mut heap);
+        dispatch_one(refill_time, version, &mut dispatches, &mut heap);
     }
 
     Ok(AsyncPlan {
@@ -567,6 +624,10 @@ pub struct AsyncContext<'a> {
     /// cohort failure model (dropout + latency; the deadline is ignored —
     /// `max_staleness` replaces it)
     pub cohort: CohortConfig,
+    /// fault-injection model (`fl::chaos`); `is_off()` skips all planning
+    pub chaos: ChaosConfig,
+    /// frame all transport in the checksummed v2 wire layout
+    pub integrity: bool,
     /// resolved async knobs
     pub acfg: AsyncConfig,
     /// experiment seed
@@ -596,9 +657,19 @@ pub struct CommitOutcome {
     pub folded: usize,
     /// wave clients that dropped after the downlink
     pub dropped: usize,
+    /// wave clients killed by chaos (crash, or retries exhausted)
+    pub crashed: usize,
+    /// uplink frames the server rejected this wave (corrupt attempts +
+    /// duplicate replays)
+    pub frames_rejected: u64,
+    /// subset of `up_bytes` from rejected frames
+    pub up_bytes_rejected: usize,
     /// wave clients still in flight when the phase ends (downlink spent,
     /// training skipped)
     pub in_flight: usize,
+    /// per-client chaos facts for the quarantine ladder (empty when chaos
+    /// is off)
+    pub chaos_reports: Vec<ChaosClientReport>,
     /// the commit's deterministic metrics record
     pub commit: CommitRecord,
 }
@@ -627,15 +698,26 @@ pub struct AsyncRoundEngine {
     spare_vals: Vec<f32>,
     /// streaming-fold decode scratch (reused across commits)
     decode_scratch: Vec<f32>,
+    /// duplicate-uplink detector, shared across the whole phase (nonces
+    /// are keyed by `(seed, wave, cid)`, unique per dispatch)
+    ledger: NonceLedger,
     next_commit: usize,
 }
 
 impl AsyncRoundEngine {
     /// Plan the phase (`commits` commits) and build a cold engine.
     pub fn plan(ctx: &AsyncContext<'_>, commits: usize) -> Result<Self> {
+        if !ctx.chaos.is_off() {
+            anyhow::ensure!(
+                ctx.integrity,
+                "chaos injection requires wire integrity (omc.integrity) — \
+                 corrupt frames must be detectable"
+            );
+        }
         let plan = plan_async(
             &ctx.acfg,
             &ctx.cohort,
+            &ctx.chaos,
             ctx.sampler,
             ctx.assignment,
             ctx.seed,
@@ -656,6 +738,7 @@ impl AsyncRoundEngine {
             wave_vals_version: usize::MAX,
             spare_vals: Vec::new(),
             decode_scratch: Vec::new(),
+            ledger: NonceLedger::new((ctx.acfg.concurrency * 2).max(16)),
             next_commit: 0,
         })
     }
@@ -738,27 +821,54 @@ impl AsyncRoundEngine {
             })
             .collect();
         let bufs = scratch.take_downlink_bufs(tasks.len());
-        let items: Vec<(&Vec<f32>, Vec<u8>)> = masks.iter().zip(bufs).collect();
-        let downlinks: Vec<Vec<u8>> =
-            threadpool::scope_map_send(items, ctx.workers, move |_, (mask, buf)| {
-                assemble_downlink(snap, wave_vals, mask, buf)
-            })?;
+        let (seed, integrity) = (ctx.seed, ctx.integrity);
+        let items: Vec<((u64, u64), (&Vec<f32>, Vec<u8>))> = tasks
+            .iter()
+            .map(|&s| {
+                let d = &plan.dispatches[s];
+                (d.wave, d.cid as u64)
+            })
+            .zip(masks.iter().zip(bufs))
+            .collect();
+        let downlinks: Vec<Vec<u8>> = threadpool::scope_map_send(
+            items,
+            ctx.workers,
+            move |_, ((wave, cid), (mask, buf))| {
+                let nonce = if integrity {
+                    Some(downlink_nonce(seed, wave, cid))
+                } else {
+                    None
+                };
+                assemble_downlink(snap, wave_vals, mask, buf, nonce)
+            },
+        )?;
         let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
 
-        // trainable = planned to arrive (folded or stale-discarded);
-        // dropped and end-of-phase in-flight dispatches spend downlink only
+        // did this dispatch train but give up after all-corrupt retries?
+        let gave_up = |s: usize| {
+            plan.dispatches[s]
+                .chaos
+                .as_ref()
+                .map_or(false, |c| c.gave_up && !c.crashed)
+        };
+        // trainable = planned to arrive (folded or stale-discarded) plus
+        // give-ups (they trained; every attempt is rejected on arrival);
+        // dropped, hard-crashed, and end-of-phase in-flight dispatches
+        // spend downlink only
         let trainable: Vec<usize> = (0..tasks.len())
             .filter(|&t| {
                 matches!(
                     plan.dispatches[tasks[t]].outcome,
                     DispatchOutcome::Folded { .. } | DispatchOutcome::Discarded { .. }
-                )
+                ) || (plan.dispatches[tasks[t]].outcome == DispatchOutcome::Crashed
+                    && gave_up(tasks[t]))
             })
             .collect();
-        let (mut dropped, mut in_flight) = (0usize, 0usize);
+        let (mut dropped, mut crashed, mut in_flight) = (0usize, 0usize, 0usize);
         for &s in tasks {
             match plan.dispatches[s].outcome {
                 DispatchOutcome::Dropped => dropped += 1,
+                DispatchOutcome::Crashed => crashed += 1,
                 DispatchOutcome::InFlight => in_flight += 1,
                 _ => {}
             }
@@ -772,13 +882,17 @@ impl AsyncRoundEngine {
                 d.wave,
                 d.cid as u64,
             ]));
+            let mut tc = ctx.train;
+            if ctx.integrity {
+                tc.uplink_nonce = Some(uplink_nonce(ctx.seed, d.wave, d.cid as u64));
+            }
             client::run_client_round(
                 ctx.model,
                 ctx.domain,
                 ctx.assignment.speakers(d.cid),
                 &downlinks[t],
                 &masks[t],
-                ctx.train,
+                tc,
                 &mut rng,
                 cs,
             )
@@ -835,22 +949,84 @@ impl AsyncRoundEngine {
         };
 
         // stats folded sequentially in task order — NOT per shard — so
-        // every reported f64 is identical for any worker count
+        // every reported f64 (and the nonce-ledger evolution) is identical
+        // for any worker count
         let (mut loss_sum, mut trained) = (0.0f64, 0usize);
         let (mut up_bytes, mut up_disc, mut peak) = (0usize, 0usize, 0usize);
+        let (mut frames_rejected, mut up_rejected) = (0u64, 0usize);
+        let mut chaos_reports: Vec<ChaosClientReport> = Vec::new();
         for (t, r) in results {
             let d = &plan.dispatches[tasks[t]];
-            up_bytes += r.upload.len();
             loss_sum += r.loss;
             trained += 1;
             peak = peak.max(r.peak_param_bytes);
             match d.outcome {
                 DispatchOutcome::Folded { .. } => {
+                    // corrupt retries arrive (and are rejected) before the
+                    // clean delivery
+                    if let Some(ch) = d.chaos.as_ref() {
+                        let (f, b) =
+                            replay_corrupt(ch, &r.upload, &mut self.ledger, d.cid)?;
+                        frames_rejected += f;
+                        up_bytes += b;
+                        up_rejected += b;
+                    }
+                    up_bytes += r.upload.len();
+                    codec::verify_frame(&r.upload)
+                        .and_then(|info| self.ledger.observe(info.nonce))
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "uplink from client {} failed verification \
+                                 outside the chaos plan: {e}",
+                                d.cid
+                            )
+                        })?;
+                    if d.chaos.as_ref().map_or(false, |c| c.duplicate) {
+                        // the accepted frame replayed once: same nonce,
+                        // flagged by the ledger
+                        let verdict = codec::verify_frame(&r.upload)
+                            .and_then(|info| self.ledger.observe(info.nonce));
+                        anyhow::ensure!(
+                            verdict.is_err(),
+                            "duplicated uplink from client {} was accepted twice",
+                            d.cid
+                        );
+                        frames_rejected += 1;
+                        up_bytes += r.upload.len();
+                        up_rejected += r.upload.len();
+                    }
+                    if !ctx.chaos.is_off() {
+                        chaos_reports.push(ChaosClientReport {
+                            cid: d.cid,
+                            corrupt_frames: d
+                                .chaos
+                                .as_ref()
+                                .map_or(0, |c| c.faults.len() as u32),
+                            delivered_clean: true,
+                        });
+                    }
                     self.uploads[d.seq] = Some(r.upload);
                 }
                 DispatchOutcome::Discarded { window, .. } => {
+                    // stale updates are discarded unverified — their bytes
+                    // (and any retry bytes) never reach the checksum path
+                    up_bytes += r.upload.len();
                     self.discard_bytes[window] += r.upload.len();
                     up_disc += r.upload.len();
+                }
+                DispatchOutcome::Crashed => {
+                    // gave up: every attempt was corrupt, all rejected
+                    let ch = d.chaos.as_ref().expect("gave-up dispatch has a plan");
+                    let (f, b) =
+                        replay_corrupt(ch, &r.upload, &mut self.ledger, d.cid)?;
+                    frames_rejected += f;
+                    up_bytes += b;
+                    up_rejected += b;
+                    chaos_reports.push(ChaosClientReport {
+                        cid: d.cid,
+                        corrupt_frames: ch.faults.len() as u32,
+                        delivered_clean: false,
+                    });
                 }
                 _ => unreachable!("only arriving dispatches train"),
             }
@@ -924,6 +1100,7 @@ impl AsyncRoundEngine {
             ring_bytes: self.ring.memory_bytes(),
             virtual_time: pc.virtual_time,
             param_drift,
+            commit_failures: pc.failures,
         };
         self.next_commit += 1;
         Ok(CommitOutcome {
@@ -939,7 +1116,11 @@ impl AsyncRoundEngine {
             dispatched: tasks.len(),
             folded,
             dropped,
+            crashed,
+            frames_rejected,
+            up_bytes_rejected: up_rejected,
             in_flight,
+            chaos_reports,
             commit,
         })
     }
@@ -972,14 +1153,43 @@ pub fn snapshot_model(
     CompressedModel::new(vars)
 }
 
+/// Replay one dispatch's planned corrupt uplink attempts against the wire
+/// verifier. Every replayed frame MUST fail verification — an accepted
+/// corrupt frame is an integrity-layer bug and errors out loudly. Returns
+/// `(frames rejected, bytes rejected)`.
+fn replay_corrupt(
+    ch: &ClientChaos,
+    upload: &[u8],
+    ledger: &mut NonceLedger,
+    cid: usize,
+) -> Result<(u64, usize)> {
+    let (mut frames, mut bytes) = (0u64, 0usize);
+    for f in &ch.faults {
+        let mut bad = upload.to_vec();
+        chaos::apply_fault(f, &mut bad);
+        let verdict =
+            codec::verify_frame(&bad).and_then(|info| ledger.observe(info.nonce));
+        anyhow::ensure!(
+            verdict.is_err(),
+            "chaos-corrupted frame from client {cid} passed verification \
+             (is wire integrity enabled?)"
+        );
+        frames += 1;
+        bytes += bad.len();
+    }
+    Ok((frames, bytes))
+}
+
 /// Assemble one client's downlink from a ring snapshot: packed variables
 /// ship verbatim when the mask selects them; everything else ships the
 /// snapshot's decompressed values (`vals[i]`, decoded once per wave).
+/// With a nonce the frame is written in the checksummed v2 layout.
 fn assemble_downlink(
     snap: &CompressedModel,
     vals: &[Vec<f32>],
     mask: &[f32],
     buf: Vec<u8>,
+    nonce: Option<u64>,
 ) -> Vec<u8> {
     let cap: usize = snap
         .vars
@@ -993,7 +1203,13 @@ fn assemble_downlink(
             }
         })
         .sum();
-    let mut w = WireWriter::with_buf_and_capacity(buf, cap + 19 * snap.vars.len());
+    let nvars = snap.vars.len();
+    let mut w = match nonce {
+        Some(n) => {
+            WireWriter::with_buf_and_integrity(buf, cap + 19 * nvars + 12 + 4 * nvars, n)
+        }
+        None => WireWriter::with_buf_and_capacity(buf, cap + 19 * nvars),
+    };
     for (i, sv) in snap.vars.iter().enumerate() {
         if mask[i] > 0.5 && sv.is_packed() {
             w.var(sv);
@@ -1024,9 +1240,20 @@ mod tests {
         seed: u64,
         commits: usize,
     ) -> AsyncPlan {
+        plan_chaos(acfg, cohort, ChaosConfig::default(), seed, commits)
+    }
+
+    fn plan_chaos(
+        acfg: AsyncConfig,
+        cohort: CohortConfig,
+        chaos: ChaosConfig,
+        seed: u64,
+        commits: usize,
+    ) -> AsyncPlan {
         let a = assignment(16);
         let sampler = Sampler::new(SamplerKind::Uniform, 16, 4, 9);
-        plan_async(&resolved(acfg), &cohort, &sampler, &a, seed, commits).unwrap()
+        plan_async(&resolved(acfg), &cohort, &chaos, &sampler, &a, seed, commits)
+            .unwrap()
     }
 
     fn enabled() -> AsyncConfig {
@@ -1307,5 +1534,160 @@ mod tests {
             assert!(d[1].start_time >= d[0].start_time);
             assert!(d[1].start_version >= d[0].start_version);
         }
+    }
+
+    fn noisy_chaos() -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.2,
+            truncate_prob: 0.1,
+            duplicate_prob: 0.15,
+            crash_prob: 0.1,
+            commit_failure_prob: 0.3,
+            max_retries: 1,
+            backoff_base_s: 0.25,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn chaos_plan_is_deterministic_and_crashes_never_fold() {
+        let cohort = CohortConfig {
+            straggler_mean_s: 1.0,
+            ..CohortConfig::ideal()
+        };
+        let p1 = plan_chaos(enabled(), cohort, noisy_chaos(), 21, 8);
+        let p2 = plan_chaos(enabled(), cohort, noisy_chaos(), 21, 8);
+        assert_eq!(p1, p2, "chaos plan must be a pure function of the seed");
+
+        let crashed: Vec<&PlannedDispatch> = p1
+            .dispatches
+            .iter()
+            .filter(|d| d.outcome == DispatchOutcome::Crashed)
+            .collect();
+        assert!(!crashed.is_empty(), "chaos at these rates must kill someone");
+        // crashed dispatches never appear in any commit's fold list
+        for c in &p1.commits {
+            for &s in &c.updates {
+                assert!(matches!(
+                    p1.dispatches[s].outcome,
+                    DispatchOutcome::Folded { .. }
+                ));
+            }
+            assert_eq!(c.updates.len(), 4, "every commit still folds K");
+        }
+        // both crash shapes occur and their plans are coherent
+        let hard = crashed
+            .iter()
+            .filter(|d| d.chaos.as_ref().map_or(false, |c| c.crashed))
+            .count();
+        let gave_up = crashed
+            .iter()
+            .filter(|d| {
+                d.chaos.as_ref().map_or(false, |c| c.gave_up && !c.crashed)
+            })
+            .count();
+        assert_eq!(hard + gave_up, crashed.len());
+        assert!(gave_up > 0, "some client must exhaust its retries");
+        // retry backoff delays arrivals: a gave-up dispatch arrives after
+        // its latency draw alone would have it
+        for d in &p1.dispatches {
+            if let Some(ch) = &d.chaos {
+                if !ch.crashed && !ch.faults.is_empty() {
+                    assert!(d.arrival_time >= d.start_time + ch.extra_latency_s);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn commit_failures_delay_virtual_time_but_keep_fold_order() {
+        let cohort = CohortConfig {
+            straggler_mean_s: 1.0,
+            ..CohortConfig::ideal()
+        };
+        let calm = plan_chaos(enabled(), cohort, ChaosConfig::default(), 33, 6);
+        let only_commit_chaos = ChaosConfig {
+            enabled: true,
+            commit_failure_prob: 0.5,
+            max_retries: 2,
+            backoff_base_s: 1.0,
+            ..ChaosConfig::default()
+        };
+        let stormy = plan_chaos(enabled(), cohort, only_commit_chaos, 33, 6);
+        let failures: u32 = stormy.commits.iter().map(|c| c.failures).sum();
+        assert!(failures > 0, "p=0.5 over 6 commits must fail sometimes");
+        assert!(calm.commits.iter().all(|c| c.failures == 0));
+        // the timelines are identical until the first failed commit (the
+        // delay only shifts refills dispatched after it); that commit
+        // folds the same updates, just later
+        let j0 = stormy
+            .commits
+            .iter()
+            .position(|c| c.failures > 0)
+            .expect("some commit failed");
+        for j in 0..j0 {
+            assert_eq!(calm.commits[j], stormy.commits[j]);
+        }
+        assert_eq!(calm.commits[j0].updates, stormy.commits[j0].updates);
+        assert!(stormy.commits[j0].virtual_time > calm.commits[j0].virtual_time);
+        for w in stormy.commits.windows(2) {
+            assert!(w[1].virtual_time >= w[0].virtual_time);
+        }
+        // commit-only chaos never touches client fates
+        assert!(stormy
+            .dispatches
+            .iter()
+            .all(|d| d.outcome != DispatchOutcome::Crashed));
+    }
+
+    #[test]
+    fn plan_conserves_every_dispatch_fate_under_chaos() {
+        // conservation ledger with everything on at once — dropout,
+        // stragglers, stale discards, AND the chaos engine: every
+        // dispatched client lands in exactly one bucket, and the
+        // per-commit accounting sums back to the dispatch totals
+        let cohort = CohortConfig {
+            dropout_prob: 0.2,
+            straggler_mean_s: 2.0,
+            deadline_s: f64::INFINITY,
+            weight_by_examples: true,
+        };
+        let acfg = AsyncConfig {
+            buffer_k: 1,
+            max_staleness: 0,
+            ..enabled()
+        };
+        let plan = plan_chaos(acfg, cohort, noisy_chaos(), 29, 16);
+        let (mut folded, mut discarded, mut dropped, mut crashed, mut in_flight) =
+            (0usize, 0usize, 0usize, 0usize, 0usize);
+        for d in &plan.dispatches {
+            match d.outcome {
+                DispatchOutcome::Folded { .. } => folded += 1,
+                DispatchOutcome::Discarded { .. } => discarded += 1,
+                DispatchOutcome::Dropped => dropped += 1,
+                DispatchOutcome::Crashed => crashed += 1,
+                DispatchOutcome::InFlight => in_flight += 1,
+            }
+        }
+        assert_eq!(
+            folded + discarded + dropped + crashed + in_flight,
+            plan.total_dispatched()
+        );
+        // the fold and discard ledgers agree with the commit windows
+        assert_eq!(
+            folded,
+            plan.commits.iter().map(|c| c.updates.len()).sum::<usize>()
+        );
+        assert_eq!(
+            discarded,
+            plan.commits.iter().map(|c| c.discarded).sum::<usize>()
+        );
+        // the scenario genuinely exercises every bucket — otherwise the
+        // identity above proves nothing
+        assert!(folded > 0, "no folds");
+        assert!(discarded > 0, "no stale discards");
+        assert!(dropped > 0, "no dropouts");
+        assert!(crashed > 0, "no chaos kills");
     }
 }

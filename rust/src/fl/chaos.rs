@@ -1,0 +1,559 @@
+//! Deterministic chaos engine: planned wire faults, retries, and quarantine.
+//!
+//! Production cross-device links do not merely *lose* clients (that is
+//! `fl::cohort`'s dropout/straggler model) — they corrupt bytes, replay
+//! frames, crash devices mid-round, and bounce server-side commits. This
+//! module injects exactly those faults, but *deterministically*: every
+//! fault is drawn up front from an RNG stream keyed by
+//! `(seed, CHAOS_STREAM, round, cid)` — the same keying discipline as
+//! [`plan_cohort`](super::cohort::plan_cohort) — so the same seed produces
+//! the same faults, the same retries, and therefore the same committed
+//! bytes at any worker count. Retry backoff is *virtual time*: it shifts a
+//! client's simulated latency (sync deadline math, async arrival order)
+//! without any wall-clock sleep.
+//!
+//! Fault taxonomy (see `docs/ROBUSTNESS.md`):
+//!
+//! * **Bit-flip / truncation** — an uplink attempt is corrupted; the v2
+//!   wire CRCs reject it and the client retries with exponential backoff,
+//!   up to [`ChaosConfig::max_retries`] times. A client whose every
+//!   attempt is corrupt *gives up* (fate
+//!   [`Crashed`](super::cohort::ClientFate::Crashed)): its bytes were
+//!   spent and accounted as rejected, but nothing aggregates.
+//! * **Duplicate** — the accepted frame is replayed; the server's
+//!   [`NonceLedger`](crate::omc::codec::NonceLedger) rejects the replay.
+//! * **Crash** — the client dies after its downlink, before training.
+//! * **Commit failure** — a server-side commit transiently fails and is
+//!   retried after virtual-time backoff (async engine only; a sync round
+//!   has no separate commit step).
+//!
+//! Repeated offenders climb a **quarantine ladder**: a client that ships
+//! [`ChaosConfig::quarantine_threshold`] consecutive corrupt frames is
+//! excluded from sampling for [`ChaosConfig::quarantine_rounds`] rounds,
+//! then re-admitted with a clean slate.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Stream tag for all chaos draws (cf. `0xFA7E5` for cohort fates).
+const CHAOS_STREAM: u64 = 0xC4A05;
+
+/// Knobs of the fault-injection model (all off by default). Surfaced as
+/// the `[chaos]` TOML table; `enabled = true` requires `omc.integrity`
+/// (corrupt frames must be *detectable* to be rejected).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Master switch; when off, the engines skip all chaos planning.
+    pub enabled: bool,
+    /// Per-attempt probability an uplink frame suffers a single-bit flip.
+    pub bitflip_prob: f64,
+    /// Per-attempt probability an uplink frame is truncated.
+    pub truncate_prob: f64,
+    /// Probability the accepted uplink is duplicated (replayed) once.
+    pub duplicate_prob: f64,
+    /// Probability a client crashes after its downlink, before training.
+    pub crash_prob: f64,
+    /// Per-attempt probability a server-side commit transiently fails.
+    pub commit_failure_prob: f64,
+    /// Retries granted after a corrupt attempt (so a client sends at most
+    /// `max_retries + 1` frames per round).
+    pub max_retries: u32,
+    /// Base of the exponential virtual-time backoff: retry `k` waits
+    /// `backoff_base_s * 2^k` simulated seconds.
+    pub backoff_base_s: f64,
+    /// Consecutive corrupt frames that trigger quarantine.
+    pub quarantine_threshold: u32,
+    /// Rounds a quarantined client is excluded from sampling.
+    pub quarantine_rounds: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            bitflip_prob: 0.0,
+            truncate_prob: 0.0,
+            duplicate_prob: 0.0,
+            crash_prob: 0.0,
+            commit_failure_prob: 0.0,
+            max_retries: 2,
+            backoff_base_s: 0.5,
+            quarantine_threshold: 3,
+            quarantine_rounds: 2,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// True when no chaos planning should run at all.
+    pub fn is_off(&self) -> bool {
+        !self.enabled
+    }
+
+    /// Bounds-check the knobs (called by `ExperimentConfig::validate`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, p) in [
+            ("chaos.bitflip", self.bitflip_prob),
+            ("chaos.truncate", self.truncate_prob),
+            ("chaos.duplicate", self.duplicate_prob),
+            ("chaos.crash", self.crash_prob),
+            ("chaos.commit_failure", self.commit_failure_prob),
+        ] {
+            anyhow::ensure!(
+                (0.0..1.0).contains(&p),
+                "{name} must be in [0, 1), got {p}"
+            );
+        }
+        anyhow::ensure!(
+            self.bitflip_prob + self.truncate_prob < 1.0,
+            "chaos.bitflip + chaos.truncate must stay below 1.0"
+        );
+        anyhow::ensure!(
+            self.max_retries <= 16,
+            "chaos.max_retries must be <= 16 (backoff is 2^k)"
+        );
+        anyhow::ensure!(
+            self.backoff_base_s >= 0.0 && self.backoff_base_s.is_finite(),
+            "chaos.backoff_base_s must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.quarantine_threshold >= 1,
+            "chaos.quarantine_threshold must be >= 1"
+        );
+        anyhow::ensure!(
+            self.quarantine_rounds >= 1,
+            "chaos.quarantine_rounds must be >= 1"
+        );
+        Ok(())
+    }
+}
+
+/// How one uplink attempt is corrupted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip a single bit (position derived from the planned parameter).
+    BitFlip,
+    /// Truncate the frame to a shorter prefix.
+    Truncate,
+}
+
+/// One planned corrupt uplink attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedFault {
+    /// What happens to the frame.
+    pub kind: FaultKind,
+    /// Raw 64-bit draw; [`apply_fault`] maps it onto the frame's length
+    /// (bit index or cut point) at execution time.
+    pub param: u64,
+}
+
+/// Everything chaos does to one client in one round, decided before any
+/// training runs — which is what keeps execution order irrelevant.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClientChaos {
+    /// Client dies after the downlink: no training, no uplink.
+    pub crashed: bool,
+    /// Corrupt attempts, in send order, before the clean delivery (or
+    /// before giving up).
+    pub faults: Vec<PlannedFault>,
+    /// All `max_retries + 1` attempts were corrupt: the update never
+    /// lands, every attempt's bytes are rejected.
+    pub gave_up: bool,
+    /// The accepted frame is replayed once (rejected by the nonce ledger).
+    pub duplicate: bool,
+    /// Virtual-time backoff added to the client's latency by its retries:
+    /// `Σ backoff_base_s · 2^k` over the corrupt attempts.
+    pub extra_latency_s: f64,
+}
+
+impl ClientChaos {
+    /// True when chaos leaves this client entirely alone.
+    pub fn is_clean(&self) -> bool {
+        !self.crashed && self.faults.is_empty() && !self.duplicate
+    }
+
+    /// Frames this client sends that the server must reject: the corrupt
+    /// attempts plus the duplicate replay (crashed clients send nothing).
+    pub fn rejected_frames(&self) -> u64 {
+        if self.crashed {
+            return 0;
+        }
+        self.faults.len() as u64 + u64::from(self.duplicate && !self.gave_up)
+    }
+}
+
+/// Draw the deterministic fault plan for one client in one round.
+///
+/// Every knob consumes its RNG draws unconditionally (the same discipline
+/// as `plan_cohort`), so toggling one fault class never reshuffles the
+/// draws of another — A/B chaos scenarios at the same seed stay aligned.
+pub fn plan_client(cfg: &ChaosConfig, seed: u64, round: u64, cid: usize) -> ClientChaos {
+    let mut rng = Xoshiro256pp::new(hash_seed(&[
+        seed,
+        CHAOS_STREAM,
+        round,
+        cid as u64,
+    ]));
+    let u_crash = rng.next_f64();
+    let corrupt_prob = cfg.bitflip_prob + cfg.truncate_prob;
+    let mut faults = Vec::new();
+    let mut gave_up = true;
+    let mut extra_latency_s = 0.0;
+    for attempt in 0..=cfg.max_retries {
+        let u_fault = rng.next_f64();
+        let u_kind = rng.next_f64();
+        let param = rng.next_u64();
+        // keep drawing even after the clean attempt so the duplicate draw
+        // below sits at a fixed stream position for every retry outcome
+        if gave_up && u_fault < corrupt_prob {
+            let kind = if u_kind * corrupt_prob < cfg.bitflip_prob {
+                FaultKind::BitFlip
+            } else {
+                FaultKind::Truncate
+            };
+            faults.push(PlannedFault { kind, param });
+            extra_latency_s += cfg.backoff_base_s * f64::from(1u32 << attempt.min(16));
+        } else {
+            gave_up = false;
+        }
+    }
+    let u_dup = rng.next_f64();
+    ClientChaos {
+        crashed: u_crash < cfg.crash_prob,
+        duplicate: u_dup < cfg.duplicate_prob,
+        faults,
+        gave_up,
+        extra_latency_s,
+    }
+}
+
+/// Corrupt a wire frame in place according to a planned fault. Frames
+/// shorter than two bytes are left alone (nothing meaningful to corrupt).
+pub fn apply_fault(fault: &PlannedFault, frame: &mut Vec<u8>) {
+    if frame.len() < 2 {
+        return;
+    }
+    match fault.kind {
+        FaultKind::BitFlip => {
+            let bit = (fault.param % (frame.len() as u64 * 8)) as usize;
+            frame[bit / 8] ^= 1 << (bit % 8);
+        }
+        FaultKind::Truncate => {
+            let cut = 1 + (fault.param % (frame.len() as u64 - 1)) as usize;
+            frame.truncate(cut);
+        }
+    }
+}
+
+/// One client's chaos facts from a round, consumed by the [`Quarantine`]
+/// ladder. Entirely plan-time computable, so the ladder's evolution is
+/// deterministic no matter how the round executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosClientReport {
+    /// the client
+    pub cid: usize,
+    /// corrupt frames the server rejected from it this round
+    pub corrupt_frames: u32,
+    /// whether a clean, accepted frame eventually landed (resets strikes
+    /// when the ladder was not already tripped)
+    pub delivered_clean: bool,
+}
+
+/// Planned transient failures for one server-side commit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommitChaos {
+    /// Consecutive failed commit attempts before the one that sticks
+    /// (capped at `max_retries`; the final attempt always succeeds, so a
+    /// commit is delayed, never lost).
+    pub failures: u32,
+    /// Virtual-time delay those retries add to the commit.
+    pub delay_s: f64,
+}
+
+/// Draw the deterministic transient-failure plan for commit `idx`.
+pub fn plan_commit(cfg: &ChaosConfig, seed: u64, idx: u64) -> CommitChaos {
+    let mut rng = Xoshiro256pp::new(hash_seed(&[
+        seed,
+        CHAOS_STREAM,
+        0xC0331A,
+        idx,
+    ]));
+    let mut failures = 0u32;
+    let mut still_failing = true;
+    for _ in 0..cfg.max_retries {
+        let u = rng.next_f64();
+        // unconditional draws keep the stream aligned across prob changes
+        if still_failing && u < cfg.commit_failure_prob {
+            failures += 1;
+        } else {
+            still_failing = false;
+        }
+    }
+    let mut delay_s = 0.0;
+    for k in 0..failures {
+        delay_s += cfg.backoff_base_s * f64::from(1u32 << k.min(16));
+    }
+    CommitChaos { failures, delay_s }
+}
+
+/// Per-client quarantine ladder: consecutive corrupt frames accumulate
+/// *strikes*; at [`ChaosConfig::quarantine_threshold`] the client is
+/// excluded from sampling for [`ChaosConfig::quarantine_rounds`] rounds,
+/// then re-admitted with zero strikes. A clean delivery below the
+/// threshold also resets the count ("consecutive", not "total").
+///
+/// `BTreeMap`s keep iteration — and therefore
+/// [`quarantined_at`](Self::quarantined_at) — deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Quarantine {
+    strikes: BTreeMap<usize, u32>,
+    until: BTreeMap<usize, u64>,
+}
+
+impl Quarantine {
+    /// Fresh ladder with no strikes and nobody quarantined.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when `cid` must be excluded from sampling in `round`.
+    pub fn is_quarantined(&self, cid: usize, round: u64) -> bool {
+        self.until.get(&cid).map_or(false, |&r| round < r)
+    }
+
+    /// All clients quarantined in `round`, ascending — the engines filter
+    /// the sampler's output against this list.
+    pub fn quarantined_at(&self, round: u64) -> Vec<usize> {
+        self.until
+            .iter()
+            .filter(|&(_, &r)| round < r)
+            .map(|(&cid, _)| cid)
+            .collect()
+    }
+
+    /// Record one client-round: `corrupt_frames` strikes, then — if the
+    /// round ended in a clean, accepted delivery and the ladder was not
+    /// tripped — a reset. Returns true when this call quarantines `cid`
+    /// (from the end of `round` until `round + 1 + quarantine_rounds`).
+    pub fn record(
+        &mut self,
+        cfg: &ChaosConfig,
+        cid: usize,
+        corrupt_frames: u32,
+        delivered_clean: bool,
+        round: u64,
+    ) -> bool {
+        let strikes = self.strikes.entry(cid).or_insert(0);
+        *strikes += corrupt_frames;
+        if *strikes >= cfg.quarantine_threshold {
+            self.strikes.remove(&cid);
+            self.until
+                .insert(cid, round + 1 + cfg.quarantine_rounds);
+            return true;
+        }
+        if delivered_clean {
+            self.strikes.remove(&cid);
+        }
+        false
+    }
+
+    /// Number of clients currently holding a quarantine sentence that ends
+    /// after `round` (monitoring/metrics).
+    pub fn active(&self, round: u64) -> usize {
+        self.until.values().filter(|&&r| round < r).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy() -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.2,
+            truncate_prob: 0.1,
+            duplicate_prob: 0.15,
+            crash_prob: 0.1,
+            commit_failure_prob: 0.2,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_keyed() {
+        let cfg = noisy();
+        let a = plan_client(&cfg, 42, 3, 7);
+        let b = plan_client(&cfg, 42, 3, 7);
+        assert_eq!(a, b);
+        // at least one of round/cid/seed must change the plan somewhere
+        let mut differs = false;
+        for (seed, round, cid) in [(42, 3, 8), (42, 4, 7), (43, 3, 7)] {
+            differs |= plan_client(&cfg, seed, round, cid) != a;
+        }
+        assert!(differs);
+        assert_eq!(plan_commit(&cfg, 42, 5), plan_commit(&cfg, 42, 5));
+    }
+
+    #[test]
+    fn zero_probs_mean_no_chaos() {
+        let cfg = ChaosConfig { enabled: true, ..ChaosConfig::default() };
+        for cid in 0..50 {
+            let p = plan_client(&cfg, 1, 0, cid);
+            assert!(p.is_clean(), "{p:?}");
+            assert!(!p.gave_up);
+            assert_eq!(p.extra_latency_s, 0.0);
+            assert_eq!(p.rejected_frames(), 0);
+        }
+        assert_eq!(plan_commit(&cfg, 1, 9), CommitChaos::default());
+        assert!(ChaosConfig::default().is_off());
+    }
+
+    #[test]
+    fn certain_corruption_exhausts_retries_and_gives_up() {
+        let cfg = ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.9999,
+            max_retries: 2,
+            backoff_base_s: 0.5,
+            ..ChaosConfig::default()
+        };
+        let p = plan_client(&cfg, 7, 1, 3);
+        assert!(p.gave_up);
+        assert_eq!(p.faults.len(), 3); // initial attempt + 2 retries
+        // backoff sum: 0.5·(1 + 2 + 4)
+        assert!((p.extra_latency_s - 3.5).abs() < 1e-12);
+        assert_eq!(p.rejected_frames(), 3); // duplicate moot after give-up
+        assert!(p.faults.iter().all(|f| f.kind == FaultKind::BitFlip));
+    }
+
+    #[test]
+    fn fault_rates_are_statistically_right() {
+        let cfg = noisy();
+        let (mut crashed, mut corrupt_first, mut dup) = (0u32, 0u32, 0u32);
+        let trials = 4_000u64;
+        for i in 0..trials {
+            let p = plan_client(&cfg, 11, i, (i % 64) as usize);
+            crashed += u32::from(p.crashed);
+            corrupt_first += u32::from(!p.faults.is_empty());
+            dup += u32::from(p.duplicate);
+        }
+        let rate = |c: u32| c as f64 / trials as f64;
+        assert!((rate(crashed) - 0.1).abs() < 0.02, "{}", rate(crashed));
+        assert!(
+            (rate(corrupt_first) - 0.3).abs() < 0.03,
+            "{}",
+            rate(corrupt_first)
+        );
+        assert!((rate(dup) - 0.15).abs() < 0.02, "{}", rate(dup));
+    }
+
+    #[test]
+    fn fault_class_toggles_do_not_reshuffle_other_draws() {
+        let base = noisy();
+        let no_crash = ChaosConfig { crash_prob: 0.0, ..base };
+        for i in 0..200u64 {
+            let a = plan_client(&base, 5, i, 3);
+            let b = plan_client(&no_crash, 5, i, 3);
+            assert_eq!(a.faults, b.faults, "round {i}");
+            assert_eq!(a.duplicate, b.duplicate, "round {i}");
+        }
+    }
+
+    #[test]
+    fn apply_fault_flips_one_bit_or_truncates() {
+        let frame: Vec<u8> = (0..64).collect();
+        let flip = PlannedFault { kind: FaultKind::BitFlip, param: 999 };
+        let mut a = frame.clone();
+        apply_fault(&flip, &mut a);
+        assert_eq!(a.len(), frame.len());
+        let flipped: u32 = a
+            .iter()
+            .zip(&frame)
+            .map(|(x, y)| (x ^ y).count_ones())
+            .sum();
+        assert_eq!(flipped, 1);
+
+        let cut = PlannedFault { kind: FaultKind::Truncate, param: 7777 };
+        let mut b = frame.clone();
+        apply_fault(&cut, &mut b);
+        assert!(!b.is_empty() && b.len() < frame.len());
+        assert_eq!(&frame[..b.len()], &b[..]);
+
+        // degenerate frames are left alone
+        let mut tiny = vec![1u8];
+        apply_fault(&cut, &mut tiny);
+        assert_eq!(tiny, vec![1u8]);
+    }
+
+    #[test]
+    fn commit_failures_are_capped_and_delayed() {
+        let cfg = ChaosConfig {
+            enabled: true,
+            commit_failure_prob: 0.9999,
+            max_retries: 3,
+            backoff_base_s: 1.0,
+            ..ChaosConfig::default()
+        };
+        let c = plan_commit(&cfg, 2, 0);
+        assert_eq!(c.failures, 3);
+        assert!((c.delay_s - 7.0).abs() < 1e-12); // 1 + 2 + 4
+        let calm = ChaosConfig {
+            commit_failure_prob: 0.0,
+            ..cfg
+        };
+        assert_eq!(plan_commit(&calm, 2, 0), CommitChaos::default());
+    }
+
+    #[test]
+    fn quarantine_ladder_trips_resets_and_expires() {
+        let cfg = ChaosConfig {
+            enabled: true,
+            quarantine_threshold: 3,
+            quarantine_rounds: 2,
+            ..ChaosConfig::default()
+        };
+        let mut q = Quarantine::new();
+        // two strikes, then a clean delivery: reset
+        assert!(!q.record(&cfg, 7, 2, true, 0));
+        assert!(!q.record(&cfg, 7, 2, true, 1));
+        assert!(!q.is_quarantined(7, 2));
+        // three consecutive corrupt frames in one round: tripped
+        assert!(q.record(&cfg, 7, 3, false, 2));
+        assert!(q.is_quarantined(7, 3));
+        assert!(q.is_quarantined(7, 4));
+        assert!(!q.is_quarantined(7, 5), "sentence must expire");
+        assert_eq!(q.quarantined_at(3), vec![7]);
+        assert_eq!(q.active(3), 1);
+        assert_eq!(q.active(5), 0);
+        // strikes accumulate across gave-up rounds without clean resets
+        assert!(!q.record(&cfg, 8, 1, false, 0));
+        assert!(!q.record(&cfg, 8, 1, false, 1));
+        assert!(q.record(&cfg, 8, 1, false, 2));
+        // a fresh sentence starts with a clean slate afterwards
+        assert!(!q.record(&cfg, 8, 2, true, 5));
+        assert!(!q.is_quarantined(8, 6));
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        noisy().validate().unwrap();
+        ChaosConfig::default().validate().unwrap();
+        let ok = noisy();
+        for bad in [
+            ChaosConfig { bitflip_prob: 1.0, ..ok },
+            ChaosConfig { truncate_prob: -0.1, ..ok },
+            ChaosConfig { bitflip_prob: 0.6, truncate_prob: 0.5, ..ok },
+            ChaosConfig { crash_prob: 1.5, ..ok },
+            ChaosConfig { commit_failure_prob: 1.0, ..ok },
+            ChaosConfig { max_retries: 17, ..ok },
+            ChaosConfig { backoff_base_s: f64::NAN, ..ok },
+            ChaosConfig { backoff_base_s: -1.0, ..ok },
+            ChaosConfig { quarantine_threshold: 0, ..ok },
+            ChaosConfig { quarantine_rounds: 0, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

@@ -44,6 +44,10 @@ pub struct ClientTrainConfig {
     pub use_pvt: bool,
     /// FP32 baseline path (no OMC artifacts involved)
     pub fp32_baseline: bool,
+    /// `Some(nonce)` ⇒ frame the uplink in the checksummed v2 wire layout
+    /// carrying this nonce (wire integrity on); `None` keeps the
+    /// byte-identical v1 frames.
+    pub uplink_nonce: Option<u64>,
 }
 
 /// What the client sends back.
@@ -139,7 +143,7 @@ pub fn run_client_round(
             loss_sum += out.loss as f64;
         }
         let up_bytes: usize = scratch.vals.iter().map(|v| v.len() * 4).sum();
-        let mut w = WireWriter::with_capacity(up_bytes + 5 * nvars);
+        let mut w = uplink_writer(cfg, up_bytes + 5 * nvars, nvars);
         for v in &scratch.vals {
             w.raw(v);
         }
@@ -186,7 +190,7 @@ pub fn run_client_round(
             5 + 4 * t.len()
         };
     }
-    let mut w = WireWriter::with_capacity(cap);
+    let mut w = uplink_writer(cfg, cap, nvars);
     for (i, t) in scratch.vals.iter().enumerate() {
         if mask[i] > 0.5 {
             let pvt = Pvt {
@@ -207,6 +211,16 @@ pub fn run_client_round(
         loss: loss_sum / cfg.local_steps.max(1) as f64,
         peak_param_bytes,
     })
+}
+
+/// Start the uplink frame in the layout `cfg` asks for, sizing the
+/// reserve for the extra v2 overhead (12 header + 4 CRC bytes per var) so
+/// the zero-alloc steady state holds on both paths.
+fn uplink_writer(cfg: ClientTrainConfig, cap: usize, nvars: usize) -> WireWriter {
+    match cfg.uplink_nonce {
+        Some(nonce) => WireWriter::with_integrity(cap + 12 + 4 * nvars, nonce),
+        None => WireWriter::with_capacity(cap),
+    }
 }
 
 /// Build the downlink payload for one client: compress the server's global
@@ -287,6 +301,20 @@ impl DownlinkCache {
         mask: &[f32],
         buf: Vec<u8>,
     ) -> Vec<u8> {
+        self.assemble_frame(global, mask, buf, None)
+    }
+
+    /// [`assemble_into`](Self::assemble_into), choosing the wire layout:
+    /// `Some(nonce)` emits a checksummed v2 frame (the integrity-on
+    /// downlink path — the client decoder is version-agnostic, so this is
+    /// transparent to `run_client_round`), `None` the classic v1 bytes.
+    pub fn assemble_frame(
+        &self,
+        global: &[Vec<f32>],
+        mask: &[f32],
+        buf: Vec<u8>,
+        nonce: Option<u64>,
+    ) -> Vec<u8> {
         let cap: usize = global
             .iter()
             .zip(mask.iter())
@@ -302,8 +330,11 @@ impl DownlinkCache {
                 }
             })
             .sum();
-        let mut w =
-            WireWriter::with_buf_and_capacity(buf, cap + 16 * global.len());
+        let reserve = cap + 16 * global.len();
+        let mut w = match nonce {
+            Some(n) => WireWriter::with_buf_and_integrity(buf, reserve + 12, n),
+            None => WireWriter::with_buf_and_capacity(buf, reserve),
+        };
         for (i, v) in global.iter().enumerate() {
             match (&self.packed[i], mask[i] > 0.5) {
                 (Some(p), true) => w.var(p),
@@ -395,5 +426,25 @@ mod tests {
             assert_eq!(again, assembled);
             assert_eq!(again.as_ptr(), ptr, "assemble_into must recycle");
         }
+    }
+
+    #[test]
+    fn integrity_downlink_decodes_identically() {
+        // the v2 assembly carries the same payload as v1 — clients decode
+        // either transparently — and verifies end to end with its nonce
+        let mut g = Gen::new(5);
+        let global: Vec<Vec<f32>> =
+            (0..4).map(|_| g.vec_normal(800, 0.05)).collect();
+        let mask = [1.0f32, 0.0, 1.0, 0.0];
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let cache = DownlinkCache::build(&global, fmt, true, 1, |i| mask[i] > 0.5);
+        let v1 = cache.assemble(&global, &mask);
+        let v2 = cache.assemble_frame(&global, &mask, Vec::new(), Some(99));
+        let info = codec::verify_frame(&v2).unwrap();
+        assert_eq!(info.nonce, Some(99));
+        assert_eq!(v2.len(), v1.len() + 12 + 4 * global.len());
+        let a = codec::decode_decompressed(&v1).unwrap();
+        let b = codec::decode_decompressed(&v2).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -86,18 +86,23 @@ impl CohortConfig {
 }
 
 /// What happens to one sampled client this round.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ClientFate {
     /// Trains, uploads before the deadline, is aggregated.
+    #[default]
     Completes,
     /// Goes offline after the downlink; never trains or uploads.
     Dropped,
     /// Trains and uploads after the deadline; excluded from aggregation.
     Late,
+    /// Killed by the chaos engine (`fl::chaos`): either crashed before
+    /// training, or exhausted its uplink retries with every frame corrupt.
+    /// Never aggregated; bytes it did send are accounted as rejected.
+    Crashed,
 }
 
 /// One sampled client's planned round, decided before any training runs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ClientPlan {
     /// Client id (index into the population).
     pub cid: usize,
@@ -108,6 +113,9 @@ pub struct ClientPlan {
     pub latency_s: f64,
     /// Unnormalized FedAvg weight (example count, or 1.0 when uniform).
     pub weight: f64,
+    /// Planned wire faults for this client, when the chaos engine is on
+    /// (`None` leaves the plan byte-identical to the chaos-free path).
+    pub chaos: Option<super::chaos::ClientChaos>,
 }
 
 /// Draw the deterministic per-client fates for one round's participants.
@@ -159,6 +167,7 @@ pub fn plan_cohort(
                 fate,
                 latency_s,
                 weight,
+                chaos: None,
             }
         })
         .collect()
@@ -335,6 +344,7 @@ mod tests {
                 },
                 latency_s: 0.0,
                 weight: 1.0 + i as f64,
+                chaos: None,
             })
             .collect();
         let w = normalized_weights(&plans);

@@ -1,9 +1,11 @@
 //! Federated-learning substrate: server state + aggregation (reference and
-//! streaming paths), simulated clients, cohort failure scenarios, client
-//! sampling, synchronous round orchestration, and the buffered
-//! staleness-aware asynchronous engine ([`async_round`]).
+//! streaming paths), simulated clients, cohort failure scenarios, the
+//! deterministic fault-injection engine ([`chaos`]), client sampling,
+//! synchronous round orchestration, and the buffered staleness-aware
+//! asynchronous engine ([`async_round`]).
 
 pub mod async_round;
+pub mod chaos;
 pub mod client;
 pub mod cohort;
 pub mod round;

@@ -53,14 +53,29 @@ use anyhow::{Context, Result};
 
 use crate::data::partition::ClientAssignment;
 use crate::data::synth::Domain;
+use crate::fl::chaos::{self, ChaosClientReport, ChaosConfig};
 use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
 use crate::fl::cohort::{self, ClientFate, ClientPlan, CohortConfig};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::{Server, StreamingAggregator};
+use crate::omc::codec::{self, NonceLedger};
 use crate::omc::selection::SelectionPolicy;
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
 use crate::util::threadpool;
+
+/// Nonce for client `cid`'s uplink frame in `round`. Retries of the same
+/// logical update share the nonce (a re-send after a rejected corrupt
+/// attempt still passes the server's ledger), while a *duplicated*
+/// accepted frame is flagged. Shared with `fl::async_round`.
+pub fn uplink_nonce(seed: u64, round: u64, cid: u64) -> u64 {
+    hash_seed(&[seed, 0x4E_0C_E1, round, cid])
+}
+
+/// Nonce for the downlink frame served to client `cid` in `round`.
+pub fn downlink_nonce(seed: u64, round: u64, cid: u64) -> u64 {
+    hash_seed(&[seed, 0x4E_0C_E2, round, cid])
+}
 
 /// Everything a round needs, borrowed from the experiment.
 pub struct RoundContext<'a> {
@@ -78,6 +93,15 @@ pub struct RoundContext<'a> {
     pub train: ClientTrainConfig,
     /// cohort failure model (dropout / stragglers / weighting)
     pub cohort: CohortConfig,
+    /// fault-injection model (`fl::chaos`); `is_off()` skips all planning
+    pub chaos: ChaosConfig,
+    /// frame all transport in the checksummed v2 wire layout (required
+    /// when chaos is enabled — corrupt frames must be detectable)
+    pub integrity: bool,
+    /// clients currently serving a quarantine sentence, excluded from the
+    /// sampled cohort this round (ascending; owned by the experiment's
+    /// `fl::chaos::Quarantine` ladder)
+    pub quarantined: &'a [usize],
     /// experiment seed (all per-round randomness derives from it)
     pub seed: u64,
     /// thread-pool width for codec work and sharded client execution
@@ -190,6 +214,16 @@ pub struct RoundOutcome {
     pub dropped: usize,
     /// clients that reported after the deadline
     pub late: usize,
+    /// clients killed by chaos: crashed before training, or gave up after
+    /// exhausting uplink retries
+    pub crashed: usize,
+    /// uplink frames the server rejected (corrupt attempts + duplicates)
+    pub frames_rejected: u64,
+    /// the subset of `up_bytes` from rejected frames
+    pub up_bytes_rejected: usize,
+    /// per-client chaos facts for the quarantine ladder (empty when chaos
+    /// is off): corrupt-frame counts and whether a clean frame landed
+    pub chaos_reports: Vec<ChaosClientReport>,
 }
 
 /// Byte/loss tallies from executing (part of) a cohort.
@@ -209,6 +243,12 @@ pub struct CohortStats {
     pub dropped: usize,
     /// clients that uploaded past the deadline
     pub late: usize,
+    /// clients killed by chaos (crash, or retries exhausted)
+    pub crashed: usize,
+    /// uplink frames rejected by verification (corrupt + duplicates)
+    pub frames_rejected: u64,
+    /// uplink bytes from rejected frames (subset of `up_bytes`)
+    pub up_bytes_rejected: usize,
     /// max per-client parameter-store bytes
     pub peak_client_param_bytes: usize,
     /// decode-scratch capacity, bytes (summed across workers)
@@ -227,6 +267,9 @@ impl CohortStats {
         self.completed += o.completed;
         self.dropped += o.dropped;
         self.late += o.late;
+        self.crashed += o.crashed;
+        self.frames_rejected += o.frames_rejected;
+        self.up_bytes_rejected += o.up_bytes_rejected;
         self.peak_client_param_bytes =
             self.peak_client_param_bytes.max(o.peak_client_param_bytes);
         self.scratch_bytes += o.scratch_bytes;
@@ -241,10 +284,73 @@ impl CohortStats {
     }
 }
 
+/// Replay a client's planned corrupt uplink attempts against the wire
+/// verifier and account each rejection. Every replayed frame MUST fail
+/// verification — an accepted corrupt frame is an integrity-layer bug and
+/// errors out loudly (the acceptance contract: zero silently-accepted
+/// corrupt frames).
+fn reject_corrupt_attempts(
+    plan: &ClientPlan,
+    upload: &[u8],
+    stats: &mut CohortStats,
+    ledger: &mut NonceLedger,
+) -> Result<()> {
+    let Some(ch) = plan.chaos.as_ref() else {
+        return Ok(());
+    };
+    for f in &ch.faults {
+        let mut bad = upload.to_vec();
+        chaos::apply_fault(f, &mut bad);
+        let verdict = codec::verify_frame(&bad)
+            .and_then(|info| ledger.observe(info.nonce));
+        anyhow::ensure!(
+            verdict.is_err(),
+            "chaos-corrupted frame from client {} passed verification \
+             (is wire integrity enabled?)",
+            plan.cid
+        );
+        stats.frames_rejected += 1;
+        stats.up_bytes += bad.len();
+        stats.up_bytes_rejected += bad.len();
+    }
+    Ok(())
+}
+
+/// Account a planned duplicate replay of an already-accepted frame: the
+/// ledger must flag it (same nonce), and its bytes count as rejected.
+fn reject_duplicate(
+    plan: &ClientPlan,
+    upload: &[u8],
+    stats: &mut CohortStats,
+    ledger: &mut NonceLedger,
+) -> Result<()> {
+    if !plan.chaos.as_ref().map_or(false, |c| c.duplicate) {
+        return Ok(());
+    }
+    let verdict = codec::verify_frame(upload)
+        .and_then(|info| ledger.observe(info.nonce));
+    anyhow::ensure!(
+        verdict.is_err(),
+        "duplicated uplink from client {} was accepted twice",
+        plan.cid
+    );
+    stats.frames_rejected += 1;
+    stats.up_bytes += upload.len();
+    stats.up_bytes_rejected += upload.len();
+    Ok(())
+}
+
 /// Execute one contiguous chunk of the cohort: run each non-dropped
 /// client's job, account its bytes, and fold completing uploads straight
 /// into a chunk-local [`StreamingAggregator`] (the upload is dropped
 /// immediately after — decoded client models never accumulate).
+///
+/// Every frame headed for the accumulator is verified first
+/// ([`codec::verify_frame`]: structural walk for v1 frames, full CRC +
+/// nonce check for v2) — [`StreamingAggregator::accumulate_wire`] folds
+/// progressively, so rejection must happen before the sums are touched.
+/// Chaos-planned corrupt attempts and duplicates are replayed against the
+/// verifier and accounted as rejected.
 fn run_chunk<F>(
     base: usize,
     chunk: &[ClientPlan],
@@ -259,25 +365,60 @@ where
     let mut agg = StreamingAggregator::new(var_lens);
     let mut stats = CohortStats::default();
     let mut decode_scratch: Vec<f32> = Vec::new();
+    let mut ledger = NonceLedger::new(chunk.len().max(8) * 2);
     for (k, plan) in chunk.iter().enumerate() {
         let i = base + k;
-        if plan.fate == ClientFate::Dropped {
-            stats.dropped += 1;
-            continue;
+        match plan.fate {
+            ClientFate::Dropped => {
+                stats.dropped += 1;
+                continue;
+            }
+            ClientFate::Crashed => {
+                // gave-up clients trained and sent only corrupt frames;
+                // plain crashes died before training and sent nothing
+                let gave_up = plan
+                    .chaos
+                    .as_ref()
+                    .map_or(false, |c| c.gave_up && !c.crashed);
+                if gave_up {
+                    let r = job(i, plan, scratch)?;
+                    stats.loss_sum += r.loss;
+                    stats.trained += 1;
+                    stats.peak_client_param_bytes =
+                        stats.peak_client_param_bytes.max(r.peak_param_bytes);
+                    reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
+                }
+                stats.crashed += 1;
+                continue;
+            }
+            _ => {}
         }
         let r = job(i, plan, scratch)?;
-        stats.up_bytes += r.upload.len();
         stats.loss_sum += r.loss;
         stats.trained += 1;
         stats.peak_client_param_bytes =
             stats.peak_client_param_bytes.max(r.peak_param_bytes);
         if plan.fate == ClientFate::Late {
+            stats.up_bytes += r.upload.len();
             stats.late += 1;
             stats.up_bytes_discarded += r.upload.len();
-        } else {
-            agg.accumulate_wire(&r.upload, norm_w[i], &mut decode_scratch)?;
-            stats.completed += 1;
+            continue;
         }
+        // chaos retries precede the clean delivery
+        reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
+        stats.up_bytes += r.upload.len();
+        codec::verify_frame(&r.upload)
+            .and_then(|info| ledger.observe(info.nonce))
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "uplink from client {} failed verification outside the \
+                     chaos plan: {e}",
+                    plan.cid
+                )
+            })?;
+        agg.accumulate_wire(&r.upload, norm_w[i], &mut decode_scratch)?;
+        stats.completed += 1;
+        reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
     }
     stats.scratch_bytes = decode_scratch.capacity() * 4;
     stats.accum_bytes = agg.memory_bytes();
@@ -328,24 +469,59 @@ where
 {
     let mut stats = CohortStats::default();
     let mut uploads: Vec<(usize, Vec<u8>)> = Vec::new();
+    // verification runs here on the pinned thread (cohort order, one
+    // ledger for the whole cohort); only verified-clean frames reach the
+    // pooled fold below
+    let mut ledger = NonceLedger::new(plans.len().max(8) * 2);
     for (i, plan) in plans.iter().enumerate() {
-        if plan.fate == ClientFate::Dropped {
-            stats.dropped += 1;
-            continue;
+        match plan.fate {
+            ClientFate::Dropped => {
+                stats.dropped += 1;
+                continue;
+            }
+            ClientFate::Crashed => {
+                let gave_up = plan
+                    .chaos
+                    .as_ref()
+                    .map_or(false, |c| c.gave_up && !c.crashed);
+                if gave_up {
+                    let r = job(i, plan, scratch)?;
+                    stats.loss_sum += r.loss;
+                    stats.trained += 1;
+                    stats.peak_client_param_bytes =
+                        stats.peak_client_param_bytes.max(r.peak_param_bytes);
+                    reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
+                }
+                stats.crashed += 1;
+                continue;
+            }
+            _ => {}
         }
         let r = job(i, plan, scratch)?;
-        stats.up_bytes += r.upload.len();
         stats.loss_sum += r.loss;
         stats.trained += 1;
         stats.peak_client_param_bytes =
             stats.peak_client_param_bytes.max(r.peak_param_bytes);
         if plan.fate == ClientFate::Late {
+            stats.up_bytes += r.upload.len();
             stats.late += 1;
             stats.up_bytes_discarded += r.upload.len();
-        } else {
-            stats.completed += 1;
-            uploads.push((i, r.upload));
+            continue;
         }
+        reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
+        stats.up_bytes += r.upload.len();
+        codec::verify_frame(&r.upload)
+            .and_then(|info| ledger.observe(info.nonce))
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "uplink from client {} failed verification outside the \
+                     chaos plan: {e}",
+                    plan.cid
+                )
+            })?;
+        stats.completed += 1;
+        reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
+        uploads.push((i, r.upload));
     }
     let agg = aggregate_uploads(&uploads, norm_w, var_lens, workers, &mut stats)?;
     Ok((stats, agg))
@@ -451,19 +627,69 @@ pub fn run_round(
     scratch: &mut RoundScratch,
 ) -> Result<RoundOutcome> {
     let round = server.round as u64;
-    let participants = ctx.sampler.sample(round);
+    let mut participants = ctx.sampler.sample(round);
+    // quarantined clients sit the round out entirely: no downlink, no
+    // training, no accounting (the ladder owns their exclusion window)
+    if !ctx.quarantined.is_empty() {
+        participants.retain(|c| !ctx.quarantined.contains(c));
+    }
     let specs = &ctx.model.manifest.variables;
 
     // every sampled client's fate is decided before anything executes —
     // deterministic in (seed, round, cid), so the completing subset and
     // its normalized FedAvg weights are known up front
-    let plans = cohort::plan_cohort(
+    let mut plans = cohort::plan_cohort(
         &ctx.cohort,
         &participants,
         ctx.assignment,
         ctx.seed,
         round,
     );
+
+    // chaos fate upgrades, planned before any execution (deterministic in
+    // (seed, round, cid) exactly like the cohort plan). Only clients the
+    // cohort model had completing are touched: crash/give-up become
+    // Crashed, retry backoff can push a client past the deadline (Late).
+    // Reports feed the experiment's quarantine ladder — one per client
+    // that delivered (clean or gave up), so clean rounds reset strikes.
+    let mut chaos_reports: Vec<ChaosClientReport> = Vec::new();
+    if !ctx.chaos.is_off() {
+        anyhow::ensure!(
+            ctx.integrity,
+            "chaos injection requires wire integrity (omc.integrity) — \
+             corrupt frames must be detectable"
+        );
+        for plan in &mut plans {
+            let ch = chaos::plan_client(&ctx.chaos, ctx.seed, round, plan.cid);
+            if plan.fate != ClientFate::Completes {
+                // dropped/late clients never reach the verifier; keep the
+                // plan for determinism but inject nothing
+                continue;
+            }
+            if ch.crashed || ch.gave_up {
+                plan.fate = ClientFate::Crashed;
+                if ch.gave_up && !ch.crashed {
+                    chaos_reports.push(ChaosClientReport {
+                        cid: plan.cid,
+                        corrupt_frames: ch.faults.len() as u32,
+                        delivered_clean: false,
+                    });
+                }
+            } else if plan.latency_s + ch.extra_latency_s > ctx.cohort.deadline_s {
+                // retry backoff pushed the clean delivery past the
+                // deadline; the corrupt attempts are discarded unverified
+                // along with it, so no report is filed
+                plan.fate = ClientFate::Late;
+            } else {
+                chaos_reports.push(ChaosClientReport {
+                    cid: plan.cid,
+                    corrupt_frames: ch.faults.len() as u32,
+                    delivered_clean: true,
+                });
+            }
+            plan.chaos = Some(ch);
+        }
+    }
 
     // per-client PPQ masks + downlink payloads, for ALL sampled clients —
     // the server commits the downlink before it can know a client will
@@ -484,10 +710,21 @@ pub fn run_round(
     });
     let cache_ref = &cache;
     let bufs = scratch.take_downlink_bufs(masks.len());
-    let items: Vec<(&Vec<f32>, Vec<u8>)> = masks.iter().zip(bufs).collect();
+    let (seed, integrity) = (ctx.seed, ctx.integrity);
+    let items: Vec<(usize, &Vec<f32>, Vec<u8>)> = participants
+        .iter()
+        .copied()
+        .zip(masks.iter().zip(bufs))
+        .map(|(cid, (mask, buf))| (cid, mask, buf))
+        .collect();
     let downlinks: Vec<Vec<u8>> =
-        threadpool::scope_map_send(items, workers, move |_, (mask, buf)| {
-            cache_ref.assemble_into(global, mask, buf)
+        threadpool::scope_map_send(items, workers, move |_, (cid, mask, buf)| {
+            let nonce = if integrity {
+                Some(downlink_nonce(seed, round, cid as u64))
+            } else {
+                None
+            };
+            cache_ref.assemble_frame(global, mask, buf, nonce)
         })?;
     let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
 
@@ -502,13 +739,17 @@ pub fn run_round(
             round,
             plan.cid as u64,
         ]));
+        let mut tc = ctx.train;
+        if ctx.integrity {
+            tc.uplink_nonce = Some(uplink_nonce(ctx.seed, round, plan.cid as u64));
+        }
         client::run_client_round(
             ctx.model,
             ctx.domain,
             ctx.assignment.speakers(plan.cid),
             &downlinks[i],
             &masks[i],
-            ctx.train,
+            tc,
             &mut rng,
             cs,
         )
@@ -570,6 +811,10 @@ pub fn run_round(
         completed: stats.completed,
         dropped: stats.dropped,
         late: stats.late,
+        crashed: stats.crashed,
+        frames_rejected: stats.frames_rejected,
+        up_bytes_rejected: stats.up_bytes_rejected,
+        chaos_reports,
         participants,
     })
 }
@@ -594,6 +839,7 @@ mod tests {
                 fate: fate(i),
                 latency_s: 0.0,
                 weight: 1.0 + (i % 3) as f64,
+                chaos: None,
             })
             .collect()
     }
@@ -913,6 +1159,239 @@ mod tests {
         assert_eq!(stats.trained, 2); // late clients still trained
         assert!(stats.up_bytes > 0);
         assert_eq!(stats.up_bytes, stats.up_bytes_discarded);
+    }
+
+    /// v2 (checksummed) mock upload, nonce keyed by client id like the
+    /// real uplink path.
+    fn mock_result_v2(cid: usize) -> ClientResult {
+        let mut rng = Xoshiro256pp::new(hash_seed(&[0xBEEF, cid as u64]));
+        let mut w =
+            WireWriter::with_integrity(0, uplink_nonce(0xBEEF, 7, cid as u64));
+        for &n in &VAR_LENS {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.5);
+            w.raw(&v);
+        }
+        ClientResult {
+            upload: w.finish(),
+            loss: 1.0 + cid as f64 * 0.25,
+            peak_param_bytes: 1000 + cid,
+        }
+    }
+
+    fn v2_job(
+        _i: usize,
+        plan: &ClientPlan,
+        _cs: &mut ClientScratch,
+    ) -> Result<ClientResult> {
+        Ok(mock_result_v2(plan.cid))
+    }
+
+    /// A cohort with every chaos shape represented: clean completers,
+    /// retried-then-clean, duplicates, give-ups, crashes, plus the plain
+    /// cohort fates.
+    fn chaos_plans(n: usize) -> Vec<ClientPlan> {
+        use crate::fl::chaos::{ClientChaos, FaultKind, PlannedFault};
+        let flip = |p: u64| PlannedFault { kind: FaultKind::BitFlip, param: p };
+        let cut = |p: u64| PlannedFault { kind: FaultKind::Truncate, param: p };
+        (0..n)
+            .map(|i| {
+                let (fate, chaos) = match i % 7 {
+                    1 => (
+                        // all attempts corrupt: trained, nothing landed
+                        ClientFate::Crashed,
+                        Some(ClientChaos {
+                            faults: vec![flip(13 + i as u64), cut(40 + i as u64)],
+                            gave_up: true,
+                            ..ClientChaos::default()
+                        }),
+                    ),
+                    2 => (
+                        // died before training, sent nothing
+                        ClientFate::Crashed,
+                        Some(ClientChaos {
+                            crashed: true,
+                            ..ClientChaos::default()
+                        }),
+                    ),
+                    3 => (
+                        // one corrupt attempt, then the clean delivery
+                        ClientFate::Completes,
+                        Some(ClientChaos {
+                            faults: vec![flip(9999 + i as u64)],
+                            ..ClientChaos::default()
+                        }),
+                    ),
+                    4 => (
+                        // clean delivery replayed once
+                        ClientFate::Completes,
+                        Some(ClientChaos {
+                            duplicate: true,
+                            ..ClientChaos::default()
+                        }),
+                    ),
+                    5 => (ClientFate::Dropped, None),
+                    6 => (ClientFate::Late, None),
+                    _ => (ClientFate::Completes, None),
+                };
+                ClientPlan {
+                    cid: 100 + i,
+                    fate,
+                    latency_s: 0.0,
+                    weight: 1.0 + (i % 3) as f64,
+                    chaos,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chaos_rejections_accounted_identically_on_every_path() {
+        let plans = chaos_plans(21);
+        let norm_w = norm_weights(&plans);
+        let expected_rejected: u64 = plans
+            .iter()
+            .filter(|p| p.fate != ClientFate::Late)
+            .filter_map(|p| p.chaos.as_ref())
+            .map(|c| c.rejected_frames())
+            .sum();
+        assert!(expected_rejected >= 6, "cohort exercises every fault class");
+
+        let mut seq_scratch = ClientScratch::default();
+        let (seq, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut seq_scratch,
+            v2_job,
+        )
+        .unwrap();
+        assert_eq!(seq.frames_rejected, expected_rejected);
+        assert!(seq.up_bytes_rejected > 0);
+        // conservation: every sampled client has exactly one fate
+        assert_eq!(
+            seq.completed + seq.dropped + seq.late + seq.crashed,
+            plans.len()
+        );
+        // byte conservation: accepted + discarded + rejected == up_bytes
+        let accepted_bytes: usize = plans
+            .iter()
+            .filter(|p| p.fate == ClientFate::Completes)
+            .map(|p| mock_result_v2(p.cid).upload.len())
+            .sum();
+        assert_eq!(
+            seq.up_bytes,
+            accepted_bytes + seq.up_bytes_discarded + seq.up_bytes_rejected
+        );
+        // gave-up clients trained (and are in the loss mean); crashed did not
+        let gave_up = plans
+            .iter()
+            .filter(|p| {
+                p.chaos.as_ref().map_or(false, |c| c.gave_up && !c.crashed)
+            })
+            .count();
+        let hard_crashed = plans
+            .iter()
+            .filter(|p| p.chaos.as_ref().map_or(false, |c| c.crashed))
+            .count();
+        assert_eq!(seq.crashed, gave_up + hard_crashed);
+        assert_eq!(seq.trained, seq.completed + seq.late + gave_up);
+
+        // identical accounting and aggregate on the parallel paths
+        for workers in [2usize, 4] {
+            let mut scratches: Vec<ClientScratch> =
+                (0..workers).map(|_| ClientScratch::default()).collect();
+            let (sh, sh_agg) = run_cohort_sharded(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                workers,
+                &mut scratches,
+                v2_job,
+            )
+            .unwrap();
+            let mut cs = ClientScratch::default();
+            let (pin, pin_agg) = run_cohort_pinned(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                workers,
+                &mut cs,
+                v2_job,
+            )
+            .unwrap();
+            for s in [&sh, &pin] {
+                assert_eq!(s.frames_rejected, seq.frames_rejected);
+                assert_eq!(s.up_bytes_rejected, seq.up_bytes_rejected);
+                assert_eq!(s.up_bytes, seq.up_bytes);
+                assert_eq!(s.crashed, seq.crashed);
+                assert_eq!(s.completed, seq.completed);
+                assert_eq!(s.trained, seq.trained);
+                assert_eq!(s.loss_sum, seq.loss_sum);
+            }
+            assert_eq!(sh_agg.clients(), seq_agg.clients());
+            assert_eq!(pin_agg.clients(), seq_agg.clients());
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_accepted_by_verifier_is_a_hard_error() {
+        use crate::fl::chaos::{ClientChaos, FaultKind, PlannedFault};
+        // a bit flip deep in a *v1* raw payload passes the structural walk
+        // (no CRC to catch it) — the engine must refuse to run chaos over
+        // an unverifiable wire rather than count a rejection that never
+        // happened
+        let mut plans = mk_plans(1, |_| ClientFate::Completes);
+        plans[0].chaos = Some(ClientChaos {
+            faults: vec![PlannedFault {
+                kind: FaultKind::BitFlip,
+                // bit 800 : byte 100, well inside var 0's f32 payload
+                param: 800,
+            }],
+            ..ClientChaos::default()
+        });
+        let norm_w = norm_weights(&plans);
+        let mut scratch = ClientScratch::default();
+        let err = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut scratch,
+            |_i, plan, _cs| Ok(mock_result(plan.cid)), // v1 frames
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("passed verification"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn late_upgraded_clients_skip_fault_replay() {
+        use crate::fl::chaos::{ClientChaos, FaultKind, PlannedFault};
+        // a Late client with a chaos plan (backoff pushed it past the
+        // deadline): its corrupt attempts are discarded unverified, so
+        // nothing lands in the rejected counters
+        let mut plans = mk_plans(2, |_| ClientFate::Completes);
+        plans[1].fate = ClientFate::Late;
+        plans[1].chaos = Some(ClientChaos {
+            faults: vec![PlannedFault { kind: FaultKind::BitFlip, param: 3 }],
+            ..ClientChaos::default()
+        });
+        let norm_w = norm_weights(&plans);
+        let mut scratch = ClientScratch::default();
+        let (stats, _) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            &mut scratch,
+            v2_job,
+        )
+        .unwrap();
+        assert_eq!(stats.frames_rejected, 0);
+        assert_eq!(stats.up_bytes_rejected, 0);
+        assert_eq!(stats.late, 1);
+        assert_eq!(stats.completed, 1);
     }
 
     #[test]

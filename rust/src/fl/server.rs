@@ -274,6 +274,35 @@ impl StreamingAggregator {
         Ok(())
     }
 
+    /// Fold one uplink frame in — but only after verifying it end to end.
+    ///
+    /// [`accumulate_wire`](Self::accumulate_wire) mutates the sums
+    /// *progressively*, so a frame that fails mid-decode would leave them
+    /// half-updated. This checked variant first walks the frame with
+    /// [`codec::verify_frame`] (structure + header/per-variable CRCs, no
+    /// decompression) and consults the duplicate-`nonce` ledger; a bad
+    /// frame is reported as [`WireVerdict::Rejected`] with the sums
+    /// untouched — the round engines *account* it instead of aborting.
+    /// `Err` is reserved for shape mismatches against the model, which are
+    /// harness bugs, not wire corruption.
+    pub fn accumulate_wire_checked(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+        ledger: &mut codec::NonceLedger,
+    ) -> Result<WireVerdict> {
+        let info = match codec::verify_frame(wire) {
+            Ok(info) => info,
+            Err(e) => return Ok(WireVerdict::Rejected(e)),
+        };
+        if let Err(e) = ledger.observe(info.nonce) {
+            return Ok(WireVerdict::Rejected(e));
+        }
+        self.accumulate_wire(wire, wc, scratch)?;
+        Ok(WireVerdict::Accepted)
+    }
+
     /// Fold another accumulator (e.g. a shard's) into this one. Merging is
     /// pure f64 addition, so merge order only reassociates the sums.
     pub fn merge(&mut self, other: StreamingAggregator) -> Result<()> {
@@ -315,6 +344,22 @@ impl StreamingAggregator {
         );
         server.apply_mean(self.sums);
         Ok(())
+    }
+}
+
+/// Outcome of [`StreamingAggregator::accumulate_wire_checked`].
+#[derive(Debug)]
+pub enum WireVerdict {
+    /// The frame verified clean and was folded into the sums.
+    Accepted,
+    /// The frame was rejected before any fold; the sums are untouched.
+    Rejected(codec::DecodeError),
+}
+
+impl WireVerdict {
+    /// True when the frame was folded in.
+    pub fn accepted(&self) -> bool {
+        matches!(self, WireVerdict::Accepted)
     }
 }
 
@@ -578,5 +623,59 @@ mod tests {
         agg.accumulate_model(&[vec![1.0f32; 3]], 1.0).unwrap();
         assert!(agg.apply(&mut s).is_err());
         assert_eq!(s.round, 0, "failed applies must not advance the round");
+    }
+
+    fn raw_wire_v2(model: &[Vec<f32>], nonce: u64) -> Vec<u8> {
+        let mut w = WireWriter::with_integrity(0, nonce);
+        for v in model {
+            w.raw(v);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn checked_fold_rejects_corruption_without_touching_sums() {
+        let mut g = Gen::new(15);
+        let m: Vec<Vec<f32>> = vec![g.vec_normal(64, 0.5)];
+        let wire = raw_wire_v2(&m, 77);
+        let mut agg = StreamingAggregator::new(&[64]);
+        let mut scratch = Vec::new();
+        let mut ledger = codec::NonceLedger::new(16);
+
+        // a corrupt frame is rejected, never folded — even when the flip
+        // sits mid-payload where a progressive fold would already have
+        // mutated the sums
+        let mut bad = wire.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        let v = agg
+            .accumulate_wire_checked(&bad, 0.5, &mut scratch, &mut ledger)
+            .unwrap();
+        assert!(!v.accepted(), "corrupt frame must be rejected");
+        assert_eq!(agg.clients(), 0);
+        assert_eq!(agg.total_weight(), 0.0);
+
+        // the clean frame folds; its replay is a duplicate
+        assert!(agg
+            .accumulate_wire_checked(&wire, 0.5, &mut scratch, &mut ledger)
+            .unwrap()
+            .accepted());
+        assert_eq!(agg.clients(), 1);
+        let v = agg
+            .accumulate_wire_checked(&wire, 0.5, &mut scratch, &mut ledger)
+            .unwrap();
+        match v {
+            WireVerdict::Rejected(codec::DecodeError::DuplicateNonce(77)) => {}
+            other => panic!("expected duplicate-nonce rejection, got {other:?}"),
+        }
+        assert_eq!(agg.clients(), 1, "duplicate must not fold");
+
+        // v1 frames (no nonce) pass the ledger freely
+        let v1 = raw_wire(&m);
+        assert!(agg
+            .accumulate_wire_checked(&v1, 0.5, &mut scratch, &mut ledger)
+            .unwrap()
+            .accepted());
+        assert_eq!(agg.clients(), 2);
     }
 }

@@ -29,7 +29,11 @@
 //!   scenarios), [`fl::sampler`], [`fl::round`] — the streaming, sharded
 //!   synchronous round engine — and [`fl::async_round`] — the buffered
 //!   staleness-aware asynchronous engine (virtual-time planned, commits
-//!   byte-identical for any worker count; `docs/ASYNC.md`).
+//!   byte-identical for any worker count; `docs/ASYNC.md`). [`fl::chaos`]
+//!   injects deterministic wire faults (corruption, replays, crashes,
+//!   commit failures) against the checksummed v2 frame layout of
+//!   [`omc::codec`], with retry/backoff and a quarantine ladder —
+//!   `docs/ROBUSTNESS.md` documents the integrity and fault contracts.
 //! * [`coordinator`] — experiment configs (TOML or builders), the
 //!   [`coordinator::Experiment`] driver, presets for the paper's tables
 //!   (including the [`coordinator::presets`] sweep grids), the

@@ -40,6 +40,14 @@ pub struct RoundRecord {
     pub dropped: usize,
     /// clients that reported after the deadline
     pub late: usize,
+    /// clients killed by chaos: crashed mid-round, or gave up after
+    /// exhausting their uplink retries (zero when chaos is off)
+    pub crashed: usize,
+    /// uplink frames the server rejected this round — corrupt attempts
+    /// caught by the wire-integrity check plus duplicate replays
+    pub frames_rejected: u64,
+    /// the subset of `up_bytes` spent on rejected frames
+    pub up_bytes_rejected: usize,
     pub round_seconds: f64,
 }
 
@@ -68,6 +76,9 @@ pub struct CommitRecord {
     pub virtual_time: f64,
     /// RMS parameter drift of this commit vs the version it replaced
     pub param_drift: f64,
+    /// transient server-side failures before this commit stuck (chaos);
+    /// each added virtual-time backoff but never lost the commit
+    pub commit_failures: u32,
 }
 
 /// Collects round records and writes them out.
@@ -222,6 +233,28 @@ impl Recorder {
         self.records.iter().map(|r| r.up_bytes_discarded).sum()
     }
 
+    /// Total uplink frames the server rejected across the run (corrupt
+    /// attempts + duplicate replays; zero when chaos is off).
+    pub fn total_frames_rejected(&self) -> u64 {
+        self.records.iter().map(|r| r.frames_rejected).sum()
+    }
+
+    /// Total uplink bytes spent on rejected frames (subset of
+    /// [`total_up_bytes`](Self::total_up_bytes)).
+    pub fn total_up_bytes_rejected(&self) -> usize {
+        self.records.iter().map(|r| r.up_bytes_rejected).sum()
+    }
+
+    /// Clients killed by chaos across the run (crashes + retry give-ups).
+    pub fn total_crashed(&self) -> usize {
+        self.records.iter().map(|r| r.crashed).sum()
+    }
+
+    /// Transient commit failures injected across the run (async chaos).
+    pub fn total_commit_failures(&self) -> u64 {
+        self.commits.iter().map(|c| u64::from(c.commit_failures)).sum()
+    }
+
     /// `(round, WER)` for every evaluated round, in order — the figure
     /// curves, and the deterministic per-cell sweep summaries.
     pub fn eval_wer_curve(&self) -> Vec<(usize, f64)> {
@@ -258,11 +291,12 @@ impl Recorder {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,\
-             up_bytes_discarded,sampled,completed,dropped,late,round_seconds\n",
+             up_bytes_discarded,sampled,completed,dropped,late,crashed,\
+             frames_rejected,up_bytes_rejected,round_seconds\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{:.6}\n",
+                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -274,6 +308,9 @@ impl Recorder {
                 r.completed,
                 r.dropped,
                 r.late,
+                r.crashed,
+                r.frames_rejected,
+                r.up_bytes_rejected,
                 r.round_seconds
             ));
         }
@@ -310,7 +347,7 @@ impl Recorder {
         let mut out = String::from(
             "commit,folded,mean_staleness,staleness_hist,mean_occupancy,\
              window_events,discarded_updates,discarded_bytes,ring_bytes,\
-             virtual_time,param_drift\n",
+             virtual_time,param_drift,commit_failures\n",
         );
         for c in &self.commits {
             let hist = c
@@ -320,7 +357,7 @@ impl Recorder {
                 .collect::<Vec<_>>()
                 .join("|");
             out.push_str(&format!(
-                "{},{},{:.4},{},{:.4},{},{},{},{},{:.6},{:.6e}\n",
+                "{},{},{:.4},{},{:.4},{},{},{},{},{:.6},{:.6e},{}\n",
                 c.commit,
                 c.folded,
                 c.mean_staleness,
@@ -331,7 +368,8 @@ impl Recorder {
                 c.discarded_bytes,
                 c.ring_bytes,
                 c.virtual_time,
-                c.param_drift
+                c.param_drift,
+                c.commit_failures
             ));
         }
         out
@@ -374,6 +412,9 @@ mod tests {
             completed: 4,
             dropped: 0,
             late: 0,
+            crashed: 0,
+            frames_rejected: 0,
+            up_bytes_rejected: 0,
             round_seconds: 0.5,
         }
     }
@@ -407,9 +448,10 @@ mod tests {
         assert!(csv.starts_with("round,"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("12.5"));
-        // header and rows have the same column count (incl. cohort columns)
+        // header and rows have the same column count (incl. cohort and
+        // chaos-health columns)
         let cols = csv.lines().next().unwrap().split(',').count();
-        assert_eq!(cols, 12);
+        assert_eq!(cols, 15);
         for line in csv.lines().skip(1) {
             assert_eq!(line.split(',').count(), cols, "{line}");
         }
@@ -428,6 +470,31 @@ mod tests {
         r.push(partial);
         assert!((r.mean_completion_rate() - 0.75).abs() < 1e-9);
         assert!(r.to_csv().contains(",2,1,1,"));
+    }
+
+    #[test]
+    fn chaos_health_columns_and_totals() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 10.0));
+        let mut stormy = rec(1, 10.0);
+        stormy.completed = 2;
+        stormy.crashed = 2;
+        stormy.frames_rejected = 5;
+        stormy.up_bytes_rejected = 123;
+        r.push(stormy);
+        assert_eq!(r.total_crashed(), 2);
+        assert_eq!(r.total_frames_rejected(), 5);
+        assert_eq!(r.total_up_bytes_rejected(), 123);
+        let csv = r.to_csv();
+        assert!(csv.lines().next().unwrap().contains("frames_rejected"));
+        assert!(csv.contains(",2,5,123,"), "{csv}");
+        // commit failures surface in the async CSV + total
+        r.push_commit(commit(0, vec![2]));
+        r.push_commit(commit(3, vec![2]));
+        assert_eq!(r.total_commit_failures(), 3);
+        let ccsv = r.commits_csv();
+        assert!(ccsv.lines().next().unwrap().ends_with("commit_failures"));
+        assert!(ccsv.lines().nth(2).unwrap().ends_with(",3"), "{ccsv}");
     }
 
     #[test]
@@ -488,6 +555,7 @@ mod tests {
             ring_bytes: 4096,
             virtual_time: 1.5 * (commit + 1) as f64,
             param_drift: 1e-3,
+            commit_failures: commit as u32,
         }
     }
 

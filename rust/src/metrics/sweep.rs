@@ -26,7 +26,10 @@ use crate::util::json::{self, Json};
 /// v2: `async_mode` on every cell + the `async` metrics object on async
 /// cells (staleness histogram, buffer occupancy, discarded bytes, ring
 /// memory, virtual time — all deterministic in `(config, seed)`).
-pub const SWEEP_SCHEMA_VERSION: usize = 2;
+/// v3: `integrity`/`chaos_enabled` flags plus the wire-health counters
+/// (`crashed`, `frames_rejected`, `up_bytes_rejected`; `commit_failures`
+/// in the async object) — the CI chaos gate greps these.
+pub const SWEEP_SCHEMA_VERSION: usize = 3;
 
 /// Build the deterministic summary document for one finished cell.
 ///
@@ -89,6 +92,17 @@ pub fn cell_summary(
         ),
         ("eval_wer_curve", Json::Arr(curve)),
         ("async_mode", Json::Bool(cfg.async_cfg.enabled)),
+        ("integrity", Json::Bool(cfg.omc.integrity)),
+        ("chaos_enabled", Json::Bool(!cfg.chaos.is_off())),
+        ("crashed", json::num(rec.total_crashed() as f64)),
+        (
+            "frames_rejected",
+            json::num(rec.total_frames_rejected() as f64),
+        ),
+        (
+            "up_bytes_rejected",
+            json::num(rec.total_up_bytes_rejected() as f64),
+        ),
     ];
     if cfg.async_cfg.enabled {
         let a = cfg.async_cfg.resolved(cfg.clients_per_round);
@@ -153,6 +167,10 @@ pub fn cell_summary(
                 (
                     "final_virtual_time",
                     json::num(rec.final_virtual_time()),
+                ),
+                (
+                    "commit_failures",
+                    json::num(rec.total_commit_failures() as f64),
                 ),
             ]),
         ));
@@ -247,6 +265,9 @@ mod tests {
             completed: 4,
             dropped: 0,
             late: 0,
+            crashed: 0,
+            frames_rejected: 0,
+            up_bytes_rejected: 0,
             round_seconds: 0.123, // must never appear in the summary
         });
         let run = RunSummary {
@@ -341,6 +362,7 @@ mod tests {
             ring_bytes: 2048,
             virtual_time: 2.25,
             param_drift: 1e-3,
+            commit_failures: 2,
         });
         let run = RunSummary {
             label: "a".into(),
@@ -374,6 +396,64 @@ mod tests {
     }
 
     #[test]
+    fn chaos_cells_carry_wire_health_counters() {
+        let mut cfg =
+            ExperimentConfig::default_with("c", Path::new("native:tiny"));
+        cfg.omc.integrity = true;
+        cfg.chaos.enabled = true;
+        cfg.chaos.bitflip_prob = 0.2;
+        let mut rec = Recorder::new("c");
+        let mut r = RoundRecord {
+            round: 0,
+            train_loss: 1.0,
+            eval_loss: 0.5,
+            eval_wer: 20.0,
+            down_bytes: 100,
+            up_bytes: 90,
+            up_bytes_discarded: 0,
+            sampled: 4,
+            completed: 3,
+            dropped: 0,
+            late: 0,
+            crashed: 1,
+            frames_rejected: 4,
+            up_bytes_rejected: 77,
+            round_seconds: 0.1,
+        };
+        rec.push(r.clone());
+        r.round = 1;
+        r.frames_rejected = 2;
+        r.up_bytes_rejected = 33;
+        r.crashed = 0;
+        rec.push(r);
+        let run = RunSummary {
+            label: "c".into(),
+            final_wer: 20.0,
+            final_loss: 1.0,
+            param_memory_bytes: 100,
+            memory_ratio: 0.5,
+            comm_bytes_per_round: 10.0,
+            rounds_per_min: 1.0,
+            rounds: 2,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"integrity\":true"));
+        assert!(text.contains("\"chaos_enabled\":true"));
+        assert!(text.contains("\"crashed\":1"));
+        assert!(text.contains("\"frames_rejected\":6"));
+        assert!(text.contains("\"up_bytes_rejected\":110"));
+        // clean cells keep the counters at zero but still present — the
+        // CI grep gate relies on the keys existing either way
+        let clean = sample_cell().to_string();
+        assert!(clean.contains("\"chaos_enabled\":false"));
+        assert!(clean.contains("\"frames_rejected\":0"));
+        // round-trip stability holds with the new fields
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
     fn inf_and_nan_eval_metrics_round_trip_as_null() {
         // regression: a summary whose eval metrics went non-finite (e.g. a
         // diverged cell with +inf loss, or NaN WER after a fully-dropped
@@ -393,6 +473,9 @@ mod tests {
             completed: 1,
             dropped: 0,
             late: 0,
+            crashed: 0,
+            frames_rejected: 0,
+            up_bytes_rejected: 0,
             round_seconds: 0.0,
         });
         let run = RunSummary {

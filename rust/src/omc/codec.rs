@@ -5,27 +5,172 @@
 //! the bit-packed SxEyMz codes with the PVT scalars, or raw f32. These byte
 //! counts are exactly what the paper's "Communication" column reports.
 //!
-//! Layout (all little-endian):
+//! Layout (all little-endian). Version 1 is the integrity-off fast path —
+//! byte-identical to every frame this repo has ever emitted, which is what
+//! keeps the committed sweep goldens and the wire-ratio accounting stable:
 //! ```text
 //! magic  "OMCW"            4 bytes
-//! version u16              currently 1
+//! version u16              1 (plain) or 2 (integrity)
 //! nvars  u32
+//! v2 only:
+//!   nonce u64              round/version nonce for duplicate detection
+//!   hcrc  u32              CRC32C over bytes 0..18 (magic..nonce)
 //! per variable:
 //!   tag   u8               0 = raw f32, 1 = packed
 //!   n     u32              element count
 //!   raw:    n * f32
 //!   packed: e u8, m u8, s f32, b f32, payload_len u32, payload bytes
+//!   v2 only: crc u32       CRC32C over this variable's record bytes
 //! ```
+//!
+//! Decoding is version-agnostic: [`for_each_var`] accepts both layouts and
+//! verifies every checksum before a variable reaches the callback, so the
+//! client/server decode paths need no knowledge of which framing the peer
+//! used. All malformed-input conditions surface as typed [`DecodeError`]s —
+//! never a panic, never a silently mis-decoded frame (see
+//! `docs/ROBUSTNESS.md` for the full contract).
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::Result;
 
 use super::format::FloatFormat;
 use super::pack::{self, PackError};
 use super::store::{CompressedModel, StoredVar};
 use super::transform::Pvt;
+use crate::util::simd::crc32c;
 
 const MAGIC: &[u8; 4] = b"OMCW";
 const VERSION: u16 = 1;
+/// Wire version with nonce + header/per-variable CRC32C.
+const VERSION_INTEGRITY: u16 = 2;
+/// Byte length of the v2 header (magic 4, version 2, nvars 4, nonce 8,
+/// hcrc 4); the header CRC covers everything before the `hcrc` field.
+const V2_HEADER_LEN: usize = 22;
+const V2_HCRC_AT: usize = 18;
+
+/// Typed decode failure for wire frames. Every way a frame can be
+/// malformed — truncation, corruption, duplication — maps to a variant
+/// here, so the round engines can *account* rejected frames instead of
+/// aborting the round, while ad-hoc callers keep using `?` (the type
+/// converts into `anyhow::Error`).
+#[derive(Debug)]
+pub enum DecodeError {
+    /// The frame ended before a field or payload could be read.
+    Truncated {
+        /// byte offset at which the read ran past the end
+        at: usize,
+    },
+    /// The first four bytes are not `OMCW`.
+    BadMagic,
+    /// A version this decoder does not understand.
+    UnsupportedVersion(u16),
+    /// The declared variable count cannot fit in the frame.
+    ImplausibleVarCount(usize),
+    /// A declared length overflows addressable size.
+    LengthOverflow {
+        /// variable index
+        var: usize,
+    },
+    /// A packed variable declares an invalid `SxEyMz` format.
+    BadFormat {
+        /// variable index
+        var: usize,
+        /// declared exponent bits
+        e: u32,
+        /// declared mantissa bits
+        m: u32,
+    },
+    /// A packed variable carries non-finite PVT scalars.
+    NonFinitePvt {
+        /// variable index
+        var: usize,
+    },
+    /// A packed payload length disagrees with `n` at the declared format.
+    LengthMismatch {
+        /// variable index
+        var: usize,
+    },
+    /// An unknown per-variable tag byte.
+    UnknownTag {
+        /// variable index
+        var: usize,
+        /// the tag byte
+        tag: u8,
+    },
+    /// Bytes remain after the last declared variable.
+    TrailingBytes,
+    /// The v2 header checksum does not match (covers magic through nonce).
+    HeaderCrcMismatch,
+    /// A variable record's CRC32C does not match its bytes.
+    CrcMismatch {
+        /// variable index
+        var: usize,
+    },
+    /// The frame's nonce was already accepted (replayed/duplicated uplink).
+    DuplicateNonce(u64),
+    /// The per-variable callback failed (not a wire-format problem).
+    Callback(anyhow::Error),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { at } => {
+                write!(f, "truncated frame (read past end at byte {at})")
+            }
+            DecodeError::BadMagic => write!(f, "bad magic (not an OMC frame)"),
+            DecodeError::UnsupportedVersion(v) => {
+                write!(f, "unsupported wire version {v}")
+            }
+            DecodeError::ImplausibleVarCount(n) => {
+                write!(f, "implausible variable count {n}")
+            }
+            DecodeError::LengthOverflow { var } => {
+                write!(f, "length overflow in var {var}")
+            }
+            DecodeError::BadFormat { var, e, m } => {
+                write!(f, "invalid format S1E{e}M{m} in var {var}")
+            }
+            DecodeError::NonFinitePvt { var } => {
+                write!(f, "non-finite PVT scalars in var {var}")
+            }
+            DecodeError::LengthMismatch { var } => {
+                write!(f, "payload length inconsistent with n in var {var}")
+            }
+            DecodeError::UnknownTag { var, tag } => {
+                write!(f, "unknown variable tag {tag} in var {var}")
+            }
+            DecodeError::TrailingBytes => {
+                write!(f, "trailing bytes after payload")
+            }
+            DecodeError::HeaderCrcMismatch => write!(f, "header CRC mismatch"),
+            DecodeError::CrcMismatch { var } => {
+                write!(f, "CRC mismatch in var {var}")
+            }
+            DecodeError::DuplicateNonce(n) => {
+                write!(f, "duplicate frame nonce {n:#018x}")
+            }
+            DecodeError::Callback(e) => write!(f, "decode callback: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DecodeError::Callback(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl DecodeError {
+    /// True when the error describes a bad *frame* (rejectable transport
+    /// corruption) as opposed to a failed callback (a caller-side problem
+    /// that must propagate, not be accounted as a rejected frame).
+    pub fn is_frame_error(&self) -> bool {
+        !matches!(self, DecodeError::Callback(_))
+    }
+}
 
 /// Streaming writer for the wire format — lets callers assemble a payload
 /// from borrowed parts without materializing a `CompressedModel` (the
@@ -34,6 +179,9 @@ const VERSION: u16 = 1;
 pub struct WireWriter {
     buf: Vec<u8>,
     nvars: u32,
+    /// `Some(nonce)` ⇒ emit the v2 integrity layout (nonce + header CRC +
+    /// per-variable CRC32C); `None` ⇒ the byte-identical v1 fast path.
+    integrity: Option<u64>,
 }
 
 impl WireWriter {
@@ -45,31 +193,67 @@ impl WireWriter {
     /// Start a frame in a recycled buffer (cleared; its capacity plus
     /// `cap` extra is retained) — the round loop's per-client payload
     /// buffers live across rounds this way.
-    pub fn with_buf_and_capacity(mut buf: Vec<u8>, cap: usize) -> Self {
+    pub fn with_buf_and_capacity(buf: Vec<u8>, cap: usize) -> Self {
+        Self::new_inner(buf, cap, None)
+    }
+
+    /// Start a checksummed v2 frame carrying `nonce` in a fresh buffer.
+    pub fn with_integrity(cap: usize, nonce: u64) -> Self {
+        Self::new_inner(Vec::new(), cap, Some(nonce))
+    }
+
+    /// [`with_integrity`](Self::with_integrity) into a recycled buffer.
+    pub fn with_buf_and_integrity(buf: Vec<u8>, cap: usize, nonce: u64) -> Self {
+        Self::new_inner(buf, cap, Some(nonce))
+    }
+
+    fn new_inner(mut buf: Vec<u8>, cap: usize, integrity: Option<u64>) -> Self {
         buf.clear();
-        buf.reserve(cap + 16);
+        buf.reserve(cap + 32);
         buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
-        buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
-        Self { buf, nvars: 0 }
+        match integrity {
+            None => {
+                buf.extend_from_slice(&VERSION.to_le_bytes());
+                buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
+            }
+            Some(nonce) => {
+                buf.extend_from_slice(&VERSION_INTEGRITY.to_le_bytes());
+                buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
+                buf.extend_from_slice(&nonce.to_le_bytes());
+                buf.extend_from_slice(&0u32.to_le_bytes()); // hcrc, in finish()
+            }
+        }
+        Self { buf, nvars: 0, integrity }
+    }
+
+    /// Close out the variable record that started at byte `start`: append
+    /// its CRC32C when writing the integrity layout, and count it.
+    fn seal_var(&mut self, start: usize) {
+        if self.integrity.is_some() {
+            let crc = crc32c(0, &self.buf[start..]);
+            self.buf.extend_from_slice(&crc.to_le_bytes());
+        }
+        self.nvars += 1;
     }
 
     /// Emit an unquantized variable: `n` f32 values shipped as-is.
     pub fn raw(&mut self, v: &[f32]) {
+        let start = self.buf.len();
         self.buf.push(0u8);
         self.buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
         // bulk-copy the f32 payload (little-endian hosts: this is memcpy)
         for x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
-        self.nvars += 1;
+        self.seal_var(start);
     }
 
     /// Emit an already bit-packed variable payload with its PVT scalars.
     pub fn packed(&mut self, bytes: &[u8], n: usize, fmt: FloatFormat, pvt: Pvt) {
+        let start = self.buf.len();
         self.packed_header(n, fmt, pvt, bytes.len());
         self.buf.extend_from_slice(bytes);
-        self.nvars += 1;
+        self.seal_var(start);
     }
 
     fn packed_header(&mut self, n: usize, fmt: FloatFormat, pvt: Pvt, plen: usize) {
@@ -91,16 +275,19 @@ impl WireWriter {
         fmt: FloatFormat,
         pvt: Pvt,
     ) -> std::result::Result<(), PackError> {
+        let start = self.buf.len();
         self.packed_header(vt.len(), fmt, pvt, fmt.packed_bytes(vt.len()));
         pack::pack_extend(vt, fmt, &mut self.buf)?;
-        self.nvars += 1;
+        self.seal_var(start);
         Ok(())
     }
 
     /// Emit a packed variable by running the fused quantize → PVT-fit →
     /// pack pipeline straight into the frame (`values` need not be
-    /// quantized). The PVT scalars land in the header retroactively.
+    /// quantized). The PVT scalars land in the header retroactively
+    /// (before the record is sealed, so the v2 CRC covers the final bytes).
     pub fn compress_values(&mut self, values: &[f32], fmt: FloatFormat, use_pvt: bool) {
+        let start = self.buf.len();
         let plen = fmt.packed_bytes(values.len());
         self.packed_header(values.len(), fmt, Pvt::IDENTITY, plen);
         // s/b sit 12 bytes back from the header end (s f32, b f32, plen u32)
@@ -108,7 +295,7 @@ impl WireWriter {
         let pvt = pack::quantize_transform_pack(values, fmt, use_pvt, &mut self.buf);
         self.buf[sb_at..sb_at + 4].copy_from_slice(&pvt.s.to_le_bytes());
         self.buf[sb_at + 4..sb_at + 8].copy_from_slice(&pvt.b.to_le_bytes());
-        self.nvars += 1;
+        self.seal_var(start);
     }
 
     /// Emit a stored variable (raw or packed, whichever it is).
@@ -121,10 +308,16 @@ impl WireWriter {
         }
     }
 
-    /// Patch the header's variable count and hand back the finished frame.
+    /// Patch the header's variable count (and, for integrity frames, the
+    /// header CRC) and hand back the finished frame.
     pub fn finish(mut self) -> Vec<u8> {
         let nv = self.nvars.to_le_bytes();
         self.buf[6..10].copy_from_slice(&nv);
+        if self.integrity.is_some() {
+            let hcrc = crc32c(0, &self.buf[..V2_HCRC_AT]);
+            self.buf[V2_HCRC_AT..V2_HEADER_LEN]
+                .copy_from_slice(&hcrc.to_le_bytes());
+        }
         self.buf
     }
 }
@@ -270,61 +463,142 @@ fn raw_f32s_into(data: &[u8], out: &mut Vec<f32>) {
 /// .unwrap();
 /// assert_eq!((nvars, total), (2, 4));
 /// ```
-pub fn for_each_var<F>(bytes: &[u8], mut f: F) -> Result<usize>
+pub fn for_each_var<F>(
+    bytes: &[u8],
+    mut f: F,
+) -> std::result::Result<usize, DecodeError>
 where
     F: FnMut(usize, VarView<'_>) -> Result<()>,
 {
     let mut r = Reader { b: bytes, i: 0 };
-    let magic = r.take(4)?;
-    ensure!(magic == MAGIC, "bad magic {:?}", &magic);
-    let version = r.u16()?;
-    ensure!(version == VERSION, "unsupported wire version {version}");
-    let nvars = r.u32()? as usize;
-    // sanity bound: each variable needs >= 6 bytes of header
-    ensure!(
-        nvars <= bytes.len() / 5 + 1,
-        "implausible variable count {nvars}"
-    );
+    let (version, nvars) = r.header(bytes)?;
+    let checked = version == VERSION_INTEGRITY;
     for vi in 0..nvars {
-        let tag = r.u8()?;
-        let n = r.u32()? as usize;
-        match tag {
-            0 => {
-                let data = r.take(n * 4).with_context(|| format!("raw var {vi}"))?;
-                f(vi, VarView::Raw { data, n })?;
+        let start = r.i;
+        let view = r.parse_var(vi)?;
+        if checked {
+            // verify the record's checksum BEFORE the view reaches the
+            // callback — corrupted bytes must never be decoded
+            let end = r.i;
+            let want = r.u32()?;
+            if crc32c(0, &bytes[start..end]) != want {
+                return Err(DecodeError::CrcMismatch { var: vi });
             }
-            1 => {
-                let e = r.u8()? as u32;
-                let m = r.u8()? as u32;
-                let fmt = FloatFormat::new(e, m)
-                    .with_context(|| format!("packed var {vi}"))?;
-                let s = f32::from_le_bytes(r.arr4()?);
-                let b = f32::from_le_bytes(r.arr4()?);
-                ensure!(
-                    s.is_finite() && b.is_finite(),
-                    "non-finite PVT scalars in var {vi}"
-                );
-                let plen = r.u32()? as usize;
-                ensure!(
-                    plen == fmt.packed_bytes(n),
-                    "payload length {plen} inconsistent with n={n} at {fmt}"
-                );
-                let payload = r.take(plen)?;
-                f(
-                    vi,
-                    VarView::Packed {
-                        payload,
-                        n,
-                        fmt,
-                        pvt: Pvt { s, b },
-                    },
-                )?;
+        }
+        f(vi, view).map_err(DecodeError::Callback)?;
+    }
+    if r.i != bytes.len() {
+        return Err(DecodeError::TrailingBytes);
+    }
+    Ok(nvars)
+}
+
+/// Summary of a verified frame, returned by [`verify_frame`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameInfo {
+    /// wire version (1 plain, 2 integrity)
+    pub version: u16,
+    /// declared (and verified) variable count
+    pub nvars: usize,
+    /// the v2 nonce; `None` for v1 frames
+    pub nonce: Option<u64>,
+}
+
+/// Parse a frame's header and return its nonce (`None` for v1 frames).
+/// For v2 frames the header CRC is verified first, so a flipped nonce —
+/// not covered by any per-variable checksum — is still rejected.
+pub fn frame_nonce(bytes: &[u8]) -> std::result::Result<Option<u64>, DecodeError> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let (version, _) = r.header(bytes)?;
+    Ok(match version {
+        VERSION_INTEGRITY => Some(u64::from_le_bytes(
+            bytes[10..18].try_into().expect("header bounds checked"),
+        )),
+        _ => None,
+    })
+}
+
+/// Walk a frame end to end, verifying structure and every checksum
+/// without decoding any payload — the cheap accept/reject decision the
+/// round engines make before folding an uplink into the aggregator (a
+/// CRC failure mid-[`StreamingAggregator`] fold would leave the sums
+/// half-updated; verifying first keeps rejection side-effect free).
+///
+/// [`StreamingAggregator`]: crate::fl::server::StreamingAggregator
+pub fn verify_frame(bytes: &[u8]) -> std::result::Result<FrameInfo, DecodeError> {
+    let nonce = frame_nonce(bytes)?;
+    let mut r = Reader { b: bytes, i: 0 };
+    let (version, nvars) = r.header(bytes)?;
+    let checked = version == VERSION_INTEGRITY;
+    for vi in 0..nvars {
+        let start = r.i;
+        let _ = r.parse_var(vi)?;
+        if checked {
+            let end = r.i;
+            let want = r.u32()?;
+            if crc32c(0, &bytes[start..end]) != want {
+                return Err(DecodeError::CrcMismatch { var: vi });
             }
-            t => bail!("unknown variable tag {t}"),
         }
     }
-    ensure!(r.i == bytes.len(), "trailing bytes after payload");
-    Ok(nvars)
+    if r.i != bytes.len() {
+        return Err(DecodeError::TrailingBytes);
+    }
+    Ok(FrameInfo { version, nvars, nonce })
+}
+
+/// Bounded ledger of accepted frame nonces — the server-side duplicate
+/// detector. A replayed or duplicated v2 uplink carries a nonce the
+/// ledger has already seen and is rejected as
+/// [`DecodeError::DuplicateNonce`]; v1 frames (no nonce) pass through.
+/// Capacity-bounded FIFO eviction keeps memory O(cap) over long runs.
+#[derive(Debug)]
+pub struct NonceLedger {
+    seen: std::collections::HashSet<u64>,
+    order: std::collections::VecDeque<u64>,
+    cap: usize,
+}
+
+impl NonceLedger {
+    /// Ledger remembering at most `cap` recent nonces (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "nonce ledger capacity must be >= 1");
+        Self {
+            seen: std::collections::HashSet::new(),
+            order: std::collections::VecDeque::new(),
+            cap,
+        }
+    }
+
+    /// Record a frame's nonce. `Err(DuplicateNonce)` when it was already
+    /// accepted; `Ok` (and remembered) otherwise. `None` — a v1 frame —
+    /// is always accepted and never remembered.
+    pub fn observe(
+        &mut self,
+        nonce: Option<u64>,
+    ) -> std::result::Result<(), DecodeError> {
+        let Some(n) = nonce else { return Ok(()) };
+        if !self.seen.insert(n) {
+            return Err(DecodeError::DuplicateNonce(n));
+        }
+        self.order.push_back(n);
+        if self.order.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.seen.remove(&old);
+            }
+        }
+        Ok(())
+    }
+
+    /// Nonces currently remembered.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    /// True when no nonce has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
 }
 
 /// Decode wire bytes back into a compressed model.
@@ -369,30 +643,111 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.i + n <= self.b.len(), "truncated payload");
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], DecodeError> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&end| end <= self.b.len())
+            .ok_or(DecodeError::Truncated { at: self.i })?;
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self) -> std::result::Result<u8, DecodeError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16> {
+    fn u16(&mut self) -> std::result::Result<u16, DecodeError> {
         let s = self.take(2)?;
         Ok(u16::from_le_bytes([s[0], s[1]]))
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> std::result::Result<u32, DecodeError> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
-    fn arr4(&mut self) -> Result<[u8; 4]> {
+    fn u64(&mut self) -> std::result::Result<u64, DecodeError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn arr4(&mut self) -> std::result::Result<[u8; 4], DecodeError> {
         let s = self.take(4)?;
         Ok([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Parse and validate the frame header, leaving the cursor at the
+    /// first variable record. Returns `(version, nvars)`.
+    fn header(
+        &mut self,
+        bytes: &[u8],
+    ) -> std::result::Result<(u16, usize), DecodeError> {
+        let magic = self.take(4)?;
+        if magic != MAGIC {
+            return Err(DecodeError::BadMagic);
+        }
+        let version = self.u16()?;
+        if version != VERSION && version != VERSION_INTEGRITY {
+            return Err(DecodeError::UnsupportedVersion(version));
+        }
+        let nvars = self.u32()? as usize;
+        if version == VERSION_INTEGRITY {
+            let _nonce = self.u64()?;
+            let hcrc = self.u32()?;
+            if crc32c(0, &bytes[..V2_HCRC_AT]) != hcrc {
+                return Err(DecodeError::HeaderCrcMismatch);
+            }
+        }
+        // sanity bound: each variable needs >= 5 bytes of header
+        if nvars > bytes.len() / 5 + 1 {
+            return Err(DecodeError::ImplausibleVarCount(nvars));
+        }
+        Ok((version, nvars))
+    }
+
+    /// Parse one variable record (tag + metadata + payload) into a view.
+    fn parse_var(
+        &mut self,
+        vi: usize,
+    ) -> std::result::Result<VarView<'a>, DecodeError> {
+        let tag = self.u8()?;
+        let n = self.u32()? as usize;
+        match tag {
+            0 => {
+                let len = n
+                    .checked_mul(4)
+                    .ok_or(DecodeError::LengthOverflow { var: vi })?;
+                let data = self.take(len)?;
+                Ok(VarView::Raw { data, n })
+            }
+            1 => {
+                let e = self.u8()? as u32;
+                let m = self.u8()? as u32;
+                let fmt = FloatFormat::new(e, m)
+                    .map_err(|_| DecodeError::BadFormat { var: vi, e, m })?;
+                let s = f32::from_le_bytes(self.arr4()?);
+                let b = f32::from_le_bytes(self.arr4()?);
+                if !(s.is_finite() && b.is_finite()) {
+                    return Err(DecodeError::NonFinitePvt { var: vi });
+                }
+                let plen = self.u32()? as usize;
+                if plen != fmt.packed_bytes(n) {
+                    return Err(DecodeError::LengthMismatch { var: vi });
+                }
+                let payload = self.take(plen)?;
+                Ok(VarView::Packed {
+                    payload,
+                    n,
+                    fmt,
+                    pvt: Pvt { s, b },
+                })
+            }
+            t => Err(DecodeError::UnknownTag { var: vi, tag: t }),
+        }
     }
 }
 
@@ -560,13 +915,175 @@ mod tests {
             let bytes: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
             let _ = decode(&bytes); // must not panic
         }
-        // and mutated-valid payloads too
-        let wire = encode(&sample_model(&mut g));
-        for _ in 0..300 {
-            let mut bad = wire.clone();
-            let idx = g.usize_below(bad.len());
-            bad[idx] ^= 1 << g.usize_below(8);
-            let _ = decode(&bad); // must not panic (may succeed or fail)
+        // and mutated-valid payloads too, for both wire versions
+        let model = sample_model(&mut g);
+        for wire in [encode(&model), encode_v2(&model, 0xF00D)] {
+            for _ in 0..300 {
+                let mut bad = wire.clone();
+                let idx = g.usize_below(bad.len());
+                bad[idx] ^= 1 << g.usize_below(8);
+                let _ = decode(&bad); // must not panic (may succeed or fail)
+                let _ = verify_frame(&bad);
+            }
         }
+    }
+
+    fn encode_v2(model: &CompressedModel, nonce: u64) -> Vec<u8> {
+        let mut w = WireWriter::with_integrity(0, nonce);
+        for v in &model.vars {
+            w.var(v);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn v2_roundtrip_and_overhead() {
+        let mut g = Gen::new(10);
+        let model = sample_model(&mut g);
+        let v1 = encode(&model);
+        let v2 = encode_v2(&model, 0xDEAD_BEEF_CAFE_F00D);
+        // overhead is exactly 12 header bytes (nonce + hcrc) + 4 per var
+        assert_eq!(v2.len(), v1.len() + 12 + 4 * model.num_vars());
+        // decodes to bit-identical values through the version-agnostic path
+        let a = decode_decompressed(&v1).unwrap();
+        let b = decode_decompressed(&v2).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        let info = verify_frame(&v2).unwrap();
+        assert_eq!(
+            info,
+            FrameInfo {
+                version: VERSION_INTEGRITY,
+                nvars: model.num_vars(),
+                nonce: Some(0xDEAD_BEEF_CAFE_F00D),
+            }
+        );
+    }
+
+    #[test]
+    fn v1_writer_bytes_unchanged_by_integrity_feature() {
+        // the integrity-off path must stay byte-identical to the historic
+        // v1 layout: goldens and compression-ratio math depend on it
+        let mut g = Gen::new(11);
+        let model = sample_model(&mut g);
+        let wire = encode(&model);
+        assert_eq!(&wire[..4], MAGIC);
+        assert_eq!(u16::from_le_bytes([wire[4], wire[5]]), VERSION);
+        let info = verify_frame(&wire).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!(info.nonce, None);
+        assert_eq!(frame_nonce(&wire).unwrap(), None);
+    }
+
+    #[test]
+    fn every_truncation_yields_typed_error() {
+        // satellite: no panic and a typed error for EVERY single-byte
+        // truncation of a valid frame, both wire versions
+        let mut g = Gen::new(12);
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let model = CompressedModel::new(vec![
+            StoredVar::compress(&g.vec_normal(100, 0.05), fmt, true),
+            StoredVar::raw(g.vec_normal(17, 1.0)),
+        ]);
+        for wire in [encode(&model), encode_v2(&model, 7)] {
+            for cut in 0..wire.len() {
+                let err = for_each_var(&wire[..cut], |_, _| Ok(()))
+                    .expect_err(&format!("cut {cut} must fail"));
+                assert!(err.is_frame_error(), "cut {cut}: {err}");
+                assert!(verify_frame(&wire[..cut]).is_err(), "cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_of_v2_frame_detected() {
+        // satellite: the integrity layout catches every single-bit flip —
+        // header bits via magic/version/header-CRC, everything else via
+        // the per-variable CRC32C
+        let mut g = Gen::new(13);
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let model = CompressedModel::new(vec![
+            StoredVar::compress(&g.vec_normal(100, 0.05), fmt, true),
+            StoredVar::raw(g.vec_normal(17, 1.0)),
+        ]);
+        let wire = encode_v2(&model, 0xA5A5_5A5A);
+        for byte in 0..wire.len() {
+            for bit in 0..8 {
+                let mut bad = wire.clone();
+                bad[byte] ^= 1 << bit;
+                let err = verify_frame(&bad)
+                    .expect_err(&format!("flip {byte}.{bit} must be caught"));
+                assert!(err.is_frame_error(), "flip {byte}.{bit}: {err}");
+                assert!(
+                    for_each_var(&bad, |_, _| Ok(())).is_err(),
+                    "flip {byte}.{bit} slipped past for_each_var"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn header_flips_of_v1_frame_never_panic() {
+        // v1 has no checksum, so a flip may decode; it must never panic
+        // and header flips must produce typed frame errors
+        let mut g = Gen::new(14);
+        let wire = encode(&sample_model(&mut g));
+        for byte in 0..10 {
+            for bit in 0..8 {
+                let mut bad = wire.clone();
+                bad[byte] ^= 1 << bit;
+                if let Err(e) = for_each_var(&bad, |_, _| Ok(())) {
+                    assert!(e.is_frame_error(), "flip {byte}.{bit}: {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn callback_errors_are_not_frame_errors() {
+        let mut g = Gen::new(15);
+        let wire = encode(&sample_model(&mut g));
+        let err = for_each_var(&wire, |_, _| anyhow::bail!("app-level"))
+            .expect_err("callback error must surface");
+        assert!(!err.is_frame_error());
+        assert!(err.to_string().contains("app-level"));
+    }
+
+    #[test]
+    fn nonce_ledger_rejects_duplicates_and_evicts() {
+        let mut led = NonceLedger::new(2);
+        assert!(led.observe(None).is_ok()); // v1 frames always pass
+        assert!(led.observe(Some(1)).is_ok());
+        assert!(matches!(
+            led.observe(Some(1)),
+            Err(DecodeError::DuplicateNonce(1))
+        ));
+        assert!(led.observe(Some(2)).is_ok());
+        assert_eq!(led.len(), 2);
+        assert!(led.observe(Some(3)).is_ok()); // evicts nonce 1
+        assert_eq!(led.len(), 2);
+        assert!(led.observe(Some(1)).is_ok(), "evicted nonce re-admitted");
+        assert!(!led.is_empty());
+    }
+
+    #[test]
+    fn duplicate_frame_detected_via_nonce() {
+        let mut g = Gen::new(16);
+        let model = sample_model(&mut g);
+        let wire = encode_v2(&model, 42);
+        let mut led = NonceLedger::new(64);
+        let info = verify_frame(&wire).unwrap();
+        assert!(led.observe(info.nonce).is_ok());
+        // the exact same frame replayed is a duplicate
+        let again = verify_frame(&wire).unwrap();
+        assert!(matches!(
+            led.observe(again.nonce),
+            Err(DecodeError::DuplicateNonce(42))
+        ));
     }
 }

@@ -483,6 +483,50 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_ring_deep_wraparound_keeps_memory_and_lookup_bounded() {
+        // the discard-heavy async regime: far more commits than the ring
+        // retains, wrapping the backing deque many times over. The window
+        // [v-cap+1, v] must stay addressable after every push (downlinks
+        // for the newest version are assembled from `get`), everything
+        // older must be gone, and evicted snapshots must actually release
+        // their accounted bytes instead of accumulating.
+        let mut g = Gen::new(9);
+        let f = fmt("S1E4M14");
+        let n = 1024;
+        let per_snap = f.packed_bytes(n) + 8;
+        let mut ring = SnapshotRing::new(2);
+        for v in 0..50 {
+            let m = CompressedModel::new(vec![StoredVar::compress(
+                &g.vec_normal(n, 0.05),
+                f,
+                true,
+            )]);
+            ring.push(v, m);
+            // the serving window after this push
+            assert!(ring.get(v).is_some(), "newest version {v} must serve");
+            if v >= 1 {
+                assert!(ring.get(v - 1).is_some(), "version {} evicted early", v - 1);
+            }
+            if v >= 2 {
+                assert!(ring.get(v - 2).is_none(), "version {} leaked", v - 2);
+            }
+            assert_eq!(ring.len(), (v + 1).min(2));
+            assert_eq!(ring.memory_bytes(), ring.len() * per_snap);
+            let (newest, snap) = ring.newest().unwrap();
+            assert_eq!(newest, v);
+            assert_eq!(snap.vars.len(), 1);
+        }
+        // a retained entry still round-trips its payload after wraparound
+        let served = ring.get(49).unwrap();
+        assert_eq!(served.decompress_all()[0].len(), n);
+        // version keys need not be consecutive — only strictly increasing
+        ring.push(60, CompressedModel::default());
+        assert!(ring.get(49).is_some());
+        assert!(ring.get(50).is_none());
+        assert_eq!(ring.newest().unwrap().0, 60);
+    }
+
+    #[test]
     #[should_panic(expected = "strictly increasing")]
     fn snapshot_ring_rejects_stale_versions() {
         let mut ring = SnapshotRing::new(2);

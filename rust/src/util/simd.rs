@@ -301,6 +301,104 @@ static SCALAR: Kernels = Kernels {
 };
 
 // ---------------------------------------------------------------------------
+// CRC32C (Castagnoli) — wire-integrity checksum
+// ---------------------------------------------------------------------------
+
+/// `fn(seed, bytes) -> crc` — incremental CRC32C over a byte slice.
+pub type Crc32cFn = fn(u32, &[u8]) -> u32;
+
+/// Reflected Castagnoli polynomial (the `crc32` instruction's polynomial).
+const CRC32C_POLY: u32 = 0x82F6_3B78;
+
+const fn crc32c_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ CRC32C_POLY } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32C_TABLE: [u32; 256] = crc32c_table();
+
+/// Portable byte-at-a-time CRC32C — the reference semantics. Unlike the
+/// f32 kernels there is nothing to keep bit-exact by construction here:
+/// CRC32C is exact integer math, so every dispatch path returns the
+/// identical checksum and the wire bytes are ISA-independent for free.
+fn crc32c_scalar(seed: u32, bytes: &[u8]) -> u32 {
+    let mut c = !seed;
+    for &b in bytes {
+        c = CRC32C_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(target_arch = "x86_64")]
+fn crc32c_hw(seed: u32, bytes: &[u8]) -> u32 {
+    // Safety: only selected after `is_x86_feature_detected!("sse4.2")`.
+    unsafe { crc32c_sse42(seed, bytes) }
+}
+
+/// Safety: caller proved SSE4.2 (the `crc32` instruction family).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.2")]
+unsafe fn crc32c_sse42(seed: u32, bytes: &[u8]) -> u32 {
+    use std::arch::x86_64::{_mm_crc32_u64, _mm_crc32_u8};
+    let mut c = !seed as u64;
+    let (chunks, tail) = bytes.split_at(bytes.len() & !7);
+    for ch in chunks.chunks_exact(8) {
+        let w = u64::from_le_bytes([
+            ch[0], ch[1], ch[2], ch[3], ch[4], ch[5], ch[6], ch[7],
+        ]);
+        c = _mm_crc32_u64(c, w);
+    }
+    let mut c = c as u32;
+    for &b in tail {
+        c = _mm_crc32_u8(c, b);
+    }
+    !c
+}
+
+fn resolve_crc32c() -> Crc32cFn {
+    if env_forces_scalar() {
+        return crc32c_scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("sse4.2") {
+        return crc32c_hw;
+    }
+    crc32c_scalar
+}
+
+/// CRC32C (Castagnoli) of `bytes`, continuing from `seed` (pass 0 to
+/// start a fresh checksum). Dispatches once per process to the SSE4.2
+/// `crc32` instruction when available — its own feature gate, independent
+/// of the f32 kernel table (SSE4.2 is neither implied by SSE2 nor
+/// required for AVX2 dispatch). `OMC_FORCE_SCALAR=1` and a
+/// [`force_level`]`(Some(Level::Scalar))` override both pin the table
+/// path, so the CRC bench rows can compare implementations from one
+/// process. Every path computes the identical checksum.
+pub fn crc32c(seed: u32, bytes: &[u8]) -> u32 {
+    static RESOLVED: OnceLock<Crc32cFn> = OnceLock::new();
+    if OVERRIDE.load(Ordering::Relaxed) == 1 {
+        return crc32c_scalar(seed, bytes);
+    }
+    (RESOLVED.get_or_init(resolve_crc32c))(seed, bytes)
+}
+
+/// The scalar CRC32C reference, exported for bench comparison rows.
+pub fn crc32c_reference(seed: u32, bytes: &[u8]) -> u32 {
+    crc32c_scalar(seed, bytes)
+}
+
+// ---------------------------------------------------------------------------
 // virtual-lane least-squares sums
 // ---------------------------------------------------------------------------
 
@@ -1100,6 +1198,35 @@ mod tests {
         {
             assert!(!force_level(Some(Level::Avx2)));
             assert_eq!(kernels().level, resolved);
+        }
+    }
+
+    #[test]
+    fn crc32c_known_vectors() {
+        // RFC 3720 Appendix B.4 check value for "123456789"
+        assert_eq!(crc32c(0, b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(0, b""), 0);
+        // 32 zero bytes (an iSCSI test vector)
+        assert_eq!(crc32c(0, &[0u8; 32]), 0x8A91_36AA);
+        // incremental == one-shot (the writer seals variables in pieces)
+        let data: Vec<u8> = (0u16..1000).map(|i| (i % 251) as u8).collect();
+        let whole = crc32c(0, &data);
+        let (a, b) = data.split_at(333);
+        assert_eq!(crc32c(crc32c(0, a), b), whole);
+    }
+
+    #[test]
+    fn crc32c_paths_agree() {
+        let mut g = Gen::new(40);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let bytes: Vec<u8> =
+                (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+            let dispatched = crc32c(0x1234_5678, &bytes);
+            assert_eq!(dispatched, crc32c_reference(0x1234_5678, &bytes));
+            // the scalar pin must not change the checksum, only the path
+            assert!(force_level(Some(Level::Scalar)));
+            assert_eq!(crc32c(0x1234_5678, &bytes), dispatched);
+            assert!(force_level(None));
         }
     }
 

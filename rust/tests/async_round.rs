@@ -21,6 +21,7 @@ use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
 use omc_fl::coordinator::{sweep, Experiment, SweepOptions};
 use omc_fl::data::partition::Partition;
 use omc_fl::fl::async_round::{AsyncConfig, StalenessPolicy};
+use omc_fl::fl::chaos::ChaosConfig;
 use omc_fl::fl::cohort::CohortConfig;
 use omc_fl::metrics::sweep::cell_summary;
 use omc_fl::runtime::engine::Engine;
@@ -42,6 +43,7 @@ fn base_cfg(name: &str) -> ExperimentConfig {
         use_pvt: true,
         weights_only: true,
         fraction: 1.0,
+        integrity: false,
     };
     // by-speaker shards give clients different example counts, so the
     // weighted normalization is non-trivial
@@ -223,6 +225,112 @@ fn async_stress_actually_exercises_staleness_and_discards() {
         assert_eq!(c.staleness_hist.iter().sum::<usize>(), 3);
         assert!(c.mean_occupancy > 0.0);
         assert!(c.param_drift.is_finite());
+    }
+}
+
+#[test]
+fn snapshot_ring_depth_changes_memory_not_committed_bytes() {
+    // the stress run at the minimum ring depth: every commit evicts the
+    // previous snapshot, and downlink assembly + the drift pass must keep
+    // serving from the surviving window — the committed model bytes
+    // cannot depend on how much history the server retains. The tightened
+    // staleness window makes the regime discard-heavy (at the stress
+    // window of 4 this seed discards nothing), so eviction coexists with
+    // stale arrivals from already-evicted versions.
+    let mk = |ring: usize| {
+        let mut c = stress_cfg(1);
+        c.async_cfg.snapshot_ring = ring;
+        c.async_cfg.max_staleness = 1;
+        run(c)
+    };
+    let (deep_exp, deep_rec) = mk(3);
+    let (min_exp, min_rec) = mk(1);
+    assert_eq!(
+        param_bits(&deep_exp),
+        param_bits(&min_exp),
+        "ring depth leaked into the committed model"
+    );
+    // the regime really is discard-heavy (the eviction pressure is real)
+    assert!(min_rec.total_discarded_updates() > 0);
+    // eviction released the accounted bytes: retaining 1 snapshot costs
+    // well under half of retaining 3
+    assert!(min_rec.last_ring_bytes() > 0);
+    assert!(
+        (min_rec.last_ring_bytes() as f64)
+            < 0.5 * deep_rec.last_ring_bytes() as f64,
+        "ring bytes {} vs {} — eviction did not release memory",
+        min_rec.last_ring_bytes(),
+        deep_rec.last_ring_bytes()
+    );
+    // per-commit ring accounting is bounded by the depth at every commit
+    let cap1 = min_rec.commits.iter().map(|c| c.ring_bytes).max().unwrap();
+    let cap3 = deep_rec.commits.iter().map(|c| c.ring_bytes).max().unwrap();
+    assert!(cap1 < cap3);
+}
+
+fn chaos_stress_cfg(workers: usize) -> ExperimentConfig {
+    let mut c = stress_cfg(workers);
+    c.rounds = 8;
+    c.omc.integrity = true;
+    c.chaos = ChaosConfig {
+        enabled: true,
+        bitflip_prob: 0.2,
+        truncate_prob: 0.1,
+        duplicate_prob: 0.15,
+        crash_prob: 0.1,
+        commit_failure_prob: 0.5,
+        ..ChaosConfig::default()
+    };
+    c
+}
+
+#[test]
+fn async_chaos_run_conserves_accounting_and_is_deterministic() {
+    let (ref_exp, ref_rec) = run(chaos_stress_cfg(1));
+    assert_eq!(ref_rec.records.len(), 8);
+
+    // run-level conservation: every dispatched client lands in exactly one
+    // bucket; the only dispatches missing from the records are the ones
+    // still in flight when the final commit landed, bounded by concurrency
+    let sum = |f: fn(&omc_fl::metrics::recorder::RoundRecord) -> usize| {
+        ref_rec.records.iter().map(f).sum::<usize>()
+    };
+    let sampled = sum(|r| r.sampled);
+    let accounted =
+        sum(|r| r.completed) + sum(|r| r.dropped) + sum(|r| r.late) + sum(|r| r.crashed);
+    assert!(
+        sampled >= accounted,
+        "accounted fates {accounted} exceed {sampled} dispatches"
+    );
+    assert!(
+        sampled - accounted <= 6,
+        "unaccounted dispatches {} exceed the concurrency bound",
+        sampled - accounted
+    );
+    // byte accounting: discarded and rejected uplink bytes are disjoint
+    // subsets of the spent uplink bytes, per record
+    for r in &ref_rec.records {
+        assert!(r.up_bytes >= r.up_bytes_discarded + r.up_bytes_rejected);
+    }
+    // chaos at these rates must be visible in the wire-health counters,
+    // and every rejected frame carries rejected bytes
+    assert!(ref_rec.total_frames_rejected() > 0, "no frames rejected");
+    assert!(ref_rec.total_up_bytes_rejected() > 0);
+    assert!(ref_rec.total_crashed() > 0, "no chaos kills");
+    assert!(ref_rec.total_commit_failures() > 0, "no commit failures");
+
+    // fault injection is schedule-independent: same seed => same faults =>
+    // byte-identical committed model and metrics at any worker count
+    let ref_bits = param_bits(&ref_exp);
+    for workers in [4usize, 32] {
+        let (exp, rec) = run(chaos_stress_cfg(workers));
+        assert_eq!(
+            ref_bits,
+            param_bits(&exp),
+            "chaos run diverged at workers={workers}"
+        );
+        assert_eq!(rec.to_csv(), ref_rec.to_csv());
+        assert_eq!(rec.commits_csv(), ref_rec.commits_csv());
     }
 }
 

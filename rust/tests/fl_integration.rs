@@ -4,9 +4,13 @@
 
 mod common;
 
+use std::path::Path;
+
 use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
 use omc_fl::coordinator::{params_io, Experiment};
 use omc_fl::data::partition::Partition;
+use omc_fl::fl::chaos::ChaosConfig;
+use omc_fl::fl::cohort::CohortConfig;
 use omc_fl::runtime::engine::Engine;
 
 fn base_cfg(name: &str, rounds: usize) -> ExperimentConfig {
@@ -154,6 +158,123 @@ fn checkpoint_roundtrip_resumes_adaptation() {
     std::fs::remove_file(&ckpt).ok();
 }
 
+/// Like [`base_cfg`] but on the pure-Rust native backend, so the chaos and
+/// integrity tests below run in every environment (no AOT artifacts).
+fn native_cfg(name: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    cfg.rounds = rounds;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 1;
+    cfg.lr = 0.2;
+    cfg.eval_every = rounds;
+    cfg.eval_batches = 2;
+    cfg.output_dir = std::env::temp_dir().join("omc_fl_test_results");
+    cfg
+}
+
+fn param_bits(exp: &Experiment) -> Vec<Vec<u32>> {
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn integrity_framing_changes_bytes_not_values() {
+    // the checksummed v2 wire layout (nonces + per-var CRC32C) must be a
+    // pure framing change: the decoded values — and therefore the
+    // committed model — are bit-identical to the v1 fast path, and a
+    // clean run never has a frame rejected (no false positives)
+    let engine = Engine::cpu().unwrap();
+    let mk = |integrity: bool, name: &str| {
+        let mut cfg = native_cfg(name, 3);
+        cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+        cfg.omc.integrity = integrity;
+        let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+        let (rec, _) = exp.run().unwrap();
+        (exp, rec)
+    };
+    let (v1_exp, v1_rec) = mk(false, "wire_v1");
+    let (v2_exp, v2_rec) = mk(true, "wire_v2");
+    assert_eq!(
+        param_bits(&v1_exp),
+        param_bits(&v2_exp),
+        "integrity framing leaked into the model values"
+    );
+    for (a, b) in v1_rec.records.iter().zip(&v2_rec.records) {
+        // v2 spends strictly more wire (12-byte header extension + 4
+        // bytes/var CRC, both directions) for the same payload
+        assert!(b.down_bytes > a.down_bytes);
+        assert!(b.up_bytes > a.up_bytes);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+    }
+    // clean frames all verify: zero rejections on both paths
+    assert_eq!(v1_rec.total_frames_rejected(), 0);
+    assert_eq!(v2_rec.total_frames_rejected(), 0);
+    assert_eq!(v2_rec.total_up_bytes_rejected(), 0);
+}
+
+#[test]
+fn chaos_sync_rounds_conserve_cohort_and_byte_accounting() {
+    // end-to-end twin of the fl::round unit-level conservation test:
+    // with dropout, stragglers, a deadline, and the chaos engine all on,
+    // every sampled client lands in exactly one accounting bucket and the
+    // wire-health counters see the injected faults — and the whole thing
+    // replays bit-identically from the seed
+    let engine = Engine::cpu().unwrap();
+    let mk = || {
+        let mut cfg = native_cfg("chaos_sync", 6);
+        cfg.omc = OmcConfig::paper("S1E4M14".parse().unwrap());
+        cfg.omc.integrity = true;
+        cfg.cohort = CohortConfig {
+            dropout_prob: 0.1,
+            straggler_mean_s: 1.0,
+            deadline_s: 2.5,
+            weight_by_examples: true,
+        };
+        cfg.chaos = ChaosConfig {
+            enabled: true,
+            bitflip_prob: 0.25,
+            truncate_prob: 0.15,
+            duplicate_prob: 0.2,
+            // 0.25, not 0.1: at this seed the 24 sampled client-rounds
+            // draw no u_crash below 0.11, and give-ups need three corrupt
+            // attempts in a row — a lower rate leaves `crashed` at zero
+            // and the nonzero assertion below vacuous
+            crash_prob: 0.25,
+            ..ChaosConfig::default()
+        };
+        let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+        let (rec, _) = exp.run().unwrap();
+        (exp, rec)
+    };
+    let (exp, rec) = mk();
+    assert_eq!(rec.records.len(), 6);
+    for r in &rec.records {
+        // conservation: every sampled client has exactly one fate (sync
+        // rounds carry no in-flight remainder)
+        assert_eq!(
+            r.sampled,
+            r.completed + r.dropped + r.late + r.crashed,
+            "round {} leaked a client",
+            r.round
+        );
+        // discarded and rejected bytes are disjoint subsets of the spent
+        // uplink bytes
+        assert!(r.up_bytes >= r.up_bytes_discarded + r.up_bytes_rejected);
+    }
+    // the fault rates above must be visible in the health counters
+    assert!(rec.total_frames_rejected() > 0, "no corrupt frames rejected");
+    assert!(rec.total_up_bytes_rejected() > 0);
+    assert!(rec.total_crashed() > 0, "no chaos kills");
+    // faults are a pure function of the seed: exact replay, metrics and all
+    let (exp2, rec2) = mk();
+    assert_eq!(param_bits(&exp), param_bits(&exp2));
+    assert_eq!(rec.to_csv(), rec2.to_csv());
+}
+
 #[test]
 fn ppq_fraction_drives_bytes_monotonically() {
     if common::artifacts_missing("tiny") {
@@ -168,6 +289,7 @@ fn ppq_fraction_drives_bytes_monotonically() {
             use_pvt: true,
             weights_only: true,
             fraction: frac,
+            integrity: false,
         };
         let mut exp = Experiment::prepare(&engine, cfg).unwrap();
         let (rec, _) = exp.run().unwrap();

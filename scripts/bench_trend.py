@@ -73,6 +73,21 @@ def main():
     strict_suites = {s.strip() for s in args.strict_suites.split(",") if s.strip()}
 
     fresh_files = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+
+    # A suite named in --strict-suites that produced no fresh BENCH_*.json
+    # means the gated bench was skipped or crashed — that must FAIL the
+    # gate, not silently pass because the comparison loop never saw it.
+    if not args.bless:
+        fresh_suites = {suite_name(f) for f in fresh_files}
+        absent = sorted(strict_suites - fresh_suites)
+        if absent:
+            for s in absent:
+                print(f"::error::bench-trend: gated suite '{s}' has no fresh "
+                      f"BENCH_{s}.json under {args.dir} — the bench was "
+                      f"skipped or crashed, which a strict gate must not "
+                      f"silently pass")
+            return 1
+
     if not fresh_files:
         print(f"bench-trend: no BENCH_*.json under {args.dir} — "
               f"run benches with OMC_BENCH_JSON=1 first")
