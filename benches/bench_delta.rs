@@ -1,0 +1,114 @@
+//! Cross-round delta wire stage: the XOR + per-block bitpack kernels and
+//! the v3 frame write/decode path around them — the per-client uplink
+//! cost the delta stage adds on top of the plain codec. The bench-trend
+//! gate tracks these rows (`--strict-suites delta`): the kernels must
+//! stay in GB/s territory or the stage would dominate the round loop it
+//! is meant to shrink.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::omc::codec::{DeltaScratch, WireWriter};
+use omc_fl::omc::delta::{xor_decode_into, xor_encode_into, DeltaBase};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::store::{CompressedModel, StoredVar};
+use omc_fl::testkit::{decode_all_based, Gen};
+use omc_fl::util::simd;
+
+fn main() {
+    let mut suite = Suite::new("omc::delta cross-round wire stage");
+    let mut g = Gen::new(11);
+    let isa = simd::kernels().level.label();
+
+    // ---- kernel regimes over a 4 MiB packed payload --------------------
+    let n = 4 << 20;
+    let base: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+
+    // converged regime: identical payload, every block zero-width
+    let same = base.clone();
+    // sparse regime: ~0.1% of bytes moved (the paper's cross-round drift)
+    let mut sparse = base.clone();
+    for _ in 0..n / 1000 {
+        let i = g.usize_below(n);
+        sparse[i] ^= (g.u64() & 0xFF) as u8;
+    }
+    // dense regime: independent payload, the fallback-triggering worst case
+    let dense: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+
+    let mut xored = Vec::new();
+    let mut stream = Vec::new();
+    for (label, cur) in [
+        ("zero-delta", &same),
+        ("sparse 0.1%", &sparse),
+        ("dense random", &dense),
+    ] {
+        suite.bench(
+            &format!("xor+bitpack encode [{isa}] {label} (4 MiB)"),
+            Some(n),
+            || {
+                consume(xor_encode_into(cur, &base, &mut xored, &mut stream));
+            },
+        );
+    }
+
+    // decode side: unpack + XOR back against the base, sparse regime
+    let slen = xor_encode_into(&sparse, &base, &mut xored, &mut stream);
+    let mut words = Vec::new();
+    let mut payload = Vec::new();
+    suite.bench(
+        &format!("bitunpack+xor decode [{isa}] sparse ({slen} B stream)"),
+        Some(n),
+        || {
+            consume(
+                xor_decode_into(&stream, &base, &mut words, &mut payload)
+                    .unwrap(),
+            );
+        },
+    );
+
+    // ---- whole-frame path: v3 write + based decode ---------------------
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let weights = g.vec_normal(1 << 20, 0.05);
+    let base_model =
+        CompressedModel::new(vec![StoredVar::compress(&weights, fmt, true)]);
+    // drift a copy the way converging training does: a few payload bytes
+    let cur_model = {
+        let mut m = base_model.clone();
+        if let StoredVar::Packed { bytes, .. } = &mut m.vars[0] {
+            for _ in 0..64 {
+                let i = g.usize_below(bytes.len());
+                bytes[i] ^= (g.u64() & 0xFF) as u8;
+            }
+        }
+        m
+    };
+    let dbase = DeltaBase::from_model(1, &base_model);
+    let total = weights.len();
+    let mut scratch = DeltaScratch::default();
+    suite.bench(
+        &format!("WireWriter v3 var_delta ({total} params)"),
+        Some(total),
+        || {
+            let mut w = WireWriter::with_delta(0, 7, 1);
+            for (i, v) in cur_model.vars.iter().enumerate() {
+                w.var_delta(v, dbase.var(i), &mut scratch);
+            }
+            consume(w.finish());
+        },
+    );
+    let mut w = WireWriter::with_delta(0, 7, 1);
+    for (i, v) in cur_model.vars.iter().enumerate() {
+        w.var_delta(v, dbase.var(i), &mut scratch);
+    }
+    let wire = w.finish();
+    suite.bench(
+        &format!(
+            "decode_all_based v3 ({} KiB frame)",
+            wire.len() / 1024
+        ),
+        Some(total),
+        || {
+            consume(decode_all_based(&wire, Some(&dbase)).unwrap());
+        },
+    );
+
+    suite.finish("BENCH_delta.json");
+}

@@ -276,6 +276,34 @@ def test_bench_trend_bless_ignores_absent_strict_suites(tmp_path, monkeypatch):
     assert (Path(argv[3]) / "BENCH_codec.json").exists()
 
 
+def test_bench_trend_delta_suite_is_gated(tmp_path, monkeypatch, capsys):
+    # the CI invocation gates the delta wire-stage suite alongside
+    # codec/pack/round: a delta kernel regression past the strict
+    # threshold must fail, healthy numbers pass, and an absent
+    # BENCH_delta.json (skipped or crashed bench) must fail rather than
+    # silently drop the suite from the comparison
+    gate = [
+        "--strict-suites",
+        "codec,pack,round,delta",
+        "--strict-threshold",
+        "0.35",
+    ]
+    argv = trend_env(tmp_path, {"xor": 200.0}, {"xor": 100.0}, suite="delta")
+    for s in ("codec", "pack", "round"):
+        write(Path(argv[1]) / f"BENCH_{s}.json", bench_doc({"k": 100.0}))
+        write(Path(argv[3]) / f"BENCH_{s}.json", bench_doc({"k": 100.0}))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
+    assert "::error::" in capsys.readouterr().out
+    # healthy delta numbers pass the same four-suite gate
+    write(Path(argv[1]) / "BENCH_delta.json", bench_doc({"xor": 105.0}))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    capsys.readouterr()
+    # a gated delta bench that produced no fresh JSON is itself a failure
+    (Path(argv[1]) / "BENCH_delta.json").unlink()
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
+    assert "'delta'" in capsys.readouterr().out
+
+
 def test_bench_trend_suite_name_parsing():
     assert bench_trend.suite_name("BENCH_codec.json") == "codec"
     assert bench_trend.suite_name("/tmp/x/BENCH_round.json") == "round"

@@ -55,6 +55,17 @@ impl OmcConfig {
     }
 }
 
+/// Cross-round delta stage (`[delta]` table): XOR uplink payloads against
+/// the last model the client downloaded, then bitpack per 64-word block.
+/// Lossless — decoded bytes are identical to the verbatim v2 path — so it
+/// changes wire size only, never training results. Requires
+/// `omc.integrity` (delta frames ride the checksummed v3 layout).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaConfig {
+    /// master switch for the delta wire stage
+    pub enabled: bool,
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -83,6 +94,9 @@ pub struct ExperimentConfig {
     pub async_cfg: AsyncConfig,
     /// fault-injection model (`[chaos]` table); requires `omc.integrity`
     pub chaos: ChaosConfig,
+    /// lossless cross-round delta + bitpack wire stage (`[delta]` table);
+    /// requires `omc.integrity`
+    pub delta: DeltaConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -113,6 +127,7 @@ impl ExperimentConfig {
             cohort: CohortConfig::default(),
             async_cfg: AsyncConfig::default(),
             chaos: ChaosConfig::default(),
+            delta: DeltaConfig::default(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -275,6 +290,9 @@ impl ExperimentConfig {
             !chaos_knobs || chaos_enabled.is_some(),
             "[chaos] knobs need an explicit chaos.enabled = true|false"
         );
+        if let Some(v) = get_b("delta.enabled") {
+            cfg.delta.enabled = v;
+        }
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -323,6 +341,15 @@ impl ExperimentConfig {
             self.chaos.is_off() || self.omc.integrity,
             "chaos.enabled requires omc.integrity = true (corrupt frames \
              must be detectable to be rejected)"
+        );
+        // a delta frame decoded against the wrong base silently corrupts
+        // the aggregate — the v3 layout's checksums + base-version
+        // handshake are what make that impossible, so the stage only
+        // exists on the integrity wire
+        anyhow::ensure!(
+            !self.delta.enabled || self.omc.integrity,
+            "delta.enabled requires omc.integrity = true (delta frames \
+             ride the checksummed v3 wire layout)"
         );
         Ok(())
     }
@@ -543,6 +570,27 @@ mod tests {
         let quiet = "name = \"x\"\n[omc]\nintegrity = true\n";
         let c = ExperimentConfig::from_table(&toml::parse(quiet).unwrap()).unwrap();
         assert!(c.omc.integrity && c.chaos.is_off());
+    }
+
+    #[test]
+    fn parses_delta_table_and_requires_integrity() {
+        let good = "name = \"x\"\n[omc]\nintegrity = true\n[delta]\nenabled = true\n";
+        let c = ExperimentConfig::from_table(&toml::parse(good).unwrap()).unwrap();
+        assert!(c.delta.enabled);
+        // default: off
+        let plain =
+            ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap())
+                .unwrap();
+        assert!(!plain.delta.enabled);
+        // delta without the checksummed wire must be rejected, not
+        // silently downgraded to verbatim
+        let bad = "name = \"x\"\n[delta]\nenabled = true\n";
+        let err =
+            ExperimentConfig::from_table(&toml::parse(bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("omc.integrity"), "{err}");
+        // explicit enabled = false parses without integrity
+        let off = "name = \"x\"\n[delta]\nenabled = false\n";
+        assert!(ExperimentConfig::from_table(&toml::parse(off).unwrap()).is_ok());
     }
 
     #[test]

@@ -123,8 +123,11 @@ impl Experiment {
             format: omc.format,
             use_pvt: omc.use_pvt,
             fp32_baseline: omc.is_baseline(),
-            // the engines stamp the per-client nonce when integrity is on
+            // the engines stamp the per-client nonce when integrity is on,
+            // and the delta base version when the delta stage frames a
+            // particular uplink
             uplink_nonce: None,
+            delta_base: None,
         }
     }
 
@@ -221,6 +224,7 @@ impl Experiment {
             cohort: self.cfg.cohort,
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
+            delta: self.cfg.delta.enabled,
             quarantined: &[],
             seed: self.cfg.seed,
             workers: self.cfg.workers,
@@ -282,6 +286,12 @@ impl Experiment {
                 self.cfg.chaos.quarantine_rounds
             );
         }
+        if self.cfg.delta.enabled {
+            crate::log_info!(
+                "delta wire stage: uplinks XOR against the round's downlink \
+                 and bitpack per 64-word block (lossless, v3 frames)"
+            );
+        }
         if self.cfg.async_cfg.enabled {
             self.run_async_rounds(rounds, &mut rec, policy, train)?;
         } else {
@@ -332,6 +342,7 @@ impl Experiment {
                 cohort: self.cfg.cohort,
                 chaos: self.cfg.chaos,
                 integrity: self.cfg.omc.integrity,
+                delta: self.cfg.delta.enabled,
                 quarantined: &quarantined,
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
@@ -386,6 +397,7 @@ impl Experiment {
                 crashed: outcome.crashed,
                 frames_rejected: outcome.frames_rejected,
                 up_bytes_rejected: outcome.up_bytes_rejected,
+                up_bytes_delta_saved: outcome.up_bytes_delta_saved,
                 round_seconds,
             });
         }
@@ -433,6 +445,7 @@ impl Experiment {
             cohort: self.cfg.cohort,
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
+            delta: self.cfg.delta.enabled,
             acfg,
             seed: self.cfg.seed,
             workers: self.cfg.workers,
@@ -498,6 +511,7 @@ impl Experiment {
                 crashed: outcome.crashed,
                 frames_rejected: outcome.frames_rejected,
                 up_bytes_rejected: outcome.up_bytes_rejected,
+                up_bytes_delta_saved: outcome.up_bytes_delta_saved,
                 round_seconds,
             });
             rec.push_commit(outcome.commit);

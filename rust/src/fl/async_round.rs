@@ -75,6 +75,7 @@ use crate::fl::server::{Server, StreamingAggregator};
 use crate::metrics::recorder::CommitRecord;
 use crate::model::manifest::VarSpec;
 use crate::omc::codec::{self, NonceLedger, WireWriter};
+use crate::omc::delta::{AckLedger, DeltaBase};
 use crate::omc::format::FloatFormat;
 use crate::omc::selection::SelectionPolicy;
 use crate::omc::store::{CompressedModel, SnapshotRing, StoredVar};
@@ -628,6 +629,13 @@ pub struct AsyncContext<'a> {
     pub chaos: ChaosConfig,
     /// frame all transport in the checksummed v2 wire layout
     pub integrity: bool,
+    /// frame uplinks as v3 cross-round deltas against the snapshot the
+    /// client trained from (requires `integrity`). A dispatch only deltas
+    /// when its planned fold keeps the base inside the snapshot ring
+    /// (`staleness < snapshot_ring`); anything staler — or any update
+    /// planned to be discarded or killed — falls back to verbatim v2
+    /// framing, so a lagging ack can never produce an undecodable frame.
+    pub delta: bool,
     /// resolved async knobs
     pub acfg: AsyncConfig,
     /// experiment seed
@@ -664,6 +672,9 @@ pub struct CommitOutcome {
     pub frames_rejected: u64,
     /// subset of `up_bytes` from rejected frames
     pub up_bytes_rejected: usize,
+    /// uplink bytes the v3 delta stage saved vs verbatim framing, summed
+    /// over the wave's built uploads (zero when delta is off)
+    pub up_bytes_delta_saved: usize,
     /// wave clients still in flight when the phase ends (downlink spent,
     /// training skipped)
     pub in_flight: usize,
@@ -701,6 +712,11 @@ pub struct AsyncRoundEngine {
     /// duplicate-uplink detector, shared across the whole phase (nonces
     /// are keyed by `(seed, wave, cid)`, unique per dispatch)
     ledger: NonceLedger,
+    /// per-client delta ack state: the last snapshot version each client
+    /// demonstrably trained from *and had accepted* (advanced only when
+    /// an update folds into a commit — never on rejected, corrupt,
+    /// duplicate, or stale-discarded frames)
+    acks: AckLedger,
     next_commit: usize,
 }
 
@@ -739,8 +755,15 @@ impl AsyncRoundEngine {
             spare_vals: Vec::new(),
             decode_scratch: Vec::new(),
             ledger: NonceLedger::new((ctx.acfg.concurrency * 2).max(16)),
+            acks: AckLedger::new(),
             next_commit: 0,
         })
+    }
+
+    /// The delta ack ledger (read-only — regression tests assert it only
+    /// advances on accepted commits).
+    pub fn acks(&self) -> &AckLedger {
+        &self.acks
     }
 
     /// The planned timeline (read-only — for tests and reporting).
@@ -874,6 +897,24 @@ impl AsyncRoundEngine {
             }
         }
 
+        // v3 delta framing is decided per dispatch, straight off the plan
+        // (so it is identical for any worker count): an uplink deltas
+        // against its start version's snapshot only when the planned fold
+        // still finds that snapshot in the ring — at the fold of commit
+        // `c` the ring holds versions `c - (depth-1) ..= c`, so the
+        // condition is `staleness < depth`. Everything else (stale folds,
+        // discards, give-ups, in-flight) ships verbatim v2.
+        let delta_on = ctx.delta && ctx.integrity;
+        let ring_depth = ctx.acfg.snapshot_ring;
+        let delta_framed = move |d: &PlannedDispatch| {
+            delta_on
+                && matches!(
+                    d.outcome,
+                    DispatchOutcome::Folded { staleness, .. }
+                        if staleness < ring_depth
+                )
+        };
+
         let job = |t: usize, cs: &mut ClientScratch| -> Result<ClientResult> {
             let d = &plan.dispatches[tasks[t]];
             let mut rng = Xoshiro256pp::new(hash_seed(&[
@@ -885,6 +926,9 @@ impl AsyncRoundEngine {
             let mut tc = ctx.train;
             if ctx.integrity {
                 tc.uplink_nonce = Some(uplink_nonce(ctx.seed, d.wave, d.cid as u64));
+            }
+            if delta_framed(d) {
+                tc.delta_base = Some(d.start_version as u64);
             }
             client::run_client_round(
                 ctx.model,
@@ -954,12 +998,14 @@ impl AsyncRoundEngine {
         let (mut loss_sum, mut trained) = (0.0f64, 0usize);
         let (mut up_bytes, mut up_disc, mut peak) = (0usize, 0usize, 0usize);
         let (mut frames_rejected, mut up_rejected) = (0u64, 0usize);
+        let mut up_delta_saved = 0usize;
         let mut chaos_reports: Vec<ChaosClientReport> = Vec::new();
         for (t, r) in results {
             let d = &plan.dispatches[tasks[t]];
             loss_sum += r.loss;
             trained += 1;
             peak = peak.max(r.peak_param_bytes);
+            up_delta_saved += r.delta_saved;
             match d.outcome {
                 DispatchOutcome::Folded { .. } => {
                     // corrupt retries arrive (and are rejected) before the
@@ -1041,7 +1087,30 @@ impl AsyncRoundEngine {
             let wire = self.uploads[s].take().with_context(|| {
                 format!("upload for dispatch {s} missing at commit {v}")
             })?;
-            agg.accumulate_wire(&wire, w, &mut self.decode_scratch)?;
+            let d = &plan.dispatches[s];
+            if delta_framed(d) {
+                // folded updates may carry different start versions, so
+                // the delta base is resolved per update from the ring
+                let bsnap = self.ring.get(d.start_version).with_context(|| {
+                    format!(
+                        "delta base {} evicted before commit {v} \
+                         (ring depth {ring_depth})",
+                        d.start_version
+                    )
+                })?;
+                let base = DeltaBase::from_model(d.start_version as u64, bsnap);
+                agg.accumulate_wire_based(
+                    &wire,
+                    w,
+                    &mut self.decode_scratch,
+                    Some(&base),
+                )?;
+            } else {
+                agg.accumulate_wire(&wire, w, &mut self.decode_scratch)?;
+            }
+            // the fold is the accepted commit — only here does the
+            // client's delta ack state move forward
+            self.acks.advance(d.cid as u64, d.start_version as u64);
         }
         agg.apply(server)?;
 
@@ -1119,6 +1188,7 @@ impl AsyncRoundEngine {
             crashed,
             frames_rejected,
             up_bytes_rejected: up_rejected,
+            up_bytes_delta_saved: up_delta_saved,
             in_flight,
             chaos_reports,
             commit,

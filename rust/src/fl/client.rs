@@ -48,6 +48,13 @@ pub struct ClientTrainConfig {
     /// carrying this nonce (wire integrity on); `None` keeps the
     /// byte-identical v1 frames.
     pub uplink_nonce: Option<u64>,
+    /// `Some(version)` ⇒ frame the uplink as a v3 delta frame: packed
+    /// variables are XOR-coded against the downlink payload this client
+    /// just received (the committed bytes both sides hold), tagged with
+    /// the shared `version` for the server's ack handshake. Requires
+    /// `uplink_nonce` (delta frames are always checksummed); ignored
+    /// without it.
+    pub delta_base: Option<u64>,
 }
 
 /// What the client sends back.
@@ -58,6 +65,9 @@ pub struct ClientResult {
     pub loss: f64,
     /// peak parameter-store bytes observed on the client (Sec. 3.4)
     pub peak_param_bytes: usize,
+    /// uplink bytes the delta stage saved vs verbatim records (0 on
+    /// verbatim frames)
+    pub delta_saved: usize,
 }
 
 /// Reusable per-client working set: the decoded-variable buffers and PVT
@@ -72,6 +82,12 @@ pub struct ClientScratch {
     vals: Vec<Vec<f32>>,
     s: Vec<f32>,
     b: Vec<f32>,
+    /// byte span `(offset, len)` of each packed variable's payload inside
+    /// the downlink frame — the delta stage's per-variable base slices
+    /// (`None` for raw variables)
+    spans: Vec<Option<(usize, usize)>>,
+    /// bitpacker working buffers for the v3 uplink
+    delta: codec::DeltaScratch,
 }
 
 impl ClientScratch {
@@ -102,12 +118,17 @@ pub fn run_client_round(
     scratch.vals.resize_with(nvars, Vec::new);
     scratch.s.clear();
     scratch.b.clear();
+    scratch.spans.clear();
 
     // Streaming downlink decode into the scratch buffers. The baseline
     // consumes decompressed values V̄; the OMC graph consumes (Ṽ, s, b).
+    // Packed payload spans are recorded so the uplink's delta stage can
+    // XOR against the exact downlink bytes (which outlive the round).
     let mut down_param_bytes = 0usize;
+    let down_base = download.as_ptr() as usize;
     let vals = &mut scratch.vals;
     let (s, b) = (&mut scratch.s, &mut scratch.b);
+    let spans = &mut scratch.spans;
     let decoded = codec::for_each_var(download, |i, view| {
         anyhow::ensure!(i < nvars, "downlink has more vars than the model");
         down_param_bytes += view.memory_bytes();
@@ -120,6 +141,16 @@ pub fn run_client_round(
             VarView::Packed { pvt, .. } => pvt,
             VarView::Raw { .. } => Pvt::IDENTITY,
         };
+        spans.push(match view {
+            VarView::Packed { payload, .. } => {
+                // payload borrows from `download` on v1/v2 frames, so the
+                // span is plain pointer arithmetic within the same buffer
+                let off = payload.as_ptr() as usize - down_base;
+                debug_assert!(off + payload.len() <= download.len());
+                Some((off, payload.len()))
+            }
+            VarView::Raw { .. } => None,
+        });
         s.push(pvt.s);
         b.push(pvt.b);
         Ok(())
@@ -152,6 +183,7 @@ pub fn run_client_round(
             upload: w.finish(),
             loss: loss_sum / cfg.local_steps.max(1) as f64,
             peak_param_bytes,
+            delta_saved: 0,
         });
     }
 
@@ -191,14 +223,29 @@ pub fn run_client_round(
         };
     }
     let mut w = uplink_writer(cfg, cap, nvars);
+    let delta_on = cfg.delta_base.is_some() && cfg.uplink_nonce.is_some();
     for (i, t) in scratch.vals.iter().enumerate() {
         if mask[i] > 0.5 {
             let pvt = Pvt {
                 s: scratch.s[i],
                 b: scratch.b[i],
             };
-            w.packed_values(t, cfg.format, pvt)
-                .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
+            // the base is this variable's own downlink payload — valid
+            // only when the downlink packed it to the same byte length
+            let base = if delta_on {
+                scratch.spans[i].and_then(|(off, len)| {
+                    (len == cfg.format.packed_bytes(t.len()))
+                        .then(|| &download[off..off + len])
+                })
+            } else {
+                None
+            };
+            if delta_on {
+                w.packed_values_delta(t, cfg.format, pvt, base, &mut scratch.delta)
+            } else {
+                w.packed_values(t, cfg.format, pvt)
+            }
+            .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
             up_param_bytes += cfg.format.packed_bytes(t.len()) + 8;
         } else {
             w.raw(t);
@@ -206,20 +253,27 @@ pub fn run_client_round(
         }
     }
     peak_param_bytes = peak_param_bytes.max(up_param_bytes);
+    let delta_saved = w.delta_saved();
     Ok(ClientResult {
         upload: w.finish(),
         loss: loss_sum / cfg.local_steps.max(1) as f64,
         peak_param_bytes,
+        delta_saved,
     })
 }
 
 /// Start the uplink frame in the layout `cfg` asks for, sizing the
-/// reserve for the extra v2 overhead (12 header + 4 CRC bytes per var) so
-/// the zero-alloc steady state holds on both paths.
+/// reserve for the extra v2/v3 overhead (up to 20 header + 4 CRC bytes
+/// per var) so the zero-alloc steady state holds on every path.
 fn uplink_writer(cfg: ClientTrainConfig, cap: usize, nvars: usize) -> WireWriter {
-    match cfg.uplink_nonce {
-        Some(nonce) => WireWriter::with_integrity(cap + 12 + 4 * nvars, nonce),
-        None => WireWriter::with_capacity(cap),
+    match (cfg.uplink_nonce, cfg.delta_base) {
+        (Some(nonce), Some(bv)) => {
+            WireWriter::with_delta(cap + 20 + 4 * nvars, nonce, bv)
+        }
+        (Some(nonce), None) => {
+            WireWriter::with_integrity(cap + 12 + 4 * nvars, nonce)
+        }
+        (None, _) => WireWriter::with_capacity(cap),
     }
 }
 
@@ -285,6 +339,14 @@ impl DownlinkCache {
         })
         .expect("downlink compress worker panicked");
         Self { packed }
+    }
+
+    /// The cached per-variable packed payloads (`None` for FP32 /
+    /// unselected variables) — the server-side half of the delta stage's
+    /// shared base: `DeltaBase::from_packed_vars(round, cache.packed_vars())`
+    /// views exactly the bytes every selected client received.
+    pub fn packed_vars(&self) -> &[Option<StoredVar>] {
+        &self.packed
     }
 
     /// Assemble one client's payload from the cache.

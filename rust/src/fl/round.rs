@@ -59,6 +59,7 @@ use crate::fl::cohort::{self, ClientFate, ClientPlan, CohortConfig};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::{Server, StreamingAggregator};
 use crate::omc::codec::{self, NonceLedger};
+use crate::omc::delta::DeltaBase;
 use crate::omc::selection::SelectionPolicy;
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
@@ -98,6 +99,13 @@ pub struct RoundContext<'a> {
     /// frame all transport in the checksummed v2 wire layout (required
     /// when chaos is enabled — corrupt frames must be detectable)
     pub integrity: bool,
+    /// frame uplinks as v3 cross-round deltas against this round's
+    /// downlink (requires `integrity`; silently ignored without it —
+    /// config validation enforces the pairing upstream). The server-side
+    /// base is the round's own [`client::DownlinkCache`], so the sync
+    /// engine never has ack lag: every uplink deltas against the packed
+    /// payloads the server just committed to the wire.
+    pub delta: bool,
     /// clients currently serving a quarantine sentence, excluded from the
     /// sampled cohort this round (ascending; owned by the experiment's
     /// `fl::chaos::Quarantine` ladder)
@@ -221,6 +229,9 @@ pub struct RoundOutcome {
     pub frames_rejected: u64,
     /// the subset of `up_bytes` from rejected frames
     pub up_bytes_rejected: usize,
+    /// uplink bytes the v3 delta stage saved vs verbatim framing, summed
+    /// over every client that built an upload (zero when delta is off)
+    pub up_bytes_delta_saved: usize,
     /// per-client chaos facts for the quarantine ladder (empty when chaos
     /// is off): corrupt-frame counts and whether a clean frame landed
     pub chaos_reports: Vec<ChaosClientReport>,
@@ -249,6 +260,8 @@ pub struct CohortStats {
     pub frames_rejected: u64,
     /// uplink bytes from rejected frames (subset of `up_bytes`)
     pub up_bytes_rejected: usize,
+    /// bytes the delta stage saved vs verbatim framing (uploads built)
+    pub up_bytes_delta_saved: usize,
     /// max per-client parameter-store bytes
     pub peak_client_param_bytes: usize,
     /// decode-scratch capacity, bytes (summed across workers)
@@ -270,6 +283,7 @@ impl CohortStats {
         self.crashed += o.crashed;
         self.frames_rejected += o.frames_rejected;
         self.up_bytes_rejected += o.up_bytes_rejected;
+        self.up_bytes_delta_saved += o.up_bytes_delta_saved;
         self.peak_client_param_bytes =
             self.peak_client_param_bytes.max(o.peak_client_param_bytes);
         self.scratch_bytes += o.scratch_bytes;
@@ -351,11 +365,16 @@ fn reject_duplicate(
 /// progressively, so rejection must happen before the sums are touched.
 /// Chaos-planned corrupt attempts and duplicates are replayed against the
 /// verifier and accounted as rejected.
+///
+/// `dbase` is the server-held delta base for v3 uplinks (the round's
+/// downlink payloads); `None` decodes verbatim frames only — a v3 frame
+/// arriving without a base is a typed decode error, never a wrong fold.
 fn run_chunk<F>(
     base: usize,
     chunk: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
     scratch: &mut ClientScratch,
     mut job: F,
 ) -> Result<(CohortStats, StreamingAggregator)>
@@ -386,6 +405,7 @@ where
                     stats.trained += 1;
                     stats.peak_client_param_bytes =
                         stats.peak_client_param_bytes.max(r.peak_param_bytes);
+                    stats.up_bytes_delta_saved += r.delta_saved;
                     reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
                 }
                 stats.crashed += 1;
@@ -398,6 +418,7 @@ where
         stats.trained += 1;
         stats.peak_client_param_bytes =
             stats.peak_client_param_bytes.max(r.peak_param_bytes);
+        stats.up_bytes_delta_saved += r.delta_saved;
         if plan.fate == ClientFate::Late {
             stats.up_bytes += r.upload.len();
             stats.late += 1;
@@ -416,7 +437,7 @@ where
                     plan.cid
                 )
             })?;
-        agg.accumulate_wire(&r.upload, norm_w[i], &mut decode_scratch)?;
+        agg.accumulate_wire_based(&r.upload, norm_w[i], &mut decode_scratch, dbase)?;
         stats.completed += 1;
         reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
     }
@@ -434,13 +455,14 @@ pub fn run_cohort_sequential<F>(
     plans: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
     scratch: &mut ClientScratch,
     job: F,
 ) -> Result<(CohortStats, StreamingAggregator)>
 where
     F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
 {
-    run_chunk(0, plans, norm_w, var_lens, scratch, job)
+    run_chunk(0, plans, norm_w, var_lens, dbase, scratch, job)
 }
 
 /// Run a planned cohort with training pinned to the calling thread but
@@ -460,6 +482,7 @@ pub fn run_cohort_pinned<F>(
     plans: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
     workers: usize,
     scratch: &mut ClientScratch,
     mut job: F,
@@ -490,6 +513,7 @@ where
                     stats.trained += 1;
                     stats.peak_client_param_bytes =
                         stats.peak_client_param_bytes.max(r.peak_param_bytes);
+                    stats.up_bytes_delta_saved += r.delta_saved;
                     reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
                 }
                 stats.crashed += 1;
@@ -502,6 +526,7 @@ where
         stats.trained += 1;
         stats.peak_client_param_bytes =
             stats.peak_client_param_bytes.max(r.peak_param_bytes);
+        stats.up_bytes_delta_saved += r.delta_saved;
         if plan.fate == ClientFate::Late {
             stats.up_bytes += r.upload.len();
             stats.late += 1;
@@ -523,17 +548,20 @@ where
         reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
         uploads.push((i, r.upload));
     }
-    let agg = aggregate_uploads(&uploads, norm_w, var_lens, workers, &mut stats)?;
+    let agg =
+        aggregate_uploads(&uploads, norm_w, var_lens, dbase, workers, &mut stats)?;
     Ok((stats, agg))
 }
 
 /// Fold collected `(cohort index, wire frame)` uploads into one merged
 /// streaming aggregator, chunked over the thread pool; accounting lands in
-/// `stats` (`scratch_bytes`, `accum_bytes`).
+/// `stats` (`scratch_bytes`, `accum_bytes`). `dbase` resolves v3 delta
+/// payloads (shared read-only across the pooled workers).
 fn aggregate_uploads(
     uploads: &[(usize, Vec<u8>)],
     norm_w: &[f64],
     var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
     workers: usize,
     stats: &mut CohortStats,
 ) -> Result<StreamingAggregator> {
@@ -549,7 +577,7 @@ fn aggregate_uploads(
         let mut agg = StreamingAggregator::new(var_lens);
         let mut decode_scratch: Vec<f32> = Vec::new();
         for (i, wire) in c {
-            agg.accumulate_wire(wire, norm_w[*i], &mut decode_scratch)?;
+            agg.accumulate_wire_based(wire, norm_w[*i], &mut decode_scratch, dbase)?;
         }
         Ok::<_, anyhow::Error>((decode_scratch.capacity() * 4, agg))
     })?;
@@ -574,6 +602,7 @@ pub fn run_cohort_sharded<F>(
     plans: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
     workers: usize,
     scratches: &mut [ClientScratch],
     job: F,
@@ -600,7 +629,7 @@ where
         .collect();
     let job = &job;
     let results = threadpool::scope_map_send(items, shards, move |_, (base, c, s)| {
-        run_chunk(base, c, norm_w, var_lens, s, job)
+        run_chunk(base, c, norm_w, var_lens, dbase, s, job)
     })?;
     let mut stats = CohortStats::default();
     let mut agg = StreamingAggregator::new(var_lens);
@@ -731,6 +760,15 @@ pub fn run_round(
     // FedAvg weights, normalized over the clients planned to complete
     let norm_w = cohort::normalized_weights(&plans);
 
+    // v3 delta stage: clients XOR their packed uplink against the packed
+    // downlink payloads they just received; the server's base is the same
+    // per-round compression cache those payloads were assembled from, so
+    // the exchanged base version is always this round number (no ack lag
+    // in the sync engine — the async engine handles lagging acks)
+    let delta_on = ctx.delta && ctx.integrity;
+    let dbase = delta_on
+        .then(|| DeltaBase::from_packed_vars(round, cache_ref.packed_vars()));
+
     let var_lens = server.var_lens();
     let job = |i: usize, plan: &ClientPlan, cs: &mut ClientScratch| {
         let mut rng = Xoshiro256pp::new(hash_seed(&[
@@ -742,6 +780,9 @@ pub fn run_round(
         let mut tc = ctx.train;
         if ctx.integrity {
             tc.uplink_nonce = Some(uplink_nonce(ctx.seed, round, plan.cid as u64));
+        }
+        if delta_on {
+            tc.delta_base = Some(round);
         }
         client::run_client_round(
             ctx.model,
@@ -765,10 +806,26 @@ pub fn run_round(
         let shards = shard_count(ctx.workers, plans.len());
         if ctx.model.is_send_safe() && shards > 1 {
             let scratches = scratch.client_scratches(shards);
-            run_cohort_sharded(&plans, &norm_w, &var_lens, shards, scratches, job)?
+            run_cohort_sharded(
+                &plans,
+                &norm_w,
+                &var_lens,
+                dbase.as_ref(),
+                shards,
+                scratches,
+                job,
+            )?
         } else {
             let cs = &mut scratch.client_scratches(1)[0];
-            run_cohort_pinned(&plans, &norm_w, &var_lens, ctx.workers, cs, job)?
+            run_cohort_pinned(
+                &plans,
+                &norm_w,
+                &var_lens,
+                dbase.as_ref(),
+                ctx.workers,
+                cs,
+                job,
+            )?
         }
     };
     #[cfg(feature = "pjrt")]
@@ -776,7 +833,15 @@ pub fn run_round(
         // training is pinned (!Send executable) but uplink decode is pure
         // Send work — keep it on the thread pool
         let cs = &mut scratch.client_scratches(1)[0];
-        run_cohort_pinned(&plans, &norm_w, &var_lens, ctx.workers, cs, job)?
+        run_cohort_pinned(
+            &plans,
+            &norm_w,
+            &var_lens,
+            dbase.as_ref(),
+            ctx.workers,
+            cs,
+            job,
+        )?
     };
 
     // recycle the downlink frame buffers for the next round
@@ -814,6 +879,7 @@ pub fn run_round(
         crashed: stats.crashed,
         frames_rejected: stats.frames_rejected,
         up_bytes_rejected: stats.up_bytes_rejected,
+        up_bytes_delta_saved: stats.up_bytes_delta_saved,
         chaos_reports,
         participants,
     })
@@ -864,6 +930,7 @@ mod tests {
             upload: w.finish(),
             loss: 1.0 + cid as f64 * 0.25,
             peak_param_bytes: 1000 + cid,
+            delta_saved: 0,
         }
     }
 
@@ -898,6 +965,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut seq_scratch,
             recording_job(&seq_uploads),
         )
@@ -915,6 +983,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 workers,
                 &mut scratches,
                 recording_job(&par_uploads),
@@ -970,6 +1039,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut seq_scratch,
             recording_job(&seq_uploads),
         )
@@ -986,6 +1056,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 workers,
                 &mut cs,
                 recording_job(&pin_uploads),
@@ -1025,6 +1096,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut scratch,
             recording_job(&uploads),
         )
@@ -1071,6 +1143,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut scratch,
             recording_job(&uploads),
         )
@@ -1118,6 +1191,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 workers,
                 &mut scratches,
                 recording_job(&uploads),
@@ -1150,6 +1224,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut scratch,
             recording_job(&uploads),
         )
@@ -1176,6 +1251,7 @@ mod tests {
             upload: w.finish(),
             loss: 1.0 + cid as f64 * 0.25,
             peak_param_bytes: 1000 + cid,
+            delta_saved: 0,
         }
     }
 
@@ -1262,6 +1338,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut seq_scratch,
             v2_job,
         )
@@ -1305,6 +1382,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 workers,
                 &mut scratches,
                 v2_job,
@@ -1315,6 +1393,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 workers,
                 &mut cs,
                 v2_job,
@@ -1356,6 +1435,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut scratch,
             |_i, plan, _cs| Ok(mock_result(plan.cid)), // v1 frames
         )
@@ -1384,6 +1464,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             &mut scratch,
             v2_job,
         )

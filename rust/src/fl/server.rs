@@ -28,6 +28,7 @@
 use anyhow::Result;
 
 use crate::omc::codec;
+use crate::omc::delta::DeltaBase;
 
 /// The server's global model + optimizer state.
 #[derive(Clone, Debug)]
@@ -249,9 +250,24 @@ impl StreamingAggregator {
         wc: f64,
         scratch: &mut Vec<f32>,
     ) -> Result<()> {
+        self.accumulate_wire_based(wire, wc, scratch, None)
+    }
+
+    /// [`accumulate_wire`](Self::accumulate_wire) with an optional delta
+    /// base: v3 uplink frames reconstruct their tag-2 variables against
+    /// `base` (the packed downlink payload both sides hold for the
+    /// acknowledged version) before the fold. Verbatim v1/v2 frames ignore
+    /// the base entirely.
+    pub fn accumulate_wire_based(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+        base: Option<&DeltaBase<'_>>,
+    ) -> Result<()> {
         let nvars = self.sums.len();
         let sums = &mut self.sums;
-        let decoded = codec::for_each_var(wire, |vi, view| {
+        let decoded = codec::for_each_var_based(wire, base, |vi, view| {
             anyhow::ensure!(vi < nvars, "uplink has more vars than the model");
             view.decompress_into(&mut *scratch);
             anyhow::ensure!(
@@ -292,14 +308,50 @@ impl StreamingAggregator {
         scratch: &mut Vec<f32>,
         ledger: &mut codec::NonceLedger,
     ) -> Result<WireVerdict> {
+        self.accumulate_wire_checked_based(wire, wc, scratch, ledger, None)
+    }
+
+    /// [`accumulate_wire_checked`](Self::accumulate_wire_checked) with an
+    /// optional delta base. Verification is base-free (`verify_frame`
+    /// walks structure + CRCs without decoding delta streams), then the
+    /// frame's acknowledged base version is checked against the base we
+    /// actually hold *before* any fold: a v3 frame whose version we cannot
+    /// serve is [`WireVerdict::Rejected`] with the sums untouched — never
+    /// a half-applied fold. `Err` still means a harness-level shape bug.
+    pub fn accumulate_wire_checked_based(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+        ledger: &mut codec::NonceLedger,
+        base: Option<&DeltaBase<'_>>,
+    ) -> Result<WireVerdict> {
         let info = match codec::verify_frame(wire) {
             Ok(info) => info,
             Err(e) => return Ok(WireVerdict::Rejected(e)),
         };
+        if let Some(frame_bv) = info.base_version {
+            match base {
+                None => {
+                    return Ok(WireVerdict::Rejected(
+                        codec::DecodeError::MissingDeltaBase { var: 0 },
+                    ))
+                }
+                Some(b) if b.version != frame_bv => {
+                    return Ok(WireVerdict::Rejected(
+                        codec::DecodeError::BaseVersionMismatch {
+                            frame: frame_bv,
+                            have: b.version,
+                        },
+                    ))
+                }
+                Some(_) => {}
+            }
+        }
         if let Err(e) = ledger.observe(info.nonce) {
             return Ok(WireVerdict::Rejected(e));
         }
-        self.accumulate_wire(wire, wc, scratch)?;
+        self.accumulate_wire_based(wire, wc, scratch, base)?;
         Ok(WireVerdict::Accepted)
     }
 
@@ -677,5 +729,117 @@ mod tests {
             .unwrap()
             .accepted());
         assert_eq!(agg.clients(), 2);
+    }
+
+    #[test]
+    fn delta_ack_advances_only_on_accepted_folds() {
+        // regression for the ack/retry contract: a chaos-corrupted or
+        // otherwise rejected v3 frame must leave BOTH the sums and the
+        // delta ack state untouched; the bounded retries of one update
+        // share a nonce, so the clean retry still folds and only then
+        // does the ack advance. A replayed accepted frame is rejected by
+        // the nonce ledger and must not advance the ack again.
+        use crate::fl::chaos::{apply_fault, FaultKind, PlannedFault};
+        use crate::omc::delta::{AckLedger, DeltaBase};
+        use crate::testkit::{encode_frame_v3, perturbed_model, sample_wire_model};
+
+        let mut g = Gen::new(21);
+        let base_model = sample_wire_model(&mut g);
+        let cur = perturbed_model(&mut g, &base_model, 3);
+        let base = DeltaBase::from_model(7, &base_model);
+        let (wire, _saved) = encode_frame_v3(&cur, 42, &base);
+
+        // aggregator shaped like the sample model's decompressed vars
+        let lens: Vec<usize> = crate::testkit::decode_all_based(&wire, Some(&base))
+            .unwrap()
+            .iter()
+            .map(|v| v.len())
+            .collect();
+        let mut agg = StreamingAggregator::new(&lens);
+        let mut scratch = Vec::new();
+        let mut ledger = codec::NonceLedger::new(16);
+        let mut acks = AckLedger::new();
+        let cid = 3u64;
+
+        // attempt 1: chaos bit-flip → rejected, no fold, no ack movement
+        let mut attempt = wire.clone();
+        apply_fault(
+            &PlannedFault { kind: FaultKind::BitFlip, param: 0x5EED },
+            &mut attempt,
+        );
+        let v = agg
+            .accumulate_wire_checked_based(&attempt, 0.5, &mut scratch, &mut ledger, Some(&base))
+            .unwrap();
+        if v.accepted() {
+            acks.advance(cid, base.version);
+        }
+        assert!(!v.accepted(), "corrupt delta frame must be rejected");
+        assert_eq!(agg.clients(), 0);
+        assert_eq!(acks.last(cid), None, "rejected frame advanced the ack");
+
+        // attempt 2: chaos truncation → same story
+        let mut attempt = wire.clone();
+        apply_fault(
+            &PlannedFault { kind: FaultKind::Truncate, param: 0xBAD },
+            &mut attempt,
+        );
+        let v = agg
+            .accumulate_wire_checked_based(&attempt, 0.5, &mut scratch, &mut ledger, Some(&base))
+            .unwrap();
+        if v.accepted() {
+            acks.advance(cid, base.version);
+        }
+        assert!(!v.accepted());
+        assert_eq!(acks.last(cid), None);
+
+        // clean retry shares the nonce (the corrupt attempts never reached
+        // the ledger) → folds, and only now does the ack advance
+        let v = agg
+            .accumulate_wire_checked_based(&wire, 0.5, &mut scratch, &mut ledger, Some(&base))
+            .unwrap();
+        if v.accepted() {
+            acks.advance(cid, base.version);
+        }
+        assert!(v.accepted(), "clean retry with the shared nonce must fold");
+        assert_eq!(agg.clients(), 1);
+        assert_eq!(acks.last(cid), Some(7));
+
+        // duplicate replay → nonce rejection, ack unchanged
+        let v = agg
+            .accumulate_wire_checked_based(&wire, 0.5, &mut scratch, &mut ledger, Some(&base))
+            .unwrap();
+        if v.accepted() {
+            acks.advance(cid, base.version);
+        }
+        match v {
+            WireVerdict::Rejected(codec::DecodeError::DuplicateNonce(42)) => {}
+            other => panic!("expected duplicate-nonce rejection, got {other:?}"),
+        }
+        assert_eq!(agg.clients(), 1);
+        assert_eq!(acks.last(cid), Some(7));
+
+        // a frame acknowledging a base the server no longer holds is
+        // rejected before any fold — its ack must not move either
+        let newer = DeltaBase::from_model(9, &base_model);
+        let (stale, _) = encode_frame_v3(&cur, 43, &newer);
+        let v = agg
+            .accumulate_wire_checked_based(&stale, 0.5, &mut scratch, &mut ledger, Some(&base))
+            .unwrap();
+        if v.accepted() {
+            acks.advance(cid, newer.version);
+        }
+        match v {
+            WireVerdict::Rejected(codec::DecodeError::BaseVersionMismatch {
+                frame: 9,
+                have: 7,
+            }) => {}
+            other => panic!("expected base-version rejection, got {other:?}"),
+        }
+        assert_eq!(acks.last(cid), Some(7));
+        // and the ack itself is monotonic: a replayed older base version
+        // can never roll an acknowledged client backwards
+        assert!(acks.advance(cid, 9));
+        assert!(!acks.advance(cid, 7));
+        assert_eq!(acks.last(cid), Some(9));
     }
 }

@@ -21,7 +21,9 @@
 //! * [`omc`] — the compression core: `SxEyMz` formats, the bit-exact
 //!   quantizer mirror, per-variable transforms, the block bit-packing
 //!   kernels and fused pipelines, the compressed store, and the wire
-//!   codec. Fully documented (`#![warn(missing_docs)]`).
+//!   codec with its lossless cross-round delta stage ([`omc::delta`];
+//!   frame layouts and the ack state machine are specified in
+//!   `docs/WIRE.md`). Fully documented (`#![warn(missing_docs)]`).
 //! * [`fl`] — the federated substrate: [`fl::server`] (reference FedAvg +
 //!   the streaming [`fl::server::StreamingAggregator`]), [`fl::client`]
 //!   (one simulated client round, zero-alloc codec contract),

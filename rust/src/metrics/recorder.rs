@@ -48,6 +48,10 @@ pub struct RoundRecord {
     pub frames_rejected: u64,
     /// the subset of `up_bytes` spent on rejected frames
     pub up_bytes_rejected: usize,
+    /// uplink bytes the delta wire stage saved vs verbatim framing this
+    /// round (`up_bytes` already reflects the smaller delta frames; this
+    /// is the reduction, zero when `[delta]` is off)
+    pub up_bytes_delta_saved: usize,
     pub round_seconds: f64,
 }
 
@@ -245,6 +249,12 @@ impl Recorder {
         self.records.iter().map(|r| r.up_bytes_rejected).sum()
     }
 
+    /// Total uplink bytes the delta wire stage saved vs verbatim framing
+    /// (zero when `[delta]` is off).
+    pub fn total_up_bytes_delta_saved(&self) -> usize {
+        self.records.iter().map(|r| r.up_bytes_delta_saved).sum()
+    }
+
     /// Clients killed by chaos across the run (crashes + retry give-ups).
     pub fn total_crashed(&self) -> usize {
         self.records.iter().map(|r| r.crashed).sum()
@@ -292,11 +302,12 @@ impl Recorder {
         let mut out = String::from(
             "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,\
              up_bytes_discarded,sampled,completed,dropped,late,crashed,\
-             frames_rejected,up_bytes_rejected,round_seconds\n",
+             frames_rejected,up_bytes_rejected,up_bytes_delta_saved,\
+             round_seconds\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{},{},{},{:.6}\n",
+                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{},{},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -311,6 +322,7 @@ impl Recorder {
                 r.crashed,
                 r.frames_rejected,
                 r.up_bytes_rejected,
+                r.up_bytes_delta_saved,
                 r.round_seconds
             ));
         }
@@ -415,6 +427,7 @@ mod tests {
             crashed: 0,
             frames_rejected: 0,
             up_bytes_rejected: 0,
+            up_bytes_delta_saved: 0,
             round_seconds: 0.5,
         }
     }
@@ -451,7 +464,7 @@ mod tests {
         // header and rows have the same column count (incl. cohort and
         // chaos-health columns)
         let cols = csv.lines().next().unwrap().split(',').count();
-        assert_eq!(cols, 15);
+        assert_eq!(cols, 16);
         for line in csv.lines().skip(1) {
             assert_eq!(line.split(',').count(), cols, "{line}");
         }
@@ -488,6 +501,14 @@ mod tests {
         let csv = r.to_csv();
         assert!(csv.lines().next().unwrap().contains("frames_rejected"));
         assert!(csv.contains(",2,5,123,"), "{csv}");
+        // delta savings get their own column + total
+        let mut lean = rec(2, 10.0);
+        lean.up_bytes_delta_saved = 17;
+        r.push(lean);
+        assert_eq!(r.total_up_bytes_delta_saved(), 17);
+        let csv = r.to_csv();
+        assert!(csv.lines().next().unwrap().contains("up_bytes_delta_saved"));
+        assert!(csv.contains(",17,"), "{csv}");
         // commit failures surface in the async CSV + total
         r.push_commit(commit(0, vec![2]));
         r.push_commit(commit(3, vec![2]));

@@ -29,7 +29,10 @@ use crate::util::json::{self, Json};
 /// v3: `integrity`/`chaos_enabled` flags plus the wire-health counters
 /// (`crashed`, `frames_rejected`, `up_bytes_rejected`; `commit_failures`
 /// in the async object) — the CI chaos gate greps these.
-pub const SWEEP_SCHEMA_VERSION: usize = 3;
+/// v4: `delta_enabled` flag + `up_bytes_delta_saved` counter (bytes the
+/// lossless delta wire stage shaved off verbatim uplink framing) — the CI
+/// delta-determinism gate greps these.
+pub const SWEEP_SCHEMA_VERSION: usize = 4;
 
 /// Build the deterministic summary document for one finished cell.
 ///
@@ -102,6 +105,11 @@ pub fn cell_summary(
         (
             "up_bytes_rejected",
             json::num(rec.total_up_bytes_rejected() as f64),
+        ),
+        ("delta_enabled", Json::Bool(cfg.delta.enabled)),
+        (
+            "up_bytes_delta_saved",
+            json::num(rec.total_up_bytes_delta_saved() as f64),
         ),
     ];
     if cfg.async_cfg.enabled {
@@ -268,6 +276,7 @@ mod tests {
             crashed: 0,
             frames_rejected: 0,
             up_bytes_rejected: 0,
+            up_bytes_delta_saved: 0,
             round_seconds: 0.123, // must never appear in the summary
         });
         let run = RunSummary {
@@ -418,6 +427,7 @@ mod tests {
             crashed: 1,
             frames_rejected: 4,
             up_bytes_rejected: 77,
+            up_bytes_delta_saved: 0,
             round_seconds: 0.1,
         };
         rec.push(r.clone());
@@ -454,6 +464,58 @@ mod tests {
     }
 
     #[test]
+    fn delta_cells_carry_savings_counter() {
+        let mut cfg =
+            ExperimentConfig::default_with("d", Path::new("native:tiny"));
+        cfg.omc.integrity = true;
+        cfg.delta.enabled = true;
+        let mut rec = Recorder::new("d");
+        let mut r = RoundRecord {
+            round: 0,
+            train_loss: 1.0,
+            eval_loss: 0.5,
+            eval_wer: 20.0,
+            down_bytes: 100,
+            up_bytes: 60,
+            up_bytes_discarded: 0,
+            sampled: 4,
+            completed: 4,
+            dropped: 0,
+            late: 0,
+            crashed: 0,
+            frames_rejected: 0,
+            up_bytes_rejected: 0,
+            up_bytes_delta_saved: 30,
+            round_seconds: 0.1,
+        };
+        rec.push(r.clone());
+        r.round = 1;
+        r.up_bytes_delta_saved = 12;
+        rec.push(r);
+        let run = RunSummary {
+            label: "d".into(),
+            final_wer: 20.0,
+            final_loss: 1.0,
+            param_memory_bytes: 100,
+            memory_ratio: 0.5,
+            comm_bytes_per_round: 10.0,
+            rounds_per_min: 1.0,
+            rounds: 2,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"delta_enabled\":true"));
+        assert!(text.contains("\"up_bytes_delta_saved\":42"));
+        // verbatim cells keep the keys (the CI grep gate relies on them)
+        let plain = sample_cell().to_string();
+        assert!(plain.contains("\"delta_enabled\":false"));
+        assert!(plain.contains("\"up_bytes_delta_saved\":0"));
+        // round-trip stability holds with the new fields
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
     fn inf_and_nan_eval_metrics_round_trip_as_null() {
         // regression: a summary whose eval metrics went non-finite (e.g. a
         // diverged cell with +inf loss, or NaN WER after a fully-dropped
@@ -476,6 +538,7 @@ mod tests {
             crashed: 0,
             frames_rejected: 0,
             up_bytes_rejected: 0,
+            up_bytes_delta_saved: 0,
             round_seconds: 0.0,
         });
         let run = RunSummary {

@@ -10,28 +10,40 @@
 //! keeps the committed sweep goldens and the wire-ratio accounting stable:
 //! ```text
 //! magic  "OMCW"            4 bytes
-//! version u16              1 (plain) or 2 (integrity)
+//! version u16              1 (plain), 2 (integrity), 3 (integrity + delta)
 //! nvars  u32
-//! v2 only:
+//! v2/v3:
 //!   nonce u64              round/version nonce for duplicate detection
-//!   hcrc  u32              CRC32C over bytes 0..18 (magic..nonce)
+//! v3 only:
+//!   base_version u64       the committed version deltas are taken against
+//! v2/v3:
+//!   hcrc  u32              CRC32C over every header byte before it
 //! per variable:
-//!   tag   u8               0 = raw f32, 1 = packed
+//!   tag   u8               0 = raw f32, 1 = packed, 2 = delta-packed (v3)
 //!   n     u32              element count
 //!   raw:    n * f32
 //!   packed: e u8, m u8, s f32, b f32, payload_len u32, payload bytes
-//!   v2 only: crc u32       CRC32C over this variable's record bytes
+//!   delta:  e u8, m u8, s f32, b f32, raw_len u32, payload_len u32,
+//!           payload bytes  (the `omc::delta` bitpacked XOR stream; XOR
+//!           against the base version's packed payload restores the
+//!           tag-1 payload bit for bit)
+//!   v2/v3: crc u32         CRC32C over this variable's record bytes
 //! ```
 //!
-//! Decoding is version-agnostic: [`for_each_var`] accepts both layouts and
+//! Decoding is version-agnostic: [`for_each_var`] accepts every layout and
 //! verifies every checksum before a variable reaches the callback, so the
 //! client/server decode paths need no knowledge of which framing the peer
-//! used. All malformed-input conditions surface as typed [`DecodeError`]s —
-//! never a panic, never a silently mis-decoded frame (see
-//! `docs/ROBUSTNESS.md` for the full contract).
+//! used. Delta frames additionally need the base model both ends agreed
+//! on: [`for_each_var_based`] takes an optional
+//! [`DeltaBase`](crate::omc::delta::DeltaBase) and refuses — typed, never
+//! silent — to decode a tag-2 record without the matching base. All
+//! malformed-input conditions surface as typed [`DecodeError`]s — never a
+//! panic, never a silently mis-decoded frame (see `docs/ROBUSTNESS.md`
+//! and `docs/WIRE.md` for the full contract).
 
 use anyhow::Result;
 
+use super::delta::{self, DeltaBase, DeltaError};
 use super::format::FloatFormat;
 use super::pack::{self, PackError};
 use super::store::{CompressedModel, StoredVar};
@@ -42,10 +54,18 @@ const MAGIC: &[u8; 4] = b"OMCW";
 const VERSION: u16 = 1;
 /// Wire version with nonce + header/per-variable CRC32C.
 const VERSION_INTEGRITY: u16 = 2;
+/// Wire version with integrity plus the cross-round delta stage: the
+/// header carries the base version of the ack handshake and variables may
+/// use tag 2 (delta-packed).
+const VERSION_DELTA: u16 = 3;
 /// Byte length of the v2 header (magic 4, version 2, nvars 4, nonce 8,
 /// hcrc 4); the header CRC covers everything before the `hcrc` field.
 const V2_HEADER_LEN: usize = 22;
 const V2_HCRC_AT: usize = 18;
+/// Byte length of the v3 header (v2 fields + base_version u64 before the
+/// header CRC).
+const V3_HEADER_LEN: usize = 30;
+const V3_HCRC_AT: usize = 26;
 
 /// Typed decode failure for wire frames. Every way a frame can be
 /// malformed — truncation, corruption, duplication — maps to a variant
@@ -107,6 +127,40 @@ pub enum DecodeError {
     },
     /// The frame's nonce was already accepted (replayed/duplicated uplink).
     DuplicateNonce(u64),
+    /// A delta (tag 2) record arrived but the receiver holds no packed
+    /// base payload for this variable (no base provided, or the base
+    /// stores the variable raw).
+    MissingDeltaBase {
+        /// variable index
+        var: usize,
+    },
+    /// The frame's `base_version` header disagrees with the base model
+    /// the receiver holds — decoding would XOR against the wrong bytes.
+    BaseVersionMismatch {
+        /// the base version the frame was encoded against
+        frame: u64,
+        /// the base version the receiver holds
+        have: u64,
+    },
+    /// A delta block's class header exceeds 64 (no such width class).
+    BadBlockWidth {
+        /// variable index
+        var: usize,
+        /// the impossible class byte
+        width: u8,
+    },
+    /// A delta record's `raw_len` disagrees with the format/`n`, or with
+    /// the base payload's length.
+    DeltaLengthMismatch {
+        /// variable index
+        var: usize,
+    },
+    /// A delta stream is structurally malformed (short of its declared
+    /// blocks, or bytes left over after them).
+    DeltaCorrupt {
+        /// variable index
+        var: usize,
+    },
     /// The per-variable callback failed (not a wire-format problem).
     Callback(anyhow::Error),
 }
@@ -149,6 +203,21 @@ impl std::fmt::Display for DecodeError {
             DecodeError::DuplicateNonce(n) => {
                 write!(f, "duplicate frame nonce {n:#018x}")
             }
+            DecodeError::MissingDeltaBase { var } => {
+                write!(f, "no delta base payload for var {var}")
+            }
+            DecodeError::BaseVersionMismatch { frame, have } => {
+                write!(f, "frame delta base version {frame} but receiver holds {have}")
+            }
+            DecodeError::BadBlockWidth { var, width } => {
+                write!(f, "impossible delta block class {width} in var {var}")
+            }
+            DecodeError::DeltaLengthMismatch { var } => {
+                write!(f, "delta raw length inconsistent in var {var}")
+            }
+            DecodeError::DeltaCorrupt { var } => {
+                write!(f, "malformed delta stream in var {var}")
+            }
             DecodeError::Callback(e) => write!(f, "decode callback: {e}"),
         }
     }
@@ -182,6 +251,24 @@ pub struct WireWriter {
     /// `Some(nonce)` ⇒ emit the v2 integrity layout (nonce + header CRC +
     /// per-variable CRC32C); `None` ⇒ the byte-identical v1 fast path.
     integrity: Option<u64>,
+    /// `Some(base_version)` ⇒ emit the v3 delta layout (implies
+    /// integrity): the header carries the base version and variables may
+    /// be delta-packed against it.
+    base_version: Option<u64>,
+    /// Bytes the delta stage saved vs the verbatim tag-1 records it
+    /// replaced (accumulated across [`packed_delta`](Self::packed_delta)
+    /// calls).
+    delta_saved: usize,
+}
+
+/// Reused buffers for the delta encode path: the quantized payload image,
+/// the XOR scratch, and the bitpacked stream. One per encoding thread,
+/// recycled across variables and rounds.
+#[derive(Default)]
+pub struct DeltaScratch {
+    packed: Vec<u8>,
+    xored: Vec<u8>,
+    stream: Vec<u8>,
 }
 
 impl WireWriter {
@@ -194,22 +281,50 @@ impl WireWriter {
     /// `cap` extra is retained) — the round loop's per-client payload
     /// buffers live across rounds this way.
     pub fn with_buf_and_capacity(buf: Vec<u8>, cap: usize) -> Self {
-        Self::new_inner(buf, cap, None)
+        Self::new_inner(buf, cap, None, None)
     }
 
     /// Start a checksummed v2 frame carrying `nonce` in a fresh buffer.
     pub fn with_integrity(cap: usize, nonce: u64) -> Self {
-        Self::new_inner(Vec::new(), cap, Some(nonce))
+        Self::new_inner(Vec::new(), cap, Some(nonce), None)
     }
 
     /// [`with_integrity`](Self::with_integrity) into a recycled buffer.
     pub fn with_buf_and_integrity(buf: Vec<u8>, cap: usize, nonce: u64) -> Self {
-        Self::new_inner(buf, cap, Some(nonce))
+        Self::new_inner(buf, cap, Some(nonce), None)
     }
 
-    fn new_inner(mut buf: Vec<u8>, cap: usize, integrity: Option<u64>) -> Self {
+    /// Start a v3 delta frame carrying `nonce` and the ack handshake's
+    /// `base_version` in a fresh buffer. Delta frames are always
+    /// checksummed — the XOR stage amplifies a flipped payload bit into
+    /// wrong values across the whole variable, so v3 without per-record
+    /// CRCs is not a layout this writer can emit.
+    pub fn with_delta(cap: usize, nonce: u64, base_version: u64) -> Self {
+        Self::new_inner(Vec::new(), cap, Some(nonce), Some(base_version))
+    }
+
+    /// [`with_delta`](Self::with_delta) into a recycled buffer.
+    pub fn with_buf_and_delta(
+        buf: Vec<u8>,
+        cap: usize,
+        nonce: u64,
+        base_version: u64,
+    ) -> Self {
+        Self::new_inner(buf, cap, Some(nonce), Some(base_version))
+    }
+
+    fn new_inner(
+        mut buf: Vec<u8>,
+        cap: usize,
+        integrity: Option<u64>,
+        base_version: Option<u64>,
+    ) -> Self {
+        debug_assert!(
+            base_version.is_none() || integrity.is_some(),
+            "delta frames require the integrity layout"
+        );
         buf.clear();
-        buf.reserve(cap + 32);
+        buf.reserve(cap + 40);
         buf.extend_from_slice(MAGIC);
         match integrity {
             None => {
@@ -217,13 +332,21 @@ impl WireWriter {
                 buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
             }
             Some(nonce) => {
-                buf.extend_from_slice(&VERSION_INTEGRITY.to_le_bytes());
+                let version = if base_version.is_some() {
+                    VERSION_DELTA
+                } else {
+                    VERSION_INTEGRITY
+                };
+                buf.extend_from_slice(&version.to_le_bytes());
                 buf.extend_from_slice(&0u32.to_le_bytes()); // patched in finish()
                 buf.extend_from_slice(&nonce.to_le_bytes());
+                if let Some(bv) = base_version {
+                    buf.extend_from_slice(&bv.to_le_bytes());
+                }
                 buf.extend_from_slice(&0u32.to_le_bytes()); // hcrc, in finish()
             }
         }
-        Self { buf, nvars: 0, integrity }
+        Self { buf, nvars: 0, integrity, base_version, delta_saved: 0 }
     }
 
     /// Close out the variable record that started at byte `start`: append
@@ -308,15 +431,113 @@ impl WireWriter {
         }
     }
 
+    /// Emit a packed variable delta-coded against `base` — the base
+    /// version's packed payload for the same variable — falling back to a
+    /// verbatim tag-1 record whenever the delta cannot win: no base, a
+    /// base of different length (format or shape changed between
+    /// versions), or a bitpacked stream at least as large as the verbatim
+    /// payload. The fallback decision is a pure function of the two
+    /// payloads, so encoder and decoder never need to negotiate it.
+    /// Requires a writer started with [`with_delta`](Self::with_delta).
+    pub fn packed_delta(
+        &mut self,
+        payload: &[u8],
+        n: usize,
+        fmt: FloatFormat,
+        pvt: Pvt,
+        base: Option<&[u8]>,
+        scratch: &mut DeltaScratch,
+    ) {
+        debug_assert!(
+            self.base_version.is_some(),
+            "packed_delta requires a v3 (with_delta) writer"
+        );
+        if let Some(base) = base {
+            if base.len() == payload.len() && !payload.is_empty() {
+                scratch.stream.clear();
+                let slen = delta::xor_encode_into(
+                    payload,
+                    base,
+                    &mut scratch.xored,
+                    &mut scratch.stream,
+                );
+                // a tag-2 record carries one extra u32 (raw_len) over tag 1
+                if slen + 4 < payload.len() {
+                    self.delta_saved += payload.len() - (slen + 4);
+                    let start = self.buf.len();
+                    self.buf.push(2u8);
+                    self.buf.extend_from_slice(&(n as u32).to_le_bytes());
+                    self.buf.push(fmt.exp_bits as u8);
+                    self.buf.push(fmt.mant_bits as u8);
+                    self.buf.extend_from_slice(&pvt.s.to_le_bytes());
+                    self.buf.extend_from_slice(&pvt.b.to_le_bytes());
+                    self.buf
+                        .extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                    self.buf.extend_from_slice(&(slen as u32).to_le_bytes());
+                    self.buf.extend_from_slice(&scratch.stream);
+                    self.seal_var(start);
+                    return;
+                }
+            }
+        }
+        self.packed(payload, n, fmt, pvt);
+    }
+
+    /// Emit a packed variable by bit-packing `vt` and delta-coding the
+    /// payload against `base` (see [`packed_delta`](Self::packed_delta))
+    /// — the client uplink path when the delta stage is on.
+    pub fn packed_values_delta(
+        &mut self,
+        vt: &[f32],
+        fmt: FloatFormat,
+        pvt: Pvt,
+        base: Option<&[u8]>,
+        scratch: &mut DeltaScratch,
+    ) -> std::result::Result<(), PackError> {
+        scratch.packed.clear();
+        pack::pack_extend(vt, fmt, &mut scratch.packed)?;
+        let packed = std::mem::take(&mut scratch.packed);
+        self.packed_delta(&packed, vt.len(), fmt, pvt, base, scratch);
+        scratch.packed = packed;
+        Ok(())
+    }
+
+    /// Emit a stored variable, delta-coding packed payloads against
+    /// `base` (raw variables ship verbatim as always).
+    pub fn var_delta(
+        &mut self,
+        v: &StoredVar,
+        base: Option<&[u8]>,
+        scratch: &mut DeltaScratch,
+    ) {
+        match v {
+            StoredVar::Raw(data) => self.raw(data),
+            StoredVar::Packed { bytes, n, fmt, pvt } => {
+                self.packed_delta(bytes, *n, *fmt, *pvt, base, scratch)
+            }
+        }
+    }
+
+    /// Bytes the delta stage has saved so far vs verbatim tag-1 records
+    /// (0 for non-delta writers and for frames where every variable fell
+    /// back). Read before [`finish`](Self::finish).
+    pub fn delta_saved(&self) -> usize {
+        self.delta_saved
+    }
+
     /// Patch the header's variable count (and, for integrity frames, the
     /// header CRC) and hand back the finished frame.
     pub fn finish(mut self) -> Vec<u8> {
         let nv = self.nvars.to_le_bytes();
         self.buf[6..10].copy_from_slice(&nv);
         if self.integrity.is_some() {
-            let hcrc = crc32c(0, &self.buf[..V2_HCRC_AT]);
-            self.buf[V2_HCRC_AT..V2_HEADER_LEN]
-                .copy_from_slice(&hcrc.to_le_bytes());
+            let (hcrc_at, header_len) = if self.base_version.is_some() {
+                (V3_HCRC_AT, V3_HEADER_LEN)
+            } else {
+                (V2_HCRC_AT, V2_HEADER_LEN)
+            };
+            let hcrc = crc32c(0, &self.buf[..hcrc_at]);
+            self.buf[hcrc_at..header_len].copy_from_slice(&hcrc.to_le_bytes());
         }
         self.buf
     }
@@ -465,6 +686,32 @@ fn raw_f32s_into(data: &[u8], out: &mut Vec<f32>) {
 /// ```
 pub fn for_each_var<F>(
     bytes: &[u8],
+    f: F,
+) -> std::result::Result<usize, DecodeError>
+where
+    F: FnMut(usize, VarView<'_>) -> Result<()>,
+{
+    for_each_var_based(bytes, None, f)
+}
+
+/// [`for_each_var`] with an optional delta base: the committed model
+/// version a v3 frame's tag-2 records are XOR-coded against. Tag-2
+/// payloads are delta-decoded and XORed into a scratch buffer before the
+/// callback sees them, so the callback receives ordinary packed views
+/// either way. Typed refusals instead of silent mis-decodes:
+///
+/// * a tag-2 record with no base (or a raw base variable) ⇒
+///   [`DecodeError::MissingDeltaBase`];
+/// * a base whose version disagrees with the frame header ⇒
+///   [`DecodeError::BaseVersionMismatch`];
+/// * a base payload of the wrong length ⇒
+///   [`DecodeError::DeltaLengthMismatch`].
+///
+/// Passing a base to a v1/v2 frame is harmless — plain frames never
+/// reference it.
+pub fn for_each_var_based<F>(
+    bytes: &[u8],
+    base: Option<&DeltaBase<'_>>,
     mut f: F,
 ) -> std::result::Result<usize, DecodeError>
 where
@@ -472,10 +719,28 @@ where
 {
     let mut r = Reader { b: bytes, i: 0 };
     let (version, nvars) = r.header(bytes)?;
-    let checked = version == VERSION_INTEGRITY;
+    let checked = version != VERSION;
+    let delta_frame = version == VERSION_DELTA;
+    if delta_frame {
+        if let Some(b) = base {
+            let frame_bv = u64::from_le_bytes(
+                bytes[18..26].try_into().expect("header bounds checked"),
+            );
+            if frame_bv != b.version {
+                return Err(DecodeError::BaseVersionMismatch {
+                    frame: frame_bv,
+                    have: b.version,
+                });
+            }
+        }
+    }
+    // reused across variables: the unpacked XOR stream and the
+    // reconstructed payload a tag-2 view borrows from
+    let mut delta_words = Vec::new();
+    let mut delta_payload = Vec::new();
     for vi in 0..nvars {
         let start = r.i;
-        let view = r.parse_var(vi)?;
+        let parsed = r.parse_var(vi, delta_frame)?;
         if checked {
             // verify the record's checksum BEFORE the view reaches the
             // callback — corrupted bytes must never be decoded
@@ -485,7 +750,36 @@ where
                 return Err(DecodeError::CrcMismatch { var: vi });
             }
         }
-        f(vi, view).map_err(DecodeError::Callback)?;
+        match parsed {
+            ParsedVar::Plain(view) => {
+                f(vi, view).map_err(DecodeError::Callback)?;
+            }
+            ParsedVar::Delta { stream, raw_len, n, fmt, pvt } => {
+                let base_payload = base
+                    .and_then(|b| b.var(vi))
+                    .ok_or(DecodeError::MissingDeltaBase { var: vi })?;
+                if base_payload.len() != raw_len {
+                    return Err(DecodeError::DeltaLengthMismatch { var: vi });
+                }
+                delta::xor_decode_into(
+                    stream,
+                    base_payload,
+                    &mut delta_words,
+                    &mut delta_payload,
+                )
+                .map_err(|e| match e {
+                    DeltaError::BadWidth(w) => {
+                        DecodeError::BadBlockWidth { var: vi, width: w }
+                    }
+                    _ => DecodeError::DeltaCorrupt { var: vi },
+                })?;
+                f(
+                    vi,
+                    VarView::Packed { payload: &delta_payload, n, fmt, pvt },
+                )
+                .map_err(DecodeError::Callback)?;
+            }
+        }
     }
     if r.i != bytes.len() {
         return Err(DecodeError::TrailingBytes);
@@ -496,23 +790,40 @@ where
 /// Summary of a verified frame, returned by [`verify_frame`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FrameInfo {
-    /// wire version (1 plain, 2 integrity)
+    /// wire version (1 plain, 2 integrity, 3 delta)
     pub version: u16,
     /// declared (and verified) variable count
     pub nvars: usize,
-    /// the v2 nonce; `None` for v1 frames
+    /// the v2/v3 nonce; `None` for v1 frames
     pub nonce: Option<u64>,
+    /// the v3 ack base version; `None` for v1/v2 frames
+    pub base_version: Option<u64>,
 }
 
 /// Parse a frame's header and return its nonce (`None` for v1 frames).
-/// For v2 frames the header CRC is verified first, so a flipped nonce —
+/// For v2/v3 frames the header CRC is verified first, so a flipped nonce —
 /// not covered by any per-variable checksum — is still rejected.
 pub fn frame_nonce(bytes: &[u8]) -> std::result::Result<Option<u64>, DecodeError> {
     let mut r = Reader { b: bytes, i: 0 };
     let (version, _) = r.header(bytes)?;
     Ok(match version {
-        VERSION_INTEGRITY => Some(u64::from_le_bytes(
+        VERSION_INTEGRITY | VERSION_DELTA => Some(u64::from_le_bytes(
             bytes[10..18].try_into().expect("header bounds checked"),
+        )),
+        _ => None,
+    })
+}
+
+/// Parse a frame's header and return the delta base version (`None` for
+/// v1/v2 frames). CRC-verified like [`frame_nonce`].
+pub fn frame_base_version(
+    bytes: &[u8],
+) -> std::result::Result<Option<u64>, DecodeError> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let (version, _) = r.header(bytes)?;
+    Ok(match version {
+        VERSION_DELTA => Some(u64::from_le_bytes(
+            bytes[18..26].try_into().expect("header bounds checked"),
         )),
         _ => None,
     })
@@ -527,12 +838,14 @@ pub fn frame_nonce(bytes: &[u8]) -> std::result::Result<Option<u64>, DecodeError
 /// [`StreamingAggregator`]: crate::fl::server::StreamingAggregator
 pub fn verify_frame(bytes: &[u8]) -> std::result::Result<FrameInfo, DecodeError> {
     let nonce = frame_nonce(bytes)?;
+    let base_version = frame_base_version(bytes)?;
     let mut r = Reader { b: bytes, i: 0 };
     let (version, nvars) = r.header(bytes)?;
-    let checked = version == VERSION_INTEGRITY;
+    let checked = version != VERSION;
+    let delta_frame = version == VERSION_DELTA;
     for vi in 0..nvars {
         let start = r.i;
-        let _ = r.parse_var(vi)?;
+        let _ = r.parse_var(vi, delta_frame)?;
         if checked {
             let end = r.i;
             let want = r.u32()?;
@@ -544,7 +857,7 @@ pub fn verify_frame(bytes: &[u8]) -> std::result::Result<FrameInfo, DecodeError>
     if r.i != bytes.len() {
         return Err(DecodeError::TrailingBytes);
     }
-    Ok(FrameInfo { version, nvars, nonce })
+    Ok(FrameInfo { version, nvars, nonce, base_version })
 }
 
 /// Bounded ledger of accepted frame nonces — the server-side duplicate
@@ -691,14 +1004,23 @@ impl<'a> Reader<'a> {
             return Err(DecodeError::BadMagic);
         }
         let version = self.u16()?;
-        if version != VERSION && version != VERSION_INTEGRITY {
+        if version != VERSION
+            && version != VERSION_INTEGRITY
+            && version != VERSION_DELTA
+        {
             return Err(DecodeError::UnsupportedVersion(version));
         }
         let nvars = self.u32()? as usize;
-        if version == VERSION_INTEGRITY {
+        if version != VERSION {
             let _nonce = self.u64()?;
+            let hcrc_at = if version == VERSION_DELTA {
+                let _base_version = self.u64()?;
+                V3_HCRC_AT
+            } else {
+                V2_HCRC_AT
+            };
             let hcrc = self.u32()?;
-            if crc32c(0, &bytes[..V2_HCRC_AT]) != hcrc {
+            if crc32c(0, &bytes[..hcrc_at]) != hcrc {
                 return Err(DecodeError::HeaderCrcMismatch);
             }
         }
@@ -709,11 +1031,13 @@ impl<'a> Reader<'a> {
         Ok((version, nvars))
     }
 
-    /// Parse one variable record (tag + metadata + payload) into a view.
+    /// Parse one variable record (tag + metadata + payload). Tag 2 is
+    /// only legal inside a v3 frame (`allow_delta`).
     fn parse_var(
         &mut self,
         vi: usize,
-    ) -> std::result::Result<VarView<'a>, DecodeError> {
+        allow_delta: bool,
+    ) -> std::result::Result<ParsedVar<'a>, DecodeError> {
         let tag = self.u8()?;
         let n = self.u32()? as usize;
         match tag {
@@ -722,49 +1046,72 @@ impl<'a> Reader<'a> {
                     .checked_mul(4)
                     .ok_or(DecodeError::LengthOverflow { var: vi })?;
                 let data = self.take(len)?;
-                Ok(VarView::Raw { data, n })
+                Ok(ParsedVar::Plain(VarView::Raw { data, n }))
             }
             1 => {
-                let e = self.u8()? as u32;
-                let m = self.u8()? as u32;
-                let fmt = FloatFormat::new(e, m)
-                    .map_err(|_| DecodeError::BadFormat { var: vi, e, m })?;
-                let s = f32::from_le_bytes(self.arr4()?);
-                let b = f32::from_le_bytes(self.arr4()?);
-                if !(s.is_finite() && b.is_finite()) {
-                    return Err(DecodeError::NonFinitePvt { var: vi });
-                }
+                let (fmt, pvt) = self.packed_meta(vi)?;
                 let plen = self.u32()? as usize;
                 if plen != fmt.packed_bytes(n) {
                     return Err(DecodeError::LengthMismatch { var: vi });
                 }
                 let payload = self.take(plen)?;
-                Ok(VarView::Packed {
-                    payload,
-                    n,
-                    fmt,
-                    pvt: Pvt { s, b },
-                })
+                Ok(ParsedVar::Plain(VarView::Packed { payload, n, fmt, pvt }))
+            }
+            2 if allow_delta => {
+                let (fmt, pvt) = self.packed_meta(vi)?;
+                let raw_len = self.u32()? as usize;
+                if raw_len != fmt.packed_bytes(n) {
+                    return Err(DecodeError::DeltaLengthMismatch { var: vi });
+                }
+                let slen = self.u32()? as usize;
+                let stream = self.take(slen)?;
+                Ok(ParsedVar::Delta { stream, raw_len, n, fmt, pvt })
             }
             t => Err(DecodeError::UnknownTag { var: vi, tag: t }),
         }
     }
+
+    /// The shared packed-record metadata: format byte pair + PVT scalars.
+    fn packed_meta(
+        &mut self,
+        vi: usize,
+    ) -> std::result::Result<(FloatFormat, Pvt), DecodeError> {
+        let e = self.u8()? as u32;
+        let m = self.u8()? as u32;
+        let fmt = FloatFormat::new(e, m)
+            .map_err(|_| DecodeError::BadFormat { var: vi, e, m })?;
+        let s = f32::from_le_bytes(self.arr4()?);
+        let b = f32::from_le_bytes(self.arr4()?);
+        if !(s.is_finite() && b.is_finite()) {
+            return Err(DecodeError::NonFinitePvt { var: vi });
+        }
+        Ok((fmt, Pvt { s, b }))
+    }
+}
+
+/// One parsed variable record: either a ready-to-use borrowed view, or a
+/// delta record whose payload still needs the base XOR.
+enum ParsedVar<'a> {
+    Plain(VarView<'a>),
+    Delta {
+        /// the bitpacked XOR stream, borrowed from the frame
+        stream: &'a [u8],
+        /// length of the reconstructed packed payload
+        raw_len: usize,
+        n: usize,
+        fmt: FloatFormat,
+        pvt: Pvt,
+    },
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testkit::Gen;
-
-    fn sample_model(g: &mut Gen) -> CompressedModel {
-        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
-        let mut vars = Vec::new();
-        vars.push(StoredVar::compress(&g.vec_normal(1000, 0.05), fmt, true));
-        vars.push(StoredVar::raw(g.vec_normal(64, 1.0)));
-        vars.push(StoredVar::compress(&g.vec_normal(333, 0.2), fmt, false));
-        vars.push(StoredVar::raw(vec![]));
-        CompressedModel::new(vars)
-    }
+    use crate::testkit::{
+        decode_all_based, encode_frame_v2, encode_frame_v3, flip_bit,
+        perturbed_model, random_bytes, sample_wire_model as sample_model,
+        truncate_at, Gen,
+    };
 
     #[test]
     fn roundtrip_bit_exact() {
@@ -912,28 +1259,23 @@ mod tests {
         let mut g = Gen::new(5);
         for _ in 0..500 {
             let n = g.usize_below(200);
-            let bytes: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+            let bytes = random_bytes(&mut g, n);
             let _ = decode(&bytes); // must not panic
         }
-        // and mutated-valid payloads too, for both wire versions
-        let model = sample_model(&mut g);
-        for wire in [encode(&model), encode_v2(&model, 0xF00D)] {
+        // and mutated-valid payloads too, for every wire version
+        let base = sample_model(&mut g);
+        let model = perturbed_model(&mut g, &base, 4);
+        let dbase = crate::omc::delta::DeltaBase::from_model(5, &base);
+        let (v3, _) = encode_frame_v3(&model, 0xF00E, &dbase);
+        for wire in [encode(&model), encode_frame_v2(&model, 0xF00D), v3] {
             for _ in 0..300 {
                 let mut bad = wire.clone();
-                let idx = g.usize_below(bad.len());
-                bad[idx] ^= 1 << g.usize_below(8);
+                flip_bit(&mut bad, g.usize_below(bad.len() * 8));
                 let _ = decode(&bad); // must not panic (may succeed or fail)
                 let _ = verify_frame(&bad);
+                let _ = decode_all_based(&bad, Some(&dbase));
             }
         }
-    }
-
-    fn encode_v2(model: &CompressedModel, nonce: u64) -> Vec<u8> {
-        let mut w = WireWriter::with_integrity(0, nonce);
-        for v in &model.vars {
-            w.var(v);
-        }
-        w.finish()
     }
 
     #[test]
@@ -941,7 +1283,7 @@ mod tests {
         let mut g = Gen::new(10);
         let model = sample_model(&mut g);
         let v1 = encode(&model);
-        let v2 = encode_v2(&model, 0xDEAD_BEEF_CAFE_F00D);
+        let v2 = encode_frame_v2(&model, 0xDEAD_BEEF_CAFE_F00D);
         // overhead is exactly 12 header bytes (nonce + hcrc) + 4 per var
         assert_eq!(v2.len(), v1.len() + 12 + 4 * model.num_vars());
         // decodes to bit-identical values through the version-agnostic path
@@ -961,8 +1303,127 @@ mod tests {
                 version: VERSION_INTEGRITY,
                 nvars: model.num_vars(),
                 nonce: Some(0xDEAD_BEEF_CAFE_F00D),
+                base_version: None,
             }
         );
+    }
+
+    #[test]
+    fn v3_roundtrip_matches_verbatim_and_saves_bytes() {
+        let mut g = Gen::new(20);
+        let base = sample_model(&mut g);
+        // the converging regime: a handful of changed payload bytes
+        let cur = perturbed_model(&mut g, &base, 3);
+        let dbase = DeltaBase::from_model(41, &base);
+        let (v3, saved) = encode_frame_v3(&cur, 0xBEEF, &dbase);
+        let v2 = encode_frame_v2(&cur, 0xBEEF);
+        // delta-vs-verbatim equality on the same committed bytes
+        let a = decode_all_based(&v3, Some(&dbase)).unwrap();
+        let b = decode_all_based(&v2, None).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // a near-identical model must compress and the accounting must
+        // agree with the actual frame sizes (tag 2 carries raw_len: the
+        // saving is measured net of that extra u32)
+        assert!(saved > 0, "no delta savings on near-identical model");
+        assert_eq!(v2.len(), v3.len() + saved - 8, "saved accounting"); // v3 header is 8 bytes larger
+        let info = verify_frame(&v3).unwrap();
+        assert_eq!(
+            info,
+            FrameInfo {
+                version: VERSION_DELTA,
+                nvars: cur.num_vars(),
+                nonce: Some(0xBEEF),
+                base_version: Some(41),
+            }
+        );
+        assert_eq!(frame_nonce(&v3).unwrap(), Some(0xBEEF));
+        assert_eq!(frame_base_version(&v3).unwrap(), Some(41));
+        assert_eq!(frame_base_version(&v2).unwrap(), None);
+    }
+
+    #[test]
+    fn v3_identical_models_collapse_to_headers() {
+        let mut g = Gen::new(21);
+        let base = sample_model(&mut g);
+        let dbase = DeltaBase::from_model(7, &base);
+        let (v3, saved) = encode_frame_v3(&base, 1, &dbase);
+        let v2 = encode_frame_v2(&base, 1);
+        assert!(saved > 0);
+        assert!(
+            v3.len() < v2.len() / 2,
+            "all-zero deltas must collapse: v3 {} vs v2 {}",
+            v3.len(),
+            v2.len()
+        );
+        let back = decode_all_based(&v3, Some(&dbase)).unwrap();
+        let want = decode_all_based(&v2, None).unwrap();
+        assert_eq!(back.len(), want.len());
+        for (x, y) in back.iter().zip(&want) {
+            assert_eq!(
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn v3_requires_the_matching_base() {
+        let mut g = Gen::new(22);
+        let base = sample_model(&mut g);
+        let cur = perturbed_model(&mut g, &base, 2);
+        let dbase = DeltaBase::from_model(10, &base);
+        let (v3, _) = encode_frame_v3(&cur, 3, &dbase);
+        // no base at all: typed refusal on the first tag-2 record
+        assert!(matches!(
+            decode_all_based(&v3, None).unwrap_err(),
+            DecodeError::MissingDeltaBase { var: 0 }
+        ));
+        // the plain for_each_var path is the same refusal
+        assert!(matches!(
+            for_each_var(&v3, |_, _| Ok(())).unwrap_err(),
+            DecodeError::MissingDeltaBase { var: 0 }
+        ));
+        // a base of the wrong version: rejected before any decode
+        let stale = DeltaBase::from_model(9, &base);
+        assert!(matches!(
+            decode_all_based(&v3, Some(&stale)).unwrap_err(),
+            DecodeError::BaseVersionMismatch { frame: 10, have: 9 }
+        ));
+        // a base with the right version but wrong payload shape
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let other = CompressedModel::new(vec![StoredVar::compress(
+            &g.vec_normal(123, 0.05),
+            fmt,
+            true,
+        )]);
+        let wrong = DeltaBase::from_model(10, &other);
+        assert!(matches!(
+            decode_all_based(&v3, Some(&wrong)).unwrap_err(),
+            DecodeError::DeltaLengthMismatch { var: 0 }
+        ));
+        // verification needs no base at all (accept/reject is base-free)
+        assert!(verify_frame(&v3).is_ok());
+    }
+
+    #[test]
+    fn delta_tag_is_rejected_outside_v3_frames() {
+        // a hand-built v1 frame declaring tag 2 must be UnknownTag
+        let mut bad = Vec::new();
+        bad.extend_from_slice(MAGIC);
+        bad.extend_from_slice(&VERSION.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.push(2u8); // delta tag in a v1 frame
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        assert!(matches!(
+            for_each_var(&bad, |_, _| Ok(())).unwrap_err(),
+            DecodeError::UnknownTag { var: 0, tag: 2 }
+        ));
     }
 
     #[test]
@@ -983,45 +1444,55 @@ mod tests {
     #[test]
     fn every_truncation_yields_typed_error() {
         // satellite: no panic and a typed error for EVERY single-byte
-        // truncation of a valid frame, both wire versions
+        // truncation of a valid frame, all three wire versions
         let mut g = Gen::new(12);
         let fmt: FloatFormat = "S1E3M7".parse().unwrap();
-        let model = CompressedModel::new(vec![
+        let base = CompressedModel::new(vec![
             StoredVar::compress(&g.vec_normal(100, 0.05), fmt, true),
             StoredVar::raw(g.vec_normal(17, 1.0)),
         ]);
-        for wire in [encode(&model), encode_v2(&model, 7)] {
+        let model = perturbed_model(&mut g, &base, 2);
+        let dbase = DeltaBase::from_model(4, &base);
+        let (v3, _) = encode_frame_v3(&model, 8, &dbase);
+        for wire in [encode(&model), encode_frame_v2(&model, 7), v3] {
             for cut in 0..wire.len() {
-                let err = for_each_var(&wire[..cut], |_, _| Ok(()))
-                    .expect_err(&format!("cut {cut} must fail"));
+                let prefix = truncate_at(&wire, cut);
+                let err = for_each_var_based(prefix, Some(&dbase), |_, _| {
+                    Ok(())
+                })
+                .expect_err(&format!("cut {cut} must fail"));
                 assert!(err.is_frame_error(), "cut {cut}: {err}");
-                assert!(verify_frame(&wire[..cut]).is_err(), "cut {cut}");
+                assert!(verify_frame(prefix).is_err(), "cut {cut}");
             }
         }
     }
 
     #[test]
-    fn every_bit_flip_of_v2_frame_detected() {
-        // satellite: the integrity layout catches every single-bit flip —
-        // header bits via magic/version/header-CRC, everything else via
-        // the per-variable CRC32C
+    fn every_bit_flip_of_checksummed_frame_detected() {
+        // satellite: the integrity layouts catch every single-bit flip —
+        // header bits via magic/version/header-CRC, everything else
+        // (including delta class headers and bitpacked streams) via the
+        // per-variable CRC32C
         let mut g = Gen::new(13);
         let fmt: FloatFormat = "S1E3M7".parse().unwrap();
-        let model = CompressedModel::new(vec![
+        let base = CompressedModel::new(vec![
             StoredVar::compress(&g.vec_normal(100, 0.05), fmt, true),
             StoredVar::raw(g.vec_normal(17, 1.0)),
         ]);
-        let wire = encode_v2(&model, 0xA5A5_5A5A);
-        for byte in 0..wire.len() {
-            for bit in 0..8 {
+        let model = perturbed_model(&mut g, &base, 2);
+        let dbase = DeltaBase::from_model(4, &base);
+        let (v3, _) = encode_frame_v3(&model, 9, &dbase);
+        for wire in [encode_frame_v2(&model, 0xA5A5_5A5A), v3] {
+            for bit in 0..wire.len() * 8 {
                 let mut bad = wire.clone();
-                bad[byte] ^= 1 << bit;
+                flip_bit(&mut bad, bit);
                 let err = verify_frame(&bad)
-                    .expect_err(&format!("flip {byte}.{bit} must be caught"));
-                assert!(err.is_frame_error(), "flip {byte}.{bit}: {err}");
+                    .expect_err(&format!("flip bit {bit} must be caught"));
+                assert!(err.is_frame_error(), "flip bit {bit}: {err}");
                 assert!(
-                    for_each_var(&bad, |_, _| Ok(())).is_err(),
-                    "flip {byte}.{bit} slipped past for_each_var"
+                    for_each_var_based(&bad, Some(&dbase), |_, _| Ok(()))
+                        .is_err(),
+                    "flip bit {bit} slipped past for_each_var_based"
                 );
             }
         }

@@ -1,0 +1,561 @@
+//! Lossless cross-round delta stage for the wire codec (ROADMAP item 1).
+//!
+//! Quantized block payloads are shipped verbatim every round even though
+//! both ends hold history: the client just decoded this round's downlink,
+//! and the server keeps recent committed versions in the
+//! [`SnapshotRing`](crate::omc::store::SnapshotRing). As training
+//! converges, the XOR of a round's packed payload against the base version
+//! both sides share collapses toward zeros — which a variable-width
+//! bitpacker turns into a fraction of the verbatim bytes, losslessly.
+//!
+//! The stage is two passes over the packed payload bytes:
+//!
+//! 1. **XOR-delta** (`util::simd::xor_bytes`): `d = cur ⊕ base`, byte for
+//!    byte. Both payloads were produced by the same deterministic
+//!    compressor, so unchanged values XOR to zero runs.
+//! 2. **Per-block bitpacking** ([`encode_into`]): the XORed bytes are
+//!    read as little-endian u64 words and grouped into blocks of
+//!    [`WORDS_PER_BLOCK`] = 64 words (512 bytes). Each block emits one
+//!    **class header byte** `w ∈ 0..=64` — the maximum significant width
+//!    (64 minus the leading zeros of the OR-fold of the block's words):
+//!
+//!    | class | meaning | block body |
+//!    |-------|---------------------------|------------------------|
+//!    | 0 | all-zeros | none (header only) |
+//!    | 1..=63| leading-zero class | `ceil(t·w / 8)` bytes |
+//!    | 64 | no compression (memcpy) | `8·t` bytes |
+//!
+//!    where `t` is the block's word count (64, or the tail remainder).
+//!    Words are packed LSB-first at `w` bits each; every block is
+//!    byte-aligned (the bit accumulator flushes at block end).
+//!
+//! The framing that carries these streams (frame v3, tag-2 records, the
+//! `base_version` ack handshake, verbatim fallback) lives in
+//! [`codec`](crate::omc::codec); `docs/WIRE.md` documents the full wire
+//! contract and the ack/fallback state machine. Decoding is strict: an
+//! impossible class header, a short stream, or leftover bytes surface as a
+//! typed [`DeltaError`] — never a panic, never a silent wrong decode.
+
+use crate::omc::store::{CompressedModel, StoredVar};
+use crate::util::simd;
+
+/// Words per bitpacked block: 64 little-endian u64 words = 512 bytes of
+/// payload per full block, one class-header byte each.
+pub const WORDS_PER_BLOCK: usize = 64;
+
+/// Typed failure while decoding a bitpacked delta stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaError {
+    /// A block class header byte exceeds 64 (no such width class).
+    BadWidth(u8),
+    /// The stream ended before the declared blocks could be read.
+    Truncated,
+    /// Bytes remain after the last block of the declared payload length.
+    TrailingBytes,
+}
+
+impl std::fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeltaError::BadWidth(w) => write!(f, "impossible block class {w}"),
+            DeltaError::Truncated => write!(f, "truncated delta stream"),
+            DeltaError::TrailingBytes => {
+                write!(f, "trailing bytes after delta stream")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+/// Number of u64 words covering `len` payload bytes (tail zero-padded).
+#[inline]
+fn word_count(len: usize) -> usize {
+    len.div_ceil(8)
+}
+
+/// Read word `k` of a byte slice as a little-endian u64, zero-padding the
+/// final partial word.
+#[inline]
+fn word_at(bytes: &[u8], k: usize) -> u64 {
+    let start = k * 8;
+    if start + 8 <= bytes.len() {
+        u64::from_le_bytes(bytes[start..start + 8].try_into().unwrap())
+    } else {
+        let mut b = [0u8; 8];
+        let tail = &bytes[start..];
+        b[..tail.len()].copy_from_slice(tail);
+        u64::from_le_bytes(b)
+    }
+}
+
+/// Bitpack an XORed payload into `out` (appended, not cleared). Returns
+/// the number of bytes appended. The stream is self-delimiting given the
+/// original payload length (`xored.len()`), which the wire record carries
+/// as `raw_len`.
+pub fn encode_into(xored: &[u8], out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    let words = word_count(xored.len());
+    let mut k = 0usize;
+    while k < words {
+        let t = (words - k).min(WORDS_PER_BLOCK);
+        let block_bytes = &xored[k * 8..xored.len().min((k + t) * 8)];
+        // class = significant width of the OR-fold (exact integer math:
+        // identical on every simd dispatch path)
+        let folded = simd::or_fold_words(block_bytes);
+        let w = 64 - folded.leading_zeros() as usize;
+        out.push(w as u8);
+        if w == 64 {
+            // memcpy class: 8·t bytes, zero-padding the final word
+            for j in 0..t {
+                out.extend_from_slice(&word_at(block_bytes, j).to_le_bytes());
+            }
+        } else if w > 0 {
+            // LSB-first bit accumulator, flushed at block end. A u128
+            // holds the worst case (7 residual bits + a 63-bit word)
+            // without the shift overflow a u64 accumulator would hit.
+            let mut acc: u128 = 0;
+            let mut bits = 0usize;
+            for j in 0..t {
+                let word = word_at(block_bytes, j);
+                debug_assert!(w == 64 || word < (1 << w));
+                acc |= (word as u128) << bits;
+                bits += w;
+                while bits >= 8 {
+                    out.push((acc & 0xFF) as u8);
+                    acc >>= 8;
+                    bits -= 8;
+                }
+            }
+            if bits > 0 {
+                out.push((acc & 0xFF) as u8);
+            }
+        }
+        k += t;
+    }
+    out.len() - start
+}
+
+/// Decode a bitpacked stream back to the XORed payload (`raw_len` bytes,
+/// cleared into `out`). Strict: every malformed stream is a typed error.
+pub fn decode_into(
+    stream: &[u8],
+    raw_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), DeltaError> {
+    out.clear();
+    out.reserve(raw_len);
+    let words = word_count(raw_len);
+    let mut i = 0usize; // stream cursor
+    let mut k = 0usize; // word cursor
+    while k < words {
+        let t = (words - k).min(WORDS_PER_BLOCK);
+        let w = *stream.get(i).ok_or(DeltaError::Truncated)? as usize;
+        i += 1;
+        if w > 64 {
+            return Err(DeltaError::BadWidth(w as u8));
+        }
+        if w == 0 {
+            push_words(out, &mut k, t, raw_len, || 0);
+        } else if w == 64 {
+            let need = 8 * t;
+            let body =
+                stream.get(i..i + need).ok_or(DeltaError::Truncated)?;
+            i += need;
+            let mut j = 0usize;
+            push_words(out, &mut k, t, raw_len, || {
+                let v = word_at(body, j);
+                j += 1;
+                v
+            });
+        } else {
+            let need = (t * w).div_ceil(8);
+            let body =
+                stream.get(i..i + need).ok_or(DeltaError::Truncated)?;
+            i += need;
+            let mask = (1u64 << w) - 1;
+            let mut acc: u128 = 0;
+            let mut bits = 0usize;
+            let mut bi = 0usize;
+            let mut words_out = [0u64; WORDS_PER_BLOCK];
+            for word in words_out.iter_mut().take(t) {
+                while bits < w {
+                    acc |= (body[bi] as u128) << bits;
+                    bi += 1;
+                    bits += 8;
+                }
+                *word = (acc as u64) & mask;
+                acc >>= w;
+                bits -= w;
+            }
+            let mut j = 0usize;
+            push_words(out, &mut k, t, raw_len, || {
+                let v = words_out[j];
+                j += 1;
+                v
+            });
+        }
+    }
+    if i != stream.len() {
+        return Err(DeltaError::TrailingBytes);
+    }
+    debug_assert_eq!(out.len(), raw_len);
+    Ok(())
+}
+
+/// Append `t` words from `next` to `out` as little-endian bytes,
+/// truncating the final word at `raw_len`.
+#[inline]
+fn push_words(
+    out: &mut Vec<u8>,
+    k: &mut usize,
+    t: usize,
+    raw_len: usize,
+    mut next: impl FnMut() -> u64,
+) {
+    for _ in 0..t {
+        let bytes = next().to_le_bytes();
+        let take = (raw_len - out.len()).min(8);
+        out.extend_from_slice(&bytes[..take]);
+        *k += 1;
+    }
+}
+
+/// Per-variable packed-payload view of a base model version — what the
+/// decoder XORs tag-2 records against. `None` entries are variables the
+/// base holds raw (or not at all): a delta record targeting one is a
+/// [`MissingDeltaBase`](crate::omc::codec::DecodeError::MissingDeltaBase)
+/// frame error, never a silent mis-decode.
+pub struct DeltaBase<'a> {
+    /// the version number the frame's `base_version` header must match
+    pub version: u64,
+    vars: Vec<Option<&'a [u8]>>,
+}
+
+impl<'a> DeltaBase<'a> {
+    /// Base payloads from a committed [`CompressedModel`] (the
+    /// `SnapshotRing` entry the receiver retained for `version`).
+    pub fn from_model(version: u64, model: &'a CompressedModel) -> Self {
+        Self {
+            version,
+            vars: model
+                .vars
+                .iter()
+                .map(|v| match v {
+                    StoredVar::Packed { bytes, .. } => Some(bytes.as_slice()),
+                    StoredVar::Raw(_) => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Base payloads from a per-variable compression cache (the sync
+    /// engine's `DownlinkCache` shape: `None` where the format or mask
+    /// left the variable raw).
+    pub fn from_packed_vars(version: u64, vars: &'a [Option<StoredVar>]) -> Self {
+        Self {
+            version,
+            vars: vars
+                .iter()
+                .map(|v| match v {
+                    Some(StoredVar::Packed { bytes, .. }) => {
+                        Some(bytes.as_slice())
+                    }
+                    _ => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// The base payload for variable `i`, when the base holds it packed.
+    pub fn var(&self, i: usize) -> Option<&'a [u8]> {
+        self.vars.get(i).copied().flatten()
+    }
+
+    /// Number of variables the base covers.
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+}
+
+/// Per-client last-*accepted* base version — the receiver half of the
+/// ack-version handshake (`docs/WIRE.md`).
+///
+/// The invariant the regression tests pin (and a real deployment would
+/// depend on): the ledger advances **only when a frame's update was
+/// verified and committed**. Rejected frames — chaos-corrupted, replayed,
+/// truncated — and retries of the same logical upload (which share a
+/// nonce) must leave it untouched, because a desynced ack would make the
+/// peer delta against a base the other side never agreed on.
+#[derive(Clone, Debug, Default)]
+pub struct AckLedger {
+    acked: std::collections::BTreeMap<u64, u64>,
+}
+
+impl AckLedger {
+    /// Empty ledger (no client has an acknowledged base yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that client `cid`'s upload against `base_version` was
+    /// accepted and committed. Monotonic: a stale ack (older than the
+    /// recorded one) is ignored. Returns whether the entry advanced.
+    pub fn advance(&mut self, cid: u64, base_version: u64) -> bool {
+        match self.acked.entry(cid) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(base_version);
+                true
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                if base_version > *e.get() {
+                    e.insert(base_version);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The last accepted base version for `cid`, if any upload from it
+    /// was ever committed.
+    pub fn last(&self, cid: u64) -> Option<u64> {
+        self.acked.get(&cid).copied()
+    }
+
+    /// Number of clients with an acknowledged base.
+    pub fn len(&self) -> usize {
+        self.acked.len()
+    }
+
+    /// Whether no client has an acknowledged base.
+    pub fn is_empty(&self) -> bool {
+        self.acked.is_empty()
+    }
+}
+
+/// XOR `cur` against `base` into `out` (cleared first) and bitpack the
+/// result into `stream` (appended). Returns the appended stream length.
+/// Both slices must be the same length — the caller falls back to a
+/// verbatim record otherwise.
+pub fn xor_encode_into(
+    cur: &[u8],
+    base: &[u8],
+    xor_scratch: &mut Vec<u8>,
+    stream: &mut Vec<u8>,
+) -> usize {
+    debug_assert_eq!(cur.len(), base.len());
+    xor_scratch.clear();
+    xor_scratch.resize(cur.len(), 0);
+    simd::xor_bytes(cur, base, xor_scratch);
+    encode_into(xor_scratch, stream)
+}
+
+/// Decode a bitpacked stream and XOR it against `base` into `out`
+/// (cleared first) — the receiver half of [`xor_encode_into`].
+pub fn xor_decode_into(
+    stream: &[u8],
+    base: &[u8],
+    delta_scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) -> Result<(), DeltaError> {
+    decode_into(stream, base.len(), delta_scratch)?;
+    out.clear();
+    out.resize(base.len(), 0);
+    simd::xor_bytes(delta_scratch, base, out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Gen};
+
+    fn roundtrip(bytes: &[u8]) -> Vec<u8> {
+        let mut stream = Vec::new();
+        let n = encode_into(bytes, &mut stream);
+        assert_eq!(n, stream.len());
+        let mut back = Vec::new();
+        decode_into(&stream, bytes.len(), &mut back).unwrap();
+        back
+    }
+
+    #[test]
+    fn empty_payload_roundtrips_to_empty_stream() {
+        let mut stream = Vec::new();
+        assert_eq!(encode_into(&[], &mut stream), 0);
+        let mut back = vec![1u8; 3];
+        decode_into(&[], 0, &mut back).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn all_zero_payload_is_one_byte_per_block() {
+        for len in [1usize, 8, 511, 512, 513, 4096] {
+            let zeros = vec![0u8; len];
+            let mut stream = Vec::new();
+            encode_into(&zeros, &mut stream);
+            let blocks = word_count(len).div_ceil(WORDS_PER_BLOCK);
+            assert_eq!(stream.len(), blocks, "len {len}");
+            assert!(stream.iter().all(|&b| b == 0));
+            assert_eq!(roundtrip(&zeros), zeros);
+        }
+    }
+
+    #[test]
+    fn high_entropy_payload_falls_into_memcpy_class() {
+        let mut g = Gen::new(1);
+        let bytes: Vec<u8> =
+            (0..4096).map(|_| (g.u64() >> 56) as u8 | 0x80).collect();
+        // every word has its top byte's MSB set -> class 64 everywhere
+        let mut stream = Vec::new();
+        encode_into(&bytes, &mut stream);
+        let blocks = word_count(bytes.len()).div_ceil(WORDS_PER_BLOCK);
+        assert_eq!(stream.len(), bytes.len() + blocks);
+        assert_eq!(roundtrip(&bytes), bytes);
+    }
+
+    #[test]
+    fn roundtrip_property_over_adversarial_streams() {
+        check("delta roundtrip", 200, |g| {
+            // lengths hit tails mod 8, mod 512, and whole blocks
+            let len = match g.usize_below(4) {
+                0 => g.usize_below(17),
+                1 => 512 * (1 + g.usize_below(3)) + g.usize_below(9),
+                2 => 511 + g.usize_below(3),
+                _ => g.usize_below(3000),
+            };
+            let sparsity = g.usize_below(4);
+            let bytes: Vec<u8> = (0..len)
+                .map(|_| {
+                    if g.usize_below(4) <= sparsity {
+                        0u8
+                    } else {
+                        (g.u64() & 0xFF) as u8
+                    }
+                })
+                .collect();
+            let back = roundtrip(&bytes);
+            if back != bytes {
+                return Err(format!("len {len} mismatched"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn width_classes_match_block_contents() {
+        // one block whose max word needs exactly w bits, for every w
+        for w in 1usize..=64 {
+            let mut bytes = vec![0u8; 512];
+            let word: u64 = if w == 64 { u64::MAX } else { (1 << w) - 1 };
+            bytes[0..8].copy_from_slice(&word.to_le_bytes());
+            let mut stream = Vec::new();
+            encode_into(&bytes, &mut stream);
+            assert_eq!(stream[0] as usize, w, "class for width {w}");
+            let body = if w == 64 { 512 } else { (64 * w).div_ceil(8) };
+            assert_eq!(stream.len(), 1 + body, "width {w}");
+            assert_eq!(roundtrip(&bytes), bytes);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_streams() {
+        let bytes: Vec<u8> = (0..600u32).map(|i| (i % 7) as u8).collect();
+        let mut stream = Vec::new();
+        encode_into(&bytes, &mut stream);
+        let mut out = Vec::new();
+        // impossible class header
+        let mut bad = stream.clone();
+        bad[0] = 65;
+        assert_eq!(
+            decode_into(&bad, bytes.len(), &mut out),
+            Err(DeltaError::BadWidth(65))
+        );
+        // every truncation is typed, never a panic
+        for cut in 0..stream.len() {
+            let r = decode_into(&stream[..cut], bytes.len(), &mut out);
+            assert!(r.is_err(), "cut {cut} accepted");
+        }
+        // trailing bytes are rejected
+        let mut bad = stream.clone();
+        bad.push(0);
+        assert_eq!(
+            decode_into(&bad, bytes.len(), &mut out),
+            Err(DeltaError::TrailingBytes)
+        );
+        // empty stream for a nonzero payload
+        assert_eq!(
+            decode_into(&[], bytes.len(), &mut out),
+            Err(DeltaError::Truncated)
+        );
+    }
+
+    #[test]
+    fn xor_encode_decode_recovers_current_payload() {
+        check("xor stage roundtrip", 100, |g| {
+            let len = 1 + g.usize_below(2000);
+            let base: Vec<u8> =
+                (0..len).map(|_| (g.u64() & 0xFF) as u8).collect();
+            // a few byte flips on top of the base (the converging regime)
+            let mut cur = base.clone();
+            for _ in 0..g.usize_below(8) {
+                let i = g.usize_below(len);
+                cur[i] ^= (g.u64() & 0xFF) as u8;
+            }
+            let (mut xs, mut stream) = (Vec::new(), Vec::new());
+            let slen = xor_encode_into(&cur, &base, &mut xs, &mut stream);
+            let (mut ds, mut back) = (Vec::new(), Vec::new());
+            xor_decode_into(&stream, &base, &mut ds, &mut back)
+                .map_err(|e| e.to_string())?;
+            if back != cur {
+                return Err(format!("len {len}: decode != current"));
+            }
+            // near-identical payloads must compress well below verbatim
+            if len >= 1024 && slen >= len {
+                return Err(format!("no gain on sparse delta (len {len})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_base_views_models_and_caches() {
+        let mut g = Gen::new(3);
+        let fmt: crate::omc::format::FloatFormat = "S1E3M7".parse().unwrap();
+        let model = CompressedModel::new(vec![
+            StoredVar::compress(&g.vec_normal(300, 0.05), fmt, true),
+            StoredVar::raw(g.vec_normal(10, 1.0)),
+        ]);
+        let base = DeltaBase::from_model(7, &model);
+        assert_eq!(base.version, 7);
+        assert_eq!(base.num_vars(), 2);
+        assert!(base.var(0).is_some());
+        assert!(base.var(1).is_none());
+        assert!(base.var(2).is_none());
+        let cache = vec![
+            Some(StoredVar::compress(&g.vec_normal(64, 0.1), fmt, false)),
+            None,
+        ];
+        let base = DeltaBase::from_packed_vars(9, &cache);
+        assert_eq!(base.version, 9);
+        assert!(base.var(0).is_some());
+        assert!(base.var(1).is_none());
+    }
+
+    #[test]
+    fn ack_ledger_is_monotonic_per_client() {
+        let mut led = AckLedger::new();
+        assert!(led.is_empty());
+        assert_eq!(led.last(3), None);
+        assert!(led.advance(3, 5));
+        assert!(!led.advance(3, 5), "same version must not re-advance");
+        assert!(!led.advance(3, 2), "stale ack must be ignored");
+        assert_eq!(led.last(3), Some(5));
+        assert!(led.advance(3, 6));
+        assert!(led.advance(4, 0));
+        assert_eq!(led.len(), 2);
+        assert_eq!(led.last(4), Some(0));
+    }
+}

@@ -11,6 +11,9 @@
 //! * [`selection`] — weight-matrices-only + partial parameter quantization
 //!   (Secs. 2.4, 2.5).
 //! * [`codec`] — the transport wire format and byte accounting.
+//! * [`delta`] — the lossless cross-round wire stage: XOR against a
+//!   shared committed version + per-block variable-width bitpacking
+//!   (frame v3; `docs/WIRE.md`).
 //!
 //! # Codec kernel layer (§Perf)
 //!
@@ -54,6 +57,7 @@
 #![warn(missing_docs)]
 
 pub mod codec;
+pub mod delta;
 pub mod fixed;
 pub mod format;
 pub mod pack;

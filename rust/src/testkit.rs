@@ -4,7 +4,20 @@
 //! invariants care about (normal-ish magnitudes, wide exponent ranges,
 //! special values), and [`check`] runs a property over many cases printing
 //! the failing seed so a failure reproduces with `Gen::new(seed)`.
+//!
+//! The second half is the **wire-frame generator and corruption driver**
+//! shared by the codec unit tests, the `wire_delta` property suite, and
+//! the chaos regression tests: canonical mixed-shape models
+//! ([`sample_wire_model`]), per-version frame builders
+//! ([`encode_frame_v2`], [`encode_frame_v3`]), near-identical next-round
+//! models for delta coverage ([`perturbed_model`]), and the corruption
+//! primitives ([`flip_bit`], [`corrupt_byte`], [`truncate_at`],
+//! [`random_bytes`]) every fuzz-style test drives frames through.
 
+use crate::omc::codec::{self, DeltaScratch, WireWriter};
+use crate::omc::delta::DeltaBase;
+use crate::omc::format::FloatFormat;
+use crate::omc::store::{CompressedModel, StoredVar};
 use crate::util::rng::Xoshiro256pp;
 
 /// Seeded random input generator for property tests.
@@ -83,6 +96,111 @@ impl Gen {
             })
             .collect()
     }
+}
+
+// ---------------------------------------------------------------------------
+// wire-frame generator + corruption driver
+// ---------------------------------------------------------------------------
+
+/// The canonical mixed-shape model the codec tests exercise: PVT-packed,
+/// raw, packed-without-PVT, and empty variables in one frame.
+pub fn sample_wire_model(g: &mut Gen) -> CompressedModel {
+    let fmt: FloatFormat = "S1E3M7".parse().expect("valid format");
+    CompressedModel::new(vec![
+        StoredVar::compress(&g.vec_normal(1000, 0.05), fmt, true),
+        StoredVar::raw(g.vec_normal(64, 1.0)),
+        StoredVar::compress(&g.vec_normal(333, 0.2), fmt, false),
+        StoredVar::raw(vec![]),
+    ])
+}
+
+/// A next-version model derived from `base`: identical shapes and
+/// formats, with up to `flips` payload bytes perturbed per packed
+/// variable — the converging-training regime the delta stage targets
+/// (every code bit pattern is decodable, so direct payload perturbation
+/// stays a valid model).
+pub fn perturbed_model(
+    g: &mut Gen,
+    base: &CompressedModel,
+    flips: usize,
+) -> CompressedModel {
+    let mut m = base.clone();
+    for var in &mut m.vars {
+        if let StoredVar::Packed { bytes, .. } = var {
+            if bytes.is_empty() {
+                continue;
+            }
+            for _ in 0..flips {
+                let i = g.usize_below(bytes.len());
+                bytes[i] ^= (g.u64() & 0xFF) as u8;
+            }
+        }
+    }
+    m
+}
+
+/// Encode a model as a checksummed v2 frame carrying `nonce`.
+pub fn encode_frame_v2(model: &CompressedModel, nonce: u64) -> Vec<u8> {
+    let mut w = WireWriter::with_integrity(0, nonce);
+    for v in &model.vars {
+        w.var(v);
+    }
+    w.finish()
+}
+
+/// Encode a model as a v3 delta frame against `base`, returning the
+/// frame and the bytes the delta stage saved vs verbatim records.
+pub fn encode_frame_v3(
+    model: &CompressedModel,
+    nonce: u64,
+    base: &DeltaBase<'_>,
+) -> (Vec<u8>, usize) {
+    let mut w = WireWriter::with_delta(0, nonce, base.version);
+    let mut scratch = DeltaScratch::default();
+    for (i, v) in model.vars.iter().enumerate() {
+        w.var_delta(v, base.var(i), &mut scratch);
+    }
+    let saved = w.delta_saved();
+    (w.finish(), saved)
+}
+
+/// `len` independently random bytes — the adversarial byte-soup input.
+pub fn random_bytes(g: &mut Gen, len: usize) -> Vec<u8> {
+    (0..len).map(|_| (g.u64() & 0xFF) as u8).collect()
+}
+
+/// Flip one bit, indexed over the whole buffer (`bit / 8` is the byte,
+/// `bit % 8` the bit within it).
+pub fn flip_bit(buf: &mut [u8], bit: usize) {
+    buf[bit / 8] ^= 1 << (bit % 8);
+}
+
+/// XOR byte `at` with `xor` (a no-op corruption when `xor == 0`).
+pub fn corrupt_byte(buf: &mut [u8], at: usize, xor: u8) {
+    buf[at] ^= xor;
+}
+
+/// The prefix of `bytes` of length `len` — the truncation driver
+/// (named so corruption loops read uniformly with [`flip_bit`]).
+pub fn truncate_at(bytes: &[u8], len: usize) -> &[u8] {
+    &bytes[..len]
+}
+
+/// Decode a frame via [`codec::for_each_var_based`] and collect each
+/// variable's decompressed values — the equality oracle the round-trip
+/// and delta-vs-verbatim properties compare on.
+pub fn decode_all_based(
+    bytes: &[u8],
+    base: Option<&DeltaBase<'_>>,
+) -> Result<Vec<Vec<f32>>, codec::DecodeError> {
+    let mut out = Vec::new();
+    codec::for_each_var_based(bytes, base, |_, view| {
+        let mut v = Vec::new();
+        view.decompress_into(&mut v);
+        out.push(v);
+        Ok(())
+    })?;
+    Ok(out)
 }
 
 /// Run `prop` over `cases` generated inputs; panic with the seed on failure.

@@ -80,6 +80,13 @@ pub type PackPow2Fn = fn(&[f32], u32, u32, &mut [u8]);
 /// 16-bit-wide format, applying `map = Some((s, b))` as a fused affine
 /// (`None` preserves the decoded bits, including `-0.0`).
 pub type UnpackPow2Fn = fn(&[u8], u32, u32, f32, Option<(f32, f32)>, &mut [f32]);
+/// `fn(a, b, out)` — bytewise `out[i] = a[i] ^ b[i]` over equal-length
+/// slices (the delta stage's XOR pass).
+pub type XorBytesFn = fn(&[u8], &[u8], &mut [u8]);
+/// `fn(bytes) -> u64` — OR-fold of a slice viewed as little-endian u64
+/// words, zero-padding the final partial word (the delta stage's
+/// block-width probe). Exact integer math: identical on every level.
+pub type OrFoldFn = fn(&[u8]) -> u64;
 
 /// One resolved kernel table. Obtain the process-wide table with
 /// [`kernels`], or a specific level's table with [`kernels_for`].
@@ -101,6 +108,10 @@ pub struct Kernels {
     pub pack_pow2: Option<PackPow2Fn>,
     /// whole-block decode for 8/16-bit-wide formats
     pub unpack_pow2: Option<UnpackPow2Fn>,
+    /// bytewise XOR (delta stage)
+    pub xor_bytes: XorBytesFn,
+    /// OR-fold of little-endian u64 words (delta width probe)
+    pub or_fold: OrFoldFn,
 }
 
 // ---------------------------------------------------------------------------
@@ -289,6 +300,38 @@ fn fit_update_scalar(acc: &mut FitSums, v: &[f32], t: &[f32]) {
     }
 }
 
+fn xor_bytes_scalar(a: &[u8], b: &[u8], out: &mut [u8]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = u64::from_le_bytes(a[i..i + 8].try_into().unwrap())
+            ^ u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        out[i..i + 8].copy_from_slice(&x.to_le_bytes());
+        i += 8;
+    }
+    while i < n {
+        out[i] = a[i] ^ b[i];
+        i += 1;
+    }
+}
+
+fn or_fold_scalar(bytes: &[u8]) -> u64 {
+    let n = bytes.len();
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc |= u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+        i += 8;
+    }
+    if i < n {
+        let mut t = [0u8; 8];
+        t[..n - i].copy_from_slice(&bytes[i..]);
+        acc |= u64::from_le_bytes(t);
+    }
+    acc
+}
+
 static SCALAR: Kernels = Kernels {
     level: Level::Scalar,
     quantize: quantize_scalar,
@@ -298,7 +341,25 @@ static SCALAR: Kernels = Kernels {
     fit_update: fit_update_scalar,
     pack_pow2: None,
     unpack_pow2: None,
+    xor_bytes: xor_bytes_scalar,
+    or_fold: or_fold_scalar,
 };
+
+/// Bytewise `out = a ^ b` through the dispatched kernel table. The delta
+/// stage's XOR pass — exact integer math, so every level produces the
+/// identical bytes; parity is still property-tested like the f32 kernels.
+pub fn xor_bytes(a: &[u8], b: &[u8], out: &mut [u8]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    (kernels().xor_bytes)(a, b, out)
+}
+
+/// OR-fold of `bytes` viewed as little-endian u64 words (final partial
+/// word zero-padded) through the dispatched kernel table. The delta
+/// bitpacker derives each block's width class from this fold.
+pub fn or_fold_words(bytes: &[u8]) -> u64 {
+    (kernels().or_fold)(bytes)
+}
 
 // ---------------------------------------------------------------------------
 // CRC32C (Castagnoli) — wire-integrity checksum
@@ -477,8 +538,8 @@ mod x86 {
     use std::arch::x86_64::*;
 
     use super::{
-        quantize_in_place_scalar, quantize_one_em, quantize_scalar, FitSums,
-        Kernels, Level, FIT_LANES,
+        or_fold_scalar, quantize_in_place_scalar, quantize_one_em,
+        quantize_scalar, xor_bytes_scalar, FitSums, Kernels, Level, FIT_LANES,
     };
 
     pub(super) static SSE2: Kernels = Kernels {
@@ -490,6 +551,8 @@ mod x86 {
         fit_update: fit_update_sse2,
         pack_pow2: None,
         unpack_pow2: None,
+        xor_bytes: xor_bytes_sse2,
+        or_fold: or_fold_sse2,
     };
 
     pub(super) static AVX2: Kernels = Kernels {
@@ -501,6 +564,8 @@ mod x86 {
         fit_update: fit_update_avx2,
         pack_pow2: Some(pack_pow2_avx2),
         unpack_pow2: Some(unpack_pow2_avx2),
+        xor_bytes: xor_bytes_avx2,
+        or_fold: or_fold_avx2,
     };
 
     // -- sse2 helpers (emulating the SSE4.1/AVX2-only lane ops) ------------
@@ -834,6 +899,94 @@ mod x86 {
             acc.push(v[i], t[i]);
             i += 1;
         }
+    }
+
+    // -- delta byte kernels --------------------------------------------------
+
+    fn xor_bytes_sse2(a: &[u8], b: &[u8], out: &mut [u8]) {
+        debug_assert!(a.len() == b.len() && a.len() == out.len());
+        let n = a.len();
+        let mut i = 0usize;
+        unsafe {
+            while i + 16 <= n {
+                let x = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+                let y = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+                _mm_storeu_si128(
+                    out.as_mut_ptr().add(i) as *mut __m128i,
+                    _mm_xor_si128(x, y),
+                );
+                i += 16;
+            }
+        }
+        xor_bytes_scalar(&a[i..], &b[i..], &mut out[i..]);
+    }
+
+    fn or_fold_sse2(bytes: &[u8]) -> u64 {
+        let n = bytes.len();
+        let mut i = 0usize;
+        let mut acc;
+        unsafe {
+            let mut v = _mm_setzero_si128();
+            while i + 16 <= n {
+                v = _mm_or_si128(
+                    v,
+                    _mm_loadu_si128(bytes.as_ptr().add(i) as *const __m128i),
+                );
+                i += 16;
+            }
+            let hi = _mm_unpackhi_epi64(v, v);
+            acc = _mm_cvtsi128_si64(_mm_or_si128(v, hi)) as u64;
+        }
+        acc |= or_fold_scalar(&bytes[i..]);
+        acc
+    }
+
+    fn xor_bytes_avx2(a: &[u8], b: &[u8], out: &mut [u8]) {
+        debug_assert!(a.len() == b.len() && a.len() == out.len());
+        unsafe { xor_bytes_avx2_inner(a, b, out) }
+    }
+
+    /// Safety: caller proved AVX2 (table gating).
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_bytes_avx2_inner(a: &[u8], b: &[u8], out: &mut [u8]) {
+        let n = a.len();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let x = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let y = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_xor_si256(x, y),
+            );
+            i += 32;
+        }
+        xor_bytes_sse2(&a[i..], &b[i..], &mut out[i..]);
+    }
+
+    fn or_fold_avx2(bytes: &[u8]) -> u64 {
+        unsafe { or_fold_avx2_inner(bytes) }
+    }
+
+    /// Safety: caller proved AVX2 (table gating).
+    #[target_feature(enable = "avx2")]
+    unsafe fn or_fold_avx2_inner(bytes: &[u8]) -> u64 {
+        let n = bytes.len();
+        let mut i = 0usize;
+        let mut v = _mm256_setzero_si256();
+        while i + 32 <= n {
+            v = _mm256_or_si256(
+                v,
+                _mm256_loadu_si256(bytes.as_ptr().add(i) as *const __m256i),
+            );
+            i += 32;
+        }
+        let folded = _mm_or_si128(
+            _mm256_castsi256_si128(v),
+            _mm256_extracti128_si256::<1>(v),
+        );
+        let hi = _mm_unpackhi_epi64(folded, folded);
+        let acc = _mm_cvtsi128_si64(_mm_or_si128(folded, hi)) as u64;
+        acc | or_fold_sse2(&bytes[i..])
     }
 
     // -- pow2-width block encode/decode -------------------------------------
@@ -1228,6 +1381,47 @@ mod tests {
             assert_eq!(crc32c(0x1234_5678, &bytes), dispatched);
             assert!(force_level(None));
         }
+    }
+
+    #[test]
+    fn xor_and_or_fold_levels_match_scalar() {
+        let mut g = Gen::new(41);
+        for level in available_levels() {
+            let k = kernels_for(level).unwrap();
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 1000] {
+                let a: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+                let b: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+                let mut want = vec![0u8; n];
+                xor_bytes_scalar(&a, &b, &mut want);
+                let mut got = vec![0u8; n];
+                (k.xor_bytes)(&a, &b, &mut got);
+                assert_eq!(want, got, "{level:?} xor n={n}");
+                assert_eq!(
+                    (k.or_fold)(&a),
+                    or_fold_scalar(&a),
+                    "{level:?} or_fold n={n}"
+                );
+            }
+            // single set bit at every word/byte position survives the fold
+            for bit in [0usize, 7, 8, 63, 64, 65, 511] {
+                let mut a = vec![0u8; 70];
+                a[bit / 8] |= 1 << (bit % 8);
+                assert_eq!(
+                    (k.or_fold)(&a),
+                    or_fold_scalar(&a),
+                    "{level:?} bit={bit}"
+                );
+                assert_ne!((k.or_fold)(&a), 0);
+            }
+        }
+        // the free wrappers go through the dispatched table
+        let a = [1u8, 2, 3];
+        let b = [255u8, 0, 3];
+        let mut out = [0u8; 3];
+        xor_bytes(&a, &b, &mut out);
+        assert_eq!(out, [254, 2, 0]);
+        assert_eq!(or_fold_words(&a), u64::from_le_bytes([1, 2, 3, 0, 0, 0, 0, 0]));
+        assert_eq!(or_fold_words(&[]), 0);
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Property/fuzz suite for the lossless cross-round delta + bitpack wire
+//! stage (frame v3), driven end to end through the `testkit` frame
+//! generator and corruption driver:
+//!
+//! * **Bit-exact round-trip** across every paper format (S1E4M14,
+//!   S1E3M7, S1E2M3) plus raw-f32 variables, random shapes, and block
+//!   tails around the 64-word / 256-value boundaries — and delta frames
+//!   decode to exactly the bytes a verbatim v2 frame of the same model
+//!   decodes to.
+//! * **Frame-length identity** — a v3 frame is never more than the
+//!   8-byte `base_version` field larger than its v2 twin, and
+//!   `delta_saved()` accounts for the difference exactly.
+//! * **Ack lag** — any base within the emulated snapshot-ring window
+//!   round-trips; a base at the *wrong* version is a typed
+//!   [`BaseVersionMismatch`], and a missing base a typed
+//!   [`MissingDeltaBase`] — never a silent mis-decode.
+//! * **Corruption totality** — every 1-byte truncation and every
+//!   single-bit flip of a v3 frame decodes to a typed [`DecodeError`];
+//!   replayed delta frames still trip the [`NonceLedger`].
+
+use omc_fl::omc::codec::{frame_nonce, DecodeError, NonceLedger};
+use omc_fl::omc::delta::DeltaBase;
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::store::{CompressedModel, StoredVar};
+use omc_fl::testkit::{
+    check, corrupt_byte, decode_all_based, encode_frame_v2, encode_frame_v3,
+    flip_bit, perturbed_model, sample_wire_model, truncate_at, Gen,
+};
+
+/// Bit patterns of a decoded plaintext, for exact comparison.
+fn bits(vals: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    vals.iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn expect_bits(m: &CompressedModel) -> Vec<Vec<u32>> {
+    bits(&m.decompress_all())
+}
+
+/// Decode or stringify the typed refusal.
+fn decode(
+    wire: &[u8],
+    base: Option<&DeltaBase<'_>>,
+) -> Result<Vec<Vec<u32>>, String> {
+    decode_all_based(wire, base)
+        .map(|v| bits(&v))
+        .map_err(|e| format!("{e:?}"))
+}
+
+/// The invariant tying the two wire generations together: tag-1 records
+/// are byte-identical between v2 and v3 writers, the v3 header is 8
+/// bytes wider (`base_version`), and `delta_saved` is defined as the
+/// exact reduction tag-2 records achieved vs writing verbatim.
+fn assert_frame_length_identity(
+    v3: &[u8],
+    saved: usize,
+    v2: &[u8],
+) -> Result<(), String> {
+    if v3.len() + saved != v2.len() + 8 {
+        return Err(format!(
+            "length identity broken: v3 {} + saved {} != v2 {} + 8",
+            v3.len(),
+            saved,
+            v2.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Value counts straddling the bitpack block geometry: 64-word (512-byte)
+/// blocks and the 256-value / 64-value marks the per-block class headers
+/// key off. Packed formats land odd byte counts (e.g. 11-bit codes), so
+/// these also exercise ragged word tails.
+const TAIL_LENS: [usize; 12] = [0, 1, 2, 63, 64, 65, 255, 256, 257, 511, 512, 513];
+
+#[test]
+fn delta_roundtrip_is_bit_exact_across_all_paper_formats() {
+    for fmt_s in ["S1E4M14", "S1E3M7", "S1E2M3"] {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        check(&format!("delta_roundtrip_{fmt_s}"), 40, |g| {
+            let lens = [
+                g.usize_below(700),
+                TAIL_LENS[g.usize_below(TAIL_LENS.len())],
+                g.usize_below(3),
+            ];
+            let base_m = CompressedModel::new(
+                lens.iter()
+                    .enumerate()
+                    .map(|(i, &n)| {
+                        StoredVar::compress(&g.vec_normal(n, 0.1), fmt, i % 2 == 0)
+                    })
+                    .collect(),
+            );
+            let cur = perturbed_model(g, &base_m, 1 + g.usize_below(9));
+            let base = DeltaBase::from_model(5, &base_m);
+            let (wire, saved) = encode_frame_v3(&cur, g.u64(), &base);
+            let v2 = encode_frame_v2(&cur, 1);
+            assert_frame_length_identity(&wire, saved, &v2)?;
+            let got = decode(&wire, Some(&base))?;
+            if got != expect_bits(&cur) {
+                return Err(format!("{fmt_s}: delta round-trip not bit-exact"));
+            }
+            if got != decode(&v2, None)? {
+                return Err(format!("{fmt_s}: delta and verbatim decodes differ"));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn delta_roundtrip_covers_raw_fp32_and_mixed_frames() {
+    // raw variables never delta-code (the base holds them as `None`) but
+    // must ride v3 frames unchanged, including empty ones
+    check("delta_roundtrip_raw_fp32", 40, |g| {
+        let raw_m = CompressedModel::new(vec![
+            StoredVar::raw(g.vec_normal(TAIL_LENS[g.usize_below(TAIL_LENS.len())], 1.0)),
+            StoredVar::raw(vec![]),
+            StoredVar::raw(g.vec_edge_heavy(96)),
+        ]);
+        let base = DeltaBase::from_model(2, &raw_m);
+        let (wire, saved) = encode_frame_v3(&raw_m, g.u64(), &base);
+        if saved != 0 {
+            return Err(format!("raw-only frame claims {saved} delta bytes"));
+        }
+        assert_frame_length_identity(&wire, saved, &encode_frame_v2(&raw_m, 1))?;
+        if decode(&wire, Some(&base))? != expect_bits(&raw_m) {
+            return Err("raw round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+    // the canonical mixed-shape model: pvt-packed + raw + packed + empty
+    check("delta_roundtrip_mixed", 60, |g| {
+        let base_m = sample_wire_model(g);
+        let cur = perturbed_model(g, &base_m, g.usize_below(12));
+        let base = DeltaBase::from_model(9, &base_m);
+        let (wire, saved) = encode_frame_v3(&cur, g.u64(), &base);
+        assert_frame_length_identity(&wire, saved, &encode_frame_v2(&cur, 1))?;
+        if decode(&wire, Some(&base))? != expect_bits(&cur) {
+            return Err("mixed-frame round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn delta_block_tails_roundtrip_at_every_boundary() {
+    // deterministic single-variable sweep over the block geometry, packed
+    // and raw, perturbed and identical
+    let mut g = Gen::new(0xB10C);
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    for &n in &TAIL_LENS {
+        for flips in [0usize, 3] {
+            let base_m = CompressedModel::new(vec![StoredVar::compress(
+                &g.vec_normal(n, 0.1),
+                fmt,
+                true,
+            )]);
+            let cur = perturbed_model(&mut g, &base_m, flips);
+            let base = DeltaBase::from_model(1, &base_m);
+            let (wire, saved) = encode_frame_v3(&cur, g.u64(), &base);
+            assert_frame_length_identity(&wire, saved, &encode_frame_v2(&cur, 1))
+                .unwrap();
+            assert_eq!(
+                decode(&wire, Some(&base)).unwrap(),
+                expect_bits(&cur),
+                "tail n={n} flips={flips} not bit-exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_zero_and_high_entropy_streams_roundtrip() {
+    // identical model (the converged regime): every block hits the
+    // zero-width path, the savings dominate the packed payload, and the
+    // frame still decodes bit-exactly
+    check("delta_all_zero", 30, |g| {
+        let m = sample_wire_model(g);
+        let base = DeltaBase::from_model(3, &m);
+        let (wire, saved) = encode_frame_v3(&m, g.u64(), &base);
+        let v2 = encode_frame_v2(&m, 1);
+        assert_frame_length_identity(&wire, saved, &v2)?;
+        if saved == 0 {
+            return Err("identical model produced no savings".into());
+        }
+        if wire.len() * 2 >= v2.len() {
+            return Err(format!(
+                "zero-delta frame did not collapse: {} vs {}",
+                wire.len(),
+                v2.len()
+            ));
+        }
+        if decode(&wire, Some(&base))? != expect_bits(&m) {
+            return Err("zero-delta round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+    // all-zero *values*: uniform payload codes, still lossless
+    check("delta_zero_values", 20, |g| {
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+        let zeros = vec![0.0f32; 200 + g.usize_below(400)];
+        let m =
+            CompressedModel::new(vec![StoredVar::compress(&zeros, fmt, false)]);
+        let base = DeltaBase::from_model(1, &m);
+        let (wire, _) = encode_frame_v3(&m, g.u64(), &base);
+        if decode(&wire, Some(&base))? != expect_bits(&m) {
+            return Err("zero-values round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+    // adversarial high-entropy payloads: XOR finds no slack, the writer
+    // must fall back to verbatim records (saved == 0, frame == v2 + 8)
+    // and stay bit-exact
+    check("delta_high_entropy", 30, |g| {
+        let base_m = sample_wire_model(g);
+        let cur = perturbed_model(g, &base_m, 3000);
+        let base = DeltaBase::from_model(4, &base_m);
+        let (wire, saved) = encode_frame_v3(&cur, g.u64(), &base);
+        let v2 = encode_frame_v2(&cur, 1);
+        assert_frame_length_identity(&wire, saved, &v2)?;
+        if wire.len() > v2.len() + 8 {
+            return Err(format!(
+                "delta framing regressed the wire: {} vs {}",
+                wire.len(),
+                v2.len()
+            ));
+        }
+        if decode(&wire, Some(&base))? != expect_bits(&cur) {
+            return Err("high-entropy round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn delta_roundtrip_survives_any_ack_lag_within_the_ring() {
+    check("delta_ack_lag", 60, |g| {
+        // a chain of committed versions, like the server's SnapshotRing
+        let depth = 1 + g.usize_below(4);
+        let mut chain = vec![sample_wire_model(g)];
+        for _ in 0..depth {
+            let prev = chain.last().unwrap().clone();
+            chain.push(perturbed_model(g, &prev, 1 + g.usize_below(6)));
+        }
+        let t = chain.len() - 1;
+        let lag = g.usize_below(depth + 1).min(t);
+        let bv = (t - lag) as u64;
+        let base = DeltaBase::from_model(bv, &chain[t - lag]);
+        let cur = &chain[t];
+        let (wire, saved) = encode_frame_v3(cur, g.u64(), &base);
+        if decode(&wire, Some(&base))? != expect_bits(cur) {
+            return Err(format!("lag {lag}: round-trip not bit-exact"));
+        }
+        // a base at any other version is a typed refusal, up front
+        let wrong_v = g.usize_below(t + 1) as u64;
+        if wrong_v != bv {
+            let wrong =
+                DeltaBase::from_model(wrong_v, &chain[wrong_v as usize]);
+            match decode_all_based(&wire, Some(&wrong)) {
+                Err(DecodeError::BaseVersionMismatch { frame, have })
+                    if frame == bv && have == wrong_v => {}
+                other => {
+                    return Err(format!(
+                        "wrong base must be BaseVersionMismatch, got {other:?}"
+                    ))
+                }
+            }
+        }
+        // and a *missing* base refuses any frame that carries tag-2
+        // records instead of guessing
+        if saved > 0 {
+            match decode_all_based(&wire, None) {
+                Err(DecodeError::MissingDeltaBase { .. }) => {}
+                other => {
+                    return Err(format!(
+                        "missing base must be MissingDeltaBase, got {other:?}"
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn base_payload_length_mismatch_is_a_typed_refusal() {
+    check("delta_len_mismatch", 30, |g| {
+        let base_m = sample_wire_model(g);
+        let cur = perturbed_model(g, &base_m, 2);
+        let base = DeltaBase::from_model(6, &base_m);
+        let (wire, saved) = encode_frame_v3(&cur, g.u64(), &base);
+        if saved == 0 {
+            return Ok(()); // no tag-2 record to mis-match against
+        }
+        // same version number, different payload shapes: a fresh model's
+        // packed vars have different lengths with probability ~1
+        let other = sample_wire_model(g);
+        let shifted = DeltaBase::from_model(6, &other);
+        match decode_all_based(&wire, Some(&shifted)) {
+            Err(DecodeError::DeltaLengthMismatch { .. })
+            | Err(DecodeError::DeltaCorrupt { .. })
+            | Err(DecodeError::BadBlockWidth { .. })
+            | Err(DecodeError::MissingDeltaBase { .. }) => Ok(()),
+            Ok(got) => {
+                // identical shapes by coincidence: XOR against different
+                // bytes must not reproduce the plaintext
+                if bits(&got) == expect_bits(&cur) {
+                    return Err("wrong base silently decoded correctly".into());
+                }
+                Ok(())
+            }
+            Err(e) => Err(format!("unexpected refusal {e:?}")),
+        }
+    });
+}
+
+// ---- corruption totality (fuzz layer over the corruption driver) ----------
+
+/// A small-but-complete v3 frame: two packed vars (one delta-coded, one
+/// fallback-prone), a raw var, and an empty var behind a real base.
+fn small_delta_frame(
+    g: &mut Gen,
+) -> (CompressedModel, CompressedModel, Vec<u8>) {
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let base_m = CompressedModel::new(vec![
+        StoredVar::compress(&g.vec_normal(220, 0.05), fmt, true),
+        StoredVar::raw(g.vec_normal(16, 1.0)),
+        StoredVar::compress(&g.vec_normal(77, 0.2), fmt, false),
+        StoredVar::raw(vec![]),
+    ]);
+    let cur = perturbed_model(g, &base_m, 2);
+    let base = DeltaBase::from_model(11, &base_m);
+    let (wire, _) = encode_frame_v3(&cur, 0xFEED_F00D, &base);
+    (base_m, cur, wire)
+}
+
+#[test]
+fn every_truncation_of_a_v3_frame_is_a_typed_error() {
+    let mut g = Gen::new(0x7A11);
+    let (base_m, cur, wire) = small_delta_frame(&mut g);
+    let base = DeltaBase::from_model(11, &base_m);
+    assert_eq!(
+        decode(&wire, Some(&base)).unwrap(),
+        expect_bits(&cur),
+        "the uncorrupted frame must decode"
+    );
+    for len in 0..wire.len() {
+        let cut = truncate_at(&wire, len);
+        match decode_all_based(cut, Some(&base)) {
+            Err(_) => {}
+            Ok(_) => panic!("truncation to {len}/{} decoded", wire.len()),
+        }
+    }
+}
+
+#[test]
+fn every_single_bit_flip_of_a_v3_frame_is_a_typed_error() {
+    // CRC32C coverage is total: the header CRC spans every header byte
+    // (magic, version, nvars, nonce, base_version) and each record's CRC
+    // spans the record, so no single-bit flip may decode — corrupted
+    // deltas must never silently XOR into a wrong model
+    let mut g = Gen::new(0xF11B);
+    let (base_m, _cur, wire) = small_delta_frame(&mut g);
+    let base = DeltaBase::from_model(11, &base_m);
+    for bit in 0..wire.len() * 8 {
+        let mut bad = wire.clone();
+        flip_bit(&mut bad, bit);
+        match decode_all_based(&bad, Some(&base)) {
+            Err(_) => {}
+            Ok(_) => panic!("bit flip {bit} decoded silently"),
+        }
+    }
+}
+
+#[test]
+fn random_byte_corruption_is_always_refused() {
+    check("delta_byte_corruption", 120, |g| {
+        let (base_m, _cur, wire) = small_delta_frame(g);
+        let base = DeltaBase::from_model(11, &base_m);
+        let mut bad = wire.clone();
+        let at = g.usize_below(bad.len());
+        let xor = 1 + (g.u64() & 0xFE) as u8; // nonzero
+        corrupt_byte(&mut bad, at, xor);
+        match decode_all_based(&bad, Some(&base)) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("byte {at} ^ {xor:#x} decoded silently")),
+        }
+    });
+}
+
+#[test]
+fn replayed_delta_frames_trip_the_nonce_ledger() {
+    let mut g = Gen::new(0xD0_0DAD);
+    let (_base_m, _cur, wire) = small_delta_frame(&mut g);
+    let nonce = frame_nonce(&wire).unwrap();
+    assert_eq!(nonce, Some(0xFEED_F00D), "v3 frames carry their nonce");
+    let mut ledger = NonceLedger::new(8);
+    ledger.observe(nonce).unwrap();
+    match ledger.observe(nonce) {
+        Err(DecodeError::DuplicateNonce(n)) => assert_eq!(n, 0xFEED_F00D),
+        other => panic!("replay must be DuplicateNonce, got {other:?}"),
+    }
+}
