@@ -1,0 +1,187 @@
+//! Fleet-scale population substrate: lazy `(seed, cid)` profile
+//! derivation, streaming cohort sampling out of 10^6–10^7 registered
+//! clients, and the edge→root merged-frame hop. The bench-trend gate
+//! tracks these rows (`--strict-suites population` once a baseline is
+//! blessed): sampling must stay O(cohort) regardless of the registered
+//! fleet — the whole point of the lazy design — and the edge hop must
+//! move sums at codec-class throughput or the two-tier topology would
+//! cost more than the uplinks it merges.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::fl::population::{
+    self, PopulationConfig, DEVICE_CLASSES, NUM_CLASSES,
+};
+use omc_fl::fl::server::StreamingAggregator;
+use omc_fl::omc::codec::NonceLedger;
+use omc_fl::testkit::Gen;
+
+fn fleet(registered: usize) -> PopulationConfig {
+    PopulationConfig {
+        enabled: true,
+        registered,
+        edges: 4,
+        churn_rate: 0.3,
+        churn_period: 2,
+        wave_amplitude: 0.5,
+        wave_period: 6,
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("fl::population fleet-scale substrate");
+    let mut g = Gen::new(13);
+    let seed = 0xF1EE7u64;
+
+    // ---- streaming cohort sampling: clients/sec drawn -------------------
+    // The registered axis is the point: 10x the fleet must not change the
+    // work per sampled client (rejection rates depend on churn/wave knobs,
+    // not on `registered`).
+    let k = 64;
+    for registered in [1_000_000usize, 10_000_000] {
+        let cfg = fleet(registered);
+        let mut round = 0u64;
+        suite.bench(
+            &format!("sample_cohort k={k} of {registered} registered"),
+            Some(k),
+            || {
+                let (cohort, _) =
+                    population::sample_cohort(&cfg, seed, round, k).unwrap();
+                round += 1;
+                consume(cohort.len());
+            },
+        );
+    }
+
+    // ---- lazy per-client state: profiles/sec derived ---------------------
+    // Strided cids spanning the whole 10^7 space — nothing is materialized,
+    // so position in the fleet cannot matter.
+    let cfg7 = fleet(10_000_000);
+    let n_profiles = 10_000usize;
+    let stride = cfg7.registered / n_profiles;
+    suite.bench(
+        &format!("derive_profile x{n_profiles} across 10^7 fleet"),
+        Some(n_profiles),
+        || {
+            let mut acc = 0usize;
+            for i in 0..n_profiles {
+                acc += population::derive_profile(&cfg7, seed, i * stride).class;
+            }
+            consume(acc);
+        },
+    );
+    suite.bench(
+        &format!("availability x{n_profiles} (churn + wave gates)"),
+        Some(n_profiles),
+        || {
+            let mut active = 0usize;
+            for i in 0..n_profiles {
+                if matches!(
+                    population::availability(&cfg7, seed, 3, i * stride),
+                    population::Availability::Active
+                ) {
+                    active += 1;
+                }
+            }
+            consume(active);
+        },
+    );
+
+    // ---- edge→root hop: merged-frame encode/decode throughput ------------
+    let var_lens = [1usize << 18, 1 << 18];
+    let total: usize = var_lens.iter().sum();
+    let model: Vec<Vec<f32>> =
+        var_lens.iter().map(|&n| g.vec_normal(n, 0.05)).collect();
+    let mut edge = StreamingAggregator::new(&var_lens);
+    for c in 0..8 {
+        edge.accumulate_model(&model, 1.0 / 8.0)
+            .unwrap_or_else(|e| panic!("fold client {c}: {e}"));
+    }
+    let nonce = population::edge_nonce(seed, 0, 0);
+    suite.bench(
+        &format!("encode_edge_frame verbatim ({total} params, CRC)"),
+        Some(total),
+        || {
+            consume(
+                population::encode_edge_frame(&edge, true, nonce, false, &[])
+                    .shipped
+                    .len(),
+            );
+        },
+    );
+    let frame = population::encode_edge_frame(&edge, true, nonce, false, &[]);
+    suite.bench(
+        &format!(
+            "decode_edge_frame verbatim ({} KiB shipped)",
+            frame.shipped.len() / 1024
+        ),
+        Some(total),
+        || {
+            let mut root = StreamingAggregator::new(&var_lens);
+            let mut ledger = NonceLedger::new(8);
+            consume(
+                population::decode_edge_frame(
+                    &frame.shipped,
+                    &[],
+                    &mut root,
+                    &mut ledger,
+                    Some(nonce),
+                )
+                .unwrap()
+                .len(),
+            );
+        },
+    );
+    // converged regime: identical sums round-over-round, the delta hop
+    // collapses the shipped frame (EDGE_TAG_DELTA + zero-width blocks)
+    suite.bench(
+        &format!("encode_edge_frame delta vs identical prev ({total} params)"),
+        Some(total),
+        || {
+            consume(
+                population::encode_edge_frame(
+                    &edge,
+                    true,
+                    nonce,
+                    true,
+                    &frame.verbatim,
+                )
+                .shipped
+                .len(),
+            );
+        },
+    );
+
+    // ---- O(active) memory: the structural claim, asserted ----------------
+    // Accounted state after sampling + one full edge fold is identical for
+    // a 10^6 and a 10^7 fleet: cohort vectors are O(k) and aggregators are
+    // O(params); nothing scales with `registered`.
+    let mut footprints = [0usize; 2];
+    for (slot, registered) in [1_000_000usize, 10_000_000].iter().enumerate() {
+        let cfg = fleet(*registered);
+        let (cohort, stats) =
+            population::sample_cohort(&cfg, seed, 0, k).unwrap();
+        assert_eq!(cohort.len(), k);
+        assert!(stats.attempts >= k as u64);
+        let root = StreamingAggregator::new(&var_lens);
+        footprints[slot] =
+            root.memory_bytes() + cohort.len() * std::mem::size_of::<usize>();
+    }
+    assert_eq!(
+        footprints[0], footprints[1],
+        "peak accounted bytes must not scale with the registered fleet"
+    );
+    assert!(
+        footprints[0] < 16 << 20,
+        "O(active) footprint blew past 16 MiB: {} B",
+        footprints[0]
+    );
+    println!(
+        "# O(active) check: {} B accounted at 10^6 and 10^7 registered \
+         ({} device classes: {:?})",
+        footprints[0],
+        NUM_CLASSES,
+        DEVICE_CLASSES.map(|c| c.name),
+    );
+
+    suite.finish("BENCH_population.json");
+}

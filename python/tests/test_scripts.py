@@ -1,13 +1,18 @@
 """Unit tests for the CI gate scripts: scripts/check_goldens.py (golden
-diff: tolerance edges, missing golden, malformed JSON) and
+diff: tolerance edges, missing golden, malformed JSON),
 scripts/bench_trend.py (trend gate: thresholds, strict suites, missing
-baselines, bless, malformed JSON). These run under the existing
-``python-tests`` CI job, so a behavior change in either gate fails CI
+baselines, bless, malformed JSON), and scripts/determinism_check.sh (the
+shared four-way byte-determinism engine behind the CI matrix: cmp gate,
+liveness greps, RSS ceiling). These run under the existing
+``python-tests`` CI job, so a behavior change in any gate fails CI
 before it can silently weaken the smoke-goldens or bench-smoke jobs.
 """
 
 import importlib.util
 import json
+import os
+import shutil
+import subprocess
 import sys
 from pathlib import Path
 
@@ -208,6 +213,45 @@ def test_bench_trend_missing_baseline_is_not_a_failure(tmp_path, monkeypatch, ca
     assert "no committed baseline" in capsys.readouterr().out
 
 
+def test_bench_trend_gated_suite_without_baseline_warns_dormant(
+    tmp_path, monkeypatch, capsys
+):
+    # a strict suite that produced fresh JSON but has no committed baseline
+    # (the `population` suite right after it lands) must announce itself as
+    # a dormant gate via ::warning::, not fail and not stay silent
+    argv = trend_env(tmp_path, {"sample": 100.0}, None, suite="population")
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,population"], monkeypatch
+    )
+    # codec absent from fresh would fail the absence gate — provide it
+    assert rc == 1  # codec has no fresh file in this env
+    capsys.readouterr()
+    write(Path(argv[1]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    write(Path(argv[3]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "codec,population"], monkeypatch
+    )
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out and "dormant" in out
+    # an ungated suite with a missing baseline keeps the plain note
+    argv = trend_env(tmp_path, {"k": 1.0}, None, suite="native", tag="t9")
+    rc = run_main(bench_trend, argv, monkeypatch)
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "no committed baseline" in out and "::warning::" not in out
+    # once a baseline is blessed, the same gate arms: a regression fails
+    argv = trend_env(
+        tmp_path, {"sample": 200.0}, {"sample": 100.0}, suite="population",
+        tag="t10",
+    )
+    rc = run_main(
+        bench_trend, argv + ["--strict-suites", "population"], monkeypatch
+    )
+    assert rc == 1
+    assert "::error::" in capsys.readouterr().out
+
+
 def test_bench_trend_malformed_json_is_an_error(tmp_path, monkeypatch):
     argv = trend_env(tmp_path, {"c": 100.0}, {"c": 100.0}, suite="codec")
     fresh_dir = Path(argv[1])
@@ -308,6 +352,146 @@ def test_bench_trend_suite_name_parsing():
     assert bench_trend.suite_name("BENCH_codec.json") == "codec"
     assert bench_trend.suite_name("/tmp/x/BENCH_round.json") == "round"
     assert bench_trend.suite_name("other.json") == "other.json"
+
+
+# ---- determinism_check.sh --------------------------------------------------
+
+DET_CHECK = SCRIPTS / "determinism_check.sh"
+BASH = shutil.which("bash")
+
+pytestmark_sh = pytest.mark.skipif(BASH is None, reason="bash unavailable")
+
+# a stand-in sweep binary: every invocation writes $STUB_SUMMARY as the
+# summary (plus a timing file, like the real engine). With STUB_COUNTER
+# set, it appends a per-invocation counter — deliberate nondeterminism.
+STUB_BIN = """#!/usr/bin/env bash
+out=
+while [ $# -gt 0 ]; do
+  case $1 in
+    --out) out=$2; shift 2 ;;
+    *) shift ;;
+  esac
+done
+mkdir -p "$out"
+body="$STUB_SUMMARY"
+if [ -n "${STUB_COUNTER:-}" ]; then
+  n=$(cat "$STUB_COUNTER" 2>/dev/null || echo 0)
+  n=$((n + 1))
+  echo "$n" > "$STUB_COUNTER"
+  body="$body run=$n"
+fi
+printf '%s' "$body" > "$out/sweep_summary.json"
+printf '{"wall_s":1}' > "$out/sweep_timing.json"
+"""
+
+# a stand-in GNU time: reports $STUB_RSS_KB as peak RSS on stderr (which
+# the gate captures to its log file), then runs the real command
+STUB_TIME = """#!/usr/bin/env bash
+shift  # -v
+echo "\tMaximum resident set size (kbytes): $STUB_RSS_KB" >&2
+exec "$@"
+"""
+
+
+def det_check(tmp_path, *greps, summary='{"x":1}', env=None):
+    """Run determinism_check.sh against the stub binary; return the
+    CompletedProcess."""
+    stub = tmp_path / "stub-omc-fl"
+    stub.write_text(STUB_BIN)
+    stub.chmod(0o755)
+    full_env = {
+        **os.environ,
+        "OMC_BIN": str(stub),
+        "STUB_SUMMARY": summary,
+        **(env or {}),
+    }
+    return subprocess.run(
+        [BASH, str(DET_CHECK), "smoke-test", str(tmp_path / "out")] + list(greps),
+        capture_output=True,
+        text=True,
+        env=full_env,
+        cwd=tmp_path,
+    )
+
+
+@pytestmark_sh
+def test_determinism_check_passes_and_writes_four_variants(tmp_path):
+    r = det_check(tmp_path, summary='{"churn_rejections":7}')
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "byte-identical" in r.stdout
+    for variant in ("seq_a", "seq_b", "pool", "scalar"):
+        d = tmp_path / f"out_{variant}"
+        assert (d / "sweep_summary.json").is_file()
+        assert (d / "sweep_timing.json").is_file()
+
+
+@pytestmark_sh
+def test_determinism_check_liveness_greps(tmp_path):
+    # matching counters pass and are reported
+    r = det_check(
+        tmp_path,
+        '"churn_rejections":[1-9]',
+        '"wave_rejections":[1-9]',
+        summary='{"churn_rejections":7,"wave_rejections":3}',
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "2 liveness counters nonzero" in r.stdout
+    # a silent zero fails with an ::error:: naming the dead pattern
+    r = det_check(
+        tmp_path,
+        '"wave_rejections":[1-9]',
+        summary='{"churn_rejections":7,"wave_rejections":0}',
+    )
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "wave_rejections" in r.stdout
+
+
+@pytestmark_sh
+def test_determinism_check_catches_nondeterminism(tmp_path):
+    # the stub varies its summary per invocation — cmp must catch it
+    r = det_check(
+        tmp_path, env={"STUB_COUNTER": str(tmp_path / "counter")}
+    )
+    assert r.returncode == 1
+    assert "differs" in r.stdout
+
+
+@pytestmark_sh
+def test_determinism_check_usage_error(tmp_path):
+    r = subprocess.run(
+        [BASH, str(DET_CHECK), "only-profile"],
+        capture_output=True,
+        text=True,
+        cwd=tmp_path,
+    )
+    assert r.returncode == 2
+    assert "usage:" in r.stderr
+
+
+@pytestmark_sh
+def test_determinism_check_rss_ceiling(tmp_path):
+    # the O(active) gate: peak RSS under the ceiling passes...
+    stub_time = tmp_path / "stub-time"
+    stub_time.write_text(STUB_TIME)
+    stub_time.chmod(0o755)
+    env = {"OMC_TIME_BIN": str(stub_time), "OMC_RSS_CEILING_MB": "400"}
+    r = det_check(tmp_path, env={**env, "STUB_RSS_KB": "100000"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "peak RSS 100000 kB" in r.stdout
+    # ...and a fleet-sized blowup past the ceiling fails
+    r = det_check(tmp_path, env={**env, "STUB_RSS_KB": "900000"})
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "ceiling" in r.stdout
+    # a time binary that is absent degrades to a warning, not a failure
+    r = det_check(
+        tmp_path,
+        env={
+            "OMC_TIME_BIN": str(tmp_path / "no-such-time"),
+            "OMC_RSS_CEILING_MB": "400",
+        },
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "::warning::" in r.stdout and "RSS ceiling skipped" in r.stdout
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::chaos::ChaosConfig;
 use crate::fl::cohort::CohortConfig;
+use crate::fl::population::PopulationConfig;
 use crate::fl::sampler::SamplerKind;
 use crate::omc::format::FloatFormat;
 use crate::util::toml::{self, Table};
@@ -97,6 +98,12 @@ pub struct ExperimentConfig {
     /// lossless cross-round delta + bitpack wire stage (`[delta]` table);
     /// requires `omc.integrity`
     pub delta: DeltaConfig,
+    /// population-scale simulation (`[population]` table): a registered
+    /// fleet of 10^6–10^7 clients with lazy per-client state, churn and
+    /// diurnal availability, a device-class ladder, and a two-tier
+    /// edge→root aggregation topology (`fl::population`, docs/SCALE.md).
+    /// When enabled, `registered` replaces `fl.clients` as the fleet size
+    pub population: PopulationConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -128,6 +135,7 @@ impl ExperimentConfig {
             async_cfg: AsyncConfig::default(),
             chaos: ChaosConfig::default(),
             delta: DeltaConfig::default(),
+            population: PopulationConfig::off(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -293,6 +301,45 @@ impl ExperimentConfig {
         if let Some(v) = get_b("delta.enabled") {
             cfg.delta.enabled = v;
         }
+        let pop_enabled = get_b("population.enabled");
+        if let Some(v) = pop_enabled {
+            cfg.population.enabled = v;
+        }
+        let mut pop_knobs = false;
+        if let Some(v) = get_i("population.registered") {
+            anyhow::ensure!(v >= 1, "population.registered must be >= 1");
+            cfg.population.registered = v as usize;
+            pop_knobs = true;
+        }
+        if let Some(v) = get_i("population.edges") {
+            anyhow::ensure!(v >= 1, "population.edges must be >= 1");
+            cfg.population.edges = v as usize;
+            pop_knobs = true;
+        }
+        if let Some(v) = get_f("population.churn_rate") {
+            cfg.population.churn_rate = v;
+            pop_knobs = true;
+        }
+        if let Some(v) = get_i("population.churn_period") {
+            anyhow::ensure!(v >= 1, "population.churn_period must be >= 1");
+            cfg.population.churn_period = v as u64;
+            pop_knobs = true;
+        }
+        if let Some(v) = get_f("population.wave_amplitude") {
+            cfg.population.wave_amplitude = v;
+            pop_knobs = true;
+        }
+        if let Some(v) = get_i("population.wave_period") {
+            anyhow::ensure!(v >= 1, "population.wave_period must be >= 1");
+            cfg.population.wave_period = v as u64;
+            pop_knobs = true;
+        }
+        // scenario knobs without the master switch would silently no-op —
+        // reject the misconfiguration (same rule as [chaos]/async.policy)
+        anyhow::ensure!(
+            !pop_knobs || pop_enabled.is_some(),
+            "[population] knobs need an explicit population.enabled = true|false"
+        );
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -334,6 +381,16 @@ impl ExperimentConfig {
         self.cohort.validate()?;
         self.async_cfg.validate()?;
         self.chaos.validate()?;
+        self.population.validate()?;
+        // in population mode the registered fleet replaces fl.clients as
+        // the client space, so the cohort must fit inside it
+        anyhow::ensure!(
+            !self.population.enabled
+                || self.clients_per_round <= self.population.registered,
+            "clients_per_round ({}) exceeds population.registered ({})",
+            self.clients_per_round,
+            self.population.registered
+        );
         // a corrupt frame on the unchecksummed v1 wire can be
         // indistinguishable from a valid one — chaos without integrity
         // would inject faults the server cannot reliably detect
@@ -591,6 +648,67 @@ mod tests {
         // explicit enabled = false parses without integrity
         let off = "name = \"x\"\n[delta]\nenabled = false\n";
         assert!(ExperimentConfig::from_table(&toml::parse(off).unwrap()).is_ok());
+    }
+
+    const POPULATION_SAMPLE: &str = r#"
+        name = "scale_cell"
+
+        [fl]
+        clients = 32
+        clients_per_round = 8
+
+        [population]
+        enabled = true
+        registered = 1000000
+        edges = 4
+        churn_rate = 0.3
+        churn_period = 2
+        wave_amplitude = 0.5
+        wave_period = 6
+    "#;
+
+    #[test]
+    fn parses_population_table_and_defaults() {
+        let t = toml::parse(POPULATION_SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.population.enabled);
+        assert_eq!(c.population.registered, 1_000_000);
+        assert_eq!(c.population.edges, 4);
+        assert_eq!(c.population.churn_rate, 0.3);
+        assert_eq!(c.population.churn_period, 2);
+        assert_eq!(c.population.wave_amplitude, 0.5);
+        assert_eq!(c.population.wave_period, 6);
+        // absent table → disabled defaults
+        let plain =
+            ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap())
+                .unwrap();
+        assert!(!plain.population.enabled);
+        assert_eq!(plain.population, PopulationConfig::off());
+    }
+
+    #[test]
+    fn rejects_bad_population_knobs_and_dangling_table() {
+        for (from, to) in [
+            ("registered = 1000000", "registered = 0"),
+            ("edges = 4", "edges = 0"),
+            ("churn_rate = 0.3", "churn_rate = 1.0"),
+            ("churn_period = 2", "churn_period = 0"),
+            ("wave_amplitude = 0.5", "wave_amplitude = 1.5"),
+            ("wave_period = 6", "wave_period = 0"),
+            // the cohort must fit in the registered fleet
+            ("registered = 1000000", "registered = 4"),
+        ] {
+            let bad = POPULATION_SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+        // scenario knobs without the master switch must be rejected, not
+        // silently ignored
+        let dangling = POPULATION_SAMPLE.replace("enabled = true", "");
+        let err =
+            ExperimentConfig::from_table(&toml::parse(&dangling).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("population.enabled"), "{err}");
     }
 
     #[test]

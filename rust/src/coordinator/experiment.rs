@@ -77,18 +77,40 @@ impl Experiment {
         );
         task.noise = cfg.noise;
         let domain = Domain::new(&task, cfg.domain);
-        let assignment = ClientAssignment::build(
-            cfg.partition,
-            cfg.num_clients,
-            task.num_speakers,
-            cfg.seed,
-        );
-        let sampler = Sampler::new(
-            cfg.sampler,
-            cfg.num_clients,
-            cfg.clients_per_round,
-            cfg.seed,
-        );
+        // population mode swaps both client-space structures for their
+        // O(active)-memory twins: a lazy assignment over the registered
+        // fleet (shards derived on demand, bit-identical to the dense
+        // builder) and an availability-aware rejection sampler
+        let (assignment, sampler) = if cfg.population.enabled {
+            (
+                ClientAssignment::lazy(
+                    cfg.partition,
+                    cfg.population.registered,
+                    task.num_speakers,
+                    cfg.seed,
+                ),
+                Sampler::for_population(
+                    cfg.population,
+                    cfg.clients_per_round,
+                    cfg.seed,
+                )?,
+            )
+        } else {
+            (
+                ClientAssignment::build(
+                    cfg.partition,
+                    cfg.num_clients,
+                    task.num_speakers,
+                    cfg.seed,
+                ),
+                Sampler::try_new(
+                    cfg.sampler,
+                    cfg.num_clients,
+                    cfg.clients_per_round,
+                    cfg.seed,
+                )?,
+            )
+        };
         let params = match &cfg.init_from {
             Some(path) => {
                 let p = params_io::load(path)
@@ -225,6 +247,7 @@ impl Experiment {
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
+            population: self.cfg.population,
             quarantined: &[],
             seed: self.cfg.seed,
             workers: self.cfg.workers,
@@ -292,6 +315,17 @@ impl Experiment {
                  and bitpack per 64-word block (lossless, v3 frames)"
             );
         }
+        if self.cfg.population.enabled {
+            crate::log_info!(
+                "population mode: registered={}, edges={}, churn={}@{}r, wave={}@{}r",
+                self.cfg.population.registered,
+                self.cfg.population.edges,
+                self.cfg.population.churn_rate,
+                self.cfg.population.churn_period,
+                self.cfg.population.wave_amplitude,
+                self.cfg.population.wave_period
+            );
+        }
         if self.cfg.async_cfg.enabled {
             self.run_async_rounds(rounds, &mut rec, policy, train)?;
         } else {
@@ -343,6 +377,7 @@ impl Experiment {
                 chaos: self.cfg.chaos,
                 integrity: self.cfg.omc.integrity,
                 delta: self.cfg.delta.enabled,
+                population: self.cfg.population,
                 quarantined: &quarantined,
                 seed: self.cfg.seed,
                 workers: self.cfg.workers,
@@ -400,6 +435,9 @@ impl Experiment {
                 up_bytes_delta_saved: outcome.up_bytes_delta_saved,
                 round_seconds,
             });
+            if let Some(p) = outcome.population {
+                rec.push_population(p);
+            }
         }
         Ok(())
     }
@@ -447,6 +485,7 @@ impl Experiment {
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
             acfg,
+            population: self.cfg.population,
             seed: self.cfg.seed,
             workers: self.cfg.workers,
         };

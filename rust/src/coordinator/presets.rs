@@ -13,6 +13,7 @@ use crate::coordinator::sweep::SweepSpec;
 use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::cohort::CohortConfig;
+use crate::fl::population::PopulationConfig;
 use crate::metrics::recorder::Recorder;
 use crate::runtime::engine::{Engine, LoadedModel};
 
@@ -204,6 +205,54 @@ pub fn async_ladder() -> Vec<(String, AsyncConfig)> {
                 policy: poly,
                 max_staleness: 2,
                 ..on
+            },
+        ),
+    ]
+}
+
+/// The fleet-scale scenario ladder driven by `examples/scale_stress.rs`
+/// and `benches/bench_population.rs`: from the tables' enumerable fleet
+/// (population mode off) through a flat-root 10^5 fleet up to 10^7
+/// registered clients behind eight edge aggregators with churn and a deep
+/// diurnal availability wave. Peak memory stays O(active cohort) at every
+/// rung — per-client state derives lazily from `(seed, cid)` and is never
+/// materialized (docs/SCALE.md).
+pub fn scale_ladder() -> Vec<(String, PopulationConfig)> {
+    vec![
+        ("enumerable fleet (reference)".into(), PopulationConfig::off()),
+        (
+            "100k registered, flat root".into(),
+            PopulationConfig {
+                enabled: true,
+                registered: 100_000,
+                edges: 1,
+                churn_rate: 0.0,
+                wave_amplitude: 0.0,
+                ..PopulationConfig::off()
+            },
+        ),
+        (
+            "1M registered, 4 edges".into(),
+            PopulationConfig {
+                enabled: true,
+                registered: 1_000_000,
+                edges: 4,
+                churn_rate: 0.2,
+                churn_period: 2,
+                wave_amplitude: 0.3,
+                wave_period: 6,
+            },
+        ),
+        (
+            "10M registered, 8 edges, churn + wave".into(),
+            PopulationConfig {
+                enabled: true,
+                registered: 10_000_000,
+                edges: 8,
+                churn_rate: 0.4,
+                churn_period: 2,
+                wave_amplitude: 0.6,
+                wave_period: 4,
             },
         ),
     ]
@@ -453,6 +502,30 @@ mod tests {
             rows[4].1.policy,
             StalenessPolicy::Polynomial { .. }
         ));
+    }
+
+    #[test]
+    fn scale_ladder_escalates_from_enumerable() {
+        let rows = scale_ladder();
+        assert_eq!(rows.len(), 4);
+        assert!(!rows[0].1.enabled, "rung 0 is the enumerable reference");
+        for (_, p) in &rows[1..] {
+            assert!(p.enabled);
+            p.validate().unwrap();
+        }
+        // fleets and edge counts grow down the ladder
+        assert_eq!(rows[1].1.registered, 100_000);
+        assert_eq!(rows[1].1.edges, 1);
+        assert_eq!(rows[2].1.registered, 1_000_000);
+        assert_eq!(rows[2].1.edges, 4);
+        assert_eq!(rows[3].1.registered, 10_000_000);
+        assert_eq!(rows[3].1.edges, 8);
+        // the top rung runs both churn and the diurnal wave
+        assert!(rows[3].1.churn_rate > 0.0);
+        assert!(rows[3].1.wave_amplitude > 0.0);
+        // ...while the flat-root rung isolates the lazy-fleet change
+        assert_eq!(rows[1].1.churn_rate, 0.0);
+        assert_eq!(rows[1].1.wave_amplitude, 0.0);
     }
 
     #[test]

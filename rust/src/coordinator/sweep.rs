@@ -54,6 +54,7 @@ use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::chaos::ChaosConfig;
 use crate::fl::cohort::CohortConfig;
+use crate::fl::population::PopulationConfig;
 use crate::fl::round::RoundEngine;
 use crate::metrics::stats::Timer;
 use crate::metrics::sweep as summaries;
@@ -206,7 +207,8 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
          async={};aconc={};ak={};apol={};astale={};aring={};\
          integrity={};chaos={};cbf={:016x};ctr={:016x};cdup={:016x};\
          ccr={:016x};ccf={:016x};cret={};cbo={:016x};cqt={};cqr={};\
-         delta={}",
+         delta={};pop={};preg={};pedg={};pchr={:016x};pchp={};\
+         pwa={:016x};pwp={}",
         summaries::SWEEP_SCHEMA_VERSION,
         cfg.name,
         cfg.model_dir.display(),
@@ -257,6 +259,13 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
         cfg.chaos.quarantine_threshold,
         cfg.chaos.quarantine_rounds,
         cfg.delta.enabled,
+        cfg.population.enabled,
+        cfg.population.registered,
+        cfg.population.edges,
+        cfg.population.churn_rate.to_bits(),
+        cfg.population.churn_period,
+        cfg.population.wave_amplitude.to_bits(),
+        cfg.population.wave_period,
     )
 }
 
@@ -384,6 +393,47 @@ fn chaos_by_name(name: &str) -> Result<ChaosConfig> {
         },
         other => anyhow::bail!(
             "unknown chaos scenario {other:?} (off | light | heavy)"
+        ),
+    })
+}
+
+/// Named fleet-scale scenario for the `sweep.population` axis. Any
+/// scenario other than `off` runs its cells in lazy population mode:
+/// `registered` replaces `fl.clients` as the fleet size, cohorts stream
+/// out of the registered space, and edge aggregators fold shards before
+/// one merged uplink per edge reaches the root.
+fn population_by_name(name: &str) -> Result<PopulationConfig> {
+    Ok(match name {
+        "off" => PopulationConfig::off(),
+        "city" => PopulationConfig {
+            enabled: true,
+            registered: 100_000,
+            edges: 2,
+            churn_rate: 0.2,
+            churn_period: 4,
+            wave_amplitude: 0.3,
+            wave_period: 8,
+        },
+        "nation" => PopulationConfig {
+            enabled: true,
+            registered: 1_000_000,
+            edges: 4,
+            churn_rate: 0.3,
+            churn_period: 2,
+            wave_amplitude: 0.5,
+            wave_period: 6,
+        },
+        "planet" => PopulationConfig {
+            enabled: true,
+            registered: 10_000_000,
+            edges: 8,
+            churn_rate: 0.4,
+            churn_period: 2,
+            wave_amplitude: 0.6,
+            wave_period: 4,
+        },
+        other => anyhow::bail!(
+            "unknown population scenario {other:?} (off | city | nation | planet)"
         ),
     })
 }
@@ -529,19 +579,33 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
             .collect::<Result<_>>()?,
     };
 
+    // fleet-scale axis: named population scenarios (`population_by_name`);
+    // any non-`off` entry runs the grid at that scenario's registered
+    // fleet size with lazy per-client state and two-tier edge aggregation
+    let populations: Vec<(String, PopulationConfig)> =
+        match axis_strs("sweep.population")? {
+            None => vec![(String::new(), base.population)],
+            Some(names) => names
+                .iter()
+                .map(|n| population_by_name(n).map(|p| (n.clone(), p)))
+                .collect::<Result<_>>()?,
+        };
+
     let mut spec = SweepSpec::new(&base.name, base.seed, &base.output_dir);
     let multi_axis = partitions.len() > 1
         || domains.len() > 1
         || cohorts.len() > 1
         || modes.len() > 1
         || chaoses.len() > 1
-        || deltas.len() > 1;
+        || deltas.len() > 1
+        || populations.len() > 1;
     for &partition in &partitions {
         for &domain in &domains {
             for (cohort_name, cohort) in &cohorts {
                 for mode in &modes {
                     for (chaos_name, chaos) in &chaoses {
                         for &delta in &deltas {
+                        for (pop_name, pop) in &populations {
                             let suffix = if multi_axis {
                                 let c = if cohort_name.is_empty() {
                                     String::new()
@@ -563,7 +627,12 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                 } else {
                                     ""
                                 };
-                                format!("_{partition}_d{domain}{c}{m}{x}{d}")
+                                let p = if pop_name.is_empty() {
+                                    String::new()
+                                } else {
+                                    format!("_{pop_name}")
+                                };
+                                format!("_{partition}_d{domain}{c}{m}{x}{d}{p}")
                             } else {
                                 String::new()
                             };
@@ -579,6 +648,7 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                 c.async_cfg.enabled = mode == "async";
                                 c.chaos = *chaos;
                                 c.delta.enabled = delta;
+                                c.population = *pop;
                                 spec.cells.push(c);
                             };
                             if formats.iter().any(|f| f.is_fp32()) {
@@ -607,6 +677,7 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                     }
                                 }
                             }
+                        }
                         }
                     }
                 }
@@ -886,6 +957,111 @@ pub fn smoke_delta(seed: u64) -> Result<SweepSpec> {
     spec.finalize()
 }
 
+/// The scale CI smoke tier (`--profile smoke-scale`): five `native:tiny`
+/// cells running the lazy-population stack end to end over a registered
+/// fleet of 10^6 clients. Nothing materializes the fleet — per-client
+/// state derives from `(seed, cid)` on demand — so the profile's peak
+/// memory is O(active cohort), which the CI scale leg asserts with an RSS
+/// ceiling. Cells cover the single-edge bit-exact path, the multi-edge
+/// merged uplink, device-class cohort skew, the integrity+delta edge hop,
+/// and fault injection on top; churn and wave knobs are aggressive enough
+/// that the rejection counters are structurally nonzero within the
+/// four-round horizon (the CI grep gate keys off them). Every cell pins
+/// `workers = 1`; the edge fold is calling-thread sequential by
+/// construction, so summaries are byte-identical across `--workers`
+/// counts — the three-way `cmp` the CI scale-determinism leg gates on.
+pub fn smoke_scale(seed: u64) -> Result<SweepSpec> {
+    let mut base =
+        ExperimentConfig::default_with("smoke_scale", Path::new("native:tiny"));
+    base.rounds = 4;
+    base.num_clients = 8; // ignored: population mode sizes the fleet below
+    base.clients_per_round = 8;
+    base.local_steps = 1;
+    base.lr = 0.2;
+    base.eval_every = 2;
+    base.eval_batches = 2;
+    base.workers = 1;
+    base.output_dir = PathBuf::from("results/sweep_smoke_scale");
+    base.omc = OmcConfig {
+        format: "S1E4M14".parse()?,
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+        integrity: false,
+    };
+    base.population = PopulationConfig {
+        enabled: true,
+        registered: 1_000_000,
+        edges: 4,
+        churn_rate: 0.4,
+        churn_period: 1,
+        wave_amplitude: 0.6,
+        wave_period: 4,
+    };
+
+    let mut spec = SweepSpec::new("sweep_smoke_scale", seed, &base.output_dir);
+    let stress = CohortConfig {
+        dropout_prob: 0.1,
+        straggler_mean_s: 2.0,
+        deadline_s: 4.0,
+        weight_by_examples: true,
+    };
+    // (label, edges, cohort, integrity, delta, chaos)
+    let cells: Vec<(&str, usize, CohortConfig, bool, bool, ChaosConfig)> = vec![
+        (
+            "edges1_ideal",
+            1,
+            CohortConfig::ideal(),
+            false,
+            false,
+            ChaosConfig::default(),
+        ),
+        (
+            "edges4",
+            4,
+            CohortConfig::ideal(),
+            false,
+            false,
+            ChaosConfig::default(),
+        ),
+        (
+            "edges4_classes_cohort",
+            4,
+            stress,
+            false,
+            false,
+            ChaosConfig::default(),
+        ),
+        (
+            "edges4_integrity_delta",
+            4,
+            CohortConfig::ideal(),
+            true,
+            true,
+            ChaosConfig::default(),
+        ),
+        (
+            "edges4_chaos",
+            4,
+            CohortConfig::ideal(),
+            true,
+            false,
+            chaos_by_name("light")?,
+        ),
+    ];
+    for (label, edges, cohort, integrity, delta, chaos) in cells {
+        let mut c = base.clone();
+        c.name = label.to_string();
+        c.population.edges = edges;
+        c.cohort = cohort;
+        c.omc.integrity = integrity || !chaos.is_off() || delta;
+        c.delta.enabled = delta;
+        c.chaos = chaos;
+        spec.cells.push(c);
+    }
+    spec.finalize()
+}
+
 // ---- execution -----------------------------------------------------------
 
 type CellRun = (Json, RunSummary, f64);
@@ -914,6 +1090,13 @@ fn run_cell(
             rec.commits_csv(),
         )
         .with_context(|| format!("writing {stem}_commits.csv"))?;
+    }
+    if rec.is_population() {
+        std::fs::write(
+            cells_dir.join(format!("{stem}_population.csv")),
+            rec.populations_csv(),
+        )
+        .with_context(|| format!("writing {stem}_population.csv"))?;
     }
     std::fs::write(cells_dir.join(format!("{stem}.json")), cell.to_string())
         .with_context(|| format!("writing {stem}.json"))?;
@@ -1734,6 +1917,120 @@ mod tests {
         }
         for c in &sync {
             assert!(c.name.ends_with("_sync"), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn population_axis_expands_named_scenarios() {
+        let toml_text =
+            format!("{SWEEP_TOML}\npopulation = [\"off\", \"nation\"]\n");
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 2 population scenarios × 5 cells
+        assert_eq!(spec.cells.len(), 10);
+        assert!(spec.cells[0].name.ends_with("_off"));
+        assert!(!spec.cells[0].population.enabled);
+        assert!(spec.cells[1].name.ends_with("_nation"));
+        assert!(spec.cells[1].population.enabled);
+        assert_eq!(spec.cells[1].population.registered, 1_000_000);
+        assert_eq!(spec.cells[1].population.edges, 4);
+        spec.validate().unwrap();
+        // unknown scenario names are rejected
+        let bad = format!("{SWEEP_TOML}\npopulation = [\"galaxy\"]\n");
+        assert!(from_table(&toml::parse(&bad).unwrap()).is_err());
+        // single-scenario grids keep the unsuffixed labels and stay off
+        let plain = from_table(&toml::parse(SWEEP_TOML).unwrap()).unwrap();
+        assert_eq!(plain.cells[0].name, "fp32_baseline");
+        assert!(plain.cells.iter().all(|c| !c.population.enabled));
+    }
+
+    #[test]
+    fn smoke_scale_profile_covers_the_population_matrix() {
+        let spec = smoke_scale(42).unwrap();
+        assert_eq!(spec.name, "sweep_smoke_scale");
+        assert_eq!(spec.cells.len(), 5);
+        for c in &spec.cells {
+            assert!(c.rounds <= 8, "smoke must stay CI-fast");
+            assert_eq!(c.model_dir.to_str(), Some("native:tiny"));
+            assert_eq!(c.workers, 1, "{}: edge fold order must be pinned", c.name);
+            assert!(c.population.enabled, "{}", c.name);
+            assert_eq!(c.population.registered, 1_000_000, "{}", c.name);
+            // aggressive scenario knobs keep the CI rejection greps alive
+            assert!(c.population.churn_rate > 0.0);
+            assert!(c.population.wave_amplitude > 0.0);
+            c.validate().unwrap();
+        }
+        // one single-edge cell (bit-exact vs flat), the rest multi-edge
+        assert_eq!(
+            spec.cells.iter().filter(|c| c.population.edges == 1).count(),
+            1
+        );
+        assert!(spec.cells.iter().any(|c| c.population.edges > 1));
+        // one cell exercises device-class skew through a lossy cohort
+        assert!(spec.cells.iter().any(|c| !c.cohort.is_ideal()));
+        // one cell runs the integrity+delta edge hop
+        assert!(spec
+            .cells
+            .iter()
+            .any(|c| c.delta.enabled && c.omc.integrity));
+        // one cell layers fault injection on the edge topology
+        let stormy: Vec<_> =
+            spec.cells.iter().filter(|c| !c.chaos.is_off()).collect();
+        assert_eq!(stormy.len(), 1);
+        assert!(stormy[0].omc.integrity);
+        // determinism of the expansion itself
+        let again = smoke_scale(42).unwrap();
+        let names: Vec<_> = spec.cells.iter().map(|c| &c.name).collect();
+        assert_eq!(
+            names,
+            again.cells.iter().map(|c| &c.name).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fingerprint_covers_population_knobs() {
+        let spec = smoke_scale(1).unwrap();
+        let cell = &spec.cells[1]; // edges4
+        let base = fingerprint_hex(cell);
+        let mut c = cell.clone();
+        c.population.enabled = false;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.registered *= 10;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.edges += 1;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.churn_rate += 0.01;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.churn_period += 1;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.wave_amplitude += 0.01;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = cell.clone();
+        c.population.wave_period += 1;
+        assert_ne!(base, fingerprint_hex(&c));
+    }
+
+    #[test]
+    fn example_scale_sweep_config_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/sweep_scale.toml");
+        let spec = from_toml_file(&path).unwrap();
+        // 2 population scenarios × 1 format = 2 cells (no FP32 baseline)
+        assert_eq!(spec.cells.len(), 2);
+        let on: Vec<_> = spec
+            .cells
+            .iter()
+            .filter(|c| c.population.enabled)
+            .collect();
+        assert_eq!(on.len(), 1);
+        assert!(on[0].name.ends_with("_nation"), "{}", on[0].name);
+        assert_eq!(on[0].population.registered, 1_000_000);
+        for c in &spec.cells {
+            c.validate().unwrap();
         }
     }
 }

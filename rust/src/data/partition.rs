@@ -35,10 +35,37 @@ impl std::fmt::Display for Partition {
     }
 }
 
+/// Lazy backing store: O(num_speakers) state from which any client's
+/// shard is recomputed on demand — the population-scale path where
+/// materializing `registered` shard vectors is not an option.
+#[derive(Clone, Debug)]
+enum Repr {
+    /// `speakers_per_client` is fully materialized (the classic path)
+    Dense,
+    /// every client owns every speaker; one shared shard vector
+    LazyIid { num_clients: usize, all: Vec<usize> },
+    /// the shuffled speaker order — client `c` owns `order[c]`,
+    /// `order[c + num_clients]`, … (the exact strided assignment the
+    /// dense builder produces), falling back to `c % num_speakers` when
+    /// the stride gives it nothing
+    LazyBySpeaker {
+        num_clients: usize,
+        order: Vec<usize>,
+    },
+}
+
 /// The speaker sets assigned to each client.
+///
+/// Dense ([`build`](Self::build)) and lazy ([`lazy`](Self::lazy)) modes
+/// are bit-identical for every population both can represent — the
+/// property tests in this module pin that. Engines read shards through
+/// [`speakers_of`](Self::speakers_of) / [`num_examples`](Self::num_examples),
+/// which work in both modes; [`speakers`](Self::speakers) stays for the
+/// dense-only callers.
 #[derive(Clone, Debug)]
 pub struct ClientAssignment {
     pub speakers_per_client: Vec<Vec<usize>>,
+    repr: Repr,
 }
 
 impl ClientAssignment {
@@ -58,13 +85,11 @@ impl ClientAssignment {
             }
             Partition::BySpeaker => {
                 // disjoint speaker shards, sizes differing by at most 1
-                let mut ids: Vec<usize> = (0..num_speakers).collect();
-                let mut rng =
-                    Xoshiro256pp::new(hash_seed(&[seed, 0x5411_AD]));
-                rng.shuffle(&mut ids);
                 let mut shards: Vec<Vec<usize>> =
                     (0..num_clients).map(|_| Vec::new()).collect();
-                for (i, spk) in ids.into_iter().enumerate() {
+                for (i, spk) in
+                    shuffled_order(num_speakers, seed).into_iter().enumerate()
+                {
                     shards[i % num_clients].push(spk);
                 }
                 // a client must own at least one speaker: when there are
@@ -80,16 +105,112 @@ impl ClientAssignment {
         };
         Self {
             speakers_per_client,
+            repr: Repr::Dense,
+        }
+    }
+
+    /// O(num_speakers)-memory assignment over `num_clients` clients —
+    /// the same shards [`build`](Self::build) would produce, derived on
+    /// demand instead of stored. `num_clients` can be 10^7; only the
+    /// shuffled speaker order (tiny) is kept.
+    pub fn lazy(
+        partition: Partition,
+        num_clients: usize,
+        num_speakers: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(num_clients > 0 && num_speakers > 0);
+        let repr = match partition {
+            Partition::Iid => Repr::LazyIid {
+                num_clients,
+                all: (0..num_speakers).collect(),
+            },
+            Partition::BySpeaker => Repr::LazyBySpeaker {
+                num_clients,
+                order: shuffled_order(num_speakers, seed),
+            },
+        };
+        Self {
+            speakers_per_client: Vec::new(),
+            repr,
         }
     }
 
     pub fn num_clients(&self) -> usize {
-        self.speakers_per_client.len()
+        match &self.repr {
+            Repr::Dense => self.speakers_per_client.len(),
+            Repr::LazyIid { num_clients, .. }
+            | Repr::LazyBySpeaker { num_clients, .. } => *num_clients,
+        }
     }
 
+    /// Dense-only borrow of a client's shard (panics in lazy mode —
+    /// engines use [`speakers_of`](Self::speakers_of)).
     pub fn speakers(&self, client: usize) -> &[usize] {
-        &self.speakers_per_client[client]
+        match &self.repr {
+            Repr::Dense => &self.speakers_per_client[client],
+            Repr::LazyIid { all, .. } => all,
+            Repr::LazyBySpeaker { .. } => panic!(
+                "speakers() cannot borrow from a lazy by-speaker \
+                 assignment; use speakers_of()"
+            ),
+        }
     }
+
+    /// A client's shard in either mode. Dense and lazy-IID borrow;
+    /// lazy-by-speaker recomputes the strided pick (O(own shard), which
+    /// is O(num_speakers / num_clients + 1) — a handful of indices).
+    pub fn speakers_of(&self, client: usize) -> std::borrow::Cow<'_, [usize]> {
+        match &self.repr {
+            Repr::Dense => {
+                std::borrow::Cow::Borrowed(&self.speakers_per_client[client])
+            }
+            Repr::LazyIid { all, .. } => std::borrow::Cow::Borrowed(all),
+            Repr::LazyBySpeaker { num_clients, order } => {
+                let mut own: Vec<usize> = order
+                    .iter()
+                    .copied()
+                    .skip(client)
+                    .step_by(*num_clients)
+                    .collect();
+                if own.is_empty() {
+                    own.push(client % order.len());
+                }
+                std::borrow::Cow::Owned(own)
+            }
+        }
+    }
+
+    /// Number of examples (speakers) client `client` owns — O(1) in every
+    /// mode, the weighted-FedAvg input at population scale.
+    pub fn num_examples(&self, client: usize) -> usize {
+        match &self.repr {
+            Repr::Dense => self.speakers_per_client[client].len(),
+            Repr::LazyIid { all, .. } => all.len(),
+            Repr::LazyBySpeaker { num_clients, order } => {
+                let num_speakers = order.len();
+                if client < num_speakers {
+                    // count of i in [0, num_speakers) with
+                    // i % num_clients == client
+                    (num_speakers - 1 - client) / num_clients + 1
+                } else {
+                    // stride assigns nothing; the wraparound fallback
+                    // always owns exactly one speaker
+                    1
+                }
+            }
+        }
+    }
+}
+
+/// The by-speaker shuffle both modes share — keyed only by `(seed,
+/// 0x5411_AD)`, so dense and lazy assignments of the same parameters see
+/// the same speaker order.
+fn shuffled_order(num_speakers: usize, seed: u64) -> Vec<usize> {
+    let mut ids: Vec<usize> = (0..num_speakers).collect();
+    let mut rng = Xoshiro256pp::new(hash_seed(&[seed, 0x5411_AD]));
+    rng.shuffle(&mut ids);
+    ids
 }
 
 #[cfg(test)]
@@ -141,6 +262,61 @@ mod tests {
         let c = ClientAssignment::build(Partition::BySpeaker, 8, 32, 43);
         assert_eq!(a.speakers_per_client, b.speakers_per_client);
         assert_ne!(a.speakers_per_client, c.speakers_per_client);
+    }
+
+    /// Property: for every population the dense path can represent, the
+    /// lazy derivation returns bit-identical shards — the contract that
+    /// lets population-mode cells claim the same semantics as the
+    /// materialized sweep cells (`docs/SCALE.md`).
+    #[test]
+    fn lazy_matches_dense_bit_identically() {
+        for partition in [Partition::Iid, Partition::BySpeaker] {
+            for &(nc, ns) in
+                &[(1, 1), (3, 10), (8, 32), (10, 4), (64, 64), (97, 13)]
+            {
+                for seed in [0u64, 1, 42, 0xDEAD] {
+                    let dense =
+                        ClientAssignment::build(partition, nc, ns, seed);
+                    let lazy =
+                        ClientAssignment::lazy(partition, nc, ns, seed);
+                    assert_eq!(lazy.num_clients(), dense.num_clients());
+                    for c in 0..nc {
+                        assert_eq!(
+                            lazy.speakers_of(c).as_ref(),
+                            dense.speakers(c),
+                            "{partition:?} nc={nc} ns={ns} seed={seed} c={c}"
+                        );
+                        assert_eq!(
+                            lazy.num_examples(c),
+                            dense.speakers(c).len(),
+                            "{partition:?} nc={nc} ns={ns} seed={seed} c={c}"
+                        );
+                        assert_eq!(
+                            dense.speakers_of(c).as_ref(),
+                            dense.speakers(c)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_scales_to_millions_without_materializing() {
+        // 10^6 clients over 64 speakers: O(speakers) state, O(1) queries
+        let a = ClientAssignment::lazy(Partition::BySpeaker, 1_000_000, 64, 7);
+        assert_eq!(a.num_clients(), 1_000_000);
+        assert!(a.speakers_per_client.is_empty(), "nothing materialized");
+        // the first 64 clients own exactly the shuffled speakers...
+        let mut owned: Vec<usize> =
+            (0..64).flat_map(|c| a.speakers_of(c).into_owned()).collect();
+        owned.sort_unstable();
+        assert_eq!(owned, (0..64).collect::<Vec<_>>());
+        // ...and everyone else wraps around to a single speaker
+        for c in [64usize, 1000, 999_999] {
+            assert_eq!(a.speakers_of(c).as_ref(), &[c % 64]);
+            assert_eq!(a.num_examples(c), 1);
+        }
     }
 
     #[test]

@@ -69,6 +69,7 @@ use crate::data::synth::Domain;
 use crate::fl::chaos::{self, ChaosClientReport, ChaosConfig, ClientChaos};
 use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
 use crate::fl::cohort::{self, ClientFate, CohortConfig};
+use crate::fl::population::{self, PopulationConfig};
 use crate::fl::round::{downlink_nonce, uplink_nonce, RoundScratch};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::{Server, StreamingAggregator};
@@ -414,6 +415,7 @@ pub fn plan_async(
     chaos_cfg: &ChaosConfig,
     sampler: &Sampler,
     assignment: &ClientAssignment,
+    pop_cfg: &PopulationConfig,
     seed: u64,
     commits: usize,
 ) -> Result<AsyncPlan> {
@@ -438,12 +440,13 @@ pub fn plan_async(
          dispatches: &mut Vec<PlannedDispatch>,
          heap: &mut BinaryHeap<Event>| {
             let (wave, cid) = stream.next();
-            let p = cohort::plan_cohort(
+            let p = cohort::plan_cohort_with(
                 &async_cohort,
                 &[cid],
                 assignment,
                 seed,
                 wave,
+                Some(pop_cfg),
             )
             .pop()
             .expect("one plan per client");
@@ -456,7 +459,18 @@ pub fn plan_async(
             };
             let mut ch_plan = None;
             if !chaos_cfg.is_off() && outcome != DispatchOutcome::Dropped {
-                let ch = chaos::plan_client(chaos_cfg, seed, wave, cid);
+                // device classes scale fault rates exactly like the sync
+                // engine (thresholds move, variate streams don't)
+                let ccfg = if pop_cfg.enabled {
+                    chaos_cfg.scaled(
+                        population::DEVICE_CLASSES
+                            [population::class_of(seed, cid)]
+                        .fault_mult,
+                    )
+                } else {
+                    *chaos_cfg
+                };
+                let ch = chaos::plan_client(&ccfg, seed, wave, cid);
                 if ch.crashed {
                     // died after the downlink: the server learns at the
                     // would-be report time
@@ -638,6 +652,11 @@ pub struct AsyncContext<'a> {
     pub delta: bool,
     /// resolved async knobs
     pub acfg: AsyncConfig,
+    /// population-scale scenario (`fl::population`). The async engine
+    /// consumes the lazy assignment, availability-aware sampler, and
+    /// device-class latency/fault scaling; the two-tier edge topology is
+    /// sync-only (`docs/SCALE.md`)
+    pub population: PopulationConfig,
     /// experiment seed
     pub seed: u64,
     /// thread-pool width for codec work and sharded client execution
@@ -736,6 +755,7 @@ impl AsyncRoundEngine {
             &ctx.chaos,
             ctx.sampler,
             ctx.assignment,
+            &ctx.population,
             ctx.seed,
             commits,
         )?;
@@ -930,10 +950,12 @@ impl AsyncRoundEngine {
             if delta_framed(d) {
                 tc.delta_base = Some(d.start_version as u64);
             }
+            // speakers_of works in dense AND lazy (population) modes
+            let shard = ctx.assignment.speakers_of(d.cid);
             client::run_client_round(
                 ctx.model,
                 ctx.domain,
-                ctx.assignment.speakers(d.cid),
+                shard.as_ref(),
                 &downlinks[t],
                 &masks[t],
                 tc,
@@ -1322,8 +1344,17 @@ mod tests {
     ) -> AsyncPlan {
         let a = assignment(16);
         let sampler = Sampler::new(SamplerKind::Uniform, 16, 4, 9);
-        plan_async(&resolved(acfg), &cohort, &chaos, &sampler, &a, seed, commits)
-            .unwrap()
+        plan_async(
+            &resolved(acfg),
+            &cohort,
+            &chaos,
+            &sampler,
+            &a,
+            &PopulationConfig::off(),
+            seed,
+            commits,
+        )
+        .unwrap()
     }
 
     fn enabled() -> AsyncConfig {

@@ -127,6 +127,30 @@ impl ChaosConfig {
         );
         Ok(())
     }
+
+    /// A copy with the fault/crash probabilities scaled by a device-class
+    /// multiplier (`fl::population`), clamped so every scaled value still
+    /// validates. Retry/backoff/quarantine knobs are untouched, and the
+    /// per-client draw count never changes — scaling moves thresholds,
+    /// not streams, so A/B comparisons against the unscaled config see
+    /// identical RNG sequences.
+    pub fn scaled(&self, fault_mult: f64) -> Self {
+        let clamp = |p: f64| (p * fault_mult).min(0.999_999);
+        let mut out = *self;
+        out.bitflip_prob = clamp(self.bitflip_prob);
+        out.truncate_prob = clamp(self.truncate_prob);
+        // the corrupt-attempt split must stay a sub-probability pair
+        let corrupt = out.bitflip_prob + out.truncate_prob;
+        if corrupt >= 1.0 {
+            let shrink = 0.999_999 / corrupt;
+            out.bitflip_prob *= shrink;
+            out.truncate_prob *= shrink;
+        }
+        out.duplicate_prob = clamp(self.duplicate_prob);
+        out.crash_prob = clamp(self.crash_prob);
+        out.commit_failure_prob = clamp(self.commit_failure_prob);
+        out
+    }
 }
 
 /// How one uplink attempt is corrupted.

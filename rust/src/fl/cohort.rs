@@ -131,6 +131,24 @@ pub fn plan_cohort(
     seed: u64,
     round: u64,
 ) -> Vec<ClientPlan> {
+    plan_cohort_with(cohort, participants, assignment, seed, round, None)
+}
+
+/// [`plan_cohort`] with an optional population scenario: each client's
+/// device class (lazily derived from `(seed, cid)`) scales its dropout
+/// probability and straggler latency. The class multipliers apply *after*
+/// the uniform draws are taken, so the per-client RNG stream is identical
+/// with and without a population — A/B comparisons at the same seed see
+/// the same variates, classes only move the thresholds.
+pub fn plan_cohort_with(
+    cohort: &CohortConfig,
+    participants: &[usize],
+    assignment: &ClientAssignment,
+    seed: u64,
+    round: u64,
+    population: Option<&super::population::PopulationConfig>,
+) -> Vec<ClientPlan> {
+    let classed = population.map(|p| p.enabled).unwrap_or(false);
     participants
         .iter()
         .map(|&cid| {
@@ -143,10 +161,20 @@ pub fn plan_cohort(
             // the same per-client draws
             let u_drop = rng.next_f64();
             let u_lat = rng.next_f64();
-            let dropped = u_drop < cohort.dropout_prob;
+            let (drop_mult, lat_mult) = if classed {
+                let class = &super::population::DEVICE_CLASSES
+                    [super::population::class_of(seed, cid)];
+                (class.dropout_mult, class.latency_mult)
+            } else {
+                (1.0, 1.0)
+            };
+            // scaled probability stays a probability; the draw is already
+            // taken so the clamp cannot desynchronize the stream
+            let drop_p = (cohort.dropout_prob * drop_mult).min(0.999_999);
+            let dropped = u_drop < drop_p;
             let latency_s = if cohort.straggler_mean_s > 0.0 {
                 // inverse-CDF exponential draw; u in [0,1) keeps ln finite
-                -(1.0 - u_lat).ln() * cohort.straggler_mean_s
+                -(1.0 - u_lat).ln() * cohort.straggler_mean_s * lat_mult
             } else {
                 0.0
             };
@@ -158,7 +186,7 @@ pub fn plan_cohort(
                 ClientFate::Completes
             };
             let weight = if cohort.weight_by_examples {
-                assignment.speakers(cid).len() as f64
+                assignment.num_examples(cid) as f64
             } else {
                 1.0
             };
@@ -328,6 +356,56 @@ mod tests {
             let p1 = plan_cohort(&with_drop, &ids, &a, 5, round);
             for (x, y) in p0.iter().zip(&p1) {
                 assert_eq!(x.latency_s, y.latency_s, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn class_multipliers_scale_thresholds_without_moving_the_stream() {
+        use crate::fl::population::{class_of, DEVICE_CLASSES};
+        let a = assignment(16);
+        let ids: Vec<usize> = (0..16).collect();
+        let cfg = CohortConfig {
+            dropout_prob: 0.2,
+            straggler_mean_s: 2.0,
+            deadline_s: 4.0,
+            ..CohortConfig::default()
+        };
+        let pop = crate::fl::population::PopulationConfig {
+            enabled: true,
+            registered: 16,
+            ..crate::fl::population::PopulationConfig::default()
+        };
+        for round in 0..50u64 {
+            let flat = plan_cohort(&cfg, &ids, &a, 5, round);
+            let classed =
+                plan_cohort_with(&cfg, &ids, &a, 5, round, Some(&pop));
+            for (x, y) in flat.iter().zip(&classed) {
+                // the underlying exponential draw is shared: the classed
+                // latency is exactly the flat one scaled by the class mult
+                let m = DEVICE_CLASSES[class_of(5, x.cid)].latency_mult;
+                assert!(
+                    (y.latency_s - x.latency_s * m).abs() < 1e-12,
+                    "round {round} cid {}",
+                    x.cid
+                );
+            }
+        }
+        // a disabled population must be byte-identical to the flat path
+        for round in 0..10u64 {
+            let flat = plan_cohort(&cfg, &ids, &a, 5, round);
+            let off = plan_cohort_with(
+                &cfg,
+                &ids,
+                &a,
+                5,
+                round,
+                Some(&crate::fl::population::PopulationConfig::off()),
+            );
+            for (x, y) in flat.iter().zip(&off) {
+                assert_eq!(x.fate, y.fate);
+                assert_eq!(x.latency_s, y.latency_s);
+                assert_eq!(x.weight, y.weight);
             }
         }
     }

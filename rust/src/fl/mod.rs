@@ -1,6 +1,7 @@
 //! Federated-learning substrate: server state + aggregation (reference and
 //! streaming paths), simulated clients, cohort failure scenarios, the
 //! deterministic fault-injection engine ([`chaos`]), client sampling,
+//! the lazy million-client population engine ([`population`]),
 //! synchronous round orchestration, and the buffered staleness-aware
 //! asynchronous engine ([`async_round`]).
 
@@ -8,6 +9,7 @@ pub mod async_round;
 pub mod chaos;
 pub mod client;
 pub mod cohort;
+pub mod population;
 pub mod round;
 pub mod sampler;
 pub mod server;

@@ -1,0 +1,934 @@
+//! **Population engine** — O(active)-memory simulation of 10^6–10^7
+//! registered clients (`docs/SCALE.md`).
+//!
+//! The sweep grid used to materialize per-client state (dataset shards,
+//! sampler index vectors), capping a cell at toy populations. This module
+//! derives everything lazily from `(seed, cid)` with the same
+//! [`hash_seed`] keying every other stochastic decision uses, so a
+//! million-client fleet costs exactly as much memory as the cohort that
+//! actually trains this round:
+//!
+//! - **Device classes** — a fixed four-rung ladder (flagship / mid /
+//!   budget / iot) assigned per client by a weighted draw from the
+//!   client's profile stream. Each class carries latency / dropout /
+//!   fault multipliers that scale the existing `cohort` and `chaos`
+//!   draws *after* the uniform variates are taken, so A/B stream
+//!   alignment survives (`docs/ROBUSTNESS.md`).
+//! - **Churn** — a `churn_rate` fraction of clients are churners that
+//!   duty-cycle over join/leave epochs of `churn_period` rounds: each
+//!   churner is registered for [`CHURN_DUTY`] out of every
+//!   [`CHURN_CYCLE`] epochs, phase-shifted per client.
+//! - **Diurnal waves** — availability dips follow a piecewise-linear
+//!   triangle wave over `wave_period` rounds, phase-shifted per device
+//!   class. A triangle (not a sine) keeps the whole model in exact
+//!   rational arithmetic: no `libm` call whose last bit could differ
+//!   across platforms ever gates a sampling decision.
+//! - **Rejection sampling** — [`sample_cohort`] draws candidate cids
+//!   uniformly from the registered range and rejects unavailable ones;
+//!   cost is O(k / availability), independent of the registered count.
+//!   Validation bounds availability away from zero, and a hard attempt
+//!   cap converts pathological configs into a typed error instead of a
+//!   hang.
+//! - **Two-tier topology** — [`encode_edge_frame`] / [`decode_edge_frame`]
+//!   carry an edge aggregator's weighted f64 sums, cast to f32, to the
+//!   root in the ordinary wire format (v2 integrity framing and XOR-delta
+//!   against the previous round's payload both supported). Shipping
+//!   *sums* rather than means makes the single-edge topology bit-exact
+//!   against flat aggregation: `f32(S)` survives the f32→f64→f32 round
+//!   trip unchanged.
+//!
+//! Everything here is a pure function of `(config, seed, round, cid)` —
+//! no state, no iteration order, no wall clock — so the byte-identical
+//! summary contract holds at any worker count.
+
+use crate::fl::sampler::SamplerError;
+use crate::fl::server::StreamingAggregator;
+use crate::omc::codec::{self, WireWriter};
+use crate::omc::delta::{xor_decode_into, xor_encode_into};
+use crate::util::rng::{hash_seed, SplitMix64, Xoshiro256pp};
+
+/// Stream tag: cohort rejection sampling (per round).
+pub const SAMPLE_STREAM: u64 = 0x5CA1E5;
+/// Stream tag: per-client device profile (class, churn phase).
+pub const PROFILE_STREAM: u64 = 0xC1A55;
+/// Stream tag: per-(round, cid) diurnal availability gate.
+pub const WAVE_STREAM: u64 = 0x0D1_02_4A1;
+/// Stream tag: edge→root frame nonces.
+pub const EDGE_NONCE_STREAM: u64 = 0xED6E;
+
+/// Churner duty cycle: active [`CHURN_DUTY`] of every [`CHURN_CYCLE`]
+/// epochs (an epoch is `churn_period` rounds).
+pub const CHURN_CYCLE: u64 = 4;
+/// See [`CHURN_CYCLE`].
+pub const CHURN_DUTY: u64 = 2;
+
+/// Rejection-sampling attempt budget per requested client. With
+/// availability bounded below by `(1 - wave_amplitude) * (1 - churn_rate)`
+/// (validation keeps both factors positive) the expected attempt count is
+/// a small constant; the cap exists so a hostile config fails with a
+/// typed error rather than spinning.
+pub const MAX_ATTEMPTS_PER_SLOT: u64 = 64;
+
+/// One rung of the device-class ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceClass {
+    /// canonical name (stable: used in summaries and docs)
+    pub name: &'static str,
+    /// population share (the four shares sum to exactly 1.0)
+    pub share: f64,
+    /// scales the straggler latency draw (flagships finish faster)
+    pub latency_mult: f64,
+    /// scales the cohort dropout probability
+    pub dropout_mult: f64,
+    /// scales the chaos fault/crash probabilities
+    pub fault_mult: f64,
+    /// diurnal phase offset in wave periods (classes peak at different
+    /// times of day)
+    pub wave_phase: f64,
+}
+
+/// The fixed four-rung ladder. Constant by design: per-class knobs in the
+/// config would explode the canonical fingerprint, and the scenario axis
+/// we care about (how *much* heterogeneity) is already spanned by
+/// `wave_amplitude` / `churn_rate` / the cohort and chaos tables.
+pub const DEVICE_CLASSES: [DeviceClass; 4] = [
+    DeviceClass {
+        name: "flagship",
+        share: 0.15,
+        latency_mult: 0.6,
+        dropout_mult: 0.5,
+        fault_mult: 0.5,
+        wave_phase: 0.0,
+    },
+    DeviceClass {
+        name: "mid",
+        share: 0.35,
+        latency_mult: 1.0,
+        dropout_mult: 1.0,
+        fault_mult: 1.0,
+        wave_phase: 0.25,
+    },
+    DeviceClass {
+        name: "budget",
+        share: 0.35,
+        latency_mult: 1.6,
+        dropout_mult: 1.5,
+        fault_mult: 1.5,
+        wave_phase: 0.5,
+    },
+    DeviceClass {
+        name: "iot",
+        share: 0.15,
+        latency_mult: 2.5,
+        dropout_mult: 2.0,
+        fault_mult: 2.0,
+        wave_phase: 0.75,
+    },
+];
+
+/// Number of device classes (array lengths in stats/summaries).
+pub const NUM_CLASSES: usize = DEVICE_CLASSES.len();
+
+/// `[population]` table — the whole scenario fits in a `Copy` struct.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PopulationConfig {
+    /// master switch; when false every other knob must stay at default
+    pub enabled: bool,
+    /// registered fleet size (10^6–10^7 is the design target)
+    pub registered: usize,
+    /// edge aggregators between clients and the root (1 = flat)
+    pub edges: usize,
+    /// fraction of clients that duty-cycle (join/leave churners)
+    pub churn_rate: f64,
+    /// rounds per churn epoch
+    pub churn_period: u64,
+    /// diurnal dip depth in `[0, 1)` (0 = always fully available)
+    pub wave_amplitude: f64,
+    /// rounds per diurnal cycle
+    pub wave_period: u64,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            registered: 1_000_000,
+            edges: 1,
+            churn_rate: 0.0,
+            churn_period: 16,
+            wave_amplitude: 0.0,
+            wave_period: 24,
+        }
+    }
+}
+
+impl PopulationConfig {
+    /// The disabled default (classic materialized population).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.registered > 0,
+            "population.registered must be > 0"
+        );
+        anyhow::ensure!(self.edges >= 1, "population.edges must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.churn_rate),
+            "population.churn_rate must be in [0, 1): a full-churn fleet \
+             has rounds where nobody is registered"
+        );
+        anyhow::ensure!(
+            self.churn_period >= 1,
+            "population.churn_period must be >= 1 round"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.wave_amplitude),
+            "population.wave_amplitude must be in [0, 1): a full dip \
+             leaves troughs with zero availability"
+        );
+        anyhow::ensure!(
+            self.wave_period >= 1,
+            "population.wave_period must be >= 1 round"
+        );
+        Ok(())
+    }
+}
+
+/// Lazily derived per-client facts — everything downstream of `(seed,
+/// cid)`, nothing stored.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientProfile {
+    pub cid: usize,
+    /// index into [`DEVICE_CLASSES`]
+    pub class: usize,
+    /// whether this client duty-cycles (decided by `churn_rate`)
+    pub churner: bool,
+    /// phase offset in `[0, CHURN_CYCLE)` epochs
+    pub churn_phase: u64,
+}
+
+#[inline]
+fn profile_rng(seed: u64, cid: usize) -> Xoshiro256pp {
+    Xoshiro256pp::new(hash_seed(&[seed, PROFILE_STREAM, cid as u64]))
+}
+
+#[inline]
+fn pick_class(u: f64) -> usize {
+    let mut acc = 0.0;
+    for (i, c) in DEVICE_CLASSES.iter().enumerate() {
+        acc += c.share;
+        if u < acc {
+            return i;
+        }
+    }
+    NUM_CLASSES - 1
+}
+
+/// Device class of `cid` — the first draw of the profile stream, so it
+/// agrees with [`derive_profile`] by construction.
+#[inline]
+pub fn class_of(seed: u64, cid: usize) -> usize {
+    pick_class(profile_rng(seed, cid).next_f64())
+}
+
+/// Full lazy profile. Draw order is fixed (class, churn variate, churn
+/// phase) — extend only by appending draws, or every existing golden
+/// moves.
+pub fn derive_profile(
+    cfg: &PopulationConfig,
+    seed: u64,
+    cid: usize,
+) -> ClientProfile {
+    let mut rng = profile_rng(seed, cid);
+    let class = pick_class(rng.next_f64());
+    let u_churn = rng.next_f64();
+    let churn_phase = rng.next_below(CHURN_CYCLE);
+    ClientProfile {
+        cid,
+        class,
+        churner: u_churn < cfg.churn_rate,
+        churn_phase,
+    }
+}
+
+/// Whether a churner with `phase` is registered during `round`.
+#[inline]
+fn churn_active(cfg: &PopulationConfig, round: u64, phase: u64) -> bool {
+    let epoch = round / cfg.churn_period;
+    (epoch + phase) % CHURN_CYCLE < CHURN_DUTY
+}
+
+/// Diurnal availability of device class `class` at `round`: a triangle
+/// wave dipping by `wave_amplitude` once per `wave_period` rounds,
+/// phase-shifted per class. Exact rational arithmetic — no transcendental
+/// whose final bit could differ across libm builds.
+#[inline]
+pub fn wave_availability(
+    cfg: &PopulationConfig,
+    round: u64,
+    class: usize,
+) -> f64 {
+    if cfg.wave_amplitude <= 0.0 {
+        return 1.0;
+    }
+    let x = round as f64 / cfg.wave_period as f64
+        + DEVICE_CLASSES[class].wave_phase;
+    let frac = x - x.floor();
+    let tri = 1.0 - 2.0 * (frac - 0.5).abs();
+    1.0 - cfg.wave_amplitude * tri
+}
+
+#[inline]
+fn unit_from_hash(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Why a candidate was unavailable this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Availability {
+    Active,
+    /// churner in a leave epoch
+    Churned,
+    /// rejected by the diurnal wave gate
+    Waved,
+}
+
+/// Availability of `cid` at `round` — pure in `(cfg, seed, round, cid)`,
+/// independent of sampling order (the wave gate hashes its own stream
+/// rather than consuming the sampler's RNG).
+pub fn availability(
+    cfg: &PopulationConfig,
+    seed: u64,
+    round: u64,
+    cid: usize,
+) -> Availability {
+    let p = derive_profile(cfg, seed, cid);
+    if p.churner && !churn_active(cfg, round, p.churn_phase) {
+        return Availability::Churned;
+    }
+    let a = wave_availability(cfg, round, p.class);
+    if a < 1.0 {
+        let u = unit_from_hash(
+            SplitMix64::new(hash_seed(&[seed, WAVE_STREAM, round, cid as u64]))
+                .next_u64(),
+        );
+        if u >= a {
+            return Availability::Waved;
+        }
+    }
+    Availability::Active
+}
+
+/// Analytic expected active count at `round` — O(classes), no sampling.
+/// Churner phases are uniform, so the churn factor is the constant
+/// `1 - churn_rate * (1 - CHURN_DUTY/CHURN_CYCLE)`; the wave factor is
+/// the share-weighted per-class availability.
+pub fn active_estimate(cfg: &PopulationConfig, round: u64) -> f64 {
+    let churn_frac = 1.0
+        - cfg.churn_rate * (1.0 - CHURN_DUTY as f64 / CHURN_CYCLE as f64);
+    let wave: f64 = DEVICE_CLASSES
+        .iter()
+        .enumerate()
+        .map(|(i, c)| c.share * wave_availability(cfg, round, i))
+        .sum();
+    cfg.registered as f64 * churn_frac * wave
+}
+
+/// Rejection-sampling tallies for one round — the scenario counters the
+/// sweep summary surfaces (schema v5).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SampleStats {
+    /// candidate draws (accepts + all rejections)
+    pub attempts: u64,
+    /// candidate already in the cohort
+    pub duplicate_rejections: u64,
+    /// candidate churned out this epoch
+    pub churn_rejections: u64,
+    /// candidate gated by the diurnal wave
+    pub wave_rejections: u64,
+    /// analytic expected active count this round
+    pub active_estimate: f64,
+    /// accepted clients per device class
+    pub class_sampled: [u64; NUM_CLASSES],
+}
+
+/// Draw a `k`-client cohort from the registered fleet at `round` without
+/// enumerating it: candidates come uniformly from `0..registered`, and
+/// unavailable or duplicate draws are rejected. Deterministic in
+/// `(cfg, seed, round, k)`; memory and time are O(k), independent of
+/// `registered`. The returned ids are sorted ascending (same contract as
+/// the uniform sampler).
+pub fn sample_cohort(
+    cfg: &PopulationConfig,
+    seed: u64,
+    round: u64,
+    k: usize,
+) -> Result<(Vec<usize>, SampleStats), SamplerError> {
+    let mut stats = SampleStats {
+        active_estimate: active_estimate(cfg, round),
+        ..SampleStats::default()
+    };
+    if k == 0 {
+        return Ok((Vec::new(), stats));
+    }
+    let want = k.min(cfg.registered);
+    let cap = MAX_ATTEMPTS_PER_SLOT
+        .saturating_mul(want as u64)
+        .saturating_add(256);
+    let mut rng =
+        Xoshiro256pp::new(hash_seed(&[seed, SAMPLE_STREAM, round]));
+    let mut chosen: Vec<usize> = Vec::with_capacity(want);
+    let mut member = std::collections::HashSet::with_capacity(want * 2);
+    while chosen.len() < want {
+        if stats.attempts >= cap {
+            return Err(SamplerError::AvailabilityExhausted {
+                round,
+                wanted: want,
+                got: chosen.len(),
+                attempts: stats.attempts,
+            });
+        }
+        stats.attempts += 1;
+        let cid = rng.next_below(cfg.registered as u64) as usize;
+        if member.contains(&cid) {
+            stats.duplicate_rejections += 1;
+            continue;
+        }
+        match availability(cfg, seed, round, cid) {
+            Availability::Churned => stats.churn_rejections += 1,
+            Availability::Waved => stats.wave_rejections += 1,
+            Availability::Active => {
+                member.insert(cid);
+                chosen.push(cid);
+                stats.class_sampled[class_of(seed, cid)] += 1;
+            }
+        }
+    }
+    chosen.sort_unstable();
+    Ok((chosen, stats))
+}
+
+/// Edge→root transport tallies for one round.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeStats {
+    /// merged frames the edges uplinked to the root
+    pub frames: u64,
+    /// shipped bytes on the edge→root hop (headers included)
+    pub up_bytes: u64,
+    /// bytes the XOR-delta stage saved vs verbatim edge frames
+    pub delta_saved: u64,
+}
+
+/// Everything the sweep summary records about one population-mode round
+/// (schema v5): the scenario counters plus the edge-hop transport.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PopulationRoundStats {
+    /// registered fleet size
+    pub registered: usize,
+    /// configured edge aggregators
+    pub edges: usize,
+    /// rejection-sampling tallies for this round's cohort
+    pub sample: SampleStats,
+    /// clients whose planned fate was `Completes`, per device class
+    pub class_completed: [u64; NUM_CLASSES],
+    /// edge→root transport tallies
+    pub edge: EdgeStats,
+}
+
+/// Edge→root frame nonce — keyed like every other nonce stream.
+#[inline]
+pub fn edge_nonce(seed: u64, round: u64, edge: usize) -> u64 {
+    hash_seed(&[seed, EDGE_NONCE_STREAM, round, edge as u64])
+}
+
+/// Shipped-frame tag: verbatim wire frame follows.
+const EDGE_TAG_VERBATIM: u8 = 0;
+/// Shipped-frame tag: XOR-delta stream vs the previous round's verbatim
+/// payload follows.
+const EDGE_TAG_DELTA: u8 = 1;
+/// `tag(1) + weight(f64) + clients(u64)` — participation travels beside
+/// the frame, not inside it, so the frame body stays pure sums and the
+/// single-edge bit-exactness argument stays one line.
+const EDGE_HEADER_LEN: usize = 1 + 8 + 8;
+
+/// One encoded edge→root uplink plus its accounting.
+#[derive(Clone, Debug)]
+pub struct EdgeFrame {
+    /// header + (verbatim | delta) payload, ready for the wire
+    pub shipped: Vec<u8>,
+    /// the verbatim wire frame — the delta base for next round
+    pub verbatim: Vec<u8>,
+    /// bytes the delta stage saved vs shipping verbatim (0 on fallback)
+    pub delta_saved: u64,
+}
+
+/// Encode an edge aggregator's state for the root: the weighted f64 sums
+/// cast to f32 and written as raw wire variables (v2 integrity framing
+/// when `integrity`), with the edge's normalized weight and client count
+/// in a fixed header. When `prev` holds last round's verbatim payload of
+/// identical length, the frame is XOR-delta coded against it and the
+/// smaller encoding ships — the same pure-function fallback rule the
+/// client uplink uses (`docs/WIRE.md`).
+pub fn encode_edge_frame(
+    agg: &StreamingAggregator,
+    integrity: bool,
+    nonce: u64,
+    delta: bool,
+    prev: &[u8],
+) -> EdgeFrame {
+    let sums = agg.cast_sums();
+    let payload_guess: usize =
+        sums.iter().map(|v| v.len() * 4 + 16).sum::<usize>() + 32;
+    let mut w = if integrity {
+        WireWriter::with_integrity(payload_guess, nonce)
+    } else {
+        WireWriter::with_capacity(payload_guess)
+    };
+    for var in &sums {
+        w.raw(var);
+    }
+    let verbatim = w.finish();
+
+    let mut shipped = Vec::with_capacity(EDGE_HEADER_LEN + verbatim.len());
+    shipped.push(EDGE_TAG_VERBATIM);
+    shipped.extend_from_slice(&agg.total_weight().to_le_bytes());
+    shipped.extend_from_slice(&(agg.clients() as u64).to_le_bytes());
+
+    let mut delta_saved = 0u64;
+    if delta && prev.len() == verbatim.len() && !prev.is_empty() {
+        let mut xored = Vec::new();
+        let mut stream = Vec::new();
+        xor_encode_into(&verbatim, prev, &mut xored, &mut stream);
+        if stream.len() < verbatim.len() {
+            shipped[0] = EDGE_TAG_DELTA;
+            delta_saved = (verbatim.len() - stream.len()) as u64;
+            shipped.extend_from_slice(&stream);
+            return EdgeFrame {
+                shipped,
+                verbatim,
+                delta_saved,
+            };
+        }
+    }
+    shipped.extend_from_slice(&verbatim);
+    EdgeFrame {
+        shipped,
+        verbatim,
+        delta_saved,
+    }
+}
+
+/// Decode one shipped edge frame at the root and fold it into `root`.
+/// Verifies the frame (header/record CRCs when integrity framing is on,
+/// duplicate-nonce replay via `ledger`) and returns the verbatim payload
+/// so the caller can retain it as next round's delta base.
+pub fn decode_edge_frame(
+    shipped: &[u8],
+    prev: &[u8],
+    root: &mut StreamingAggregator,
+    ledger: &mut codec::NonceLedger,
+    expect_nonce: Option<u64>,
+) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(
+        shipped.len() >= EDGE_HEADER_LEN,
+        "edge frame shorter than its header: {} bytes",
+        shipped.len()
+    );
+    let tag = shipped[0];
+    let weight = f64::from_le_bytes(shipped[1..9].try_into().unwrap());
+    let clients = u64::from_le_bytes(shipped[9..17].try_into().unwrap());
+    let body = &shipped[EDGE_HEADER_LEN..];
+    let verbatim: Vec<u8> = match tag {
+        EDGE_TAG_VERBATIM => body.to_vec(),
+        EDGE_TAG_DELTA => {
+            let mut scratch = Vec::new();
+            let mut out = Vec::new();
+            xor_decode_into(body, prev, &mut scratch, &mut out)
+                .map_err(|e| anyhow::anyhow!("edge delta decode: {e:?}"))?;
+            out
+        }
+        other => anyhow::bail!("unknown edge frame tag {other}"),
+    };
+    let info = codec::verify_frame(&verbatim)
+        .map_err(|e| anyhow::anyhow!("edge frame rejected: {e:?}"))?;
+    if let Some(want) = expect_nonce {
+        anyhow::ensure!(
+            info.nonce == Some(want),
+            "edge frame nonce mismatch: got {:?}, want {want}",
+            info.nonce
+        );
+    }
+    ledger
+        .observe(info.nonce)
+        .map_err(|e| anyhow::anyhow!("edge frame replay: {e:?}"))?;
+    let mut vi = 0usize;
+    codec::for_each_var(&verbatim, |i, view| {
+        let codec::VarView::Raw { data, n } = view else {
+            anyhow::bail!("edge frame var {i} is not raw f32 sums");
+        };
+        root.absorb_cast_var(i, data, n)?;
+        vi += 1;
+        Ok(())
+    })
+    .map_err(|e| anyhow::anyhow!("edge frame decode: {e:?}"))?;
+    anyhow::ensure!(
+        vi == root.num_vars(),
+        "edge frame carried {vi} vars, root expects {}",
+        root.num_vars()
+    );
+    root.absorb_participation(weight, clients as usize);
+    Ok(verbatim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PopulationConfig {
+        PopulationConfig {
+            enabled: true,
+            registered: 1_000_000,
+            edges: 4,
+            churn_rate: 0.3,
+            churn_period: 2,
+            wave_amplitude: 0.5,
+            wave_period: 6,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_rejects_bad_knobs() {
+        PopulationConfig::off().validate().unwrap();
+        cfg().validate().unwrap();
+        let mut c = cfg();
+        c.churn_rate = 1.0;
+        assert!(c.validate().is_err());
+        c = cfg();
+        c.wave_amplitude = 1.0;
+        assert!(c.validate().is_err());
+        c = cfg();
+        c.edges = 0;
+        assert!(c.validate().is_err());
+        c = cfg();
+        c.registered = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn class_shares_sum_to_one() {
+        let total: f64 = DEVICE_CLASSES.iter().map(|c| c.share).sum();
+        assert!((total - 1.0).abs() < 1e-12, "shares sum to {total}");
+    }
+
+    #[test]
+    fn class_of_matches_profile_and_roughly_matches_shares() {
+        let c = cfg();
+        let mut counts = [0u64; NUM_CLASSES];
+        for cid in 0..20_000usize {
+            let k = class_of(42, cid);
+            assert_eq!(k, derive_profile(&c, 42, cid).class);
+            counts[k] += 1;
+        }
+        for (i, dc) in DEVICE_CLASSES.iter().enumerate() {
+            let frac = counts[i] as f64 / 20_000.0;
+            assert!(
+                (frac - dc.share).abs() < 0.02,
+                "{}: {frac} vs {}",
+                dc.name,
+                dc.share
+            );
+        }
+    }
+
+    #[test]
+    fn availability_is_pure_and_seed_sensitive() {
+        let c = cfg();
+        for cid in [0usize, 17, 999_999] {
+            for round in 0..12 {
+                assert_eq!(
+                    availability(&c, 7, round, cid),
+                    availability(&c, 7, round, cid)
+                );
+            }
+        }
+        // different seeds must disagree for at least some (round, cid)
+        let mut diff = false;
+        for cid in 0..200usize {
+            diff |= availability(&c, 1, 3, cid) != availability(&c, 2, 3, cid);
+        }
+        assert!(diff);
+    }
+
+    #[test]
+    fn churners_duty_cycle_and_residents_never_churn() {
+        let c = cfg();
+        let seed = 5u64;
+        // find one churner and one resident
+        let mut churner = None;
+        let mut resident = None;
+        for cid in 0..1000usize {
+            let p = derive_profile(&c, seed, cid);
+            if p.churner {
+                churner.get_or_insert(cid);
+            } else {
+                resident.get_or_insert(cid);
+            }
+        }
+        let (ch, re) = (churner.unwrap(), resident.unwrap());
+        let mut ever_churned = false;
+        let mut ever_active = false;
+        for round in 0..(CHURN_CYCLE * c.churn_period * 2) {
+            match availability(&c, seed, round, ch) {
+                Availability::Churned => ever_churned = true,
+                _ => ever_active = true,
+            }
+            assert_ne!(
+                availability(&c, seed, round, re),
+                Availability::Churned,
+                "resident churned at round {round}"
+            );
+        }
+        assert!(ever_churned && ever_active, "duty cycle must alternate");
+    }
+
+    #[test]
+    fn wave_is_triangle_between_amplitude_bounds() {
+        let c = cfg();
+        for class in 0..NUM_CLASSES {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for round in 0..(c.wave_period * 3) {
+                let a = wave_availability(&c, round, class);
+                assert!((0.0..=1.0).contains(&a));
+                lo = lo.min(a);
+                hi = hi.max(a);
+            }
+            assert!(hi > 1.0 - c.wave_amplitude * 0.5, "class {class} flat");
+            assert!(lo < 1.0 - c.wave_amplitude * 0.5, "class {class} flat");
+        }
+        // amplitude 0 short-circuits to full availability
+        let mut flat = c;
+        flat.wave_amplitude = 0.0;
+        assert_eq!(wave_availability(&flat, 3, 0), 1.0);
+    }
+
+    #[test]
+    fn sample_cohort_is_deterministic_sorted_distinct_and_counted() {
+        let c = cfg();
+        let (ids, stats) = sample_cohort(&c, 42, 3, 64).unwrap();
+        let (ids2, stats2) = sample_cohort(&c, 42, 3, 64).unwrap();
+        assert_eq!(ids, ids2);
+        assert_eq!(stats, stats2);
+        assert_eq!(ids.len(), 64);
+        let mut d = ids.clone();
+        d.dedup();
+        assert_eq!(d.len(), 64, "ids must be distinct");
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
+        assert!(ids.iter().all(|&i| i < c.registered));
+        assert_eq!(
+            stats.class_sampled.iter().sum::<u64>(),
+            64,
+            "every accept is classed"
+        );
+        assert!(stats.attempts >= 64);
+        assert_eq!(
+            stats.attempts,
+            64 + stats.duplicate_rejections
+                + stats.churn_rejections
+                + stats.wave_rejections
+        );
+        // the scenario knobs are on, so rejections must actually occur
+        assert!(stats.churn_rejections + stats.wave_rejections > 0);
+    }
+
+    #[test]
+    fn sample_cohort_only_returns_active_clients() {
+        let c = cfg();
+        let (ids, _) = sample_cohort(&c, 9, 5, 32).unwrap();
+        for cid in ids {
+            assert_eq!(availability(&c, 9, 5, cid), Availability::Active);
+        }
+    }
+
+    #[test]
+    fn sample_cohort_clamps_to_registered_and_handles_k_zero() {
+        let mut c = cfg();
+        c.registered = 8;
+        c.churn_rate = 0.0;
+        c.wave_amplitude = 0.0;
+        let (ids, _) = sample_cohort(&c, 1, 0, 100).unwrap();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        let (empty, stats) = sample_cohort(&c, 1, 0, 0).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(stats.attempts, 0);
+    }
+
+    #[test]
+    fn sample_cohort_exhaustion_is_a_typed_error() {
+        // tiny population with most of it churned away and a deep wave:
+        // asking for the whole fleet must fail with the typed error, not
+        // hang or panic
+        let c = PopulationConfig {
+            enabled: true,
+            registered: 4,
+            edges: 1,
+            churn_rate: 0.99,
+            churn_period: 1,
+            wave_amplitude: 0.99,
+            wave_period: 2,
+        };
+        let mut saw_exhausted = false;
+        for round in 0..8 {
+            if let Err(SamplerError::AvailabilityExhausted {
+                wanted, ..
+            }) = sample_cohort(&c, 3, round, 4)
+            {
+                assert_eq!(wanted, 4);
+                saw_exhausted = true;
+            }
+        }
+        assert!(saw_exhausted, "blackout config must exhaust at least once");
+    }
+
+    #[test]
+    fn active_estimate_tracks_empirical_availability() {
+        let c = cfg();
+        let seed = 11u64;
+        for round in [0u64, 3, 7] {
+            let est = active_estimate(&c, round) / c.registered as f64;
+            let mut active = 0usize;
+            let n = 20_000usize;
+            for cid in 0..n {
+                if availability(&c, seed, round, cid) == Availability::Active
+                {
+                    active += 1;
+                }
+            }
+            let emp = active as f64 / n as f64;
+            assert!(
+                (emp - est).abs() < 0.02,
+                "round {round}: empirical {emp} vs estimate {est}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_frame_round_trips_with_and_without_integrity() {
+        let var_lens = vec![33usize, 7];
+        for integrity in [false, true] {
+            let mut edge = StreamingAggregator::new(&var_lens);
+            let vals: Vec<Vec<f32>> = var_lens
+                .iter()
+                .map(|&n| (0..n).map(|i| i as f32 * 0.25 - 3.0).collect())
+                .collect();
+            for (i, v) in vals.iter().enumerate() {
+                edge.absorb_cast_var(i, bytemuckish(v), v.len()).unwrap();
+            }
+            edge.absorb_participation(0.5, 3);
+            let nonce = edge_nonce(7, 2, 0);
+            let f = encode_edge_frame(&edge, integrity, nonce, false, &[]);
+            assert_eq!(f.delta_saved, 0);
+            let mut root = StreamingAggregator::new(&var_lens);
+            let mut ledger = codec::NonceLedger::new(8);
+            let want = if integrity { Some(nonce) } else { None };
+            let verbatim = decode_edge_frame(
+                &f.shipped,
+                &[],
+                &mut root,
+                &mut ledger,
+                want,
+            )
+            .unwrap();
+            assert_eq!(verbatim, f.verbatim);
+            assert_eq!(root.clients(), 3);
+            assert!((root.total_weight() - 0.5).abs() < 1e-12);
+            assert_eq!(root.cast_sums(), vals);
+            if integrity {
+                // replaying the same nonce must be refused
+                let mut root2 = StreamingAggregator::new(&var_lens);
+                assert!(decode_edge_frame(
+                    &f.shipped,
+                    &[],
+                    &mut root2,
+                    &mut ledger,
+                    want
+                )
+                .is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn edge_frame_delta_saves_bytes_and_decodes_exactly() {
+        let var_lens = vec![256usize];
+        let mk = |bias: f32| {
+            let mut a = StreamingAggregator::new(&var_lens);
+            let v: Vec<f32> = (0..256).map(|i| i as f32 + bias).collect();
+            a.absorb_cast_var(0, bytemuckish(&v), v.len()).unwrap();
+            a.absorb_participation(1.0, 4);
+            a
+        };
+        let prev_frame =
+            encode_edge_frame(&mk(0.0), true, edge_nonce(1, 0, 0), false, &[]);
+        // next round: nearly identical sums → the XOR stream collapses
+        let cur = encode_edge_frame(
+            &mk(0.0),
+            true,
+            edge_nonce(1, 1, 0),
+            true,
+            &prev_frame.verbatim,
+        );
+        assert!(cur.delta_saved > 0, "identical payloads must delta-win");
+        assert!(cur.shipped.len() < cur.verbatim.len() + EDGE_HEADER_LEN);
+        let mut root = StreamingAggregator::new(&var_lens);
+        let mut ledger = codec::NonceLedger::new(8);
+        let verbatim = decode_edge_frame(
+            &cur.shipped,
+            &prev_frame.verbatim,
+            &mut root,
+            &mut ledger,
+            Some(edge_nonce(1, 1, 0)),
+        )
+        .unwrap();
+        assert_eq!(verbatim, cur.verbatim, "delta decode must be lossless");
+    }
+
+    #[test]
+    fn corrupted_edge_frame_is_rejected() {
+        let var_lens = vec![64usize];
+        let mut edge = StreamingAggregator::new(&var_lens);
+        let v: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        edge.absorb_cast_var(0, bytemuckish(&v), v.len()).unwrap();
+        edge.absorb_participation(1.0, 2);
+        let f = encode_edge_frame(&edge, true, edge_nonce(3, 0, 1), false, &[]);
+        let mut bad = f.shipped.clone();
+        let mid = EDGE_HEADER_LEN + bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let mut root = StreamingAggregator::new(&var_lens);
+        let mut ledger = codec::NonceLedger::new(8);
+        assert!(decode_edge_frame(
+            &bad,
+            &[],
+            &mut root,
+            &mut ledger,
+            Some(edge_nonce(3, 0, 1))
+        )
+        .is_err());
+        assert_eq!(root.clients(), 0, "rejected frame must not fold");
+    }
+
+    /// f32 slice → little-endian bytes (tests only; the wire writer does
+    /// this for real frames).
+    fn bytemuckish(v: &[f32]) -> &'static [u8] {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        Box::leak(out.into_boxed_slice())
+    }
+}

@@ -56,6 +56,9 @@ use crate::data::synth::Domain;
 use crate::fl::chaos::{self, ChaosClientReport, ChaosConfig};
 use crate::fl::client::{self, ClientResult, ClientScratch, ClientTrainConfig};
 use crate::fl::cohort::{self, ClientFate, ClientPlan, CohortConfig};
+use crate::fl::population::{
+    self, EdgeStats, PopulationConfig, PopulationRoundStats,
+};
 use crate::fl::sampler::Sampler;
 use crate::fl::server::{Server, StreamingAggregator};
 use crate::omc::codec::{self, NonceLedger};
@@ -106,6 +109,11 @@ pub struct RoundContext<'a> {
     /// engine never has ack lag: every uplink deltas against the packed
     /// payloads the server just committed to the wire.
     pub delta: bool,
+    /// population-scale scenario (`fl::population`); when enabled the
+    /// cohort is folded through per-edge aggregators whose merged frames
+    /// uplink to the root, device classes scale chaos fault rates, and
+    /// shards are read lazily (`ClientAssignment::speakers_of`)
+    pub population: PopulationConfig,
     /// clients currently serving a quarantine sentence, excluded from the
     /// sampled cohort this round (ascending; owned by the experiment's
     /// `fl::chaos::Quarantine` ladder)
@@ -125,6 +133,10 @@ pub struct RoundScratch {
     /// per-worker client codec scratches (index 0 serves the sequential
     /// path); capacity persists across rounds
     clients: Vec<ClientScratch>,
+    /// per-edge verbatim payload from the previous round — the XOR-delta
+    /// base for the edge→root hop in population mode (cleared at round 0:
+    /// engines are reused across sweep cells)
+    edge_prev: Vec<Vec<u8>>,
 }
 
 impl RoundScratch {
@@ -235,6 +247,9 @@ pub struct RoundOutcome {
     /// per-client chaos facts for the quarantine ladder (empty when chaos
     /// is off): corrupt-frame counts and whether a clean frame landed
     pub chaos_reports: Vec<ChaosClientReport>,
+    /// population-mode round facts (sampling tallies, per-class
+    /// completions, edge transport); `None` outside population mode
+    pub population: Option<PopulationRoundStats>,
 }
 
 /// Byte/loss tallies from executing (part of) a cohort.
@@ -649,6 +664,103 @@ fn shard_count(workers: usize, cohort: usize) -> usize {
     workers.max(1).min(cohort.max(1))
 }
 
+/// Two-tier population-mode execution: the cohort is split into
+/// contiguous per-edge chunks, each folded through its own
+/// [`StreamingAggregator`] by [`run_chunk`] (the same accept/reject logic
+/// as every other path), and each edge then uplinks ONE merged frame —
+/// weighted f64 sums cast to f32, re-widened losslessly at the root — over
+/// the integrity/delta edge→root hop (`fl::population`).
+///
+/// Clients run strictly in cohort order on the calling thread, so the
+/// result is worker-count independent by construction. With `edges == 1`
+/// the root model is bit-identical to [`run_cohort_sequential`] (one cast
+/// round-trip of each final sum, which f32→f64→f32 preserves); with more
+/// edges the root differs from flat aggregation only by f64
+/// re-association plus one f32 cast per edge (≤ 1e-6 per element — the
+/// documented shard-merge tolerance, pinned by tests below).
+///
+/// `edge_prev` holds each edge's previous-round verbatim payload (the
+/// XOR-delta base); it is cleared at round 0 because engines are reused
+/// across sweep cells.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cohort_edged<F>(
+    plans: &[ClientPlan],
+    norm_w: &[f64],
+    var_lens: &[usize],
+    dbase: Option<&DeltaBase<'_>>,
+    edges: usize,
+    integrity: bool,
+    delta: bool,
+    seed: u64,
+    round: u64,
+    edge_prev: &mut Vec<Vec<u8>>,
+    scratch: &mut ClientScratch,
+    mut job: F,
+) -> Result<(CohortStats, StreamingAggregator, EdgeStats)>
+where
+    F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
+{
+    let edges = edges.max(1);
+    if round == 0 {
+        edge_prev.clear();
+    }
+    if edge_prev.len() < edges {
+        edge_prev.resize_with(edges, Vec::new);
+    }
+    let mut stats = CohortStats::default();
+    let mut root = StreamingAggregator::new(var_lens);
+    let mut ledger = NonceLedger::new(edges.max(8) * 2);
+    let mut edge_stats = EdgeStats::default();
+    let n = plans.len();
+    let chunk = if n == 0 { 0 } else { (n + edges - 1) / edges };
+    for e in 0..edges {
+        let lo = (e * chunk).min(n);
+        let hi = ((e + 1) * chunk).min(n);
+        if lo >= hi {
+            continue;
+        }
+        let (s, edge_agg) = run_chunk(
+            lo,
+            &plans[lo..hi],
+            norm_w,
+            var_lens,
+            dbase,
+            scratch,
+            &mut job,
+        )?;
+        stats.absorb(&s);
+        if edge_agg.clients() == 0 {
+            // every client on this edge dropped/crashed/missed: nothing
+            // goes on the wire and the delta base stands for next round
+            continue;
+        }
+        let nonce = population::edge_nonce(seed, round, e);
+        let frame = population::encode_edge_frame(
+            &edge_agg,
+            integrity,
+            nonce,
+            delta,
+            &edge_prev[e],
+        );
+        edge_stats.frames += 1;
+        edge_stats.up_bytes += frame.shipped.len() as u64;
+        edge_stats.delta_saved += frame.delta_saved;
+        let verbatim = population::decode_edge_frame(
+            &frame.shipped,
+            &edge_prev[e],
+            &mut root,
+            &mut ledger,
+            integrity.then_some(nonce),
+        )
+        .with_context(|| format!("edge {e} round {round}"))?;
+        edge_prev[e] = verbatim;
+    }
+    // the root coexists with the (transient, one-at-a-time) edge
+    // accumulators already absorbed above
+    stats.accum_bytes += root.memory_bytes();
+    Ok((stats, root, edge_stats))
+}
+
 /// Run one federated round, updating `server` in place.
 pub fn run_round(
     ctx: &RoundContext<'_>,
@@ -656,7 +768,11 @@ pub fn run_round(
     scratch: &mut RoundScratch,
 ) -> Result<RoundOutcome> {
     let round = server.round as u64;
-    let mut participants = ctx.sampler.sample(round);
+    let pop_on = ctx.population.enabled;
+    // population mode samples lazily (rejection sampling over churn/wave
+    // availability) and reports its tallies; classic samplers return None
+    let (mut participants, sample_stats) =
+        ctx.sampler.try_sample_with_stats(round)?;
     // quarantined clients sit the round out entirely: no downlink, no
     // training, no accounting (the ladder owns their exclusion window)
     if !ctx.quarantined.is_empty() {
@@ -667,12 +783,13 @@ pub fn run_round(
     // every sampled client's fate is decided before anything executes —
     // deterministic in (seed, round, cid), so the completing subset and
     // its normalized FedAvg weights are known up front
-    let mut plans = cohort::plan_cohort(
+    let mut plans = cohort::plan_cohort_with(
         &ctx.cohort,
         &participants,
         ctx.assignment,
         ctx.seed,
         round,
+        Some(&ctx.population),
     );
 
     // chaos fate upgrades, planned before any execution (deterministic in
@@ -689,7 +806,20 @@ pub fn run_round(
              corrupt frames must be detectable"
         );
         for plan in &mut plans {
-            let ch = chaos::plan_client(&ctx.chaos, ctx.seed, round, plan.cid);
+            // device classes scale fault rates: budget/IoT hardware
+            // corrupts and crashes more often (stream alignment is
+            // untouched — plan_client draws the same variates and only
+            // the thresholds move)
+            let ccfg = if pop_on {
+                ctx.chaos.scaled(
+                    population::DEVICE_CLASSES
+                        [population::class_of(ctx.seed, plan.cid)]
+                    .fault_mult,
+                )
+            } else {
+                ctx.chaos
+            };
+            let ch = chaos::plan_client(&ccfg, ctx.seed, round, plan.cid);
             if plan.fate != ClientFate::Completes {
                 // dropped/late clients never reach the verifier; keep the
                 // plan for determinism but inject nothing
@@ -784,10 +914,13 @@ pub fn run_round(
         if delta_on {
             tc.delta_base = Some(round);
         }
+        // speakers_of works in dense AND lazy modes (population-scale
+        // assignments never materialize per-client shard vectors)
+        let shard = ctx.assignment.speakers_of(plan.cid);
         client::run_client_round(
             ctx.model,
             ctx.domain,
-            ctx.assignment.speakers(plan.cid),
+            shard.as_ref(),
             &downlinks[i],
             &masks[i],
             tc,
@@ -802,22 +935,92 @@ pub fn run_round(
     // thread (the sharded generic is only instantiated where the job
     // closure is Sync)
     #[cfg(not(feature = "pjrt"))]
-    let (stats, agg) = {
-        let shards = shard_count(ctx.workers, plans.len());
-        if ctx.model.is_send_safe() && shards > 1 {
-            let scratches = scratch.client_scratches(shards);
-            run_cohort_sharded(
+    let (stats, agg, edge_stats) = {
+        if pop_on {
+            // two-tier topology: per-edge fold + merged uplink to the
+            // root, strictly in cohort order on this thread (the path is
+            // worker-count independent by construction). Split-borrow the
+            // scratch so the edge delta bases and a client scratch can be
+            // held simultaneously.
+            let RoundScratch {
+                edge_prev, clients, ..
+            } = &mut *scratch;
+            if clients.is_empty() {
+                clients.resize_with(1, ClientScratch::default);
+            }
+            let (s, a, es) = run_cohort_edged(
                 &plans,
                 &norm_w,
                 &var_lens,
                 dbase.as_ref(),
-                shards,
-                scratches,
+                ctx.population.edges,
+                ctx.integrity,
+                delta_on,
+                ctx.seed,
+                round,
+                edge_prev,
+                &mut clients[0],
                 job,
-            )?
+            )?;
+            (s, a, Some(es))
         } else {
+            let shards = shard_count(ctx.workers, plans.len());
+            if ctx.model.is_send_safe() && shards > 1 {
+                let scratches = scratch.client_scratches(shards);
+                let (s, a) = run_cohort_sharded(
+                    &plans,
+                    &norm_w,
+                    &var_lens,
+                    dbase.as_ref(),
+                    shards,
+                    scratches,
+                    job,
+                )?;
+                (s, a, None)
+            } else {
+                let cs = &mut scratch.client_scratches(1)[0];
+                let (s, a) = run_cohort_pinned(
+                    &plans,
+                    &norm_w,
+                    &var_lens,
+                    dbase.as_ref(),
+                    ctx.workers,
+                    cs,
+                    job,
+                )?;
+                (s, a, None)
+            }
+        }
+    };
+    #[cfg(feature = "pjrt")]
+    let (stats, agg, edge_stats) = {
+        if pop_on {
+            let RoundScratch {
+                edge_prev, clients, ..
+            } = &mut *scratch;
+            if clients.is_empty() {
+                clients.resize_with(1, ClientScratch::default);
+            }
+            let (s, a, es) = run_cohort_edged(
+                &plans,
+                &norm_w,
+                &var_lens,
+                dbase.as_ref(),
+                ctx.population.edges,
+                ctx.integrity,
+                delta_on,
+                ctx.seed,
+                round,
+                edge_prev,
+                &mut clients[0],
+                job,
+            )?;
+            (s, a, Some(es))
+        } else {
+            // training is pinned (!Send executable) but uplink decode is
+            // pure Send work — keep it on the thread pool
             let cs = &mut scratch.client_scratches(1)[0];
-            run_cohort_pinned(
+            let (s, a) = run_cohort_pinned(
                 &plans,
                 &norm_w,
                 &var_lens,
@@ -825,23 +1028,9 @@ pub fn run_round(
                 ctx.workers,
                 cs,
                 job,
-            )?
+            )?;
+            (s, a, None)
         }
-    };
-    #[cfg(feature = "pjrt")]
-    let (stats, agg) = {
-        // training is pinned (!Send executable) but uplink decode is pure
-        // Send work — keep it on the thread pool
-        let cs = &mut scratch.client_scratches(1)[0];
-        run_cohort_pinned(
-            &plans,
-            &norm_w,
-            &var_lens,
-            dbase.as_ref(),
-            ctx.workers,
-            cs,
-            job,
-        )?
     };
 
     // recycle the downlink frame buffers for the next round
@@ -859,6 +1048,26 @@ pub fn run_round(
         crate::log_debug!("round {round}: no completing clients, skipping FedAvg");
         server.skip_round();
     }
+
+    // population-mode round facts: sampling tallies straight from the
+    // sampler, per-class completions from the final (chaos-upgraded)
+    // plans, edge transport from the two-tier fold
+    let population = pop_on.then(|| {
+        let mut class_completed = [0u64; population::NUM_CLASSES];
+        for plan in &plans {
+            if plan.fate == ClientFate::Completes {
+                class_completed
+                    [population::class_of(ctx.seed, plan.cid)] += 1;
+            }
+        }
+        PopulationRoundStats {
+            registered: ctx.population.registered,
+            edges: ctx.population.edges,
+            sample: sample_stats.unwrap_or_default(),
+            class_completed,
+            edge: edge_stats.unwrap_or_default(),
+        }
+    });
 
     Ok(RoundOutcome {
         // NaN, not a perfect-looking 0.0, when no client trained at all
@@ -881,6 +1090,7 @@ pub fn run_round(
         up_bytes_rejected: stats.up_bytes_rejected,
         up_bytes_delta_saved: stats.up_bytes_delta_saved,
         chaos_reports,
+        population,
         participants,
     })
 }
@@ -1084,6 +1294,193 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn zero_server() -> Server {
+        Server::new(VAR_LENS.iter().map(|&n| vec![0.0f32; n]).collect())
+    }
+
+    /// Property (docs/SCALE.md): with a single edge, the two-tier fold is
+    /// bit-identical to flat sequential aggregation — the edge ships its
+    /// weighted f64 sums cast to f32, and `apply` would have performed the
+    /// exact same cast on the flat path.
+    #[test]
+    fn edged_single_edge_matches_sequential_bit_for_bit() {
+        let plans = mk_plans(11, mixed_fates);
+        let norm_w = norm_weights(&plans);
+
+        let seq_uploads = Mutex::new(vec![None; plans.len()]);
+        let mut seq_scratch = ClientScratch::default();
+        let (seq_stats, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            None,
+            &mut seq_scratch,
+            recording_job(&seq_uploads),
+        )
+        .unwrap();
+        let mut seq_server = zero_server();
+        seq_agg.apply(&mut seq_server).unwrap();
+
+        for integrity in [false, true] {
+            let edge_uploads = Mutex::new(vec![None; plans.len()]);
+            let mut cs = ClientScratch::default();
+            let mut edge_prev = Vec::new();
+            let (stats, root, es) = run_cohort_edged(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                None,
+                1,
+                integrity,
+                false,
+                7,
+                0,
+                &mut edge_prev,
+                &mut cs,
+                recording_job(&edge_uploads),
+            )
+            .unwrap();
+            // identical client execution, one merged frame on the hop
+            assert_eq!(
+                *seq_uploads.lock().unwrap(),
+                *edge_uploads.lock().unwrap()
+            );
+            assert_eq!(stats.completed, seq_stats.completed);
+            assert_eq!(stats.up_bytes, seq_stats.up_bytes);
+            assert_eq!(stats.loss_sum, seq_stats.loss_sum);
+            assert_eq!(es.frames, 1);
+            assert!(es.up_bytes > 0);
+            assert_eq!(root.clients(), seq_stats.completed);
+            let mut edge_server = zero_server();
+            root.apply(&mut edge_server).unwrap();
+            for (a, b) in edge_server.params.iter().zip(&seq_server.params) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "single-edge root must be bit-exact vs flat \
+                         (integrity={integrity})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// With several edges the root differs from flat aggregation only by
+    /// f64 re-association plus one f32 cast per edge — the documented
+    /// shard-merge tolerance (≤ 1e-6 per element).
+    #[test]
+    fn edged_multi_edge_matches_flat_within_merge_tolerance() {
+        let plans = mk_plans(13, mixed_fates);
+        let norm_w = norm_weights(&plans);
+
+        let mut seq_scratch = ClientScratch::default();
+        let (seq_stats, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            None,
+            &mut seq_scratch,
+            |_i, plan: &ClientPlan, _cs: &mut ClientScratch| {
+                Ok(mock_result(plan.cid))
+            },
+        )
+        .unwrap();
+        let mut seq_server = zero_server();
+        seq_agg.apply(&mut seq_server).unwrap();
+
+        for edges in [2usize, 4, 32] {
+            let mut cs = ClientScratch::default();
+            let mut edge_prev = Vec::new();
+            let (stats, root, es) = run_cohort_edged(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                None,
+                edges,
+                true,
+                false,
+                7,
+                0,
+                &mut edge_prev,
+                &mut cs,
+                |_i, plan: &ClientPlan, _cs: &mut ClientScratch| {
+                    Ok(mock_result(plan.cid))
+                },
+            )
+            .unwrap();
+            assert_eq!(stats.completed, seq_stats.completed);
+            assert_eq!(stats.dropped, seq_stats.dropped);
+            assert_eq!(stats.late, seq_stats.late);
+            // only edges whose chunk had an accepted client ship a frame
+            assert!(es.frames >= 1 && es.frames <= edges as u64);
+            assert_eq!(root.clients(), seq_stats.completed);
+            let mut edge_server = zero_server();
+            root.apply(&mut edge_server).unwrap();
+            for (a, b) in edge_server.params.iter().zip(&seq_server.params) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        (x - y).abs() <= 1e-6,
+                        "edged {x} vs flat {y} (edges={edges})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The edge→root hop reuses the cross-round XOR-delta stage: a round
+    /// whose merged payload repeats the previous round's deltas away to
+    /// almost nothing, losslessly, and round 0 always resets the bases
+    /// (engines are reused across sweep cells).
+    #[test]
+    fn edged_delta_hop_saves_bytes_and_stays_lossless() {
+        let plans = mk_plans(8, |_| ClientFate::Completes);
+        let norm_w = norm_weights(&plans);
+        let job = |_i: usize, plan: &ClientPlan, _cs: &mut ClientScratch| {
+            Ok(mock_result(plan.cid))
+        };
+        let mut edge_prev = Vec::new();
+        let mut cs = ClientScratch::default();
+        // round 0: no base yet → verbatim frames
+        let (_, root0, es0) = run_cohort_edged(
+            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 0,
+            &mut edge_prev, &mut cs, job,
+        )
+        .unwrap();
+        assert_eq!(es0.delta_saved, 0);
+        // round 1: the mock uploads depend only on cid, so the merged
+        // payload repeats → the delta hop must save bytes
+        let (_, root1, es1) = run_cohort_edged(
+            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 1,
+            &mut edge_prev, &mut cs, job,
+        )
+        .unwrap();
+        assert!(
+            es1.delta_saved > 0,
+            "identical edge payloads must delta away"
+        );
+        assert!(es1.up_bytes < es0.up_bytes);
+        // ...and losslessly: both roots finish to bit-identical servers
+        let mut s0 = zero_server();
+        root0.apply(&mut s0).unwrap();
+        let mut s1 = zero_server();
+        root1.apply(&mut s1).unwrap();
+        for (a, b) in s0.params.iter().zip(&s1.params) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // a fresh sweep cell re-enters at round 0: bases reset, frames
+        // ship verbatim again
+        let (_, _, es0b) = run_cohort_edged(
+            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 0,
+            &mut edge_prev, &mut cs, job,
+        )
+        .unwrap();
+        assert_eq!(es0b.delta_saved, 0);
+        assert_eq!(es0b.up_bytes, es0.up_bytes);
     }
 
     #[test]

@@ -1,6 +1,86 @@
 //! Client sampling — which of the population participates in each round.
+//!
+//! Two regimes:
+//!
+//! - **Enumerable** (`Uniform` / `RoundRobin`): the classic materialized
+//!   path. Uniform sampling builds an index vector of the whole
+//!   population, so it is guarded by [`MAX_ENUMERABLE_POPULATION`];
+//!   round-robin window arithmetic is checked against `usize` overflow.
+//!   Both guards surface as [`SamplerError`] — a typed error, not a
+//!   panic — from [`Sampler::try_new`] / [`Sampler::try_sample`].
+//! - **Population mode** ([`Sampler::for_population`]): cohorts are drawn
+//!   by rejection sampling from a lazily-derived registered fleet
+//!   (`fl::population`), with O(cohort) memory at 10^6–10^7 clients.
 
+use crate::fl::population::{self, PopulationConfig, SampleStats};
 use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Uniform sampling materializes a `Vec<usize>` over the population;
+/// beyond this bound (2^22 ≈ 4.2M clients ≈ 32 MiB of indices) the
+/// config must use the lazy `[population]` mode instead.
+pub const MAX_ENUMERABLE_POPULATION: usize = 1 << 22;
+
+/// Typed sampling failures — the guards the 10^7-population regime needs
+/// (an enumerable-path assumption violated, or an availability blackout
+/// exhausting the rejection-sampling budget).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SamplerError {
+    /// population of zero clients
+    EmptyPopulation,
+    /// `per_round` of zero clients
+    ZeroPerRound,
+    /// round-robin window arithmetic (`population * per_round`) would
+    /// overflow `usize`
+    CohortOverflow { population: usize, per_round: usize },
+    /// uniform sampling would materialize an index vector over a
+    /// population beyond [`MAX_ENUMERABLE_POPULATION`]
+    PopulationTooLarge { population: usize, max: usize },
+    /// population-mode rejection sampling hit its attempt cap before
+    /// filling the cohort (availability blackout)
+    AvailabilityExhausted {
+        round: u64,
+        wanted: usize,
+        got: usize,
+        attempts: u64,
+    },
+}
+
+impl std::fmt::Display for SamplerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerError::EmptyPopulation => {
+                write!(f, "sampler needs a non-empty population")
+            }
+            SamplerError::ZeroPerRound => {
+                write!(f, "per_round must be > 0")
+            }
+            SamplerError::CohortOverflow {
+                population,
+                per_round,
+            } => write!(
+                f,
+                "round-robin window {population} * {per_round} overflows usize"
+            ),
+            SamplerError::PopulationTooLarge { population, max } => write!(
+                f,
+                "population {population} exceeds the enumerable bound {max}; \
+                 use the lazy [population] mode"
+            ),
+            SamplerError::AvailabilityExhausted {
+                round,
+                wanted,
+                got,
+                attempts,
+            } => write!(
+                f,
+                "round {round}: rejection sampling exhausted {attempts} \
+                 attempts with {got}/{wanted} clients — availability blackout"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SamplerError {}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
@@ -37,43 +117,142 @@ pub struct Sampler {
     pub population: usize,
     pub per_round: usize,
     pub seed: u64,
+    /// `Some` = lazy population mode: cohorts come from
+    /// `population::sample_cohort` instead of the enumerable draws
+    pub population_cfg: Option<PopulationConfig>,
 }
 
 impl Sampler {
-    /// Build a sampler. `per_round` is clamped to the population size —
-    /// asking for a larger cohort than exists means full participation,
-    /// not a panic (stress configs legitimately over-ask).
+    /// Build a sampler, panicking on invalid configs — the legacy entry
+    /// point for code with statically-known-good parameters (tests,
+    /// presets). Config-driven paths use [`try_new`](Self::try_new).
     pub fn new(kind: SamplerKind, population: usize, per_round: usize, seed: u64) -> Self {
-        assert!(population > 0, "sampler needs a non-empty population");
-        assert!(per_round > 0, "per_round must be > 0");
-        Self {
-            kind,
-            population,
-            per_round: per_round.min(population),
-            seed,
-        }
+        Self::try_new(kind, population, per_round, seed)
+            .expect("sampler config")
     }
 
-    /// Client ids participating in `round` (deterministic).
-    pub fn sample(&self, round: u64) -> Vec<usize> {
-        match self.kind {
+    /// Build a sampler. `per_round` is clamped to the population size —
+    /// asking for a larger cohort than exists means full participation,
+    /// not an error (stress configs legitimately over-ask). Enumerable
+    /// guards: uniform populations beyond
+    /// [`MAX_ENUMERABLE_POPULATION`] and round-robin window overflow are
+    /// typed errors.
+    pub fn try_new(
+        kind: SamplerKind,
+        population: usize,
+        per_round: usize,
+        seed: u64,
+    ) -> Result<Self, SamplerError> {
+        if population == 0 {
+            return Err(SamplerError::EmptyPopulation);
+        }
+        if per_round == 0 {
+            return Err(SamplerError::ZeroPerRound);
+        }
+        let per_round = per_round.min(population);
+        match kind {
+            SamplerKind::Uniform => {
+                if population > MAX_ENUMERABLE_POPULATION {
+                    return Err(SamplerError::PopulationTooLarge {
+                        population,
+                        max: MAX_ENUMERABLE_POPULATION,
+                    });
+                }
+            }
+            SamplerKind::RoundRobin => {
+                if population.checked_mul(per_round).is_none() {
+                    return Err(SamplerError::CohortOverflow {
+                        population,
+                        per_round,
+                    });
+                }
+            }
+        }
+        Ok(Self {
+            kind,
+            population,
+            per_round,
+            seed,
+            population_cfg: None,
+        })
+    }
+
+    /// Lazy population mode: draw cohorts from `cfg.registered` clients
+    /// by rejection sampling — no index vector, no enumerable bound.
+    pub fn for_population(
+        cfg: PopulationConfig,
+        per_round: usize,
+        seed: u64,
+    ) -> Result<Self, SamplerError> {
+        if cfg.registered == 0 {
+            return Err(SamplerError::EmptyPopulation);
+        }
+        if per_round == 0 {
+            return Err(SamplerError::ZeroPerRound);
+        }
+        Ok(Self {
+            kind: SamplerKind::Uniform,
+            population: cfg.registered,
+            per_round: per_round.min(cfg.registered),
+            seed,
+            population_cfg: Some(cfg),
+        })
+    }
+
+    /// Client ids participating in `round` (deterministic), with the
+    /// population-mode rejection tallies when in lazy mode.
+    pub fn try_sample_with_stats(
+        &self,
+        round: u64,
+    ) -> Result<(Vec<usize>, Option<SampleStats>), SamplerError> {
+        if let Some(cfg) = &self.population_cfg {
+            let (ids, stats) = population::sample_cohort(
+                cfg,
+                self.seed,
+                round,
+                self.per_round,
+            )?;
+            return Ok((ids, Some(stats)));
+        }
+        let ids = match self.kind {
             SamplerKind::Uniform => {
                 let mut rng = Xoshiro256pp::new(hash_seed(&[
                     self.seed, 0x5a3b1e, round,
                 ]));
-                let mut ids = rng.sample_indices(self.population, self.per_round);
+                let mut ids =
+                    rng.sample_indices(self.population, self.per_round);
                 ids.sort_unstable(); // stable ordering for reproducible logs
                 ids
             }
-            SamplerKind::RoundRobin => (0..self.per_round)
-                .map(|i| {
-                    // reduce the round first: same residue class, but the
-                    // product can never overflow for huge round indices
-                    ((round as usize % self.population) * self.per_round + i)
-                        % self.population
-                })
-                .collect(),
-        }
+            SamplerKind::RoundRobin => {
+                // reduce the round first: same residue class, but the
+                // product stays within one population of usize::MAX
+                let base = round as usize % self.population;
+                let start = base.checked_mul(self.per_round).ok_or(
+                    SamplerError::CohortOverflow {
+                        population: self.population,
+                        per_round: self.per_round,
+                    },
+                )?;
+                (0..self.per_round)
+                    .map(|i| (start + i) % self.population)
+                    .collect()
+            }
+        };
+        Ok((ids, None))
+    }
+
+    /// [`try_sample_with_stats`](Self::try_sample_with_stats) without the
+    /// tallies.
+    pub fn try_sample(&self, round: u64) -> Result<Vec<usize>, SamplerError> {
+        self.try_sample_with_stats(round).map(|(ids, _)| ids)
+    }
+
+    /// Client ids participating in `round` (deterministic). Panics on the
+    /// typed failures — legacy entry point; engines use
+    /// [`try_sample`](Self::try_sample).
+    pub fn sample(&self, round: u64) -> Vec<usize> {
+        self.try_sample(round).expect("sampler draw")
     }
 }
 
@@ -177,5 +356,102 @@ mod tests {
             any_diff |= a.sample(round) != c.sample(round);
         }
         assert!(any_diff, "seed must actually enter the stream");
+    }
+
+    #[test]
+    fn zero_population_and_zero_per_round_are_typed_errors() {
+        assert_eq!(
+            Sampler::try_new(SamplerKind::Uniform, 0, 4, 1).unwrap_err(),
+            SamplerError::EmptyPopulation
+        );
+        assert_eq!(
+            Sampler::try_new(SamplerKind::Uniform, 4, 0, 1).unwrap_err(),
+            SamplerError::ZeroPerRound
+        );
+    }
+
+    #[test]
+    fn uniform_beyond_enumerable_bound_is_a_typed_error() {
+        // 10^7 registered clients: the uniform path would materialize an
+        // 80 MB index vector per draw — refused with a pointer to the
+        // lazy mode, never a panic or an OOM
+        let err = Sampler::try_new(SamplerKind::Uniform, 10_000_000, 64, 1)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            SamplerError::PopulationTooLarge {
+                population: 10_000_000,
+                max: MAX_ENUMERABLE_POPULATION
+            }
+        );
+        // ... while the bound itself is fine
+        assert!(Sampler::try_new(
+            SamplerKind::Uniform,
+            MAX_ENUMERABLE_POPULATION,
+            64,
+            1
+        )
+        .is_ok());
+        // round-robin never enumerates, so the same population is fine
+        assert!(
+            Sampler::try_new(SamplerKind::RoundRobin, 10_000_000, 64, 1)
+                .is_ok()
+        );
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn round_robin_window_overflow_is_a_typed_error() {
+        // population * per_round > usize::MAX: the window start cannot be
+        // computed — typed refusal at construction, not a wrapping panic
+        let huge = 1usize << 33;
+        assert!(matches!(
+            Sampler::try_new(SamplerKind::RoundRobin, huge, huge, 0),
+            Err(SamplerError::CohortOverflow { .. })
+        ));
+    }
+
+    #[test]
+    fn population_mode_samples_huge_fleets_lazily() {
+        let cfg = PopulationConfig {
+            enabled: true,
+            registered: 10_000_000,
+            ..PopulationConfig::default()
+        };
+        let s = Sampler::for_population(cfg, 32, 5).unwrap();
+        let (ids, stats) = s.try_sample_with_stats(2).unwrap();
+        assert_eq!(ids.len(), 32);
+        assert!(stats.is_some(), "population mode must return tallies");
+        let mut d = ids.clone();
+        d.dedup();
+        assert_eq!(d.len(), 32);
+        assert!(ids.iter().all(|&i| i < 10_000_000));
+        assert_eq!(s.try_sample(2).unwrap(), ids, "replay is exact");
+        // classic paths return no tallies
+        let classic = Sampler::new(SamplerKind::Uniform, 64, 8, 5);
+        assert!(classic.try_sample_with_stats(0).unwrap().1.is_none());
+    }
+
+    #[test]
+    fn population_mode_blackout_propagates_the_typed_error() {
+        let cfg = PopulationConfig {
+            enabled: true,
+            registered: 4,
+            churn_rate: 0.99,
+            churn_period: 1,
+            wave_amplitude: 0.99,
+            wave_period: 2,
+            ..PopulationConfig::default()
+        };
+        let s = Sampler::for_population(cfg, 4, 3).unwrap();
+        let mut saw = false;
+        for round in 0..8 {
+            if let Err(SamplerError::AvailabilityExhausted { .. }) =
+                s.try_sample(round)
+            {
+                saw = true;
+            }
+        }
+        assert!(saw, "blackout must surface the typed error");
     }
 }

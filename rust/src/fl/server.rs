@@ -216,6 +216,58 @@ impl StreamingAggregator {
         self.sums.iter().map(|v| v.len() * 8).sum()
     }
 
+    /// Number of variables this accumulator covers.
+    pub fn num_vars(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// The weighted f64 sums cast to f32 — the payload of an edge→root
+    /// frame (`fl::population`). Shipping *sums* rather than means keeps
+    /// the single-edge topology bit-exact against flat aggregation: the
+    /// root re-widens each f32 to f64 losslessly and
+    /// [`apply`](Self::apply) casts the total back to the identical f32.
+    pub fn cast_sums(&self) -> Vec<Vec<f32>> {
+        self.sums
+            .iter()
+            .map(|v| v.iter().map(|&x| x as f32).collect())
+            .collect()
+    }
+
+    /// Fold one decoded edge-frame variable (little-endian f32 sums of
+    /// `n` elements) in by pure addition — the streaming twin of
+    /// [`merge`](Self::merge). Participation arrives separately via
+    /// [`absorb_participation`](Self::absorb_participation).
+    pub fn absorb_cast_var(
+        &mut self,
+        var: usize,
+        data: &[u8],
+        n: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            var < self.sums.len(),
+            "edge var {var} out of range ({} vars)",
+            self.sums.len()
+        );
+        anyhow::ensure!(
+            n == self.sums[var].len() && data.len() == n * 4,
+            "edge var {var}: {n} elements / {} bytes, aggregator expects {}",
+            data.len(),
+            self.sums[var].len()
+        );
+        for (j, a) in self.sums[var].iter_mut().enumerate() {
+            let b: [u8; 4] = data[j * 4..j * 4 + 4].try_into().unwrap();
+            *a += f32::from_le_bytes(b) as f64;
+        }
+        Ok(())
+    }
+
+    /// Account an edge's participation: its summed normalized weight and
+    /// folded client count (carried beside the frame, not inside it).
+    pub fn absorb_participation(&mut self, weight: f64, clients: usize) {
+        self.weight += weight;
+        self.clients += clients;
+    }
+
     /// Fold one fully-decoded client model in with normalized weight `wc`.
     pub fn accumulate_model(&mut self, model: &[Vec<f32>], wc: f64) -> Result<()> {
         anyhow::ensure!(

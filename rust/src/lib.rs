@@ -36,6 +36,11 @@
 //!   commit failures) against the checksummed v2 frame layout of
 //!   [`omc::codec`], with retry/backoff and a quarantine ladder —
 //!   `docs/ROBUSTNESS.md` documents the integrity and fault contracts.
+//!   [`fl::population`] scales the simulator to 10^6–10^7 *registered*
+//!   clients in O(active) memory: lazy `(seed, cid)`-derived profiles,
+//!   churn and diurnal availability, a device-class ladder, a streaming
+//!   rejection sampler, and two-tier edge→root aggregation over the same
+//!   wire stack — `docs/SCALE.md` documents the topology and contracts.
 //! * [`coordinator`] — experiment configs (TOML or builders), the
 //!   [`coordinator::Experiment`] driver, presets for the paper's tables
 //!   (including the [`coordinator::presets`] sweep grids), the

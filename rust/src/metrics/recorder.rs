@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::fl::population::{PopulationRoundStats, NUM_CLASSES};
 use crate::util::json::{self, Json};
 
 /// One federated round's metrics.
@@ -92,6 +93,10 @@ pub struct Recorder {
     /// async-only per-commit records (empty for synchronous runs),
     /// parallel to `records`
     pub commits: Vec<CommitRecord>,
+    /// population-mode per-round records (empty otherwise), parallel to
+    /// `records`; everything in them is a pure function of
+    /// `(config, seed)` — see `fl::population`
+    pub populations: Vec<PopulationRoundStats>,
     pub label: String,
 }
 
@@ -100,6 +105,7 @@ impl Recorder {
         Self {
             records: Vec::new(),
             commits: Vec::new(),
+            populations: Vec::new(),
             label: label.to_string(),
         }
     }
@@ -116,6 +122,97 @@ impl Recorder {
     /// Whether this run recorded async commits.
     pub fn is_async(&self) -> bool {
         !self.commits.is_empty()
+    }
+
+    /// Record one population-mode round's facts (population runs push one
+    /// per round).
+    pub fn push_population(&mut self, p: PopulationRoundStats) {
+        self.populations.push(p);
+    }
+
+    /// Whether this run recorded population-mode rounds.
+    pub fn is_population(&self) -> bool {
+        !self.populations.is_empty()
+    }
+
+    /// Rejection-sampling attempts across the run.
+    pub fn total_sample_attempts(&self) -> u64 {
+        self.populations.iter().map(|p| p.sample.attempts).sum()
+    }
+
+    /// Candidates rejected because they already sat in the cohort.
+    pub fn total_duplicate_rejections(&self) -> u64 {
+        self.populations
+            .iter()
+            .map(|p| p.sample.duplicate_rejections)
+            .sum()
+    }
+
+    /// Candidates rejected because their churn duty cycle had them out.
+    pub fn total_churn_rejections(&self) -> u64 {
+        self.populations
+            .iter()
+            .map(|p| p.sample.churn_rejections)
+            .sum()
+    }
+
+    /// Candidates rejected by the diurnal availability wave.
+    pub fn total_wave_rejections(&self) -> u64 {
+        self.populations
+            .iter()
+            .map(|p| p.sample.wave_rejections)
+            .sum()
+    }
+
+    /// Mean analytic active-fleet estimate over the run (NaN when the run
+    /// was not in population mode).
+    pub fn mean_active_estimate(&self) -> f64 {
+        if self.populations.is_empty() {
+            return f64::NAN;
+        }
+        let sum: f64 = self
+            .populations
+            .iter()
+            .map(|p| p.sample.active_estimate)
+            .sum();
+        sum / self.populations.len() as f64
+    }
+
+    /// Clients sampled per device class, summed over the run.
+    pub fn class_sampled_totals(&self) -> [u64; NUM_CLASSES] {
+        let mut out = [0u64; NUM_CLASSES];
+        for p in &self.populations {
+            for (o, &n) in out.iter_mut().zip(&p.sample.class_sampled) {
+                *o += n;
+            }
+        }
+        out
+    }
+
+    /// Clients that completed per device class, summed over the run.
+    pub fn class_completed_totals(&self) -> [u64; NUM_CLASSES] {
+        let mut out = [0u64; NUM_CLASSES];
+        for p in &self.populations {
+            for (o, &n) in out.iter_mut().zip(&p.class_completed) {
+                *o += n;
+            }
+        }
+        out
+    }
+
+    /// Edge→root frames shipped across the run.
+    pub fn total_edge_frames(&self) -> u64 {
+        self.populations.iter().map(|p| p.edge.frames).sum()
+    }
+
+    /// Edge→root bytes shipped across the run.
+    pub fn total_edge_up_bytes(&self) -> u64 {
+        self.populations.iter().map(|p| p.edge.up_bytes).sum()
+    }
+
+    /// Bytes the edge-hop delta stage saved across the run.
+    pub fn total_edge_delta_saved(&self) -> u64 {
+        self.populations.iter().map(|p| p.edge.delta_saved).sum()
     }
 
     /// Staleness histogram merged over every commit (index = staleness).
@@ -387,8 +484,49 @@ impl Recorder {
         out
     }
 
+    /// CSV of the population-mode per-round records (empty string when the
+    /// run was not in population mode). The per-class sampled/completed
+    /// counters are `|`-joined inside one column each.
+    pub fn populations_csv(&self) -> String {
+        if self.populations.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "round,registered,edges,attempts,duplicate_rejections,\
+             churn_rejections,wave_rejections,active_estimate,\
+             class_sampled,class_completed,edge_frames,edge_up_bytes,\
+             edge_delta_saved\n",
+        );
+        let join = |xs: &[u64]| {
+            xs.iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        for (round, p) in self.populations.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.2},{},{},{},{},{}\n",
+                round,
+                p.registered,
+                p.edges,
+                p.sample.attempts,
+                p.sample.duplicate_rejections,
+                p.sample.churn_rejections,
+                p.sample.wave_rejections,
+                p.sample.active_estimate,
+                join(&p.sample.class_sampled),
+                join(&p.class_completed),
+                p.edge.frames,
+                p.edge.up_bytes,
+                p.edge.delta_saved
+            ));
+        }
+        out
+    }
+
     /// Write `<dir>/<label>.csv` and `<dir>/<label>.json` (plus
-    /// `<dir>/<label>_commits.csv` for async runs).
+    /// `<dir>/<label>_commits.csv` for async runs and
+    /// `<dir>/<label>_population.csv` for population-mode runs).
     pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
         fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
@@ -402,6 +540,11 @@ impl Recorder {
             let commits_path = dir.join(format!("{}_commits.csv", self.label));
             let mut f = fs::File::create(&commits_path)?;
             f.write_all(self.commits_csv().as_bytes())?;
+        }
+        if self.is_population() {
+            let pop_path = dir.join(format!("{}_population.csv", self.label));
+            let mut f = fs::File::create(&pop_path)?;
+            f.write_all(self.populations_csv().as_bytes())?;
         }
         Ok((csv_path, json_path))
     }
@@ -621,6 +764,80 @@ mod tests {
         r.write(&dir).unwrap();
         let commits = std::fs::read_to_string(dir.join("demo_commits.csv")).unwrap();
         assert!(commits.starts_with("commit,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn pop(attempts: u64) -> PopulationRoundStats {
+        let mut p = PopulationRoundStats {
+            registered: 1_000_000,
+            edges: 4,
+            ..Default::default()
+        };
+        p.sample.attempts = attempts;
+        p.sample.duplicate_rejections = 1;
+        p.sample.churn_rejections = 2;
+        p.sample.wave_rejections = 3;
+        p.sample.active_estimate = 400_000.0;
+        p.sample.class_sampled[0] = 5;
+        p.class_completed[0] = 4;
+        p.edge.frames = 4;
+        p.edge.up_bytes = 1024;
+        p.edge.delta_saved = 128;
+        p
+    }
+
+    #[test]
+    fn population_totals_sum_per_round_records() {
+        let mut r = Recorder::new("pop");
+        assert!(!r.is_population());
+        assert!(r.mean_active_estimate().is_nan());
+        r.push_population(pop(10));
+        r.push_population(pop(14));
+        assert!(r.is_population());
+        assert_eq!(r.total_sample_attempts(), 24);
+        assert_eq!(r.total_duplicate_rejections(), 2);
+        assert_eq!(r.total_churn_rejections(), 4);
+        assert_eq!(r.total_wave_rejections(), 6);
+        assert!((r.mean_active_estimate() - 400_000.0).abs() < 1e-9);
+        assert_eq!(r.class_sampled_totals()[0], 10);
+        assert_eq!(r.class_completed_totals()[0], 8);
+        assert_eq!(r.total_edge_frames(), 8);
+        assert_eq!(r.total_edge_up_bytes(), 2048);
+        assert_eq!(r.total_edge_delta_saved(), 256);
+    }
+
+    #[test]
+    fn populations_csv_keeps_column_count_and_joins_classes() {
+        let mut r = Recorder::new("pop");
+        assert_eq!(r.populations_csv(), "");
+        r.push_population(pop(10));
+        r.push_population(pop(14));
+        let csv = r.populations_csv();
+        assert!(csv.starts_with("round,registered,"), "{csv}");
+        // class columns are |-joined, one slot per device class
+        assert!(csv.contains("5|0|0|0"), "{csv}");
+        assert!(csv.contains("4|0|0|0"), "{csv}");
+        let cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+
+    #[test]
+    fn write_emits_population_csv_only_for_population_runs() {
+        let dir = std::env::temp_dir().join(format!(
+            "omc_rec_pop_test_{}",
+            std::process::id()
+        ));
+        let mut r = Recorder::new("demo");
+        r.push(rec(0, 5.0));
+        r.write(&dir).unwrap();
+        assert!(!dir.join("demo_population.csv").exists());
+        r.push_population(pop(10));
+        r.write(&dir).unwrap();
+        let pop_csv =
+            std::fs::read_to_string(dir.join("demo_population.csv")).unwrap();
+        assert!(pop_csv.starts_with("round,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -32,7 +32,12 @@ use crate::util::json::{self, Json};
 /// v4: `delta_enabled` flag + `up_bytes_delta_saved` counter (bytes the
 /// lossless delta wire stage shaved off verbatim uplink framing) — the CI
 /// delta-determinism gate greps these.
-pub const SWEEP_SCHEMA_VERSION: usize = 4;
+/// v5: `population_mode` flag on every cell + the `population` metrics
+/// object on population cells (registered fleet size, edge count, sampler
+/// attempt/rejection counters, analytic active estimate, per-device-class
+/// sampled/completed counts, edge→root frame/byte/delta counters — all
+/// deterministic in `(config, seed)`) — the CI scale gate greps these.
+pub const SWEEP_SCHEMA_VERSION: usize = 5;
 
 /// Build the deterministic summary document for one finished cell.
 ///
@@ -111,7 +116,67 @@ pub fn cell_summary(
             "up_bytes_delta_saved",
             json::num(rec.total_up_bytes_delta_saved() as f64),
         ),
+        ("population_mode", Json::Bool(cfg.population.enabled)),
     ];
+    if cfg.population.enabled {
+        let sampled = rec.class_sampled_totals();
+        let completed = rec.class_completed_totals();
+        let arr = |xs: &[u64]| {
+            Json::Arr(xs.iter().map(|&n| json::num(n as f64)).collect())
+        };
+        // per-class completion rate; a class nobody sampled reads as null
+        // (the canonical writer maps NaN to null deterministically)
+        let rates: Vec<Json> = sampled
+            .iter()
+            .zip(&completed)
+            .map(|(&s, &c)| json::num(c as f64 / s as f64))
+            .collect();
+        pairs.push((
+            "population",
+            json::obj(vec![
+                (
+                    "registered",
+                    json::num(cfg.population.registered as f64),
+                ),
+                ("edges", json::num(cfg.population.edges as f64)),
+                (
+                    "sample_attempts",
+                    json::num(rec.total_sample_attempts() as f64),
+                ),
+                (
+                    "duplicate_rejections",
+                    json::num(rec.total_duplicate_rejections() as f64),
+                ),
+                (
+                    "churn_rejections",
+                    json::num(rec.total_churn_rejections() as f64),
+                ),
+                (
+                    "wave_rejections",
+                    json::num(rec.total_wave_rejections() as f64),
+                ),
+                (
+                    "mean_active_estimate",
+                    json::num(rec.mean_active_estimate()),
+                ),
+                ("class_sampled", arr(&sampled)),
+                ("class_completed", arr(&completed)),
+                ("class_completion_rate", Json::Arr(rates)),
+                (
+                    "edge_frames",
+                    json::num(rec.total_edge_frames() as f64),
+                ),
+                (
+                    "edge_up_bytes",
+                    json::num(rec.total_edge_up_bytes() as f64),
+                ),
+                (
+                    "edge_delta_saved",
+                    json::num(rec.total_edge_delta_saved() as f64),
+                ),
+            ]),
+        ));
+    }
     if cfg.async_cfg.enabled {
         let a = cfg.async_cfg.resolved(cfg.clients_per_round);
         // merge the histogram once; mean/max derive from it directly
@@ -510,6 +575,69 @@ mod tests {
         let plain = sample_cell().to_string();
         assert!(plain.contains("\"delta_enabled\":false"));
         assert!(plain.contains("\"up_bytes_delta_saved\":0"));
+        // round-trip stability holds with the new fields
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
+    fn population_cells_carry_scale_metrics() {
+        use crate::fl::population::PopulationRoundStats;
+        let mut cfg =
+            ExperimentConfig::default_with("p", Path::new("native:tiny"));
+        cfg.population.enabled = true;
+        cfg.population.registered = 1_000_000;
+        cfg.population.edges = 4;
+        let mut rec = Recorder::new("p");
+        let mut p = PopulationRoundStats {
+            registered: 1_000_000,
+            edges: 4,
+            ..Default::default()
+        };
+        p.sample.attempts = 12;
+        p.sample.duplicate_rejections = 1;
+        p.sample.churn_rejections = 2;
+        p.sample.wave_rejections = 3;
+        p.sample.active_estimate = 250_000.0;
+        p.sample.class_sampled = [4, 2, 1, 1];
+        p.class_completed = [4, 1, 0, 0];
+        p.edge.frames = 4;
+        p.edge.up_bytes = 4096;
+        p.edge.delta_saved = 512;
+        rec.push_population(p.clone());
+        p.sample.attempts = 10;
+        rec.push_population(p);
+        let run = RunSummary {
+            label: "p".into(),
+            final_wer: 20.0,
+            final_loss: 1.0,
+            param_memory_bytes: 100,
+            memory_ratio: 0.5,
+            comm_bytes_per_round: 10.0,
+            rounds_per_min: 1.0,
+            rounds: 2,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"population_mode\":true"));
+        assert!(text.contains("\"registered\":1000000"));
+        assert!(text.contains("\"edges\":4"));
+        assert!(text.contains("\"sample_attempts\":22"));
+        assert!(text.contains("\"churn_rejections\":4"));
+        assert!(text.contains("\"wave_rejections\":6"));
+        assert!(text.contains("\"mean_active_estimate\":250000"));
+        assert!(text.contains("\"class_sampled\":[8,4,2,2]"));
+        assert!(text.contains("\"class_completed\":[8,2,0,0]"));
+        // a class nobody completed reads 0; rates stay finite per class
+        assert!(text.contains("\"class_completion_rate\":[1,0.5,0,0]"));
+        assert!(text.contains("\"edge_frames\":8"));
+        assert!(text.contains("\"edge_up_bytes\":8192"));
+        assert!(text.contains("\"edge_delta_saved\":1024"));
+        // non-population cells carry the flag but no population object —
+        // the CI scale gate greps the keys on scale cells only
+        let plain = sample_cell().to_string();
+        assert!(plain.contains("\"population_mode\":false"));
+        assert!(!plain.contains("\"sample_attempts\""));
         // round-trip stability holds with the new fields
         let reparsed = json::parse(&text).unwrap();
         assert_eq!(reparsed.to_string(), text);

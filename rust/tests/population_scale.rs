@@ -1,0 +1,212 @@
+//! Fleet-scale population guarantees, end to end: the 10^6-registered
+//! smoke-scale profile emits byte-identical summaries across runs and
+//! scheduling, its population metrics object carries live churn/wave/edge
+//! counters (the in-repo twin of the CI scale-determinism leg's greps),
+//! and a direct population-mode experiment keeps per-round records whose
+//! accounting is O(active cohort) — nothing scales with the registered
+//! fleet. Everything runs on the native backend.
+
+use std::path::PathBuf;
+
+use omc_fl::coordinator::config::ExperimentConfig;
+use omc_fl::coordinator::sweep::{self, SweepOptions, SweepSpec};
+use omc_fl::coordinator::Experiment;
+use omc_fl::fl::population::PopulationConfig;
+use omc_fl::runtime::engine::Engine;
+use omc_fl::util::json;
+
+fn tmp_dir(case: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "omc_pop_test_{}_{case}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn scale_spec(out: &PathBuf) -> SweepSpec {
+    let mut spec = sweep::smoke_scale(7).unwrap();
+    spec.output_dir = out.clone();
+    spec
+}
+
+fn opts(workers: usize, sequential: bool) -> SweepOptions {
+    SweepOptions {
+        workers,
+        sequential,
+        resume: false,
+    }
+}
+
+#[test]
+fn scale_summary_is_byte_identical_and_counters_are_live() {
+    let engine = Engine::cpu().unwrap();
+    let dirs: Vec<PathBuf> =
+        ["a", "b", "c"].iter().map(|s| tmp_dir(s)).collect();
+
+    let seq_a =
+        sweep::run_sweep(&engine, &scale_spec(&dirs[0]), &opts(1, true))
+            .unwrap();
+    let seq_b =
+        sweep::run_sweep(&engine, &scale_spec(&dirs[1]), &opts(1, true))
+            .unwrap();
+    let pooled =
+        sweep::run_sweep(&engine, &scale_spec(&dirs[2]), &opts(4, false))
+            .unwrap();
+
+    assert!(!seq_a.summary_bytes.is_empty());
+    assert_eq!(
+        seq_a.summary_bytes, seq_b.summary_bytes,
+        "same spec, two runs: summary bytes must match"
+    );
+    assert_eq!(
+        seq_a.summary_bytes, pooled.summary_bytes,
+        "sequential vs pooled scheduling: summary bytes must match"
+    );
+
+    let doc = json::parse(&seq_a.summary_bytes).unwrap();
+    assert_eq!(doc.get("schema_version").and_then(|v| v.as_usize()), Some(5));
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 5);
+
+    // every cell runs the lazy fleet and records live scale metrics — the
+    // in-repo twin of the CI scale leg's nonzero-counter greps
+    let mut churn = 0.0f64;
+    let mut wave = 0.0f64;
+    let mut frames = 0.0f64;
+    for c in cells {
+        assert_eq!(c.get("population_mode").and_then(|v| v.as_bool()), Some(true));
+        let p = c.get("population").expect("population metrics object");
+        assert_eq!(
+            p.get("registered").and_then(|v| v.as_f64()),
+            Some(1_000_000.0)
+        );
+        let attempts = p.get("sample_attempts").and_then(|v| v.as_f64()).unwrap();
+        assert!(attempts > 0.0);
+        churn += p.get("churn_rejections").and_then(|v| v.as_f64()).unwrap();
+        wave += p.get("wave_rejections").and_then(|v| v.as_f64()).unwrap();
+        frames += p.get("edge_frames").and_then(|v| v.as_f64()).unwrap();
+        assert!(p.get("edge_up_bytes").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // the per-class arrays cover the full device ladder
+        assert_eq!(
+            p.get("class_sampled").and_then(|v| v.as_arr()).unwrap().len(),
+            4
+        );
+    }
+    assert!(churn > 0.0, "churn knobs must reject candidates");
+    assert!(wave > 0.0, "wave knobs must reject candidates");
+    assert!(frames > 0.0, "edge hop must ship frames");
+
+    // the delta cell's edge hop saves bytes by round 2+ (static fleet
+    // weights → repeating participation headers and near-static sums)
+    let delta_cell = cells
+        .iter()
+        .find(|c| {
+            c.get("label").and_then(|v| v.as_str())
+                == Some("edges4_integrity_delta")
+        })
+        .expect("delta cell present");
+    assert_eq!(
+        delta_cell.get("delta_enabled").and_then(|v| v.as_bool()),
+        Some(true)
+    );
+
+    for d in dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn scale_resume_completes_byte_identically() {
+    let engine = Engine::cpu().unwrap();
+    let full_dir = tmp_dir("full");
+    let resume_dir = tmp_dir("resume");
+
+    let full =
+        sweep::run_sweep(&engine, &scale_spec(&full_dir), &opts(1, true))
+            .unwrap();
+
+    let mut partial = scale_spec(&resume_dir);
+    partial.cells.truncate(2);
+    sweep::run_sweep(&engine, &partial, &opts(1, true)).unwrap();
+
+    let resumed = sweep::run_sweep(
+        &engine,
+        &scale_spec(&resume_dir),
+        &SweepOptions {
+            workers: 1,
+            sequential: true,
+            resume: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(resumed.cells_resumed, 2);
+    assert_eq!(
+        resumed.summary_bytes, full.summary_bytes,
+        "population cells must splice back byte-identically"
+    );
+
+    std::fs::remove_dir_all(full_dir).ok();
+    std::fs::remove_dir_all(resume_dir).ok();
+}
+
+#[test]
+fn direct_population_run_records_o_active_rounds() {
+    let engine = Engine::cpu().unwrap();
+    let out = tmp_dir("direct");
+    let mut cfg = ExperimentConfig::default_with(
+        "pop_e2e",
+        std::path::Path::new("native:tiny"),
+    );
+    cfg.rounds = 3;
+    cfg.num_clients = 8; // ignored: the lazy fleet below replaces it
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 1;
+    cfg.lr = 0.2;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.workers = 1;
+    cfg.output_dir = out.clone();
+    cfg.population = PopulationConfig {
+        enabled: true,
+        registered: 1_000_000,
+        edges: 2,
+        churn_rate: 0.4,
+        churn_period: 1,
+        wave_amplitude: 0.5,
+        wave_period: 4,
+    };
+    cfg.validate().unwrap();
+
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, summary) = exp.run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    assert!(rec.is_population());
+    assert_eq!(rec.populations.len(), 3, "one record per round");
+    for p in &rec.populations {
+        assert_eq!(p.registered, 1_000_000);
+        assert_eq!(p.edges, 2);
+        // the cohort streams out of the fleet: k draws need >= k attempts
+        assert!(p.sample.attempts >= 4);
+        let sampled: u64 = p.sample.class_sampled.iter().sum();
+        assert_eq!(sampled, 4, "class tallies cover the whole cohort");
+        // at most one merged frame per edge ever reaches the root
+        assert!(p.edge.frames >= 1 && p.edge.frames <= 2);
+        assert!(p.edge.up_bytes > 0);
+    }
+    assert!(rec.total_sample_attempts() >= 12);
+    assert!(rec.mean_active_estimate() > 0.0);
+    assert!(
+        rec.mean_active_estimate() < 1_000_000.0,
+        "churn + wave must shrink the active fleet below registered"
+    );
+
+    // per-round population log lands beside the usual csv/json outputs
+    rec.write(&out).unwrap();
+    let pop_csv =
+        std::fs::read_to_string(out.join("pop_e2e_population.csv")).unwrap();
+    assert!(pop_csv.starts_with("round,registered,"));
+    assert_eq!(pop_csv.lines().count(), 4, "header + one row per round");
+
+    std::fs::remove_dir_all(out).ok();
+}

@@ -9,7 +9,9 @@ Two tiers:
   * suites named in --strict-suites (comma-separated, e.g. codec,pack,round)
     are a FAILING gate: any case slower than baseline by more than
     --strict-threshold (default 35%) exits 1 with a ::error:: annotation
-    (slowdowns between --threshold and --strict-threshold still warn);
+    (slowdowns between --threshold and --strict-threshold still warn); a
+    gated suite with no committed baseline only warns — the gate is
+    dormant until a baseline is blessed, then arms automatically;
   * every other suite warns at --threshold (default 25%) and never fails
     (shared-runner noise), unless --strict promotes them all.
 
@@ -120,7 +122,9 @@ def main():
             fail_threshold = None
         base_path = os.path.join(args.baselines, name)
         if not os.path.exists(base_path):
-            missing.append(name)
+            # a gated suite without a committed baseline is warn-only — the
+            # strict gate arms itself the moment a baseline is blessed
+            missing.append((name, suite in strict_suites))
             continue
         try:
             fresh_cases = load_cases(f)
@@ -142,9 +146,16 @@ def main():
             elif ratio < 1.0 - args.threshold:
                 improvements.append(line)
 
-    for name in missing:
-        print(f"bench-trend: no committed baseline for {name} — bless one with "
-              f"`python3 scripts/bench_trend.py --bless` on a quiet machine")
+    for name, gated in missing:
+        if gated:
+            print(f"::warning::bench-trend: gated suite {name} has "
+                  f"no committed baseline — the strict gate is dormant until "
+                  f"one is blessed (`python3 scripts/bench_trend.py --bless` "
+                  f"on a quiet machine)")
+        else:
+            print(f"bench-trend: no committed baseline for {name} — bless one "
+                  f"with `python3 scripts/bench_trend.py --bless` on a quiet "
+                  f"machine")
     for line in improvements:
         print(f"bench-trend: improvement: {line}")
     for threshold, line in warnings:

@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# Byte-determinism gate for one sweep profile — the shared engine behind
+# every leg of the CI determinism matrix (.github/workflows/ci.yml).
+#
+#   determinism_check.sh <profile> <out-prefix> [required-regex ...]
+#
+# Runs the profile four ways and requires all four sweep_summary.json
+# files to be byte-identical:
+#
+#   <prefix>_seq_a   --sequential                  (reference run)
+#   <prefix>_seq_b   --sequential                  (run-to-run)
+#   <prefix>_pool    --workers 4                   (cell-pool scheduling)
+#   <prefix>_scalar  --sequential, OMC_FORCE_SCALAR=1  (ISA dispatch)
+#
+# Any extra args are extended regexes that must match the reference
+# summary — the liveness greps that keep the gate non-vacuous. The schema
+# guarantees the counter keys exist on every cell, so a chaos smoke that
+# injects no faults or a scale smoke whose churn never rejects a candidate
+# can only show up as a silent zero; the greps turn that into a failure.
+#
+# Env:
+#   OMC_BIN             sweep binary (default ./target/release/omc-fl)
+#   OMC_RSS_CEILING_MB  if set, run the reference leg under GNU time -v
+#                       and fail if peak RSS exceeds this many MB — the
+#                       O(active)-memory gate for the 10^6-client scale
+#                       profile (docs/SCALE.md)
+#   OMC_TIME_BIN        GNU time binary (default /usr/bin/time)
+#
+# Exit codes: 0 = gate holds, 1 = determinism/liveness/RSS failure,
+# 2 = usage error.
+set -euo pipefail
+
+if [ "$#" -lt 2 ]; then
+  echo "usage: $0 <profile> <out-prefix> [required-regex ...]" >&2
+  exit 2
+fi
+
+profile=$1
+prefix=$2
+shift 2
+bin=${OMC_BIN:-./target/release/omc-fl}
+time_bin=${OMC_TIME_BIN:-/usr/bin/time}
+
+# ---- reference run (optionally RSS-metered) --------------------------------
+if [ -n "${OMC_RSS_CEILING_MB:-}" ] && [ -x "$time_bin" ]; then
+  if ! "$time_bin" -v "$bin" sweep --profile "$profile" --sequential \
+      --out "${prefix}_seq_a" 2> "${prefix}_time.log"; then
+    cat "${prefix}_time.log" >&2
+    echo "::error::determinism($profile): reference run failed"
+    exit 1
+  fi
+  peak_kb=$(awk -F': *' '/Maximum resident set size/ {print $2}' \
+    "${prefix}_time.log")
+  if [ -z "$peak_kb" ]; then
+    echo "::warning::determinism($profile): $time_bin emitted no RSS line — ceiling not enforced"
+  else
+    ceiling_kb=$((OMC_RSS_CEILING_MB * 1024))
+    echo "determinism($profile): peak RSS ${peak_kb} kB (ceiling ${ceiling_kb} kB)"
+    if [ "$peak_kb" -gt "$ceiling_kb" ]; then
+      echo "::error::determinism($profile): peak RSS ${peak_kb} kB exceeds the ${OMC_RSS_CEILING_MB} MB ceiling — the O(active) memory contract is broken"
+      exit 1
+    fi
+  fi
+else
+  if [ -n "${OMC_RSS_CEILING_MB:-}" ]; then
+    echo "::warning::determinism($profile): $time_bin not found — RSS ceiling skipped"
+  fi
+  "$bin" sweep --profile "$profile" --sequential --out "${prefix}_seq_a"
+fi
+
+# ---- the other three scheduling/ISA variants -------------------------------
+"$bin" sweep --profile "$profile" --sequential --out "${prefix}_seq_b"
+"$bin" sweep --profile "$profile" --workers 4 --out "${prefix}_pool"
+OMC_FORCE_SCALAR=1 "$bin" sweep --profile "$profile" --sequential \
+  --out "${prefix}_scalar"
+
+# ---- byte identity ---------------------------------------------------------
+ref="${prefix}_seq_a/sweep_summary.json"
+for variant in seq_b pool scalar; do
+  if ! cmp "$ref" "${prefix}_${variant}/sweep_summary.json"; then
+    echo "::error::determinism($profile): sweep_summary.json differs between seq_a and ${variant}"
+    exit 1
+  fi
+done
+echo "determinism($profile): sweep_summary.json byte-identical across runs, scheduling, and ISA"
+
+# ---- liveness greps --------------------------------------------------------
+for re in "$@"; do
+  if ! grep -Eq -- "$re" "$ref"; then
+    echo "::error::determinism($profile): required counter pattern '$re' not found — the gate is vacuous"
+    exit 1
+  fi
+done
+if [ "$#" -gt 0 ]; then
+  echo "determinism($profile): all $# liveness counters nonzero"
+fi
