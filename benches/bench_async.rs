@@ -37,6 +37,7 @@ fn cfg(name: &str, workers: usize, async_on: bool) -> ExperimentConfig {
         use_pvt: true,
         weights_only: true,
         fraction: 1.0,
+        integrity: false,
     };
     c.cohort.straggler_mean_s = 2.0;
     if async_on {

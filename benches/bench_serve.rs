@@ -1,0 +1,179 @@
+//! Serving-engine wall-clock benchmark: commits/sec through real worker
+//! threads at several worker counts, plus the measured uplink latency
+//! quantiles and the arena-on vs arena-off A/B rows. Runs entirely on the
+//! native backend (`native:tiny`), so it needs no artifacts and no `pjrt`
+//! feature — this bench can never silently self-skip.
+//!
+//! Every serve run is byte-compared against the planned-timeline
+//! reference (`Experiment::run_async_params_only`), so the bench doubles
+//! as a determinism smoke for the same contract the CI `smoke-serve` leg
+//! gates with `cmp` on dumped parameters.
+//!
+//! The latency/throughput rows come from `Suite::metric`: engine-reported
+//! wall-clock numbers (p50/p99, bytes/sec) are facts of one run, not
+//! closures benchkit can sample, but they belong in the same
+//! `BENCH_serve.json` schema the cross-PR trend tracker reads.
+
+use std::path::Path;
+
+use omc_fl::benchkit::Suite;
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::Experiment;
+use omc_fl::fl::async_round::{AsyncConfig, StalenessPolicy};
+use omc_fl::fl::serve::{ServeConfig, ServeReport};
+use omc_fl::runtime::engine::Engine;
+
+const COMMITS: usize = 6;
+
+fn cfg(name: &str, workers: usize, arena: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    c.rounds = COMMITS;
+    c.num_clients = 16;
+    c.clients_per_round = 8;
+    c.local_steps = 1;
+    c.lr = 0.2;
+    c.eval_every = COMMITS + 1; // only the mandatory final eval
+    c.eval_batches = 1;
+    c.omc = OmcConfig {
+        format: "S1E4M14".parse().unwrap(),
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+        integrity: false,
+    };
+    c.cohort.straggler_mean_s = 2.0;
+    c.async_cfg = AsyncConfig {
+        enabled: true,
+        concurrency: 8,
+        buffer_k: 4,
+        policy: StalenessPolicy::Polynomial { alpha: 0.5 },
+        max_staleness: usize::MAX,
+        snapshot_ring: 4,
+    };
+    c.serve = ServeConfig {
+        enabled: true,
+        workers,
+        arena,
+        probe: false, // keep the measured run free of the shutdown probe
+        ..ServeConfig::default()
+    };
+    // the per-commit stream is part of the measured path, but its rows
+    // don't belong in the repo working tree
+    c.output_dir = std::env::temp_dir().join("omc_bench_serve");
+    c
+}
+
+fn bits(exp: &Experiment) -> Vec<Vec<u32>> {
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn run_serve(engine: &Engine, cfg: ExperimentConfig) -> (Vec<Vec<u32>>, ServeReport) {
+    let mut exp = Experiment::prepare(engine, cfg).expect("prepare");
+    let (_, report) = exp.run_serve().expect("serve run");
+    (bits(&exp), report)
+}
+
+fn reference_bits(engine: &Engine, cfg: ExperimentConfig) -> Vec<Vec<u32>> {
+    let mut exp = Experiment::prepare(engine, cfg).expect("prepare");
+    exp.run_async_params_only().expect("reference run");
+    bits(&exp)
+}
+
+fn main() {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            // unreachable in default builds (the native engine always
+            // constructs); kept so a failure is loud, not a fake pass
+            println!("SKIPPED: bench_serve — engine unavailable: {e}");
+            return;
+        }
+    };
+
+    let mut suite = Suite::new(&format!(
+        "serving engine ({COMMITS} commits, K=4, conc=8, native:tiny)"
+    ));
+
+    // the bit-identity yardstick every serve row is held to
+    let ref_bits = reference_bits(&engine, cfg("serve_ref", 1, true));
+
+    for workers in [1usize, 2, 4] {
+        suite.bench(
+            &format!("serve {COMMITS} commits [workers={workers} arena=on]"),
+            Some(COMMITS),
+            || {
+                let (bits, report) =
+                    run_serve(&engine, cfg("serve_bench", workers, true));
+                assert_eq!(
+                    bits, ref_bits,
+                    "served commits diverged from the planned timeline \
+                     at workers={workers}"
+                );
+                assert_eq!(report.commits, COMMITS);
+            },
+        );
+    }
+
+    // A/B: one measured run per arena setting at full fan-out; the report
+    // rows below are what the trend tracker and PERFORMANCE.md cite
+    let (on_bits, on) = run_serve(&engine, cfg("serve_arena_on", 4, true));
+    let (off_bits, off) = run_serve(&engine, cfg("serve_arena_off", 4, false));
+    assert_eq!(on_bits, ref_bits, "arena-on run diverged");
+    assert_eq!(off_bits, ref_bits, "arena pooling leaked into commits");
+    assert!(on.frame_arena.recycled > 0, "arena-on run never recycled");
+    assert_eq!(off.frame_arena.recycled, 0, "disabled arena recycled");
+
+    for (label, r) in [("arena=on", &on), ("arena=off", &off)] {
+        // ns per commit with transport bytes => the row reads as both
+        // commits/sec and wire GB/s
+        suite.metric(
+            &format!("serve report: wall per commit [workers=4 {label}]"),
+            r.wall_s * 1e9 / r.commits.max(1) as f64,
+            Some(r.commits),
+            Some((r.down_bytes + r.up_bytes) / r.commits.max(1)),
+        );
+        suite.metric(
+            &format!("serve report: uplink p50 [workers=4 {label}]"),
+            r.uplink_p50_s * 1e9,
+            Some(r.uplinks),
+            None,
+        );
+        suite.metric(
+            &format!("serve report: uplink p99 [workers=4 {label}]"),
+            r.uplink_p99_s * 1e9,
+            Some(r.uplinks),
+            None,
+        );
+    }
+
+    suite.finish("BENCH_serve.json");
+    for r in suite.results() {
+        if r.name.contains("commits [") {
+            println!(
+                "  {}: {:.2} commits/s",
+                r.name,
+                COMMITS as f64 / (r.median_ns / 1e9)
+            );
+        }
+    }
+    for (label, r) in [("arena=on", &on), ("arena=off", &off)] {
+        println!(
+            "  serve [workers=4 {label}]: {:.2} commits/s, {:.0} bytes/s, \
+             p50 {:.2}ms p99 {:.2}ms, queue peak {}/{}, \
+             frame arena {} acquires = {} fresh + {} recycled",
+            r.commits_per_sec(),
+            r.bytes_per_sec(),
+            r.uplink_p50_s * 1e3,
+            r.uplink_p99_s * 1e3,
+            r.queue_peak_depth,
+            r.queue_depth,
+            r.frame_arena.acquires,
+            r.frame_arena.fresh,
+            r.frame_arena.recycled,
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! **Serve stress** — open-loop wall-clock load against the serving
+//! engine.
+//!
+//! The tables and the async bench measure the *planned* timeline; this
+//! driver measures the *served* one: real worker threads training against
+//! epoch-published snapshots, arena-pooled frames, and a bounded uplink
+//! queue with admission accounting (docs/SERVING.md). It walks the
+//! `presets::serve_ladder` — worker fan-out, the arena A/B, and a paced
+//! open-loop rung — and per rung reports commits/sec, transport bytes/sec,
+//! measured uplink p50/p99, queue high-water mark, rejected-and-readmitted
+//! uplinks, and the frame-arena recycling ratio.
+//!
+//! Every rung is byte-compared against the planned-timeline reference
+//! (`run_async_params_only`) before its row prints: wall-clock scheduling,
+//! pooling, and backpressure must never leak into the committed model.
+//!
+//!     cargo run --release --example serve_stress -- --rounds 8
+//!
+//! Runs on `native:tiny` by default, so it needs no artifacts.
+
+use anyhow::Result;
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::presets::{self, Scale};
+use omc_fl::coordinator::Experiment;
+use omc_fl::data::partition::Partition;
+use omc_fl::fl::async_round::{AsyncConfig, StalenessPolicy};
+use omc_fl::fl::serve::ServeConfig;
+use omc_fl::util::cli::Args;
+
+fn param_bits(exp: &Experiment) -> Vec<Vec<u32>> {
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::new(
+        "serve_stress",
+        "wall-clock serving-engine load across the preset ladder",
+    );
+    args.flag("rounds", "commits per rung", Some("8"));
+    args.flag("seed", "rng seed", Some("42"));
+    args.flag(
+        "model-dir",
+        "model to serve (native:tiny needs no artifacts)",
+        Some("native:tiny"),
+    );
+    args.flag("format", "OMC storage format", Some("S1E4M14"));
+    let m = args.parse();
+    let scale = Scale::from_flags(m.get_usize("rounds")?, m.get_u64("seed")?);
+    let model_dir = m.get("model-dir").unwrap();
+    let omc = OmcConfig {
+        format: m.get("format").unwrap().parse()?,
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+        integrity: false,
+    };
+    let out = "results/serve_stress";
+
+    let engine = omc_fl::runtime::engine::Engine::cpu()?;
+    let model = presets::bind_model(&engine, model_dir)?;
+
+    let cfg = |label: &str, serve: ServeConfig| -> ExperimentConfig {
+        let mut c = presets::experiment(
+            label,
+            model_dir,
+            &scale,
+            Partition::BySpeaker,
+            0,
+            omc,
+            out,
+        );
+        c.async_cfg = AsyncConfig {
+            enabled: true,
+            concurrency: 8,
+            buffer_k: 4,
+            policy: StalenessPolicy::Polynomial { alpha: 0.5 },
+            max_staleness: usize::MAX,
+            snapshot_ring: 4,
+        };
+        c.serve = serve;
+        c
+    };
+
+    // the planned-timeline yardstick every rung's commits are held to
+    let mut reference =
+        Experiment::prepare_with_model(cfg("serve_ref", ServeConfig::default()), model.clone())?;
+    reference.run_async_params_only()?;
+    let ref_bits = param_bits(&reference);
+
+    println!(
+        "\n## Serve stress — {} commits per rung, {} over {}\n",
+        scale.rounds,
+        m.get("format").unwrap(),
+        model_dir
+    );
+    println!(
+        "| {:<30} | {:>9} | {:>10} | {:>8} | {:>8} | {:>6} | {:>8} | {:>13} |",
+        "", "commits/s", "bytes/s", "p50 ms", "p99 ms", "peak q", "rejected", "arena f/r"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|{}|{}|{}|",
+        "-".repeat(32),
+        "-".repeat(11),
+        "-".repeat(12),
+        "-".repeat(10),
+        "-".repeat(10),
+        "-".repeat(8),
+        "-".repeat(10),
+        "-".repeat(15)
+    );
+
+    for (label, serve) in presets::serve_ladder() {
+        let mut exp = Experiment::prepare_with_model(cfg(&label, serve), model.clone())?;
+        let (_, report) = exp.run_serve()?;
+        assert_eq!(
+            param_bits(&exp),
+            ref_bits,
+            "rung '{label}' diverged from the planned timeline"
+        );
+        println!(
+            "| {:<30} | {:>9.2} | {:>10.0} | {:>8.2} | {:>8.2} | {:>6} | {:>8} | {:>6}/{:<6} |",
+            label,
+            report.commits_per_sec(),
+            report.bytes_per_sec(),
+            report.uplink_p50_s * 1e3,
+            report.uplink_p99_s * 1e3,
+            report.queue_peak_depth,
+            report.rejected_total(),
+            report.frame_arena.fresh,
+            report.frame_arena.recycled,
+        );
+    }
+    println!(
+        "\nevery rung's committed parameters are bit-identical to the \
+         planned-timeline reference; per-commit rows stream to \
+         {out}/*_serve_commits.csv"
+    );
+    Ok(())
+}

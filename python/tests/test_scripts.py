@@ -348,6 +348,47 @@ def test_bench_trend_delta_suite_is_gated(tmp_path, monkeypatch, capsys):
     assert "'delta'" in capsys.readouterr().out
 
 
+def test_bench_trend_serve_suite_is_gated_dormant(tmp_path, monkeypatch, capsys):
+    # the CI invocation gates the serving-engine suite alongside
+    # codec/pack/round/delta/population. Like population when it landed,
+    # serve starts dormant: fresh JSON with no committed baseline warns,
+    # and the gate arms itself the moment a baseline is blessed
+    gate = ["--strict-suites", "codec,serve", "--strict-threshold", "0.35"]
+    argv = trend_env(tmp_path, {"serve 6 commits": 100.0}, None, suite="serve")
+    write(Path(argv[1]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    write(Path(argv[3]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out and "dormant" in out and "serve" in out
+    # blessed baseline + regression -> the armed gate fails
+    argv = trend_env(
+        tmp_path,
+        {"serve 6 commits": 200.0},
+        {"serve 6 commits": 100.0},
+        suite="serve",
+        tag="t11",
+    )
+    assert run_main(bench_trend, argv + ["--strict-suites", "serve"], monkeypatch) == 1
+    assert "::error::" in capsys.readouterr().out
+
+
+def test_bench_capture_covers_every_bench_target():
+    # bench_capture.sh is how baselines get blessed; a [[bench]] target it
+    # does not run can never arm its trend gate (the gap that left delta
+    # and population baselines uncapturable)
+    root = SCRIPTS.parent
+    cargo = (root / "Cargo.toml").read_text()
+    capture = (root / "scripts" / "bench_capture.sh").read_text()
+    targets = [
+        line.split('"')[1]
+        for line in cargo.splitlines()
+        if line.startswith('name = "bench_')
+    ]
+    assert targets, "no [[bench]] targets parsed from Cargo.toml"
+    missing = [t for t in targets if t not in capture]
+    assert not missing, f"bench_capture.sh never runs: {missing}"
+
+
 def test_bench_trend_suite_name_parsing():
     assert bench_trend.suite_name("BENCH_codec.json") == "codec"
     assert bench_trend.suite_name("/tmp/x/BENCH_round.json") == "round"
@@ -390,6 +431,24 @@ STUB_TIME = """#!/usr/bin/env bash
 shift  # -v
 echo "\tMaximum resident set size (kbytes): $STUB_RSS_KB" >&2
 exec "$@"
+"""
+
+# a stand-in BSD/macOS time: rejects GNU's -v (so the gate's dialect
+# probe must fall back), accepts -l, and reports peak RSS in BYTES with
+# the value-first layout `/usr/bin/time -l` uses
+STUB_TIME_BSD = """#!/usr/bin/env bash
+if [ "$1" = "-v" ]; then
+  echo "stub-bsd-time: illegal option -- v" >&2
+  exit 1
+fi
+shift  # -l
+echo "  $STUB_RSS_BYTES  maximum resident set size" >&2
+exec "$@"
+"""
+
+# a time binary that speaks neither dialect
+STUB_TIME_NONE = """#!/usr/bin/env bash
+exit 1
 """
 
 
@@ -482,7 +541,8 @@ def test_determinism_check_rss_ceiling(tmp_path):
     r = det_check(tmp_path, env={**env, "STUB_RSS_KB": "900000"})
     assert r.returncode == 1
     assert "::error::" in r.stdout and "ceiling" in r.stdout
-    # a time binary that is absent degrades to a warning, not a failure
+    # a time binary that is absent must FAIL — a requested ceiling the
+    # gate cannot meter would otherwise void the memory contract silently
     r = det_check(
         tmp_path,
         env={
@@ -490,8 +550,51 @@ def test_determinism_check_rss_ceiling(tmp_path):
             "OMC_RSS_CEILING_MB": "400",
         },
     )
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "cannot be enforced" in r.stdout
+
+
+@pytestmark_sh
+def test_determinism_check_rss_bsd_fallback(tmp_path):
+    # a BSD/macOS time binary (no -v, value-first -l output in bytes):
+    # the gate must fall back, convert bytes -> kB, and enforce the same
+    # ceiling — previously this host silently skipped the check
+    stub_time = tmp_path / "stub-bsd-time"
+    stub_time.write_text(STUB_TIME_BSD)
+    stub_time.chmod(0o755)
+    env = {"OMC_TIME_BIN": str(stub_time), "OMC_RSS_CEILING_MB": "400"}
+    # 100000 kB worth of bytes stays under the 400 MB ceiling
+    r = det_check(tmp_path, env={**env, "STUB_RSS_BYTES": str(100000 * 1024)})
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "::warning::" in r.stdout and "RSS ceiling skipped" in r.stdout
+    assert "peak RSS 100000 kB" in r.stdout
+    # ...and a blowup past the ceiling fails through the same fallback
+    r = det_check(tmp_path, env={**env, "STUB_RSS_BYTES": str(900000 * 1024)})
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "ceiling" in r.stdout
+
+
+@pytestmark_sh
+def test_determinism_check_rss_unmeterable_hosts_fail_loudly(tmp_path):
+    # neither GNU -v nor BSD -l: the probe must refuse to run unmetered
+    stub_time = tmp_path / "stub-none-time"
+    stub_time.write_text(STUB_TIME_NONE)
+    stub_time.chmod(0o755)
+    r = det_check(
+        tmp_path,
+        env={"OMC_TIME_BIN": str(stub_time), "OMC_RSS_CEILING_MB": "400"},
+    )
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "neither GNU -v nor BSD -l" in r.stdout
+    # a dialect that probes fine but emits no RSS line is equally fatal
+    gnu = tmp_path / "stub-gnu-time"
+    gnu.write_text(STUB_TIME)  # with STUB_RSS_KB unset the value is empty
+    gnu.chmod(0o755)
+    r = det_check(
+        tmp_path,
+        env={"OMC_TIME_BIN": str(gnu), "OMC_RSS_CEILING_MB": "400"},
+    )
+    assert r.returncode == 1
+    assert "::error::" in r.stdout and "no RSS line" in r.stdout
 
 
 if __name__ == "__main__":

@@ -151,6 +151,32 @@ impl Suite {
         &self.results
     }
 
+    /// Record a directly-measured quantity as a result row: `median_ns`
+    /// carries the value, MAD is 0, and `iters` is 1. Wall-clock engine
+    /// numbers (latency quantiles, commits/sec expressed as ns/commit)
+    /// can't be re-run under [`bench_case`](Self::bench_case)'s sampling
+    /// loop, but still belong in the same JSON schema the cross-PR trend
+    /// tracker reads.
+    pub fn metric(
+        &mut self,
+        name: &str,
+        value_ns: f64,
+        elems: Option<usize>,
+        bytes: Option<usize>,
+    ) {
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: value_ns,
+            mad_ns: 0.0,
+            iters: 1,
+            elems,
+            bytes,
+            warmup_iters: 0,
+        };
+        eprintln!("  measured {name}: {}", fmt_ns(res.median_ns));
+        self.results.push(res);
+    }
+
     /// Print the markdown table to stdout.
     pub fn report(&self) {
         println!("\n### {}\n", self.title);
@@ -324,6 +350,21 @@ mod tests {
         let txt = std::fs::read_to_string(&path).unwrap();
         assert!(crate::util::json::parse(&txt).is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metric_rows_share_the_result_schema() {
+        let mut s = Suite::new("metric test");
+        // p99 of 2.5ms with 64 uplinks moving 4096 bytes/iter
+        s.metric("serve uplink p99", 2.5e6, Some(64), Some(4096));
+        let r = &s.results()[0];
+        assert_eq!((r.median_ns, r.mad_ns, r.iters), (2.5e6, 0.0, 1));
+        assert!(r.throughput_gb_s().unwrap() > 0.0);
+        let j = s.to_json().to_string();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("median_ns").unwrap().as_f64(), Some(2.5e6));
+        assert_eq!(rows[0].get("iters").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

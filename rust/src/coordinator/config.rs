@@ -11,6 +11,7 @@ use crate::fl::chaos::ChaosConfig;
 use crate::fl::cohort::CohortConfig;
 use crate::fl::population::PopulationConfig;
 use crate::fl::sampler::SamplerKind;
+use crate::fl::serve::ServeConfig;
 use crate::omc::format::FloatFormat;
 use crate::util::toml::{self, Table};
 
@@ -104,6 +105,11 @@ pub struct ExperimentConfig {
     /// edge→root aggregation topology (`fl::population`, docs/SCALE.md).
     /// When enabled, `registered` replaces `fl.clients` as the fleet size
     pub population: PopulationConfig,
+    /// wall-clock serving engine (`[serve]` table): drive the async phase
+    /// through real worker threads with lock-free snapshot publication,
+    /// arena-pooled frames, and a bounded uplink queue (`fl::serve`,
+    /// docs/SERVING.md). Requires `async.enabled`
+    pub serve: ServeConfig,
     pub output_dir: PathBuf,
     /// optional checkpoint to start from (domain adaptation)
     pub init_from: Option<PathBuf>,
@@ -136,6 +142,7 @@ impl ExperimentConfig {
             chaos: ChaosConfig::default(),
             delta: DeltaConfig::default(),
             population: PopulationConfig::off(),
+            serve: ServeConfig::default(),
             output_dir: PathBuf::from("results"),
             init_from: None,
             save_to: None,
@@ -340,6 +347,42 @@ impl ExperimentConfig {
             !pop_knobs || pop_enabled.is_some(),
             "[population] knobs need an explicit population.enabled = true|false"
         );
+        let serve_enabled = get_b("serve.enabled");
+        if let Some(v) = serve_enabled {
+            cfg.serve.enabled = v;
+        }
+        let mut serve_knobs = false;
+        if let Some(v) = get_i("serve.workers") {
+            anyhow::ensure!(v >= 0, "serve.workers must be >= 0 (0 = auto)");
+            cfg.serve.workers = v as usize;
+            serve_knobs = true;
+        }
+        if let Some(v) = get_i("serve.queue_depth") {
+            anyhow::ensure!(
+                v >= 0,
+                "serve.queue_depth must be >= 0 (0 = 2x concurrency)"
+            );
+            cfg.serve.queue_depth = v as usize;
+            serve_knobs = true;
+        }
+        if let Some(v) = get_b("serve.arena") {
+            cfg.serve.arena = v;
+            serve_knobs = true;
+        }
+        if let Some(v) = get_f("serve.rate") {
+            cfg.serve.rate = v;
+            serve_knobs = true;
+        }
+        if let Some(v) = get_b("serve.probe") {
+            cfg.serve.probe = v;
+            serve_knobs = true;
+        }
+        // serving knobs without the master switch would silently no-op —
+        // reject the misconfiguration (same rule as [chaos]/[population])
+        anyhow::ensure!(
+            !serve_knobs || serve_enabled.is_some(),
+            "[serve] knobs need an explicit serve.enabled = true|false"
+        );
         if let Some(v) = get_str("output_dir") {
             cfg.output_dir = PathBuf::from(v);
         }
@@ -407,6 +450,14 @@ impl ExperimentConfig {
             !self.delta.enabled || self.omc.integrity,
             "delta.enabled requires omc.integrity = true (delta frames \
              ride the checksummed v3 wire layout)"
+        );
+        self.serve.validate()?;
+        // the serving engine executes the *async* planned timeline through
+        // real threads — without the async phase there is nothing to serve
+        anyhow::ensure!(
+            !self.serve.enabled || self.async_cfg.enabled,
+            "serve.enabled requires async.enabled = true (the serving \
+             engine drives the buffered async plan)"
         );
         Ok(())
     }
@@ -709,6 +760,77 @@ mod tests {
             ExperimentConfig::from_table(&toml::parse(&dangling).unwrap())
                 .unwrap_err();
         assert!(err.to_string().contains("population.enabled"), "{err}");
+    }
+
+    const SERVE_SAMPLE: &str = r#"
+        name = "serve_cell"
+
+        [fl]
+        clients = 16
+        clients_per_round = 8
+
+        [async]
+        enabled = true
+        concurrency = 6
+        buffer_k = 3
+
+        [serve]
+        enabled = true
+        workers = 4
+        queue_depth = 10
+        arena = false
+        rate = 200.0
+        probe = false
+    "#;
+
+    #[test]
+    fn parses_serve_table_and_defaults() {
+        let t = toml::parse(SERVE_SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.serve.enabled);
+        assert_eq!(c.serve.workers, 4);
+        assert_eq!(c.serve.queue_depth, 10);
+        assert!(!c.serve.arena);
+        assert_eq!(c.serve.rate, 200.0);
+        assert!(!c.serve.probe);
+        // absent table → disabled defaults with arena + probe on
+        let plain =
+            ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap())
+                .unwrap();
+        assert!(!plain.serve.enabled);
+        assert!(plain.serve.arena && plain.serve.probe);
+        assert_eq!((plain.serve.workers, plain.serve.queue_depth), (0, 0));
+    }
+
+    #[test]
+    fn serve_requires_async_and_rejects_bad_knobs() {
+        // serving without the async phase has nothing to execute
+        let no_async = SERVE_SAMPLE.replace(
+            "[async]\n        enabled = true",
+            "[async]\n        enabled = false",
+        );
+        let err = ExperimentConfig::from_table(&toml::parse(&no_async).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("async.enabled"), "{err}");
+        for (from, to) in [
+            ("workers = 4", "workers = -1"),
+            ("queue_depth = 10", "queue_depth = -2"),
+            ("rate = 200.0", "rate = -5.0"),
+        ] {
+            let bad = SERVE_SAMPLE.replace(from, to);
+            let t = toml::parse(&bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+        // serving knobs without the master switch must be rejected, not
+        // silently ignored
+        let dangling = SERVE_SAMPLE.replace(
+            "[serve]\n        enabled = true",
+            "[serve]",
+        );
+        let err =
+            ExperimentConfig::from_table(&toml::parse(&dangling).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("serve.enabled"), "{err}");
     }
 
     #[test]

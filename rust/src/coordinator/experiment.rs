@@ -14,8 +14,9 @@ use crate::fl::chaos::Quarantine;
 use crate::fl::client::ClientTrainConfig;
 use crate::fl::round::{RoundContext, RoundEngine};
 use crate::fl::sampler::Sampler;
+use crate::fl::serve::{ServeEngine, ServeReport};
 use crate::fl::server::Server;
-use crate::metrics::recorder::{Recorder, RoundRecord};
+use crate::metrics::recorder::{CsvStream, Recorder, RoundRecord};
 use crate::metrics::stats::Timer;
 use crate::metrics::wer::WerAccumulator;
 use crate::omc::selection::SelectionPolicy;
@@ -554,6 +555,149 @@ impl Experiment {
                 round_seconds,
             });
             rec.push_commit(outcome.commit);
+        }
+        Ok(())
+    }
+
+    /// Drive the async plan through the wall-clock serving engine
+    /// (`fl::serve`, `omc-fl serve`): real worker threads, lock-free
+    /// snapshot publication, arena-pooled frames, bounded uplink queue.
+    /// Per-commit rows stream to `<output_dir>/<name>_serve_commits.csv`
+    /// through a held writer flushed on each commit boundary, so a killed
+    /// run keeps every completed commit on disk. No WER evaluation — the
+    /// serving engine measures throughput; training results are
+    /// bit-identical to [`run_with`](Self::run_with) in async mode.
+    pub fn run_serve(&mut self) -> Result<(Recorder, ServeReport)> {
+        self.warmup()?;
+        let mut rec = Recorder::new(&self.cfg.name);
+        // inline field borrows (not a helper taking &self) so the context
+        // stays disjoint from the `&mut self.server` the engine needs
+        let ctx = AsyncContext {
+            model: &self.model,
+            domain: &self.domain,
+            assignment: &self.assignment,
+            sampler: &self.sampler,
+            policy: self.policy(),
+            train: self.train_config(),
+            cohort: self.cfg.cohort,
+            chaos: self.cfg.chaos,
+            integrity: self.cfg.omc.integrity,
+            delta: self.cfg.delta.enabled,
+            acfg: self.cfg.async_cfg.resolved(self.cfg.clients_per_round),
+            population: self.cfg.population,
+            seed: self.cfg.seed,
+            workers: self.cfg.workers,
+        };
+        let mut engine =
+            ServeEngine::new(&ctx, self.cfg.rounds, &self.cfg.serve)?;
+        let scfg = *engine.config();
+        crate::log_info!(
+            "serving engine: workers={}, queue_depth={}, arena={}, rate={}, {} commits",
+            scfg.workers,
+            scfg.queue_depth,
+            scfg.arena,
+            if scfg.rate > 0.0 {
+                format!("{}/s", scfg.rate)
+            } else {
+                "unpaced".to_string()
+            },
+            self.cfg.rounds
+        );
+        let stream_path = self
+            .cfg
+            .output_dir
+            .join(format!("{}_serve_commits.csv", self.cfg.name));
+        let mut stream = CsvStream::create(
+            &stream_path,
+            "commit,folded,discarded,virtual_time,loss",
+        )?;
+        let report = engine.run(&ctx, &mut self.server, |v, outcome| {
+            stream.append(&format!(
+                "{},{},{},{:.6},{:.6}",
+                v,
+                outcome.folded,
+                outcome.commit.discarded_updates,
+                outcome.commit.virtual_time,
+                outcome.mean_loss
+            ))?;
+            stream.flush()?;
+            rec.push(RoundRecord {
+                round: v,
+                train_loss: outcome.mean_loss,
+                eval_loss: 0.0,
+                eval_wer: -1.0,
+                down_bytes: outcome.down_bytes,
+                up_bytes: outcome.up_bytes,
+                up_bytes_discarded: outcome.up_bytes_discarded,
+                sampled: outcome.dispatched,
+                completed: outcome.folded,
+                dropped: outcome.dropped,
+                late: outcome.commit.discarded_updates,
+                crashed: outcome.crashed,
+                frames_rejected: outcome.frames_rejected,
+                up_bytes_rejected: outcome.up_bytes_rejected,
+                up_bytes_delta_saved: outcome.up_bytes_delta_saved,
+                round_seconds: 0.0,
+            });
+            rec.push_commit(outcome.commit.clone());
+            Ok(())
+        })?;
+        crate::log_info!(
+            "serve: {} commits in {:.2}s ({:.1} commits/sec, {:.0} bytes/sec), \
+             p50 {:.1}ms p99 {:.1}ms, queue peak {} rejected {}",
+            report.commits,
+            report.wall_s,
+            report.commits_per_sec(),
+            report.bytes_per_sec(),
+            report.uplink_p50_s * 1e3,
+            report.uplink_p99_s * 1e3,
+            report.queue_peak_depth,
+            report.rejected_total()
+        );
+        if let Some(path) = &self.cfg.save_to {
+            params_io::save(path, &self.server.params)?;
+            crate::log_info!("saved checkpoint to {}", path.display());
+        }
+        Ok((rec, report))
+    }
+
+    /// The planned-timeline reference for the serving engine's bit-identity
+    /// contract: run the async commits inline with no evaluation and no
+    /// recording, leaving only the committed parameters in `self.server`.
+    pub fn run_async_params_only(&mut self) -> Result<()> {
+        self.warmup()?;
+        let ctx = AsyncContext {
+            model: &self.model,
+            domain: &self.domain,
+            assignment: &self.assignment,
+            sampler: &self.sampler,
+            policy: self.policy(),
+            train: self.train_config(),
+            cohort: self.cfg.cohort,
+            chaos: self.cfg.chaos,
+            integrity: self.cfg.omc.integrity,
+            delta: self.cfg.delta.enabled,
+            acfg: self.cfg.async_cfg.resolved(self.cfg.clients_per_round),
+            population: self.cfg.population,
+            seed: self.cfg.seed,
+            workers: self.cfg.workers,
+        };
+        let mut engine = AsyncRoundEngine::plan(&ctx, self.cfg.rounds)?;
+        let mut rounds = std::mem::take(&mut self.rounds);
+        let mut out = Ok(());
+        for _ in 0..self.cfg.rounds {
+            if let Err(e) =
+                engine.run_commit(&ctx, &mut self.server, rounds.scratch_mut())
+            {
+                out = Err(e);
+                break;
+            }
+        }
+        self.rounds = rounds;
+        out?;
+        if let Some(path) = &self.cfg.save_to {
+            params_io::save(path, &self.server.params)?;
+            crate::log_info!("saved checkpoint to {}", path.display());
         }
         Ok(())
     }

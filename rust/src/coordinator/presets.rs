@@ -14,6 +14,7 @@ use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
 use crate::fl::cohort::CohortConfig;
 use crate::fl::population::PopulationConfig;
+use crate::fl::serve::ServeConfig;
 use crate::metrics::recorder::Recorder;
 use crate::runtime::engine::{Engine, LoadedModel};
 
@@ -254,6 +255,34 @@ pub fn scale_ladder() -> Vec<(String, PopulationConfig)> {
                 wave_amplitude: 0.6,
                 wave_period: 4,
             },
+        ),
+    ]
+}
+
+/// The sustained-service scenario ladder driven by
+/// `examples/serve_stress.rs` and `benches/bench_serve.rs`: from a single
+/// worker (the concurrency floor — scheduling effects only) through the
+/// machine's full worker count, the arena-off A/B control arm, and an
+/// open-loop paced arrival stream. Every rung commits bit-identical
+/// parameters (`docs/SERVING.md`); only the wall-clock numbers move.
+pub fn serve_ladder() -> Vec<(String, ServeConfig)> {
+    let on = ServeConfig {
+        enabled: true,
+        ..ServeConfig::default()
+    };
+    vec![
+        (
+            "1 worker, arena".into(),
+            ServeConfig { workers: 1, ..on },
+        ),
+        ("full workers, arena".into(), on),
+        (
+            "full workers, no arena (A/B)".into(),
+            ServeConfig { arena: false, ..on },
+        ),
+        (
+            "full workers, paced 200/s".into(),
+            ServeConfig { rate: 200.0, ..on },
         ),
     ]
 }
@@ -526,6 +555,25 @@ mod tests {
         // ...while the flat-root rung isolates the lazy-fleet change
         assert_eq!(rows[1].1.churn_rate, 0.0);
         assert_eq!(rows[1].1.wave_amplitude, 0.0);
+    }
+
+    #[test]
+    fn serve_ladder_spans_workers_arena_and_pacing() {
+        let rows = serve_ladder();
+        assert_eq!(rows.len(), 4);
+        for (_, s) in &rows {
+            assert!(s.enabled);
+            s.validate().unwrap();
+        }
+        // rung 0 pins the concurrency floor; rung 1 resolves to the machine
+        assert_eq!(rows[0].1.workers, 1);
+        assert_eq!(rows[1].1.workers, 0);
+        // the A/B control arm differs from rung 1 only in the arena knob
+        assert!(rows[1].1.arena && !rows[2].1.arena);
+        assert_eq!(rows[1].1.workers, rows[2].1.workers);
+        // the paced rung is the only one with an arrival rate
+        assert!(rows[3].1.rate > 0.0);
+        assert!(rows[..3].iter().all(|(_, s)| s.rate == 0.0));
     }
 
     #[test]

@@ -61,6 +61,7 @@
 //! this bit-exactly.
 
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -87,7 +88,7 @@ use crate::util::threadpool;
 /// Client-RNG stream tag — MUST equal the constant `fl::round::run_round`
 /// uses, so wave-0 uploads are bit-identical to sync round-0 uploads (the
 /// first-commit equivalence test enforces this).
-const CLIENT_STREAM: u64 = 0xC11E27;
+pub(crate) const CLIENT_STREAM: u64 = 0xC11E27;
 
 // ---- configuration -------------------------------------------------------
 
@@ -704,13 +705,101 @@ pub struct CommitOutcome {
     pub commit: CommitRecord,
 }
 
+/// One executed wave, ready to fold: the trained results *in task order*
+/// plus the wave's downlink byte total. Produced inline by
+/// [`AsyncRoundEngine::run_commit`] and by the serving engine's uplink
+/// queue drain (`fl::serve`), which re-imposes task order on whatever
+/// order the worker threads finished in.
+pub(crate) struct WaveExecution {
+    /// `(task index, result)` for every trainable dispatch of the wave,
+    /// ordered by task index
+    pub(crate) results: Vec<(usize, ClientResult)>,
+    /// server→client bytes for every dispatch of the wave
+    pub(crate) down_bytes: usize,
+}
+
+/// Whether a planned dispatch actually trains: it arrives (folded or
+/// stale-discarded), or it trained but gave up after all-corrupt retries.
+/// Dropped, hard-crashed, and end-of-phase in-flight dispatches spend
+/// downlink bytes only.
+pub(crate) fn dispatch_trains(d: &PlannedDispatch) -> bool {
+    matches!(
+        d.outcome,
+        DispatchOutcome::Folded { .. } | DispatchOutcome::Discarded { .. }
+    ) || (d.outcome == DispatchOutcome::Crashed
+        && d.chaos.as_ref().map_or(false, |c| c.gave_up && !c.crashed))
+}
+
+/// Whether a dispatch's uplink ships as a v3 delta frame. Decided straight
+/// off the plan (so it is identical for any worker count or schedule): an
+/// uplink deltas against its start version's snapshot only when the
+/// planned fold still finds that snapshot in the ring — at the fold of
+/// commit `c` the ring holds versions `c - (depth-1) ..= c`, so the
+/// condition is `staleness < depth`. Everything else (stale folds,
+/// discards, give-ups, in-flight) ships verbatim v2.
+pub(crate) fn delta_frames(
+    d: &PlannedDispatch,
+    delta_on: bool,
+    ring_depth: usize,
+) -> bool {
+    delta_on
+        && matches!(
+            d.outcome,
+            DispatchOutcome::Folded { staleness, .. }
+                if staleness < ring_depth
+        )
+}
+
+/// Train one planned dispatch: the client RNG, nonce, delta base, and
+/// speaker shard are all pure functions of `(ctx, d)`, so the upload bytes
+/// are bit-identical no matter which thread or engine runs this. Shared by
+/// [`AsyncRoundEngine::run_commit`] and the serving engine's workers.
+pub(crate) fn run_planned_client(
+    ctx: &AsyncContext<'_>,
+    d: &PlannedDispatch,
+    downlink: &[u8],
+    mask: &[f32],
+    delta_on: bool,
+    ring_depth: usize,
+    cs: &mut ClientScratch,
+) -> Result<ClientResult> {
+    let mut rng = Xoshiro256pp::new(hash_seed(&[
+        ctx.seed,
+        CLIENT_STREAM,
+        d.wave,
+        d.cid as u64,
+    ]));
+    let mut tc = ctx.train;
+    if ctx.integrity {
+        tc.uplink_nonce = Some(uplink_nonce(ctx.seed, d.wave, d.cid as u64));
+    }
+    if delta_frames(d, delta_on, ring_depth) {
+        tc.delta_base = Some(d.start_version as u64);
+    }
+    // speakers_of works in dense AND lazy (population) modes
+    let shard = ctx.assignment.speakers_of(d.cid);
+    client::run_client_round(
+        ctx.model,
+        ctx.domain,
+        shard.as_ref(),
+        downlink,
+        mask,
+        tc,
+        &mut rng,
+        cs,
+    )
+    .with_context(|| format!("client {} wave {}", d.cid, d.wave))
+}
+
 /// The buffered async executor: owns the plan, the snapshot ring, and the
 /// stash of uploads waiting for their commit. One instance per async
 /// phase; per-call scratch comes from the caller's [`RoundScratch`] so
 /// warmed codec buffers are shared with the sync engine across sweep
 /// cells.
 pub struct AsyncRoundEngine {
-    plan: AsyncPlan,
+    /// the planned timeline, shared (`Arc`) so the wall-clock serving
+    /// engine's worker threads can hold it without borrowing the engine
+    plan: Arc<AsyncPlan>,
     ring: SnapshotRing,
     /// dispatch seqs grouped by start version (the execution waves)
     by_version: Vec<Vec<usize>>,
@@ -736,6 +825,11 @@ pub struct AsyncRoundEngine {
     /// an update folds into a commit — never on rejected, corrupt,
     /// duplicate, or stale-discarded frames)
     acks: AckLedger,
+    /// stash consumed uplink wires in `spent` instead of dropping them
+    /// (the serving engine recycles them through its byte arena)
+    recycle_uplinks: bool,
+    /// uplink buffers consumed by folds since the last `take_spent`
+    spent: Vec<Vec<u8>>,
     next_commit: usize,
 }
 
@@ -769,15 +863,30 @@ impl AsyncRoundEngine {
             discard_bytes: vec![0; commits],
             uploads,
             by_version,
-            plan,
+            plan: Arc::new(plan),
             wave_vals: Vec::new(),
             wave_vals_version: usize::MAX,
             spare_vals: Vec::new(),
             decode_scratch: Vec::new(),
             ledger: NonceLedger::new((ctx.acfg.concurrency * 2).max(16)),
             acks: AckLedger::new(),
+            recycle_uplinks: false,
+            spent: Vec::new(),
             next_commit: 0,
         })
+    }
+
+    /// Keep consumed uplink wires in a stash instead of dropping them
+    /// (see [`take_spent`](Self::take_spent)). Off by default.
+    pub(crate) fn set_recycle_uplinks(&mut self, on: bool) {
+        self.recycle_uplinks = on;
+    }
+
+    /// Drain the stash of uplink buffers consumed by folds since the last
+    /// call (empty unless [`set_recycle_uplinks`](Self::set_recycle_uplinks)
+    /// turned stashing on).
+    pub(crate) fn take_spent(&mut self) -> Vec<Vec<u8>> {
+        std::mem::take(&mut self.spent)
     }
 
     /// The delta ack ledger (read-only — regression tests assert it only
@@ -788,7 +897,24 @@ impl AsyncRoundEngine {
 
     /// The planned timeline (read-only — for tests and reporting).
     pub fn timeline(&self) -> &AsyncPlan {
-        &self.plan
+        self.plan.as_ref()
+    }
+
+    /// A shared handle to the planned timeline (the serving engine's
+    /// dispatcher and workers iterate it without borrowing the engine).
+    pub(crate) fn timeline_arc(&self) -> Arc<AsyncPlan> {
+        Arc::clone(&self.plan)
+    }
+
+    /// Dispatch seqs that train against version `v` (the wave).
+    pub(crate) fn wave_tasks(&self, v: usize) -> &[usize] {
+        &self.by_version[v]
+    }
+
+    /// Decompressed values of the wave's snapshot — valid after
+    /// [`begin_wave`](Self::begin_wave) until the next `fold_commit`.
+    pub(crate) fn wave_vals(&self) -> &[Vec<f32>] {
+        &self.wave_vals
     }
 
     /// Commits planned for this phase.
@@ -801,16 +927,17 @@ impl AsyncRoundEngine {
         &self.ring
     }
 
-    /// Execute the next wave and commit one model version, updating
-    /// `server` in place. Call exactly [`commits_planned`] times.
-    ///
-    /// [`commits_planned`]: Self::commits_planned
-    pub fn run_commit(
+    /// Start wave `v = next_commit`: seed the ring at version 0, fetch the
+    /// wave's snapshot, and ensure `wave_vals` holds its decompressed
+    /// values. Returns `(v, snapshot)` — a shared handle, so the serving
+    /// engine (`fl::serve`) can publish it to worker threads while the
+    /// ring moves on. Shared by [`run_commit`](Self::run_commit) and the
+    /// serving engine; always paired with a later `fold_commit`.
+    pub(crate) fn begin_wave(
         &mut self,
         ctx: &AsyncContext<'_>,
-        server: &mut Server,
-        scratch: &mut RoundScratch,
-    ) -> Result<CommitOutcome> {
+        server: &Server,
+    ) -> Result<(usize, Arc<CompressedModel>)> {
         let v = self.next_commit;
         anyhow::ensure!(
             v < self.plan.commits.len(),
@@ -831,10 +958,7 @@ impl AsyncRoundEngine {
                 ),
             );
         }
-
-        let plan = &self.plan;
-        let tasks: &[usize] = &self.by_version[v];
-        let snap = self.ring.get(v).with_context(|| {
+        let snap = self.ring.get_shared(v).with_context(|| {
             format!(
                 "snapshot for version {v} evicted (ring depth {})",
                 self.ring.capacity()
@@ -852,6 +976,25 @@ impl AsyncRoundEngine {
             }
             self.wave_vals_version = v;
         }
+        Ok((v, snap))
+    }
+
+    /// Execute the next wave and commit one model version, updating
+    /// `server` in place. Call exactly [`commits_planned`] times.
+    ///
+    /// [`commits_planned`]: Self::commits_planned
+    pub fn run_commit(
+        &mut self,
+        ctx: &AsyncContext<'_>,
+        server: &mut Server,
+        scratch: &mut RoundScratch,
+    ) -> Result<CommitOutcome> {
+        let (v, snap) = self.begin_wave(ctx, server)?;
+        let snap: &CompressedModel = &snap;
+        let specs = &ctx.model.manifest.variables;
+        let plan = self.timeline_arc();
+        let plan = plan.as_ref();
+        let tasks: &[usize] = &self.by_version[v];
         let wave_vals: &[Vec<f32>] = &self.wave_vals;
 
         // per-task PPQ masks + downlinks, assembled in parallel from the
@@ -887,82 +1030,26 @@ impl AsyncRoundEngine {
         )?;
         let down_bytes: usize = downlinks.iter().map(|d| d.len()).sum();
 
-        // did this dispatch train but give up after all-corrupt retries?
-        let gave_up = |s: usize| {
-            plan.dispatches[s]
-                .chaos
-                .as_ref()
-                .map_or(false, |c| c.gave_up && !c.crashed)
-        };
         // trainable = planned to arrive (folded or stale-discarded) plus
         // give-ups (they trained; every attempt is rejected on arrival);
         // dropped, hard-crashed, and end-of-phase in-flight dispatches
         // spend downlink only
         let trainable: Vec<usize> = (0..tasks.len())
-            .filter(|&t| {
-                matches!(
-                    plan.dispatches[tasks[t]].outcome,
-                    DispatchOutcome::Folded { .. } | DispatchOutcome::Discarded { .. }
-                ) || (plan.dispatches[tasks[t]].outcome == DispatchOutcome::Crashed
-                    && gave_up(tasks[t]))
-            })
+            .filter(|&t| dispatch_trains(&plan.dispatches[tasks[t]]))
             .collect();
-        let (mut dropped, mut crashed, mut in_flight) = (0usize, 0usize, 0usize);
-        for &s in tasks {
-            match plan.dispatches[s].outcome {
-                DispatchOutcome::Dropped => dropped += 1,
-                DispatchOutcome::Crashed => crashed += 1,
-                DispatchOutcome::InFlight => in_flight += 1,
-                _ => {}
-            }
-        }
 
-        // v3 delta framing is decided per dispatch, straight off the plan
-        // (so it is identical for any worker count): an uplink deltas
-        // against its start version's snapshot only when the planned fold
-        // still finds that snapshot in the ring — at the fold of commit
-        // `c` the ring holds versions `c - (depth-1) ..= c`, so the
-        // condition is `staleness < depth`. Everything else (stale folds,
-        // discards, give-ups, in-flight) ships verbatim v2.
         let delta_on = ctx.delta && ctx.integrity;
         let ring_depth = ctx.acfg.snapshot_ring;
-        let delta_framed = move |d: &PlannedDispatch| {
-            delta_on
-                && matches!(
-                    d.outcome,
-                    DispatchOutcome::Folded { staleness, .. }
-                        if staleness < ring_depth
-                )
-        };
-
         let job = |t: usize, cs: &mut ClientScratch| -> Result<ClientResult> {
-            let d = &plan.dispatches[tasks[t]];
-            let mut rng = Xoshiro256pp::new(hash_seed(&[
-                ctx.seed,
-                CLIENT_STREAM,
-                d.wave,
-                d.cid as u64,
-            ]));
-            let mut tc = ctx.train;
-            if ctx.integrity {
-                tc.uplink_nonce = Some(uplink_nonce(ctx.seed, d.wave, d.cid as u64));
-            }
-            if delta_framed(d) {
-                tc.delta_base = Some(d.start_version as u64);
-            }
-            // speakers_of works in dense AND lazy (population) modes
-            let shard = ctx.assignment.speakers_of(d.cid);
-            client::run_client_round(
-                ctx.model,
-                ctx.domain,
-                shard.as_ref(),
+            run_planned_client(
+                ctx,
+                &plan.dispatches[tasks[t]],
                 &downlinks[t],
                 &masks[t],
-                tc,
-                &mut rng,
+                delta_on,
+                ring_depth,
                 cs,
             )
-            .with_context(|| format!("client {} wave {}", d.cid, d.wave))
         };
 
         // dispatch mirrors fl::round: sharded client execution needs a
@@ -1013,6 +1100,42 @@ impl AsyncRoundEngine {
             }
             out
         };
+
+        scratch.return_downlink_bufs(downlinks);
+        self.fold_commit(ctx, server, WaveExecution { results, down_bytes })
+    }
+
+    /// Fold one executed wave into the server: verify and account every
+    /// trained result *sequentially in task order*, fold the commit's
+    /// planned updates in plan order through ONE aggregator on this
+    /// thread, snapshot the committed version, and advance to the next
+    /// commit. `exec.results` must be ordered by task index — both
+    /// [`run_commit`](Self::run_commit) and the serving engine's queue
+    /// drain (`fl::serve`) impose exactly this order, which is what makes
+    /// their committed bytes bit-identical.
+    pub(crate) fn fold_commit(
+        &mut self,
+        ctx: &AsyncContext<'_>,
+        server: &mut Server,
+        exec: WaveExecution,
+    ) -> Result<CommitOutcome> {
+        let v = self.next_commit;
+        let specs = &ctx.model.manifest.variables;
+        let plan = self.timeline_arc();
+        let plan = plan.as_ref();
+        let tasks: &[usize] = &self.by_version[v];
+        let delta_on = ctx.delta && ctx.integrity;
+        let ring_depth = ctx.acfg.snapshot_ring;
+        let WaveExecution { results, down_bytes } = exec;
+        let (mut dropped, mut crashed, mut in_flight) = (0usize, 0usize, 0usize);
+        for &s in tasks {
+            match plan.dispatches[s].outcome {
+                DispatchOutcome::Dropped => dropped += 1,
+                DispatchOutcome::Crashed => crashed += 1,
+                DispatchOutcome::InFlight => in_flight += 1,
+                _ => {}
+            }
+        }
 
         // stats folded sequentially in task order — NOT per shard — so
         // every reported f64 (and the nonce-ledger evolution) is identical
@@ -1099,7 +1222,6 @@ impl AsyncRoundEngine {
                 _ => unreachable!("only arriving dispatches train"),
             }
         }
-        scratch.return_downlink_bufs(downlinks);
 
         // fold this commit's planned updates in plan order through ONE
         // aggregator on this thread — commit bytes are schedule-independent
@@ -1110,7 +1232,7 @@ impl AsyncRoundEngine {
                 format!("upload for dispatch {s} missing at commit {v}")
             })?;
             let d = &plan.dispatches[s];
-            if delta_framed(d) {
+            if delta_frames(d, delta_on, ring_depth) {
                 // folded updates may carry different start versions, so
                 // the delta base is resolved per update from the ring
                 let bsnap = self.ring.get(d.start_version).with_context(|| {
@@ -1133,6 +1255,9 @@ impl AsyncRoundEngine {
             // the fold is the accepted commit — only here does the
             // client's delta ack state move forward
             self.acks.advance(d.cid as u64, d.start_version as u64);
+            if self.recycle_uplinks {
+                self.spent.push(wire);
+            }
         }
         agg.apply(server)?;
 
@@ -1276,7 +1401,7 @@ fn replay_corrupt(
 /// ship verbatim when the mask selects them; everything else ships the
 /// snapshot's decompressed values (`vals[i]`, decoded once per wave).
 /// With a nonce the frame is written in the checksummed v2 layout.
-fn assemble_downlink(
+pub(crate) fn assemble_downlink(
     snap: &CompressedModel,
     vals: &[Vec<f32>],
     mask: &[f32],

@@ -96,6 +96,13 @@ impl ClientScratch {
     }
 }
 
+/// Pooling a scratch across serving workers (`util::arena`) needs no reset:
+/// `run_client_round` length-manages every buffer itself (`resize_with` +
+/// `clear` on entry) — retained capacity is exactly the point of reuse.
+impl crate::util::arena::Reclaim for ClientScratch {
+    fn reclaim(&mut self) {}
+}
+
 /// Run one client round.
 ///
 /// `download` is the server's wire payload for this client; `mask` is the

@@ -2,8 +2,9 @@
 //! streaming paths), simulated clients, cohort failure scenarios, the
 //! deterministic fault-injection engine ([`chaos`]), client sampling,
 //! the lazy million-client population engine ([`population`]),
-//! synchronous round orchestration, and the buffered staleness-aware
-//! asynchronous engine ([`async_round`]).
+//! synchronous round orchestration, the buffered staleness-aware
+//! asynchronous engine ([`async_round`]), and the wall-clock
+//! multi-threaded serving engine ([`serve`]).
 
 pub mod async_round;
 pub mod chaos;
@@ -12,4 +13,5 @@ pub mod cohort;
 pub mod population;
 pub mod round;
 pub mod sampler;
+pub mod serve;
 pub mod server;

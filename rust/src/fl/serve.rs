@@ -1,0 +1,781 @@
+//! Wall-clock sustained-service engine (`docs/SERVING.md`).
+//!
+//! Every other engine in this repo measures *virtual* time: `fl::round`
+//! and [`fl::async_round`](crate::fl::async_round) plan a deterministic
+//! timeline and never touch the wall clock. This module is the "raw speed
+//! under heavy traffic" proof point — a long-running, multi-threaded
+//! serving loop where **real** concurrent client workers train against
+//! epoch-published snapshots and a server thread folds their uplinks
+//! through the same `StreamingAggregator` the planned engine uses.
+//!
+//! # Threading model
+//!
+//! One `std::thread::scope` holds the whole run:
+//!
+//! * the **server loop** (the calling thread) walks the planned commits:
+//!   `begin_wave` → publish the snapshot → collect the wave's results from
+//!   the uplink queue → `fold_commit` — the exact sequential verify/fold
+//!   code of [`AsyncRoundEngine`], never a re-implementation;
+//! * a **dispatcher** thread feeds `(seq, t)` work items in plan order,
+//!   optionally paced to an open-loop arrival rate (`rate` dispatches/sec);
+//! * `workers` **client workers** each loop: pop a work item, wait for its
+//!   version on the [`SnapshotPublisher`] (one `Acquire` load in the steady
+//!   state — no lock), assemble the downlink from an arena-pooled buffer,
+//!   train, and push the result into the bounded uplink queue.
+//!
+//! # Determinism vs the planned reference
+//!
+//! The serving engine executes the *same plan* as `fl::async_round`, and
+//! the server drain re-imposes task order on whatever order the worker
+//! threads finished in before folding (fold order is drain order, which is
+//! plan order). Client uploads are bit-identical per dispatch (RNG, nonce,
+//! delta base are pure functions of `(seed, wave, cid)`), so the committed
+//! parameter bytes are **bit-identical to the planned-timeline engine at
+//! any worker count** — asserted by `rust/tests/serve_engine.rs` and the
+//! `smoke-serve` CI leg. Only the wall-clock numbers (latency quantiles,
+//! commits/sec) vary run to run.
+//!
+//! # Backpressure and admission control
+//!
+//! The uplink queue is bounded (`queue_depth`). A worker first `try_push`es
+//! its result; on overflow the frame is *counted as rejected* (frames +
+//! bytes — the admission-control accounting) and the worker then blocks
+//! until the server drains a slot, modeling a client retrying until
+//! admitted. Planned folds are therefore never lost — rejection is an
+//! accounting event, not a drop — which is what keeps the wall-clock run
+//! bit-identical to the reference. The shutdown **admission probe**
+//! (`probe = true`) fills a queue to capacity and verifies the configured
+//! overflow is rejected-and-accounted deterministically, so CI's rejection
+//! liveness grep never goes vacuous on a run that happened not to contend.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::fl::async_round::{AsyncContext, AsyncRoundEngine, CommitOutcome};
+use crate::fl::server::Server;
+use crate::metrics::recorder::LatencyHistogram;
+use crate::util::arena::ArenaStats;
+
+#[cfg(not(feature = "pjrt"))]
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(not(feature = "pjrt"))]
+use std::time::Instant;
+
+#[cfg(not(feature = "pjrt"))]
+use anyhow::Context;
+
+#[cfg(not(feature = "pjrt"))]
+use crate::fl::async_round::{
+    assemble_downlink, dispatch_trains, run_planned_client, WaveExecution,
+};
+#[cfg(not(feature = "pjrt"))]
+use crate::fl::client::{ClientResult, ClientScratch};
+#[cfg(not(feature = "pjrt"))]
+use crate::fl::round::downlink_nonce;
+#[cfg(not(feature = "pjrt"))]
+use crate::omc::store::{PublishedSnapshot, SnapshotPublisher, SnapshotReader};
+#[cfg(not(feature = "pjrt"))]
+use crate::util::arena::Arena;
+
+// ---- configuration -------------------------------------------------------
+
+/// Knobs of the wall-clock serving engine (`[serve]` TOML table).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// drive the async phase through real worker threads against the wall
+    /// clock (requires `async.enabled`)
+    pub enabled: bool,
+    /// client worker threads; `0` means "the machine's default worker
+    /// count" (`util::threadpool::default_workers`)
+    pub workers: usize,
+    /// uplink queue capacity; `0` means "2 × the resolved async
+    /// concurrency"
+    pub queue_depth: usize,
+    /// pool downlink/uplink frame buffers and client scratch across
+    /// threads (`util::arena`); `false` is the A/B control arm
+    pub arena: bool,
+    /// open-loop dispatch rate (dispatches/sec); `0` = unpaced
+    pub rate: f64,
+    /// run the shutdown admission probe (deterministic nonzero rejection
+    /// accounting for the CI liveness grep)
+    pub probe: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            workers: 0,
+            queue_depth: 0,
+            arena: true,
+            rate: 0.0,
+            probe: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve the `0`-means-default knobs against the resolved async
+    /// concurrency.
+    pub fn resolved(&self, concurrency: usize) -> ServeConfig {
+        let mut r = *self;
+        if r.workers == 0 {
+            r.workers = crate::util::threadpool::default_workers();
+        }
+        if r.queue_depth == 0 {
+            r.queue_depth = (concurrency * 2).max(1);
+        }
+        r
+    }
+
+    /// Bounds-check the knobs (called by `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.rate.is_finite() && self.rate >= 0.0,
+            "serve.rate must be finite and >= 0, got {}",
+            self.rate
+        );
+        Ok(())
+    }
+}
+
+// ---- bounded MPSC queue --------------------------------------------------
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    peak: usize,
+}
+
+/// Bounded multi-producer / single-consumer queue with explicit admission
+/// control: `try_push` rejects on overflow (the accounting hook), blocking
+/// `push` waits for a slot, `close` wakes everyone for shutdown.
+pub(crate) struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub(crate) fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        Self {
+            state: Mutex::new(QueueState {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+                peak: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Admit `item` if a slot is free; `Err(item)` when full or closed.
+    pub(crate) fn try_push(&self, item: T) -> std::result::Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.items.len() == self.cap {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        s.peak = s.peak.max(s.items.len());
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until admitted. Returns `false` (dropping `item`) only when
+    /// the queue is closed — the shutdown path.
+    pub(crate) fn push(&self, item: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return false;
+            }
+            if s.items.len() < self.cap {
+                s.items.push_back(item);
+                s.peak = s.peak.max(s.items.len());
+                drop(s);
+                self.not_empty.notify_one();
+                return true;
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Block until an item arrives; `None` once closed *and* drained.
+    pub(crate) fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items stay poppable, pushes fail, blocked
+    /// threads wake.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Deepest fill observed (the report's queue-depth number).
+    pub(crate) fn peak_depth(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+}
+
+// ---- the engine ----------------------------------------------------------
+
+/// Wall-clock facts of one serving run (everything here is measured, not
+/// simulated — unlike `CommitRecord`, none of it may appear in golden
+/// summaries).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// commits performed
+    pub commits: usize,
+    /// worker threads driven
+    pub workers: usize,
+    /// uplink queue capacity
+    pub queue_depth: usize,
+    /// wall-clock seconds for the whole run
+    pub wall_s: f64,
+    /// server→client bytes across the run
+    pub down_bytes: usize,
+    /// client→server bytes across the run
+    pub up_bytes: usize,
+    /// uplink frames delivered through the queue (trained dispatches)
+    pub uplinks: usize,
+    /// p50 uplink service latency, seconds (downlink assembly → enqueued)
+    pub uplink_p50_s: f64,
+    /// p99 uplink service latency, seconds
+    pub uplink_p99_s: f64,
+    /// deepest uplink-queue fill observed
+    pub queue_peak_depth: usize,
+    /// uplink frames rejected on first admission (then re-admitted after
+    /// blocking — planned folds are never lost)
+    pub queue_rejected_frames: u64,
+    /// bytes of those rejected frames
+    pub queue_rejected_bytes: u64,
+    /// frames the shutdown admission probe rejected (deterministic;
+    /// zero when `probe = false`)
+    pub probe_rejected_frames: u64,
+    /// frame/byte-buffer arena counters (downlink + recycled uplink wires)
+    pub frame_arena: ArenaStats,
+    /// client-scratch arena counters
+    pub scratch_arena: ArenaStats,
+}
+
+impl ServeReport {
+    /// Commits per wall-clock second.
+    pub fn commits_per_sec(&self) -> f64 {
+        self.commits as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Transport bytes (both directions) per wall-clock second.
+    pub fn bytes_per_sec(&self) -> f64 {
+        (self.down_bytes + self.up_bytes) as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Total rejected-and-accounted admissions (runtime + probe) — the CI
+    /// liveness-grep quantity.
+    pub fn rejected_total(&self) -> u64 {
+        self.queue_rejected_frames + self.probe_rejected_frames
+    }
+}
+
+/// One work item: dispatch `seq`, which is task index `t` of its wave.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone, Copy, Debug)]
+struct WorkItem {
+    seq: usize,
+    t: usize,
+}
+
+/// What a worker hands the server for one dispatch.
+#[cfg(not(feature = "pjrt"))]
+struct WorkerResult {
+    /// task index within the wave
+    t: usize,
+    /// downlink frame bytes spent on this dispatch
+    down_bytes: usize,
+    /// `Ok(Some)` = trained, `Ok(None)` = downlink-only dispatch,
+    /// `Err` = worker-side failure (shuts the run down)
+    result: Result<Option<ClientResult>>,
+}
+
+/// The wall-clock serving engine: owns the planned [`AsyncRoundEngine`]
+/// and drives it through real threads. Build with [`new`](Self::new), run
+/// once with [`run`](Self::run).
+pub struct ServeEngine {
+    engine: AsyncRoundEngine,
+    cfg: ServeConfig,
+}
+
+impl ServeEngine {
+    /// Plan `commits` commits and build the engine. `cfg` is resolved
+    /// against the context's async concurrency here.
+    pub fn new(
+        ctx: &AsyncContext<'_>,
+        commits: usize,
+        cfg: &ServeConfig,
+    ) -> Result<Self> {
+        let resolved = cfg.resolved(ctx.acfg.concurrency);
+        resolved.validate()?;
+        let mut engine = AsyncRoundEngine::plan(ctx, commits)?;
+        // fold-consumed uplink wires flow back into the frame arena
+        engine.set_recycle_uplinks(true);
+        Ok(Self {
+            engine,
+            cfg: resolved,
+        })
+    }
+
+    /// Commits planned for this run.
+    pub fn commits_planned(&self) -> usize {
+        self.engine.commits_planned()
+    }
+
+    /// The resolved serving knobs.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Drive the whole run: spawn the dispatcher + workers, walk every
+    /// planned commit on this thread, and call `on_commit` after each fold
+    /// (stream metrics from it). Returns the wall-clock report.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(
+        &mut self,
+        ctx: &AsyncContext<'_>,
+        server: &mut Server,
+        mut on_commit: impl FnMut(usize, &CommitOutcome) -> Result<()>,
+    ) -> Result<ServeReport> {
+        anyhow::ensure!(
+            ctx.model.is_send_safe(),
+            "the serving engine drives real worker threads and needs a \
+             Send-safe backend (native:* models)"
+        );
+        let cfg = self.cfg;
+        let commits = self.engine.commits_planned();
+        let plan = self.engine.timeline_arc();
+        let total_dispatches = plan.dispatches.len();
+
+        let publisher = SnapshotPublisher::new();
+        let stop = AtomicBool::new(false);
+        let frame_arena: Arena<Vec<u8>> = Arena::with_enabled(cfg.arena);
+        let scratch_arena: Arena<ClientScratch> = Arena::with_enabled(cfg.arena);
+        // the work queue holds the whole plan so the dispatcher never
+        // blocks behind workers; backpressure lives on the uplink queue
+        let work_q: BoundedQueue<WorkItem> =
+            BoundedQueue::new(total_dispatches.max(1));
+        let uplink_q: BoundedQueue<WorkerResult> =
+            BoundedQueue::new(cfg.queue_depth);
+        let rejected_frames = AtomicU64::new(0);
+        let rejected_bytes = AtomicU64::new(0);
+        let delta_on = ctx.delta && ctx.integrity;
+        let ring_depth = ctx.acfg.snapshot_ring;
+        let specs = &ctx.model.manifest.variables;
+
+        let mut totals = (0usize, 0usize, 0usize); // down, up, uplinks
+        let mut hist = LatencyHistogram::new();
+        let t0 = Instant::now();
+
+        let served: Result<()> = std::thread::scope(|scope| {
+            // ---- dispatcher: plan order, optionally paced ---------------
+            let dispatcher = {
+                let plan = std::sync::Arc::clone(&plan);
+                let (stop, work_q) = (&stop, &work_q);
+                scope.spawn(move || {
+                    let mut per_version: Vec<usize> = Vec::new();
+                    let t0 = Instant::now();
+                    for d in plan.dispatches.iter() {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if cfg.rate > 0.0 {
+                            // open-loop: dispatch i is due at i/rate sec;
+                            // sleep in short slices so shutdown stays live
+                            let due = d.seq as f64 / cfg.rate;
+                            while t0.elapsed().as_secs_f64() < due {
+                                if stop.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                let left = due - t0.elapsed().as_secs_f64();
+                                std::thread::sleep(
+                                    std::time::Duration::from_secs_f64(
+                                        left.clamp(0.0, 0.05),
+                                    ),
+                                );
+                            }
+                        }
+                        if per_version.len() <= d.start_version {
+                            per_version.resize(d.start_version + 1, 0);
+                        }
+                        let t = per_version[d.start_version];
+                        per_version[d.start_version] += 1;
+                        if !work_q.push(WorkItem { seq: d.seq, t }) {
+                            return; // closed — shutdown
+                        }
+                    }
+                })
+            };
+
+            // ---- client workers ----------------------------------------
+            let worker_handles: Vec<_> = (0..cfg.workers)
+                .map(|_| {
+                    let plan = std::sync::Arc::clone(&plan);
+                    let (stop, work_q, uplink_q) = (&stop, &work_q, &uplink_q);
+                    let (publisher, frame_arena, scratch_arena) =
+                        (&publisher, &frame_arena, &scratch_arena);
+                    let (rejected_frames, rejected_bytes) =
+                        (&rejected_frames, &rejected_bytes);
+                    scope.spawn(move || -> LatencyHistogram {
+                        let mut reader = SnapshotReader::new();
+                        let mut hist = LatencyHistogram::new();
+                        let mut cs = scratch_arena.acquire();
+                        while let Some(item) = work_q.pop() {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let d = &plan.dispatches[item.seq];
+                            let Some(snap) = reader.wait_for(
+                                publisher,
+                                d.start_version,
+                                || stop.load(Ordering::Relaxed),
+                            ) else {
+                                break; // cancelled — shutdown
+                            };
+                            let started = Instant::now();
+                            let trains = dispatch_trains(d);
+                            let result = if snap.version != d.start_version {
+                                Err(anyhow::anyhow!(
+                                    "publication invariant broken: wave {} \
+                                     saw version {}",
+                                    d.start_version,
+                                    snap.version
+                                ))
+                            } else {
+                                let mask = ctx.policy.draw_mask(
+                                    specs,
+                                    ctx.seed,
+                                    d.wave,
+                                    d.cid as u64,
+                                );
+                                let nonce = ctx.integrity.then(|| {
+                                    downlink_nonce(ctx.seed, d.wave, d.cid as u64)
+                                });
+                                let downlink = assemble_downlink(
+                                    &snap.model,
+                                    &snap.vals,
+                                    &mask,
+                                    frame_arena.acquire(),
+                                    nonce,
+                                );
+                                let down_bytes = downlink.len();
+                                let r = if trains {
+                                    run_planned_client(
+                                        ctx, d, &downlink, &mask, delta_on,
+                                        ring_depth, &mut cs,
+                                    )
+                                    .map(Some)
+                                } else {
+                                    Ok(None)
+                                };
+                                frame_arena.release(downlink);
+                                r.map(|r| (down_bytes, r))
+                            };
+                            let (down_bytes, result) = match result {
+                                Ok((b, r)) => (b, Ok(r)),
+                                Err(e) => (0, Err(e)),
+                            };
+                            if trains && result.is_ok() {
+                                hist.record(started.elapsed().as_secs_f64());
+                            }
+                            let failed = result.is_err();
+                            let wr = WorkerResult {
+                                t: item.t,
+                                down_bytes,
+                                result,
+                            };
+                            // admission control: account the overflow, then
+                            // block until admitted (a client retrying)
+                            if let Err(wr) = uplink_q.try_push(wr) {
+                                let bytes = wr
+                                    .result
+                                    .as_ref()
+                                    .ok()
+                                    .and_then(|o| o.as_ref())
+                                    .map_or(0, |r| r.upload.len());
+                                rejected_frames.fetch_add(1, Ordering::Relaxed);
+                                rejected_bytes
+                                    .fetch_add(bytes as u64, Ordering::Relaxed);
+                                if !uplink_q.push(wr) {
+                                    break; // closed — shutdown
+                                }
+                            }
+                            if failed {
+                                break; // the server initiates shutdown
+                            }
+                        }
+                        scratch_arena.release(cs);
+                        hist
+                    })
+                })
+                .collect();
+
+            // ---- server loop (this thread) -----------------------------
+            let mut drive = || -> Result<()> {
+                for v in 0..commits {
+                    let (wave, snap) = self.engine.begin_wave(ctx, server)?;
+                    debug_assert_eq!(wave, v);
+                    publisher.publish(PublishedSnapshot {
+                        version: v,
+                        model: snap,
+                        vals: self.engine.wave_vals().to_vec(),
+                    });
+                    let ntasks = self.engine.wave_tasks(v).len();
+                    let mut slots: Vec<Option<WorkerResult>> =
+                        (0..ntasks).map(|_| None).collect();
+                    let mut filled = 0usize;
+                    while filled < ntasks {
+                        let wr = uplink_q.pop().context(
+                            "uplink queue closed mid-wave (worker died?)",
+                        )?;
+                        anyhow::ensure!(
+                            wr.t < ntasks && slots[wr.t].is_none(),
+                            "duplicate or out-of-wave uplink (task {})",
+                            wr.t
+                        );
+                        slots[wr.t] = Some(wr);
+                        filled += 1;
+                    }
+                    // drain-imposed fold order: task order, exactly what
+                    // run_commit produces inline
+                    let mut results: Vec<(usize, ClientResult)> =
+                        Vec::with_capacity(ntasks);
+                    let mut down_bytes = 0usize;
+                    for slot in slots {
+                        let wr = slot.expect("filled == ntasks");
+                        down_bytes += wr.down_bytes;
+                        if let Some(r) = wr.result? {
+                            results.push((wr.t, r));
+                        }
+                    }
+                    let delivered = results.len();
+                    let outcome = self.engine.fold_commit(
+                        ctx,
+                        server,
+                        WaveExecution {
+                            results,
+                            down_bytes,
+                        },
+                    )?;
+                    // recycle the fold-consumed uplink wires as future
+                    // downlink frame buffers
+                    for buf in self.engine.take_spent() {
+                        frame_arena.release(buf);
+                    }
+                    totals.0 += outcome.down_bytes;
+                    totals.1 += outcome.up_bytes;
+                    totals.2 += delivered;
+                    on_commit(v, &outcome)?;
+                }
+                Ok(())
+            };
+            let served = drive();
+
+            // ---- shutdown: wake everything, then join -------------------
+            stop.store(true, Ordering::Relaxed);
+            work_q.close();
+            uplink_q.close();
+            publisher.wake_all();
+            let mut panicked = false;
+            for h in worker_handles {
+                match h.join() {
+                    Ok(h2) => hist.merge(&h2),
+                    Err(_) => panicked = true,
+                }
+            }
+            panicked |= dispatcher.join().is_err();
+            anyhow::ensure!(!panicked, "a serving thread panicked");
+            served
+        });
+        served?;
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // ---- admission probe: deterministic rejection accounting --------
+        let mut probe_rejected = 0u64;
+        if cfg.probe {
+            let q: BoundedQueue<usize> = BoundedQueue::new(cfg.queue_depth);
+            for i in 0..cfg.queue_depth {
+                q.try_push(i).ok().expect("probe fill fits the capacity");
+            }
+            for i in 0..8usize {
+                if q.try_push(i).is_err() {
+                    probe_rejected += 1;
+                }
+            }
+            anyhow::ensure!(
+                probe_rejected == 8,
+                "admission probe admitted past capacity ({probe_rejected}/8 \
+                 rejected)"
+            );
+        }
+
+        Ok(ServeReport {
+            commits,
+            workers: cfg.workers,
+            queue_depth: cfg.queue_depth,
+            wall_s,
+            down_bytes: totals.0,
+            up_bytes: totals.1,
+            uplinks: totals.2,
+            uplink_p50_s: hist.quantile(0.50),
+            uplink_p99_s: hist.quantile(0.99),
+            queue_peak_depth: uplink_q.peak_depth(),
+            queue_rejected_frames: rejected_frames.load(Ordering::Relaxed),
+            queue_rejected_bytes: rejected_bytes.load(Ordering::Relaxed),
+            probe_rejected_frames: probe_rejected,
+            frame_arena: frame_arena.stats(),
+            scratch_arena: scratch_arena.stats(),
+        })
+    }
+
+    /// PJRT executables are pinned to their creation thread (`!Send`), so
+    /// the serving engine cannot run under the `pjrt` feature.
+    #[cfg(feature = "pjrt")]
+    pub fn run(
+        &mut self,
+        _ctx: &AsyncContext<'_>,
+        _server: &mut Server,
+        _on_commit: impl FnMut(usize, &CommitOutcome) -> Result<()>,
+    ) -> Result<ServeReport> {
+        anyhow::bail!(
+            "the serving engine drives real worker threads and needs a \
+             Send-safe backend — build without the `pjrt` feature"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_resolves_zero_knobs() {
+        let cfg = ServeConfig::default();
+        assert!(!cfg.enabled);
+        assert!(cfg.arena);
+        assert!(cfg.probe);
+        let r = cfg.resolved(6);
+        assert!(r.workers >= 1);
+        assert_eq!(r.queue_depth, 12);
+        // explicit knobs pass through
+        let cfg = ServeConfig {
+            workers: 3,
+            queue_depth: 5,
+            ..ServeConfig::default()
+        };
+        let r = cfg.resolved(6);
+        assert_eq!((r.workers, r.queue_depth), (3, 5));
+        r.validate().unwrap();
+        let bad = ServeConfig {
+            rate: f64::NAN,
+            ..ServeConfig::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn queue_is_fifo_and_bounded() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        // full: admission control rejects, nothing is lost by the caller
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.peak_depth(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn closed_queue_drains_then_ends() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(8));
+        assert!(!q.push(9));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_a_slot() {
+        use std::sync::Arc;
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(1));
+        q.try_push(0).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(1));
+        // the producer is blocked until this pop frees the slot
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(0));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_unblocks_producers_and_consumers() {
+        use std::sync::Arc;
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(1));
+        q.try_push(0).unwrap();
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || qp.push(1));
+        let qc = Arc::clone(&q);
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            qc.close();
+        });
+        assert!(!producer.join().unwrap()); // woken by close, not admitted
+        closer.join().unwrap();
+        assert_eq!(q.pop(), Some(0)); // pending item still drains
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn report_rates() {
+        let r = ServeReport {
+            commits: 10,
+            workers: 4,
+            queue_depth: 8,
+            wall_s: 2.0,
+            down_bytes: 1000,
+            up_bytes: 3000,
+            uplinks: 40,
+            uplink_p50_s: 0.001,
+            uplink_p99_s: 0.002,
+            queue_peak_depth: 5,
+            queue_rejected_frames: 3,
+            queue_rejected_bytes: 99,
+            probe_rejected_frames: 8,
+            frame_arena: ArenaStats::default(),
+            scratch_arena: ArenaStats::default(),
+        };
+        assert!((r.commits_per_sec() - 5.0).abs() < 1e-12);
+        assert!((r.bytes_per_sec() - 2000.0).abs() < 1e-12);
+        assert_eq!(r.rejected_total(), 11);
+    }
+}

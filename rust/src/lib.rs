@@ -41,6 +41,12 @@
 //!   churn and diurnal availability, a device-class ladder, a streaming
 //!   rejection sampler, and two-tier edge→root aggregation over the same
 //!   wire stack — `docs/SCALE.md` documents the topology and contracts.
+//!   [`fl::serve`] executes the async plan on real worker threads for
+//!   wall-clock measurement: lock-free epoch-published snapshots
+//!   ([`omc::store::SnapshotPublisher`]), arena-pooled frames
+//!   ([`util::arena`]), and a bounded uplink queue with backpressure —
+//!   committed bytes stay bit-identical to the planned timeline
+//!   (`docs/SERVING.md` documents the threading model and contracts).
 //! * [`coordinator`] — experiment configs (TOML or builders), the
 //!   [`coordinator::Experiment`] driver, presets for the paper's tables
 //!   (including the [`coordinator::presets`] sweep grids), the

@@ -550,6 +550,225 @@ impl Recorder {
     }
 }
 
+// ---- wall-clock serving metrics ------------------------------------------
+
+/// Log-bucketed latency histogram: 64 power-of-two buckets from 1 µs, so
+/// recording is one increment, merging across worker threads is one add
+/// per bucket, and memory stays constant over an unbounded run. Quantiles
+/// return the *upper bound* of the hit bucket (≤ 2× the true value —
+/// plenty for p50/p99 trend lines).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    const BUCKETS: usize = 64;
+    /// bucket 0's upper bound, seconds
+    const FLOOR_S: f64 = 1e-6;
+
+    pub fn new() -> Self {
+        Self {
+            counts: [0; Self::BUCKETS],
+            total: 0,
+        }
+    }
+
+    /// Count one observation (clamped into the bucket range; non-finite
+    /// observations land in bucket 0 rather than poisoning the histogram).
+    pub fn record(&mut self, seconds: f64) {
+        let idx = if !seconds.is_finite() || seconds <= Self::FLOOR_S {
+            0
+        } else {
+            ((seconds / Self::FLOOR_S).log2().floor() as usize)
+                .min(Self::BUCKETS - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Fold another histogram in (worker-local → run-global).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile observation
+    /// (0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target =
+            ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, n) in self.counts.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return Self::FLOOR_S * f64::powi(2.0, i as i32 + 1);
+            }
+        }
+        Self::FLOOR_S * f64::powi(2.0, Self::BUCKETS as i32)
+    }
+}
+
+/// Wall-clock facts of one `omc-fl serve` run. Everything here is
+/// *measured* — latency quantiles, throughput, queue behavior — so unlike
+/// [`RoundRecord`]/[`CommitRecord`] none of it may ever appear in the
+/// byte-deterministic sweep summaries; it lands in its own
+/// `serve_report.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeRecord {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub commits: usize,
+    /// uplink frames delivered through the bounded queue
+    pub uplinks: usize,
+    pub wall_s: f64,
+    pub commits_per_sec: f64,
+    /// transport bytes (both directions) per wall-clock second
+    pub bytes_per_sec: f64,
+    pub uplink_p50_s: f64,
+    pub uplink_p99_s: f64,
+    /// deepest uplink-queue fill observed
+    pub queue_peak_depth: usize,
+    /// admission-control rejections (runtime overflow + shutdown probe);
+    /// distinct from the chaos engine's `frames_rejected` — these frames
+    /// were valid, just not admitted on first offer
+    pub queue_rejected_frames: u64,
+    pub queue_rejected_bytes: u64,
+    /// frame-buffer + client-scratch arena acquisitions
+    pub arena_acquires: u64,
+    /// acquisitions served by a fresh allocation
+    pub arena_fresh: u64,
+    /// acquisitions served from the pool (the saved allocations)
+    pub arena_recycled: u64,
+}
+
+impl ServeRecord {
+    /// Flatten a [`ServeReport`](crate::fl::serve::ServeReport) (both
+    /// arenas folded together) for the JSON sidecar.
+    pub fn from_report(r: &crate::fl::serve::ServeReport) -> Self {
+        Self {
+            workers: r.workers,
+            queue_depth: r.queue_depth,
+            commits: r.commits,
+            uplinks: r.uplinks,
+            wall_s: r.wall_s,
+            commits_per_sec: r.commits_per_sec(),
+            bytes_per_sec: r.bytes_per_sec(),
+            uplink_p50_s: r.uplink_p50_s,
+            uplink_p99_s: r.uplink_p99_s,
+            queue_peak_depth: r.queue_peak_depth,
+            queue_rejected_frames: r.rejected_total(),
+            queue_rejected_bytes: r.queue_rejected_bytes,
+            arena_acquires: r.frame_arena.acquires + r.scratch_arena.acquires,
+            arena_fresh: r.frame_arena.fresh + r.scratch_arena.fresh,
+            arena_recycled: r.frame_arena.recycled + r.scratch_arena.recycled,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("workers", json::num(self.workers as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("commits", json::num(self.commits as f64)),
+            ("uplinks", json::num(self.uplinks as f64)),
+            ("wall_s", json::num(self.wall_s)),
+            ("commits_per_sec", json::num(self.commits_per_sec)),
+            ("bytes_per_sec", json::num(self.bytes_per_sec)),
+            ("uplink_p50_s", json::num(self.uplink_p50_s)),
+            ("uplink_p99_s", json::num(self.uplink_p99_s)),
+            (
+                "queue_peak_depth",
+                json::num(self.queue_peak_depth as f64),
+            ),
+            (
+                "queue_rejected_frames",
+                json::num(self.queue_rejected_frames as f64),
+            ),
+            (
+                "queue_rejected_bytes",
+                json::num(self.queue_rejected_bytes as f64),
+            ),
+            ("arena_acquires", json::num(self.arena_acquires as f64)),
+            ("arena_fresh", json::num(self.arena_fresh as f64)),
+            ("arena_recycled", json::num(self.arena_recycled as f64)),
+        ])
+    }
+}
+
+// ---- streaming CSV -------------------------------------------------------
+
+/// Append-oriented CSV writer for long-running engines. [`Recorder::write`]
+/// rebuilds whole files per call — fine for bounded sweeps, wrong for a
+/// serving loop that logs for hours: the file would be rewritten from
+/// scratch on every flush and the accumulating `Vec` grows without bound.
+/// `CsvStream` holds one `BufWriter` open for the run; [`append`] stays in
+/// the userspace buffer, and the engine calls [`flush`] on round/commit
+/// boundaries so a crash loses at most the buffered tail, never the file.
+///
+/// [`append`]: Self::append
+/// [`flush`]: Self::flush
+#[derive(Debug)]
+pub struct CsvStream {
+    w: std::io::BufWriter<fs::File>,
+    path: PathBuf,
+}
+
+impl CsvStream {
+    /// Create (truncate) `path` and write the header row.
+    pub fn create(path: &Path, header: &str) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let f = fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut s = Self {
+            w: std::io::BufWriter::new(f),
+            path: path.to_path_buf(),
+        };
+        s.append(header)?;
+        Ok(s)
+    }
+
+    /// Buffer one row (a trailing newline is added).
+    pub fn append(&mut self, line: &str) -> Result<()> {
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Push the buffered rows to disk — call on round/commit boundaries.
+    pub fn flush(&mut self) -> Result<()> {
+        self.w
+            .flush()
+            .with_context(|| format!("flushing {}", self.path.display()))
+    }
+
+    /// Where the stream writes.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -838,6 +1057,119 @@ mod tests {
         let pop_csv =
             std::fs::read_to_string(dir.join("demo_population.csv")).unwrap();
         assert!(pop_csv.starts_with("round,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bracket_observations() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record(1.0);
+        assert_eq!(h.count(), 100);
+        // bucket upper bound: within 2x above, never below
+        let p50 = h.quantile(0.50);
+        assert!((1e-3..=2e-3).contains(&p50), "{p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1e-3..=2e-3).contains(&p99), "{p99}");
+        assert!(h.quantile(1.0) >= 1.0);
+        // degenerate observations land in bucket 0, not a panic
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(1e9); // clamped into the top bucket
+        assert_eq!(h.count(), 103);
+    }
+
+    #[test]
+    fn latency_histogram_merge_matches_combined_recording() {
+        let (mut a, mut b, mut both) =
+            (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
+        for i in 1..=50 {
+            let s = i as f64 * 1e-4;
+            a.record(s);
+            both.record(s);
+        }
+        for i in 1..=50 {
+            let s = i as f64 * 1e-2;
+            b.record(s);
+            both.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn serve_record_round_trips_report_and_json() {
+        use crate::fl::serve::ServeReport;
+        use crate::util::arena::ArenaStats;
+        let rep = ServeReport {
+            commits: 8,
+            workers: 4,
+            queue_depth: 12,
+            wall_s: 2.0,
+            down_bytes: 6000,
+            up_bytes: 2000,
+            uplinks: 32,
+            uplink_p50_s: 0.002,
+            uplink_p99_s: 0.004,
+            queue_peak_depth: 7,
+            queue_rejected_frames: 3,
+            queue_rejected_bytes: 150,
+            probe_rejected_frames: 8,
+            frame_arena: ArenaStats {
+                acquires: 40,
+                fresh: 6,
+                recycled: 34,
+            },
+            scratch_arena: ArenaStats {
+                acquires: 4,
+                fresh: 4,
+                recycled: 0,
+            },
+        };
+        let rec = ServeRecord::from_report(&rep);
+        assert_eq!(rec.commits_per_sec, 4.0);
+        assert_eq!(rec.bytes_per_sec, 4000.0);
+        // probe rejections fold into the accounting total
+        assert_eq!(rec.queue_rejected_frames, 11);
+        assert_eq!(rec.arena_acquires, 44);
+        assert_eq!(rec.arena_fresh, 10);
+        assert_eq!(rec.arena_recycled, 34);
+        let js = rec.to_json().to_string();
+        for key in [
+            "commits_per_sec",
+            "uplink_p99_s",
+            "queue_rejected_frames",
+            "arena_recycled",
+        ] {
+            assert!(js.contains(key), "{js}");
+        }
+    }
+
+    #[test]
+    fn csv_stream_appends_and_survives_flush_boundaries() {
+        let dir = std::env::temp_dir().join(format!(
+            "omc_csv_stream_test_{}",
+            std::process::id()
+        ));
+        let path = dir.join("serve_commits.csv");
+        let mut s = CsvStream::create(&path, "commit,folded").unwrap();
+        s.append("0,4").unwrap();
+        s.flush().unwrap();
+        // rows up to the last flush are durable while the stream is open
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(on_disk, "commit,folded\n0,4\n");
+        s.append("1,5").unwrap();
+        s.flush().unwrap();
+        assert_eq!(s.path(), path.as_path());
+        drop(s);
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(on_disk, "commit,folded\n0,4\n1,5\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

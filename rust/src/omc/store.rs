@@ -8,6 +8,9 @@
 //! `memory_bytes()` is the quantity Sec. 3.4 measures.
 
 use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use super::format::FloatFormat;
 use super::pack;
@@ -256,10 +259,14 @@ impl CompressedModel {
 ///
 /// Versions must be pushed in strictly increasing order; pushing past
 /// `capacity` evicts the oldest entry.
+/// Entries are held behind `Arc` so concurrent readers (the wall-clock
+/// serving engine's downlink path, `fl::serve`) can keep decoding a version
+/// the writer has already evicted: `get_shared` hands out a clone of the
+/// `Arc`, and eviction merely drops the ring's reference.
 #[derive(Clone, Debug)]
 pub struct SnapshotRing {
     cap: usize,
-    entries: std::collections::VecDeque<(usize, CompressedModel)>,
+    entries: std::collections::VecDeque<(usize, Arc<CompressedModel>)>,
 }
 
 impl SnapshotRing {
@@ -290,16 +297,16 @@ impl SnapshotRing {
     /// Push the snapshot for `version`, evicting the oldest entry when the
     /// ring is full. Versions must arrive in strictly increasing order.
     pub fn push(&mut self, version: usize, model: CompressedModel) {
-        if let Some(&(newest, _)) = self.entries.back() {
+        if let Some((newest, _)) = self.entries.back() {
             assert!(
-                version > newest,
+                version > *newest,
                 "snapshot versions must be strictly increasing ({version} after {newest})"
             );
         }
         if self.entries.len() == self.cap {
             self.entries.pop_front();
         }
-        self.entries.push_back((version, model));
+        self.entries.push_back((version, Arc::new(model)));
     }
 
     /// The snapshot for `version`, if still retained.
@@ -307,18 +314,170 @@ impl SnapshotRing {
         self.entries
             .iter()
             .find(|(v, _)| *v == version)
-            .map(|(_, m)| m)
+            .map(|(_, m)| m.as_ref())
+    }
+
+    /// A shared handle to the snapshot for `version`, if still retained.
+    /// The handle stays valid after the ring evicts the version — the
+    /// serving engine's downlink readers rely on this to keep decoding a
+    /// snapshot the writer has moved past.
+    pub fn get_shared(&self, version: usize) -> Option<Arc<CompressedModel>> {
+        self.entries
+            .iter()
+            .find(|(v, _)| *v == version)
+            .map(|(_, m)| Arc::clone(m))
     }
 
     /// The most recently pushed `(version, snapshot)`.
     pub fn newest(&self) -> Option<(usize, &CompressedModel)> {
-        self.entries.back().map(|(v, m)| (*v, m))
+        self.entries.back().map(|(v, m)| (*v, m.as_ref()))
     }
 
     /// Total store bytes across retained snapshots (the quantity the async
     /// bench reports against the R × 4 bytes/param fp32 alternative).
     pub fn memory_bytes(&self) -> usize {
         self.entries.iter().map(|(_, m)| m.memory_bytes()).sum()
+    }
+}
+
+/// One published model version: the compressed snapshot (shared with the
+/// [`SnapshotRing`]) plus its decoded working values, ready for downlink
+/// assembly without touching the server thread.
+#[derive(Debug)]
+pub struct PublishedSnapshot {
+    /// the committed version this snapshot serves
+    pub version: usize,
+    /// the compressed store entry (packed variables ship verbatim)
+    pub model: Arc<CompressedModel>,
+    /// decoded per-variable values for the raw/deselected downlink paths
+    pub vals: Vec<Vec<f32>>,
+}
+
+/// Lock-free snapshot publication: the single-writer / many-reader epoch
+/// pointer the wall-clock serving engine (`fl::serve`) downlinks from.
+///
+/// The writer stages the new `Arc<PublishedSnapshot>` in a mutex-guarded
+/// slot, then *publishes* with one atomic `Release` store of the epoch
+/// (`version + 1`; `0` = nothing published yet) and wakes waiters. Readers
+/// ([`SnapshotReader`]) cache the `Arc` they last saw together with its
+/// epoch, so the steady-state downlink read is **a single `Acquire` load
+/// and no lock**: the slot mutex is touched only on an epoch *change* (once
+/// per commit per reader, off the per-uplink path). This is the arc-swap
+/// discipline without unsafe code — a bare `AtomicPtr` over `Arc` cannot be
+/// read soundly without hazard pointers (the load→refcount-increment window
+/// races the writer's drop), so the rare cold path pays an uncontended
+/// mutex instead.
+///
+/// A reader holding an old `Arc` keeps a fully consistent snapshot while
+/// the writer publishes and the ring evicts past it — eviction only drops
+/// references (see `snapshot_publisher_reader_survives_eviction`).
+#[derive(Debug, Default)]
+pub struct SnapshotPublisher {
+    /// `version + 1` of the current publication; `0` = none yet
+    epoch: AtomicU64,
+    /// the staged publication (locked only by the writer and by readers
+    /// refreshing after an epoch change)
+    slot: Mutex<Option<Arc<PublishedSnapshot>>>,
+    /// wakes [`SnapshotReader::wait_for`] blockers on publish/shutdown
+    cond: Condvar,
+}
+
+impl SnapshotPublisher {
+    /// A publisher with nothing published yet.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `snap` as the current version: stage the `Arc` under the
+    /// slot lock, then flip the epoch with a single `Release` store and
+    /// wake every waiter. Readers that loaded the old epoch keep their old
+    /// `Arc`; readers that observe the new epoch see the fully staged slot
+    /// (the `Release` store orders the slot write before it).
+    pub fn publish(&self, snap: PublishedSnapshot) {
+        let epoch = snap.version as u64 + 1;
+        {
+            let mut slot = self.slot.lock().unwrap();
+            *slot = Some(Arc::new(snap));
+        }
+        self.epoch.store(epoch, Ordering::Release);
+        self.cond.notify_all();
+    }
+
+    /// The currently published version, if any (single `Acquire` load).
+    pub fn version(&self) -> Option<usize> {
+        match self.epoch.load(Ordering::Acquire) {
+            0 => None,
+            e => Some((e - 1) as usize),
+        }
+    }
+
+    /// Wake every [`SnapshotReader::wait_for`] blocker so it can re-check
+    /// its cancellation condition (shutdown path).
+    pub fn wake_all(&self) {
+        self.cond.notify_all();
+    }
+}
+
+/// Per-thread read handle over a [`SnapshotPublisher`]: caches the last
+/// `Arc` seen so the hot path never locks (see the publisher docs).
+#[derive(Debug, Default)]
+pub struct SnapshotReader {
+    cached: Option<Arc<PublishedSnapshot>>,
+    seen: u64,
+}
+
+impl SnapshotReader {
+    /// A reader that has observed nothing yet.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current publication (or `None` before the first publish).
+    /// Steady state — epoch unchanged since the last call — is one
+    /// `Acquire` load and a cached-`Arc` clone; an epoch change refreshes
+    /// the cache under the slot lock.
+    pub fn current(&mut self, p: &SnapshotPublisher) -> Option<Arc<PublishedSnapshot>> {
+        let e = p.epoch.load(Ordering::Acquire);
+        if e == 0 {
+            return None;
+        }
+        if e != self.seen {
+            self.cached = p.slot.lock().unwrap().clone();
+            self.seen = e;
+        }
+        self.cached.clone()
+    }
+
+    /// Block until a publication with `version >= want` is visible, or
+    /// `cancelled()` turns true (checked at least every ~50 ms and on every
+    /// publish/[`wake_all`](SnapshotPublisher::wake_all)). Returns `None`
+    /// only on cancellation.
+    pub fn wait_for(
+        &mut self,
+        p: &SnapshotPublisher,
+        want: usize,
+        mut cancelled: impl FnMut() -> bool,
+    ) -> Option<Arc<PublishedSnapshot>> {
+        loop {
+            if let Some(snap) = self.current(p) {
+                if snap.version >= want {
+                    return Some(snap);
+                }
+            }
+            if cancelled() {
+                return None;
+            }
+            let guard = p.slot.lock().unwrap();
+            // re-check under the lock: a publish between our epoch load and
+            // this lock acquisition already fired its notify
+            if p.epoch.load(Ordering::Acquire) >= want as u64 + 1 {
+                continue;
+            }
+            let (_guard, _timeout) = p
+                .cond
+                .wait_timeout(guard, Duration::from_millis(50))
+                .unwrap();
+        }
     }
 }
 
@@ -532,6 +691,81 @@ mod tests {
         let mut ring = SnapshotRing::new(2);
         ring.push(3, CompressedModel::default());
         ring.push(3, CompressedModel::default());
+    }
+
+    #[test]
+    fn snapshot_publisher_reader_survives_eviction() {
+        // The serving engine's downlink contract: a reader holding an old
+        // epoch pointer keeps decoding a fully consistent snapshot while
+        // the writer publishes new versions and the ring evicts far past
+        // it. Each version's payload is keyed to its number, so a torn or
+        // mixed read would show up as a marker/payload mismatch.
+        use std::sync::atomic::AtomicBool;
+        let f = fmt("S1E4M14");
+        let n = 512;
+        let make = |v: usize| {
+            let mut g = Gen::new(100 + v as u64);
+            CompressedModel::new(vec![
+                StoredVar::raw(vec![v as f32; 8]),
+                StoredVar::compress(&g.vec_normal(n, 0.05), f, true),
+            ])
+        };
+        let publisher = Arc::new(SnapshotPublisher::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let versions = 40;
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let publisher = Arc::clone(&publisher);
+                let stop = Arc::clone(&stop);
+                scope.spawn(move || {
+                    let mut reader = SnapshotReader::new();
+                    // pin the first publication and hold it across every
+                    // later publish + eviction
+                    let pinned = reader
+                        .wait_for(&publisher, 0, || false)
+                        .expect("never cancelled");
+                    let pinned_ref = pinned.model.decompress_all();
+                    let mut epochs_seen = 0u64;
+                    let mut last = None;
+                    while !stop.load(Ordering::Relaxed) {
+                        let snap = reader.current(&publisher).unwrap();
+                        // marker and payload always belong to one version
+                        assert_eq!(snap.vals[0][0], snap.version as f32);
+                        assert_eq!(snap.model.decompress_all(), snap.vals);
+                        if last != Some(snap.version) {
+                            epochs_seen += 1;
+                            last = Some(snap.version);
+                        }
+                        // the pinned (long-evicted) snapshot still decodes
+                        // byte-identically
+                        assert_eq!(pinned.model.decompress_all(), pinned_ref);
+                    }
+                    assert!(epochs_seen >= 1);
+                });
+            }
+            let mut ring = SnapshotRing::new(2);
+            for v in 0..versions {
+                ring.push(v, make(v));
+                let model = ring.get_shared(v).unwrap();
+                let vals = model.decompress_all();
+                publisher.publish(PublishedSnapshot { version: v, model, vals });
+                assert_eq!(publisher.version(), Some(v));
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::Relaxed);
+            publisher.wake_all();
+        });
+        // version 0 was evicted from the ring long ago...
+        let mut ring_check = SnapshotRing::new(2);
+        for v in 0..versions {
+            ring_check.push(v, make(v));
+        }
+        assert!(ring_check.get_shared(0).is_none());
+        // ...but a fresh reader still sees the final publication
+        let mut reader = SnapshotReader::new();
+        let last = reader.current(&publisher).unwrap();
+        assert_eq!(last.version, versions - 1);
+        assert_eq!(last.vals[0][0], (versions - 1) as f32);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Cross-thread object arenas for the serving hot path.
+//!
+//! The virtual-time engines (`fl::round`, `fl::async_round`) recycle their
+//! scratch buffers by construction: one coordinator thread owns a
+//! `RoundScratch` and hands slices of it to short-lived worker scopes. The
+//! wall-clock serving engine (`fl::serve`) has no such owner — workers run
+//! for the life of the process and frame buffers cross threads (worker →
+//! uplink queue → server fold → back to a worker) — so without pooling,
+//! every uplink pays a fresh downlink-frame allocation and every fold drops
+//! a wire buffer on the floor.
+//!
+//! [`Arena<T>`] is the shared free list behind that recycling: `acquire`
+//! pops a recycled object (or builds a fresh `T::default()`), `release`
+//! reclaims it ([`Reclaim::reclaim`] clears *length*, never capacity) and
+//! pushes it back. The arena counts acquires / fresh constructions /
+//! recycles so benches and the serve report can assert the steady state
+//! allocates nothing ([`ArenaStats`]; `benches/bench_serve.rs` runs the
+//! arena-on vs arena-off A/B). A disabled arena (`Arena::disabled`) keeps
+//! the same API but never pools — every acquire is fresh — which is the
+//! control arm of that A/B and the `serve.arena = false` escape hatch.
+//!
+//! The free list is a plain `Mutex<Vec<T>>`: acquire/release are two
+//! pointer moves under an uncontended lock, orders of magnitude below the
+//! cost of the frame encode/decode they bracket. The lock-free machinery
+//! lives where it matters — snapshot publication (`omc::store`), which
+//! sits on every downlink read.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Reset an object for reuse: drop contents, keep capacity.
+pub trait Reclaim {
+    /// Clear lengths/state so the object is indistinguishable from freshly
+    /// constructed *to its user*, while retaining backing allocations.
+    fn reclaim(&mut self);
+}
+
+impl Reclaim for Vec<u8> {
+    fn reclaim(&mut self) {
+        self.clear();
+    }
+}
+
+impl Reclaim for Vec<f32> {
+    fn reclaim(&mut self) {
+        self.clear();
+    }
+}
+
+/// Allocation counters for an [`Arena`] (monotonic over its lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// total `acquire` calls
+    pub acquires: u64,
+    /// acquires served by constructing a fresh object (the allocation count
+    /// the serve bench A/B asserts on)
+    pub fresh: u64,
+    /// acquires served from the free list
+    pub recycled: u64,
+}
+
+/// A shared pool of reusable objects (see the module docs).
+#[derive(Debug)]
+pub struct Arena<T> {
+    free: Mutex<Vec<T>>,
+    enabled: bool,
+    acquires: AtomicU64,
+    fresh: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl<T: Reclaim + Default> Arena<T> {
+    /// An empty, enabled arena.
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// An arena that never pools: every acquire constructs fresh and every
+    /// release drops. Same API, zero reuse — the A/B control arm.
+    pub fn disabled() -> Self {
+        Self::with_enabled(false)
+    }
+
+    /// `new()` when `enabled`, `disabled()` otherwise.
+    pub fn with_enabled(enabled: bool) -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            enabled,
+            acquires: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether releases are pooled (false for the control arm).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pop a recycled object, or construct a fresh `T::default()`.
+    pub fn acquire(&self) -> T {
+        self.acquires.fetch_add(1, Ordering::Relaxed);
+        if self.enabled {
+            if let Some(obj) = self.free.lock().unwrap().pop() {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                return obj;
+            }
+        }
+        self.fresh.fetch_add(1, Ordering::Relaxed);
+        T::default()
+    }
+
+    /// Reclaim `obj` (length cleared, capacity kept) and return it to the
+    /// pool. A disabled arena drops it instead.
+    pub fn release(&self, mut obj: T) {
+        if !self.enabled {
+            return;
+        }
+        obj.reclaim();
+        self.free.lock().unwrap().push(obj);
+    }
+
+    /// Objects currently sitting in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Lifetime allocation counters.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            acquires: self.acquires.load(Ordering::Relaxed),
+            fresh: self.fresh.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl<T: Reclaim + Default> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recycles_capacity_and_counts() {
+        let arena: Arena<Vec<u8>> = Arena::new();
+        let mut a = arena.acquire();
+        a.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        arena.release(a);
+        assert_eq!(arena.pooled(), 1);
+        let b = arena.acquire();
+        // reclaimed: empty to the user, same backing allocation
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(b.as_ptr(), ptr);
+        let s = arena.stats();
+        assert_eq!(
+            s,
+            ArenaStats {
+                acquires: 2,
+                fresh: 1,
+                recycled: 1
+            }
+        );
+    }
+
+    #[test]
+    fn disabled_arena_never_pools() {
+        let arena: Arena<Vec<f32>> = Arena::disabled();
+        assert!(!arena.is_enabled());
+        let mut a = arena.acquire();
+        a.push(1.0);
+        arena.release(a);
+        assert_eq!(arena.pooled(), 0);
+        let _ = arena.acquire();
+        let s = arena.stats();
+        assert_eq!(s.acquires, 2);
+        assert_eq!(s.fresh, 2);
+        assert_eq!(s.recycled, 0);
+    }
+
+    #[test]
+    fn concurrent_acquire_release_conserves_objects() {
+        let arena: Arc<Arena<Vec<u8>>> = Arc::new(Arena::new());
+        let threads = 4;
+        let per = 100;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let arena = Arc::clone(&arena);
+                scope.spawn(move || {
+                    for i in 0..per {
+                        let mut buf = arena.acquire();
+                        buf.extend_from_slice(&[t as u8; 32]);
+                        if i % 3 == 0 {
+                            std::thread::yield_now();
+                        }
+                        arena.release(buf);
+                    }
+                });
+            }
+        });
+        let s = arena.stats();
+        assert_eq!(s.acquires, (threads * per) as u64);
+        assert_eq!(s.fresh + s.recycled, s.acquires);
+        // every fresh object was released, so the pool holds exactly them
+        assert_eq!(arena.pooled() as u64, s.fresh);
+        // steady state recycles: far fewer fresh constructions than acquires
+        assert!(s.fresh <= threads as u64);
+    }
+}

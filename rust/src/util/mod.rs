@@ -5,6 +5,7 @@
 //! small, tested replacements for exactly the slices of functionality the
 //! coordinator needs.
 
+pub mod arena;
 pub mod cli;
 pub mod json;
 pub mod logging;

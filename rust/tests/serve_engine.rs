@@ -1,0 +1,234 @@
+//! Serving-engine guarantees, end-to-end on the native backend:
+//!
+//! * **Bit-identity vs the planned timeline** — the wall-clock engine
+//!   (real worker threads, epoch-published snapshots, arena-pooled
+//!   frames, bounded uplink queue) commits byte-identical parameters to
+//!   the inline `AsyncRoundEngine` reference at any worker count, because
+//!   the server re-imposes plan order on whatever the queue delivers.
+//!   This is the in-repo twin of the CI `smoke-serve` `cmp` gate.
+//! * **Feature transparency** — chaos injection and the delta wire stage
+//!   ride through the served path unchanged: same commits, same metrics
+//!   as the planned timeline with the same knobs.
+//! * **Backpressure safety** — a one-slot uplink queue forces the
+//!   reject-and-account → blocking re-admit path; planned folds are never
+//!   lost and the committed bytes still match.
+//! * **Report honesty** — the admission probe rejects exactly its eight
+//!   offered frames, the arena A/B shows recycling only when enabled, and
+//!   latency quantiles are populated whenever uplinks flowed.
+
+use std::path::Path;
+
+use omc_fl::coordinator::config::{ExperimentConfig, OmcConfig};
+use omc_fl::coordinator::Experiment;
+use omc_fl::fl::async_round::{AsyncConfig, StalenessPolicy};
+use omc_fl::fl::chaos::ChaosConfig;
+use omc_fl::fl::cohort::CohortConfig;
+use omc_fl::fl::serve::{ServeConfig, ServeReport};
+use omc_fl::metrics::recorder::Recorder;
+use omc_fl::runtime::engine::Engine;
+
+/// The async stress shape from `tests/async_round.rs`: stragglers,
+/// dropout, weighted FedAvg, a small buffer, polynomial discount,
+/// staleness discards, and partial selection.
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with(name, Path::new("native:tiny"));
+    c.rounds = 5;
+    c.num_clients = 16;
+    c.clients_per_round = 8;
+    c.local_steps = 1;
+    c.lr = 0.2;
+    c.eval_every = 10;
+    c.eval_batches = 1;
+    c.omc = OmcConfig {
+        format: "S1E4M14".parse().unwrap(),
+        use_pvt: true,
+        weights_only: true,
+        fraction: 0.9,
+        integrity: false,
+    };
+    c.cohort = CohortConfig {
+        dropout_prob: 0.1,
+        straggler_mean_s: 2.0,
+        deadline_s: f64::INFINITY,
+        weight_by_examples: true,
+    };
+    c.async_cfg = AsyncConfig {
+        enabled: true,
+        concurrency: 6,
+        buffer_k: 3,
+        policy: StalenessPolicy::Polynomial { alpha: 0.5 },
+        max_staleness: 4,
+        snapshot_ring: 3,
+    };
+    // streamed per-commit rows belong in a scratch dir, not the repo
+    c.output_dir = std::env::temp_dir().join("omc_serve_engine_test");
+    c
+}
+
+fn serve_cfg(name: &str, base: &ExperimentConfig, serve: ServeConfig) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.name = name.to_string();
+    c.serve = serve;
+    c
+}
+
+fn param_bits(exp: &Experiment) -> Vec<Vec<u32>> {
+    exp.server
+        .params
+        .iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn reference_bits(base: &ExperimentConfig) -> Vec<Vec<u32>> {
+    let engine = Engine::cpu().unwrap();
+    let mut c = base.clone();
+    c.name = format!("{}_ref", c.name);
+    let mut exp = Experiment::prepare(&engine, c).unwrap();
+    exp.run_async_params_only().unwrap();
+    param_bits(&exp)
+}
+
+fn run_serve(cfg: ExperimentConfig) -> (Vec<Vec<u32>>, Recorder, ServeReport) {
+    let engine = Engine::cpu().unwrap();
+    let mut exp = Experiment::prepare(&engine, cfg).unwrap();
+    let (rec, report) = exp.run_serve().unwrap();
+    (param_bits(&exp), rec, report)
+}
+
+#[test]
+fn served_commits_are_bit_identical_to_planned_timeline() {
+    let base = base_cfg("serve_eq");
+    let ref_bits = reference_bits(&base);
+    let mut csv: Option<String> = None;
+    for workers in [1usize, 4] {
+        let serve = ServeConfig {
+            enabled: true,
+            workers,
+            ..ServeConfig::default()
+        };
+        let (bits, rec, report) =
+            run_serve(serve_cfg(&format!("serve_w{workers}"), &base, serve));
+        assert_eq!(
+            bits, ref_bits,
+            "served commits diverged at workers={workers}"
+        );
+        // the virtual-time metrics are schedule-independent too
+        match &csv {
+            None => csv = Some(rec.commits_csv()),
+            Some(c) => assert_eq!(c, &rec.commits_csv()),
+        }
+        assert_eq!(report.commits, base.rounds);
+        assert_eq!(report.workers, workers);
+        assert!(report.uplinks > 0, "no uplinks delivered");
+        assert!(report.wall_s > 0.0);
+        assert!(report.down_bytes > 0 && report.up_bytes > 0);
+    }
+}
+
+#[test]
+fn serve_is_transparent_to_chaos_and_delta_stages() {
+    let mut base = base_cfg("serve_chaos_delta");
+    base.rounds = 6;
+    base.omc.integrity = true; // chaos + delta both ride the v3 layout
+    base.delta.enabled = true;
+    base.chaos = ChaosConfig {
+        enabled: true,
+        bitflip_prob: 0.2,
+        truncate_prob: 0.1,
+        duplicate_prob: 0.15,
+        crash_prob: 0.1,
+        commit_failure_prob: 0.5,
+        ..ChaosConfig::default()
+    };
+    let ref_bits = reference_bits(&base);
+    let serve = ServeConfig {
+        enabled: true,
+        workers: 4,
+        ..ServeConfig::default()
+    };
+    let (bits, rec, _) = run_serve(serve_cfg("serve_cd_w4", &base, serve));
+    assert_eq!(bits, ref_bits, "chaos+delta served run diverged");
+    // the fault injection really fired through the served path
+    assert!(rec.total_frames_rejected() > 0, "chaos never bit a frame");
+    assert!(rec.total_crashed() > 0, "no chaos kills");
+}
+
+#[test]
+fn one_slot_queue_backpressure_loses_no_folds() {
+    let base = base_cfg("serve_bp");
+    let ref_bits = reference_bits(&base);
+    let serve = ServeConfig {
+        enabled: true,
+        workers: 4,
+        queue_depth: 1,
+        probe: false,
+        ..ServeConfig::default()
+    };
+    let (bits, _, report) = run_serve(serve_cfg("serve_bp_q1", &base, serve));
+    assert_eq!(bits, ref_bits, "backpressure leaked into the commits");
+    assert_eq!(report.queue_depth, 1);
+    assert!(report.queue_peak_depth <= 1, "queue overfilled its bound");
+    // rejected uplinks were re-admitted, never dropped: every fold the
+    // plan scheduled happened (proved by the bit-identity above), and any
+    // rejection that did occur carries its bytes
+    if report.queue_rejected_frames > 0 {
+        assert!(report.queue_rejected_bytes > 0);
+    }
+}
+
+#[test]
+fn report_accounts_probe_arena_and_latency() {
+    let base = base_cfg("serve_report");
+    let on = ServeConfig {
+        enabled: true,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let (_, _, rep_on) = run_serve(serve_cfg("serve_rep_on", &base, on));
+    // the shutdown probe offers 8 frames to a deliberately-full queue and
+    // every one must be rejected-and-accounted (the CI liveness grep)
+    assert_eq!(rep_on.probe_rejected_frames, 8);
+    assert!(rep_on.rejected_total() >= 8);
+    // pooling really pooled: downlink frames recycle wave-over-wave
+    assert!(rep_on.frame_arena.acquires > 0);
+    assert!(rep_on.frame_arena.recycled > 0, "arena never recycled");
+    assert_eq!(
+        rep_on.frame_arena.fresh + rep_on.frame_arena.recycled,
+        rep_on.frame_arena.acquires
+    );
+    assert!(rep_on.scratch_arena.acquires > 0);
+    // measured latency quantiles are populated and ordered
+    assert!(rep_on.uplink_p50_s > 0.0);
+    assert!(rep_on.uplink_p99_s >= rep_on.uplink_p50_s);
+    assert!(rep_on.commits_per_sec() > 0.0);
+    assert!(rep_on.bytes_per_sec() > 0.0);
+
+    let off = ServeConfig {
+        arena: false,
+        probe: false,
+        ..on
+    };
+    let (_, _, rep_off) = run_serve(serve_cfg("serve_rep_off", &base, off));
+    assert_eq!(rep_off.probe_rejected_frames, 0, "probe ran while disabled");
+    assert_eq!(rep_off.frame_arena.recycled, 0, "disabled arena recycled");
+    assert_eq!(rep_off.scratch_arena.recycled, 0);
+}
+
+#[test]
+fn paced_open_loop_run_matches_unpaced_commits() {
+    // pacing throttles *dispatch wall-clock*, never the plan: a fast rate
+    // keeps the test quick while still walking the pacing code path
+    let base = base_cfg("serve_paced");
+    let ref_bits = reference_bits(&base);
+    let serve = ServeConfig {
+        enabled: true,
+        workers: 2,
+        rate: 2000.0,
+        probe: false,
+        ..ServeConfig::default()
+    };
+    let (bits, _, report) = run_serve(serve_cfg("serve_paced_r", &base, serve));
+    assert_eq!(bits, ref_bits, "pacing leaked into the commits");
+    assert_eq!(report.commits, base.rounds);
+}

@@ -20,11 +20,14 @@
 #
 # Env:
 #   OMC_BIN             sweep binary (default ./target/release/omc-fl)
-#   OMC_RSS_CEILING_MB  if set, run the reference leg under GNU time -v
-#                       and fail if peak RSS exceeds this many MB — the
-#                       O(active)-memory gate for the 10^6-client scale
-#                       profile (docs/SCALE.md)
-#   OMC_TIME_BIN        GNU time binary (default /usr/bin/time)
+#   OMC_RSS_CEILING_MB  if set, run the reference leg under the host's
+#                       time binary (GNU `-v`, falling back to BSD/macOS
+#                       `-l`) and fail if peak RSS exceeds this many MB —
+#                       the O(active)-memory gate for the 10^6-client
+#                       scale profile (docs/SCALE.md). A requested ceiling
+#                       that cannot be metered is a hard FAILURE, never a
+#                       silent skip.
+#   OMC_TIME_BIN        time binary (default /usr/bin/time)
 #
 # Exit codes: 0 = gate holds, 1 = determinism/liveness/RSS failure,
 # 2 = usage error.
@@ -42,29 +45,51 @@ bin=${OMC_BIN:-./target/release/omc-fl}
 time_bin=${OMC_TIME_BIN:-/usr/bin/time}
 
 # ---- reference run (optionally RSS-metered) --------------------------------
-if [ -n "${OMC_RSS_CEILING_MB:-}" ] && [ -x "$time_bin" ]; then
-  if ! "$time_bin" -v "$bin" sweep --profile "$profile" --sequential \
+if [ -n "${OMC_RSS_CEILING_MB:-}" ]; then
+  # A requested ceiling is enforced or the gate fails — a silent skip here
+  # turns the O(active) memory contract vacuous. Probe which dialect the
+  # host's time binary speaks: GNU `-v` reports
+  # "Maximum resident set size (kbytes): N"; BSD/macOS `-l` reports
+  # "N  maximum resident set size" in bytes.
+  rss_flag=""
+  rss_unit=""
+  if [ -x "$time_bin" ]; then
+    if "$time_bin" -v true >/dev/null 2>&1; then
+      rss_flag="-v" rss_unit="kb"
+    elif "$time_bin" -l true >/dev/null 2>&1; then
+      rss_flag="-l" rss_unit="bytes"
+    fi
+  fi
+  if [ -z "$rss_flag" ]; then
+    echo "::error::determinism($profile): OMC_RSS_CEILING_MB is set but $time_bin speaks neither GNU -v nor BSD -l — the memory ceiling cannot be enforced"
+    exit 1
+  fi
+  if ! "$time_bin" "$rss_flag" "$bin" sweep --profile "$profile" --sequential \
       --out "${prefix}_seq_a" 2> "${prefix}_time.log"; then
     cat "${prefix}_time.log" >&2
     echo "::error::determinism($profile): reference run failed"
     exit 1
   fi
-  peak_kb=$(awk -F': *' '/Maximum resident set size/ {print $2}' \
-    "${prefix}_time.log")
-  if [ -z "$peak_kb" ]; then
-    echo "::warning::determinism($profile): $time_bin emitted no RSS line — ceiling not enforced"
+  if [ "$rss_unit" = "kb" ]; then
+    peak_raw=$(awk -F': *' '/Maximum resident set size/ {print $2}' \
+      "${prefix}_time.log")
+    peak_kb=${peak_raw:-}
   else
-    ceiling_kb=$((OMC_RSS_CEILING_MB * 1024))
-    echo "determinism($profile): peak RSS ${peak_kb} kB (ceiling ${ceiling_kb} kB)"
-    if [ "$peak_kb" -gt "$ceiling_kb" ]; then
-      echo "::error::determinism($profile): peak RSS ${peak_kb} kB exceeds the ${OMC_RSS_CEILING_MB} MB ceiling — the O(active) memory contract is broken"
-      exit 1
-    fi
+    peak_raw=$(awk '/maximum resident set size/ {print $1}' \
+      "${prefix}_time.log")
+    peak_kb=$(( ${peak_raw:-0} / 1024 ))
+  fi
+  if [ -z "$peak_raw" ]; then
+    echo "::error::determinism($profile): $time_bin $rss_flag emitted no RSS line — the requested ceiling cannot be enforced"
+    exit 1
+  fi
+  ceiling_kb=$((OMC_RSS_CEILING_MB * 1024))
+  echo "determinism($profile): peak RSS ${peak_kb} kB (ceiling ${ceiling_kb} kB)"
+  if [ "$peak_kb" -gt "$ceiling_kb" ]; then
+    echo "::error::determinism($profile): peak RSS ${peak_kb} kB exceeds the ${OMC_RSS_CEILING_MB} MB ceiling — the O(active) memory contract is broken"
+    exit 1
   fi
 else
-  if [ -n "${OMC_RSS_CEILING_MB:-}" ]; then
-    echo "::warning::determinism($profile): $time_bin not found — RSS ceiling skipped"
-  fi
   "$bin" sweep --profile "$profile" --sequential --out "${prefix}_seq_a"
 fi
 
