@@ -1,0 +1,99 @@
+//! Uplink sparsification stage: deterministic top-k / rand-k selection,
+//! the gap-coded bitpacked index stream, and the tag-3 wire record
+//! write/decode path around them — the per-client uplink cost the sparse
+//! stage adds on top of the plain codec. The bench-trend gate tracks
+//! these rows (`--strict-suites sparse`): selection and index coding
+//! must stay far below the quantize/pack cost of the values they
+//! replace, or the stage would dominate the round loop it is meant to
+//! shrink.
+
+use omc_fl::benchkit::{consume, Suite};
+use omc_fl::omc::codec::{for_each_var, WireWriter};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::sparse::{
+    decode_indices_into, encode_indices_into, gather_into, select_count,
+    select_randk, select_topk,
+};
+use omc_fl::testkit::Gen;
+
+fn main() {
+    let mut suite = Suite::new("omc::sparse uplink selection stage");
+    let mut g = Gen::new(13);
+
+    // ---- selection kernels over a 1M-element update --------------------
+    let n = 1 << 20;
+    let e: Vec<f32> = g.vec_normal(n, 0.05);
+
+    let mut idx = Vec::new();
+    for &(label, fraction) in &[("25%", 0.25f32), ("1%", 0.01f32)] {
+        let k = select_count(n, fraction);
+        suite.bench(
+            &format!("select_topk {label} ({n} elems)"),
+            Some(n),
+            || {
+                select_topk(&e, k, &mut idx);
+                consume(idx.len());
+            },
+        );
+    }
+    let k1 = select_count(n, 0.01);
+    let mut scratch = Vec::new();
+    suite.bench(&format!("select_randk 1% ({n} elems)"), Some(n), || {
+        select_randk(n, k1, 0xC0FFEE, &mut idx, &mut scratch);
+        consume(idx.len());
+    });
+
+    // ---- index stream codec at the 1% top-k selection ------------------
+    select_topk(&e, k1, &mut idx);
+    let mut stream = Vec::new();
+    suite.bench(&format!("encode_indices ({k1} of {n})"), Some(k1), || {
+        stream.clear();
+        consume(encode_indices_into(&idx, &mut stream));
+    });
+    stream.clear();
+    encode_indices_into(&idx, &mut stream);
+    let mut back = Vec::new();
+    suite.bench(
+        &format!("decode_indices ({} B stream)", stream.len()),
+        Some(k1),
+        || {
+            decode_indices_into(&stream, k1, n, &mut back).unwrap();
+            consume(back.len());
+        },
+    );
+
+    // ---- whole-record path: tag-3 write + decode to the dense update ---
+    let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+    let mut gathered = Vec::new();
+    gather_into(&e, &idx, &mut gathered);
+    suite.bench(
+        &format!("WireWriter v2 sparse_values ({k1} of {n})"),
+        Some(n),
+        || {
+            let mut w = WireWriter::with_integrity(0, 7);
+            w.sparse_values(&gathered, &idx, n, fmt, true);
+            consume(w.finish());
+        },
+    );
+    let mut w = WireWriter::with_integrity(0, 7);
+    w.sparse_values(&gathered, &idx, n, fmt, true);
+    let wire = w.finish();
+    let mut dense = Vec::new();
+    suite.bench(
+        &format!(
+            "decode sparse to dense update ({} KiB frame)",
+            wire.len() / 1024
+        ),
+        Some(n),
+        || {
+            let count = for_each_var(&wire, |_, view| {
+                view.decompress_into(&mut dense);
+                Ok(())
+            })
+            .unwrap();
+            consume(count);
+        },
+    );
+
+    suite.finish("BENCH_sparse.json");
+}

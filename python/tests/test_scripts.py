@@ -116,6 +116,39 @@ def test_check_goldens_malformed_json_is_an_error(tmp_path, monkeypatch):
     assert run_main(check_goldens, ["--fresh", golden, "--golden", fresh], monkeypatch) == 2
 
 
+def test_check_goldens_schema_bump_requires_bless(tmp_path, monkeypatch, capsys):
+    # a schema_version bump (v5 -> v6, the sparse-metrics migration) must
+    # hard-FAIL the diff even when every other field matches — the golden
+    # was blessed against a different summary shape and has to be
+    # re-blessed deliberately, never slide through as field-level chatter
+    doc = {"schema_version": 5, "cells": [1, 2], "wer": 10.5}
+    golden = write(tmp_path / "golden.json", doc)
+    fresh = write(tmp_path / "fresh.json", {**doc, "schema_version": 6})
+    rc = run_main(check_goldens, ["--fresh", fresh, "--golden", golden], monkeypatch)
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "schema_version bumped without --bless" in err
+    assert "v5" in err and "v6" in err
+    # --bless still copies straight through the pin
+    rc = run_main(
+        check_goldens, ["--fresh", fresh, "--golden", golden, "--bless"], monkeypatch
+    )
+    assert rc == 0
+    assert json.loads(Path(golden).read_text())["schema_version"] == 6
+    # …after which the re-blessed golden matches
+    assert run_main(check_goldens, ["--fresh", fresh, "--golden", golden], monkeypatch) == 0
+    # same-version documents keep diffing field by field as before
+    bad = write(tmp_path / "bad.json", {**doc, "schema_version": 6, "wer": 99.0})
+    rc = run_main(check_goldens, ["--fresh", bad, "--golden", golden], monkeypatch)
+    assert rc == 1
+    assert "GOLDEN MISMATCH" in capsys.readouterr().err
+    # documents without the key (unit-test fixtures, older artifacts)
+    # never trip the pin
+    a = write(tmp_path / "a.json", {"x": 1})
+    b = write(tmp_path / "b.json", {"x": 1})
+    assert run_main(check_goldens, ["--fresh", a, "--golden", b], monkeypatch) == 0
+
+
 def test_check_goldens_bless_copies(tmp_path, monkeypatch):
     fresh = write(tmp_path / "fresh.json", {"a": 1})
     golden = tmp_path / "goldens" / "g.json"
@@ -369,6 +402,84 @@ def test_bench_trend_serve_suite_is_gated_dormant(tmp_path, monkeypatch, capsys)
         tag="t11",
     )
     assert run_main(bench_trend, argv + ["--strict-suites", "serve"], monkeypatch) == 1
+    assert "::error::" in capsys.readouterr().out
+
+
+def test_bench_trend_sparse_suite_is_gated_dormant(tmp_path, monkeypatch, capsys):
+    # the CI invocation now gates the sparse uplink suite alongside
+    # codec/pack/round/delta/population/serve. Like those before it,
+    # sparse starts dormant: fresh JSON with no committed baseline warns,
+    # a gated sparse bench that never ran fails, and the gate arms the
+    # moment a baseline is blessed
+    gate = ["--strict-suites", "codec,sparse", "--strict-threshold", "0.35"]
+    argv = trend_env(tmp_path, {"select_topk 1%": 100.0}, None, suite="sparse")
+    write(Path(argv[1]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    write(Path(argv[3]) / "BENCH_codec.json", bench_doc({"k": 100.0}))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out and "dormant" in out and "sparse" in out
+    # a gated sparse bench with no fresh JSON (skipped or crashed) fails
+    (Path(argv[1]) / "BENCH_sparse.json").unlink()
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
+    assert "'sparse'" in capsys.readouterr().out
+    # blessed baseline + regression -> the armed gate fails
+    argv = trend_env(
+        tmp_path,
+        {"select_topk 1%": 200.0},
+        {"select_topk 1%": 100.0},
+        suite="sparse",
+        tag="t12",
+    )
+    assert run_main(bench_trend, argv + ["--strict-suites", "sparse"], monkeypatch) == 1
+    assert "::error::" in capsys.readouterr().out
+
+
+def test_bench_trend_cold_path_median_demotes_the_gate(tmp_path, monkeypatch, capsys):
+    # under OMC_BENCH_FAST some suites emit rows whose measured iters fall
+    # below warmup_iters — a cold-path median. Such a row regressing past
+    # the strict threshold must demote the gate to a ::warning:: (the
+    # statistic is not comparable), while a steady row with the identical
+    # ratio keeps failing
+    def doc(median, iters, warmup):
+        return {
+            "results": [
+                {
+                    "name": "pack",
+                    "median_ns": median,
+                    "mad_ns": 0.0,
+                    "iters": iters,
+                    "warmup_iters": warmup,
+                }
+            ]
+        }
+
+    gate = ["--strict-suites", "codec", "--strict-threshold", "0.35"]
+    fresh_dir = tmp_path / "fresh"
+    base_dir = tmp_path / "baselines"
+    fresh_dir.mkdir()
+    base_dir.mkdir()
+    argv = ["--dir", str(fresh_dir), "--baselines", str(base_dir)]
+    write(base_dir / "BENCH_codec.json", doc(100.0, 20, 8))
+    # cold fresh row (iters 3 < warmup 8), 2x regression: warn, exit 0
+    write(fresh_dir / "BENCH_codec.json", doc(200.0, 3, 8))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out and "cold-path median" in out
+    assert "::error::" not in out
+    # the same regression measured at steady state fails the gate
+    write(fresh_dir / "BENCH_codec.json", doc(200.0, 20, 8))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
+    assert "::error::" in capsys.readouterr().out
+    # a cold BASELINE row demotes too — either side disqualifies the pair
+    write(base_dir / "BENCH_codec.json", doc(100.0, 2, 8))
+    write(fresh_dir / "BENCH_codec.json", doc(200.0, 20, 8))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 0
+    assert "cold-path median" in capsys.readouterr().out
+    # rows missing the fields entirely (older baselines) count as steady:
+    # the bench_doc helper omits warmup_iters, and the gate still fails
+    write(base_dir / "BENCH_codec.json", bench_doc({"pack": 100.0}))
+    write(fresh_dir / "BENCH_codec.json", bench_doc({"pack": 200.0}))
+    assert run_main(bench_trend, argv + gate, monkeypatch) == 1
     assert "::error::" in capsys.readouterr().out
 
 

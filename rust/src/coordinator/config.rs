@@ -13,6 +13,7 @@ use crate::fl::population::PopulationConfig;
 use crate::fl::sampler::SamplerKind;
 use crate::fl::serve::ServeConfig;
 use crate::omc::format::FloatFormat;
+use crate::omc::sparse::{SparseMode, SparseParams};
 use crate::util::toml::{self, Table};
 
 /// OMC-specific knobs (paper Sec. 2).
@@ -68,6 +69,42 @@ pub struct DeltaConfig {
     pub enabled: bool,
 }
 
+/// Uplink sparsification stage (`[sparse]` table): magnitude top-k or
+/// random-k selection over each client's masked update, with per-client
+/// error-feedback residuals folded into the next round's update before
+/// selection. Lossy but conservative — selected + residual reproduce the
+/// dense update exactly. Requires `omc.integrity` (sparse records ride
+/// the checksummed v2/v3 wire layouts).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseConfig {
+    /// master switch for the sparse uplink stage
+    pub enabled: bool,
+    /// selection rule: magnitude `topk` or keyed-uniform `randk`
+    pub mode: SparseMode,
+    /// fraction of coordinates kept per variable, in (0, 1]
+    pub fraction: f64,
+}
+
+impl Default for SparseConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            mode: SparseMode::TopK,
+            fraction: 0.25,
+        }
+    }
+}
+
+impl SparseConfig {
+    /// Engine knobs when the stage is on; `None` keeps the dense uplink.
+    pub fn params(&self) -> Option<SparseParams> {
+        self.enabled.then(|| SparseParams {
+            mode: self.mode,
+            fraction: self.fraction as f32,
+        })
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -99,6 +136,9 @@ pub struct ExperimentConfig {
     /// lossless cross-round delta + bitpack wire stage (`[delta]` table);
     /// requires `omc.integrity`
     pub delta: DeltaConfig,
+    /// lossy uplink sparsification + error feedback (`[sparse]` table);
+    /// requires `omc.integrity`, incompatible with `[serve]`
+    pub sparse: SparseConfig,
     /// population-scale simulation (`[population]` table): a registered
     /// fleet of 10^6–10^7 clients with lazy per-client state, churn and
     /// diurnal availability, a device-class ladder, and a two-tier
@@ -141,6 +181,7 @@ impl ExperimentConfig {
             async_cfg: AsyncConfig::default(),
             chaos: ChaosConfig::default(),
             delta: DeltaConfig::default(),
+            sparse: SparseConfig::default(),
             population: PopulationConfig::off(),
             serve: ServeConfig::default(),
             output_dir: PathBuf::from("results"),
@@ -308,6 +349,27 @@ impl ExperimentConfig {
         if let Some(v) = get_b("delta.enabled") {
             cfg.delta.enabled = v;
         }
+        let sparse_enabled = get_b("sparse.enabled");
+        if let Some(v) = sparse_enabled {
+            cfg.sparse.enabled = v;
+        }
+        let mut sparse_knobs = false;
+        if let Some(v) = get_str("sparse.mode") {
+            cfg.sparse.mode = v
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!("sparse.mode: {e}"))?;
+            sparse_knobs = true;
+        }
+        if let Some(v) = get_f("sparse.fraction") {
+            cfg.sparse.fraction = v;
+            sparse_knobs = true;
+        }
+        // selection knobs without the master switch would silently no-op —
+        // reject the misconfiguration (same rule as [chaos]/[population])
+        anyhow::ensure!(
+            !sparse_knobs || sparse_enabled.is_some(),
+            "[sparse] knobs need an explicit sparse.enabled = true|false"
+        );
         let pop_enabled = get_b("population.enabled");
         if let Some(v) = pop_enabled {
             cfg.population.enabled = v;
@@ -451,6 +513,20 @@ impl ExperimentConfig {
             "delta.enabled requires omc.integrity = true (delta frames \
              ride the checksummed v3 wire layout)"
         );
+        // a sparse record decoded on the unchecksummed v1 wire has no CRC
+        // to refuse a corrupt index stream — the stage only exists on the
+        // integrity layouts (same rule as [delta]/[chaos])
+        anyhow::ensure!(
+            !self.sparse.enabled || self.omc.integrity,
+            "sparse.enabled requires omc.integrity = true (sparse records \
+             ride the checksummed v2/v3 wire layouts)"
+        );
+        anyhow::ensure!(
+            !self.sparse.enabled
+                || (self.sparse.fraction > 0.0 && self.sparse.fraction <= 1.0),
+            "sparse.fraction must be in (0, 1], got {}",
+            self.sparse.fraction
+        );
         self.serve.validate()?;
         // the serving engine executes the *async* planned timeline through
         // real threads — without the async phase there is nothing to serve
@@ -458,6 +534,14 @@ impl ExperimentConfig {
             !self.serve.enabled || self.async_cfg.enabled,
             "serve.enabled requires async.enabled = true (the serving \
              engine drives the buffered async plan)"
+        );
+        // error feedback needs durable per-client residual state between
+        // commits; the serving engine's workers keep none, so the pair
+        // would silently drop residuals — reject it instead
+        anyhow::ensure!(
+            !(self.sparse.enabled && self.serve.enabled),
+            "sparse.enabled is not supported with serve.enabled (the \
+             serving engine keeps no per-client error-feedback state)"
         );
         Ok(())
     }
@@ -699,6 +783,76 @@ mod tests {
         // explicit enabled = false parses without integrity
         let off = "name = \"x\"\n[delta]\nenabled = false\n";
         assert!(ExperimentConfig::from_table(&toml::parse(off).unwrap()).is_ok());
+    }
+
+    const SPARSE_SAMPLE: &str = r#"
+        name = "sparse_cell"
+
+        [omc]
+        integrity = true
+
+        [sparse]
+        enabled = true
+        mode = "randk"
+        fraction = 0.1
+    "#;
+
+    #[test]
+    fn parses_sparse_table_and_defaults() {
+        let t = toml::parse(SPARSE_SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.sparse.enabled);
+        assert_eq!(c.sparse.mode, SparseMode::RandK);
+        assert_eq!(c.sparse.fraction, 0.1);
+        let p = c.sparse.params().unwrap();
+        assert_eq!(p.mode, SparseMode::RandK);
+        assert_eq!(p.fraction, 0.1f32);
+        // absent table → disabled defaults, params() = None
+        let plain =
+            ExperimentConfig::from_table(&toml::parse("name = \"x\"").unwrap())
+                .unwrap();
+        assert!(!plain.sparse.enabled);
+        assert_eq!(plain.sparse.mode, SparseMode::TopK);
+        assert!(plain.sparse.params().is_none());
+    }
+
+    #[test]
+    fn sparse_requires_integrity_and_rejects_bad_knobs() {
+        // sparse without the checksummed wire must be rejected, not
+        // silently downgraded to dense
+        let bad = SPARSE_SAMPLE.replace("integrity = true", "integrity = false");
+        let err =
+            ExperimentConfig::from_table(&toml::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("omc.integrity"), "{err}");
+        for (from, to) in [
+            ("fraction = 0.1", "fraction = 0.0"),
+            ("fraction = 0.1", "fraction = 1.5"),
+            ("mode = \"randk\"", "mode = \"magic\""),
+        ] {
+            let broken = SPARSE_SAMPLE.replace(from, to);
+            let t = toml::parse(&broken).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{to}");
+        }
+        // selection knobs without the master switch must be rejected, not
+        // silently ignored
+        let dangling = SPARSE_SAMPLE.replace("enabled = true", "");
+        let err =
+            ExperimentConfig::from_table(&toml::parse(&dangling).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("sparse.enabled"), "{err}");
+        // explicit enabled = false parses without integrity
+        let off = "name = \"x\"\n[sparse]\nenabled = false\n";
+        assert!(ExperimentConfig::from_table(&toml::parse(off).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn sparse_rejects_serve() {
+        let combined = format!(
+            "{SPARSE_SAMPLE}\n[async]\nenabled = true\n[serve]\nenabled = true\n"
+        );
+        let err = ExperimentConfig::from_table(&toml::parse(&combined).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("serve.enabled"), "{err}");
     }
 
     const POPULATION_SAMPLE: &str = r#"

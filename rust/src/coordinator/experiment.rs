@@ -248,6 +248,7 @@ impl Experiment {
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
+            sparse: self.cfg.sparse.params(),
             population: self.cfg.population,
             quarantined: &[],
             seed: self.cfg.seed,
@@ -316,6 +317,14 @@ impl Experiment {
                  and bitpack per 64-word block (lossless, v3 frames)"
             );
         }
+        if self.cfg.sparse.enabled {
+            crate::log_info!(
+                "sparse uplink stage: {} selection, fraction={}, \
+                 error feedback on (residuals fold into the next round)",
+                self.cfg.sparse.mode,
+                self.cfg.sparse.fraction
+            );
+        }
         if self.cfg.population.enabled {
             crate::log_info!(
                 "population mode: registered={}, edges={}, churn={}@{}r, wave={}@{}r",
@@ -378,6 +387,7 @@ impl Experiment {
                 chaos: self.cfg.chaos,
                 integrity: self.cfg.omc.integrity,
                 delta: self.cfg.delta.enabled,
+                sparse: self.cfg.sparse.params(),
                 population: self.cfg.population,
                 quarantined: &quarantined,
                 seed: self.cfg.seed,
@@ -434,6 +444,10 @@ impl Experiment {
                 frames_rejected: outcome.frames_rejected,
                 up_bytes_rejected: outcome.up_bytes_rejected,
                 up_bytes_delta_saved: outcome.up_bytes_delta_saved,
+                up_bytes_sparse_saved: outcome.up_bytes_sparse_saved,
+                sparse_selected: outcome.sparse_selected,
+                sparse_total: outcome.sparse_total,
+                sparse_residual_sq: outcome.sparse_residual_sq,
                 round_seconds,
             });
             if let Some(p) = outcome.population {
@@ -485,6 +499,7 @@ impl Experiment {
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
+            sparse: self.cfg.sparse.params(),
             acfg,
             population: self.cfg.population,
             seed: self.cfg.seed,
@@ -552,6 +567,10 @@ impl Experiment {
                 frames_rejected: outcome.frames_rejected,
                 up_bytes_rejected: outcome.up_bytes_rejected,
                 up_bytes_delta_saved: outcome.up_bytes_delta_saved,
+                up_bytes_sparse_saved: outcome.up_bytes_sparse_saved,
+                sparse_selected: outcome.sparse_selected,
+                sparse_total: outcome.sparse_total,
+                sparse_residual_sq: outcome.sparse_residual_sq,
                 round_seconds,
             });
             rec.push_commit(outcome.commit);
@@ -583,6 +602,7 @@ impl Experiment {
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
+            sparse: self.cfg.sparse.params(),
             acfg: self.cfg.async_cfg.resolved(self.cfg.clients_per_round),
             population: self.cfg.population,
             seed: self.cfg.seed,
@@ -637,6 +657,10 @@ impl Experiment {
                 frames_rejected: outcome.frames_rejected,
                 up_bytes_rejected: outcome.up_bytes_rejected,
                 up_bytes_delta_saved: outcome.up_bytes_delta_saved,
+                up_bytes_sparse_saved: outcome.up_bytes_sparse_saved,
+                sparse_selected: outcome.sparse_selected,
+                sparse_total: outcome.sparse_total,
+                sparse_residual_sq: outcome.sparse_residual_sq,
                 round_seconds: 0.0,
             });
             rec.push_commit(outcome.commit.clone());
@@ -677,6 +701,7 @@ impl Experiment {
             chaos: self.cfg.chaos,
             integrity: self.cfg.omc.integrity,
             delta: self.cfg.delta.enabled,
+            sparse: self.cfg.sparse.params(),
             acfg: self.cfg.async_cfg.resolved(self.cfg.clients_per_round),
             population: self.cfg.population,
             seed: self.cfg.seed,

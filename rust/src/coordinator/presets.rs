@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::config::{ExperimentConfig, OmcConfig};
+use crate::coordinator::config::{ExperimentConfig, OmcConfig, SparseConfig};
 use crate::coordinator::experiment::{Experiment, RunSummary};
 use crate::coordinator::sweep::SweepSpec;
 use crate::data::partition::Partition;
@@ -16,6 +16,7 @@ use crate::fl::cohort::CohortConfig;
 use crate::fl::population::PopulationConfig;
 use crate::fl::serve::ServeConfig;
 use crate::metrics::recorder::Recorder;
+use crate::omc::sparse::SparseMode;
 use crate::runtime::engine::{Engine, LoadedModel};
 
 /// The paper's experimental scale, shrunk to this testbed. All examples use
@@ -254,6 +255,36 @@ pub fn scale_ladder() -> Vec<(String, PopulationConfig)> {
                 churn_period: 2,
                 wave_amplitude: 0.6,
                 wave_period: 4,
+            },
+        ),
+    ]
+}
+
+/// The uplink-sparsification scenario ladder driven by
+/// `benches/bench_sparse.rs` and the sparse CI tier: from the dense
+/// reference (sparsification off) through progressively tighter top-k
+/// budgets down to a rand-k control arm at the tightest budget. Every
+/// rung keeps error feedback on — the unsent mass banks into a
+/// per-client residual keyed `(seed, cid)` and folds into the next
+/// round's update before selection (docs/COMPRESSION.md), so even the
+/// 1% rungs converge instead of starving coordinates.
+pub fn sparse_ladder() -> Vec<(String, SparseConfig)> {
+    let topk = |fraction| SparseConfig {
+        enabled: true,
+        mode: SparseMode::TopK,
+        fraction,
+    };
+    vec![
+        ("dense uplink (reference)".into(), SparseConfig::default()),
+        ("top-k 25%".into(), topk(0.25)),
+        ("top-k 10%".into(), topk(0.10)),
+        ("top-k 1%".into(), topk(0.01)),
+        (
+            "rand-k 1% (control)".into(),
+            SparseConfig {
+                enabled: true,
+                mode: SparseMode::RandK,
+                fraction: 0.01,
             },
         ),
     ]
@@ -555,6 +586,24 @@ mod tests {
         // ...while the flat-root rung isolates the lazy-fleet change
         assert_eq!(rows[1].1.churn_rate, 0.0);
         assert_eq!(rows[1].1.wave_amplitude, 0.0);
+    }
+
+    #[test]
+    fn sparse_ladder_tightens_from_dense() {
+        let rows = sparse_ladder();
+        assert_eq!(rows.len(), 5);
+        assert!(!rows[0].1.enabled, "rung 0 is the dense reference");
+        for (_, s) in &rows[1..] {
+            assert!(s.enabled);
+            assert!(s.fraction > 0.0 && s.fraction <= 1.0);
+        }
+        // budgets tighten down the top-k rungs
+        assert!(rows[1].1.fraction > rows[2].1.fraction);
+        assert!(rows[2].1.fraction > rows[3].1.fraction);
+        assert!(rows[1..4].iter().all(|(_, s)| s.mode == SparseMode::TopK));
+        // the control arm swaps only the selection rule, same budget
+        assert_eq!(rows[4].1.mode, SparseMode::RandK);
+        assert_eq!(rows[4].1.fraction, rows[3].1.fraction);
     }
 
     #[test]

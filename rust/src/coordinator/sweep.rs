@@ -48,7 +48,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::config::{ExperimentConfig, OmcConfig};
+use crate::coordinator::config::{ExperimentConfig, OmcConfig, SparseConfig};
 use crate::coordinator::experiment::{self, Experiment, RunSummary};
 use crate::data::partition::Partition;
 use crate::fl::async_round::{AsyncConfig, StalenessPolicy};
@@ -60,6 +60,7 @@ use crate::metrics::stats::Timer;
 use crate::metrics::sweep as summaries;
 use crate::metrics::sweep::CellView;
 use crate::omc::format::FloatFormat;
+use crate::omc::sparse::SparseMode;
 use crate::runtime::engine::{Engine, LoadedModel};
 use crate::util::json::{self, Json};
 use crate::util::rng::hash_seed;
@@ -207,7 +208,8 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
          async={};aconc={};ak={};apol={};astale={};aring={};\
          integrity={};chaos={};cbf={:016x};ctr={:016x};cdup={:016x};\
          ccr={:016x};ccf={:016x};cret={};cbo={:016x};cqt={};cqr={};\
-         delta={};pop={};preg={};pedg={};pchr={:016x};pchp={};\
+         delta={};sp={};spm={};spf={:016x};\
+         pop={};preg={};pedg={};pchr={:016x};pchp={};\
          pwa={:016x};pwp={}",
         summaries::SWEEP_SCHEMA_VERSION,
         cfg.name,
@@ -259,6 +261,9 @@ fn canonical_config(cfg: &ExperimentConfig) -> String {
         cfg.chaos.quarantine_threshold,
         cfg.chaos.quarantine_rounds,
         cfg.delta.enabled,
+        cfg.sparse.enabled,
+        cfg.sparse.mode,
+        cfg.sparse.fraction.to_bits(),
         cfg.population.enabled,
         cfg.population.registered,
         cfg.population.edges,
@@ -393,6 +398,30 @@ fn chaos_by_name(name: &str) -> Result<ChaosConfig> {
         },
         other => anyhow::bail!(
             "unknown chaos scenario {other:?} (off | light | heavy)"
+        ),
+    })
+}
+
+/// Named uplink-sparsification scenario for the `sweep.sparse` axis. Any
+/// scenario other than `off` forces `omc.integrity = true` on its cells —
+/// sparse records ride the checksummed v2/v3 layouts. Both selection
+/// modes keep a quarter of the coordinates so paired cells A/B the
+/// selection rule, not the budget.
+fn sparse_by_name(name: &str) -> Result<SparseConfig> {
+    Ok(match name {
+        "off" => SparseConfig::default(),
+        "topk" => SparseConfig {
+            enabled: true,
+            mode: SparseMode::TopK,
+            fraction: 0.25,
+        },
+        "randk" => SparseConfig {
+            enabled: true,
+            mode: SparseMode::RandK,
+            fraction: 0.25,
+        },
+        other => anyhow::bail!(
+            "unknown sparse scenario {other:?} (off | topk | randk)"
         ),
     })
 }
@@ -591,6 +620,18 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                 .collect::<Result<_>>()?,
         };
 
+    // uplink sparsification axis: named scenarios (`sparse_by_name`); a
+    // non-`off` entry runs its cells with magnitude or random selection
+    // plus per-client error feedback, and forces wire integrity — sparse
+    // records only exist on the checksummed v2/v3 layouts
+    let sparses: Vec<(String, SparseConfig)> = match axis_strs("sweep.sparse")? {
+        None => vec![(String::new(), base.sparse)],
+        Some(names) => names
+            .iter()
+            .map(|n| sparse_by_name(n).map(|s| (n.clone(), s)))
+            .collect::<Result<_>>()?,
+    };
+
     let mut spec = SweepSpec::new(&base.name, base.seed, &base.output_dir);
     let multi_axis = partitions.len() > 1
         || domains.len() > 1
@@ -598,7 +639,8 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
         || modes.len() > 1
         || chaoses.len() > 1
         || deltas.len() > 1
-        || populations.len() > 1;
+        || populations.len() > 1
+        || sparses.len() > 1;
     for &partition in &partitions {
         for &domain in &domains {
             for (cohort_name, cohort) in &cohorts {
@@ -606,6 +648,7 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                     for (chaos_name, chaos) in &chaoses {
                         for &delta in &deltas {
                         for (pop_name, pop) in &populations {
+                        for (sparse_name, sparse) in &sparses {
                             let suffix = if multi_axis {
                                 let c = if cohort_name.is_empty() {
                                     String::new()
@@ -632,7 +675,14 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                 } else {
                                     format!("_{pop_name}")
                                 };
-                                format!("_{partition}_d{domain}{c}{m}{x}{d}{p}")
+                                let sp = if sparse_name.is_empty() {
+                                    String::new()
+                                } else {
+                                    format!("_{sparse_name}")
+                                };
+                                format!(
+                                    "_{partition}_d{domain}{c}{m}{x}{d}{p}{sp}"
+                                )
                             } else {
                                 String::new()
                             };
@@ -640,8 +690,10 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                 let mut c = base.clone();
                                 c.name = label;
                                 c.omc = omc;
-                                c.omc.integrity =
-                                    base.omc.integrity || !chaos.is_off() || delta;
+                                c.omc.integrity = base.omc.integrity
+                                    || !chaos.is_off()
+                                    || delta
+                                    || sparse.enabled;
                                 c.partition = partition;
                                 c.domain = domain;
                                 c.cohort = *cohort;
@@ -649,6 +701,7 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                 c.chaos = *chaos;
                                 c.delta.enabled = delta;
                                 c.population = *pop;
+                                c.sparse = *sparse;
                                 spec.cells.push(c);
                             };
                             if formats.iter().any(|f| f.is_fp32()) {
@@ -677,6 +730,7 @@ pub fn from_table(t: &Table) -> Result<SweepSpec> {
                                     }
                                 }
                             }
+                        }
                         }
                         }
                     }
@@ -943,6 +997,89 @@ pub fn smoke_delta(seed: u64) -> Result<SweepSpec> {
         c.delta.enabled = delta;
         c.chaos = chaos;
         c.lr = lr;
+        if is_async {
+            c.async_cfg = AsyncConfig {
+                enabled: true,
+                buffer_k: 2,
+                snapshot_ring: 2,
+                ..AsyncConfig::default()
+            };
+        }
+        c.workers = workers;
+        spec.cells.push(c);
+    }
+    spec.finalize()
+}
+
+/// The sparse CI smoke tier (`--profile smoke-sparse`): six `native:tiny`
+/// cells proving uplink sparsification with error feedback end to end. A
+/// dense/top-k sync pair shares every training knob, so the top-k cell's
+/// `up_bytes` must come in strictly below its dense twin (the CI gate
+/// `cmp`s that inequality, and greps for nonzero `up_bytes_sparse_saved`
+/// and a nonzero residual norm — error feedback is actually banking the
+/// unsent mass). A rand-k cell A/Bs the selection rule at the same
+/// budget, an async top-k cell exercises the ring-snapshot sparse-base
+/// fold with `workers = 4` (task-order residual commits keep it
+/// worker-count independent), a partial-selection cell composes top-k
+/// with a coarser format and `omc.fraction < 1` (masked-out vars must
+/// never be sparsified), and a converged cell (step size below the
+/// quantization dead zone) pins the regime where the residual stream
+/// goes quiet. The CI `sparse-determinism` leg runs this profile at two
+/// worker counts plus `OMC_FORCE_SCALAR=1` and `cmp`s the summaries.
+pub fn smoke_sparse(seed: u64) -> Result<SweepSpec> {
+    let mut base =
+        ExperimentConfig::default_with("smoke_sparse", Path::new("native:tiny"));
+    base.rounds = 4;
+    base.num_clients = 8;
+    base.clients_per_round = 4;
+    base.local_steps = 1;
+    base.lr = 0.2;
+    base.eval_every = 2;
+    base.eval_batches = 2;
+    base.workers = 1; // byte-stable sync aggregation order
+    base.output_dir = PathBuf::from("results/sweep_smoke_sparse");
+    base.omc = OmcConfig {
+        format: "S1E4M14".parse()?,
+        use_pvt: true,
+        weights_only: true,
+        fraction: 1.0,
+        integrity: true,
+    };
+
+    let topk = SparseConfig {
+        enabled: true,
+        mode: SparseMode::TopK,
+        fraction: 0.25,
+    };
+    let randk = SparseConfig {
+        enabled: true,
+        mode: SparseMode::RandK,
+        fraction: 0.25,
+    };
+
+    let mut spec = SweepSpec::new("sweep_smoke_sparse", seed, &base.output_dir);
+    // (label, sparse, async, workers, lr, format, omc fraction) — the
+    // dense cell is the byte-count control for the top-k twin; the
+    // partial cell layers top-k under partial per-parameter selection at
+    // a coarser format to prove the two selection stages compose; the
+    // converged cell runs below the quantization dead zone so selected
+    // magnitudes collapse and the sparse stage's savings are structural.
+    #[allow(clippy::type_complexity)]
+    let cells: Vec<(&str, SparseConfig, bool, usize, f32, &str, f32)> = vec![
+        ("sync_dense", SparseConfig::default(), false, 1, 0.2, "S1E4M14", 1.0),
+        ("sync_topk", topk, false, 1, 0.2, "S1E4M14", 1.0),
+        ("sync_randk", randk, false, 1, 0.2, "S1E4M14", 1.0),
+        ("async_topk", topk, true, 4, 0.2, "S1E4M14", 1.0),
+        ("sync_topk_partial", topk, false, 1, 0.2, "S1E3M7", 0.5),
+        ("sync_topk_converged", topk, false, 1, 1e-12, "S1E4M14", 1.0),
+    ];
+    for (label, sparse, is_async, workers, lr, fmt, fraction) in cells {
+        let mut c = base.clone();
+        c.name = label.to_string();
+        c.sparse = sparse;
+        c.lr = lr;
+        c.omc.format = fmt.parse()?;
+        c.omc.fraction = fraction;
         if is_async {
             c.async_cfg = AsyncConfig {
                 enabled: true,
@@ -1695,6 +1832,140 @@ mod tests {
     }
 
     #[test]
+    fn sparse_axis_expands_named_scenarios_and_forces_integrity() {
+        let toml_text = format!("{SWEEP_TOML}\nsparse = [\"off\", \"topk\"]\n");
+        let spec = from_table(&toml::parse(&toml_text).unwrap()).unwrap();
+        // 2 sparse scenarios × 5 cells
+        assert_eq!(spec.cells.len(), 10);
+        let (dense, topk): (Vec<_>, Vec<_>) =
+            spec.cells.iter().partition(|c| !c.sparse.enabled);
+        assert_eq!(dense.len(), 5);
+        assert_eq!(topk.len(), 5);
+        assert!(dense.iter().all(|c| c.name.ends_with("_off")));
+        assert!(topk.iter().all(|c| c.name.ends_with("_topk")));
+        for c in &topk {
+            assert_eq!(c.sparse.mode, SparseMode::TopK);
+            assert!((c.sparse.fraction - 0.25).abs() < 1e-12);
+        }
+        // base integrity is off, so dense cells stay unframed while
+        // sparse cells get integrity forced on (sparse records only
+        // exist on the checksummed v2/v3 layouts)
+        assert!(dense.iter().all(|c| !c.omc.integrity));
+        assert!(topk.iter().all(|c| c.omc.integrity));
+        spec.validate().unwrap();
+        // the randk scenario binds the other selection rule
+        let rk = format!("{SWEEP_TOML}\nsparse = [\"randk\"]\n");
+        let spec = from_table(&toml::parse(&rk).unwrap()).unwrap();
+        assert!(spec
+            .cells
+            .iter()
+            .all(|c| c.sparse.enabled && c.sparse.mode == SparseMode::RandK));
+        // unknown scenarios are rejected
+        let bad = format!("{SWEEP_TOML}\nsparse = [\"magic\"]\n");
+        assert!(from_table(&toml::parse(&bad).unwrap()).is_err());
+        // single-scenario grids keep the unsuffixed labels and stay off
+        let plain = from_table(&toml::parse(SWEEP_TOML).unwrap()).unwrap();
+        assert!(plain.cells.iter().all(|c| !c.sparse.enabled));
+        assert_eq!(plain.cells[0].name, "fp32_baseline");
+    }
+
+    #[test]
+    fn smoke_sparse_profile_covers_the_sparse_matrix() {
+        let spec = smoke_sparse(7).unwrap();
+        assert_eq!(spec.name, "sweep_smoke_sparse");
+        assert_eq!(spec.cells.len(), 6);
+        for c in &spec.cells {
+            assert!(c.rounds <= 8, "smoke must stay CI-fast");
+            assert_eq!(c.model_dir.to_str(), Some("native:tiny"));
+            assert!(
+                c.omc.integrity,
+                "{}: sparse tier always frames v2/v3",
+                c.name
+            );
+            c.validate().unwrap();
+        }
+        // the dense/top-k sync pair shares every training knob except the
+        // sparse switch — the byte-count A/B the CI gate relies on
+        let dense = spec
+            .cells
+            .iter()
+            .find(|c| !c.sparse.enabled)
+            .expect("one dense control cell");
+        let paired = spec
+            .cells
+            .iter()
+            .find(|c| {
+                c.sparse.enabled
+                    && c.sparse.mode == SparseMode::TopK
+                    && !c.async_cfg.enabled
+                    && c.omc.fraction >= 1.0
+                    && c.lr > 1e-9
+            })
+            .expect("one plain sync top-k cell");
+        assert_eq!(dense.rounds, paired.rounds);
+        assert_eq!(dense.omc.format, paired.omc.format);
+        assert_eq!(dense.workers, paired.workers);
+        assert_eq!(dense.lr, paired.lr);
+        // one cell A/Bs the selection rule at the same budget
+        let randk = spec
+            .cells
+            .iter()
+            .find(|c| c.sparse.mode == SparseMode::RandK && c.sparse.enabled)
+            .expect("one rand-k cell");
+        assert_eq!(randk.sparse.fraction, paired.sparse.fraction);
+        // the async cell exercises the ring-snapshot sparse-base fold,
+        // pooled — task-order residual commits keep it deterministic
+        let async_cells: Vec<_> = spec
+            .cells
+            .iter()
+            .filter(|c| c.async_cfg.enabled)
+            .collect();
+        assert_eq!(async_cells.len(), 1);
+        assert!(async_cells[0].sparse.enabled);
+        assert!(async_cells[0].workers > 1);
+        // one cell composes top-k with partial per-parameter selection
+        assert!(spec
+            .cells
+            .iter()
+            .any(|c| c.sparse.enabled && c.omc.fraction < 1.0));
+        // the converged-regime cell: step size below the dead zone
+        let converged = spec
+            .cells
+            .iter()
+            .find(|c| c.name.contains("converged"))
+            .expect("one converged-regime sparse cell");
+        assert!(converged.sparse.enabled);
+        assert!(converged.lr > 0.0 && converged.lr < 1e-9);
+        // determinism of the expansion itself
+        let again = smoke_sparse(7).unwrap();
+        let names: Vec<_> = spec.cells.iter().map(|c| &c.name).collect();
+        assert_eq!(
+            names,
+            again.cells.iter().map(|c| &c.name).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fingerprint_covers_sparse_knobs() {
+        let spec = smoke_sparse(1).unwrap();
+        let dense = &spec.cells[0];
+        let topk = &spec.cells[1];
+        assert_ne!(fingerprint_hex(dense), fingerprint_hex(topk));
+        // every sparse knob moves the hash — a resumed dense summary must
+        // not satisfy a sparse cell, and mode/fraction changes re-run
+        let base = fingerprint_hex(topk);
+        let mut c = topk.clone();
+        c.sparse.enabled = false;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = topk.clone();
+        c.sparse.mode = SparseMode::RandK;
+        assert_ne!(base, fingerprint_hex(&c));
+        let mut c = topk.clone();
+        c.sparse.fraction = 0.5;
+        assert_ne!(base, fingerprint_hex(&c));
+    }
+
+    #[test]
     fn fingerprint_covers_integrity_and_chaos_knobs() {
         let spec = smoke_chaos(1).unwrap();
         let clean = &spec.cells[0];
@@ -1891,6 +2162,34 @@ mod tests {
         }
         assert!(delta.iter().any(|c| c.async_cfg.enabled));
         assert!(delta.iter().any(|c| !c.async_cfg.enabled));
+    }
+
+    #[test]
+    fn example_sparse_sweep_config_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/sweep_sparse.toml");
+        let spec = from_toml_file(&path).unwrap();
+        // 2 modes × 1 format × 2 sparse scenarios = 4 cells
+        assert_eq!(spec.cells.len(), 4);
+        let (dense, topk): (Vec<_>, Vec<_>) =
+            spec.cells.iter().partition(|c| !c.sparse.enabled);
+        assert_eq!(dense.len(), 2);
+        assert_eq!(topk.len(), 2);
+        for c in &spec.cells {
+            // the example keeps integrity on globally so the dense/top-k
+            // A/B shares one wire format
+            assert!(c.omc.integrity, "{}", c.name);
+            c.validate().unwrap();
+        }
+        for c in &topk {
+            assert!(c.name.ends_with("_topk"), "{}", c.name);
+            assert_eq!(c.sparse.mode, SparseMode::TopK);
+        }
+        for c in &dense {
+            assert!(c.name.ends_with("_off"), "{}", c.name);
+        }
+        assert!(topk.iter().any(|c| c.async_cfg.enabled));
+        assert!(topk.iter().any(|c| !c.async_cfg.enabled));
     }
 
     #[test]

@@ -80,6 +80,7 @@ use crate::omc::codec::{self, NonceLedger, WireWriter};
 use crate::omc::delta::{AckLedger, DeltaBase};
 use crate::omc::format::FloatFormat;
 use crate::omc::selection::SelectionPolicy;
+use crate::omc::sparse::{ClientResidual, SparseParams, SparseStore};
 use crate::omc::store::{CompressedModel, SnapshotRing, StoredVar};
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
@@ -651,6 +652,13 @@ pub struct AsyncContext<'a> {
     /// planned to be discarded or killed — falls back to verbatim v2
     /// framing, so a lagging ack can never produce an undecodable frame.
     pub delta: bool,
+    /// frame masked uplink variables as tag-3 sparse records of the
+    /// error-corrected update (requires `integrity`). Gated per dispatch
+    /// exactly like the delta stage: only updates whose planned fold keeps
+    /// the start-version snapshot inside the ring sparse-frame (the fold
+    /// needs that snapshot decompressed as its dense base); everything
+    /// else ships dense and leaves the client's residual untouched.
+    pub sparse: Option<SparseParams>,
     /// resolved async knobs
     pub acfg: AsyncConfig,
     /// population-scale scenario (`fl::population`). The async engine
@@ -695,6 +703,15 @@ pub struct CommitOutcome {
     /// uplink bytes the v3 delta stage saved vs verbatim framing, summed
     /// over the wave's built uploads (zero when delta is off)
     pub up_bytes_delta_saved: usize,
+    /// uplink bytes the sparse stage saved vs dense packed records,
+    /// summed over the wave's built uploads (zero when sparse is off)
+    pub up_bytes_sparse_saved: usize,
+    /// coordinates shipped by the wave's sparse records
+    pub sparse_selected: u64,
+    /// coordinates eligible for sparsification across the wave's uploads
+    pub sparse_total: u64,
+    /// Σ‖residual‖² banked by the wave's clients after selection
+    pub sparse_residual_sq: f64,
     /// wave clients still in flight when the phase ends (downlink spent,
     /// training skipped)
     pub in_flight: usize,
@@ -750,10 +767,31 @@ pub(crate) fn delta_frames(
         )
 }
 
+/// Whether a dispatch's uplink carries tag-3 sparse records. Same
+/// plan-derived gate as [`delta_frames`]: the fold resolves the sparse
+/// record against the dense view of the client's start-version snapshot,
+/// so only updates whose planned fold still finds that snapshot in the
+/// ring sparsify. Discards, give-ups, and in-flight dispatches ship dense
+/// — and bank no residual, keeping the error-feedback state a pure
+/// function of the plan.
+pub(crate) fn sparse_frames(
+    d: &PlannedDispatch,
+    sparse_on: bool,
+    ring_depth: usize,
+) -> bool {
+    sparse_on
+        && matches!(
+            d.outcome,
+            DispatchOutcome::Folded { staleness, .. }
+                if staleness < ring_depth
+        )
+}
+
 /// Train one planned dispatch: the client RNG, nonce, delta base, and
 /// speaker shard are all pure functions of `(ctx, d)`, so the upload bytes
 /// are bit-identical no matter which thread or engine runs this. Shared by
 /// [`AsyncRoundEngine::run_commit`] and the serving engine's workers.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_planned_client(
     ctx: &AsyncContext<'_>,
     d: &PlannedDispatch,
@@ -762,6 +800,7 @@ pub(crate) fn run_planned_client(
     delta_on: bool,
     ring_depth: usize,
     cs: &mut ClientScratch,
+    residual: Option<&ClientResidual>,
 ) -> Result<ClientResult> {
     let mut rng = Xoshiro256pp::new(hash_seed(&[
         ctx.seed,
@@ -776,6 +815,11 @@ pub(crate) fn run_planned_client(
     if delta_frames(d, delta_on, ring_depth) {
         tc.delta_base = Some(d.start_version as u64);
     }
+    if let Some(sp) = ctx.sparse {
+        if sparse_frames(d, ctx.integrity, ring_depth) {
+            tc.sparse = Some(sp.bind(ctx.seed, d.wave, d.cid as u64));
+        }
+    }
     // speakers_of works in dense AND lazy (population) modes
     let shard = ctx.assignment.speakers_of(d.cid);
     client::run_client_round(
@@ -787,6 +831,7 @@ pub(crate) fn run_planned_client(
         tc,
         &mut rng,
         cs,
+        residual,
     )
     .with_context(|| format!("client {} wave {}", d.cid, d.wave))
 }
@@ -825,6 +870,9 @@ pub struct AsyncRoundEngine {
     /// an update folds into a commit — never on rejected, corrupt,
     /// duplicate, or stale-discarded frames)
     acks: AckLedger,
+    /// per-client sparse error-feedback residuals, committed in task
+    /// order by `fold_commit` (fresh per phase — one engine per phase)
+    sparse_store: SparseStore,
     /// stash consumed uplink wires in `spent` instead of dropping them
     /// (the serving engine recycles them through its byte arena)
     recycle_uplinks: bool,
@@ -870,6 +918,7 @@ impl AsyncRoundEngine {
             decode_scratch: Vec::new(),
             ledger: NonceLedger::new((ctx.acfg.concurrency * 2).max(16)),
             acks: AckLedger::new(),
+            sparse_store: SparseStore::new(),
             recycle_uplinks: false,
             spent: Vec::new(),
             next_commit: 0,
@@ -1040,15 +1089,18 @@ impl AsyncRoundEngine {
 
         let delta_on = ctx.delta && ctx.integrity;
         let ring_depth = ctx.acfg.snapshot_ring;
+        let sparse_store = &self.sparse_store;
         let job = |t: usize, cs: &mut ClientScratch| -> Result<ClientResult> {
+            let d = &plan.dispatches[tasks[t]];
             run_planned_client(
                 ctx,
-                &plan.dispatches[tasks[t]],
+                d,
                 &downlinks[t],
                 &masks[t],
                 delta_on,
                 ring_depth,
                 cs,
+                sparse_store.get(d.cid as u64),
             )
         };
 
@@ -1144,13 +1196,25 @@ impl AsyncRoundEngine {
         let (mut up_bytes, mut up_disc, mut peak) = (0usize, 0usize, 0usize);
         let (mut frames_rejected, mut up_rejected) = (0u64, 0usize);
         let mut up_delta_saved = 0usize;
+        let mut up_sparse_saved = 0usize;
+        let (mut sparse_selected, mut sparse_total) = (0u64, 0u64);
+        let mut sparse_residual_sq = 0.0f64;
         let mut chaos_reports: Vec<ChaosClientReport> = Vec::new();
-        for (t, r) in results {
+        for (t, mut r) in results {
             let d = &plan.dispatches[tasks[t]];
             loss_sum += r.loss;
             trained += 1;
             peak = peak.max(r.peak_param_bytes);
             up_delta_saved += r.delta_saved;
+            up_sparse_saved += r.sparse_saved;
+            sparse_selected += r.sparse_selected;
+            sparse_total += r.sparse_total;
+            sparse_residual_sq += r.sparse_residual_sq;
+            // error-feedback state advances here, in task order — the
+            // committed residuals are identical for any worker count
+            if let Some(res) = r.residual.take() {
+                self.sparse_store.commit(d.cid as u64, res);
+            }
             match d.outcome {
                 DispatchOutcome::Folded { .. } => {
                     // corrupt retries arrive (and are rejected) before the
@@ -1225,6 +1289,7 @@ impl AsyncRoundEngine {
 
         // fold this commit's planned updates in plan order through ONE
         // aggregator on this thread — commit bytes are schedule-independent
+        let sparse_on = ctx.sparse.is_some() && ctx.integrity;
         let pc = &plan.commits[v];
         let mut agg = StreamingAggregator::new(&server.var_lens());
         for (&s, &w) in pc.updates.iter().zip(&pc.weights) {
@@ -1232,22 +1297,48 @@ impl AsyncRoundEngine {
                 format!("upload for dispatch {s} missing at commit {v}")
             })?;
             let d = &plan.dispatches[s];
-            if delta_frames(d, delta_on, ring_depth) {
+            let use_delta = delta_frames(d, delta_on, ring_depth);
+            let use_sparse = sparse_frames(d, sparse_on, ring_depth);
+            if use_delta || use_sparse {
                 // folded updates may carry different start versions, so
-                // the delta base is resolved per update from the ring
+                // the delta/sparse base is resolved per update from the
+                // ring
                 let bsnap = self.ring.get(d.start_version).with_context(|| {
                     format!(
-                        "delta base {} evicted before commit {v} \
+                        "update base {} evicted before commit {v} \
                          (ring depth {ring_depth})",
                         d.start_version
                     )
                 })?;
-                let base = DeltaBase::from_model(d.start_version as u64, bsnap);
-                agg.accumulate_wire_based(
+                let base = use_delta
+                    .then(|| DeltaBase::from_model(d.start_version as u64, bsnap));
+                // the sparse fold needs the base's DENSE view; staleness 0
+                // (the common case) reuses the wave's one-time decode,
+                // stale folds decompress their snapshot on the spot
+                let sb_owned: Option<Vec<Vec<f32>>> = (use_sparse
+                    && d.start_version != v)
+                    .then(|| bsnap.vars.iter().map(|sv| sv.decompress()).collect());
+                let sbase: Option<&[Vec<f32>]> = if use_sparse {
+                    match &sb_owned {
+                        Some(vv) => Some(vv),
+                        None => {
+                            anyhow::ensure!(
+                                self.wave_vals_version == v,
+                                "wave_vals holds version {} at commit {v}",
+                                self.wave_vals_version
+                            );
+                            Some(&self.wave_vals)
+                        }
+                    }
+                } else {
+                    None
+                };
+                agg.accumulate_wire_with(
                     &wire,
                     w,
                     &mut self.decode_scratch,
-                    Some(&base),
+                    base.as_ref(),
+                    sbase,
                 )?;
             } else {
                 agg.accumulate_wire(&wire, w, &mut self.decode_scratch)?;
@@ -1336,6 +1427,10 @@ impl AsyncRoundEngine {
             frames_rejected,
             up_bytes_rejected: up_rejected,
             up_bytes_delta_saved: up_delta_saved,
+            up_bytes_sparse_saved: up_sparse_saved,
+            sparse_selected,
+            sparse_total,
+            sparse_residual_sq,
             in_flight,
             chaos_reports,
             commit,

@@ -29,8 +29,9 @@ use anyhow::{Context, Result};
 use crate::data::synth::Domain;
 use crate::omc::codec::{self, VarView, WireWriter};
 use crate::omc::format::FloatFormat;
+use crate::omc::sparse::{self, ClientResidual, SparseMode, SparseTrainParams};
 use crate::omc::store::StoredVar;
-use crate::omc::transform::Pvt;
+use crate::omc::transform::{self, Pvt};
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool;
@@ -55,6 +56,15 @@ pub struct ClientTrainConfig {
     /// `uplink_nonce` (delta frames are always checksummed); ignored
     /// without it.
     pub delta_base: Option<u64>,
+    /// `Some(params)` ⇒ sparsify masked variables on the uplink: the
+    /// error-corrected update (new values − downlink values + carried
+    /// residual) is reduced to top-k / random-k coordinates shipped as
+    /// tag-3 sparse records, the rest banked in the returned
+    /// [`ClientResidual`]. Requires `uplink_nonce` (sparse records are
+    /// only legal on checksummed frames); ignored without it. Takes
+    /// precedence over the delta stage on masked variables (tag-3
+    /// records are never delta-coded).
+    pub sparse: Option<SparseTrainParams>,
 }
 
 /// What the client sends back.
@@ -68,6 +78,19 @@ pub struct ClientResult {
     /// uplink bytes the delta stage saved vs verbatim records (0 on
     /// verbatim frames)
     pub delta_saved: usize,
+    /// uplink bytes the sparse stage saved vs dense packed records (0
+    /// when sparsification is off)
+    pub sparse_saved: usize,
+    /// coordinates selected for the uplink across sparsified variables
+    pub sparse_selected: u64,
+    /// total coordinates across sparsified variables (denominator for
+    /// the sparsity metric)
+    pub sparse_total: u64,
+    /// squared L2 mass of the new residual (f64 accumulation)
+    pub sparse_residual_sq: f64,
+    /// the error-feedback residual to carry into this client's next
+    /// round (`Some` iff sparsification ran)
+    pub residual: Option<ClientResidual>,
 }
 
 /// Reusable per-client working set: the decoded-variable buffers and PVT
@@ -88,6 +111,20 @@ pub struct ClientScratch {
     spans: Vec<Option<(usize, usize)>>,
     /// bitpacker working buffers for the v3 uplink
     delta: codec::DeltaScratch,
+    /// decompressed downlink values per masked variable (filled only
+    /// when sparsification is on — the reference point for the
+    /// error-corrected update)
+    down_vals: Vec<Vec<f32>>,
+    /// dense post-training values for the variable being sparsified
+    dense: Vec<f32>,
+    /// error-corrected update buffer (update + carried residual)
+    err: Vec<f32>,
+    /// selected coordinate indices (ascending)
+    idx: Vec<u32>,
+    /// partial Fisher–Yates working set for random-k
+    randk: Vec<u32>,
+    /// gathered selected values, writer input
+    gathered: Vec<f32>,
 }
 
 impl ClientScratch {
@@ -109,6 +146,9 @@ impl crate::util::arena::Reclaim for ClientScratch {
 /// PPQ selection the server drew for it (needed by the graph to know which
 /// variables to re-quantize). `scratch` holds the reused codec buffers —
 /// pass the same instance every round for the zero-alloc steady state.
+/// `residual` is the error-feedback residual this client banked on its
+/// previous participation (`None` when sparsification is off or the
+/// client is fresh); the updated residual comes back in the result.
 #[allow(clippy::too_many_arguments)]
 pub fn run_client_round(
     model: &LoadedModel,
@@ -119,6 +159,7 @@ pub fn run_client_round(
     cfg: ClientTrainConfig,
     rng: &mut Xoshiro256pp,
     scratch: &mut ClientScratch,
+    residual: Option<&ClientResidual>,
 ) -> Result<ClientResult> {
     let mc = &model.manifest.config;
     let nvars = model.num_vars();
@@ -191,7 +232,35 @@ pub fn run_client_round(
             loss: loss_sum / cfg.local_steps.max(1) as f64,
             peak_param_bytes,
             delta_saved: 0,
+            sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
+            residual: None,
         });
+    }
+
+    // Sparse uplink needs the dense values the client *received* — the
+    // reference point for the error-corrected update. Reconstruct them
+    // from the already-decoded tildes before training overwrites them
+    // (bit-identical to `decompress_into`: the fused unpack+affine and
+    // unpack-then-`transform::apply` paths are bit-exact by contract).
+    let sp = cfg.sparse.filter(|_| cfg.uplink_nonce.is_some());
+    if sp.is_some() {
+        scratch.down_vals.resize_with(nvars, Vec::new);
+        for (i, t) in scratch.vals.iter().enumerate() {
+            let dv = &mut scratch.down_vals[i];
+            if mask[i] > 0.5 {
+                dv.resize(t.len(), 0.0);
+                let pvt = Pvt {
+                    s: scratch.s[i],
+                    b: scratch.b[i],
+                };
+                transform::apply(pvt, t, dv);
+            } else {
+                dv.clear();
+            }
+        }
     }
 
     // OMC path: the graph consumes (Ṽ, s, b, mask) and returns the same
@@ -219,41 +288,118 @@ pub fn run_client_round(
     }
 
     // Streaming uplink: quantized vars bit-pack straight into the frame,
-    // the rest ship raw. No per-variable buffers.
+    // the rest ship raw. No per-variable buffers. With sparsification on,
+    // masked variables ship tag-3 sparse records of the error-corrected
+    // update instead of dense packed values.
     let mut up_param_bytes = 0usize;
     let mut cap = 0usize;
     for (i, t) in scratch.vals.iter().enumerate() {
         cap += if mask[i] > 0.5 {
-            19 + cfg.format.packed_bytes(t.len())
+            match sp {
+                Some(p) => {
+                    // tag-3 worst case: 27 header + ~4.1k index bytes
+                    let k = sparse::select_count(t.len(), p.fraction);
+                    27 + 5 * k + cfg.format.packed_bytes(k)
+                }
+                None => 19 + cfg.format.packed_bytes(t.len()),
+            }
         } else {
             5 + 4 * t.len()
         };
     }
     let mut w = uplink_writer(cfg, cap, nvars);
     let delta_on = cfg.delta_base.is_some() && cfg.uplink_nonce.is_some();
+    let mut sparse_selected = 0u64;
+    let mut sparse_total = 0u64;
+    let mut new_residual: Option<ClientResidual> = None;
     for (i, t) in scratch.vals.iter().enumerate() {
         if mask[i] > 0.5 {
             let pvt = Pvt {
                 s: scratch.s[i],
                 b: scratch.b[i],
             };
-            // the base is this variable's own downlink payload — valid
-            // only when the downlink packed it to the same byte length
-            let base = if delta_on {
-                scratch.spans[i].and_then(|(off, len)| {
-                    (len == cfg.format.packed_bytes(t.len()))
-                        .then(|| &download[off..off + len])
-                })
+            if let Some(p) = sp {
+                let n = t.len();
+                // dense post-training values, then the error-corrected
+                // update e = (v_new − v_down) + r_prev (f32, like the
+                // training arithmetic itself)
+                scratch.dense.resize(n, 0.0);
+                transform::apply(pvt, t, &mut scratch.dense);
+                let err = &mut scratch.err;
+                err.clear();
+                err.extend(
+                    scratch
+                        .dense
+                        .iter()
+                        .zip(&scratch.down_vals[i])
+                        .map(|(nw, dw)| nw - dw),
+                );
+                if let Some(r) = residual.and_then(|r| r.var(i)) {
+                    if r.len() == n {
+                        for (e, &rv) in err.iter_mut().zip(r) {
+                            *e += rv;
+                        }
+                    }
+                }
+                let k = sparse::select_count(n, p.fraction);
+                match p.mode {
+                    SparseMode::TopK => {
+                        sparse::select_topk(err, k, &mut scratch.idx)
+                    }
+                    SparseMode::RandK => sparse::select_randk(
+                        n,
+                        k,
+                        sparse::var_seed(p.key, i),
+                        &mut scratch.idx,
+                        &mut scratch.randk,
+                    ),
+                }
+                sparse::gather_into(err, &scratch.idx, &mut scratch.gathered);
+                let saved0 = w.sparse_saved();
+                w.sparse_values(
+                    &scratch.gathered,
+                    &scratch.idx,
+                    n,
+                    cfg.format,
+                    cfg.use_pvt,
+                );
+                up_param_bytes += (19 + cfg.format.packed_bytes(n))
+                    .saturating_sub(w.sparse_saved() - saved0);
+                // bank the unselected mass: e with the shipped
+                // coordinates zeroed — a bitwise partition of e
+                for &j in &scratch.idx {
+                    err[j as usize] = 0.0;
+                }
+                sparse_selected += scratch.idx.len() as u64;
+                sparse_total += n as u64;
+                new_residual
+                    .get_or_insert_with(|| ClientResidual::new(nvars))
+                    .set(i, err.clone());
             } else {
-                None
-            };
-            if delta_on {
-                w.packed_values_delta(t, cfg.format, pvt, base, &mut scratch.delta)
-            } else {
-                w.packed_values(t, cfg.format, pvt)
+                // the base is this variable's own downlink payload — valid
+                // only when the downlink packed it to the same byte length
+                let base = if delta_on {
+                    scratch.spans[i].and_then(|(off, len)| {
+                        (len == cfg.format.packed_bytes(t.len()))
+                            .then(|| &download[off..off + len])
+                    })
+                } else {
+                    None
+                };
+                if delta_on {
+                    w.packed_values_delta(
+                        t,
+                        cfg.format,
+                        pvt,
+                        base,
+                        &mut scratch.delta,
+                    )
+                } else {
+                    w.packed_values(t, cfg.format, pvt)
+                }
+                .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
+                up_param_bytes += cfg.format.packed_bytes(t.len()) + 8;
             }
-            .map_err(|e| anyhow::anyhow!("uplink pack var {i}: {e}"))?;
-            up_param_bytes += cfg.format.packed_bytes(t.len()) + 8;
         } else {
             w.raw(t);
             up_param_bytes += 4 * t.len();
@@ -261,11 +407,19 @@ pub fn run_client_round(
     }
     peak_param_bytes = peak_param_bytes.max(up_param_bytes);
     let delta_saved = w.delta_saved();
+    let sparse_saved = w.sparse_saved();
+    let sparse_residual_sq =
+        new_residual.as_ref().map_or(0.0, |r| r.norm_sq());
     Ok(ClientResult {
         upload: w.finish(),
         loss: loss_sum / cfg.local_steps.max(1) as f64,
         peak_param_bytes,
         delta_saved,
+        sparse_saved,
+        sparse_selected,
+        sparse_total,
+        sparse_residual_sq,
+        residual: new_residual,
     })
 }
 

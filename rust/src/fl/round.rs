@@ -49,6 +49,8 @@
 //!
 //! [`is_send_safe`]: crate::runtime::engine::LoadedModel::is_send_safe
 
+use std::sync::Mutex;
+
 use anyhow::{Context, Result};
 
 use crate::data::partition::ClientAssignment;
@@ -64,6 +66,7 @@ use crate::fl::server::{Server, StreamingAggregator};
 use crate::omc::codec::{self, NonceLedger};
 use crate::omc::delta::DeltaBase;
 use crate::omc::selection::SelectionPolicy;
+use crate::omc::sparse::{ClientResidual, SparseParams, SparseStore};
 use crate::runtime::engine::LoadedModel;
 use crate::util::rng::{hash_seed, Xoshiro256pp};
 use crate::util::threadpool;
@@ -109,6 +112,14 @@ pub struct RoundContext<'a> {
     /// engine never has ack lag: every uplink deltas against the packed
     /// payloads the server just committed to the wire.
     pub delta: bool,
+    /// uplink sparsification (`omc::sparse`): masked variables ship
+    /// top-k / random-k tag-3 records of the error-corrected update, the
+    /// unselected mass is banked per client in the engine's
+    /// [`SparseStore`] and added back next round. Requires `integrity`
+    /// (sparse records only exist on checksummed frames); the server
+    /// folds sparse frames against the decompressed downlink values it
+    /// just served — no dense client update is ever materialized.
+    pub sparse: Option<SparseParams>,
     /// population-scale scenario (`fl::population`); when enabled the
     /// cohort is folded through per-edge aggregators whose merged frames
     /// uplink to the root, device classes scale chaos fault rates, and
@@ -137,6 +148,10 @@ pub struct RoundScratch {
     /// base for the edge→root hop in population mode (cleared at round 0:
     /// engines are reused across sweep cells)
     edge_prev: Vec<Vec<u8>>,
+    /// per-client error-feedback residuals (`omc::sparse`), committed in
+    /// plan order after each round; cleared at round 0 because engines
+    /// are reused across sweep cells
+    sparse: SparseStore,
 }
 
 impl RoundScratch {
@@ -244,6 +259,16 @@ pub struct RoundOutcome {
     /// uplink bytes the v3 delta stage saved vs verbatim framing, summed
     /// over every client that built an upload (zero when delta is off)
     pub up_bytes_delta_saved: usize,
+    /// uplink bytes the sparse stage saved vs dense packed records,
+    /// summed over every client that built an upload (zero when off)
+    pub up_bytes_sparse_saved: usize,
+    /// coordinates shipped by the sparse stage across trained clients
+    pub sparse_selected: u64,
+    /// total sparsifiable coordinates across trained clients (the
+    /// denominator of the sweep's `sparsity` metric)
+    pub sparse_total: u64,
+    /// squared L2 mass of the error-feedback residuals banked this round
+    pub sparse_residual_sq: f64,
     /// per-client chaos facts for the quarantine ladder (empty when chaos
     /// is off): corrupt-frame counts and whether a clean frame landed
     pub chaos_reports: Vec<ChaosClientReport>,
@@ -277,6 +302,14 @@ pub struct CohortStats {
     pub up_bytes_rejected: usize,
     /// bytes the delta stage saved vs verbatim framing (uploads built)
     pub up_bytes_delta_saved: usize,
+    /// bytes the sparse stage saved vs dense packed records
+    pub up_bytes_sparse_saved: usize,
+    /// coordinates shipped by the sparse stage
+    pub sparse_selected: u64,
+    /// total sparsifiable coordinates seen by the sparse stage
+    pub sparse_total: u64,
+    /// squared residual mass banked by trained clients
+    pub sparse_residual_sq: f64,
     /// max per-client parameter-store bytes
     pub peak_client_param_bytes: usize,
     /// decode-scratch capacity, bytes (summed across workers)
@@ -287,6 +320,20 @@ pub struct CohortStats {
 }
 
 impl CohortStats {
+    /// Account one trained client's result (loss, peaks, per-stage
+    /// savings) — shared by every cohort execution path.
+    fn absorb_client(&mut self, r: &ClientResult) {
+        self.loss_sum += r.loss;
+        self.trained += 1;
+        self.peak_client_param_bytes =
+            self.peak_client_param_bytes.max(r.peak_param_bytes);
+        self.up_bytes_delta_saved += r.delta_saved;
+        self.up_bytes_sparse_saved += r.sparse_saved;
+        self.sparse_selected += r.sparse_selected;
+        self.sparse_total += r.sparse_total;
+        self.sparse_residual_sq += r.sparse_residual_sq;
+    }
+
     fn absorb(&mut self, o: &CohortStats) {
         self.up_bytes += o.up_bytes;
         self.up_bytes_discarded += o.up_bytes_discarded;
@@ -299,6 +346,10 @@ impl CohortStats {
         self.frames_rejected += o.frames_rejected;
         self.up_bytes_rejected += o.up_bytes_rejected;
         self.up_bytes_delta_saved += o.up_bytes_delta_saved;
+        self.up_bytes_sparse_saved += o.up_bytes_sparse_saved;
+        self.sparse_selected += o.sparse_selected;
+        self.sparse_total += o.sparse_total;
+        self.sparse_residual_sq += o.sparse_residual_sq;
         self.peak_client_param_bytes =
             self.peak_client_param_bytes.max(o.peak_client_param_bytes);
         self.scratch_bytes += o.scratch_bytes;
@@ -384,12 +435,16 @@ fn reject_duplicate(
 /// `dbase` is the server-held delta base for v3 uplinks (the round's
 /// downlink payloads); `None` decodes verbatim frames only — a v3 frame
 /// arriving without a base is a typed decode error, never a wrong fold.
+/// `sbase` is the server-held decompressed downlink values for sparse
+/// (tag-3) records; `None` rejects sparse frames as harness bugs.
+#[allow(clippy::too_many_arguments)]
 fn run_chunk<F>(
     base: usize,
     chunk: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     scratch: &mut ClientScratch,
     mut job: F,
 ) -> Result<(CohortStats, StreamingAggregator)>
@@ -416,11 +471,7 @@ where
                     .map_or(false, |c| c.gave_up && !c.crashed);
                 if gave_up {
                     let r = job(i, plan, scratch)?;
-                    stats.loss_sum += r.loss;
-                    stats.trained += 1;
-                    stats.peak_client_param_bytes =
-                        stats.peak_client_param_bytes.max(r.peak_param_bytes);
-                    stats.up_bytes_delta_saved += r.delta_saved;
+                    stats.absorb_client(&r);
                     reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
                 }
                 stats.crashed += 1;
@@ -429,11 +480,7 @@ where
             _ => {}
         }
         let r = job(i, plan, scratch)?;
-        stats.loss_sum += r.loss;
-        stats.trained += 1;
-        stats.peak_client_param_bytes =
-            stats.peak_client_param_bytes.max(r.peak_param_bytes);
-        stats.up_bytes_delta_saved += r.delta_saved;
+        stats.absorb_client(&r);
         if plan.fate == ClientFate::Late {
             stats.up_bytes += r.upload.len();
             stats.late += 1;
@@ -452,7 +499,13 @@ where
                     plan.cid
                 )
             })?;
-        agg.accumulate_wire_based(&r.upload, norm_w[i], &mut decode_scratch, dbase)?;
+        agg.accumulate_wire_with(
+            &r.upload,
+            norm_w[i],
+            &mut decode_scratch,
+            dbase,
+            sbase,
+        )?;
         stats.completed += 1;
         reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
     }
@@ -471,13 +524,14 @@ pub fn run_cohort_sequential<F>(
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     scratch: &mut ClientScratch,
     job: F,
 ) -> Result<(CohortStats, StreamingAggregator)>
 where
     F: FnMut(usize, &ClientPlan, &mut ClientScratch) -> Result<ClientResult>,
 {
-    run_chunk(0, plans, norm_w, var_lens, dbase, scratch, job)
+    run_chunk(0, plans, norm_w, var_lens, dbase, sbase, scratch, job)
 }
 
 /// Run a planned cohort with training pinned to the calling thread but
@@ -493,11 +547,13 @@ where
 /// materializes. With `workers == 1` the result is bit-identical to
 /// [`run_cohort_sequential`]; larger worker counts only reassociate the
 /// f64 sums.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cohort_pinned<F>(
     plans: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     workers: usize,
     scratch: &mut ClientScratch,
     mut job: F,
@@ -524,11 +580,7 @@ where
                     .map_or(false, |c| c.gave_up && !c.crashed);
                 if gave_up {
                     let r = job(i, plan, scratch)?;
-                    stats.loss_sum += r.loss;
-                    stats.trained += 1;
-                    stats.peak_client_param_bytes =
-                        stats.peak_client_param_bytes.max(r.peak_param_bytes);
-                    stats.up_bytes_delta_saved += r.delta_saved;
+                    stats.absorb_client(&r);
                     reject_corrupt_attempts(plan, &r.upload, &mut stats, &mut ledger)?;
                 }
                 stats.crashed += 1;
@@ -537,11 +589,7 @@ where
             _ => {}
         }
         let r = job(i, plan, scratch)?;
-        stats.loss_sum += r.loss;
-        stats.trained += 1;
-        stats.peak_client_param_bytes =
-            stats.peak_client_param_bytes.max(r.peak_param_bytes);
-        stats.up_bytes_delta_saved += r.delta_saved;
+        stats.absorb_client(&r);
         if plan.fate == ClientFate::Late {
             stats.up_bytes += r.upload.len();
             stats.late += 1;
@@ -563,20 +611,24 @@ where
         reject_duplicate(plan, &r.upload, &mut stats, &mut ledger)?;
         uploads.push((i, r.upload));
     }
-    let agg =
-        aggregate_uploads(&uploads, norm_w, var_lens, dbase, workers, &mut stats)?;
+    let agg = aggregate_uploads(
+        &uploads, norm_w, var_lens, dbase, sbase, workers, &mut stats,
+    )?;
     Ok((stats, agg))
 }
 
 /// Fold collected `(cohort index, wire frame)` uploads into one merged
 /// streaming aggregator, chunked over the thread pool; accounting lands in
 /// `stats` (`scratch_bytes`, `accum_bytes`). `dbase` resolves v3 delta
-/// payloads (shared read-only across the pooled workers).
+/// payloads and `sbase` resolves sparse records (both shared read-only
+/// across the pooled workers).
+#[allow(clippy::too_many_arguments)]
 fn aggregate_uploads(
     uploads: &[(usize, Vec<u8>)],
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     workers: usize,
     stats: &mut CohortStats,
 ) -> Result<StreamingAggregator> {
@@ -592,7 +644,13 @@ fn aggregate_uploads(
         let mut agg = StreamingAggregator::new(var_lens);
         let mut decode_scratch: Vec<f32> = Vec::new();
         for (i, wire) in c {
-            agg.accumulate_wire_based(wire, norm_w[*i], &mut decode_scratch, dbase)?;
+            agg.accumulate_wire_with(
+                wire,
+                norm_w[*i],
+                &mut decode_scratch,
+                dbase,
+                sbase,
+            )?;
         }
         Ok::<_, anyhow::Error>((decode_scratch.capacity() * 4, agg))
     })?;
@@ -613,11 +671,13 @@ fn aggregate_uploads(
 /// bit-identical to the sequential path — per-client RNG streams depend
 /// only on `(seed, round, cid)` — and the merged aggregate differs from it
 /// only by f64 re-association (≤ 1e-6 per element).
+#[allow(clippy::too_many_arguments)]
 pub fn run_cohort_sharded<F>(
     plans: &[ClientPlan],
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     workers: usize,
     scratches: &mut [ClientScratch],
     job: F,
@@ -644,7 +704,7 @@ where
         .collect();
     let job = &job;
     let results = threadpool::scope_map_send(items, shards, move |_, (base, c, s)| {
-        run_chunk(base, c, norm_w, var_lens, dbase, s, job)
+        run_chunk(base, c, norm_w, var_lens, dbase, sbase, s, job)
     })?;
     let mut stats = CohortStats::default();
     let mut agg = StreamingAggregator::new(var_lens);
@@ -688,6 +748,7 @@ pub fn run_cohort_edged<F>(
     norm_w: &[f64],
     var_lens: &[usize],
     dbase: Option<&DeltaBase<'_>>,
+    sbase: Option<&[Vec<f32>]>,
     edges: usize,
     integrity: bool,
     delta: bool,
@@ -725,6 +786,7 @@ where
             norm_w,
             var_lens,
             dbase,
+            sbase,
             scratch,
             &mut job,
         )?;
@@ -899,6 +961,36 @@ pub fn run_round(
     let dbase = delta_on
         .then(|| DeltaBase::from_packed_vars(round, cache_ref.packed_vars()));
 
+    // sparse uplink stage: per-client error-feedback residuals are keyed
+    // by cid and persist across rounds in the round scratch (cleared at
+    // round 0 because engines are reused across sweep cells). The store is
+    // taken out for the dispatch — jobs read their own client's residual
+    // through a shared reference and deposit the successor into a
+    // per-cohort-index slot; slots are committed back in plan order below,
+    // so the store's contents never depend on worker scheduling. The
+    // server's fold base is the dense view of the SAME downlink the
+    // clients decoded: packed vars decompressed, fp32 vars verbatim.
+    let sparse_on = ctx.sparse.is_some() && ctx.integrity;
+    if round == 0 {
+        scratch.sparse.clear();
+    }
+    let sparse_store = std::mem::take(&mut scratch.sparse);
+    let sparse_base: Option<Vec<Vec<f32>>> = sparse_on.then(|| {
+        cache_ref
+            .packed_vars()
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match p {
+                Some(sv) => sv.decompress(),
+                None => global[i].clone(),
+            })
+            .collect()
+    });
+    let residual_slots: Vec<Mutex<Option<ClientResidual>>> =
+        (0..plans.len()).map(|_| Mutex::new(None)).collect();
+    let residual_slots_ref = &residual_slots;
+    let sparse_store_ref = &sparse_store;
+
     let var_lens = server.var_lens();
     let job = |i: usize, plan: &ClientPlan, cs: &mut ClientScratch| {
         let mut rng = Xoshiro256pp::new(hash_seed(&[
@@ -914,10 +1006,15 @@ pub fn run_round(
         if delta_on {
             tc.delta_base = Some(round);
         }
+        if sparse_on {
+            if let Some(sp) = ctx.sparse {
+                tc.sparse = Some(sp.bind(ctx.seed, round, plan.cid as u64));
+            }
+        }
         // speakers_of works in dense AND lazy modes (population-scale
         // assignments never materialize per-client shard vectors)
         let shard = ctx.assignment.speakers_of(plan.cid);
-        client::run_client_round(
+        let mut r = client::run_client_round(
             ctx.model,
             ctx.domain,
             shard.as_ref(),
@@ -926,8 +1023,13 @@ pub fn run_round(
             tc,
             &mut rng,
             cs,
+            sparse_store_ref.get(plan.cid as u64),
         )
-        .with_context(|| format!("client {} round {round}", plan.cid))
+        .with_context(|| format!("client {} round {round}", plan.cid))?;
+        if let Some(res) = r.residual.take() {
+            *residual_slots_ref[i].lock().unwrap() = Some(res);
+        }
+        Ok(r)
     };
 
     // dispatch: sharded client execution needs a Send-safe engine; the
@@ -953,6 +1055,7 @@ pub fn run_round(
                 &norm_w,
                 &var_lens,
                 dbase.as_ref(),
+                sparse_base.as_deref(),
                 ctx.population.edges,
                 ctx.integrity,
                 delta_on,
@@ -972,6 +1075,7 @@ pub fn run_round(
                     &norm_w,
                     &var_lens,
                     dbase.as_ref(),
+                    sparse_base.as_deref(),
                     shards,
                     scratches,
                     job,
@@ -984,6 +1088,7 @@ pub fn run_round(
                     &norm_w,
                     &var_lens,
                     dbase.as_ref(),
+                    sparse_base.as_deref(),
                     ctx.workers,
                     cs,
                     job,
@@ -1006,6 +1111,7 @@ pub fn run_round(
                 &norm_w,
                 &var_lens,
                 dbase.as_ref(),
+                sparse_base.as_deref(),
                 ctx.population.edges,
                 ctx.integrity,
                 delta_on,
@@ -1025,6 +1131,7 @@ pub fn run_round(
                 &norm_w,
                 &var_lens,
                 dbase.as_ref(),
+                sparse_base.as_deref(),
                 ctx.workers,
                 cs,
                 job,
@@ -1032,6 +1139,19 @@ pub fn run_round(
             (s, a, None)
         }
     };
+
+    // bank the error-feedback residuals in plan order — deterministic
+    // regardless of which worker deposited them. Gave-up and late clients
+    // commit too: their training (and selection) ran, the fates were
+    // planned before execution, so the stream stays aligned with a
+    // chaos-free twin's accounting even though their frames never folded.
+    let mut sparse_store = sparse_store;
+    for (i, plan) in plans.iter().enumerate() {
+        if let Some(res) = residual_slots[i].lock().unwrap().take() {
+            sparse_store.commit(plan.cid as u64, res);
+        }
+    }
+    scratch.sparse = sparse_store;
 
     // recycle the downlink frame buffers for the next round
     scratch.return_downlink_bufs(downlinks);
@@ -1089,6 +1209,10 @@ pub fn run_round(
         frames_rejected: stats.frames_rejected,
         up_bytes_rejected: stats.up_bytes_rejected,
         up_bytes_delta_saved: stats.up_bytes_delta_saved,
+        up_bytes_sparse_saved: stats.up_bytes_sparse_saved,
+        sparse_selected: stats.sparse_selected,
+        sparse_total: stats.sparse_total,
+        sparse_residual_sq: stats.sparse_residual_sq,
         chaos_reports,
         population,
         participants,
@@ -1141,6 +1265,11 @@ mod tests {
             loss: 1.0 + cid as f64 * 0.25,
             peak_param_bytes: 1000 + cid,
             delta_saved: 0,
+            sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
+            residual: None,
         }
     }
 
@@ -1176,6 +1305,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut seq_scratch,
             recording_job(&seq_uploads),
         )
@@ -1193,6 +1323,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 None,
                 workers,
                 &mut scratches,
@@ -1250,6 +1381,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut seq_scratch,
             recording_job(&seq_uploads),
         )
@@ -1266,6 +1398,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 None,
                 workers,
                 &mut cs,
@@ -1316,6 +1449,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut seq_scratch,
             recording_job(&seq_uploads),
         )
@@ -1331,6 +1465,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 None,
                 1,
                 integrity,
@@ -1382,6 +1517,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut seq_scratch,
             |_i, plan: &ClientPlan, _cs: &mut ClientScratch| {
                 Ok(mock_result(plan.cid))
@@ -1398,6 +1534,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 None,
                 edges,
                 true,
@@ -1445,7 +1582,7 @@ mod tests {
         let mut cs = ClientScratch::default();
         // round 0: no base yet → verbatim frames
         let (_, root0, es0) = run_cohort_edged(
-            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 0,
+            &plans, &norm_w, &VAR_LENS, None, None, 2, true, true, 7, 0,
             &mut edge_prev, &mut cs, job,
         )
         .unwrap();
@@ -1453,7 +1590,7 @@ mod tests {
         // round 1: the mock uploads depend only on cid, so the merged
         // payload repeats → the delta hop must save bytes
         let (_, root1, es1) = run_cohort_edged(
-            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 1,
+            &plans, &norm_w, &VAR_LENS, None, None, 2, true, true, 7, 1,
             &mut edge_prev, &mut cs, job,
         )
         .unwrap();
@@ -1475,7 +1612,7 @@ mod tests {
         // a fresh sweep cell re-enters at round 0: bases reset, frames
         // ship verbatim again
         let (_, _, es0b) = run_cohort_edged(
-            &plans, &norm_w, &VAR_LENS, None, 2, true, true, 7, 0,
+            &plans, &norm_w, &VAR_LENS, None, None, 2, true, true, 7, 0,
             &mut edge_prev, &mut cs, job,
         )
         .unwrap();
@@ -1493,6 +1630,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             None,
             &mut scratch,
             recording_job(&uploads),
@@ -1540,6 +1678,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             None,
             &mut scratch,
             recording_job(&uploads),
@@ -1589,6 +1728,7 @@ mod tests {
                 &norm_w,
                 &VAR_LENS,
                 None,
+                None,
                 workers,
                 &mut scratches,
                 recording_job(&uploads),
@@ -1622,6 +1762,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut scratch,
             recording_job(&uploads),
         )
@@ -1649,6 +1790,11 @@ mod tests {
             loss: 1.0 + cid as f64 * 0.25,
             peak_param_bytes: 1000 + cid,
             delta_saved: 0,
+            sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
+            residual: None,
         }
     }
 
@@ -1736,6 +1882,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut seq_scratch,
             v2_job,
         )
@@ -1780,6 +1927,7 @@ mod tests {
                 &norm_w,
                 &VAR_LENS,
                 None,
+                None,
                 workers,
                 &mut scratches,
                 v2_job,
@@ -1790,6 +1938,7 @@ mod tests {
                 &plans,
                 &norm_w,
                 &VAR_LENS,
+                None,
                 None,
                 workers,
                 &mut cs,
@@ -1833,6 +1982,7 @@ mod tests {
             &norm_w,
             &VAR_LENS,
             None,
+            None,
             &mut scratch,
             |_i, plan, _cs| Ok(mock_result(plan.cid)), // v1 frames
         )
@@ -1861,6 +2011,7 @@ mod tests {
             &plans,
             &norm_w,
             &VAR_LENS,
+            None,
             None,
             &mut scratch,
             v2_job,
@@ -1905,5 +2056,168 @@ mod tests {
         assert_eq!(s.clients.len(), 3);
         assert_eq!(s.client_scratches(5).len(), 5);
         assert_eq!(s.clients.len(), 5);
+    }
+
+    /// v2 mock upload carrying one sparse record (var 0) and one raw var,
+    /// with the matching `ClientResult` sparse accounting — exercises the
+    /// stats plumbing and the sparse-base fold through every cohort path.
+    fn mock_result_sparse(cid: usize) -> ClientResult {
+        use crate::omc::format::FloatFormat;
+        use crate::omc::sparse::{gather_into, select_topk};
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+        let mut rng = Xoshiro256pp::new(hash_seed(&[0x5EED, cid as u64]));
+        let n = VAR_LENS[0];
+        let mut e = vec![0.0f32; n];
+        rng.fill_normal(&mut e, 0.5);
+        let k = 8usize;
+        let mut idx = Vec::new();
+        select_topk(&e, k, &mut idx);
+        let mut gathered = Vec::new();
+        gather_into(&e, &idx, &mut gathered);
+        let mut w =
+            WireWriter::with_integrity(0, uplink_nonce(0xBEEF, 7, cid as u64));
+        w.sparse_values(&gathered, &idx, n, fmt, true);
+        let sparse_saved = w.sparse_saved();
+        let mut v1 = vec![0.0f32; VAR_LENS[1]];
+        rng.fill_normal(&mut v1, 0.5);
+        w.raw(&v1);
+        for &j in &idx {
+            e[j as usize] = 0.0;
+        }
+        let sparse_residual_sq: f64 =
+            e.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        ClientResult {
+            upload: w.finish(),
+            loss: 1.0 + cid as f64 * 0.25,
+            peak_param_bytes: 1000 + cid,
+            delta_saved: 0,
+            sparse_saved,
+            sparse_selected: k as u64,
+            sparse_total: n as u64,
+            sparse_residual_sq,
+            residual: None,
+        }
+    }
+
+    fn sparse_job(
+        _i: usize,
+        plan: &ClientPlan,
+        _cs: &mut ClientScratch,
+    ) -> Result<ClientResult> {
+        Ok(mock_result_sparse(plan.cid))
+    }
+
+    #[test]
+    fn sparse_stats_and_fold_accounted_identically_on_every_path() {
+        let plans = mk_plans(9, mixed_fates);
+        let norm_w = norm_weights(&plans);
+        // the fold base stands in for the decoded downlink
+        let sbase: Vec<Vec<f32>> = VAR_LENS
+            .iter()
+            .enumerate()
+            .map(|(vi, &n)| {
+                let mut v = vec![0.0f32; n];
+                Xoshiro256pp::new(hash_seed(&[0xBA5E, vi as u64]))
+                    .fill_normal(&mut v, 0.5);
+                v
+            })
+            .collect();
+        let mut seq_scratch = ClientScratch::default();
+        let (seq, seq_agg) = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            None,
+            Some(&sbase),
+            &mut seq_scratch,
+            sparse_job,
+        )
+        .unwrap();
+        // every trained client (completing AND late) banks its sparse
+        // accounting — late frames are discarded but the training ran
+        let trained: Vec<_> =
+            plans.iter().filter(|p| p.fate != ClientFate::Dropped).collect();
+        let expected_saved: usize = trained
+            .iter()
+            .map(|p| mock_result_sparse(p.cid).sparse_saved)
+            .sum();
+        assert!(expected_saved > 0, "top-8 of 300 must save wire bytes");
+        assert_eq!(seq.up_bytes_sparse_saved, expected_saved);
+        assert_eq!(seq.sparse_selected, 8 * trained.len() as u64);
+        assert_eq!(seq.sparse_total, (VAR_LENS[0] * trained.len()) as u64);
+        assert!(seq.sparse_residual_sq > 0.0);
+        let mut seq_server = zero_server();
+        seq_agg.apply(&mut seq_server).unwrap();
+
+        for workers in [1usize, 4] {
+            let mut cs = ClientScratch::default();
+            let (pin, pin_agg) = run_cohort_pinned(
+                &plans,
+                &norm_w,
+                &VAR_LENS,
+                None,
+                Some(&sbase),
+                workers,
+                &mut cs,
+                sparse_job,
+            )
+            .unwrap();
+            assert_eq!(pin.up_bytes_sparse_saved, seq.up_bytes_sparse_saved);
+            assert_eq!(pin.sparse_selected, seq.sparse_selected);
+            assert_eq!(pin.sparse_total, seq.sparse_total);
+            // pinned absorbs client results in cohort order: exact
+            assert_eq!(pin.sparse_residual_sq, seq.sparse_residual_sq);
+            let mut s = zero_server();
+            pin_agg.apply(&mut s).unwrap();
+            for (a, b) in s.params.iter().zip(&seq_server.params) {
+                for (x, y) in a.iter().zip(b) {
+                    if workers == 1 {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    } else {
+                        assert!((x - y).abs() <= 1e-6);
+                    }
+                }
+            }
+        }
+        let mut scratches: Vec<ClientScratch> =
+            (0..4).map(|_| ClientScratch::default()).collect();
+        let (sh, _) = run_cohort_sharded(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            None,
+            Some(&sbase),
+            4,
+            &mut scratches,
+            sparse_job,
+        )
+        .unwrap();
+        assert_eq!(sh.up_bytes_sparse_saved, seq.up_bytes_sparse_saved);
+        assert_eq!(sh.sparse_selected, seq.sparse_selected);
+        // shard absorption only reassociates the f64 residual sum
+        assert!(
+            (sh.sparse_residual_sq - seq.sparse_residual_sq).abs()
+                <= 1e-9 * seq.sparse_residual_sq.max(1.0)
+        );
+    }
+
+    /// A sparse frame reaching a fold that holds no base is a harness
+    /// bug, not a skip — the cohort run must fail loudly.
+    #[test]
+    fn sparse_frame_without_base_is_refused_by_the_fold() {
+        let plans = mk_plans(3, |_| ClientFate::Completes);
+        let norm_w = norm_weights(&plans);
+        let mut scratch = ClientScratch::default();
+        let err = run_cohort_sequential(
+            &plans,
+            &norm_w,
+            &VAR_LENS,
+            None,
+            None,
+            &mut scratch,
+            sparse_job,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sparse"), "unexpected error: {err}");
     }
 }

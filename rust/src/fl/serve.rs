@@ -485,9 +485,11 @@ impl ServeEngine {
                                 );
                                 let down_bytes = downlink.len();
                                 let r = if trains {
+                                    // serving rejects the sparse stage in
+                                    // config validation: no residual state
                                     run_planned_client(
                                         ctx, d, &downlink, &mask, delta_on,
-                                        ring_depth, &mut cs,
+                                        ring_depth, &mut cs, None,
                                     )
                                     .map(Some)
                                 } else {

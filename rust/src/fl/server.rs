@@ -27,8 +27,9 @@
 
 use anyhow::Result;
 
-use crate::omc::codec;
+use crate::omc::codec::{self, VarView};
 use crate::omc::delta::DeltaBase;
+use crate::omc::pack;
 
 /// The server's global model + optimizer state.
 #[derive(Clone, Debug)]
@@ -317,10 +318,69 @@ impl StreamingAggregator {
         scratch: &mut Vec<f32>,
         base: Option<&DeltaBase<'_>>,
     ) -> Result<()> {
+        self.accumulate_wire_with(wire, wc, scratch, base, None)
+    }
+
+    /// [`accumulate_wire_based`](Self::accumulate_wire_based) with an
+    /// optional sparse base: tag-3 records carry a client's *sparse
+    /// update* over the decompressed downlink values both sides hold, so
+    /// the fold adds `wc · base[j]` for every coordinate of the variable
+    /// and then `wc · value` at the selected indices — the dense client
+    /// model is never materialized, only the `k` selected values pass
+    /// through `scratch`. `sparse_base[vi]` must hold the decompressed
+    /// downlink values of every variable that may arrive sparse (empty
+    /// slots are a harness bug, reported as `Err`).
+    pub fn accumulate_wire_with(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+        base: Option<&DeltaBase<'_>>,
+        sparse_base: Option<&[Vec<f32>]>,
+    ) -> Result<()> {
         let nvars = self.sums.len();
         let sums = &mut self.sums;
         let decoded = codec::for_each_var_based(wire, base, |vi, view| {
             anyhow::ensure!(vi < nvars, "uplink has more vars than the model");
+            if let VarView::Sparse {
+                indices,
+                payload,
+                n,
+                fmt,
+                pvt,
+            } = view
+            {
+                let sb = sparse_base.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "sparse record in var {vi} but no sparse base held"
+                    )
+                })?;
+                let bvar = sb.get(vi).map(Vec::as_slice).unwrap_or(&[]);
+                anyhow::ensure!(
+                    n == sums[vi].len() && bvar.len() == n,
+                    "sparse var {vi} has {n} elements, base {}, expected {}",
+                    bvar.len(),
+                    sums[vi].len()
+                );
+                // the base everyone already holds…
+                for (a, &x) in sums[vi].iter_mut().zip(bvar) {
+                    *a += wc * x as f64;
+                }
+                // …plus the k selected update values (unpacked into
+                // scratch — never a dense n-length buffer)
+                pack::unpack_transform_into(
+                    payload,
+                    indices.len(),
+                    fmt,
+                    pvt.s,
+                    pvt.b,
+                    scratch,
+                );
+                for (&j, &x) in indices.iter().zip(scratch.iter()) {
+                    sums[vi][j as usize] += wc * x as f64;
+                }
+                return Ok(());
+            }
             view.decompress_into(&mut *scratch);
             anyhow::ensure!(
                 scratch.len() == sums[vi].len(),
@@ -378,6 +438,21 @@ impl StreamingAggregator {
         ledger: &mut codec::NonceLedger,
         base: Option<&DeltaBase<'_>>,
     ) -> Result<WireVerdict> {
+        self.accumulate_wire_checked_with(wire, wc, scratch, ledger, base, None)
+    }
+
+    /// [`accumulate_wire_checked_based`](Self::accumulate_wire_checked_based)
+    /// with an optional sparse base for tag-3 records (see
+    /// [`accumulate_wire_with`](Self::accumulate_wire_with)).
+    pub fn accumulate_wire_checked_with(
+        &mut self,
+        wire: &[u8],
+        wc: f64,
+        scratch: &mut Vec<f32>,
+        ledger: &mut codec::NonceLedger,
+        base: Option<&DeltaBase<'_>>,
+        sparse_base: Option<&[Vec<f32>]>,
+    ) -> Result<WireVerdict> {
         let info = match codec::verify_frame(wire) {
             Ok(info) => info,
             Err(e) => return Ok(WireVerdict::Rejected(e)),
@@ -403,7 +478,7 @@ impl StreamingAggregator {
         if let Err(e) = ledger.observe(info.nonce) {
             return Ok(WireVerdict::Rejected(e));
         }
-        self.accumulate_wire_based(wire, wc, scratch, base)?;
+        self.accumulate_wire_with(wire, wc, scratch, base, sparse_base)?;
         Ok(WireVerdict::Accepted)
     }
 
@@ -893,5 +968,91 @@ mod tests {
         assert!(acks.advance(cid, 9));
         assert!(!acks.advance(cid, 7));
         assert_eq!(acks.last(cid), Some(9));
+    }
+
+    /// One-raw-one-sparse uplink frame over 8+6 elements.
+    fn sparse_wire(
+        raw: &[f32],
+        gathered: &[f32],
+        indices: &[u32],
+        n: usize,
+        nonce: u64,
+    ) -> Vec<u8> {
+        use crate::omc::format::FloatFormat;
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+        let mut w = WireWriter::with_integrity(0, nonce);
+        w.raw(raw);
+        w.sparse_values(gathered, indices, n, fmt, true);
+        w.finish()
+    }
+
+    #[test]
+    fn sparse_fold_matches_base_plus_scatter_bitwise() {
+        let mut g = Gen::new(31);
+        let raw = g.vec_normal(8, 0.5);
+        let base_var = g.vec_normal(6, 0.5);
+        let gathered = [0.75f32, -0.5, 0.25];
+        let indices = [1u32, 2, 5];
+        let wire = sparse_wire(&raw, &gathered, &indices, 6, 9);
+        let sparse_base = vec![Vec::new(), base_var.clone()];
+
+        let mut agg = StreamingAggregator::new(&[8, 6]);
+        let mut scratch = Vec::new();
+        let wc = 1.0f64;
+        agg.accumulate_wire_with(&wire, wc, &mut scratch, None, Some(&sparse_base))
+            .unwrap();
+        assert_eq!(agg.clients(), 1);
+
+        // expected: wc·base over the whole variable, then wc·value at the
+        // selected coordinates — the exact f64 ops of the sparse fold,
+        // using the quantized gathered values the frame actually carries
+        let mut vals = Vec::new();
+        let mut dense_update = vec![0.0f32; 6];
+        codec::for_each_var(&wire, |vi, view| {
+            if vi == 1 {
+                view.decompress_into(&mut vals);
+                dense_update.copy_from_slice(&vals);
+            }
+            Ok(())
+        })
+        .unwrap();
+        let mut expected = vec![vec![0.0f64; 8], vec![0.0f64; 6]];
+        for (a, &x) in expected[0].iter_mut().zip(&raw) {
+            *a += wc * x as f64;
+        }
+        for (a, &x) in expected[1].iter_mut().zip(&base_var) {
+            *a += wc * x as f64;
+        }
+        for &j in &indices {
+            expected[1][j as usize] += wc * dense_update[j as usize] as f64;
+        }
+        let mut got = Server::new(vec![vec![0.0f32; 8], vec![0.0f32; 6]]);
+        agg.apply(&mut got).unwrap();
+        let mut want = Server::new(vec![vec![0.0f32; 8], vec![0.0f32; 6]]);
+        want.apply_mean(expected);
+        for (a, b) in got.params.iter().zip(&want.params) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_fold_without_base_is_a_harness_error() {
+        let mut g = Gen::new(32);
+        let raw = g.vec_normal(8, 0.5);
+        let wire = sparse_wire(&raw, &[1.0, 2.0], &[0, 3], 6, 10);
+        let mut agg = StreamingAggregator::new(&[8, 6]);
+        let mut scratch = Vec::new();
+        // no sparse base at all
+        assert!(agg
+            .accumulate_wire_with(&wire, 1.0, &mut scratch, None, None)
+            .is_err());
+        // base with the wrong variable length
+        let short = vec![Vec::new(), vec![0.0f32; 3]];
+        assert!(agg
+            .accumulate_wire_with(&wire, 1.0, &mut scratch, None, Some(&short))
+            .is_err());
     }
 }

@@ -23,7 +23,10 @@
 //!   kernels and fused pipelines, the compressed store, and the wire
 //!   codec with its lossless cross-round delta stage ([`omc::delta`];
 //!   frame layouts and the ack state machine are specified in
-//!   `docs/WIRE.md`). Fully documented (`#![warn(missing_docs)]`).
+//!   `docs/WIRE.md`) and its top-k / rand-k uplink sparsification stage
+//!   with per-client error feedback ([`omc::sparse`]; record layout,
+//!   index bitpacking, and the error-feedback contract are specified in
+//!   `docs/COMPRESSION.md`). Fully documented (`#![warn(missing_docs)]`).
 //! * [`fl`] — the federated substrate: [`fl::server`] (reference FedAvg +
 //!   the streaming [`fl::server::StreamingAggregator`]), [`fl::client`]
 //!   (one simulated client round, zero-alloc codec contract),

@@ -53,6 +53,18 @@ pub struct RoundRecord {
     /// round (`up_bytes` already reflects the smaller delta frames; this
     /// is the reduction, zero when `[delta]` is off)
     pub up_bytes_delta_saved: usize,
+    /// uplink bytes the sparse stage saved vs dense framing this round
+    /// (`up_bytes` already reflects the smaller sparse records; this is
+    /// the reduction, zero when `[sparse]` is off)
+    pub up_bytes_sparse_saved: usize,
+    /// coordinates selected onto the wire by the sparse stage this round
+    pub sparse_selected: u64,
+    /// coordinates eligible for sparse selection this round (selected +
+    /// left behind in error-feedback residuals)
+    pub sparse_total: u64,
+    /// sum of squared error-feedback residual coordinates banked by this
+    /// round's clients (f64 accumulation; zero when `[sparse]` is off)
+    pub sparse_residual_sq: f64,
     pub round_seconds: f64,
 }
 
@@ -352,6 +364,42 @@ impl Recorder {
         self.records.iter().map(|r| r.up_bytes_delta_saved).sum()
     }
 
+    /// Total uplink bytes the sparse stage saved vs dense framing (zero
+    /// when `[sparse]` is off).
+    pub fn total_up_bytes_sparse_saved(&self) -> usize {
+        self.records.iter().map(|r| r.up_bytes_sparse_saved).sum()
+    }
+
+    /// Coordinates the sparse stage put on the wire across the run.
+    pub fn total_sparse_selected(&self) -> u64 {
+        self.records.iter().map(|r| r.sparse_selected).sum()
+    }
+
+    /// Coordinates eligible for sparse selection across the run.
+    pub fn total_sparse_total(&self) -> u64 {
+        self.records.iter().map(|r| r.sparse_total).sum()
+    }
+
+    /// Fraction of eligible coordinates *withheld* from the wire by the
+    /// sparse stage (0.0 when the stage is off or nothing was eligible).
+    pub fn sparsity(&self) -> f64 {
+        let total = self.total_sparse_total();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_sparse_selected() as f64 / total as f64
+    }
+
+    /// L2 norm of the error-feedback residual mass banked across the run
+    /// (sqrt of the summed per-round squared norms; deterministic).
+    pub fn sparse_residual_norm(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.sparse_residual_sq)
+            .sum::<f64>()
+            .sqrt()
+    }
+
     /// Clients killed by chaos across the run (crashes + retry give-ups).
     pub fn total_crashed(&self) -> usize {
         self.records.iter().map(|r| r.crashed).sum()
@@ -400,11 +448,12 @@ impl Recorder {
             "round,train_loss,eval_loss,eval_wer,down_bytes,up_bytes,\
              up_bytes_discarded,sampled,completed,dropped,late,crashed,\
              frames_rejected,up_bytes_rejected,up_bytes_delta_saved,\
-             round_seconds\n",
+             up_bytes_sparse_saved,sparse_selected,sparse_total,\
+             sparse_residual_sq,round_seconds\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{},{},{},{},{:.6}\n",
+                "{},{:.6},{:.6},{:.4},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.6e},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -420,6 +469,10 @@ impl Recorder {
                 r.frames_rejected,
                 r.up_bytes_rejected,
                 r.up_bytes_delta_saved,
+                r.up_bytes_sparse_saved,
+                r.sparse_selected,
+                r.sparse_total,
+                r.sparse_residual_sq,
                 r.round_seconds
             ));
         }
@@ -790,6 +843,10 @@ mod tests {
             frames_rejected: 0,
             up_bytes_rejected: 0,
             up_bytes_delta_saved: 0,
+            up_bytes_sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
             round_seconds: 0.5,
         }
     }
@@ -826,10 +883,31 @@ mod tests {
         // header and rows have the same column count (incl. cohort and
         // chaos-health columns)
         let cols = csv.lines().next().unwrap().split(',').count();
-        assert_eq!(cols, 16);
+        assert_eq!(cols, 20);
         for line in csv.lines().skip(1) {
             assert_eq!(line.split(',').count(), cols, "{line}");
         }
+    }
+
+    #[test]
+    fn sparse_columns_and_totals() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 10.0));
+        assert_eq!(r.sparsity(), 0.0); // nothing eligible → 0, not NaN
+        let mut thin = rec(1, 10.0);
+        thin.up_bytes_sparse_saved = 40;
+        thin.sparse_selected = 25;
+        thin.sparse_total = 100;
+        thin.sparse_residual_sq = 9.0;
+        r.push(thin);
+        assert_eq!(r.total_up_bytes_sparse_saved(), 40);
+        assert_eq!(r.total_sparse_selected(), 25);
+        assert_eq!(r.total_sparse_total(), 100);
+        assert!((r.sparsity() - 0.75).abs() < 1e-12);
+        assert!((r.sparse_residual_norm() - 3.0).abs() < 1e-12);
+        let csv = r.to_csv();
+        assert!(csv.lines().next().unwrap().contains("up_bytes_sparse_saved"));
+        assert!(csv.contains(",40,25,100,"), "{csv}");
     }
 
     #[test]

@@ -37,7 +37,10 @@ use crate::util::json::{self, Json};
 /// attempt/rejection counters, analytic active estimate, per-device-class
 /// sampled/completed counts, edge→root frame/byte/delta counters — all
 /// deterministic in `(config, seed)`) — the CI scale gate greps these.
-pub const SWEEP_SCHEMA_VERSION: usize = 5;
+/// v6: `sparse_mode` label + the sparse uplink counters
+/// (`up_bytes_sparse_saved`, `sparsity`, `sparse_residual_norm` — all
+/// deterministic in `(config, seed)`) — the CI sparse gate greps these.
+pub const SWEEP_SCHEMA_VERSION: usize = 6;
 
 /// Build the deterministic summary document for one finished cell.
 ///
@@ -115,6 +118,23 @@ pub fn cell_summary(
         (
             "up_bytes_delta_saved",
             json::num(rec.total_up_bytes_delta_saved() as f64),
+        ),
+        (
+            "sparse_mode",
+            json::s(if cfg.sparse.enabled {
+                cfg.sparse.mode.name()
+            } else {
+                "off"
+            }),
+        ),
+        (
+            "up_bytes_sparse_saved",
+            json::num(rec.total_up_bytes_sparse_saved() as f64),
+        ),
+        ("sparsity", json::num(rec.sparsity())),
+        (
+            "sparse_residual_norm",
+            json::num(rec.sparse_residual_norm()),
         ),
         ("population_mode", Json::Bool(cfg.population.enabled)),
     ];
@@ -342,6 +362,10 @@ mod tests {
             frames_rejected: 0,
             up_bytes_rejected: 0,
             up_bytes_delta_saved: 0,
+            up_bytes_sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
             round_seconds: 0.123, // must never appear in the summary
         });
         let run = RunSummary {
@@ -493,6 +517,10 @@ mod tests {
             frames_rejected: 4,
             up_bytes_rejected: 77,
             up_bytes_delta_saved: 0,
+            up_bytes_sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
             round_seconds: 0.1,
         };
         rec.push(r.clone());
@@ -551,6 +579,10 @@ mod tests {
             frames_rejected: 0,
             up_bytes_rejected: 0,
             up_bytes_delta_saved: 30,
+            up_bytes_sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
             round_seconds: 0.1,
         };
         rec.push(r.clone());
@@ -575,6 +607,71 @@ mod tests {
         let plain = sample_cell().to_string();
         assert!(plain.contains("\"delta_enabled\":false"));
         assert!(plain.contains("\"up_bytes_delta_saved\":0"));
+        // round-trip stability holds with the new fields
+        let reparsed = json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
+    fn sparse_cells_carry_selection_metrics() {
+        let mut cfg =
+            ExperimentConfig::default_with("sp", Path::new("native:tiny"));
+        cfg.omc.integrity = true;
+        cfg.sparse.enabled = true;
+        let mut rec = Recorder::new("sp");
+        let mut r = RoundRecord {
+            round: 0,
+            train_loss: 1.0,
+            eval_loss: 0.5,
+            eval_wer: 20.0,
+            down_bytes: 100,
+            up_bytes: 50,
+            up_bytes_discarded: 0,
+            sampled: 4,
+            completed: 4,
+            dropped: 0,
+            late: 0,
+            crashed: 0,
+            frames_rejected: 0,
+            up_bytes_rejected: 0,
+            up_bytes_delta_saved: 0,
+            up_bytes_sparse_saved: 40,
+            sparse_selected: 25,
+            sparse_total: 100,
+            sparse_residual_sq: 16.0,
+            round_seconds: 0.1,
+        };
+        rec.push(r.clone());
+        r.round = 1;
+        r.up_bytes_sparse_saved = 10;
+        r.sparse_selected = 75;
+        r.sparse_total = 100;
+        r.sparse_residual_sq = 9.0;
+        rec.push(r);
+        let run = RunSummary {
+            label: "sp".into(),
+            final_wer: 20.0,
+            final_loss: 1.0,
+            param_memory_bytes: 100,
+            memory_ratio: 0.5,
+            comm_bytes_per_round: 10.0,
+            rounds_per_min: 1.0,
+            rounds: 2,
+        };
+        let cell = cell_summary(0, &cfg, "ff", &rec, &run);
+        let text = cell.to_string();
+        assert!(text.contains("\"sparse_mode\":\"topk\""), "{text}");
+        assert!(text.contains("\"up_bytes_sparse_saved\":50"));
+        // 1 - 100/200
+        assert!(text.contains("\"sparsity\":0.5"), "{text}");
+        // sqrt(16 + 9) = 5
+        assert!(text.contains("\"sparse_residual_norm\":5"), "{text}");
+        // dense cells keep the keys with the "off" label and zero values
+        // (the CI sparse gate greps the keys either way)
+        let plain = sample_cell().to_string();
+        assert!(plain.contains("\"sparse_mode\":\"off\""));
+        assert!(plain.contains("\"up_bytes_sparse_saved\":0"));
+        assert!(plain.contains("\"sparsity\":0"));
         // round-trip stability holds with the new fields
         let reparsed = json::parse(&text).unwrap();
         assert_eq!(reparsed.to_string(), text);
@@ -667,6 +764,10 @@ mod tests {
             frames_rejected: 0,
             up_bytes_rejected: 0,
             up_bytes_delta_saved: 0,
+            up_bytes_sparse_saved: 0,
+            sparse_selected: 0,
+            sparse_total: 0,
+            sparse_residual_sq: 0.0,
             round_seconds: 0.0,
         });
         let run = RunSummary {

@@ -19,7 +19,8 @@
 //! v2/v3:
 //!   hcrc  u32              CRC32C over every header byte before it
 //! per variable:
-//!   tag   u8               0 = raw f32, 1 = packed, 2 = delta-packed (v3)
+//!   tag   u8               0 = raw f32, 1 = packed, 2 = delta-packed (v3),
+//!                          3 = sparse-packed (v2/v3)
 //!   n     u32              element count
 //!   raw:    n * f32
 //!   packed: e u8, m u8, s f32, b f32, payload_len u32, payload bytes
@@ -27,6 +28,12 @@
 //!           payload bytes  (the `omc::delta` bitpacked XOR stream; XOR
 //!           against the base version's packed payload restores the
 //!           tag-1 payload bit for bit)
+//!   sparse: e u8, m u8, s f32, b f32, k u32, index_len u32,
+//!           payload_len u32, index bytes, payload bytes
+//!           (k selected coordinates of an n-element *update*: the
+//!           `omc::sparse` gap-coded bitpacked index stream, then the k
+//!           gathered values bit-packed at the variable's format —
+//!           `payload_len` must equal `packed_bytes(k)`)
 //!   v2/v3: crc u32         CRC32C over this variable's record bytes
 //! ```
 //!
@@ -46,6 +53,7 @@ use anyhow::Result;
 use super::delta::{self, DeltaBase, DeltaError};
 use super::format::FloatFormat;
 use super::pack::{self, PackError};
+use super::sparse::{self, SparseIndexError};
 use super::store::{CompressedModel, StoredVar};
 use super::transform::Pvt;
 use crate::util::simd::crc32c;
@@ -161,6 +169,30 @@ pub enum DecodeError {
         /// variable index
         var: usize,
     },
+    /// A sparse (tag 3) record declares more selected coordinates than
+    /// the variable holds (`k > n`).
+    SparseCountMismatch {
+        /// variable index
+        var: usize,
+    },
+    /// A sparse record's value payload length disagrees with `k` at the
+    /// declared format.
+    SparseLengthMismatch {
+        /// variable index
+        var: usize,
+    },
+    /// A sparse index stream is structurally malformed (impossible block
+    /// class, short of its declared gaps, or bytes left over after them).
+    SparseIndexCorrupt {
+        /// variable index
+        var: usize,
+    },
+    /// A sparse index stream reconstructs an index at or past `n` —
+    /// scattering it would write out of bounds.
+    SparseIndexOutOfRange {
+        /// variable index
+        var: usize,
+    },
     /// The per-variable callback failed (not a wire-format problem).
     Callback(anyhow::Error),
 }
@@ -218,6 +250,18 @@ impl std::fmt::Display for DecodeError {
             DecodeError::DeltaCorrupt { var } => {
                 write!(f, "malformed delta stream in var {var}")
             }
+            DecodeError::SparseCountMismatch { var } => {
+                write!(f, "sparse count exceeds length in var {var}")
+            }
+            DecodeError::SparseLengthMismatch { var } => {
+                write!(f, "sparse payload length inconsistent in var {var}")
+            }
+            DecodeError::SparseIndexCorrupt { var } => {
+                write!(f, "malformed sparse index stream in var {var}")
+            }
+            DecodeError::SparseIndexOutOfRange { var } => {
+                write!(f, "sparse index out of range in var {var}")
+            }
             DecodeError::Callback(e) => write!(f, "decode callback: {e}"),
         }
     }
@@ -259,6 +303,10 @@ pub struct WireWriter {
     /// replaced (accumulated across [`packed_delta`](Self::packed_delta)
     /// calls).
     delta_saved: usize,
+    /// Bytes the sparse stage saved vs the verbatim tag-1 records it
+    /// replaced (accumulated across
+    /// [`sparse_values`](Self::sparse_values) calls).
+    sparse_saved: usize,
 }
 
 /// Reused buffers for the delta encode path: the quantized payload image,
@@ -346,7 +394,14 @@ impl WireWriter {
                 buf.extend_from_slice(&0u32.to_le_bytes()); // hcrc, in finish()
             }
         }
-        Self { buf, nvars: 0, integrity, base_version, delta_saved: 0 }
+        Self {
+            buf,
+            nvars: 0,
+            integrity,
+            base_version,
+            delta_saved: 0,
+            sparse_saved: 0,
+        }
     }
 
     /// Close out the variable record that started at byte `start`: append
@@ -518,11 +573,73 @@ impl WireWriter {
         }
     }
 
+    /// Emit a sparse (tag 3) variable record: `k` selected coordinates of
+    /// an `n`-element update. `indices` must be sorted strictly ascending
+    /// with every entry below `n`, and `gathered` holds the corresponding
+    /// update values in the same order. The index stream is gap-coded and
+    /// bitpacked ([`sparse::encode_indices_into`]); the values run through
+    /// the fused quantize → PVT-fit → pack pipeline at `fmt`, exactly like
+    /// [`compress_values`](Self::compress_values). Returns the fitted PVT
+    /// scalars (the decoder needs nothing else — the record is
+    /// self-describing). Requires an integrity writer (v2/v3): a flipped
+    /// index-stream bit would scatter values to the wrong coordinates, so
+    /// tag 3 without a record CRC is not a layout this writer can emit.
+    pub fn sparse_values(
+        &mut self,
+        gathered: &[f32],
+        indices: &[u32],
+        n: usize,
+        fmt: FloatFormat,
+        use_pvt: bool,
+    ) -> Pvt {
+        debug_assert!(
+            self.integrity.is_some(),
+            "sparse_values requires an integrity (v2/v3) writer"
+        );
+        debug_assert_eq!(gathered.len(), indices.len());
+        let k = indices.len();
+        let start = self.buf.len();
+        self.buf.push(3u8);
+        self.buf.extend_from_slice(&(n as u32).to_le_bytes());
+        self.buf.push(fmt.exp_bits as u8);
+        self.buf.push(fmt.mant_bits as u8);
+        self.buf.extend_from_slice(&Pvt::IDENTITY.s.to_le_bytes());
+        self.buf.extend_from_slice(&Pvt::IDENTITY.b.to_le_bytes());
+        let sb_at = self.buf.len() - 8;
+        self.buf.extend_from_slice(&(k as u32).to_le_bytes());
+        let islen_at = self.buf.len();
+        self.buf.extend_from_slice(&0u32.to_le_bytes()); // patched below
+        self.buf
+            .extend_from_slice(&(fmt.packed_bytes(k) as u32).to_le_bytes());
+        let islen = sparse::encode_indices_into(indices, &mut self.buf);
+        self.buf[islen_at..islen_at + 4]
+            .copy_from_slice(&(islen as u32).to_le_bytes());
+        let pvt = pack::quantize_transform_pack(gathered, fmt, use_pvt, &mut self.buf);
+        self.buf[sb_at..sb_at + 4].copy_from_slice(&pvt.s.to_le_bytes());
+        self.buf[sb_at + 4..sb_at + 8].copy_from_slice(&pvt.b.to_le_bytes());
+        // accounting vs the verbatim tag-1 record this replaced: dense
+        // costs 19 header bytes + packed_bytes(n) (CRC identical on both)
+        let record = self.buf.len() - start;
+        self.sparse_saved +=
+            (19 + fmt.packed_bytes(n)).saturating_sub(record);
+        self.seal_var(start);
+        pvt
+    }
+
     /// Bytes the delta stage has saved so far vs verbatim tag-1 records
     /// (0 for non-delta writers and for frames where every variable fell
     /// back). Read before [`finish`](Self::finish).
     pub fn delta_saved(&self) -> usize {
         self.delta_saved
+    }
+
+    /// Bytes the sparse stage has saved so far vs the verbatim tag-1
+    /// records it replaced (0 when no sparse record was emitted). A
+    /// selection too dense to win can make an individual record larger
+    /// than verbatim; such records contribute 0, never negative. Read
+    /// before [`finish`](Self::finish).
+    pub fn sparse_saved(&self) -> usize {
+        self.sparse_saved
     }
 
     /// Patch the header's variable count (and, for integrity frames, the
@@ -605,13 +722,33 @@ pub enum VarView<'a> {
         /// per-variable transform scalars
         pvt: Pvt,
     },
+    /// Sparse-packed *update* (tag 3): `k` selected coordinates of an
+    /// `n`-element update vector. The index stream was decoded and
+    /// validated before this view reached the callback; `payload` holds
+    /// the `k` gathered values bit-packed at `fmt`. Unselected
+    /// coordinates are zero by construction.
+    Sparse {
+        /// the selected coordinates, ascending, all below `n` (borrowed
+        /// from the decoder's scratch, not the frame)
+        indices: &'a [u32],
+        /// the bit-packed codes of the `k` gathered values
+        payload: &'a [u8],
+        /// dense element count of the update
+        n: usize,
+        /// the `SxEyMz` format the gathered values are packed at
+        fmt: FloatFormat,
+        /// transform scalars fitted over the gathered values
+        pvt: Pvt,
+    },
 }
 
 impl VarView<'_> {
-    /// Element count of the variable.
+    /// Element count of the variable (the dense count for sparse views).
     pub fn len(&self) -> usize {
         match self {
-            VarView::Raw { n, .. } | VarView::Packed { n, .. } => *n,
+            VarView::Raw { n, .. }
+            | VarView::Packed { n, .. }
+            | VarView::Sparse { n, .. } => *n,
         }
     }
 
@@ -626,29 +763,64 @@ impl VarView<'_> {
         match self {
             VarView::Raw { data, .. } => data.len(),
             VarView::Packed { payload, .. } => payload.len() + 8,
+            VarView::Sparse { indices, payload, .. } => {
+                indices.len() * 4 + payload.len() + 8
+            }
         }
     }
 
     /// Decode this variable's decompressed values (`V̄ = s·Ṽ + b`) into a
-    /// reused buffer.
+    /// reused buffer. A sparse view decodes to the **dense update
+    /// vector**: zeros everywhere, the decompressed gathered values
+    /// scattered at their indices.
     pub fn decompress_into(&self, out: &mut Vec<f32>) {
         match *self {
             VarView::Raw { data, .. } => raw_f32s_into(data, out),
             VarView::Packed { payload, n, fmt, pvt } => {
                 pack::unpack_transform_into(payload, n, fmt, pvt.s, pvt.b, out)
             }
+            VarView::Sparse { indices, payload, n, fmt, pvt } => {
+                pack::unpack_transform_into(
+                    payload,
+                    indices.len(),
+                    fmt,
+                    pvt.s,
+                    pvt.b,
+                    out,
+                );
+                scatter_in_place(out, indices, n);
+            }
         }
     }
 
     /// Decode this variable's quantized values Ṽ (no transform) into a
-    /// reused buffer.
+    /// reused buffer. A sparse view yields the dense update layout with
+    /// the raw codes scattered at their indices.
     pub fn tilde_into(&self, out: &mut Vec<f32>) {
         match *self {
             VarView::Raw { data, .. } => raw_f32s_into(data, out),
             VarView::Packed { payload, n, fmt, .. } => {
                 pack::unpack_into(payload, n, fmt, out)
             }
+            VarView::Sparse { indices, payload, n, fmt, .. } => {
+                pack::unpack_into(payload, indices.len(), fmt, out);
+                scatter_in_place(out, indices, n);
+            }
         }
+    }
+}
+
+/// Expand `out` — holding `indices.len()` gathered values — to the dense
+/// `n`-element layout in place: value `j` moves to `indices[j]`, every
+/// other coordinate becomes zero. Indices ascend, so `indices[j] >= j`
+/// and a single back-to-front pass never overwrites an unread value.
+fn scatter_in_place(out: &mut Vec<f32>, indices: &[u32], n: usize) {
+    debug_assert_eq!(out.len(), indices.len());
+    out.resize(n, 0.0);
+    for j in (0..indices.len()).rev() {
+        let v = out[j];
+        out[j] = 0.0;
+        out[indices[j] as usize] = v;
     }
 }
 
@@ -735,12 +907,14 @@ where
         }
     }
     // reused across variables: the unpacked XOR stream and the
-    // reconstructed payload a tag-2 view borrows from
+    // reconstructed payload a tag-2 view borrows from, plus the decoded
+    // index list a tag-3 view borrows from
     let mut delta_words = Vec::new();
     let mut delta_payload = Vec::new();
+    let mut sparse_indices = Vec::new();
     for vi in 0..nvars {
         let start = r.i;
-        let parsed = r.parse_var(vi, delta_frame)?;
+        let parsed = r.parse_var(vi, delta_frame, checked)?;
         if checked {
             // verify the record's checksum BEFORE the view reaches the
             // callback — corrupted bytes must never be decoded
@@ -776,6 +950,31 @@ where
                 f(
                     vi,
                     VarView::Packed { payload: &delta_payload, n, fmt, pvt },
+                )
+                .map_err(DecodeError::Callback)?;
+            }
+            ParsedVar::Sparse { index_stream, payload, k, n, fmt, pvt } => {
+                sparse::decode_indices_into(
+                    index_stream,
+                    k,
+                    n,
+                    &mut sparse_indices,
+                )
+                .map_err(|e| match e {
+                    SparseIndexError::IndexOverflow => {
+                        DecodeError::SparseIndexOutOfRange { var: vi }
+                    }
+                    _ => DecodeError::SparseIndexCorrupt { var: vi },
+                })?;
+                f(
+                    vi,
+                    VarView::Sparse {
+                        indices: &sparse_indices,
+                        payload,
+                        n,
+                        fmt,
+                        pvt,
+                    },
                 )
                 .map_err(DecodeError::Callback)?;
             }
@@ -845,7 +1044,7 @@ pub fn verify_frame(bytes: &[u8]) -> std::result::Result<FrameInfo, DecodeError>
     let delta_frame = version == VERSION_DELTA;
     for vi in 0..nvars {
         let start = r.i;
-        let _ = r.parse_var(vi, delta_frame)?;
+        let _ = r.parse_var(vi, delta_frame, checked)?;
         if checked {
             let end = r.i;
             let want = r.u32()?;
@@ -914,7 +1113,10 @@ impl NonceLedger {
     }
 }
 
-/// Decode wire bytes back into a compressed model.
+/// Decode wire bytes back into a compressed model. Sparse (tag 3)
+/// records — which carry updates, not absolute values — materialize as
+/// raw dense update vectors; the aggregation paths fold sparse views
+/// directly and never take this route.
 pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
     let mut vars = Vec::new();
     for_each_var(bytes, |_, view| {
@@ -930,6 +1132,11 @@ pub fn decode(bytes: &[u8]) -> Result<CompressedModel> {
                 fmt,
                 pvt,
             },
+            sparse @ VarView::Sparse { .. } => {
+                let mut v = Vec::new();
+                sparse.decompress_into(&mut v);
+                StoredVar::Raw(v)
+            }
         });
         Ok(())
     })?;
@@ -1032,11 +1239,15 @@ impl<'a> Reader<'a> {
     }
 
     /// Parse one variable record (tag + metadata + payload). Tag 2 is
-    /// only legal inside a v3 frame (`allow_delta`).
+    /// only legal inside a v3 frame (`allow_delta`); tag 3 is only legal
+    /// inside the checksummed v2/v3 layouts (`allow_sparse`) — a sparse
+    /// record without CRC coverage could scatter values to the wrong
+    /// coordinates undetected.
     fn parse_var(
         &mut self,
         vi: usize,
         allow_delta: bool,
+        allow_sparse: bool,
     ) -> std::result::Result<ParsedVar<'a>, DecodeError> {
         let tag = self.u8()?;
         let n = self.u32()? as usize;
@@ -1067,6 +1278,21 @@ impl<'a> Reader<'a> {
                 let stream = self.take(slen)?;
                 Ok(ParsedVar::Delta { stream, raw_len, n, fmt, pvt })
             }
+            3 if allow_sparse => {
+                let (fmt, pvt) = self.packed_meta(vi)?;
+                let k = self.u32()? as usize;
+                if k > n {
+                    return Err(DecodeError::SparseCountMismatch { var: vi });
+                }
+                let islen = self.u32()? as usize;
+                let vlen = self.u32()? as usize;
+                if vlen != fmt.packed_bytes(k) {
+                    return Err(DecodeError::SparseLengthMismatch { var: vi });
+                }
+                let index_stream = self.take(islen)?;
+                let payload = self.take(vlen)?;
+                Ok(ParsedVar::Sparse { index_stream, payload, k, n, fmt, pvt })
+            }
             t => Err(DecodeError::UnknownTag { var: vi, tag: t }),
         }
     }
@@ -1089,8 +1315,9 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// One parsed variable record: either a ready-to-use borrowed view, or a
-/// delta record whose payload still needs the base XOR.
+/// One parsed variable record: a ready-to-use borrowed view, a delta
+/// record whose payload still needs the base XOR, or a sparse record
+/// whose index stream still needs decoding.
 enum ParsedVar<'a> {
     Plain(VarView<'a>),
     Delta {
@@ -1098,6 +1325,18 @@ enum ParsedVar<'a> {
         stream: &'a [u8],
         /// length of the reconstructed packed payload
         raw_len: usize,
+        n: usize,
+        fmt: FloatFormat,
+        pvt: Pvt,
+    },
+    Sparse {
+        /// the gap-coded bitpacked index stream, borrowed from the frame
+        index_stream: &'a [u8],
+        /// the bit-packed codes of the gathered values
+        payload: &'a [u8],
+        /// selected coordinate count
+        k: usize,
+        /// dense element count
         n: usize,
         fmt: FloatFormat,
         pvt: Pvt,
@@ -1543,10 +1782,77 @@ mod tests {
     }
 
     #[test]
+    fn sparse_record_roundtrips_against_dense_reference() {
+        use crate::omc::sparse::{gather_into, select_count, select_topk};
+        let mut g = Gen::new(30);
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let n = 300;
+        let e = g.vec_normal(n, 0.1);
+        let k = select_count(n, 0.25);
+        let mut idx = Vec::new();
+        select_topk(&e, k, &mut idx);
+        let mut gathered = Vec::new();
+        gather_into(&e, &idx, &mut gathered);
+
+        let mut w = WireWriter::with_integrity(0, 77);
+        let pvt = w.sparse_values(&gathered, &idx, n, fmt, true);
+        let saved = w.sparse_saved();
+        let wire = w.finish();
+        assert!(saved > 0, "a 25% selection must beat verbatim");
+        assert!(pvt.s.is_finite() && pvt.b.is_finite());
+
+        // dense reference: quantize the same gathered values through the
+        // ordinary packed path, then scatter by hand
+        let mut d = WireWriter::with_capacity(0);
+        d.compress_values(&gathered, fmt, true);
+        let vals = decode_decompressed(&d.finish()).unwrap();
+        let mut want = vec![0f32; n];
+        for (j, &i) in idx.iter().enumerate() {
+            want[i as usize] = vals[0][j];
+        }
+
+        let mut got = Vec::new();
+        let count = for_each_var(&wire, |_, view| {
+            assert_eq!(view.len(), n);
+            assert!(matches!(view, VarView::Sparse { .. }));
+            view.decompress_into(&mut got);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!((count, got.len()), (1, n));
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "coord {i}");
+        }
+        // verification and the size accounting line up with the frame
+        let info = verify_frame(&wire).unwrap();
+        assert_eq!(info.version, VERSION_INTEGRITY);
+        let mut dense = WireWriter::with_integrity(0, 77);
+        dense.compress_values(&e, fmt, true);
+        let dense = dense.finish();
+        assert_eq!(dense.len(), wire.len() + saved, "saved accounting");
+    }
+
+    #[test]
+    fn sparse_tag_is_rejected_outside_checksummed_frames() {
+        // a hand-built v1 frame declaring tag 3 must be UnknownTag: a
+        // sparse record without CRC coverage is not a legal layout
+        let mut bad = Vec::new();
+        bad.extend_from_slice(MAGIC);
+        bad.extend_from_slice(&VERSION.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.push(3u8);
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        assert!(matches!(
+            for_each_var(&bad, |_, _| Ok(())).unwrap_err(),
+            DecodeError::UnknownTag { var: 0, tag: 3 }
+        ));
+    }
+
+    #[test]
     fn duplicate_frame_detected_via_nonce() {
         let mut g = Gen::new(16);
         let model = sample_model(&mut g);
-        let wire = encode_v2(&model, 42);
+        let wire = encode_frame_v2(&model, 42);
         let mut led = NonceLedger::new(64);
         let info = verify_frame(&wire).unwrap();
         assert!(led.observe(info.nonce).is_ok());

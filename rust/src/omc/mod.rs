@@ -14,6 +14,10 @@
 //! * [`delta`] — the lossless cross-round wire stage: XOR against a
 //!   shared committed version + per-block variable-width bitpacking
 //!   (frame v3; `docs/WIRE.md`).
+//! * [`sparse`] — uplink sparsification (magnitude top-k / random-k)
+//!   with per-client error-feedback residuals; tag-3 wire records carry
+//!   a gap-coded bitpacked index stream plus the values in the
+//!   variable's quantized format (`docs/COMPRESSION.md`).
 //!
 //! # Codec kernel layer (§Perf)
 //!
@@ -63,5 +67,6 @@ pub mod format;
 pub mod pack;
 pub mod quantize;
 pub mod selection;
+pub mod sparse;
 pub mod store;
 pub mod transform;

@@ -1,0 +1,754 @@
+//! Uplink sparsification with error feedback (ROADMAP item 3).
+//!
+//! Quantization shrinks every shipped value; sparsification ships fewer
+//! of them. This module provides the second compression family the sweep
+//! grid composes with the quantized formats: per-variable **magnitude
+//! top-k** and **random-k** selection over the client's error-corrected
+//! update, with per-client **error-feedback residuals** so the mass a
+//! round leaves behind is added back into the next round's update before
+//! selection (Konečný et al., arXiv:1610.05492; pruning × quantization
+//! per Grativol et al., arXiv:2310.14693).
+//!
+//! The pieces, in wire order:
+//!
+//! 1. **Selection** ([`select_topk`] / [`select_randk`]): pick `k =
+//!    clamp(ceil(fraction·n), 1, n)` coordinates of the corrected update
+//!    `e = (trained − downlink) + residual`. Top-k orders by magnitude
+//!    bits with an index tie-break — a total order, so the selection is
+//!    bit-exact on every ISA. Random-k draws a keyed partial
+//!    Fisher–Yates from the `(seed, round, cid, var)` stream
+//!    ([`sparse_key`] / [`var_seed`]), so A/B runs stay stream-aligned.
+//! 2. **Index stream** ([`encode_indices_into`] /
+//!    [`decode_indices_into`]): the sorted indices are gap-coded
+//!    (`d₀ = i₀`, `dⱼ = iⱼ − iⱼ₋₁ − 1`) and bitpacked in blocks of
+//!    [`GAPS_PER_BLOCK`] = 64 gaps, each block led by a class-header
+//!    byte `w ∈ 0..=32` — the significant width of the block's OR-fold,
+//!    exactly the [`delta`](crate::omc::delta) block scheme scaled to
+//!    u32 gaps. Decoding is strict: impossible widths, short streams,
+//!    leftover bytes, and out-of-range reconstructed indices all surface
+//!    as a typed [`SparseIndexError`].
+//! 3. **Value stream**: the `k` gathered values ride in the variable's
+//!    existing `SxEyMz` format via the fused uplink pipeline — the
+//!    tag-3 wire record in [`codec`](crate::omc::codec) carries both
+//!    streams under the v2/v3 CRC integrity contract.
+//! 4. **Error feedback** ([`ClientResidual`] / [`SparseStore`]): the new
+//!    residual is the corrected update with the selected coordinates
+//!    zeroed — a bitwise partition, so `scatter(selected) + residual ==
+//!    e` holds exactly (f64 accumulation property-tested in
+//!    `rust/tests/wire_sparse.rs`). The store is keyed by client id and
+//!    committed in plan order by the round engines, keeping summaries
+//!    byte-identical for any worker count.
+//!
+//! `docs/COMPRESSION.md` documents the record layout, the bitpacking,
+//! the error-feedback state machine, and the determinism contract.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::{hash_seed, Xoshiro256pp};
+
+/// Stream label for sparsification randomness: mixed with
+/// `(seed, round, cid)` so random-k draws are independent of every other
+/// per-client stream (sampling, chaos, training noise).
+pub const SPARSE_STREAM: u64 = 0x5A_B5_E7;
+
+/// Gaps per bitpacked index block: 64 u32 gaps, one class-header byte
+/// each (the [`delta`](crate::omc::delta) block scheme at u32 width).
+pub const GAPS_PER_BLOCK: usize = 64;
+
+/// Which coordinates of the corrected update a client ships.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SparseMode {
+    /// The `k` largest-magnitude coordinates (index-ascending tie-break).
+    TopK,
+    /// `k` uniform coordinates from the keyed `(seed, round, cid, var)`
+    /// stream — the unbiased baseline top-k is compared against.
+    RandK,
+}
+
+impl SparseMode {
+    /// Canonical lowercase name (the TOML / sweep-axis spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparseMode::TopK => "topk",
+            SparseMode::RandK => "randk",
+        }
+    }
+}
+
+impl std::fmt::Display for SparseMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for SparseMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "topk" => Ok(SparseMode::TopK),
+            "randk" => Ok(SparseMode::RandK),
+            other => Err(format!(
+                "unknown sparse mode '{other}' (expected topk or randk)"
+            )),
+        }
+    }
+}
+
+/// Per-client sparsification knobs threaded into
+/// [`ClientTrainConfig`](crate::fl::client::ClientTrainConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseTrainParams {
+    /// Selection rule.
+    pub mode: SparseMode,
+    /// Fraction of coordinates kept per variable, in `(0, 1]`.
+    pub fraction: f32,
+    /// Per-`(seed, round, cid)` stream key from [`sparse_key`].
+    pub key: u64,
+}
+
+/// Engine-level sparsification knobs (what the `[sparse]` config table
+/// resolves to); the per-client `key` is bound per round/wave by the
+/// engines via [`SparseParams::bind`].
+#[derive(Clone, Copy, Debug)]
+pub struct SparseParams {
+    /// Selection rule.
+    pub mode: SparseMode,
+    /// Fraction of coordinates kept per variable, in `(0, 1]`.
+    pub fraction: f32,
+}
+
+impl SparseParams {
+    /// Bind the engine knobs to one client's keyed stream for `round`.
+    pub fn bind(self, seed: u64, round: u64, cid: u64) -> SparseTrainParams {
+        SparseTrainParams {
+            mode: self.mode,
+            fraction: self.fraction,
+            key: sparse_key(seed, round, cid),
+        }
+    }
+}
+
+/// Derive the per-client sparse stream key for one round (sync) or wave
+/// (async). Keyed exactly like every other client stream so A/B runs
+/// over the same `(seed, cid)` population stay aligned.
+pub fn sparse_key(seed: u64, round: u64, cid: u64) -> u64 {
+    hash_seed(&[seed, SPARSE_STREAM, round, cid])
+}
+
+/// Derive the per-variable random-k seed from a client's stream key.
+pub fn var_seed(key: u64, var: usize) -> u64 {
+    hash_seed(&[key, var as u64])
+}
+
+/// Number of coordinates shipped for an `n`-element variable at the
+/// configured keep-fraction: `clamp(ceil(fraction·n), 1, n)`, and 0 only
+/// for an empty variable.
+pub fn select_count(n: usize, fraction: f32) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((n as f64 * fraction as f64).ceil() as usize).clamp(1, n)
+}
+
+/// Magnitude bits of an f32: for finite values the unsigned bit pattern
+/// of `|x|` orders exactly like `|x|`, giving an exact integer compare
+/// that is identical on every ISA (no NaN-sensitive float compare).
+#[inline]
+fn mag_bits(x: f32) -> u32 {
+    x.to_bits() & 0x7FFF_FFFF
+}
+
+/// Indices of the `k` largest-magnitude entries of `e`, written into
+/// `out` **sorted ascending** (the order the index stream gap-codes).
+/// Ties break toward the lower index, making the selection a total
+/// order: bit-exact across ISA, worker count, and run.
+pub fn select_topk(e: &[f32], k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    if k == 0 || e.is_empty() {
+        return;
+    }
+    let k = k.min(e.len());
+    out.extend(0..e.len() as u32);
+    if k < e.len() {
+        out.select_nth_unstable_by(k - 1, |&a, &b| {
+            mag_bits(e[b as usize])
+                .cmp(&mag_bits(e[a as usize]))
+                .then(a.cmp(&b))
+        });
+        out.truncate(k);
+    }
+    out.sort_unstable();
+}
+
+/// `k` distinct uniform indices from `0..n`, drawn by partial
+/// Fisher–Yates from the keyed stream and written into `out` **sorted
+/// ascending**. `scratch` holds the permutation buffer so the steady
+/// state allocates nothing.
+pub fn select_randk(
+    n: usize,
+    k: usize,
+    seed: u64,
+    out: &mut Vec<u32>,
+    scratch: &mut Vec<u32>,
+) {
+    out.clear();
+    if k == 0 || n == 0 {
+        return;
+    }
+    let k = k.min(n);
+    scratch.clear();
+    scratch.extend(0..n as u32);
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in 0..k {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        scratch.swap(i, j);
+    }
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
+}
+
+/// Typed failure while decoding a bitpacked index stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseIndexError {
+    /// A block class header byte exceeds 32 (no such width class).
+    BadWidth(u8),
+    /// The stream ended before the declared gaps could be read.
+    Truncated,
+    /// Bytes remain after the last block of the declared index count.
+    TrailingBytes,
+    /// A reconstructed index reached or passed the variable length —
+    /// also covers duplicate/descending indices, which gap-coding makes
+    /// unrepresentable without overshooting `n`.
+    IndexOverflow,
+}
+
+impl std::fmt::Display for SparseIndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SparseIndexError::BadWidth(w) => {
+                write!(f, "impossible index block class {w}")
+            }
+            SparseIndexError::Truncated => {
+                write!(f, "truncated index stream")
+            }
+            SparseIndexError::TrailingBytes => {
+                write!(f, "trailing bytes after index stream")
+            }
+            SparseIndexError::IndexOverflow => {
+                write!(f, "index stream reconstructs out-of-range index")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SparseIndexError {}
+
+/// Gap-code and bitpack sorted, strictly ascending `indices` into `out`
+/// (appended, not cleared). Returns the number of bytes appended. The
+/// stream is self-delimiting given the index count `k`, which the wire
+/// record carries.
+pub fn encode_indices_into(indices: &[u32], out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    let mut prev: u64 = 0;
+    let mut gaps = [0u32; GAPS_PER_BLOCK];
+    let mut k = 0usize;
+    while k < indices.len() {
+        let t = (indices.len() - k).min(GAPS_PER_BLOCK);
+        let mut folded = 0u32;
+        for (j, gap) in gaps.iter_mut().enumerate().take(t) {
+            let idx = indices[k + j] as u64;
+            debug_assert!(k + j == 0 || idx > prev, "indices must ascend");
+            *gap = if k + j == 0 {
+                idx as u32
+            } else {
+                (idx - prev - 1) as u32
+            };
+            folded |= *gap;
+            prev = idx;
+        }
+        // class = significant width of the OR-fold (exact integer math)
+        let w = 32 - folded.leading_zeros() as usize;
+        out.push(w as u8);
+        if w > 0 {
+            // LSB-first bit accumulator, flushed at block end; u64 holds
+            // the worst case (7 residual bits + a 32-bit gap).
+            let mut acc: u64 = 0;
+            let mut bits = 0usize;
+            for &gap in gaps.iter().take(t) {
+                acc |= (gap as u64) << bits;
+                bits += w;
+                while bits >= 8 {
+                    out.push((acc & 0xFF) as u8);
+                    acc >>= 8;
+                    bits -= 8;
+                }
+            }
+            if bits > 0 {
+                out.push((acc & 0xFF) as u8);
+            }
+        }
+        k += t;
+    }
+    out.len() - start
+}
+
+/// Decode a bitpacked index stream back to `k` ascending indices below
+/// `n` (cleared into `out`). Strict: every malformed stream — and every
+/// stream whose gaps reconstruct an index at or past `n` — is a typed
+/// error, never a panic or a silent wrong decode.
+pub fn decode_indices_into(
+    stream: &[u8],
+    k: usize,
+    n: usize,
+    out: &mut Vec<u32>,
+) -> Result<(), SparseIndexError> {
+    out.clear();
+    if k > n {
+        return Err(SparseIndexError::IndexOverflow);
+    }
+    out.reserve(k);
+    let mut i = 0usize; // stream cursor
+    let mut g = 0usize; // gaps decoded
+    let mut prev: u64 = 0;
+    while g < k {
+        let t = (k - g).min(GAPS_PER_BLOCK);
+        let w = *stream.get(i).ok_or(SparseIndexError::Truncated)? as usize;
+        i += 1;
+        if w > 32 {
+            return Err(SparseIndexError::BadWidth(w as u8));
+        }
+        if w == 0 {
+            // all-zero gaps: a consecutive run from the previous index
+            for j in 0..t {
+                let idx = if g + j == 0 { 0 } else { prev + 1 };
+                if idx >= n as u64 {
+                    return Err(SparseIndexError::IndexOverflow);
+                }
+                out.push(idx as u32);
+                prev = idx;
+            }
+        } else {
+            let need = (t * w).div_ceil(8);
+            let body = stream
+                .get(i..i + need)
+                .ok_or(SparseIndexError::Truncated)?;
+            i += need;
+            let mask = (1u64 << w) - 1;
+            let mut acc: u64 = 0;
+            let mut bits = 0usize;
+            let mut bi = 0usize;
+            for j in 0..t {
+                while bits < w {
+                    acc |= (body[bi] as u64) << bits;
+                    bi += 1;
+                    bits += 8;
+                }
+                let gap = acc & mask;
+                acc >>= w;
+                bits -= w;
+                let idx = if g + j == 0 { gap } else { prev + 1 + gap };
+                if idx >= n as u64 {
+                    return Err(SparseIndexError::IndexOverflow);
+                }
+                out.push(idx as u32);
+                prev = idx;
+            }
+        }
+        g += t;
+    }
+    if i != stream.len() {
+        return Err(SparseIndexError::TrailingBytes);
+    }
+    debug_assert_eq!(out.len(), k);
+    Ok(())
+}
+
+/// Gather `values[idx]` for each selected index into `out` (cleared
+/// first) — the value stream the wire record packs.
+pub fn gather_into(values: &[f32], indices: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(indices.len());
+    for &i in indices {
+        out.push(values[i as usize]);
+    }
+}
+
+/// One client's error-feedback state: per-variable residual vectors.
+/// `None` entries are variables sparsification never touched (raw /
+/// masked-out vars, or no round shipped them yet) — their residual is
+/// identically zero.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClientResidual {
+    vars: Vec<Option<Vec<f32>>>,
+}
+
+impl ClientResidual {
+    /// Empty residual over `nvars` variables.
+    pub fn new(nvars: usize) -> Self {
+        Self {
+            vars: vec![None; nvars],
+        }
+    }
+
+    /// Number of variable slots.
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// The residual for variable `i`, when a prior round deposited one.
+    pub fn var(&self, i: usize) -> Option<&[f32]> {
+        self.vars.get(i).and_then(|v| v.as_deref())
+    }
+
+    /// Deposit the new residual for variable `i`.
+    pub fn set(&mut self, i: usize, residual: Vec<f32>) {
+        if i >= self.vars.len() {
+            self.vars.resize(i + 1, None);
+        }
+        self.vars[i] = Some(residual);
+    }
+
+    /// Sum of squared residual entries, accumulated in f64 in index
+    /// order — deterministic, and the source of the per-round
+    /// `sparse_residual_norm` liveness counter.
+    pub fn norm_sq(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for v in self.vars.iter().flatten() {
+            for &x in v {
+                acc += x as f64 * x as f64;
+            }
+        }
+        acc
+    }
+
+    /// Heap bytes held by the residual vectors.
+    pub fn memory_bytes(&self) -> usize {
+        self.vars
+            .iter()
+            .flatten()
+            .map(|v| v.capacity() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+/// Server-side registry of per-client error-feedback residuals, keyed by
+/// client id. The round engines read a client's entry at dispatch and
+/// commit the returned residual **sequentially in plan order** after the
+/// cohort runs, so the store's contents — and everything derived from
+/// them — are byte-identical for any worker count.
+#[derive(Clone, Debug, Default)]
+pub struct SparseStore {
+    residuals: BTreeMap<u64, ClientResidual>,
+}
+
+impl SparseStore {
+    /// Empty store (no client has a residual yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The residual carried by client `cid`, if any round deposited one.
+    pub fn get(&self, cid: u64) -> Option<&ClientResidual> {
+        self.residuals.get(&cid)
+    }
+
+    /// Replace client `cid`'s residual with this round's leftover.
+    pub fn commit(&mut self, cid: u64, residual: ClientResidual) {
+        self.residuals.insert(cid, residual);
+    }
+
+    /// Drop every residual (the start-of-run reset).
+    pub fn clear(&mut self) {
+        self.residuals.clear();
+    }
+
+    /// Number of clients with a stored residual.
+    pub fn len(&self) -> usize {
+        self.residuals.len()
+    }
+
+    /// Whether no client has a stored residual.
+    pub fn is_empty(&self) -> bool {
+        self.residuals.is_empty()
+    }
+
+    /// Total squared residual mass across all clients (f64, in client-id
+    /// order — deterministic).
+    pub fn norm_sq(&self) -> f64 {
+        self.residuals.values().map(|r| r.norm_sq()).sum()
+    }
+
+    /// Heap bytes held by all residuals (the O(participating-clients)
+    /// memory the population caveat in `docs/COMPRESSION.md` documents).
+    pub fn memory_bytes(&self) -> usize {
+        self.residuals
+            .values()
+            .map(|r| r.memory_bytes() + std::mem::size_of::<u64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Gen};
+
+    fn roundtrip(indices: &[u32], n: usize) -> Vec<u32> {
+        let mut stream = Vec::new();
+        let written = encode_indices_into(indices, &mut stream);
+        assert_eq!(written, stream.len());
+        let mut back = Vec::new();
+        decode_indices_into(&stream, indices.len(), n, &mut back).unwrap();
+        back
+    }
+
+    #[test]
+    fn empty_selection_roundtrips_to_empty_stream() {
+        let mut stream = Vec::new();
+        assert_eq!(encode_indices_into(&[], &mut stream), 0);
+        let mut back = vec![7u32; 3];
+        decode_indices_into(&[], 0, 10, &mut back).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn consecutive_indices_cost_one_header_byte_per_block() {
+        // gaps all zero -> class 0, header-only blocks
+        for n in [1usize, 63, 64, 65, 300] {
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let mut stream = Vec::new();
+            encode_indices_into(&idx, &mut stream);
+            assert_eq!(stream.len(), n.div_ceil(GAPS_PER_BLOCK), "n {n}");
+            assert_eq!(roundtrip(&idx, n), idx);
+        }
+    }
+
+    #[test]
+    fn width_classes_match_gap_contents() {
+        // one block whose max gap needs exactly w bits, for every w
+        for w in 1usize..=32 {
+            let gap: u32 = if w == 32 { u32::MAX } else { (1 << w) - 1 };
+            let idx = vec![0u32, 1 + gap];
+            let n = 3 + gap as usize;
+            let mut stream = Vec::new();
+            encode_indices_into(&idx, &mut stream);
+            assert_eq!(stream[0] as usize, w, "class for width {w}");
+            assert_eq!(stream.len(), 1 + (2 * w).div_ceil(8), "width {w}");
+            assert_eq!(roundtrip(&idx, n), idx);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_over_adversarial_selections() {
+        check("sparse index roundtrip", 200, |g| {
+            let n = 1 + g.usize_below(3000);
+            let k = 1 + g.usize_below(n);
+            // draw k distinct ascending indices three ways: dense run,
+            // uniform, clustered
+            let mut idx: Vec<u32> = match g.usize_below(3) {
+                0 => (0..k as u32).collect(),
+                1 => {
+                    let mut rng = Xoshiro256pp::new(g.u64());
+                    rng.sample_indices(n, k)
+                        .into_iter()
+                        .map(|i| i as u32)
+                        .collect()
+                }
+                _ => (0..k).map(|i| (i * n / k) as u32).collect(),
+            };
+            idx.sort_unstable();
+            idx.dedup();
+            let back = roundtrip(&idx, n);
+            if back != idx {
+                return Err(format!("n {n} k {} mismatched", idx.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_malformed_streams() {
+        let idx: Vec<u32> = (0..200u32).map(|i| i * 3).collect();
+        let n = 600;
+        let mut stream = Vec::new();
+        encode_indices_into(&idx, &mut stream);
+        let mut out = Vec::new();
+        // impossible class header
+        let mut bad = stream.clone();
+        bad[0] = 33;
+        assert_eq!(
+            decode_indices_into(&bad, idx.len(), n, &mut out),
+            Err(SparseIndexError::BadWidth(33))
+        );
+        // every truncation is typed, never a panic
+        for cut in 0..stream.len() {
+            let r = decode_indices_into(&stream[..cut], idx.len(), n, &mut out);
+            assert!(r.is_err(), "cut {cut} accepted");
+        }
+        // trailing bytes are rejected
+        let mut bad = stream.clone();
+        bad.push(0);
+        assert_eq!(
+            decode_indices_into(&bad, idx.len(), n, &mut out),
+            Err(SparseIndexError::TrailingBytes)
+        );
+        // a shrunk variable length turns in-range gaps into overflow
+        assert_eq!(
+            decode_indices_into(&stream, idx.len(), 500, &mut out),
+            Err(SparseIndexError::IndexOverflow)
+        );
+        // more indices than the variable holds is unrepresentable
+        assert_eq!(
+            decode_indices_into(&stream, idx.len(), idx.len() - 1, &mut out),
+            Err(SparseIndexError::IndexOverflow)
+        );
+    }
+
+    #[test]
+    fn topk_picks_largest_magnitudes_with_index_tiebreak() {
+        let e = [0.1f32, -3.0, 0.0, 3.0, -0.5, 2.0];
+        let mut out = Vec::new();
+        select_topk(&e, 3, &mut out);
+        // |−3.0| ties |3.0| -> lower index 1 first, both kept with 2.0
+        assert_eq!(out, vec![1, 3, 5]);
+        select_topk(&e, 1, &mut out);
+        assert_eq!(out, vec![1], "tie at k=1 keeps the lower index");
+        select_topk(&e, 6, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+        select_topk(&e, 9, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 5], "k clamps to n");
+    }
+
+    #[test]
+    fn topk_is_a_total_order_property() {
+        check("topk total order", 100, |g| {
+            let n = 1 + g.usize_below(500);
+            let e: Vec<f32> = (0..n)
+                .map(|_| (g.u64() % 17) as f32 - 8.0) // many exact ties
+                .collect();
+            let k = 1 + g.usize_below(n);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            select_topk(&e, k, &mut a);
+            select_topk(&e, k, &mut b);
+            if a != b {
+                return Err("re-selection differed".into());
+            }
+            if a.len() != k {
+                return Err(format!("selected {} of k {k}", a.len()));
+            }
+            if a.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("selection not strictly ascending".into());
+            }
+            // no unselected magnitude strictly exceeds a selected one
+            let sel_min = a
+                .iter()
+                .map(|&i| super::mag_bits(e[i as usize]))
+                .min()
+                .unwrap();
+            for i in 0..n as u32 {
+                if !a.contains(&i)
+                    && super::mag_bits(e[i as usize]) > sel_min
+                {
+                    return Err(format!("index {i} unjustly dropped"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn randk_is_keyed_distinct_and_sorted() {
+        let (mut a, mut b, mut scratch) = (Vec::new(), Vec::new(), Vec::new());
+        select_randk(100, 30, 7, &mut a, &mut scratch);
+        select_randk(100, 30, 7, &mut b, &mut scratch);
+        assert_eq!(a, b, "same key must reproduce the selection");
+        select_randk(100, 30, 8, &mut b, &mut scratch);
+        assert_ne!(a, b, "a different key must move the selection");
+        assert_eq!(a.len(), 30);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+        assert!(a.iter().all(|&i| i < 100));
+        select_randk(5, 9, 1, &mut a, &mut scratch);
+        assert_eq!(a, vec![0, 1, 2, 3, 4], "k clamps to n");
+    }
+
+    #[test]
+    fn select_count_clamps_to_at_least_one() {
+        assert_eq!(select_count(0, 0.25), 0);
+        assert_eq!(select_count(1, 0.01), 1);
+        assert_eq!(select_count(300, 0.25), 75);
+        assert_eq!(select_count(10, 1.0), 10);
+        assert_eq!(select_count(3, 0.9), 3);
+    }
+
+    #[test]
+    fn sparse_key_varies_over_every_part() {
+        let k = sparse_key(42, 3, 9);
+        assert_ne!(k, sparse_key(43, 3, 9));
+        assert_ne!(k, sparse_key(42, 4, 9));
+        assert_ne!(k, sparse_key(42, 3, 10));
+        assert_ne!(var_seed(k, 0), var_seed(k, 1));
+    }
+
+    #[test]
+    fn mode_parses_and_prints_canonically() {
+        assert_eq!("topk".parse::<SparseMode>().unwrap(), SparseMode::TopK);
+        assert_eq!("randk".parse::<SparseMode>().unwrap(), SparseMode::RandK);
+        assert!("dense".parse::<SparseMode>().is_err());
+        assert_eq!(SparseMode::TopK.to_string(), "topk");
+        assert_eq!(SparseMode::RandK.to_string(), "randk");
+    }
+
+    #[test]
+    fn residual_partition_is_bitwise_exact() {
+        check("residual partition", 100, |g| {
+            let n = 1 + g.usize_below(800);
+            let e = g.vec_normal(n, 0.3);
+            let k = select_count(n, 0.25);
+            let mut idx = Vec::new();
+            select_topk(&e, k, &mut idx);
+            let mut gathered = Vec::new();
+            gather_into(&e, &idx, &mut gathered);
+            // residual = e with selected coords zeroed
+            let mut residual = e.clone();
+            for &i in &idx {
+                residual[i as usize] = 0.0;
+            }
+            // scatter(selected) + residual == e, bitwise
+            let mut rebuilt = residual.clone();
+            for (j, &i) in idx.iter().enumerate() {
+                rebuilt[i as usize] = gathered[j];
+            }
+            for i in 0..n {
+                if rebuilt[i].to_bits() != e[i].to_bits() {
+                    return Err(format!("coord {i} not a partition"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn store_commits_by_client_and_tracks_mass() {
+        let mut store = SparseStore::new();
+        assert!(store.is_empty());
+        assert!(store.get(3).is_none());
+        let mut r = ClientResidual::new(2);
+        r.set(0, vec![3.0, -4.0]);
+        assert_eq!(r.norm_sq(), 25.0);
+        assert_eq!(r.var(0), Some(&[3.0f32, -4.0][..]));
+        assert_eq!(r.var(1), None);
+        store.commit(3, r.clone());
+        store.commit(5, ClientResidual::new(2));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.norm_sq(), 25.0);
+        assert!(store.memory_bytes() >= 2 * 4);
+        // re-commit replaces, never accumulates
+        r.set(0, vec![1.0]);
+        store.commit(3, r);
+        assert_eq!(store.norm_sq(), 1.0);
+        store.clear();
+        assert!(store.is_empty());
+        assert_eq!(store.norm_sq(), 0.0);
+    }
+}

@@ -1,0 +1,449 @@
+//! Property/fuzz suite for the uplink sparsification wire stage (tag-3
+//! records on the checksummed v2/v3 layouts), driven end to end through
+//! the `testkit` corruption driver:
+//!
+//! * **Bit-exact round-trip** across every paper format (S1E4M14,
+//!   S1E3M7, S1E2M3), both selection rules, random shapes, and index
+//!   counts straddling the 64-gap block geometry — the decoded dense
+//!   update equals the same values quantized through the dense packed
+//!   pipeline, scattered over zeros.
+//! * **Savings accounting** — `sparse_saved()` is defined as the exact
+//!   byte reduction vs the verbatim tag-1 record the sparse record
+//!   replaced: frame lengths obey `sparse + saved == dense`.
+//! * **Index-stream totality** — gap-coded streams round-trip exactly;
+//!   every truncation, trailing byte, impossible width class, and
+//!   out-of-range reconstruction is a typed [`SparseIndexError`], never
+//!   a panic or a silent wrong decode.
+//! * **Error-feedback conservation** — selection partitions the dense
+//!   update bitwise: scattering the selected values over the residual
+//!   reconstructs the update exactly, for top-k and rand-k alike.
+//! * **Corruption totality** — every 1-byte truncation and every
+//!   single-bit flip of a frame carrying a sparse record decodes to a
+//!   typed [`DecodeError`]; replayed frames still trip the
+//!   [`NonceLedger`]. (Tag 3 on the unchecksummed v1 layout is refused
+//!   as `UnknownTag` — pinned by the codec unit tests.)
+
+use omc_fl::omc::codec::{
+    self, frame_nonce, DecodeError, NonceLedger, WireWriter,
+};
+use omc_fl::omc::format::FloatFormat;
+use omc_fl::omc::sparse::{
+    decode_indices_into, encode_indices_into, gather_into, select_count,
+    select_randk, select_topk, SparseIndexError,
+};
+use omc_fl::omc::store::StoredVar;
+use omc_fl::testkit::{check, corrupt_byte, flip_bit, truncate_at, Gen};
+
+/// Value counts straddling the index-stream block geometry: 64-gap
+/// blocks, plus small and ragged shapes around them.
+const TAIL_LENS: [usize; 12] =
+    [0, 1, 2, 63, 64, 65, 255, 256, 257, 511, 512, 513];
+
+/// Bit patterns of a decoded plaintext, for exact comparison.
+fn bits(vals: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    vals.iter()
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// Decode every variable of a frame to its dense values (sparse views
+/// decode to the dense update: zeros plus the decompressed gathered
+/// values at their coordinates), or stringify the typed refusal.
+fn decode_dense(wire: &[u8]) -> Result<Vec<Vec<f32>>, DecodeError> {
+    let mut out = Vec::new();
+    codec::for_each_var(wire, |_, view| {
+        let mut v = Vec::new();
+        view.decompress_into(&mut v);
+        out.push(v);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Select `k` coordinates of `e` with a coin-flipped rule, returning the
+/// ascending index set.
+fn select_either(g: &mut Gen, e: &[f32], k: usize, idx: &mut Vec<u32>) {
+    if g.usize_below(2) == 0 {
+        select_topk(e, k, idx);
+    } else {
+        let mut scratch = Vec::new();
+        select_randk(e.len(), k, g.u64(), idx, &mut scratch);
+    }
+}
+
+#[test]
+fn sparse_roundtrip_is_bit_exact_across_all_paper_formats() {
+    for fmt_s in ["S1E4M14", "S1E3M7", "S1E2M3"] {
+        let fmt: FloatFormat = fmt_s.parse().unwrap();
+        check(&format!("sparse_roundtrip_{fmt_s}"), 40, |g| {
+            let n = if g.usize_below(2) == 0 {
+                TAIL_LENS[g.usize_below(TAIL_LENS.len())]
+            } else {
+                g.usize_below(700)
+            };
+            let e = g.vec_normal(n, 0.1);
+            let fraction = [0.01f32, 0.1, 0.25, 1.0][g.usize_below(4)];
+            let k = select_count(n, fraction);
+            let mut idx = Vec::new();
+            select_either(g, &e, k, &mut idx);
+            let mut gathered = Vec::new();
+            gather_into(&e, &idx, &mut gathered);
+            let use_pvt = g.usize_below(2) == 0;
+
+            let mut w = WireWriter::with_integrity(0, g.u64());
+            w.sparse_values(&gathered, &idx, n, fmt, use_pvt);
+            let wire = w.finish();
+
+            // oracle: the gathered values quantized through the dense
+            // packed pipeline, scattered over zeros
+            let quantized =
+                StoredVar::compress(&gathered, fmt, use_pvt).decompress();
+            let mut expect = vec![0.0f32; n];
+            for (j, &i) in idx.iter().enumerate() {
+                expect[i as usize] = quantized[j];
+            }
+            let got = decode_dense(&wire).map_err(|e| format!("{e:?}"))?;
+            if bits(&got) != bits(&[expect]) {
+                return Err(format!(
+                    "{fmt_s}: sparse round-trip not bit-exact (n={n} k={k})"
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn mixed_frames_carry_sparse_records_next_to_packed_and_raw() {
+    check("sparse_mixed_frame", 40, |g| {
+        let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+        let dense_vals = g.vec_normal(220, 0.05);
+        let dense = StoredVar::compress(&dense_vals, fmt, true);
+        let raw = g.vec_normal(16, 1.0);
+        let n = 300;
+        let e = g.vec_normal(n, 0.1);
+        let k = select_count(n, 0.1);
+        let mut idx = Vec::new();
+        select_either(g, &e, k, &mut idx);
+        let mut gathered = Vec::new();
+        gather_into(&e, &idx, &mut gathered);
+
+        let mut w = WireWriter::with_integrity(0, g.u64());
+        w.var(&dense);
+        w.raw(&raw);
+        w.sparse_values(&gathered, &idx, n, fmt, true);
+        w.raw(&[]);
+        let wire = w.finish();
+
+        let got = decode_dense(&wire).map_err(|e| format!("{e:?}"))?;
+        if got.len() != 4 {
+            return Err(format!("expected 4 vars, got {}", got.len()));
+        }
+        if bits(&got[..2]) != bits(&[dense.decompress(), raw.clone()]) {
+            return Err("dense/raw vars disturbed by sparse record".into());
+        }
+        let quantized = StoredVar::compress(&gathered, fmt, true).decompress();
+        let mut expect = vec![0.0f32; n];
+        for (j, &i) in idx.iter().enumerate() {
+            expect[i as usize] = quantized[j];
+        }
+        if bits(&got[2..3]) != bits(&[expect]) {
+            return Err("sparse var in mixed frame not bit-exact".into());
+        }
+        if !got[3].is_empty() {
+            return Err("empty raw var no longer empty".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_saved_accounts_exactly_for_the_verbatim_reduction() {
+    check("sparse_saved_accounting", 40, |g| {
+        let fmt: FloatFormat = "S1E4M14".parse().unwrap();
+        let n = 256 + g.usize_below(700);
+        let e = g.vec_normal(n, 0.1);
+        let k = select_count(n, 0.05);
+        let mut idx = Vec::new();
+        select_either(g, &e, k, &mut idx);
+        let mut gathered = Vec::new();
+        gather_into(&e, &idx, &mut gathered);
+
+        let mut w = WireWriter::with_integrity(0, 7);
+        w.sparse_values(&gathered, &idx, n, fmt, true);
+        let saved = w.sparse_saved();
+        let sparse_wire = w.finish();
+
+        // the verbatim twin: a tag-1 record of the same (n, fmt) — its
+        // length depends only on the shape, not the values
+        let mut w = WireWriter::with_integrity(0, 7);
+        w.var(&StoredVar::compress(&e, fmt, true));
+        let dense_wire = w.finish();
+
+        if sparse_wire.len() >= dense_wire.len() {
+            return Err(format!(
+                "5% selection did not shrink the frame: {} vs {}",
+                sparse_wire.len(),
+                dense_wire.len()
+            ));
+        }
+        if sparse_wire.len() + saved != dense_wire.len() {
+            return Err(format!(
+                "savings identity broken: sparse {} + saved {saved} != dense {}",
+                sparse_wire.len(),
+                dense_wire.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn index_stream_roundtrips_at_every_block_boundary() {
+    // deterministic sweep over the gap-block geometry: consecutive runs
+    // (zero-width blocks), uniform draws, and single wide gaps
+    let mut g = Gen::new(0x1D_EC5);
+    for &k in &TAIL_LENS {
+        let n = (4 * k).max(k + 1);
+        // consecutive run 0..k — every block is width class 0
+        let run: Vec<u32> = (0..k as u32).collect();
+        // uniform distinct draw
+        let mut uni = Vec::new();
+        let mut scratch = Vec::new();
+        select_randk(n, k, g.u64(), &mut uni, &mut scratch);
+        for idx in [&run, &uni] {
+            let mut stream = Vec::new();
+            let islen = encode_indices_into(idx, &mut stream);
+            assert_eq!(islen, stream.len());
+            let mut back = Vec::new();
+            decode_indices_into(&stream, idx.len(), n, &mut back).unwrap();
+            assert_eq!(&back, idx, "k={k} round-trip");
+        }
+    }
+    // one maximal gap: the full 32-bit width class
+    let idx = vec![0u32, u32::MAX - 1];
+    let mut stream = Vec::new();
+    encode_indices_into(&idx, &mut stream);
+    let mut back = Vec::new();
+    decode_indices_into(&stream, 2, u32::MAX as usize, &mut back).unwrap();
+    assert_eq!(back, idx);
+}
+
+#[test]
+fn every_malformed_index_stream_is_a_typed_error() {
+    check("sparse_index_malformed", 40, |g| {
+        let n = 64 + g.usize_below(1000);
+        let k = 1 + g.usize_below(n.min(200));
+        let mut idx = Vec::new();
+        let mut scratch = Vec::new();
+        select_randk(n, k, g.u64(), &mut idx, &mut scratch);
+        let mut stream = Vec::new();
+        encode_indices_into(&idx, &mut stream);
+        let mut out = Vec::new();
+        // every strict prefix is short of its declared gaps
+        for len in 0..stream.len() {
+            match decode_indices_into(&stream[..len], k, n, &mut out) {
+                Err(_) => {}
+                Ok(()) => {
+                    return Err(format!("prefix {len}/{} decoded", stream.len()))
+                }
+            }
+        }
+        // a trailing byte is refused even though the gaps decode
+        let mut long = stream.clone();
+        long.push(0);
+        match decode_indices_into(&long, k, n, &mut out) {
+            Err(SparseIndexError::TrailingBytes) => {}
+            other => return Err(format!("trailing byte gave {other:?}")),
+        }
+        // an impossible width class is refused up front
+        let mut bad = stream.clone();
+        bad[0] = 33;
+        match decode_indices_into(&bad, k, n, &mut out) {
+            Err(SparseIndexError::BadWidth(33)) => {}
+            // widening the first block can also starve later ones
+            Err(SparseIndexError::Truncated) => {}
+            other => return Err(format!("width 33 gave {other:?}")),
+        }
+        // shrinking n below the top index reconstructs out of range
+        let top = *idx.last().unwrap() as usize;
+        match decode_indices_into(&stream, k, top, &mut out) {
+            Err(SparseIndexError::IndexOverflow) => Ok(()),
+            other => Err(format!("n={top} gave {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn error_feedback_partitions_the_dense_update_bitwise() {
+    check("sparse_ef_partition", 60, |g| {
+        let n = 1 + g.usize_below(900);
+        let e = if g.usize_below(3) == 0 {
+            g.vec_edge_heavy(n)
+        } else {
+            g.vec_normal(n, 0.1)
+        };
+        let fraction = [0.01f32, 0.25, 0.9][g.usize_below(3)];
+        let k = select_count(n, fraction);
+        let mut idx = Vec::new();
+        select_either(g, &e, k, &mut idx);
+        if idx.len() != k {
+            return Err(format!("selected {} of k={k}", idx.len()));
+        }
+        // indices strictly ascend and stay in range — the precondition
+        // the gap coding and the scatter both rely on
+        for w in idx.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("indices not ascending: {w:?}"));
+            }
+        }
+        if idx.last().is_some_and(|&i| i as usize >= n) {
+            return Err("selected index out of range".into());
+        }
+        // the client's split: ship the selected values, bank the rest
+        let mut gathered = Vec::new();
+        gather_into(&e, &idx, &mut gathered);
+        let mut residual = e.clone();
+        for &i in &idx {
+            residual[i as usize] = 0.0;
+        }
+        // conservation: scattering the shipment over the residual must
+        // reconstruct the dense update bit for bit — nothing is lost
+        // between the wire and the error-feedback bank
+        let mut recon = residual.clone();
+        for (j, &i) in idx.iter().enumerate() {
+            recon[i as usize] = gathered[j];
+        }
+        if bits(&[recon]) != bits(&[e.clone()]) {
+            return Err("selected + residual != dense update".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_is_a_deterministic_magnitude_total_order() {
+    check("sparse_topk_order", 60, |g| {
+        let n = 2 + g.usize_below(700);
+        let e = g.vec_normal(n, 0.1);
+        let k = 1 + g.usize_below(n - 1);
+        let mut idx = Vec::new();
+        select_topk(&e, k, &mut idx);
+        let selected: std::collections::HashSet<u32> =
+            idx.iter().copied().collect();
+        let floor = idx
+            .iter()
+            .map(|&i| e[i as usize].abs())
+            .fold(f32::INFINITY, f32::min);
+        for (i, &x) in e.iter().enumerate() {
+            if !selected.contains(&(i as u32)) && x.abs() > floor {
+                return Err(format!(
+                    "unselected |e[{i}]|={} beats selected floor {floor}",
+                    x.abs()
+                ));
+            }
+        }
+        // bit-exact rerun: selection is a pure function of (e, k)
+        let mut again = Vec::new();
+        select_topk(&e, k, &mut again);
+        if again != idx {
+            return Err("top-k selection not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- corruption totality (fuzz layer over the corruption driver) ----------
+
+/// A small-but-complete v2 frame holding a sparse record among packed,
+/// raw, and empty neighbours.
+fn small_sparse_frame(g: &mut Gen) -> (Vec<Vec<f32>>, Vec<u8>) {
+    let fmt: FloatFormat = "S1E3M7".parse().unwrap();
+    let dense = StoredVar::compress(&g.vec_normal(120, 0.05), fmt, true);
+    let raw = g.vec_normal(16, 1.0);
+    let n = 300;
+    let e = g.vec_normal(n, 0.1);
+    let k = select_count(n, 0.08);
+    let mut idx = Vec::new();
+    select_topk(&e, k, &mut idx);
+    let mut gathered = Vec::new();
+    gather_into(&e, &idx, &mut gathered);
+
+    let mut w = WireWriter::with_integrity(0, 0xFEED_F00D);
+    w.var(&dense);
+    w.raw(&raw);
+    w.sparse_values(&gathered, &idx, n, fmt, true);
+    let wire = w.finish();
+
+    let quantized = StoredVar::compress(&gathered, fmt, true).decompress();
+    let mut update = vec![0.0f32; n];
+    for (j, &i) in idx.iter().enumerate() {
+        update[i as usize] = quantized[j];
+    }
+    (vec![dense.decompress(), raw, update], wire)
+}
+
+#[test]
+fn every_truncation_of_a_sparse_frame_is_a_typed_error() {
+    let mut g = Gen::new(0x5A_7A11);
+    let (expect, wire) = small_sparse_frame(&mut g);
+    assert_eq!(
+        bits(&decode_dense(&wire).unwrap()),
+        bits(&expect),
+        "the uncorrupted frame must decode"
+    );
+    for len in 0..wire.len() {
+        let cut = truncate_at(&wire, len);
+        match decode_dense(cut) {
+            Err(_) => {}
+            Ok(_) => panic!("truncation to {len}/{} decoded", wire.len()),
+        }
+    }
+}
+
+#[test]
+fn every_single_bit_flip_of_a_sparse_frame_is_a_typed_error() {
+    // CRC32C coverage is total: the record CRC spans the tag, counts,
+    // index stream, and value payload alike, so no single-bit flip may
+    // decode — a corrupted index stream must never silently scatter
+    // values to the wrong coordinates
+    let mut g = Gen::new(0x5A_F11B);
+    let (_expect, wire) = small_sparse_frame(&mut g);
+    for bit in 0..wire.len() * 8 {
+        let mut bad = wire.clone();
+        flip_bit(&mut bad, bit);
+        match decode_dense(&bad) {
+            Err(_) => {}
+            Ok(_) => panic!("bit flip {bit} decoded silently"),
+        }
+    }
+}
+
+#[test]
+fn random_byte_corruption_is_always_refused() {
+    check("sparse_byte_corruption", 120, |g| {
+        let (_expect, wire) = small_sparse_frame(g);
+        let mut bad = wire.clone();
+        let at = g.usize_below(bad.len());
+        let xor = 1 + (g.u64() & 0xFE) as u8; // nonzero
+        corrupt_byte(&mut bad, at, xor);
+        match decode_dense(&bad) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("byte {at} ^ {xor:#x} decoded silently")),
+        }
+    });
+}
+
+#[test]
+fn replayed_sparse_frames_trip_the_nonce_ledger() {
+    let mut g = Gen::new(0x5A_DAD);
+    let (_expect, wire) = small_sparse_frame(&mut g);
+    let nonce = frame_nonce(&wire).unwrap();
+    assert_eq!(nonce, Some(0xFEED_F00D), "v2 frames carry their nonce");
+    let mut ledger = NonceLedger::new(8);
+    ledger.observe(nonce).unwrap();
+    match ledger.observe(nonce) {
+        Err(DecodeError::DuplicateNonce(n)) => assert_eq!(n, 0xFEED_F00D),
+        other => panic!("replay must be DuplicateNonce, got {other:?}"),
+    }
+}

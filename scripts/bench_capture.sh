@@ -15,7 +15,7 @@ mkdir -p "$dest"
 
 benches=(bench_pack bench_quantize bench_transform bench_codec
          bench_round bench_sweep bench_native bench_async
-         bench_delta bench_population bench_serve)
+         bench_delta bench_sparse bench_population bench_serve)
 
 for b in "${benches[@]}"; do
   echo "== $b"

@@ -53,6 +53,19 @@ def suite_name(filename):
     return stem
 
 
+def steady_state(row):
+    """Whether a row's median was measured over at least one full
+    steady-state pass. Under OMC_BENCH_FAST some suites emit rows whose
+    measured `iters` fall below their `warmup_iters` — those medians
+    sample the cold path (first-touch allocation, cache fill) and are
+    not comparable against a steady baseline, so they must not arm a
+    failing gate. Rows missing either field count as steady (older
+    baselines predate the fields)."""
+    iters = row.get("iters") or 0
+    warmup = row.get("warmup_iters") or 0
+    return iters >= max(1, warmup)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dir", default=".", help="where fresh BENCH_*.json live")
@@ -140,7 +153,15 @@ def main():
             line = (f"{name}:{case}  baseline {ba['median_ns']:.0f}ns -> "
                     f"fresh {fr['median_ns']:.0f}ns  ({ratio:.2f}x)")
             if fail_threshold is not None and ratio > 1.0 + fail_threshold:
-                failures.append((fail_threshold, line))
+                if steady_state(fr) and steady_state(ba):
+                    failures.append((fail_threshold, line))
+                else:
+                    # a cold-path median (iters < warmup_iters on either
+                    # side) regressing past the gate is a warning, not a
+                    # failure — the statistic itself is not comparable
+                    warnings.append((fail_threshold,
+                                     f"{line} [cold-path median: iters < "
+                                     f"warmup_iters, gate demoted]"))
             elif ratio > 1.0 + args.threshold:
                 warnings.append((args.threshold, line))
             elif ratio < 1.0 - args.threshold:

@@ -120,6 +120,21 @@ def main():
         print(f"error: malformed JSON: {e}", file=sys.stderr)
         return 2
 
+    # A schema_version bump invalidates every field-level diff below it:
+    # the golden was blessed against a different summary shape, so the
+    # walk would drown the real signal in added/removed-key noise. That
+    # is a FAILING condition, not a warning — a schema bump must re-bless
+    # the golden deliberately, never slide through CI as chatter.
+    g_schema = golden.get("schema_version") if isinstance(golden, dict) else None
+    f_schema = fresh.get("schema_version") if isinstance(fresh, dict) else None
+    if g_schema is not None and f_schema is not None and g_schema != f_schema:
+        print(f"error: schema_version bumped without --bless: golden "
+              f"{args.golden} carries v{g_schema}, fresh summary carries "
+              f"v{f_schema}. Re-bless the golden deliberately:\n"
+              f"  python3 scripts/check_goldens.py --bless --fresh "
+              f"{args.fresh} --golden {args.golden}", file=sys.stderr)
+        return 1
+
     mismatches = list(walk_diff(golden, fresh, args.rel_tol))
     if not mismatches:
         print(f"goldens OK: {args.fresh} matches {args.golden} "
